@@ -1,0 +1,91 @@
+//! "Will my application speed up?" (paper §5.3 / Figure 4c).
+//!
+//! The paper closes its evaluation with a practitioner's question: for
+//! *your* (m, k, n, d, b), is PopSparse worth it? It answers with a
+//! fitted power law for interpolation plus the full grid (Fig 7). This
+//! example reproduces that workflow end-to-end:
+//!
+//! 1. sweep the planner over a reduced grid and fit the power law;
+//! 2. take a handful of "application" layer shapes (transformer FFN,
+//!    attention projection, MoE expert) and compare the law's
+//!    *prediction* against the *exact* planner answer;
+//! 3. print the §6-style recommendation for each.
+//!
+//! Run with: `cargo run --release --example speedup_advisor`
+
+use popsparse::bench_harness::sweep::Env;
+use popsparse::fit;
+use popsparse::DType;
+
+fn main() -> popsparse::Result<()> {
+    let env = Env::default();
+    let d_grid = [0.25f64, 0.125, 0.0625, 0.03125];
+    let b_grid = [1usize, 4, 8, 16];
+    let m_grid = [512usize, 1024, 2048, 4096];
+
+    // --- 1. Fit the power law on a planner sweep ----------------------
+    println!("sweeping {} configurations...", m_grid.len() * d_grid.len() * b_grid.len());
+    let mut samples = Vec::new();
+    for &m in &m_grid {
+        let dense = env.dense_best_tflops(m, m, DType::Fp16);
+        for &d in &d_grid {
+            for &b in &b_grid {
+                if let Some(st) = env.static_best_tflops(m, b, d, DType::Fp16) {
+                    samples.push((vec![m as f64, d, b as f64], env.speedup(st, dense, d)));
+                }
+            }
+        }
+    }
+    let law = fit::fit_power_law(&samples).expect("power-law fit");
+    println!(
+        "fitted: speedup ≈ {:.4} · m^{:.2} · d^{:.2} · b^{:.2}   (R² = {:.3}; paper: 0.0013·m^0.59·d^-0.54·b^0.50)\n",
+        law.coefficient, law.exponents[0], law.exponents[1], law.exponents[2], law.r_squared
+    );
+
+    // --- 2. Application shapes: prediction vs exact planner -----------
+    let apps: &[(&str, usize, f64, usize)] = &[
+        ("BERT-large FFN (4096x1024 @ 90% sparse, b=16)", 4096, 0.10, 16),
+        ("GPT FFN (8192x2048 @ 87.5% sparse, b=16)", 8192, 0.125, 16),
+        ("attention proj (1024x1024 @ 75% sparse, b=8)", 1024, 0.25, 8),
+        ("MoE expert (2048x2048 @ 96.9% sparse, b=16)", 2048, 0.03125, 16),
+        ("unstructured prune (4096 @ 95% sparse, b=1)", 4096, 0.05, 1),
+    ];
+    println!(
+        "{:<52} {:>10} {:>8} {}",
+        "application layer", "predicted", "exact", "recommendation"
+    );
+    for &(name, m, d, b) in apps {
+        let predicted = law.predict(&[m as f64, d, b as f64]);
+        let dense = env.dense_best_tflops(m, m, DType::Fp16);
+        let exact = env
+            .static_best_tflops(m, b, d, DType::Fp16)
+            .map(|st| env.speedup(st, dense, d));
+        let exact_str = exact.map(|e| format!("{e:.2}x")).unwrap_or_else(|| "OOM".into());
+        let verdict = match exact {
+            Some(e) if e > 1.5 => "use static sparse",
+            Some(e) if e > 1.0 => "marginal — try static sparse",
+            Some(_) => "stay dense (or sparsify more / bigger blocks)",
+            None => "does not fit one IPU",
+        };
+        println!("{name:<52} {:>9.2}x {:>8} {verdict}", predicted, exact_str);
+    }
+
+    // --- 3. The §6 rules of thumb, from our model ----------------------
+    println!("\npaper §6 rules of thumb, checked against this model:");
+    for &(rule, m, b, d, dynamic) in &[
+        ("static b=1 needs m>4096, d<1/32", 8192usize, 1usize, 1.0 / 64.0, false),
+        ("static b>=4 needs m>=4096, d<=1/8", 4096, 16, 1.0 / 8.0, false),
+        ("dynamic needs b>=8, m>=4096, d<=1/32", 4096, 8, 1.0 / 32.0, true),
+    ] {
+        let dense = env.dense_best_tflops(m, m, DType::Fp16);
+        let sp = if dynamic {
+            env.dynamic_best_tflops(m, b, d, DType::Fp16)
+        } else {
+            env.static_best_tflops(m, b, d, DType::Fp16)
+        };
+        let s = sp.map(|s| env.speedup(s, dense, d)).unwrap_or(0.0);
+        println!("  {rule:<42} -> {s:.2}x {}", if s > 1.0 { "(wins)" } else { "(loses)" });
+    }
+    println!("\nspeedup_advisor OK");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time Python for the PopSparse reproduction.
+
+Layers 1 (Pallas kernels) and 2 (JAX model) plus the AOT exporter.
+Nothing in this package is imported at runtime -- the Rust coordinator
+loads the exported HLO artifacts via PJRT.
+"""

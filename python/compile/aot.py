@@ -1,0 +1,169 @@
+"""AOT exporter: lower L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per entry in MANIFEST plus
+``manifest.json`` describing argument order/shapes so the Rust runtime
+can marshal literals without guessing. A numeric self-check runs each
+lowered graph against the pure-jnp oracle before writing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import ref
+
+# ---------------------------------------------------------------------------
+# Artifact manifest: every compiled variant the Rust side can load.
+# Sizes are chosen to exercise the full code path while keeping CPU
+# interpret-mode execution fast; the *performance* sweep lives in the
+# Rust cost models, not here.
+# ---------------------------------------------------------------------------
+
+SPMM_CONFIGS = [
+    # quickstart: m=k=256, b=16, d=1/16
+    model.SpmmConfig("spmm_quickstart", m=256, k=256, n=64, b=16, nnz_b=16),
+    # larger block-16 variant, d=1/8
+    model.SpmmConfig("spmm_512_b16_d8", m=512, k=512, n=128, b=16, nnz_b=128),
+    # block-4 variant, d=1/16
+    model.SpmmConfig("spmm_256_b4_d16", m=256, k=256, n=64, b=4, nnz_b=256),
+    # unstructured (b=1), d=1/16
+    model.SpmmConfig("spmm_128_b1_d16", m=128, k=128, n=64, b=1, nnz_b=1024),
+]
+
+DENSE_CONFIGS = [
+    model.DenseConfig("dense_256", m=256, k=256, n=64),
+    model.DenseConfig("dense_512", m=512, k=512, n=128),
+]
+
+# Two-layer block-sparse MLP for the serving example: 512 -> 512 -> 512,
+# b=16, d=1/8 per layer, batch slot of 32 columns.
+MLP_LAYERS = [
+    model.SpmmConfig("mlp_l0", m=512, k=512, n=32, b=16, nnz_b=128),
+    model.SpmmConfig("mlp_l1", m=512, k=512, n=32, b=16, nnz_b=128),
+]
+MLP_NAME = "mlp_512x512_b16_d8"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def _self_check_spmm(cfg: model.SpmmConfig) -> None:
+    blocks, rows, cols, x = model.example_inputs(cfg, seed=7)
+    (y,) = spmm_jit(cfg)(blocks, rows, cols, x)
+    expect = ref.bsr_spmm_ref(blocks, rows, cols, x, m=cfg.m, b=cfg.b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), atol=1e-3, rtol=1e-3)
+
+
+def spmm_jit(cfg):
+    return jax.jit(model.spmm_fn(cfg))
+
+
+def export_all(out_dir: pathlib.Path, *, self_check: bool = True) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {"version": 1, "artifacts": []}
+
+    for cfg in SPMM_CONFIGS:
+        if self_check:
+            _self_check_spmm(cfg)
+        lowered = spmm_jit(cfg).lower(*cfg.arg_specs())
+        path = out_dir / f"{cfg.name}.hlo.txt"
+        path.write_text(to_hlo_text(lowered))
+        manifest["artifacts"].append(
+            {
+                "name": cfg.name,
+                "kind": "spmm",
+                "file": path.name,
+                "m": cfg.m,
+                "k": cfg.k,
+                "n": cfg.n,
+                "b": cfg.b,
+                "nnz_b": cfg.nnz_b,
+                "density": cfg.density,
+                "flops": cfg.flops,
+                "args": [_spec_json(s) for s in cfg.arg_specs()],
+            }
+        )
+        print(f"exported {path}")
+
+    for dcfg in DENSE_CONFIGS:
+        lowered = jax.jit(model.dense_fn(dcfg)).lower(*dcfg.arg_specs())
+        path = out_dir / f"{dcfg.name}.hlo.txt"
+        path.write_text(to_hlo_text(lowered))
+        manifest["artifacts"].append(
+            {
+                "name": dcfg.name,
+                "kind": "dense",
+                "file": path.name,
+                "m": dcfg.m,
+                "k": dcfg.k,
+                "n": dcfg.n,
+                "flops": dcfg.flops,
+                "args": [_spec_json(s) for s in dcfg.arg_specs()],
+            }
+        )
+        print(f"exported {path}")
+
+    # MLP artifact for the serving example.
+    mlp_specs = model.mlp_arg_specs(MLP_LAYERS)
+    lowered = jax.jit(model.sparse_mlp_fn(MLP_LAYERS)).lower(*mlp_specs)
+    path = out_dir / f"{MLP_NAME}.hlo.txt"
+    path.write_text(to_hlo_text(lowered))
+    manifest["artifacts"].append(
+        {
+            "name": MLP_NAME,
+            "kind": "mlp",
+            "file": path.name,
+            "layers": [
+                {"m": c.m, "k": c.k, "n": c.n, "b": c.b, "nnz_b": c.nnz_b}
+                for c in MLP_LAYERS
+            ],
+            "n": MLP_LAYERS[0].n,
+            "flops": sum(c.flops for c in MLP_LAYERS),
+            "args": [_spec_json(s) for s in mlp_specs],
+        }
+    )
+    print(f"exported {path}")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'} ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts", type=pathlib.Path)
+    parser.add_argument(
+        "--no-self-check", action="store_true", help="skip numeric self-check"
+    )
+    args = parser.parse_args()
+    export_all(args.out_dir, self_check=not args.no_self_check)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""L1: Pallas kernels for PopSparse's compute hot-spots.
+
+* :mod:`compile.kernels.bsr_spmm` -- block-sparse * dense matmul
+  (the paper's SpMM; static and dynamic share this kernel: the block
+  coordinate arrays are runtime operands).
+* :mod:`compile.kernels.dense_matmul` -- blocked dense GEMM baseline
+  (poplin::matMul analogue).
+* :mod:`compile.kernels.ref` -- pure-jnp oracles.
+"""
+
+from compile.kernels.bsr_spmm import (  # noqa: F401
+    bsr_spmm,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.bsr_spmm_packed import (  # noqa: F401
+    bsr_spmm_packed,
+    pack_rows,
+    packed_mxu_utilization,
+)
+from compile.kernels.dense_matmul import dense_matmul  # noqa: F401

@@ -1,0 +1,159 @@
+"""L1 Pallas kernel: block-sparse * dense matmul (BSR-style SpMM).
+
+This is the on-tile compute hot-spot of PopSparse, re-thought for TPU
+(see DESIGN.md §Hardware-Adaptation):
+
+* The IPU's per-tile SRAM becomes VMEM: each grid step holds one
+  non-zero ``b x b`` weight block, one ``b x bn`` slab of the dense
+  input and one ``b x bn`` slab of the output in VMEM.
+* The IPU AMP unit becomes the MXU: each step issues a single dense
+  ``b x b @ b x bn`` dot on non-zero data only.
+* The compile-time exchange schedule becomes the BlockSpec index maps,
+  driven by scalar-prefetched block coordinate arrays (``block_rows``,
+  ``block_cols``) -- the analogue of PopSparse's metaInfo.
+
+Kernel contract (enforced by the host-side helpers in
+:mod:`compile.model` and checked in tests):
+
+* ``block_rows`` is sorted non-decreasing (blocks grouped by row), with
+  ties broken by column. This makes "first visit of an output block
+  row" detectable as ``rows[i] != rows[i-1]``, which is when the output
+  slab is zero-initialised.
+* Output block rows with *no* non-zero block are NOT touched by the
+  kernel (Pallas leaves them uninitialised); :func:`bsr_spmm` masks
+  them to zero with a coverage mask computed from ``block_rows``.
+
+The kernel runs with ``interpret=True``: CPU PJRT cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime executes byte-for-byte.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default slab width over the batch dimension n. 128 matches the MXU
+# lane width; bn is clamped to n for small problems.
+DEFAULT_BN = 128
+
+
+def _kernel(rows_ref, cols_ref, blocks_ref, x_ref, y_ref):
+    """One grid step: accumulate one non-zero block into its output slab.
+
+    Grid is (n_slabs, nnz_blocks); the block index ``i`` iterates
+    fastest so all blocks of an output row are visited consecutively
+    within one n-slab (rows are sorted).
+    """
+    i = pl.program_id(1)
+    prev_row = rows_ref[jnp.maximum(i - 1, 0)]
+    is_first_visit = (i == 0) | (rows_ref[i] != prev_row)
+
+    @pl.when(is_first_visit)
+    def _zero():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += jnp.dot(
+        blocks_ref[0], x_ref[...], preferred_element_type=y_ref.dtype
+    )
+
+
+def _choose_bn(n: int, bn: int | None) -> int:
+    """Pick the n-slab width: divides n, defaults to DEFAULT_BN."""
+    if bn is None:
+        bn = min(n, DEFAULT_BN)
+    if n % bn != 0:
+        raise ValueError(f"batch size n={n} must be divisible by bn={bn}")
+    return bn
+
+
+@functools.partial(jax.jit, static_argnames=("m", "b", "bn", "interpret"))
+def bsr_spmm(
+    blocks: jax.Array,
+    block_rows: jax.Array,
+    block_cols: jax.Array,
+    x: jax.Array,
+    *,
+    m: int,
+    b: int,
+    bn: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Compute ``Y = (M ⊙ W) @ X`` from BSR block data.
+
+    Args:
+      blocks: ``[nnz_b, b, b]`` non-zero block values (row-sorted).
+      block_rows: ``[nnz_b]`` int32 block-row index of each block.
+      block_cols: ``[nnz_b]`` int32 block-col index of each block.
+      x: ``[k, n]`` dense right-hand side.
+      m: number of output rows (must be a multiple of ``b``).
+      b: block size.
+      bn: n-slab width (must divide ``n``); default min(n, 128).
+      interpret: run Pallas in interpret mode (required on CPU PJRT).
+
+    Returns:
+      ``[m, n]`` dense output.
+    """
+    nnz_b, bb, bb2 = blocks.shape
+    if bb != b or bb2 != b:
+        raise ValueError(f"blocks shaped {blocks.shape}, expected [*, {b}, {b}]")
+    if m % b != 0:
+        raise ValueError(f"m={m} not a multiple of block size b={b}")
+    k, n = x.shape
+    if k % b != 0:
+        raise ValueError(f"k={k} not a multiple of block size b={b}")
+    bn = _choose_bn(n, bn)
+
+    grid = (n // bn, nnz_b)
+    y = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                # One non-zero block per step.
+                pl.BlockSpec((1, b, b), lambda j, i, rows, cols: (i, 0, 0)),
+                # The b-row slab of X selected by this block's column.
+                pl.BlockSpec((b, bn), lambda j, i, rows, cols: (cols[i], j)),
+            ],
+            # The b-row slab of Y selected by this block's row.
+            out_specs=pl.BlockSpec((b, bn), lambda j, i, rows, cols: (rows[i], j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(block_rows, block_cols, blocks, x)
+
+    # Rows with no non-zero block are never written by the kernel; mask
+    # them to zero. ``covered`` is a length-m/b 0/1 vector scattered
+    # from block_rows -- the analogue of PopSparse metaInfo row marks.
+    covered = jnp.zeros((m // b,), jnp.int32).at[block_rows].set(1)
+    row_mask = jnp.repeat(covered, b).astype(jnp.bool_)
+    return jnp.where(row_mask[:, None], y, jnp.zeros((), x.dtype))
+
+
+def vmem_footprint_bytes(b: int, bn: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM bytes resident per grid step (perf model, L1 §Perf).
+
+    One weight block + one input slab + one output slab, double-buffered
+    on the input side (Pallas pipelines the next block/slab fetch).
+    """
+    block = b * b * dtype_bytes
+    x_slab = b * bn * dtype_bytes
+    y_slab = b * bn * dtype_bytes
+    # 2x on streamed operands for double buffering; output stays resident.
+    return 2 * (block + x_slab) + y_slab
+
+
+def mxu_utilization_estimate(b: int, bn: int) -> float:
+    """Fraction of a 128x128 MXU pass usefully occupied by one b×b·b×bn dot.
+
+    The MXU processes 128-wide lanes; a b×b block occupies b/128 of the
+    systolic array rows and the slab bn/128 (capped at 1) of the lanes.
+    This is the structural utilisation used in EXPERIMENTS.md §Perf --
+    interpret mode gives no hardware timing.
+    """
+    return min(b / 128.0, 1.0) * min(bn / 128.0, 1.0)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: blocked dense matmul (poplin::matMul analogue).
+
+The dense baseline of the paper's Figure 2 / Table 3 denominators. A
+classic three-level blocked GEMM: the grid tiles (m, n, k); each step
+does one ``bm x bk @ bk x bn`` MXU dot and accumulates into the output
+slab, which stays resident in VMEM across the k-iteration (innermost
+grid dimension).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    kidx = pl.program_id(2)
+
+    @pl.when(kidx == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _tile(dim: int, want: int) -> int:
+    """Largest tile <= want that divides dim."""
+    t = min(dim, want)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def dense_matmul(
+    a: jax.Array,
+    x: jax.Array,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Compute ``A @ X`` with a blocked Pallas kernel.
+
+    Tile defaults target the MXU shape (128) and are shrunk to divide
+    the problem dimensions exactly.
+    """
+    m, k = a.shape
+    k2, n = x.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {x.shape}")
+    bm = bm or _tile(m, 128)
+    bn = bn or _tile(n, 128)
+    bk = bk or _tile(k, 128)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"tiles ({bm},{bn},{bk}) must divide dims ({m},{n},{k})")
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(a, x)

@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These implement the paper's Eq. (1), ``Y = (M ⊙ W) * X``, with no
+Pallas, no blocking tricks -- the single source of truth the kernels
+are tested against (pytest + hypothesis in python/tests/).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bsr_to_dense(blocks, block_rows, block_cols, m: int, k: int, b: int):
+    """Scatter BSR block data into the dense ``(M ⊙ W)`` matrix."""
+    blocks = np.asarray(blocks)
+    block_rows = np.asarray(block_rows)
+    block_cols = np.asarray(block_cols)
+    dense = np.zeros((m, k), dtype=blocks.dtype)
+    for blk, r, c in zip(blocks, block_rows, block_cols):
+        dense[r * b : (r + 1) * b, c * b : (c + 1) * b] = blk
+    return dense
+
+
+def bsr_spmm_ref(blocks, block_rows, block_cols, x, *, m: int, b: int):
+    """Reference SpMM: densify then matmul."""
+    k = x.shape[0]
+    dense = bsr_to_dense(blocks, block_rows, block_cols, m, k, b)
+    return jnp.asarray(dense) @ jnp.asarray(x)
+
+
+def dense_matmul_ref(a, x):
+    """Reference dense GEMM."""
+    return jnp.asarray(a) @ jnp.asarray(x)
+
+
+def sparse_mlp_ref(layers, x):
+    """Reference for the block-sparse MLP used by the serving example.
+
+    ``layers`` is a sequence of (blocks, block_rows, block_cols, m, b)
+    tuples; ReLU between layers, none after the last.
+    """
+    h = jnp.asarray(x)
+    for idx, (blocks, rows, cols, m, b) in enumerate(layers):
+        h = bsr_spmm_ref(blocks, rows, cols, h, m=m, b=b)
+        if idx != len(layers) - 1:
+            h = jnp.maximum(h, 0.0)
+    return h

@@ -1,0 +1,178 @@
+"""L2: JAX compute graphs for PopSparse SpMM, calling the L1 kernels.
+
+Each public ``*_fn`` returns a tuple-returning function suitable for
+``jax.jit(fn).lower(...)`` and AOT export (see :mod:`compile.aot`).
+The block coordinate arrays are **runtime operands** (scalar-prefetch
+inputs to the Pallas kernel), so a single exported artifact serves any
+sparsity pattern with the same block count -- this is what makes the
+dynamic-sparsity mode possible without recompilation, mirroring
+popsparse::dynamic's fixed-size metaInfo buckets.
+
+Host-side helpers (numpy) generate patterns with the kernel's contract:
+blocks sorted by (row, col).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import bsr_spmm, dense_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmmConfig:
+    """One compiled SpMM variant (one HLO artifact).
+
+    Attributes mirror the paper's sweep parameters (Table 2): feature
+    sizes m, k; batch size n; block size b; and the *fixed* number of
+    non-zero blocks nnz_b (density d = nnz_b * b^2 / (m * k)).
+    """
+
+    name: str
+    m: int
+    k: int
+    n: int
+    b: int
+    nnz_b: int
+    bn: int | None = None
+
+    def __post_init__(self):
+        if self.m % self.b or self.k % self.b:
+            raise ValueError(f"{self.name}: m,k must be multiples of b")
+        max_blocks = (self.m // self.b) * (self.k // self.b)
+        if not 0 < self.nnz_b <= max_blocks:
+            raise ValueError(f"{self.name}: nnz_b={self.nnz_b} out of (0,{max_blocks}]")
+
+    @property
+    def density(self) -> float:
+        return self.nnz_b * self.b * self.b / (self.m * self.k)
+
+    @property
+    def flops(self) -> int:
+        """Useful FLOPs per SpMM, non-zeros only (paper §3)."""
+        return 2 * self.nnz_b * self.b * self.b * self.n
+
+    def arg_specs(self):
+        """ShapeDtypeStructs in artifact argument order."""
+        return (
+            jax.ShapeDtypeStruct((self.nnz_b, self.b, self.b), jnp.float32),
+            jax.ShapeDtypeStruct((self.nnz_b,), jnp.int32),
+            jax.ShapeDtypeStruct((self.nnz_b,), jnp.int32),
+            jax.ShapeDtypeStruct((self.k, self.n), jnp.float32),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseConfig:
+    """One compiled dense matmul variant (baseline)."""
+
+    name: str
+    m: int
+    k: int
+    n: int
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.m * self.k * self.n
+
+    def arg_specs(self):
+        return (
+            jax.ShapeDtypeStruct((self.m, self.k), jnp.float32),
+            jax.ShapeDtypeStruct((self.k, self.n), jnp.float32),
+        )
+
+
+def spmm_fn(cfg: SpmmConfig):
+    """SpMM graph: (blocks, rows, cols, x) -> (y,)."""
+
+    def fn(blocks, rows, cols, x):
+        y = bsr_spmm(blocks, rows, cols, x, m=cfg.m, b=cfg.b, bn=cfg.bn)
+        return (y,)
+
+    return fn
+
+
+def dense_fn(cfg: DenseConfig):
+    """Dense GEMM graph: (a, x) -> (y,)."""
+
+    def fn(a, x):
+        return (dense_matmul(a, x),)
+
+    return fn
+
+
+def sparse_mlp_fn(layer_cfgs: Sequence[SpmmConfig]):
+    """Block-sparse MLP: SpMM layers with ReLU between them.
+
+    Signature: (blocks_0, rows_0, cols_0, ..., blocks_L, rows_L,
+    cols_L, x) -> (y,). Used by the end-to-end serving example: the
+    whole forward pass is one HLO artifact, weights are runtime
+    operands so the server can hot-swap sparse weights.
+    """
+    for prev, nxt in zip(layer_cfgs, layer_cfgs[1:]):
+        if nxt.k != prev.m:
+            raise ValueError(f"layer shapes do not chain: {prev.m} -> {nxt.k}")
+
+    def fn(*args):
+        *layer_args, x = args
+        assert len(layer_args) == 3 * len(layer_cfgs)
+        h = x
+        for i, cfg in enumerate(layer_cfgs):
+            blocks, rows, cols = layer_args[3 * i : 3 * i + 3]
+            h = bsr_spmm(blocks, rows, cols, h, m=cfg.m, b=cfg.b, bn=cfg.bn)
+            if i != len(layer_cfgs) - 1:
+                h = jnp.maximum(h, 0.0)
+        return (h,)
+
+    return fn
+
+
+def mlp_arg_specs(layer_cfgs: Sequence[SpmmConfig]):
+    specs = []
+    for cfg in layer_cfgs:
+        specs.extend(cfg.arg_specs()[:3])
+    first = layer_cfgs[0]
+    specs.append(jax.ShapeDtypeStruct((first.k, first.n), jnp.float32))
+    return tuple(specs)
+
+
+# ---------------------------------------------------------------------------
+# Host-side pattern/value generation (numpy; used by aot self-check + tests)
+# ---------------------------------------------------------------------------
+
+
+def random_block_pattern(
+    mb: int, kb: int, nnz_b: int, *, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Uniform random pattern of exactly ``nnz_b`` blocks, (row, col) sorted.
+
+    Matches the paper's benchmark methodology ("randomly generated
+    sparsity pattern"). Returns (block_rows, block_cols) int32 arrays.
+    """
+    if nnz_b > mb * kb:
+        raise ValueError(f"nnz_b={nnz_b} exceeds grid {mb}x{kb}")
+    rng = np.random.RandomState(seed)
+    flat = rng.choice(mb * kb, size=nnz_b, replace=False)
+    flat.sort()
+    return (flat // kb).astype(np.int32), (flat % kb).astype(np.int32)
+
+
+def random_block_values(
+    nnz_b: int, b: int, *, seed: int = 0, dtype=np.float32
+) -> np.ndarray:
+    rng = np.random.RandomState(seed + 1)
+    return rng.standard_normal((nnz_b, b, b)).astype(dtype)
+
+
+def example_inputs(cfg: SpmmConfig, *, seed: int = 0):
+    """Concrete (blocks, rows, cols, x) for a config -- tests + self-check."""
+    rows, cols = random_block_pattern(cfg.m // cfg.b, cfg.k // cfg.b, cfg.nnz_b, seed=seed)
+    blocks = random_block_values(cfg.nnz_b, cfg.b, seed=seed)
+    rng = np.random.RandomState(seed + 2)
+    x = rng.standard_normal((cfg.k, cfg.n)).astype(np.float32)
+    return blocks, rows, cols, x

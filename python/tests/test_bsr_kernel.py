@@ -1,0 +1,162 @@
+"""Kernel vs. oracle: the core correctness signal for L1.
+
+Covers fixed configurations (all paper block sizes), degenerate
+patterns (empty rows, single block, full density), dtype variants, and
+a hypothesis sweep over shapes/densities.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import bsr_spmm, ref
+
+
+def run_and_check(m, k, n, b, nnz_b, seed=0, dtype=np.float32, atol=1e-3):
+    rows, cols = model.random_block_pattern(m // b, k // b, nnz_b, seed=seed)
+    blocks = model.random_block_values(nnz_b, b, seed=seed, dtype=dtype)
+    rng = np.random.RandomState(seed + 2)
+    x = rng.standard_normal((k, n)).astype(dtype)
+    y = bsr_spmm(jnp.asarray(blocks), jnp.asarray(rows), jnp.asarray(cols),
+                 jnp.asarray(x), m=m, b=b)
+    expect = ref.bsr_spmm_ref(blocks, rows, cols, x, m=m, b=b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), atol=atol, rtol=atol)
+
+
+@pytest.mark.parametrize("b", [1, 4, 8, 16])
+def test_paper_block_sizes(b):
+    """All block sizes from Table 2 against the oracle."""
+    m = k = 8 * max(b, 4)
+    mb, kb = m // b, k // b
+    run_and_check(m, k, 32, b, max(1, mb * kb // 16))
+
+
+@pytest.mark.parametrize("density_inv", [4, 8, 16, 32])
+def test_paper_densities(density_inv):
+    """Density factors from Table 2 (1/4 .. 1/32)."""
+    m = k = 128
+    b = 8
+    total = (m // b) * (k // b)
+    run_and_check(m, k, 64, b, max(1, total // density_inv))
+
+
+def test_full_density_matches_dense():
+    """d=1: every block present -- SpMM must equal a dense matmul."""
+    m = k = 64
+    b = 16
+    mb = kb = m // b
+    nnz_b = mb * kb
+    rows, cols = model.random_block_pattern(mb, kb, nnz_b, seed=3)
+    blocks = model.random_block_values(nnz_b, b, seed=3)
+    x = np.random.RandomState(9).standard_normal((k, 32)).astype(np.float32)
+    y = bsr_spmm(jnp.asarray(blocks), jnp.asarray(rows), jnp.asarray(cols),
+                 jnp.asarray(x), m=m, b=b)
+    dense = ref.bsr_to_dense(blocks, rows, cols, m, k, b)
+    np.testing.assert_allclose(np.asarray(y), dense @ x, atol=1e-3, rtol=1e-3)
+
+
+def test_single_block():
+    """One non-zero block: all other output rows must be exactly zero."""
+    m = k = 64
+    b = 16
+    rows = jnp.array([2], jnp.int32)
+    cols = jnp.array([1], jnp.int32)
+    blocks = jnp.ones((1, b, b), jnp.float32)
+    x = jnp.ones((k, 8), jnp.float32)
+    y = np.asarray(bsr_spmm(blocks, rows, cols, x, m=m, b=b))
+    assert np.all(y[: 2 * b] == 0.0), "rows above the block must be zero"
+    assert np.all(y[3 * b :] == 0.0), "rows below the block must be zero"
+    np.testing.assert_allclose(y[2 * b : 3 * b], np.full((b, 8), float(b)))
+
+
+def test_empty_rows_are_zero_not_nan():
+    """Uncovered output rows must come back 0, not NaN (coverage mask)."""
+    m = 128
+    k = 64
+    b = 16
+    # blocks only in block-rows 0 and 7 -> rows 1..6 uncovered
+    rows = jnp.array([0, 7], jnp.int32)
+    cols = jnp.array([0, 3], jnp.int32)
+    blocks = jnp.asarray(model.random_block_values(2, b, seed=5))
+    x = jnp.ones((k, 16), jnp.float32)
+    y = np.asarray(bsr_spmm(blocks, rows, cols, x, m=m, b=b))
+    assert not np.isnan(y).any()
+    assert np.all(y[b : 7 * b] == 0.0)
+
+
+def test_duplicate_row_blocks_accumulate():
+    """Several blocks in one block-row accumulate into the same slab."""
+    m = k = 64
+    b = 16
+    rows = jnp.array([1, 1, 1, 1], jnp.int32)
+    cols = jnp.array([0, 1, 2, 3], jnp.int32)
+    blocks = jnp.ones((4, b, b), jnp.float32)
+    x = jnp.ones((k, 8), jnp.float32)
+    y = np.asarray(bsr_spmm(blocks, rows, cols, x, m=m, b=b))
+    np.testing.assert_allclose(y[b : 2 * b], np.full((b, 8), float(k)))
+
+
+def test_rectangular_m_not_equal_k():
+    run_and_check(m=128, k=64, n=32, b=16, nnz_b=8)
+    run_and_check(m=64, k=256, n=32, b=16, nnz_b=20)
+
+
+def test_bn_slabbing_matches_unslabbed():
+    """Explicit small bn (multiple n-slabs) gives identical results."""
+    m = k = 64
+    b = 16
+    cfgs = model.random_block_pattern(4, 4, 6, seed=11)
+    blocks = jnp.asarray(model.random_block_values(6, b, seed=11))
+    x = jnp.asarray(np.random.RandomState(1).standard_normal((k, 64)).astype(np.float32))
+    y_one = bsr_spmm(blocks, jnp.asarray(cfgs[0]), jnp.asarray(cfgs[1]), x, m=m, b=b, bn=64)
+    y_slab = bsr_spmm(blocks, jnp.asarray(cfgs[0]), jnp.asarray(cfgs[1]), x, m=m, b=b, bn=16)
+    np.testing.assert_allclose(np.asarray(y_one), np.asarray(y_slab), atol=1e-5)
+
+
+def test_bad_bn_raises():
+    with pytest.raises(ValueError, match="divisible"):
+        blocks = jnp.ones((1, 4, 4), jnp.float32)
+        bsr_spmm(blocks, jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32),
+                 jnp.ones((8, 10), jnp.float32), m=8, b=4, bn=4)
+
+
+def test_mismatched_block_shape_raises():
+    with pytest.raises(ValueError, match="blocks shaped"):
+        blocks = jnp.ones((1, 4, 8), jnp.float32)
+        bsr_spmm(blocks, jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32),
+                 jnp.ones((8, 8), jnp.float32), m=8, b=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mb=st.integers(1, 6),
+    kb=st.integers(1, 6),
+    b=st.sampled_from([1, 4, 8, 16]),
+    n=st.sampled_from([8, 16, 32]),
+    frac=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_sweep(mb, kb, b, n, frac, seed):
+    """Property: kernel == oracle over random shapes/densities/patterns."""
+    nnz_b = max(1, int(mb * kb * frac))
+    run_and_check(mb * b, kb * b, n, b, nnz_b, seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_hypothesis_bfloat16(seed):
+    """dtype sweep: kernel works in bfloat16 (the MXU-native dtype)."""
+    m = k = 64
+    b = 16
+    rows, cols = model.random_block_pattern(4, 4, 5, seed=seed)
+    blocks = model.random_block_values(5, b, seed=seed)
+    x = np.random.RandomState(seed).standard_normal((k, 16)).astype(np.float32)
+    y = bsr_spmm(
+        jnp.asarray(blocks, jnp.bfloat16),
+        jnp.asarray(rows), jnp.asarray(cols),
+        jnp.asarray(x, jnp.bfloat16), m=m, b=b)
+    expect = ref.bsr_spmm_ref(blocks, rows, cols, x, m=m, b=b)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(expect), atol=0.5, rtol=0.1)

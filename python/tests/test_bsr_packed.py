@@ -1,0 +1,96 @@
+"""Row-packed kernel variant vs oracle (§Perf L1 optimization)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.bsr_spmm import bsr_spmm
+from compile.kernels.bsr_spmm_packed import (
+    bsr_spmm_packed,
+    pack_rows,
+    packed_mxu_utilization,
+)
+
+
+def run_packed(m, k, n, b, nnz_b, g=4, seed=0):
+    rows, cols = model.random_block_pattern(m // b, k // b, nnz_b, seed=seed)
+    blocks = model.random_block_values(nnz_b, b, seed=seed)
+    x = np.random.RandomState(seed + 2).standard_normal((k, n)).astype(np.float32)
+    grows, gcols, packed = pack_rows(rows, cols, blocks, g=g)
+    y = bsr_spmm_packed(
+        jnp.asarray(packed), jnp.asarray(grows), jnp.asarray(gcols),
+        jnp.asarray(x), m=m, b=b, g=g)
+    expect = ref.bsr_spmm_ref(blocks, rows, cols, x, m=m, b=b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), atol=1e-3, rtol=1e-3)
+    return grows, gcols, packed
+
+
+def test_pack_rows_structure():
+    rows = np.array([0, 0, 0, 2, 2], np.int32)
+    cols = np.array([1, 3, 4, 0, 2], np.int32)
+    blocks = np.arange(5 * 4 * 4, dtype=np.float32).reshape(5, 4, 4)
+    grows, gcols, packed = pack_rows(rows, cols, blocks, g=2)
+    # row 0 has 3 blocks -> 2 groups (second padded); row 2 -> 1 group.
+    assert list(grows) == [0, 0, 2]
+    assert gcols.shape == (3, 2)
+    assert packed.shape == (3, 4, 8)
+    # padded lane repeats the column and carries zero values.
+    assert gcols[1, 1] == gcols[1, 0]
+    assert np.all(packed[1, :, 4:] == 0.0)
+
+
+def test_packed_matches_oracle_basic():
+    run_packed(128, 128, 64, 16, 20, g=4)
+
+
+def test_packed_full_mxu_group():
+    # g=8, b=16: the 128-deep contraction the §Perf roadmap targets.
+    run_packed(256, 256, 128, 16, 64, g=8)
+    assert packed_mxu_utilization(16, 8, 128) == 1.0
+
+
+def test_packed_matches_unpacked_kernel():
+    m = k = 128
+    b, nnz_b, n = 8, 40, 32
+    rows, cols = model.random_block_pattern(m // b, k // b, nnz_b, seed=5)
+    blocks = model.random_block_values(nnz_b, b, seed=5)
+    x = np.random.RandomState(7).standard_normal((k, n)).astype(np.float32)
+    y_base = bsr_spmm(jnp.asarray(blocks), jnp.asarray(rows), jnp.asarray(cols),
+                      jnp.asarray(x), m=m, b=b)
+    grows, gcols, packed = pack_rows(rows, cols, blocks, g=4)
+    y_pack = bsr_spmm_packed(jnp.asarray(packed), jnp.asarray(grows),
+                             jnp.asarray(gcols), jnp.asarray(x), m=m, b=b, g=4)
+    np.testing.assert_allclose(np.asarray(y_base), np.asarray(y_pack), atol=1e-4)
+
+
+def test_padding_overhead_is_bounded():
+    # ≤ g-1 padded blocks per non-empty row.
+    rows, cols = model.random_block_pattern(16, 16, 60, seed=9)
+    blocks = model.random_block_values(60, 4, seed=9)
+    grows, _, packed = pack_rows(rows, cols, blocks, g=4)
+    stored = packed.shape[0] * 4
+    nonempty_rows = len(np.unique(rows))
+    assert stored - 60 <= 3 * nonempty_rows
+
+
+def test_shape_validation():
+    with pytest.raises(ValueError, match="packed shaped"):
+        bsr_spmm_packed(jnp.ones((1, 4, 4)), jnp.zeros(1, jnp.int32),
+                        jnp.zeros((1, 2), jnp.int32), jnp.ones((8, 8)), m=8, b=4, g=2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mb=st.integers(2, 8),
+    kb=st.integers(2, 8),
+    b=st.sampled_from([4, 8, 16]),
+    g=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_packed(mb, kb, b, g, seed):
+    total = mb * kb
+    nnz_b = max(1, total // 3)
+    run_packed(mb * b, kb * b, 16, b, nnz_b, g=g, seed=seed)

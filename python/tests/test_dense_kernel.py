@@ -1,0 +1,52 @@
+"""Blocked dense matmul kernel vs. jnp reference."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense_matmul
+from compile.kernels import ref
+
+
+def check(m, k, n, seed=0, **tiles):
+    rng = np.random.RandomState(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    x = rng.standard_normal((k, n)).astype(np.float32)
+    y = dense_matmul(jnp.asarray(a), jnp.asarray(x), **tiles)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.dense_matmul_ref(a, x)), atol=1e-3, rtol=1e-3
+    )
+
+
+def test_square():
+    check(128, 128, 128)
+
+
+def test_rectangular():
+    check(64, 256, 32)
+
+
+def test_explicit_tiles():
+    check(64, 64, 64, bm=16, bn=32, bk=16)
+
+
+def test_tile_not_dividing_raises():
+    with pytest.raises(ValueError, match="divide"):
+        dense_matmul(jnp.ones((60, 60)), jnp.ones((60, 60)), bm=16, bn=16, bk=16)
+
+
+def test_inner_dim_mismatch_raises():
+    with pytest.raises(ValueError, match="mismatch"):
+        dense_matmul(jnp.ones((8, 16)), jnp.ones((8, 8)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([16, 32, 48, 128]),
+    k=st.sampled_from([16, 64, 96]),
+    n=st.sampled_from([8, 16, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shapes(m, k, n, seed):
+    check(m, k, n, seed=seed)

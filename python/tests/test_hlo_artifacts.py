@@ -1,0 +1,45 @@
+"""AOT regression guards on the lowered HLO itself.
+
+The Rust runtime can only execute plain HLO on the CPU PJRT client —
+any Mosaic/TPU custom-call in the artifact would fail at load time on
+the request path. Guard the property at build time instead.
+"""
+
+import jax
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def spmm_hlo():
+    cfg = model.SpmmConfig("guard", m=64, k=64, n=16, b=16, nnz_b=4)
+    lowered = aot.spmm_jit(cfg).lower(*cfg.arg_specs())
+    return aot.to_hlo_text(lowered)
+
+
+def test_no_custom_calls(spmm_hlo):
+    # interpret=True must lower to pure HLO (no Mosaic custom-call).
+    assert "custom-call" not in spmm_hlo, "artifact contains a custom-call"
+    assert "mosaic" not in spmm_hlo.lower()
+
+
+def test_entry_is_tuple(spmm_hlo):
+    # aot.py lowers with return_tuple=True; the Rust side unwraps with
+    # to_tuple1 — the root must be a 1-tuple.
+    assert "ENTRY" in spmm_hlo
+    root_lines = [l for l in spmm_hlo.splitlines() if "ROOT" in l and "tuple" in l]
+    assert root_lines, "entry root should be a tuple"
+
+
+def test_four_parameters_in_order(spmm_hlo):
+    # blocks, rows, cols, x — the runtime marshals by manifest order.
+    for i in range(4):
+        assert f"parameter({i})" in spmm_hlo
+
+
+def test_dense_artifact_also_clean():
+    dcfg = model.DenseConfig("guard_dense", m=64, k=64, n=16)
+    lowered = jax.jit(model.dense_fn(dcfg)).lower(*dcfg.arg_specs())
+    text = aot.to_hlo_text(lowered)
+    assert "custom-call" not in text

@@ -1,0 +1,76 @@
+"""L2 model graphs: config validation, MLP composition, AOT lowering."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_spmm_config_density_and_flops():
+    cfg = model.SpmmConfig("t", m=256, k=256, n=64, b=16, nnz_b=16)
+    assert cfg.density == pytest.approx(1 / 16)
+    assert cfg.flops == 2 * 16 * 16 * 16 * 64
+
+
+def test_spmm_config_validation():
+    with pytest.raises(ValueError, match="multiples"):
+        model.SpmmConfig("t", m=100, k=256, n=8, b=16, nnz_b=4)
+    with pytest.raises(ValueError, match="out of"):
+        model.SpmmConfig("t", m=64, k=64, n=8, b=16, nnz_b=999)
+
+
+def test_spmm_fn_matches_ref():
+    cfg = model.SpmmConfig("t", m=128, k=128, n=32, b=8, nnz_b=32)
+    blocks, rows, cols, x = model.example_inputs(cfg, seed=1)
+    (y,) = jax.jit(model.spmm_fn(cfg))(blocks, rows, cols, x)
+    expect = ref.bsr_spmm_ref(blocks, rows, cols, x, m=cfg.m, b=cfg.b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), atol=1e-3, rtol=1e-3)
+
+
+def test_mlp_fn_matches_ref():
+    layers = [
+        model.SpmmConfig("l0", m=128, k=128, n=16, b=16, nnz_b=16),
+        model.SpmmConfig("l1", m=64, k=128, n=16, b=16, nnz_b=12),
+    ]
+    args = []
+    ref_layers = []
+    for i, cfg in enumerate(layers):
+        blocks, rows, cols, _ = model.example_inputs(cfg, seed=10 + i)
+        args.extend([blocks, rows, cols])
+        ref_layers.append((blocks, rows, cols, cfg.m, cfg.b))
+    x = np.random.RandomState(0).standard_normal((128, 16)).astype(np.float32)
+    args.append(x)
+    (y,) = jax.jit(model.sparse_mlp_fn(layers))(*args)
+    expect = ref.sparse_mlp_ref(ref_layers, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), atol=1e-2, rtol=1e-3)
+
+
+def test_mlp_shape_chain_validation():
+    layers = [
+        model.SpmmConfig("l0", m=128, k=128, n=16, b=16, nnz_b=16),
+        model.SpmmConfig("l1", m=64, k=256, n=16, b=16, nnz_b=12),  # k != prev m
+    ]
+    with pytest.raises(ValueError, match="chain"):
+        model.sparse_mlp_fn(layers)
+
+
+def test_random_block_pattern_sorted_and_unique():
+    rows, cols = model.random_block_pattern(8, 8, 20, seed=4)
+    flat = rows.astype(np.int64) * 8 + cols
+    assert np.all(np.diff(flat) > 0), "pattern must be (row,col)-sorted, no dups"
+    assert rows.dtype == np.int32 and cols.dtype == np.int32
+
+
+def test_random_block_pattern_overflow_raises():
+    with pytest.raises(ValueError, match="exceeds"):
+        model.random_block_pattern(2, 2, 5)
+
+
+def test_mlp_arg_specs_order():
+    layers = [model.SpmmConfig("l0", m=64, k=64, n=8, b=16, nnz_b=4)]
+    specs = model.mlp_arg_specs(layers)
+    assert len(specs) == 4  # blocks, rows, cols, x
+    assert specs[0].shape == (4, 16, 16)
+    assert specs[3].shape == (64, 8)

@@ -1,0 +1,40 @@
+"""L1 performance-model helpers: VMEM footprint and MXU utilisation
+estimates used by EXPERIMENTS.md §Perf (interpret mode gives no TPU
+timing, so the perf pass reasons about structure)."""
+
+import pytest
+
+from compile.kernels import mxu_utilization_estimate, vmem_footprint_bytes
+
+
+def test_vmem_footprint_quickstart_config():
+    # b=16, bn=128, fp32: 2*(16*16*4 + 16*128*4) + 16*128*4 = 26624 B.
+    assert vmem_footprint_bytes(16, 128, 4) == 26624
+
+
+def test_vmem_footprint_scales_with_block_and_slab():
+    assert vmem_footprint_bytes(16, 256, 4) > vmem_footprint_bytes(16, 128, 4)
+    assert vmem_footprint_bytes(16, 128, 4) > vmem_footprint_bytes(4, 128, 4)
+    # bf16 halves the footprint.
+    assert vmem_footprint_bytes(16, 128, 2) == vmem_footprint_bytes(16, 128, 4) // 2
+
+
+def test_vmem_fits_budget_for_all_paper_configs():
+    # Every paper (b, bn) combination stays far below a 16 MB VMEM.
+    for b in [1, 4, 8, 16]:
+        for bn in [32, 128, 512]:
+            assert vmem_footprint_bytes(b, bn, 4) < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_monotone_in_b():
+    utils = [mxu_utilization_estimate(b, 128) for b in [1, 4, 8, 16]]
+    assert utils == sorted(utils)
+    assert utils[-1] == pytest.approx(16 / 128)
+
+
+def test_mxu_utilization_caps_at_one():
+    assert mxu_utilization_estimate(256, 512) == 1.0
+
+
+def test_mxu_narrow_slab_penalised():
+    assert mxu_utilization_estimate(16, 32) < mxu_utilization_estimate(16, 128)

@@ -1,0 +1,51 @@
+//! End-to-end bench: regenerate every figure of the paper's evaluation
+//! (`cargo bench --bench figures`). Set `POPSPARSE_FAST=1` to skip the
+//! heaviest grids (fig4c's full fit and fig7).
+
+use std::time::Instant;
+
+use popsparse::bench_harness::{experiments, sweep::Env};
+
+fn main() {
+    let env = Env::default();
+    let fast = std::env::var("POPSPARSE_FAST").is_ok();
+    let out = std::path::Path::new("target/bench_results");
+
+    // The generator runs inside `step` so the reported time covers the
+    // sweep itself, not just the printing.
+    let step = |name: &str, gen: &dyn Fn() -> Vec<popsparse::bench_harness::Table>| {
+        let t0 = Instant::now();
+        let tables = gen();
+        for (i, t) in tables.iter().enumerate() {
+            t.print();
+            let file =
+                if tables.len() == 1 { format!("{name}.csv") } else { format!("{name}_{i}.csv") };
+            t.write_csv(out.join(file)).expect("write csv");
+        }
+        println!("[{name} done in {:?}]\n", t0.elapsed());
+    };
+
+    step("fig2", &|| vec![experiments::fig2(&env)]);
+    step("fig3a", &|| vec![experiments::fig3a(&env)]);
+    step("fig3b", &|| vec![experiments::fig3b(&env)]);
+    step("fig4a", &|| vec![experiments::fig4a(&env)]);
+    step("fig4b", &|| vec![experiments::fig4b(&env)]);
+    step("ell", &|| vec![experiments::ell_ablation(&env)]);
+    step("conclusions", &|| vec![experiments::conclusions(&env)]);
+    if !fast {
+        let t0 = Instant::now();
+        let (t, law) = experiments::fig4c(&env);
+        t.print();
+        t.write_csv(out.join("fig4c.csv")).expect("write csv");
+        if let Some(law) = law {
+            println!(
+                "fitted: speedup ≈ {:.4} · m^{:.2} · d^{:.2} · b^{:.2} (R²={:.3})",
+                law.coefficient, law.exponents[0], law.exponents[1], law.exponents[2], law.r_squared
+            );
+        }
+        println!("[fig4c done in {:?}]\n", t0.elapsed());
+        step("fig7", &|| experiments::fig7(&env));
+    } else {
+        println!("(POPSPARSE_FAST set: skipped fig4c and fig7)");
+    }
+}

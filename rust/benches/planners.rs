@@ -1,0 +1,83 @@
+//! Criterion-style microbenchmarks of the L3 hot paths (offline build:
+//! uses the crate's own timing harness). These are the §Perf gate for
+//! the coordinator layer: planning, host encoding, pattern generation
+//! and the plan-cache hit path.
+
+use std::time::Duration;
+
+use popsparse::coordinator::{JobSpec, Mode, PlanCache};
+use popsparse::dynamic_::{host, planner};
+use popsparse::sim::chip::{CostModel, IpuSpec};
+use popsparse::sparse::patterns;
+use popsparse::util::timing::{bench, print_header};
+use popsparse::DType;
+
+fn main() {
+    let spec = IpuSpec::default();
+    let cm = CostModel::default();
+    let budget = Duration::from_millis(400);
+    print_header();
+
+    // Pattern generation (bench input setup cost in the harness).
+    bench("patterns::with_density 4096x4096 b16 d=1/16", budget, 5, || {
+        let m = patterns::with_density(4096, 4096, 16, 1.0 / 16.0, 1).unwrap();
+        std::hint::black_box(m.nnz_blocks());
+    });
+    bench("patterns::with_density 4096x4096 b1 d=1/16", budget, 3, || {
+        let m = patterns::with_density(4096, 4096, 1, 1.0 / 16.0, 1).unwrap();
+        std::hint::black_box(m.nnz_blocks());
+    });
+
+    // Static planner (the compile-time cost a serving layer pays per
+    // new pattern).
+    let mask16 = patterns::with_density(4096, 4096, 16, 1.0 / 16.0, 42).unwrap();
+    bench("static_::plan 4096x4096 b16 d=1/16 n=4096", budget, 5, || {
+        let p = popsparse::static_::plan(&mask16, 4096, DType::Fp16, &spec, &cm).unwrap();
+        std::hint::black_box(p.cost.total());
+    });
+    let mask1 = patterns::with_density(4096, 4096, 1, 1.0 / 16.0, 42).unwrap();
+    bench("static_::plan 4096x4096 b1  d=1/16 n=4096", budget, 3, || {
+        let p = popsparse::static_::plan(&mask1, 4096, DType::Fp16, &spec, &cm).unwrap();
+        std::hint::black_box(p.cost.total());
+    });
+
+    // Dynamic planner (compile time) and host utility (request path!).
+    bench("dynamic_::planner::plan 4096 b16 dmax=1/16", budget, 5, || {
+        let p = planner::plan(4096, 4096, 4096, 16, 1.0 / 16.0, DType::Fp16, &spec, &cm).unwrap();
+        std::hint::black_box(p.capacity_blocks);
+    });
+    let dplan = planner::plan(4096, 4096, 4096, 16, 1.0 / 16.0, DType::Fp16, &spec, &cm).unwrap();
+    bench("dynamic_::host::encode 4096 b16 (request path)", budget, 10, || {
+        let b = host::encode(&mask16, dplan.q_m, dplan.q_k, dplan.capacity_blocks).unwrap();
+        std::hint::black_box(b.propagation_steps());
+    });
+    bench("dynamic_::execute_pattern 4096 b16", budget, 10, || {
+        let e = popsparse::dynamic_::execute_pattern(&dplan, &mask16, &spec, &cm).unwrap();
+        std::hint::black_box(e.cost.total());
+    });
+
+    // Plan cache: the serving hot path must be cache-hit dominated.
+    let cache = PlanCache::new(spec.clone(), cm.clone());
+    let job = JobSpec {
+        mode: Mode::Dynamic,
+        m: 4096,
+        k: 4096,
+        n: 4096,
+        b: 16,
+        density: 1.0 / 16.0,
+        dtype: DType::Fp16,
+        pattern_seed: 0,
+    };
+    let _ = cache.get_or_plan(&job).unwrap(); // warm
+    bench("plan_cache hit (dynamic 4096 b16)", budget, 100, || {
+        let (p, hit) = cache.get_or_plan(&job).unwrap();
+        assert!(hit);
+        std::hint::black_box(p);
+    });
+
+    // Dense baseline planning.
+    bench("dense_::plan 4096x4096 n=4096", budget, 5, || {
+        let p = popsparse::dense_::plan(4096, 4096, 4096, DType::Fp16, &spec, &cm).unwrap();
+        std::hint::black_box(p.cost.total());
+    });
+}

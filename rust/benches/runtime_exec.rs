@@ -1,0 +1,80 @@
+//! PJRT execution hot path: latency of the AOT artifacts on the CPU
+//! client (`cargo bench --bench runtime_exec`). The §Perf gate for the
+//! numeric request path: compile once, execute many, amortise batch.
+
+use std::time::Duration;
+
+use popsparse::runtime::{Arg, Runtime};
+use popsparse::sparse::patterns;
+use popsparse::util::timing::{bench, print_header};
+use popsparse::util::Rng;
+
+fn main() {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let budget = Duration::from_millis(600);
+    print_header();
+
+    // Pre-compile off the timed path (the AOT model).
+    for name in ["spmm_quickstart", "spmm_512_b16_d8", "dense_256", "mlp_512x512_b16_d8"] {
+        rt.ensure_compiled(name).expect("compile");
+    }
+
+    // SpMM artifact execution.
+    let meta = rt.manifest().get("spmm_quickstart").unwrap().clone();
+    let mask = patterns::uniform(meta.m, meta.k, meta.b, meta.nnz_b, 7).unwrap();
+    let coo = patterns::with_values(&mask, 7);
+    let mut rng = Rng::seed_from_u64(9);
+    let x: Vec<f32> = (0..meta.k * meta.n).map(|_| rng.normal() as f32).collect();
+    let s = bench("execute spmm_quickstart (256x256 b16, n=64)", budget, 20, || {
+        let y = rt.execute_spmm("spmm_quickstart", &coo, &x).unwrap();
+        std::hint::black_box(y.len());
+    });
+    let flops = meta.flops as f64;
+    println!("    -> {:.2} GFLOP/s effective on CPU PJRT", flops / s.mean_ns());
+
+    // Larger variant.
+    let meta2 = rt.manifest().get("spmm_512_b16_d8").unwrap().clone();
+    let mask2 = patterns::uniform(meta2.m, meta2.k, meta2.b, meta2.nnz_b, 8).unwrap();
+    let coo2 = patterns::with_values(&mask2, 8);
+    let x2: Vec<f32> = (0..meta2.k * meta2.n).map(|_| rng.normal() as f32).collect();
+    bench("execute spmm_512_b16_d8 (512x512 b16, n=128)", budget, 10, || {
+        let y = rt.execute_spmm("spmm_512_b16_d8", &coo2, &x2).unwrap();
+        std::hint::black_box(y.len());
+    });
+
+    // Dense baseline artifact.
+    let dm = rt.manifest().get("dense_256").unwrap().clone();
+    let a: Vec<f32> = (0..dm.m * dm.k).map(|_| rng.normal() as f32).collect();
+    let xd: Vec<f32> = (0..dm.k * dm.n).map(|_| rng.normal() as f32).collect();
+    bench("execute dense_256 (256x256, n=64)", budget, 20, || {
+        let y = rt.execute("dense_256", &[Arg::F32(&a), Arg::F32(&xd)]).unwrap();
+        std::hint::black_box(y.len());
+    });
+
+    // Serving-path MLP.
+    let l0_mask = patterns::uniform(512, 512, 16, 128, 21).unwrap();
+    let l1_mask = patterns::uniform(512, 512, 16, 128, 22).unwrap();
+    let l0 = patterns::with_values(&l0_mask, 21);
+    let l1 = patterns::with_values(&l1_mask, 22);
+    let to_i32 = |v: &[u32]| v.iter().map(|&u| u as i32).collect::<Vec<i32>>();
+    let (r0, c0) = (to_i32(&l0.block_rows), to_i32(&l0.block_cols));
+    let (r1, c1) = (to_i32(&l1.block_rows), to_i32(&l1.block_cols));
+    let xm: Vec<f32> = (0..512 * 32).map(|_| rng.normal() as f32).collect();
+    bench("execute mlp_512x512_b16_d8 (2 layers, n=32)", budget, 10, || {
+        let y = rt
+            .execute(
+                "mlp_512x512_b16_d8",
+                &[
+                    Arg::F32(&l0.values),
+                    Arg::I32(&r0),
+                    Arg::I32(&c0),
+                    Arg::F32(&l1.values),
+                    Arg::I32(&r1),
+                    Arg::I32(&c1),
+                    Arg::F32(&xm),
+                ],
+            )
+            .unwrap();
+        std::hint::black_box(y.len());
+    });
+}

@@ -1,0 +1,18 @@
+//! End-to-end bench: regenerate the paper's Table 3 and report how
+//! long the full sweep takes (`cargo bench --bench table3`).
+
+use std::time::Instant;
+
+use popsparse::bench_harness::{experiments, sweep::Env};
+
+fn main() {
+    let env = Env::default();
+    let t0 = Instant::now();
+    let table = experiments::table3(&env);
+    let elapsed = t0.elapsed();
+    table.print();
+    table
+        .write_csv("target/bench_results/table3.csv")
+        .expect("write table3.csv");
+    println!("table3 sweep completed in {elapsed:?}");
+}

@@ -1,0 +1,12 @@
+//! Bench harness: regenerates every table and figure of the paper's
+//! evaluation section (see DESIGN.md §5 for the experiment index).
+//!
+//! Each experiment function returns [`report::Table`]s that print as
+//! aligned markdown and can be written as CSV. The CLI (`repro bench
+//! <experiment>`) and the `rust/benches/*` targets drive these.
+
+pub mod experiments;
+pub mod report;
+pub mod sweep;
+
+pub use report::Table;

@@ -1,0 +1,130 @@
+//! Sweep parameters (paper Table 2) and shared measurement helpers.
+
+use crate::sim::chip::{CostModel, IpuSpec};
+use crate::sparse::patterns;
+use crate::DType;
+
+/// The paper's benchmark sweep (Table 2).
+pub struct PaperSweep {
+    /// Feature sizes m = k: 2^8 .. 2^13.
+    pub feature_sizes: Vec<usize>,
+    /// Batch sizes n: 2^2, 2^4, ..., 2^16.
+    pub batch_sizes: Vec<usize>,
+    /// Block sizes: 1 (unstructured), 4, 8, 16.
+    pub block_sizes: Vec<usize>,
+    /// Density factors: 1 (dense), 1/4, 1/8, 1/16, 1/32.
+    pub densities: Vec<f64>,
+    /// Data types (FP16* — compute fp32, io fp16 — is GPU-only).
+    pub dtypes: Vec<DType>,
+}
+
+impl Default for PaperSweep {
+    fn default() -> Self {
+        Self {
+            feature_sizes: (8..=13).map(|p| 1usize << p).collect(),
+            batch_sizes: (1..=8).map(|p| 1usize << (2 * p)).collect(),
+            block_sizes: vec![1, 4, 8, 16],
+            densities: vec![0.25, 0.125, 0.0625, 0.03125],
+            dtypes: vec![DType::Fp16, DType::Fp32],
+        }
+    }
+}
+
+/// Deterministic seed for a sweep point (reproducible patterns).
+pub fn seed_for(m: usize, b: usize, inv_d: usize) -> u64 {
+    (m as u64) << 32 | (b as u64) << 16 | inv_d as u64
+}
+
+/// Measurement environment: chip spec + frozen calibration.
+pub struct Env {
+    pub spec: IpuSpec,
+    pub cm: CostModel,
+}
+
+impl Default for Env {
+    fn default() -> Self {
+        Self { spec: IpuSpec::default(), cm: CostModel::default() }
+    }
+}
+
+impl Env {
+    /// Best dense TFLOP/s over the batch-size sweep.
+    pub fn dense_best_tflops(&self, m: usize, k: usize, dtype: DType) -> f64 {
+        let sweep = PaperSweep::default();
+        sweep
+            .batch_sizes
+            .iter()
+            .filter_map(|&n| {
+                Some(crate::dense_::plan(m, k, n, dtype, &self.spec, &self.cm).ok()?.tflops(&self.spec))
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Best static-sparse TFLOP/s over the batch-size sweep.
+    /// Returns None if every batch size is infeasible (Fig 7 grey).
+    pub fn static_best_tflops(&self, m: usize, b: usize, d: f64, dtype: DType) -> Option<f64> {
+        let mask = patterns::with_density(m, m, b, d, seed_for(m, b, (1.0 / d) as usize)).ok()?;
+        let sweep = PaperSweep::default();
+        let best = sweep
+            .batch_sizes
+            .iter()
+            .filter_map(|&n| {
+                Some(crate::static_::plan(&mask, n, dtype, &self.spec, &self.cm).ok()?
+                    .tflops(&self.spec))
+            })
+            .fold(0.0, f64::max);
+        (best > 0.0).then_some(best)
+    }
+
+    /// Best dynamic-sparse TFLOP/s over the batch-size sweep.
+    pub fn dynamic_best_tflops(&self, m: usize, b: usize, d: f64, dtype: DType) -> Option<f64> {
+        let mask = patterns::with_density(m, m, b, d, seed_for(m, b, (1.0 / d) as usize)).ok()?;
+        let sweep = PaperSweep::default();
+        let best = sweep
+            .batch_sizes
+            .iter()
+            .filter_map(|&n| {
+                Some(
+                    crate::dynamic_::plan_and_execute(&mask, n, dtype, &self.spec, &self.cm)
+                        .ok()?
+                        .tflops(&self.spec),
+                )
+            })
+            .fold(0.0, f64::max);
+        (best > 0.0).then_some(best)
+    }
+
+    /// Speedup vs dense under the paper's convention:
+    /// `sparse_tflops / (d * dense_tflops)` with best-over-n on each side.
+    pub fn speedup(&self, sparse_tflops: f64, dense_tflops: f64, d: f64) -> f64 {
+        sparse_tflops / (d * dense_tflops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_matches_table2() {
+        let s = PaperSweep::default();
+        assert_eq!(s.feature_sizes, vec![256, 512, 1024, 2048, 4096, 8192]);
+        assert_eq!(s.batch_sizes.first(), Some(&4));
+        assert_eq!(s.batch_sizes.last(), Some(&65536));
+        assert_eq!(s.block_sizes, vec![1, 4, 8, 16]);
+        assert_eq!(s.densities.len(), 4);
+    }
+
+    #[test]
+    fn seeds_are_distinct() {
+        assert_ne!(seed_for(4096, 16, 16), seed_for(4096, 16, 8));
+        assert_ne!(seed_for(4096, 16, 16), seed_for(2048, 16, 16));
+    }
+
+    #[test]
+    fn speedup_convention() {
+        let env = Env::default();
+        // sparse at 10 TF on d=1/16 vs dense at 100 TF → 1.6x.
+        assert!((env.speedup(10.0, 100.0, 1.0 / 16.0) - 1.6).abs() < 1e-9);
+    }
+}

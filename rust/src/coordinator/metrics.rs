@@ -1,0 +1,120 @@
+//! Serving metrics: counters and latency percentiles.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Aggregated serving metrics. Latencies are kept in a bounded
+/// reservoir; percentiles are computed on demand.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    jobs_completed: u64,
+    jobs_failed: u64,
+    batches: u64,
+    batched_jobs: u64,
+    simulated_cycles: u64,
+    latencies_ns: Vec<u64>,
+}
+
+/// A point-in-time snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub batches: u64,
+    /// Mean jobs per batch (batching effectiveness).
+    pub mean_batch_size: f64,
+    pub simulated_cycles: u64,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+const RESERVOIR: usize = 65536;
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_job(&self, latency: Duration, cycles: u64) {
+        let mut g = self.inner.lock().expect("metrics poisoned");
+        g.jobs_completed += 1;
+        g.simulated_cycles += cycles;
+        if g.latencies_ns.len() < RESERVOIR {
+            g.latencies_ns.push(latency.as_nanos() as u64);
+        }
+    }
+
+    pub fn record_failure(&self) {
+        self.inner.lock().expect("metrics poisoned").jobs_failed += 1;
+    }
+
+    pub fn record_batch(&self, jobs: usize) {
+        let mut g = self.inner.lock().expect("metrics poisoned");
+        g.batches += 1;
+        g.batched_jobs += jobs as u64;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().expect("metrics poisoned");
+        let mut lat = g.latencies_ns.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> Duration {
+            if lat.is_empty() {
+                return Duration::ZERO;
+            }
+            let idx = ((lat.len() - 1) as f64 * p) as usize;
+            Duration::from_nanos(lat[idx])
+        };
+        Snapshot {
+            jobs_completed: g.jobs_completed,
+            jobs_failed: g.jobs_failed,
+            batches: g.batches,
+            mean_batch_size: if g.batches == 0 {
+                0.0
+            } else {
+                g.batched_jobs as f64 / g.batches as f64
+            },
+            simulated_cycles: g.simulated_cycles,
+            p50: pct(0.50),
+            p99: pct(0.99),
+            max: pct(1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_job(Duration::from_micros(i), 1000);
+        }
+        m.record_failure();
+        m.record_batch(4);
+        m.record_batch(8);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_completed, 100);
+        assert_eq!(s.jobs_failed, 1);
+        assert_eq!(s.simulated_cycles, 100_000);
+        assert!((s.mean_batch_size - 6.0).abs() < 1e-9);
+        assert!(s.p50 >= Duration::from_micros(45) && s.p50 <= Duration::from_micros(55));
+        assert!(s.p99 >= s.p50);
+        assert_eq!(s.max, Duration::from_micros(100));
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.jobs_completed, 0);
+        assert_eq!(s.p50, Duration::ZERO);
+    }
+}

@@ -1,0 +1,328 @@
+//! The serving coordinator: router, plan cache, dynamic batcher,
+//! worker pool and metrics.
+//!
+//! Architecture (threads + channels; the request path never touches
+//! Python):
+//!
+//! ```text
+//!  submit(job) ──► batcher (groups by weight config, flushes on
+//!                  capacity or delay) ──► worker pool ──► plan cache
+//!                  ──► simulator (cycles) [+ PJRT runtime in the
+//!                  examples for real numerics] ──► JobResult
+//! ```
+
+pub mod batcher;
+pub mod metrics;
+pub mod plan_cache;
+pub mod request;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub use batcher::{Batch, BatchKey, Batcher};
+pub use metrics::{Metrics, Snapshot};
+pub use plan_cache::{CachedPlan, PlanCache};
+pub use request::{JobResult, JobSpec, Mode, PlanKey};
+
+use crate::error::{Error, Result};
+use crate::sim::chip::{CostModel, IpuSpec};
+use crate::sparse::patterns;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub workers: usize,
+    /// Batch flush threshold over the summed batch dimension.
+    pub max_batch_n: usize,
+    /// Max time a job waits for batch-mates.
+    pub max_batch_delay: Duration,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { workers: 4, max_batch_n: 4096, max_batch_delay: Duration::from_millis(2) }
+    }
+}
+
+type Responder = mpsc::Sender<Result<JobResult>>;
+
+enum WorkItem {
+    Batch(Batch<Responder>),
+}
+
+/// The coordinator. Create with [`Coordinator::new`], submit jobs with
+/// [`Coordinator::submit`], inspect [`Coordinator::metrics`].
+pub struct Coordinator {
+    cache: Arc<PlanCache>,
+    metrics: Arc<Metrics>,
+    ingress: Option<mpsc::Sender<(JobSpec, Responder)>>,
+    ingress_thread: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    shutting_down: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    pub fn new(config: Config, spec: IpuSpec, cm: CostModel) -> Self {
+        let cache = Arc::new(PlanCache::new(spec, cm));
+        let metrics = Arc::new(Metrics::new());
+        let shutting_down = Arc::new(AtomicBool::new(false));
+
+        let (ingress_tx, ingress_rx) = mpsc::channel::<(JobSpec, Responder)>();
+        let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
+        let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
+
+        // Ingress thread: runs the batcher.
+        let batch_cfg = config.clone();
+        let batch_metrics = metrics.clone();
+        let batch_tx = work_tx.clone();
+        let ingress_thread = std::thread::spawn(move || {
+            let mut batcher: Batcher<Responder> =
+                Batcher::new(batch_cfg.max_batch_n, batch_cfg.max_batch_delay);
+            loop {
+                // Wait up to the delay budget for new work, then poll.
+                match ingress_rx.recv_timeout(batch_cfg.max_batch_delay) {
+                    Ok((job, responder)) => {
+                        if let Some(batch) = batcher.push(job, responder) {
+                            batch_metrics.record_batch(batch.jobs.len());
+                            let _ = batch_tx.send(WorkItem::Batch(batch));
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+                for batch in batcher.poll(Instant::now()) {
+                    batch_metrics.record_batch(batch.jobs.len());
+                    let _ = batch_tx.send(WorkItem::Batch(batch));
+                }
+            }
+            for batch in batcher.drain() {
+                batch_metrics.record_batch(batch.jobs.len());
+                let _ = batch_tx.send(WorkItem::Batch(batch));
+            }
+            drop(batch_tx);
+        });
+
+        // Worker pool.
+        let mut workers = Vec::with_capacity(config.workers);
+        for _ in 0..config.workers.max(1) {
+            let rx = work_rx.clone();
+            let cache = cache.clone();
+            let metrics = metrics.clone();
+            workers.push(std::thread::spawn(move || loop {
+                let item = {
+                    let guard = rx.lock().expect("work queue poisoned");
+                    guard.recv()
+                };
+                match item {
+                    Ok(WorkItem::Batch(batch)) => process_batch(batch, &cache, &metrics),
+                    Err(_) => break,
+                }
+            }));
+        }
+        // Keep one work_tx alive for shutdown signalling.
+        let coordinator = Self {
+            cache,
+            metrics,
+            ingress: Some(ingress_tx),
+            ingress_thread: Some(ingress_thread),
+            workers,
+            shutting_down,
+        };
+        // work_tx dropped here: workers exit when ingress thread ends
+        // and all batch senders are gone.
+        drop(work_tx);
+        coordinator
+    }
+
+    /// Submit a job; the returned channel yields its result.
+    pub fn submit(&self, job: JobSpec) -> mpsc::Receiver<Result<JobResult>> {
+        let (tx, rx) = mpsc::channel();
+        if self.shutting_down.load(Ordering::Relaxed) {
+            let _ = tx.send(Err(Error::Coordinator("shutting down".into())));
+            return rx;
+        }
+        match self.ingress.as_ref() {
+            Some(ingress) => {
+                if let Err(e) = ingress.send((job, tx.clone())) {
+                    let _ = tx.send(Err(Error::Coordinator(format!("ingress closed: {e}"))));
+                }
+            }
+            None => {
+                let _ = tx.send(Err(Error::Coordinator("shut down".into())));
+            }
+        }
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn submit_wait(&self, job: JobSpec) -> Result<JobResult> {
+        self.submit(job)
+            .recv()
+            .map_err(|_| Error::Coordinator("worker dropped response".into()))?
+    }
+
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn plan_cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+
+    /// Graceful shutdown: flush the batcher, join all threads.
+    pub fn shutdown(mut self) {
+        self.shutting_down.store(true, Ordering::Relaxed);
+        drop(self.ingress.take());
+        if let Some(t) = self.ingress_thread.take() {
+            let _ = t.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutting_down.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Execute one batch: plan once at the combined batch size, simulate,
+/// fan results back out.
+fn process_batch(batch: Batch<Responder>, cache: &PlanCache, metrics: &Metrics) {
+    let t0 = Instant::now();
+    // Plan at the batch's combined n (this is the batching win).
+    let mut rep = batch.jobs[0].0.clone();
+    rep.n = batch.total_n;
+    let planned = cache.get_or_plan(&rep);
+    match planned {
+        Err(e) => {
+            let msg = e.to_string();
+            for (_, responder) in batch.jobs {
+                metrics.record_failure();
+                let _ = responder.send(Err(Error::Coordinator(msg.clone())));
+            }
+        }
+        Ok((plan, was_hit)) => {
+            let (cycles, prop_steps) = match &plan {
+                CachedPlan::Dense(p) => (p.cost.total(), 0),
+                CachedPlan::Static(p, _) => (p.cost.total(), 0),
+                CachedPlan::Dynamic(p) => {
+                    // Dynamic: bucket the batch's (fresh) pattern now.
+                    let seed = batch.jobs[0].0.pattern_seed;
+                    match patterns::with_density(rep.m, rep.k, rep.b, rep.density, seed)
+                        .map_err(|e| Error::Coordinator(e.to_string()))
+                        .and_then(|mask| {
+                            crate::dynamic_::execute_pattern(
+                                p,
+                                &mask,
+                                cache.spec(),
+                                cache.cost_model(),
+                            )
+                            .map_err(|e| Error::Coordinator(e.to_string()))
+                        }) {
+                        Ok(exec) => (exec.cost.total(), exec.propagation_steps()),
+                        Err(e) => {
+                            let msg = e.to_string();
+                            for (_, responder) in batch.jobs {
+                                metrics.record_failure();
+                                let _ = responder.send(Err(Error::Coordinator(msg.clone())));
+                            }
+                            return;
+                        }
+                    }
+                }
+            };
+            let service_time = t0.elapsed();
+            let spec = cache.spec();
+            for (job, responder) in batch.jobs {
+                let tflops = crate::tflops(rep.flops(), cycles, spec.clock_hz);
+                metrics.record_job(service_time, cycles);
+                let _ = responder.send(Ok(JobResult {
+                    spec: job,
+                    cycles,
+                    tflops,
+                    propagation_steps: prop_steps,
+                    plan_cache_hit: was_hit,
+                    service_time,
+                }));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::DType;
+
+    fn job(mode: Mode, n: usize, seed: u64) -> JobSpec {
+        JobSpec {
+            mode,
+            m: 512,
+            k: 512,
+            n,
+            b: 16,
+            density: 1.0 / 8.0,
+            dtype: DType::Fp16,
+            pattern_seed: seed,
+        }
+    }
+
+    #[test]
+    fn serves_all_three_modes() {
+        let c = Coordinator::new(Config::default(), IpuSpec::default(), CostModel::default());
+        for mode in [Mode::Dense, Mode::Static, Mode::Dynamic] {
+            let r = c.submit_wait(job(mode, 128, 7)).unwrap();
+            assert!(r.cycles > 0, "{mode}: zero cycles");
+            assert!(r.tflops > 0.0);
+        }
+        let snap = c.metrics();
+        assert_eq!(snap.jobs_completed, 3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batches_concurrent_jobs() {
+        let c = Coordinator::new(
+            Config { workers: 2, max_batch_n: 256, max_batch_delay: Duration::from_millis(20) },
+            IpuSpec::default(),
+            CostModel::default(),
+        );
+        let rxs: Vec<_> = (0..4).map(|_| c.submit(job(Mode::Dynamic, 64, 3))).collect();
+        let results: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        assert_eq!(results.len(), 4);
+        // 4 jobs x n=64 = 256 -> one flush at capacity.
+        let snap = c.metrics();
+        assert!(snap.mean_batch_size > 1.0, "batching should coalesce: {snap:?}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn plan_cache_reused_across_batches() {
+        let c = Coordinator::new(
+            Config { workers: 1, max_batch_n: 64, max_batch_delay: Duration::from_millis(1) },
+            IpuSpec::default(),
+            CostModel::default(),
+        );
+        let _ = c.submit_wait(job(Mode::Dense, 64, 0)).unwrap();
+        let r2 = c.submit_wait(job(Mode::Dense, 64, 0)).unwrap();
+        assert!(r2.plan_cache_hit);
+        c.shutdown();
+    }
+
+    #[test]
+    fn failure_is_reported_not_hung() {
+        let c = Coordinator::new(Config::default(), IpuSpec::default(), CostModel::default());
+        // m not a multiple of b -> planner error surfaces.
+        let mut bad = job(Mode::Dynamic, 64, 0);
+        bad.m = 100;
+        let res = c.submit_wait(bad);
+        assert!(res.is_err());
+        assert_eq!(c.metrics().jobs_failed, 1);
+        c.shutdown();
+    }
+}

@@ -1,0 +1,145 @@
+//! Plan cache: compile-once, run-many.
+//!
+//! The IPU's ahead-of-time model means planning/compilation is
+//! expensive and executions are cheap; a serving layer must therefore
+//! cache plans aggressively. Dynamic-mode plans are reusable across
+//! *any* pattern under their `d_max` (the paper's headline property);
+//! static plans are pattern-specific.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::request::{JobSpec, Mode, PlanKey};
+use crate::dense_::DensePlan;
+use crate::dynamic_::DynamicPlan;
+use crate::error::Result;
+use crate::sim::chip::{CostModel, IpuSpec};
+use crate::sparse::mask::BlockMask;
+use crate::sparse::patterns;
+use crate::static_::StaticPlan;
+
+/// A cached plan for one plan key.
+#[derive(Debug, Clone)]
+pub enum CachedPlan {
+    Dense(Arc<DensePlan>),
+    /// Static: the plan embeds the pattern it was compiled for.
+    Static(Arc<StaticPlan>, Arc<BlockMask>),
+    /// Dynamic: the compile-time grid; patterns arrive at run time.
+    Dynamic(Arc<DynamicPlan>),
+}
+
+/// Thread-safe plan cache with hit/miss accounting.
+pub struct PlanCache {
+    spec: IpuSpec,
+    cm: CostModel,
+    plans: Mutex<HashMap<PlanKey, CachedPlan>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new(spec: IpuSpec, cm: CostModel) -> Self {
+        Self {
+            spec,
+            cm,
+            plans: Mutex::new(HashMap::new()),
+            hits: Default::default(),
+            misses: Default::default(),
+        }
+    }
+
+    pub fn spec(&self) -> &IpuSpec {
+        &self.spec
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cm
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        (self.hits.load(Relaxed), self.misses.load(Relaxed))
+    }
+
+    /// Get or build the plan for a job. Returns (plan, was_hit).
+    pub fn get_or_plan(&self, job: &JobSpec) -> Result<(CachedPlan, bool)> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let key = job.plan_key();
+        if let Some(plan) = self.plans.lock().expect("plan cache poisoned").get(&key) {
+            self.hits.fetch_add(1, Relaxed);
+            return Ok((plan.clone(), true));
+        }
+        // Plan outside the lock (planning can take milliseconds).
+        let plan = self.build(job)?;
+        self.misses.fetch_add(1, Relaxed);
+        let mut map = self.plans.lock().expect("plan cache poisoned");
+        let entry = map.entry(key).or_insert(plan);
+        Ok((entry.clone(), false))
+    }
+
+    fn build(&self, job: &JobSpec) -> Result<CachedPlan> {
+        match job.mode {
+            Mode::Dense => {
+                let p = crate::dense_::plan(job.m, job.k, job.n, job.dtype, &self.spec, &self.cm)?;
+                Ok(CachedPlan::Dense(Arc::new(p)))
+            }
+            Mode::Static => {
+                let mask =
+                    patterns::with_density(job.m, job.k, job.b, job.density, job.pattern_seed)?;
+                let p = crate::static_::plan(&mask, job.n, job.dtype, &self.spec, &self.cm)?;
+                Ok(CachedPlan::Static(Arc::new(p), Arc::new(mask)))
+            }
+            Mode::Dynamic => {
+                let p = crate::dynamic_::planner::plan(
+                    job.m, job.k, job.n, job.b, job.density, job.dtype, &self.spec, &self.cm,
+                )?;
+                Ok(CachedPlan::Dynamic(Arc::new(p)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::DType;
+
+    fn job(mode: Mode, seed: u64) -> JobSpec {
+        JobSpec {
+            mode,
+            m: 512,
+            k: 512,
+            n: 128,
+            b: 16,
+            density: 1.0 / 8.0,
+            dtype: DType::Fp16,
+            pattern_seed: seed,
+        }
+    }
+
+    #[test]
+    fn caches_across_calls() {
+        let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
+        let (_, hit1) = cache.get_or_plan(&job(Mode::Dense, 0)).unwrap();
+        let (_, hit2) = cache.get_or_plan(&job(Mode::Dense, 0)).unwrap();
+        assert!(!hit1 && hit2);
+        assert_eq!(cache.stats(), (1, 1));
+    }
+
+    #[test]
+    fn dynamic_shares_plan_across_patterns() {
+        let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
+        let (_, h1) = cache.get_or_plan(&job(Mode::Dynamic, 1)).unwrap();
+        let (_, h2) = cache.get_or_plan(&job(Mode::Dynamic, 999)).unwrap();
+        assert!(!h1 && h2, "different seeds must share the dynamic plan");
+    }
+
+    #[test]
+    fn static_replans_per_pattern() {
+        let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
+        let (_, h1) = cache.get_or_plan(&job(Mode::Static, 1)).unwrap();
+        let (_, h2) = cache.get_or_plan(&job(Mode::Static, 2)).unwrap();
+        assert!(!h1 && !h2, "static plans are pattern-specific");
+    }
+}

@@ -1,0 +1,130 @@
+//! Request/response types for the SpMM serving layer.
+
+use crate::DType;
+
+/// Which implementation a job targets (Table 1's API rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// `poplin::matMul` equivalent.
+    Dense,
+    /// `popsparse::static_::sparseDenseMatMul`.
+    Static,
+    /// `popsparse::dynamic::sparseDenseMatMul`.
+    Dynamic,
+}
+
+impl std::fmt::Display for Mode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Mode::Dense => write!(f, "dense"),
+            Mode::Static => write!(f, "static"),
+            Mode::Dynamic => write!(f, "dynamic"),
+        }
+    }
+}
+
+/// One SpMM job: the problem specification the coordinator plans,
+/// simulates and (optionally) numerically executes.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub mode: Mode,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Block size (1 for unstructured; ignored for dense).
+    pub b: usize,
+    /// Target density (ignored for dense).
+    pub density: f64,
+    pub dtype: DType,
+    /// Seed for the random pattern (dynamic mode re-randomises per
+    /// run, mirroring the paper's "sparsity pattern is updated each
+    /// time the model is run").
+    pub pattern_seed: u64,
+}
+
+impl JobSpec {
+    /// Useful FLOPs under the paper's convention.
+    pub fn flops(&self) -> f64 {
+        let d = if self.mode == Mode::Dense { 1.0 } else { self.density };
+        crate::spmm_flops(self.m, self.k, self.n, d)
+    }
+
+    /// Key for plan caching: everything the planner depends on.
+    /// Dynamic mode's plan depends on `d_max` but NOT the pattern, so
+    /// jobs with different seeds share a plan — the whole point of the
+    /// paper's dynamic mode.
+    pub fn plan_key(&self) -> PlanKey {
+        PlanKey {
+            mode: self.mode,
+            m: self.m,
+            k: self.k,
+            n: self.n,
+            b: self.b,
+            density_millionths: (self.density * 1e6).round() as u64,
+            dtype: self.dtype,
+            // Static plans are pattern-specific.
+            pattern_seed: if self.mode == Mode::Static { self.pattern_seed } else { 0 },
+        }
+    }
+}
+
+/// Plan-cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub mode: Mode,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub b: usize,
+    pub density_millionths: u64,
+    pub dtype: DType,
+    pub pattern_seed: u64,
+}
+
+/// Result of one job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub spec: JobSpec,
+    /// Simulated device cycles.
+    pub cycles: u64,
+    /// Simulated throughput, non-zeros only.
+    pub tflops: f64,
+    /// Dynamic-mode propagation steps (0 otherwise).
+    pub propagation_steps: usize,
+    /// Whether the plan came from the cache.
+    pub plan_cache_hit: bool,
+    /// Wall-clock time the coordinator spent on this job.
+    pub service_time: std::time::Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(mode: Mode, seed: u64) -> JobSpec {
+        JobSpec {
+            mode,
+            m: 1024,
+            k: 1024,
+            n: 64,
+            b: 16,
+            density: 1.0 / 16.0,
+            dtype: DType::Fp16,
+            pattern_seed: seed,
+        }
+    }
+
+    #[test]
+    fn dynamic_jobs_share_plans_across_seeds() {
+        assert_eq!(spec(Mode::Dynamic, 1).plan_key(), spec(Mode::Dynamic, 2).plan_key());
+        assert_ne!(spec(Mode::Static, 1).plan_key(), spec(Mode::Static, 2).plan_key());
+    }
+
+    #[test]
+    fn flops_convention() {
+        let s = spec(Mode::Static, 0);
+        assert!((s.flops() - 2.0 * 1024.0 * 1024.0 * 64.0 / 16.0).abs() < 1.0);
+        let d = spec(Mode::Dense, 0);
+        assert!((d.flops() - 2.0 * 1024.0 * 1024.0 * 64.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Dynamic-mode host utility (paper Appendix A.2): encode a runtime
+//! sparsity pattern into fixed-size per-tile buckets of `metaInfo` +
+//! `nzValues`, spilling overflow to nearby buckets.
+//!
+//! The partition grid `(q_m, q_k)` and the bucket capacity were fixed
+//! at compile time from `d_max`; the *pattern* arrives at runtime. When
+//! a partition holds more non-zeros than its bucket fits, the excess
+//! spills to the nearest bucket with space — "distance" follows the
+//! nested iteration order around the partitions (innermost to
+//! outermost: n, k, m). Each unit of distance costs one propagation
+//! step (exchange + compute) on device.
+
+use crate::error::{Error, Result};
+use crate::sparse::mask::BlockMask;
+
+/// One recorded spill.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Spill {
+    /// Source partition (linear index, row-major over the grid).
+    pub from: usize,
+    /// Destination bucket.
+    pub to: usize,
+    /// Blocks moved.
+    pub blocks: usize,
+    /// Ring distance (= propagation steps this spill needs).
+    pub distance: usize,
+}
+
+/// The encoded bucket assignment for one runtime pattern.
+#[derive(Debug, Clone)]
+pub struct Buckets {
+    pub q_m: usize,
+    pub q_k: usize,
+    /// Bucket capacity in blocks.
+    pub capacity_blocks: usize,
+    /// Non-zero blocks *belonging to* each partition.
+    pub partition_counts: Vec<usize>,
+    /// Blocks *stored in* each bucket after spilling.
+    pub stored: Vec<usize>,
+    /// Spill record.
+    pub spills: Vec<Spill>,
+}
+
+impl Buckets {
+    /// Propagation steps the device needs: the farthest any block was
+    /// displaced (buckets shift one hop per step).
+    pub fn propagation_steps(&self) -> usize {
+        self.spills.iter().map(|s| s.distance).max().unwrap_or(0)
+    }
+
+    /// Max blocks stored in any bucket (drives worst-tile compute).
+    pub fn max_stored(&self) -> usize {
+        self.stored.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Max blocks owned by any partition (pre-spill imbalance).
+    pub fn max_partition(&self) -> usize {
+        self.partition_counts.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Total blocks moved during spilling.
+    pub fn spilled_blocks(&self) -> usize {
+        self.spills.iter().map(|s| s.blocks).sum()
+    }
+}
+
+/// Count non-zero blocks per `(q_m, q_k)` partition. Partitions are
+/// equal-sized except the last in each dimension (paper A.2).
+pub fn partition_counts(mask: &BlockMask, q_m: usize, q_k: usize) -> Vec<usize> {
+    let rows_per = mask.mb.div_ceil(q_m).max(1);
+    let cols_per = mask.kb.div_ceil(q_k).max(1);
+    let mut counts = vec![0usize; q_m * q_k];
+    for (r, c) in mask.coords() {
+        let pm = (r / rows_per).min(q_m - 1);
+        let pk = (c / cols_per).min(q_k - 1);
+        counts[pm * q_k + pk] += 1;
+    }
+    counts
+}
+
+/// Encode a pattern into buckets of `capacity_blocks`, spilling
+/// overflow to the nearest bucket with space (ring distance over the
+/// nested iteration order).
+pub fn encode(mask: &BlockMask, q_m: usize, q_k: usize, capacity_blocks: usize) -> Result<Buckets> {
+    if q_m == 0 || q_k == 0 {
+        return Err(Error::Plan("zero partition count".into()));
+    }
+    let counts = partition_counts(mask, q_m, q_k);
+    let p_total = q_m * q_k;
+    if mask.nnz_blocks() > capacity_blocks * p_total {
+        return Err(Error::Plan(format!(
+            "pattern has {} blocks but buckets hold only {} ({} x {})",
+            mask.nnz_blocks(),
+            capacity_blocks * p_total,
+            p_total,
+            capacity_blocks
+        )));
+    }
+    let mut stored = counts.clone();
+    let mut spills = Vec::new();
+    for p in 0..p_total {
+        while stored[p] > capacity_blocks {
+            let excess = stored[p] - capacity_blocks;
+            // Nearest bucket with space, scanning outward on the ring.
+            let mut placed = false;
+            for d in 1..p_total {
+                for cand in [(p + d) % p_total, (p + p_total - d % p_total) % p_total] {
+                    if stored[cand] < capacity_blocks {
+                        let space = capacity_blocks - stored[cand];
+                        let mv = excess.min(space);
+                        stored[cand] += mv;
+                        stored[p] -= mv;
+                        spills.push(Spill { from: p, to: cand, blocks: mv, distance: d });
+                        placed = true;
+                        break;
+                    }
+                }
+                if placed {
+                    break;
+                }
+            }
+            if !placed {
+                return Err(Error::Plan("no bucket space for spill".into()));
+            }
+        }
+    }
+    Ok(Buckets { q_m, q_k, capacity_blocks, partition_counts: counts, stored, spills })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::patterns;
+
+    #[test]
+    fn balanced_pattern_needs_no_propagation() {
+        // Paper Fig 6a: evenly spread nnz → distribution phase only.
+        let mask = BlockMask::from_coords(
+            64,
+            64,
+            16,
+            &[(0, 0), (0, 2), (1, 1), (1, 3), (2, 0), (2, 2), (3, 1), (3, 3)],
+        )
+        .unwrap();
+        // grid 2x2, each partition holds exactly 2 blocks, capacity 2.
+        let b = encode(&mask, 2, 2, 2).unwrap();
+        assert_eq!(b.partition_counts, vec![2, 2, 2, 2]);
+        assert_eq!(b.propagation_steps(), 0);
+        assert!(b.spills.is_empty());
+    }
+
+    #[test]
+    fn corner_packed_worst_case_propagates_widely() {
+        // Paper Fig 6b: all nnz in one partition → blocks spread over
+        // all buckets, up to q_m*q_k - 1 steps.
+        let mask = patterns::corner_packed(256, 256, 16, 16).unwrap();
+        let b = encode(&mask, 4, 4, 1).unwrap();
+        assert_eq!(b.max_partition(), 16);
+        assert_eq!(b.max_stored(), 1, "every bucket holds exactly one block");
+        assert!(
+            b.propagation_steps() >= 8,
+            "corner pattern must propagate far, got {}",
+            b.propagation_steps()
+        );
+    }
+
+    #[test]
+    fn uniform_pattern_spills_little_with_headroom() {
+        let mask = patterns::uniform(2048, 2048, 16, 1024, 7).unwrap();
+        let mean = 1024 / 64;
+        let b = encode(&mask, 8, 8, mean * 2).unwrap(); // 2x headroom
+        assert_eq!(b.spilled_blocks(), 0, "2x headroom should absorb uniform variance");
+        assert_eq!(b.propagation_steps(), 0);
+    }
+
+    #[test]
+    fn exact_capacity_uniform_spills_some() {
+        let mask = patterns::uniform(2048, 2048, 16, 1024, 7).unwrap();
+        let mean = 1024 / 64;
+        let b = encode(&mask, 8, 8, mean).unwrap();
+        // multinomial variance → some buckets overflow, but not far.
+        assert!(b.spilled_blocks() > 0);
+        assert!(b.propagation_steps() >= 1);
+        // conservation: total stored equals total nnz.
+        assert_eq!(b.stored.iter().sum::<usize>(), 1024);
+        assert!(b.stored.iter().all(|&s| s <= mean));
+    }
+
+    #[test]
+    fn rejects_overfull() {
+        let mask = patterns::uniform(256, 256, 16, 64, 1).unwrap();
+        assert!(encode(&mask, 2, 2, 10).is_err()); // 4 buckets x 10 < 64
+    }
+
+    #[test]
+    fn partition_counts_cover_all_blocks() {
+        let mask = patterns::row_imbalanced(1024, 1024, 16, 500, 1.5, 3).unwrap();
+        for (q_m, q_k) in [(1, 1), (4, 4), (8, 2), (3, 5)] {
+            let counts = partition_counts(&mask, q_m, q_k);
+            assert_eq!(counts.iter().sum::<usize>(), 500, "grid {q_m}x{q_k}");
+            assert_eq!(counts.len(), q_m * q_k);
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! `popsparse::dynamic::sparseDenseMatMul` — the runtime-pattern
+//! sparse-dense matmul (paper §3.3 + Appendix A.2).
+//!
+//! Two-phase API mirroring the real library:
+//!
+//! 1. [`planner::plan`] at *compile time*: only `(m, k, n, b, d_max)`
+//!    are known; choose the equal-split grid and bucket capacity.
+//! 2. [`execute_pattern`] at *runtime*: the host utility
+//!    ([`host::encode`]) buckets the actual pattern, then the device
+//!    program runs distribution, zero or more propagation steps (when
+//!    buckets overflowed) and the final reduction.
+
+pub mod host;
+pub mod planner;
+
+use crate::error::Result;
+use crate::sim::chip::{CostModel, IpuSpec};
+use crate::sim::{compute, exchange, execute, Cost, MemoryPlan, Program, Superstep};
+use crate::sparse::mask::BlockMask;
+pub use host::Buckets;
+pub use planner::DynamicPlan;
+
+/// A dynamic execution: one runtime pattern run under a compile-time
+/// plan.
+#[derive(Debug, Clone)]
+pub struct DynamicExec {
+    pub plan: DynamicPlan,
+    pub buckets: Buckets,
+    pub program: Program,
+    pub cost: Cost,
+    pub memory: MemoryPlan,
+}
+
+impl DynamicExec {
+    /// Density of the executed pattern.
+    pub fn density(&self) -> f64 {
+        let blocks: usize = self.buckets.partition_counts.iter().sum();
+        (blocks * self.plan.b * self.plan.b) as f64 / (self.plan.m as f64 * self.plan.k as f64)
+    }
+
+    /// Achieved TFLOP/s, non-zeros only.
+    pub fn tflops(&self, spec: &IpuSpec) -> f64 {
+        crate::tflops(
+            crate::spmm_flops(self.plan.m, self.plan.k, self.plan.n, self.density()),
+            self.cost.total(),
+            spec.clock_hz,
+        )
+    }
+
+    /// Propagation steps this pattern needed (0 = finished in the
+    /// distribution phase, the Fig 6a best case).
+    pub fn propagation_steps(&self) -> usize {
+        self.buckets.propagation_steps()
+    }
+}
+
+/// Run a pattern under a dynamic plan, producing the costed program.
+pub fn execute_pattern(
+    plan: &DynamicPlan,
+    mask: &BlockMask,
+    spec: &IpuSpec,
+    cm: &CostModel,
+) -> Result<DynamicExec> {
+    let buckets = host::encode(mask, plan.q_m, plan.q_k, plan.capacity_blocks)?;
+    let dsize = plan.dtype.size();
+    let b = plan.b;
+    let (tm, tk, tn) = (
+        plan.m.div_ceil(plan.q_m),
+        plan.k.div_ceil(plan.q_k),
+        plan.n.div_ceil(plan.q_n),
+    );
+
+    // Memory: chip-level totals (buckets repeated over q_n, paper A.2)
+    // and the most-loaded tile's residency.
+    let mut mem = MemoryPlan::new();
+    mem.alloc("buckets", plan.bucket_bytes() * plan.q_m * plan.q_k * plan.q_n);
+    mem.alloc("x_total", plan.k * plan.n * dsize);
+    mem.alloc("partials", plan.m * plan.n * dsize * plan.q_k.min(2));
+    mem.check_chip(spec)?;
+    let mut tile_mem = MemoryPlan::new();
+    tile_mem.alloc("bucket", plan.bucket_bytes());
+    tile_mem.alloc("x_slab", tk * tn * dsize);
+    tile_mem.alloc("partials", tm * tn * dsize);
+    tile_mem.check(spec)?;
+
+    let mut prog = Program::new(plan.q_m * plan.q_k * plan.q_n);
+
+    // --- Distribution phase (Fig 1 b.1) ------------------------------
+    // metaInfo + nzValues buckets move to their tiles, plus X slabs.
+    // Dynamic exchange is compiled for the largest possible volume.
+    let dist_bytes = (plan.bucket_bytes() as f64 * cm.dynamic_exchange_factor) as u64
+        + exchange::slab_bytes(tk, tn, dsize);
+    prog.push(Superstep::exchange("distribution", dist_bytes));
+
+    // First compute step: each tile processes the bucket contents that
+    // fall inside its own partition.
+    let local_blocks: u64 = buckets
+        .partition_counts
+        .iter()
+        .zip(&buckets.stored)
+        .map(|(&own, &st)| own.min(st) as u64)
+        .max()
+        .unwrap_or(0);
+    let macs = local_blocks * (b * b) as u64 * tn as u64;
+    prog.push(Superstep::compute(
+        "spmm-distribution",
+        compute::dynamic_matmul_cycles(macs, local_blocks, b, tn as u64, plan.dtype, spec, cm),
+    ));
+
+    // --- Propagation phase (Fig 1 b.2) --------------------------------
+    // Buckets shift one hop per step; every step is a full
+    // exchange + compute superstep sized for the bucket maximum.
+    let steps = buckets.propagation_steps();
+    for step in 0..steps {
+        let shift_bytes = (plan.bucket_bytes() as f64 * cm.dynamic_exchange_factor) as u64;
+        // Worst-tile compute: blocks that arrive this step. Upper-bound
+        // by the largest single spill at this distance.
+        let moved: u64 = buckets
+            .spills
+            .iter()
+            .filter(|s| s.distance > step)
+            .map(|s| s.blocks as u64)
+            .max()
+            .unwrap_or(0);
+        let macs = moved * (b * b) as u64 * tn as u64;
+        prog.push(Superstep::mixed(
+            format!("propagate-{step}"),
+            compute::dynamic_matmul_cycles(macs, moved, b, tn as u64, plan.dtype, spec, cm),
+            shift_bytes,
+        ));
+    }
+
+    // --- Reduction (Fig 1 b.3) ----------------------------------------
+    if plan.q_k > 1 {
+        let elems = (tm as u64) * (tn as u64);
+        let bytes = exchange::allreduce_bytes(elems, plan.q_k, dsize);
+        let adds = elems.div_ceil(plan.q_k as u64) * (plan.q_k as u64 - 1);
+        prog.push(Superstep::mixed("reduce", compute::reduce_cycles(adds, cm), bytes));
+    }
+
+    let cost = execute(&prog, spec);
+    Ok(DynamicExec { plan: plan.clone(), buckets, program: prog, cost, memory: mem })
+}
+
+/// Convenience: plan for the pattern's own density and execute it.
+pub fn plan_and_execute(
+    mask: &BlockMask,
+    n: usize,
+    dtype: crate::DType,
+    spec: &IpuSpec,
+    cm: &CostModel,
+) -> Result<DynamicExec> {
+    let plan = planner::plan(mask.m(), mask.k(), n, mask.b, mask.density(), dtype, spec, cm)?;
+    execute_pattern(&plan, mask, spec, cm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::patterns;
+    use crate::DType;
+
+    fn env() -> (IpuSpec, CostModel) {
+        (IpuSpec::default(), CostModel::default())
+    }
+
+    #[test]
+    fn dynamic_slower_than_static_same_problem() {
+        // Table 3's core finding: static > dynamic at every config.
+        let (spec, cm) = env();
+        let mask = patterns::with_density(4096, 4096, 16, 1.0 / 16.0, 11).unwrap();
+        let n = 4096;
+        let dy = plan_and_execute(&mask, n, DType::Fp16, &spec, &cm).unwrap();
+        let st = crate::static_::plan(&mask, n, DType::Fp16, &spec, &cm).unwrap();
+        assert!(
+            dy.cost.total() > st.cost.total(),
+            "dynamic {} must exceed static {}",
+            dy.cost.total(),
+            st.cost.total()
+        );
+    }
+
+    #[test]
+    fn uniform_pattern_mostly_no_propagation() {
+        let (spec, cm) = env();
+        let mask = patterns::with_density(2048, 2048, 16, 1.0 / 8.0, 3).unwrap();
+        let dy = plan_and_execute(&mask, 1024, DType::Fp16, &spec, &cm).unwrap();
+        assert!(dy.propagation_steps() <= 2, "got {}", dy.propagation_steps());
+        assert!(dy.tflops(&spec) > 0.0);
+    }
+
+    #[test]
+    fn corner_pattern_pays_propagation() {
+        let (spec, cm) = env();
+        let b = 16;
+        let mask_good = patterns::with_density(1024, 1024, b, 1.0 / 16.0, 5).unwrap();
+        let nnz = mask_good.nnz_blocks();
+        let mask_bad = patterns::corner_packed(1024, 1024, b, nnz).unwrap();
+        // Same compile-time plan for both (same shape and density).
+        let plan = planner::plan(1024, 1024, 512, b, mask_good.density(), DType::Fp16, &spec, &cm)
+            .unwrap();
+        let good = execute_pattern(&plan, &mask_good, &spec, &cm).unwrap();
+        let bad = execute_pattern(&plan, &mask_bad, &spec, &cm).unwrap();
+        assert!(bad.propagation_steps() > good.propagation_steps());
+        assert!(
+            bad.cost.total() > good.cost.total(),
+            "imbalanced pattern must cost more: {} vs {}",
+            bad.cost.total(),
+            good.cost.total()
+        );
+    }
+
+    #[test]
+    fn density_above_dmax_rejected() {
+        let (spec, cm) = env();
+        let plan = planner::plan(512, 512, 256, 16, 0.05, DType::Fp16, &spec, &cm).unwrap();
+        let dense_mask = patterns::with_density(512, 512, 16, 0.5, 2).unwrap();
+        assert!(execute_pattern(&plan, &dense_mask, &spec, &cm).is_err());
+    }
+
+    #[test]
+    fn exec_reports_consistent_density() {
+        let (spec, cm) = env();
+        let mask = patterns::with_density(1024, 1024, 8, 1.0 / 32.0, 9).unwrap();
+        let dy = plan_and_execute(&mask, 256, DType::Fp32, &spec, &cm).unwrap();
+        assert!((dy.density() - mask.density()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,237 @@
+//! Dynamic-mode compile-time planner (paper §3.3 + Appendix A.2).
+//!
+//! Only `(m, k, n, b, d_max, dtype)` are known at compile time. The
+//! planner picks the equal-split grid `(q_m, q_k, q_n)` and the bucket
+//! capacity, optimising the *expected* cost of a uniform pattern at
+//! `d_max` while remaining memory-feasible for the worst case. The
+//! grid does not change with the runtime pattern.
+
+use crate::error::{Error, Result};
+use crate::sim::chip::{CostModel, IpuSpec};
+use crate::sim::{compute, exchange, execute, MemoryPlan, Program, Superstep};
+use crate::DType;
+
+/// Compile-time output of the dynamic planner.
+#[derive(Debug, Clone)]
+pub struct DynamicPlan {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub b: usize,
+    /// Maximum density the buckets are sized for.
+    pub d_max: f64,
+    pub dtype: DType,
+    pub q_m: usize,
+    pub q_k: usize,
+    pub q_n: usize,
+    /// Bucket capacity in blocks (includes headroom over the mean).
+    pub capacity_blocks: usize,
+    /// Expected cycles for a balanced pattern (planning estimate).
+    pub expected_cycles: u64,
+}
+
+impl DynamicPlan {
+    /// Max non-zero blocks the plan supports.
+    pub fn max_blocks(&self) -> usize {
+        ((self.m as f64 / self.b as f64) * (self.k as f64 / self.b as f64) * self.d_max).ceil()
+            as usize
+    }
+
+    /// Bytes of one bucket (nzValues + metaInfo; paper A.2 sizes the
+    /// metaInfo with headroom for pattern variety).
+    pub fn bucket_bytes(&self) -> usize {
+        let val = self.capacity_blocks * self.b * self.b * self.dtype.size();
+        let meta = self.capacity_blocks * 4 + 32; // row/col u16 pairs + header
+        val + meta
+    }
+}
+
+/// Headroom multiplier on the mean bucket occupancy. Covers the
+/// multinomial variance of typical patterns so most runs finish in the
+/// distribution phase (Fig 6a) without propagation.
+pub const BUCKET_HEADROOM: f64 = 1.25;
+
+use crate::sim::chip::candidate_splits;
+
+/// Cost the expected (balanced) execution of one grid candidate.
+fn expected_cost(
+    m: usize,
+    k: usize,
+    n: usize,
+    b: usize,
+    dtype: DType,
+    q: (usize, usize, usize),
+    capacity_blocks: usize,
+    mean_blocks: usize,
+    spec: &IpuSpec,
+    cm: &CostModel,
+) -> Result<u64> {
+    let (q_m, q_k, q_n) = q;
+    let tiles = q_m * q_k * q_n;
+    if tiles > spec.tiles {
+        return Err(Error::Plan("tile budget".into()));
+    }
+    let dsize = dtype.size();
+    let (tm, tk, tn) = (m.div_ceil(q_m), k.div_ceil(q_k), n.div_ceil(q_n));
+
+    let bucket_bytes = capacity_blocks * b * b * dsize + capacity_blocks * 4 + 32;
+    // Chip level: buckets are repeated over the q_n partitions (paper
+    // A.2), plus the dense operand, partials and output.
+    let mut mem = MemoryPlan::new();
+    mem.alloc("buckets", bucket_bytes * q_m * q_k * q_n);
+    mem.alloc("x_total", k * n * dsize);
+    mem.alloc("partials", m * n * dsize * q_k.min(2));
+    mem.check_chip(spec)?;
+    // Per tile: its bucket, X slab and partial accumulator.
+    let mut tile_mem = MemoryPlan::new();
+    tile_mem.alloc("bucket", bucket_bytes);
+    tile_mem.alloc("x_slab", tk * tn * dsize);
+    tile_mem.alloc("partials", tm * tn * dsize);
+    tile_mem.check(spec)?;
+
+    let mut prog = Program::new(tiles);
+    // Distribution: buckets (sized for the max) + X slabs. Dynamic
+    // exchange is pre-planned for the largest possible volume (§3.3).
+    let dist_bytes = (bucket_bytes as f64 * cm.dynamic_exchange_factor) as u64
+        + exchange::slab_bytes(tk, tn, dsize);
+    prog.push(Superstep::exchange("distribution", dist_bytes));
+    // Compute on the mean bucket occupancy.
+    let macs = (mean_blocks * b * b) as u64 * tn as u64;
+    prog.push(Superstep::compute(
+        "spmm",
+        compute::dynamic_matmul_cycles(macs, mean_blocks as u64, b, tn as u64, dtype, spec, cm),
+    ));
+    // Reduce partials over q_k (fixed m-partition → fixed rows).
+    if q_k > 1 {
+        let elems = (tm as u64) * (tn as u64);
+        let bytes = exchange::allreduce_bytes(elems, q_k, dsize);
+        let adds = elems.div_ceil(q_k as u64) * (q_k as u64 - 1);
+        prog.push(Superstep::mixed("reduce", compute::reduce_cycles(adds, cm), bytes));
+    }
+    Ok(execute(&prog, spec).total())
+}
+
+/// Choose the dynamic-mode grid for `(m, k, n, b)` at `d_max`.
+pub fn plan(
+    m: usize,
+    k: usize,
+    n: usize,
+    b: usize,
+    d_max: f64,
+    dtype: DType,
+    spec: &IpuSpec,
+    cm: &CostModel,
+) -> Result<DynamicPlan> {
+    if m == 0 || k == 0 || n == 0 || b == 0 || m % b != 0 || k % b != 0 {
+        return Err(Error::Plan(format!("bad dims m={m} k={k} n={n} b={b}")));
+    }
+    if !(0.0..=1.0).contains(&d_max) || d_max == 0.0 {
+        return Err(Error::Plan(format!("d_max={d_max} outside (0,1]")));
+    }
+    let total_blocks_max = (((m / b) * (k / b)) as f64 * d_max).ceil() as usize;
+    let (mb, kb) = (m / b, k / b);
+
+    let mut best: Option<DynamicPlan> = None;
+    let mut last_oom = None;
+    for &q_m in &candidate_splits(mb, spec.tiles) {
+        for &q_k in &candidate_splits(kb, spec.tiles / q_m) {
+            let mean = total_blocks_max.div_ceil(q_m * q_k);
+            let capacity = ((mean as f64 * BUCKET_HEADROOM).ceil() as usize).max(1);
+            for &q_n in &candidate_splits(n, spec.tiles / (q_m * q_k)) {
+                match expected_cost(
+                    m,
+                    k,
+                    n,
+                    b,
+                    dtype,
+                    (q_m, q_k, q_n),
+                    capacity,
+                    mean,
+                    spec,
+                    cm,
+                ) {
+                    Ok(cycles) => {
+                        let better =
+                            best.as_ref().map(|p| cycles < p.expected_cycles).unwrap_or(true);
+                        if better {
+                            best = Some(DynamicPlan {
+                                m,
+                                k,
+                                n,
+                                b,
+                                d_max,
+                                dtype,
+                                q_m,
+                                q_k,
+                                q_n,
+                                capacity_blocks: capacity,
+                                expected_cycles: cycles,
+                            });
+                        }
+                    }
+                    Err(e @ Error::OutOfMemory { .. }) => last_oom = Some(e),
+                    Err(_) => {}
+                }
+            }
+        }
+    }
+    best.ok_or_else(|| last_oom.unwrap_or_else(|| Error::Plan("no feasible dynamic plan".into())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> (IpuSpec, CostModel) {
+        (IpuSpec::default(), CostModel::default())
+    }
+
+    #[test]
+    fn plans_paper_config() {
+        let (spec, cm) = env();
+        let p = plan(4096, 4096, 4096, 16, 1.0 / 16.0, DType::Fp16, &spec, &cm).unwrap();
+        assert!(p.q_m * p.q_k * p.q_n <= spec.tiles);
+        assert!(p.capacity_blocks >= 1);
+        // capacity covers the maximum pattern with headroom spread.
+        assert!(p.capacity_blocks * p.q_m * p.q_k >= p.max_blocks());
+        assert!(p.expected_cycles > 0);
+    }
+
+    #[test]
+    fn capacity_has_headroom() {
+        let (spec, cm) = env();
+        let p = plan(1024, 1024, 512, 16, 0.25, DType::Fp16, &spec, &cm).unwrap();
+        let mean = p.max_blocks().div_ceil(p.q_m * p.q_k);
+        assert!(p.capacity_blocks as f64 >= mean as f64 * 1.2);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let (spec, cm) = env();
+        assert!(plan(100, 4096, 64, 16, 0.1, DType::Fp16, &spec, &cm).is_err()); // m % b
+        assert!(plan(4096, 4096, 64, 16, 0.0, DType::Fp16, &spec, &cm).is_err());
+        assert!(plan(4096, 4096, 0, 16, 0.1, DType::Fp16, &spec, &cm).is_err());
+    }
+
+    #[test]
+    fn grid_does_not_depend_on_pattern() {
+        // By construction: plan() never sees a mask. Re-planning the
+        // same shape yields the identical grid (determinism).
+        let (spec, cm) = env();
+        let a = plan(2048, 2048, 1024, 8, 0.125, DType::Fp32, &spec, &cm).unwrap();
+        let b2 = plan(2048, 2048, 1024, 8, 0.125, DType::Fp32, &spec, &cm).unwrap();
+        assert_eq!((a.q_m, a.q_k, a.q_n), (b2.q_m, b2.q_k, b2.q_n));
+        assert_eq!(a.capacity_blocks, b2.capacity_blocks);
+    }
+
+    #[test]
+    fn bucket_bytes_scale_with_block_size() {
+        let (spec, cm) = env();
+        let p4 = plan(1024, 1024, 512, 4, 0.125, DType::Fp16, &spec, &cm).unwrap();
+        let p16 = plan(1024, 1024, 512, 16, 0.125, DType::Fp16, &spec, &cm).unwrap();
+        // same nnz elements → similar value bytes, less metadata at b=16.
+        let meta4 = p4.capacity_blocks * p4.q_m * p4.q_k * 4;
+        let meta16 = p16.capacity_blocks * p16.q_m * p16.q_k * 4;
+        assert!(meta16 < meta4, "b=16 must carry less total metadata");
+    }
+}

@@ -1,0 +1,58 @@
+//! Crate-wide error type.
+
+/// Errors produced by planners, formats, the simulator and the runtime.
+#[derive(Debug)]
+pub enum Error {
+    /// A matrix/format invariant was violated (shape mismatch, unsorted
+    /// indices, out-of-range coordinates...).
+    InvalidFormat(String),
+    /// A plan could not be produced (e.g. problem does not fit on-chip
+    /// SRAM — the grey cells of the paper's Figure 7).
+    OutOfMemory { required_bytes: usize, available_bytes: usize },
+    /// Planner constraint violation (bad parameter combination).
+    Plan(String),
+    /// Artifact manifest / runtime errors (missing artifact, XLA error).
+    Runtime(String),
+    /// Coordinator errors (queue closed, bad request).
+    Coordinator(String),
+    /// I/O while loading artifacts or writing reports.
+    Io(std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidFormat(msg) => write!(f, "invalid format: {msg}"),
+            Error::OutOfMemory { required_bytes, available_bytes } => write!(
+                f,
+                "does not fit on-chip: requires {required_bytes} B, have {available_bytes} B"
+            ),
+            Error::Plan(msg) => write!(f, "planning failed: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime: {msg}"),
+            Error::Coordinator(msg) => write!(f, "coordinator: {msg}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::OutOfMemory { required_bytes: 10, available_bytes: 5 };
+        assert!(e.to_string().contains("requires 10 B"));
+        assert!(Error::Plan("x".into()).to_string().contains("planning failed"));
+    }
+}

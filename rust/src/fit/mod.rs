@@ -1,0 +1,161 @@
+//! Power-law model fitting (paper Figure 4c).
+//!
+//! The paper fits `speedup ≈ a · m^α · d^β · b^γ` to the static-sparse
+//! speedup grid and reports `0.0013 · m^0.59 · d^-0.54 · b^0.50`. We
+//! fit the same model by ordinary least squares in log space.
+
+/// A fitted power law over named features.
+#[derive(Debug, Clone)]
+pub struct PowerLaw {
+    /// Multiplicative constant `a`.
+    pub coefficient: f64,
+    /// One exponent per feature, in input order.
+    pub exponents: Vec<f64>,
+    /// R² of the log-space fit.
+    pub r_squared: f64,
+}
+
+impl PowerLaw {
+    /// Predict the response for a feature vector.
+    pub fn predict(&self, features: &[f64]) -> f64 {
+        assert_eq!(features.len(), self.exponents.len());
+        self.coefficient
+            * features
+                .iter()
+                .zip(&self.exponents)
+                .map(|(x, e)| x.powf(*e))
+                .product::<f64>()
+    }
+}
+
+/// Solve the normal equations `(XᵀX) w = Xᵀy` by Gaussian elimination.
+fn solve(mut a: Vec<Vec<f64>>, mut y: Vec<f64>) -> Option<Vec<f64>> {
+    let n = y.len();
+    for col in 0..n {
+        // partial pivot
+        let pivot = (col..n).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap_or(std::cmp::Ordering::Equal)
+        })?;
+        if a[pivot][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, pivot);
+        y.swap(col, pivot);
+        for row in 0..n {
+            if row == col {
+                continue;
+            }
+            let f = a[row][col] / a[col][col];
+            for c in col..n {
+                a[row][c] -= f * a[col][c];
+            }
+            y[row] -= f * y[col];
+        }
+    }
+    Some((0..n).map(|i| y[i] / a[i][i]).collect())
+}
+
+/// Fit `response ≈ a · Π features_i ^ e_i` by OLS on logs.
+///
+/// `samples`: (feature vector, response) pairs; responses must be
+/// strictly positive. Returns `None` on degenerate inputs.
+pub fn fit_power_law(samples: &[(Vec<f64>, f64)]) -> Option<PowerLaw> {
+    if samples.is_empty() {
+        return None;
+    }
+    let nf = samples[0].0.len();
+    if samples.len() < nf + 1 {
+        return None;
+    }
+    // Design matrix rows: [1, ln x1, ..., ln xnf]; target ln y.
+    let dim = nf + 1;
+    let mut xtx = vec![vec![0.0; dim]; dim];
+    let mut xty = vec![0.0; dim];
+    let mut logs = Vec::with_capacity(samples.len());
+    for (feats, y) in samples {
+        if feats.len() != nf || *y <= 0.0 || feats.iter().any(|&f| f <= 0.0) {
+            return None;
+        }
+        let mut row = Vec::with_capacity(dim);
+        row.push(1.0);
+        row.extend(feats.iter().map(|f| f.ln()));
+        let ly = y.ln();
+        logs.push((row.clone(), ly));
+        for i in 0..dim {
+            for j in 0..dim {
+                xtx[i][j] += row[i] * row[j];
+            }
+            xty[i] += row[i] * ly;
+        }
+    }
+    let w = solve(xtx, xty)?;
+    // R² in log space.
+    let mean_y: f64 = logs.iter().map(|(_, y)| y).sum::<f64>() / logs.len() as f64;
+    let ss_tot: f64 = logs.iter().map(|(_, y)| (y - mean_y).powi(2)).sum();
+    let ss_res: f64 = logs
+        .iter()
+        .map(|(row, y)| {
+            let pred: f64 = row.iter().zip(&w).map(|(r, c)| r * c).sum();
+            (y - pred).powi(2)
+        })
+        .sum();
+    let r_squared = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    Some(PowerLaw { coefficient: w[0].exp(), exponents: w[1..].to_vec(), r_squared })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_power_law() {
+        // y = 0.002 * m^0.6 * d^-0.5 * b^0.5, noiselessly.
+        let mut samples = Vec::new();
+        for m in [256.0f64, 1024.0, 4096.0] {
+            for d in [0.25f64, 0.125, 0.03125] {
+                for b in [1.0f64, 4.0, 16.0] {
+                    let y = 0.002 * m.powf(0.6) * d.powf(-0.5) * b.powf(0.5);
+                    samples.push((vec![m, d, b], y));
+                }
+            }
+        }
+        let fit = fit_power_law(&samples).unwrap();
+        assert!((fit.coefficient - 0.002).abs() < 1e-6);
+        assert!((fit.exponents[0] - 0.6).abs() < 1e-6);
+        assert!((fit.exponents[1] + 0.5).abs() < 1e-6);
+        assert!((fit.exponents[2] - 0.5).abs() < 1e-6);
+        assert!(fit.r_squared > 0.999999);
+        // predictions round-trip
+        let p = fit.predict(&[1024.0, 0.125, 4.0]);
+        let truth = 0.002 * 1024f64.powf(0.6) * 0.125f64.powf(-0.5) * 2.0;
+        assert!((p - truth).abs() / truth < 1e-6);
+    }
+
+    #[test]
+    fn tolerates_noise() {
+        let mut samples = Vec::new();
+        let mut state = 1u64;
+        let mut rnd = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((state >> 33) as f64 / (1u64 << 31) as f64) - 0.5
+        };
+        for i in 1..60 {
+            let m = 128.0 * i as f64;
+            let y = 0.01 * m.powf(0.7) * (1.0 + 0.05 * rnd());
+            samples.push((vec![m], y));
+        }
+        let fit = fit_power_law(&samples).unwrap();
+        assert!((fit.exponents[0] - 0.7).abs() < 0.05);
+        assert!(fit.r_squared > 0.9);
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        assert!(fit_power_law(&[]).is_none());
+        assert!(fit_power_law(&[(vec![1.0], 2.0)]).is_none()); // too few
+        assert!(fit_power_law(&[(vec![1.0], -2.0), (vec![2.0], 1.0)]).is_none());
+        // constant feature → singular
+        let s: Vec<_> = (0..5).map(|_| (vec![3.0], 1.0)).collect();
+        assert!(fit_power_law(&s).is_none());
+    }
+}

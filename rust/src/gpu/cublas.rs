@@ -1,0 +1,67 @@
+//! cuBLAS `cublasGemmEx` dense GEMM roofline model.
+
+use crate::gpu::spec::A100Spec;
+use crate::DType;
+
+/// Shape-dependent efficiency: each dimension must be large enough to
+/// fill the SMs/tensor-core tiles; small dimensions (especially batch)
+/// leave waves partially empty. `d/(d+scale)` per dimension is the
+/// standard saturating form.
+fn shape_efficiency(m: usize, k: usize, n: usize, spec: &A100Spec) -> f64 {
+    let sat = |d: usize| d as f64 / (d as f64 + spec.gemm_dim_scale);
+    spec.gemm_eff_max * sat(m) * sat(k) * sat(n)
+}
+
+/// Wall-clock seconds for a dense `m x k @ k x n` GEMM.
+pub fn gemm_seconds(m: usize, k: usize, n: usize, dtype: DType, spec: &A100Spec) -> f64 {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let t_compute = flops / (spec.dense_peak_flops(dtype) * shape_efficiency(m, k, n, spec));
+    let dsize = dtype.size() as f64;
+    let bytes = ((m * k) as f64 + (k * n) as f64 + (m * n) as f64) * dsize;
+    let t_mem = bytes / spec.mem_bytes_per_s();
+    t_compute.max(t_mem) + spec.launch_overhead_s
+}
+
+/// Achieved dense TFLOP/s (for Fig. 2's y-axis).
+pub fn gemm_tflops(m: usize, k: usize, n: usize, dtype: DType, spec: &A100Spec) -> f64 {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    flops / gemm_seconds(m, k, n, dtype, spec) / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn large_fp16_hits_paper_range() {
+        // Fig 2: A100 FP16 dense ~200-260 TFLOP/s at large square shapes.
+        let t = gemm_tflops(8192, 8192, 8192, DType::Fp16, &A100Spec::default());
+        assert!((200.0..290.0).contains(&t), "got {t}");
+    }
+
+    #[test]
+    fn fp32_much_slower() {
+        let s = A100Spec::default();
+        let t16 = gemm_tflops(4096, 4096, 4096, DType::Fp16, &s);
+        let t32 = gemm_tflops(4096, 4096, 4096, DType::Fp32, &s);
+        assert!(t16 / t32 > 8.0, "tensor cores are fp16-only: {t16} vs {t32}");
+    }
+
+    #[test]
+    fn small_batch_degrades() {
+        // The paper notes the GPU is much less resilient to low batch.
+        let s = A100Spec::default();
+        let big = gemm_tflops(4096, 4096, 8192, DType::Fp16, &s);
+        let small = gemm_tflops(4096, 4096, 16, DType::Fp16, &s);
+        assert!(big / small > 10.0, "{big} vs {small}");
+    }
+
+    #[test]
+    fn seconds_monotonic_in_size() {
+        let s = A100Spec::default();
+        assert!(
+            gemm_seconds(8192, 8192, 8192, DType::Fp16, &s)
+                > gemm_seconds(1024, 1024, 1024, DType::Fp16, &s)
+        );
+    }
+}

@@ -1,0 +1,105 @@
+//! cuSPARSE `cusparseSbsrmm` (BSR) roofline model.
+//!
+//! BSR improves on CSR through block-level metadata and dense inner
+//! loops, but — as the paper stresses (§5.4) — the API is FP32-only,
+//! so it cannot touch tensor cores; this is the main reason GPU block
+//! sparsity loses to dense FP16 even below 2% density (Fig. 3b).
+
+use crate::gpu::spec::A100Spec;
+use crate::DType;
+
+/// Wall-clock seconds for BSR SpMM: `(m x k, nnz_b blocks of b x b) @ k x n`.
+///
+/// `dtype` must be Fp32 (the real API constraint); Fp16 input is
+/// rejected the way cuSPARSE would reject it.
+pub fn bsrmm_seconds(
+    m: usize,
+    _k: usize,
+    n: usize,
+    nnz_b: usize,
+    b: usize,
+    dtype: DType,
+    spec: &A100Spec,
+) -> Option<f64> {
+    if dtype != DType::Fp32 {
+        return None; // cusparseSbsrmm has no FP16 variant (Table 1).
+    }
+    let dsize = 4.0;
+    let nnz = (nnz_b * b * b) as f64;
+    // Traffic: block metadata (4B col idx per block + row ptrs), block
+    // values, gathered X panels (b rows of n per block, amortised by
+    // reuse), output.
+    let meta_bytes = nnz_b as f64 * 4.0 + (m / b + 1) as f64 * 4.0;
+    let val_bytes = nnz * dsize;
+    let x_bytes = nnz_b as f64 * b as f64 * n as f64 * dsize / spec.bsr_x_reuse;
+    let y_bytes = m as f64 * n as f64 * dsize;
+    let t_mem = (meta_bytes + val_bytes + x_bytes + y_bytes) / spec.mem_bytes_per_s();
+    let flops = 2.0 * nnz * n as f64;
+    let t_compute = flops / (spec.fp32_tflops * 1e12 * spec.bsr_eff(b));
+    Some(t_mem.max(t_compute) + spec.launch_overhead_s)
+}
+
+/// Effective TFLOP/s, non-zeros only. None for unsupported dtypes.
+pub fn bsrmm_tflops(
+    m: usize,
+    k: usize,
+    n: usize,
+    nnz_b: usize,
+    b: usize,
+    dtype: DType,
+    spec: &A100Spec,
+) -> Option<f64> {
+    let t = bsrmm_seconds(m, k, n, nnz_b, b, dtype, spec)?;
+    Some(2.0 * (nnz_b * b * b) as f64 * n as f64 / t / 1e12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::cublas::gemm_tflops;
+
+    #[test]
+    fn rejects_fp16_like_the_real_api() {
+        let s = A100Spec::default();
+        assert!(bsrmm_seconds(4096, 4096, 4096, 1024, 16, DType::Fp16, &s).is_none());
+    }
+
+    #[test]
+    fn bsr_beats_csr_per_nnz() {
+        use crate::gpu::cusparse_csr::csr_spmm_tflops;
+        let s = A100Spec::default();
+        let (m, k, n) = (4096, 4096, 4096);
+        let nnz = m * k / 16;
+        let bsr = bsrmm_tflops(m, k, n, nnz / 256, 16, DType::Fp32, &s).unwrap();
+        let csr = csr_spmm_tflops(m, k, n, nnz, DType::Fp32, &s);
+        assert!(bsr > csr, "bsr {bsr} vs csr {csr}");
+    }
+
+    #[test]
+    fn paper_claim_bsr_below_dense_fp16_even_under_2pct() {
+        // Fig 3b / §5.4: BSR FP32 is worse than the dense FP16 baseline
+        // even below 2% density.
+        let s = A100Spec::default();
+        let (m, k, n) = (4096, 4096, 4096);
+        let dense_fp16 = gemm_tflops(m, k, n, DType::Fp16, &s);
+        for inv_d in [16, 32, 64] {
+            let nnz_b = m * k / inv_d / 256;
+            let bsr = bsrmm_tflops(m, k, n, nnz_b, 16, DType::Fp32, &s).unwrap();
+            let dense_equiv = dense_fp16 / inv_d as f64;
+            assert!(
+                bsr < dense_equiv,
+                "d=1/{inv_d}: bsr {bsr} should lose to dense-equiv {dense_equiv}"
+            );
+        }
+    }
+
+    #[test]
+    fn block_size_helps() {
+        let s = A100Spec::default();
+        let (m, k, n) = (4096, 4096, 2048);
+        let nnz = m * k / 16;
+        let b4 = bsrmm_tflops(m, k, n, nnz / 16, 4, DType::Fp32, &s).unwrap();
+        let b16 = bsrmm_tflops(m, k, n, nnz / 256, 16, DType::Fp32, &s).unwrap();
+        assert!(b16 > b4);
+    }
+}

@@ -1,0 +1,99 @@
+//! cuSPARSE `cusparseSpMM` (CSR) roofline model.
+//!
+//! CSR SpMM on GPU is memory-bound: every non-zero drags a row of the
+//! dense operand through the memory hierarchy with limited reuse, and
+//! the irregular column indices defeat coalescing. FP16 inputs compute
+//! in FP32 (Table 1 footnote), so there is no tensor-core path.
+
+use crate::gpu::spec::A100Spec;
+use crate::DType;
+
+/// Wall-clock seconds for CSR SpMM: `(m x k, nnz) @ k x n`.
+pub fn csr_spmm_seconds(
+    m: usize,
+    _k: usize,
+    n: usize,
+    nnz: usize,
+    dtype: DType,
+    spec: &A100Spec,
+) -> f64 {
+    let dsize = dtype.size() as f64;
+    // Traffic: CSR arrays (4B col idx + value per nnz, row ptrs), the
+    // gathered rows of X (n values per nnz, amortised by cache reuse),
+    // and the output.
+    let csr_bytes = nnz as f64 * (4.0 + dsize) + (m as f64 + 1.0) * 4.0;
+    let x_bytes = nnz as f64 * n as f64 * dsize / spec.csr_x_reuse;
+    let y_bytes = m as f64 * n as f64 * dsize;
+    let t_mem = (csr_bytes + x_bytes + y_bytes) / spec.mem_bytes_per_s();
+    // Compute in FP32 regardless of input dtype (no tensor cores).
+    let flops = 2.0 * nnz as f64 * n as f64;
+    let t_compute = flops / (spec.fp32_tflops * 1e12 * spec.csr_eff);
+    t_mem.max(t_compute) + spec.launch_overhead_s
+}
+
+/// Effective TFLOP/s, non-zeros only.
+pub fn csr_spmm_tflops(
+    m: usize,
+    k: usize,
+    n: usize,
+    nnz: usize,
+    dtype: DType,
+    spec: &A100Spec,
+) -> f64 {
+    2.0 * nnz as f64 * n as f64 / csr_spmm_seconds(m, k, n, nnz, dtype, spec) / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::cublas::gemm_tflops;
+
+    #[test]
+    fn csr_in_published_range() {
+        // ~1M nnz (m=k=4096, d=1/16), large n: literature reports
+        // sub-TFLOP/s to low-single-digit TFLOP/s for cusparse SpMM.
+        let s = A100Spec::default();
+        let t = csr_spmm_tflops(4096, 4096, 4096, 4096 * 4096 / 16, DType::Fp32, &s);
+        assert!((0.1..4.0).contains(&t), "got {t}");
+    }
+
+    #[test]
+    fn csr_never_beats_dense_fp16_at_moderate_density() {
+        // Paper Fig 3b: sparse on GPU loses to dense FP16 in this range.
+        let s = A100Spec::default();
+        let (m, k, n) = (4096, 4096, 4096);
+        for inv_d in [4, 8, 16, 32] {
+            let nnz = m * k / inv_d;
+            let sparse = csr_spmm_tflops(m, k, n, nnz, DType::Fp32, &s);
+            // Dense effective rate on the same useful FLOPs.
+            let dense_equiv = gemm_tflops(m, k, n, DType::Fp16, &s) / inv_d as f64;
+            assert!(
+                sparse < dense_equiv * 1.05 || sparse < 2.0,
+                "d=1/{inv_d}: csr {sparse} vs dense-equiv {dense_equiv}"
+            );
+        }
+    }
+
+    #[test]
+    fn fp16_star_io_beats_fp32_io() {
+        // Table 1 footnote: cusparseSpMM FP16* computes in FP32 with
+        // FP16 inputs/outputs — halving the traffic of the memory-bound
+        // kernel must help.
+        let s = A100Spec::default();
+        let (m, k, n) = (4096, 4096, 4096);
+        let nnz = m * k / 16;
+        let t16 = csr_spmm_seconds(m, k, n, nnz, DType::Fp16, &s);
+        let t32 = csr_spmm_seconds(m, k, n, nnz, DType::Fp32, &s);
+        assert!(t16 < t32, "fp16 io {t16} should beat fp32 io {t32}");
+    }
+
+    #[test]
+    fn per_nnz_rate_roughly_density_independent() {
+        // Fig 3b: GPU sparse scales well as density decreases
+        // (near-constant TFLOP/s over nnz).
+        let s = A100Spec::default();
+        let t1 = csr_spmm_tflops(4096, 4096, 4096, 4096 * 4096 / 8, DType::Fp32, &s);
+        let t2 = csr_spmm_tflops(4096, 4096, 4096, 4096 * 4096 / 64, DType::Fp32, &s);
+        assert!((t1 / t2) < 2.0, "rates {t1} vs {t2} should be similar");
+    }
+}

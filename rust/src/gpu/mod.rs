@@ -1,0 +1,28 @@
+//! Analytical A100 GPU baselines: cuBLAS dense GEMM, cuSPARSE CSR and
+//! BSR SpMM.
+//!
+//! The paper benchmarks these on a real A100-SXM4-40G (§4). We have no
+//! GPU, so each API is modelled as a roofline — compute throughput with
+//! a shape-dependent efficiency, against HBM bandwidth with a
+//! reuse-dependent traffic estimate — calibrated to the public A100
+//! datasheet and the published behaviour the paper itself reports:
+//!
+//! * dense FP16 tensor-core GEMM reaches ~250 TFLOP/s at large shapes
+//!   and degrades sharply at small batch (paper Fig. 2);
+//! * `cusparseSpMM` (CSR) is memory-bound at a few hundred GFLOP/s to
+//!   ~2 TFLOP/s;
+//! * `cusparseSbsrmm` (BSR) supports FP32 only — no tensor cores — and
+//!   stays below the dense-FP16 line even under 2% density (Fig. 3b).
+//!
+//! All estimators return wall-clock seconds for one operation;
+//! effective TFLOP/s uses the paper's non-zeros-only FLOP convention.
+
+pub mod cublas;
+pub mod cusparse_bsr;
+pub mod cusparse_csr;
+pub mod spec;
+
+pub use cublas::gemm_seconds;
+pub use cusparse_bsr::bsrmm_seconds;
+pub use cusparse_csr::csr_spmm_seconds;
+pub use spec::A100Spec;

@@ -1,0 +1,97 @@
+//! A100-SXM4-40G hardware constants (NVIDIA datasheet).
+
+use crate::DType;
+
+/// Published A100 characteristics plus model calibration constants.
+#[derive(Debug, Clone)]
+pub struct A100Spec {
+    /// Tensor-core FP16 peak, TFLOP/s (dense; no 2:4 sparsity).
+    pub fp16_tc_tflops: f64,
+    /// CUDA-core FP32 peak, TFLOP/s.
+    pub fp32_tflops: f64,
+    /// HBM2e bandwidth, GB/s.
+    pub hbm_gbps: f64,
+    /// Achievable fraction of peak for large cuBLAS GEMMs.
+    pub gemm_eff_max: f64,
+    /// Shape-saturation scale for GEMM dims (cycles to fill the SMs).
+    pub gemm_dim_scale: f64,
+    /// Achievable fraction of HBM bandwidth for streaming sparse ops.
+    pub mem_eff: f64,
+    /// Effective FP32 compute efficiency of cusparse CSR SpMM.
+    pub csr_eff: f64,
+    /// L2/shared-memory reuse factor on the dense operand for CSR.
+    pub csr_x_reuse: f64,
+    /// Effective FP32 compute efficiency of cusparse BSR by block size
+    /// (b=4, b=8, b=16); bsrmm does not use tensor cores.
+    pub bsr_eff_b4: f64,
+    pub bsr_eff_b8: f64,
+    pub bsr_eff_b16: f64,
+    /// Reuse factor on the dense operand for BSR.
+    pub bsr_x_reuse: f64,
+    /// Fixed kernel-launch overhead, seconds.
+    pub launch_overhead_s: f64,
+}
+
+impl Default for A100Spec {
+    fn default() -> Self {
+        Self {
+            fp16_tc_tflops: 312.0,
+            fp32_tflops: 19.5,
+            hbm_gbps: 1555.0,
+            gemm_eff_max: 0.90,
+            gemm_dim_scale: 384.0,
+            mem_eff: 0.65,
+            csr_eff: 0.08,
+            csr_x_reuse: 2.0,
+            bsr_eff_b4: 0.08,
+            bsr_eff_b8: 0.11,
+            bsr_eff_b16: 0.15,
+            bsr_x_reuse: 4.0,
+            launch_overhead_s: 5e-6,
+        }
+    }
+}
+
+impl A100Spec {
+    /// Dense compute peak for a dtype, FLOP/s.
+    pub fn dense_peak_flops(&self, dtype: DType) -> f64 {
+        match dtype {
+            DType::Fp16 => self.fp16_tc_tflops * 1e12,
+            DType::Fp32 => self.fp32_tflops * 1e12,
+        }
+    }
+
+    /// HBM bandwidth in bytes/s (achievable).
+    pub fn mem_bytes_per_s(&self) -> f64 {
+        self.hbm_gbps * 1e9 * self.mem_eff
+    }
+
+    /// BSR efficiency for a block size.
+    pub fn bsr_eff(&self, b: usize) -> f64 {
+        match b {
+            0..=5 => self.bsr_eff_b4,
+            6..=11 => self.bsr_eff_b8,
+            _ => self.bsr_eff_b16,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn datasheet_values() {
+        let s = A100Spec::default();
+        assert_eq!(s.dense_peak_flops(DType::Fp16), 312e12);
+        assert_eq!(s.dense_peak_flops(DType::Fp32), 19.5e12);
+        assert!(s.mem_bytes_per_s() > 9e11);
+    }
+
+    #[test]
+    fn bsr_eff_monotonic() {
+        let s = A100Spec::default();
+        assert!(s.bsr_eff(4) < s.bsr_eff(8));
+        assert!(s.bsr_eff(8) < s.bsr_eff(16));
+    }
+}

@@ -1,0 +1,119 @@
+//! # PopSparse reproduction
+//!
+//! A production-quality reproduction of *"PopSparse: Accelerated block
+//! sparse matrix multiplication on IPU"* (Graphcore, 2023) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * [`sparse`] — block-sparse matrix formats (mask, COO, CSR, BSR,
+//!   blocked-ELL), pattern generators and a dense oracle.
+//! * [`sim`] — a cycle-level simulator of an IPU-class BSP chip
+//!   (1472 tiles, per-tile SRAM, all-to-all exchange) used to
+//!   reproduce the paper's cycle-count-derived TFLOP/s numbers.
+//! * [`dense_`] — the dense matmul baseline (`poplin::matMul`
+//!   analogue) planned onto the simulator.
+//! * [`static_`] — `popsparse::static_::sparseDenseMatMul`: the
+//!   compile-time-pattern planner with nnz-balanced uneven k-splits.
+//! * [`dynamic_`] — `popsparse::dynamic::sparseDenseMatMul`: the
+//!   runtime-pattern planner with fixed buckets, distribution and
+//!   propagation phases.
+//! * [`gpu`] — analytical A100 baselines (cuBLAS GEMM, cuSPARSE CSR
+//!   and BSR SpMM).
+//! * [`runtime`] — PJRT CPU execution of the AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py` (the numeric path;
+//!   Python is never on the request path).
+//! * [`coordinator`] — request router, dynamic batcher, plan cache and
+//!   metrics: the serving layer used by the examples.
+//! * [`bench_harness`] — regenerates every table and figure of the
+//!   paper's evaluation section.
+//! * [`fit`] — the power-law speedup model of Figure 4c.
+//!
+//! See `DESIGN.md` for the experiment index and the hardware
+//! substitution rationale, and `EXPERIMENTS.md` for results.
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod dense_;
+pub mod dynamic_;
+pub mod error;
+pub mod fit;
+pub mod gpu;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod static_;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Floating-point element types supported by the planners/cost models.
+///
+/// The numeric artifacts are compiled in FP32 (CPU PJRT path); FP16 is
+/// modelled in the cost layer exactly as the paper benchmarks it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// IEEE half precision (IPU AMP native, GPU tensor-core native).
+    Fp16,
+    /// IEEE single precision.
+    Fp32,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            DType::Fp16 => 2,
+            DType::Fp32 => 4,
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DType::Fp16 => write!(f, "fp16"),
+            DType::Fp32 => write!(f, "fp32"),
+        }
+    }
+}
+
+/// Useful FLOPs of an SpMM counting non-zeros only (paper §3):
+/// `2 * m * k * n * d` — independent of block size.
+pub fn spmm_flops(m: usize, k: usize, n: usize, density: f64) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64 * density
+}
+
+/// Convert a cycle count at `clock_hz` into TFLOP/s for `flops` work.
+pub fn tflops(flops: f64, cycles: u64, clock_hz: f64) -> f64 {
+    if cycles == 0 {
+        return 0.0;
+    }
+    flops / (cycles as f64 / clock_hz) / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::Fp16.size(), 2);
+        assert_eq!(DType::Fp32.size(), 4);
+    }
+
+    #[test]
+    fn spmm_flops_counts_nonzeros_only() {
+        // d=1/16 → 1/16th the dense FLOPs, no block-size dependence.
+        let dense = spmm_flops(4096, 4096, 512, 1.0);
+        let sparse = spmm_flops(4096, 4096, 512, 1.0 / 16.0);
+        assert!((dense / sparse - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tflops_conversion() {
+        // 1e12 FLOPs in 1e9 cycles at 1 GHz = 1 second → 1 TFLOP/s.
+        assert!((tflops(1e12, 1_000_000_000, 1e9) - 1.0).abs() < 1e-9);
+        assert_eq!(tflops(1e12, 0, 1e9), 0.0);
+    }
+}

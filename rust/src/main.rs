@@ -1,0 +1,297 @@
+//! `repro` — the PopSparse reproduction CLI.
+//!
+//! Subcommands:
+//!
+//! * `repro plan    --mode static|dynamic|dense --m .. --k .. --n .. [--b ..] [--density ..] [--fp32]`
+//! * `repro run     --artifact <name>` — execute an AOT artifact numerically (PJRT CPU) and verify vs the oracle
+//! * `repro bench   <table3|fig2|fig3a|fig3b|fig4a|fig4b|fig4c|fig7|ell|conclusions|all>`
+//! * `repro serve   [--jobs N] [--workers W]` — synthetic serving workload through the coordinator
+//! * `repro list    ` — list AOT artifacts
+//!
+//! The binary is self-contained after `make artifacts`; Python never
+//! runs on any of these paths.
+
+use std::collections::HashMap;
+
+use popsparse::bench_harness::{experiments, sweep::Env};
+use popsparse::coordinator::{Config, Coordinator, JobSpec, Mode};
+use popsparse::runtime::Runtime;
+use popsparse::sim::chip::{CostModel, IpuSpec};
+use popsparse::sparse::patterns;
+use popsparse::DType;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <command>\n\
+         \n\
+         commands:\n\
+         \x20 plan   --mode <static|dynamic|dense> --m M --k K --n N [--b B] [--density D] [--fp32]\n\
+         \x20 run    [--artifact NAME]          numeric execution + oracle check\n\
+         \x20 bench  <experiment|all>           regenerate paper tables/figures\n\
+         \x20        experiments: table3 fig2 fig3a fig3b fig4a fig4b fig4c fig7 ell conclusions\n\
+         \x20 serve  [--jobs N] [--workers W]   synthetic serving workload\n\
+         \x20 list                              list AOT artifacts"
+    );
+    std::process::exit(2);
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let rest = &args[1..];
+    let result = match cmd.as_str() {
+        "plan" => cmd_plan(rest),
+        "run" => cmd_run(rest),
+        "bench" => cmd_bench(rest),
+        "serve" => cmd_serve(rest),
+        "list" => cmd_list(),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_plan(args: &[String]) -> popsparse::Result<()> {
+    let flags = parse_flags(args);
+    let spec = IpuSpec::default();
+    let cm = CostModel::default();
+    let m = flag_usize(&flags, "m", 4096);
+    let k = flag_usize(&flags, "k", m);
+    let n = flag_usize(&flags, "n", 4096);
+    let b = flag_usize(&flags, "b", 16);
+    let density: f64 =
+        flags.get("density").and_then(|v| v.parse().ok()).unwrap_or(1.0 / 16.0);
+    let dtype = if flags.contains_key("fp32") { DType::Fp32 } else { DType::Fp16 };
+    let mode = flags.get("mode").map(String::as_str).unwrap_or("static");
+
+    match mode {
+        "dense" => {
+            let p = popsparse::dense_::plan(m, k, n, dtype, &spec, &cm)?;
+            println!("dense plan: q_m={} q_k={} q_n={}", p.q_m, p.q_k, p.q_n);
+            println!("cycles: {} ({:.3} ms)", p.cost.total(), p.cost.seconds(spec.clock_hz) * 1e3);
+            println!("throughput: {:.1} TFLOP/s", p.tflops(&spec));
+            for (name, c) in &p.cost.per_step {
+                println!("  {name:<20} {c} cycles");
+            }
+        }
+        "static" => {
+            let mask = patterns::with_density(m, k, b, density, 42)?;
+            let p = popsparse::static_::plan(&mask, n, dtype, &spec, &cm)?;
+            println!(
+                "static plan: q_k={} q_n={} nnz_blocks={} (d={:.4})",
+                p.q_k,
+                p.q_n,
+                p.nnz_blocks,
+                p.density()
+            );
+            println!("cycles: {} ({:.3} ms)", p.cost.total(), p.cost.seconds(spec.clock_hz) * 1e3);
+            println!("throughput: {:.1} TFLOP/s (nnz only)", p.tflops(&spec));
+            for (name, c) in &p.cost.per_step {
+                println!("  {name:<20} {c} cycles");
+            }
+        }
+        "dynamic" => {
+            let mask = patterns::with_density(m, k, b, density, 42)?;
+            let e = popsparse::dynamic_::plan_and_execute(&mask, n, dtype, &spec, &cm)?;
+            println!(
+                "dynamic plan: q_m={} q_k={} q_n={} capacity={} blocks/bucket",
+                e.plan.q_m, e.plan.q_k, e.plan.q_n, e.plan.capacity_blocks
+            );
+            println!("propagation steps: {}", e.propagation_steps());
+            println!("cycles: {} ({:.3} ms)", e.cost.total(), e.cost.seconds(spec.clock_hz) * 1e3);
+            println!("throughput: {:.1} TFLOP/s (nnz only)", e.tflops(&spec));
+            for (name, c) in &e.cost.per_step {
+                println!("  {name:<20} {c} cycles");
+            }
+        }
+        other => {
+            return Err(popsparse::Error::Plan(format!("unknown mode '{other}'")));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> popsparse::Result<()> {
+    let flags = parse_flags(args);
+    let name = flags.get("artifact").map(String::as_str).unwrap_or("spmm_quickstart");
+    let rt = Runtime::new("artifacts")?;
+    let meta = rt.manifest().get(name)?.clone();
+    if meta.kind != "spmm" {
+        return Err(popsparse::Error::Runtime(format!(
+            "`repro run` drives spmm artifacts; {name} is kind '{}'",
+            meta.kind
+        )));
+    }
+    println!(
+        "artifact {name}: m={} k={} n={} b={} nnz_b={}",
+        meta.m, meta.k, meta.n, meta.b, meta.nnz_b
+    );
+    // Random pattern + values with the artifact's block count.
+    let mask = patterns::uniform(meta.m, meta.k, meta.b, meta.nnz_b, 7)?;
+    let coo = patterns::with_values(&mask, 7);
+    let mut rng = popsparse::util::Rng::seed_from_u64(9);
+    let x: Vec<f32> = (0..meta.k * meta.n).map(|_| rng.normal() as f32).collect();
+
+    let t0 = std::time::Instant::now();
+    let y = rt.execute_spmm(name, &coo, &x)?;
+    let elapsed = t0.elapsed();
+
+    // Oracle check.
+    let expect = coo.spmm_dense(&x, meta.n)?;
+    let max_err = y
+        .iter()
+        .zip(&expect)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("executed in {elapsed:?}; output {} elements", y.len());
+    println!("max abs error vs oracle: {max_err:e}");
+    if max_err > 1e-3 {
+        return Err(popsparse::Error::Runtime(format!("numeric check FAILED: {max_err}")));
+    }
+    println!("numeric check OK");
+    Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
+    let which = args.first().map(String::as_str).unwrap_or("all");
+    let env = Env::default();
+    let out_dir = std::path::Path::new("target/bench_results");
+    let run = |name: &str, tables: Vec<popsparse::bench_harness::Table>| -> popsparse::Result<()> {
+        for (i, t) in tables.iter().enumerate() {
+            t.print();
+            let file = if tables.len() == 1 {
+                format!("{name}.csv")
+            } else {
+                format!("{name}_{i}.csv")
+            };
+            t.write_csv(out_dir.join(file))?;
+        }
+        Ok(())
+    };
+    let all = which == "all";
+    if all || which == "table3" {
+        run("table3", vec![experiments::table3(&env)])?;
+    }
+    if all || which == "fig2" {
+        run("fig2", vec![experiments::fig2(&env)])?;
+    }
+    if all || which == "fig3a" {
+        run("fig3a", vec![experiments::fig3a(&env)])?;
+    }
+    if all || which == "fig3b" {
+        run("fig3b", vec![experiments::fig3b(&env)])?;
+    }
+    if all || which == "fig4a" {
+        run("fig4a", vec![experiments::fig4a(&env)])?;
+    }
+    if all || which == "fig4b" {
+        run("fig4b", vec![experiments::fig4b(&env)])?;
+    }
+    if all || which == "fig4c" {
+        let (t, _) = experiments::fig4c(&env);
+        run("fig4c", vec![t])?;
+    }
+    if all || which == "fig7" {
+        run("fig7", experiments::fig7(&env))?;
+    }
+    if all || which == "ell" {
+        run("ell", vec![experiments::ell_ablation(&env)])?;
+    }
+    if all || which == "conclusions" {
+        run("conclusions", vec![experiments::conclusions(&env)])?;
+    }
+    println!("(CSV written under {})", out_dir.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
+    let flags = parse_flags(args);
+    let jobs = flag_usize(&flags, "jobs", 200);
+    let workers = flag_usize(&flags, "workers", 4);
+    let coordinator = Coordinator::new(
+        Config { workers, ..Config::default() },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    println!("serving {jobs} synthetic SpMM jobs on {workers} workers...");
+    let mut rng = popsparse::util::Rng::seed_from_u64(1);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..jobs)
+        .map(|i| {
+            let mode = match i % 3 {
+                0 => Mode::Dense,
+                1 => Mode::Static,
+                _ => Mode::Dynamic,
+            };
+            coordinator.submit(JobSpec {
+                mode,
+                m: 1024,
+                k: 1024,
+                n: 1 << (rng.range(4, 9)), // 16..256
+                b: 16,
+                density: 1.0 / 16.0,
+                dtype: DType::Fp16,
+                pattern_seed: (i % 5) as u64,
+            })
+        })
+        .collect();
+    let mut ok = 0usize;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(e)) => eprintln!("job failed: {e}"),
+            Err(_) => eprintln!("worker dropped"),
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coordinator.metrics();
+    let (hits, misses) = coordinator.plan_cache_stats();
+    println!("completed {ok}/{jobs} in {wall:?} ({:.0} jobs/s)", ok as f64 / wall.as_secs_f64());
+    println!(
+        "batches: {} (mean batch {:.1} jobs), plan cache: {hits} hits / {misses} misses",
+        snap.batches, snap.mean_batch_size
+    );
+    println!(
+        "latency p50 {:?} p99 {:?} max {:?}; simulated device cycles {}",
+        snap.p50, snap.p99, snap.max, snap.simulated_cycles
+    );
+    coordinator.shutdown();
+    Ok(())
+}
+
+fn cmd_list() -> popsparse::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    println!("{:<24} {:<6} {:>6} {:>6} {:>6} {:>4} {:>7}", "name", "kind", "m", "k", "n", "b", "nnz_b");
+    for a in &rt.manifest().artifacts {
+        println!(
+            "{:<24} {:<6} {:>6} {:>6} {:>6} {:>4} {:>7}",
+            a.name, a.kind, a.m, a.k, a.n, a.b, a.nnz_b
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Artifact manifest: what `python/compile/aot.py` exported.
+//!
+//! The manifest records, per compiled HLO, the argument order, shapes
+//! and dtypes — everything the runtime needs to marshal literals
+//! without guessing. Python writes it once at build time; nothing on
+//! the Rust side ever re-derives it from the HLO text.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One argument's shape/dtype.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    /// Numpy dtype string ("float32", "int32").
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// "spmm", "dense" or "mlp".
+    pub kind: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Block size (spmm only; 0 otherwise).
+    pub b: usize,
+    /// Non-zero blocks (spmm only; 0 otherwise).
+    pub nnz_b: usize,
+    /// Useful FLOPs per execution (paper convention).
+    pub flops: u64,
+    pub args: Vec<ArgSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn parse_args(j: &Json) -> Result<Vec<ArgSpec>> {
+    let arr = j
+        .as_array()
+        .ok_or_else(|| Error::Runtime("manifest: args not an array".into()))?;
+    arr.iter()
+        .map(|a| {
+            let shape = a
+                .get("shape")
+                .and_then(Json::as_array)
+                .ok_or_else(|| Error::Runtime("manifest: arg missing shape".into()))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| Error::Runtime("bad dim".into())))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = a
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Runtime("manifest: arg missing dtype".into()))?
+                .to_string();
+            Ok(ArgSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let doc = Json::parse(&text)?;
+        let arts = doc
+            .get("artifacts")
+            .and_then(Json::as_array)
+            .ok_or_else(|| Error::Runtime("manifest: no artifacts array".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let get_usize = |key: &str| a.get(key).and_then(Json::as_usize).unwrap_or(0);
+            artifacts.push(ArtifactMeta {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Runtime("artifact missing name".into()))?
+                    .to_string(),
+                kind: a.get("kind").and_then(Json::as_str).unwrap_or("spmm").to_string(),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Runtime("artifact missing file".into()))?
+                    .to_string(),
+                m: get_usize("m"),
+                k: get_usize("k"),
+                n: get_usize("n"),
+                b: get_usize("b"),
+                nnz_b: get_usize("nnz_b"),
+                flops: get_usize("flops") as u64,
+                args: parse_args(
+                    a.get("args")
+                        .ok_or_else(|| Error::Runtime("artifact missing args".into()))?,
+                )?,
+            });
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact named '{name}' in manifest")))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("popsparse_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "artifacts": [
+                {"name": "a", "kind": "spmm", "file": "a.hlo.txt",
+                 "m": 64, "k": 64, "n": 8, "b": 16, "nnz_b": 4, "flops": 16384,
+                 "args": [{"shape": [4, 16, 16], "dtype": "float32"},
+                          {"shape": [4], "dtype": "int32"}]}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("a").unwrap();
+        assert_eq!(a.b, 16);
+        assert_eq!(a.args[0].elements(), 1024);
+        assert_eq!(a.args[1].dtype, "int32");
+        assert!(m.hlo_path(a).ends_with("a.hlo.txt"));
+        assert!(m.get("missing").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_friendly() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! This is the numeric half of the reproduction: the L1 Pallas kernel
+//! (lowered through L2 JAX into HLO text by `python/compile/aot.py`)
+//! executes here on the PJRT CPU client via the `xla` crate. Python is
+//! never on this path — the HLO text artifacts are self-contained.
+//!
+//! Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+pub use artifact::{ArgSpec, ArtifactMeta, Manifest};
+
+use crate::error::{Error, Result};
+use crate::sparse::coo::BlockCoo;
+
+/// A concrete argument for an artifact execution.
+#[derive(Debug, Clone)]
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl Arg<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Arg::F32(s) => s.len(),
+            Arg::I32(s) => s.len(),
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            Arg::F32(_) => "float32",
+            Arg::I32(_) => "int32",
+        }
+    }
+}
+
+/// The PJRT runtime: one CPU client plus a compile cache keyed by
+/// artifact name (compilation happens once; the request path only
+/// executes).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (needs
+    /// `manifest.json`; run `make artifacts` first).
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(Self { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile an artifact (idempotent; cached).
+    pub fn ensure_compiled(&self, name: &str) -> Result<()> {
+        let mut cache = self.compiled.lock().expect("compile cache poisoned");
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.get(name)?;
+        let path = self.manifest.hlo_path(meta);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with the given arguments (manifest order).
+    /// Returns the flattened f32 output.
+    pub fn execute(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<f32>> {
+        let meta = self.manifest.get(name)?.clone();
+        if args.len() != meta.args.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} args, got {}",
+                meta.args.len(),
+                args.len()
+            )));
+        }
+        // Validate shapes/dtypes against the manifest before touching XLA.
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, spec)) in args.iter().zip(&meta.args).enumerate() {
+            if arg.len() != spec.elements() {
+                return Err(Error::Runtime(format!(
+                    "{name} arg {i}: {} elements, manifest says {:?}",
+                    arg.len(),
+                    spec.shape
+                )));
+            }
+            if arg.dtype() != spec.dtype {
+                return Err(Error::Runtime(format!(
+                    "{name} arg {i}: dtype {} != manifest {}",
+                    arg.dtype(),
+                    spec.dtype
+                )));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match arg {
+                Arg::F32(s) => xla::Literal::vec1(s),
+                Arg::I32(s) => xla::Literal::vec1(s),
+            };
+            let lit = lit
+                .reshape(&dims)
+                .map_err(|e| Error::Runtime(format!("{name} arg {i} reshape: {e}")))?;
+            literals.push(lit);
+        }
+
+        self.ensure_compiled(name)?;
+        let cache = self.compiled.lock().expect("compile cache poisoned");
+        let exe = cache.get(name).expect("ensure_compiled populated the cache");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = out
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
+        out.to_vec::<f32>().map_err(|e| Error::Runtime(format!("to_vec {name}: {e}")))
+    }
+
+    /// Convenience: run a `spmm` artifact on a [`BlockCoo`] and a dense
+    /// `x` (row-major `k x n`), checking the pattern matches the
+    /// artifact's compiled block count.
+    pub fn execute_spmm(&self, name: &str, coo: &BlockCoo, x: &[f32]) -> Result<Vec<f32>> {
+        let meta = self.manifest.get(name)?;
+        if meta.kind != "spmm" {
+            return Err(Error::Runtime(format!("{name} is not an spmm artifact")));
+        }
+        if coo.nnz_blocks() != meta.nnz_b || coo.b != meta.b {
+            return Err(Error::Runtime(format!(
+                "{name}: pattern has {} blocks of b={}, artifact compiled for {} of b={}",
+                coo.nnz_blocks(),
+                coo.b,
+                meta.nnz_b,
+                meta.b
+            )));
+        }
+        let rows: Vec<i32> = coo.block_rows.iter().map(|&r| r as i32).collect();
+        let cols: Vec<i32> = coo.block_cols.iter().map(|&c| c as i32).collect();
+        self.execute(
+            name,
+            &[Arg::F32(&coo.values), Arg::I32(&rows), Arg::I32(&cols), Arg::F32(x)],
+        )
+    }
+}
+
+// Tests that need real artifacts live in
+// rust/tests/integration_runtime.rs (they require `make artifacts`).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_introspection() {
+        let xs = [1.0f32, 2.0];
+        let is = [1i32];
+        assert_eq!(Arg::F32(&xs).len(), 2);
+        assert_eq!(Arg::I32(&is).dtype(), "int32");
+    }
+
+    #[test]
+    fn runtime_requires_manifest() {
+        assert!(Runtime::new("/nonexistent").is_err());
+    }
+}

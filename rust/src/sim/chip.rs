@@ -1,0 +1,268 @@
+//! Hardware specification and calibration constants.
+//!
+//! [`IpuSpec`] holds published hardware facts (Bow IPU: Graphcore
+//! 2022b/c datasheets). [`CostModel`] holds the calibration constants
+//! of our cost model — the per-block-size AMP efficiencies and phase
+//! overheads that cannot be derived from datasheets. They are tuned
+//! once against the paper's Table 3 / Figure 2 (see EXPERIMENTS.md
+//! §Calibration) and then *frozen* for every other experiment.
+
+use crate::DType;
+
+/// Bow IPU hardware constants.
+#[derive(Debug, Clone)]
+pub struct IpuSpec {
+    /// Independent compute tiles on one chip.
+    pub tiles: usize,
+    /// Tile clock in Hz (paper §4: constant 1.85 GHz).
+    pub clock_hz: f64,
+    /// Local SRAM per tile in bytes (624 KB; 900 MB chip total).
+    pub sram_per_tile: usize,
+    /// AMP unit: FP16 multiply-accumulates per tile per cycle.
+    pub amp_macs_fp16: u64,
+    /// AMP unit: FP32 multiply-accumulates per tile per cycle.
+    pub amp_macs_fp32: u64,
+    /// Exchange fabric: bytes a tile can receive per cycle.
+    pub exchange_bytes_per_cycle: f64,
+    /// Cycles for a chip-wide BSP sync.
+    pub sync_cycles: u64,
+    /// Fixed control overhead per superstep (program dispatch, vertex
+    /// startup across the worker threads).
+    pub superstep_fixed_cycles: u64,
+    /// One-off cycles per program execution (control-program entry,
+    /// host sync handshake — small ops cannot amortise this).
+    pub program_dispatch_cycles: u64,
+}
+
+impl Default for IpuSpec {
+    fn default() -> Self {
+        Self {
+            tiles: 1472,
+            clock_hz: 1.85e9,
+            sram_per_tile: 624 * 1024,
+            // 64 fp16 MACs/tile/cycle -> 1472*128 FLOP/cycle @1.85GHz
+            // = 348 TFLOP/s peak, matching Bow's ~350 TFLOP/s fp16.
+            amp_macs_fp16: 64,
+            // fp32 AMP at a quarter rate -> 87 TFLOP/s peak.
+            amp_macs_fp32: 16,
+            // ~11 TB/s all-to-all over 1472 tiles @1.85 GHz ≈ 4 B/cycle
+            // per tile of receive bandwidth.
+            exchange_bytes_per_cycle: 4.0,
+            sync_cycles: 150,
+            superstep_fixed_cycles: 500,
+            program_dispatch_cycles: 15_000,
+        }
+    }
+}
+
+impl IpuSpec {
+    /// MACs per tile per cycle for a dtype.
+    pub fn amp_macs(&self, dtype: DType) -> u64 {
+        match dtype {
+            DType::Fp16 => self.amp_macs_fp16,
+            DType::Fp32 => self.amp_macs_fp32,
+        }
+    }
+
+    /// Theoretical peak TFLOP/s for a dtype (2 FLOPs per MAC).
+    pub fn peak_tflops(&self, dtype: DType) -> f64 {
+        2.0 * self.amp_macs(dtype) as f64 * self.tiles as f64 * self.clock_hz / 1e12
+    }
+
+    /// Total on-chip SRAM.
+    pub fn total_sram(&self) -> usize {
+        self.tiles * self.sram_per_tile
+    }
+}
+
+/// Calibration constants of the cost model.
+///
+/// `amp_eff_*` are the fractions of AMP peak achieved by the on-tile
+/// vertex for each block size: small blocks cannot fill the AMP's
+/// 16-element input vectors and fall back to vector/scalar code on the
+/// 6 worker threads, which is why unstructured (b=1) sparsity is an
+/// order of magnitude less efficient per non-zero than b=16.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// AMP efficiency of the dense matmul vertex (large tiles).
+    pub amp_eff_dense: f64,
+    /// AMP efficiency of the static sparse vertex, by block size, FP16.
+    pub amp_eff_b1_fp16: f64,
+    pub amp_eff_b4_fp16: f64,
+    pub amp_eff_b8_fp16: f64,
+    pub amp_eff_b16_fp16: f64,
+    /// AMP efficiency of the static sparse vertex, by block size, FP32.
+    /// Sparse vertices at small block sizes run scalar/vector code on
+    /// the worker threads, whose MAC rate barely depends on dtype — so
+    /// relative to the 4x lower FP32 AMP peak their *efficiency* is
+    /// higher. This is exactly why the paper's FP32 sparse speedups
+    /// exceed FP16 (§5.2).
+    pub amp_eff_b1_fp32: f64,
+    pub amp_eff_b4_fp32: f64,
+    pub amp_eff_b8_fp32: f64,
+    pub amp_eff_b16_fp32: f64,
+    /// Extra integer cycles to decode one block's metaInfo entry, per
+    /// 32-column group of the dense operand (the vertex re-reads the
+    /// indices on every pass over n).
+    pub meta_cycles_per_block: f64,
+    /// Multiplier (>1) on dynamic-mode *metadata/control* cycles:
+    /// runtime-variable bucket contents need interpreted control flow
+    /// (paper §3.3 bullet 1). Dtype-blind, so it hurts FP16 relatively
+    /// more — matching Table 3's dynamic column.
+    pub dynamic_control_factor: f64,
+    /// Extra dynamic control cycles per block per 32-column group.
+    pub dynamic_control_cycles_per_block: f64,
+    /// Multiplier (>1) on dynamic-mode exchange volume: phases are
+    /// sized for the largest possible volume (paper §3.3 bullet 2).
+    pub dynamic_exchange_factor: f64,
+    /// FP16 arithmetic-rate penalty of the *dynamic* sparse vertex by
+    /// block size (1.0 = no penalty). Static compilation pre-aligns
+    /// FP16 operands for the AMP's 4-element input vectors; with a
+    /// runtime pattern the alignment is unknown and the vertex takes
+    /// slower paths. FP32 needs no such alignment → no penalty, which
+    /// is the second reason dynamic FP32 holds up better (Table 3).
+    pub dynamic_fp16_penalty_b1: f64,
+    pub dynamic_fp16_penalty_b4: f64,
+    pub dynamic_fp16_penalty_b8: f64,
+    pub dynamic_fp16_penalty_b16: f64,
+    /// Narrow-slab penalty scale: a sparse vertex working on `tn`
+    /// dense columns achieves only `tn / (tn + narrow_slab_cols)` of
+    /// its arithmetic rate — thin slabs cannot fill the AMP input
+    /// vectors or amortise block loads. This is the mechanism behind
+    /// the paper's "large feature size spreads work better" (§5.3):
+    /// small problems force the planner into many narrow n-partitions.
+    pub narrow_slab_cols: f64,
+    /// Elementwise adds per tile per cycle during reductions (vector
+    /// unit, not AMP).
+    pub reduce_adds_per_cycle: f64,
+    /// Compute-tile utilisation penalty when a tile's work is tiny
+    /// (vertex startup dominates): modelled as a floor of cycles per
+    /// compute vertex.
+    pub vertex_startup_cycles: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            amp_eff_dense: 0.72,
+            amp_eff_b1_fp16: 0.058,
+            amp_eff_b4_fp16: 0.088,
+            amp_eff_b8_fp16: 0.17,
+            amp_eff_b16_fp16: 0.34,
+            amp_eff_b1_fp32: 0.126,
+            amp_eff_b4_fp32: 0.25,
+            amp_eff_b8_fp32: 0.31,
+            amp_eff_b16_fp32: 0.40,
+            meta_cycles_per_block: 4.0,
+            dynamic_control_factor: 3.0,
+            dynamic_control_cycles_per_block: 6.0,
+            dynamic_exchange_factor: 1.30,
+            dynamic_fp16_penalty_b1: 1.0,
+            dynamic_fp16_penalty_b4: 0.72,
+            dynamic_fp16_penalty_b8: 0.50,
+            dynamic_fp16_penalty_b16: 0.45,
+            narrow_slab_cols: 10.0,
+            reduce_adds_per_cycle: 32.0,
+            vertex_startup_cycles: 120,
+        }
+    }
+}
+
+impl CostModel {
+    /// Dynamic-mode FP16 arithmetic-rate penalty for a block size.
+    pub fn dynamic_fp16_penalty(&self, b: usize, dtype: DType) -> f64 {
+        if dtype != DType::Fp16 {
+            return 1.0;
+        }
+        match b {
+            1 => self.dynamic_fp16_penalty_b1,
+            2..=4 => self.dynamic_fp16_penalty_b4,
+            5..=8 => self.dynamic_fp16_penalty_b8,
+            _ => self.dynamic_fp16_penalty_b16,
+        }
+    }
+
+    /// Sparse on-tile AMP efficiency for a block size and dtype.
+    pub fn amp_eff_block(&self, b: usize, dtype: DType) -> f64 {
+        match (b, dtype) {
+            (1, DType::Fp16) => self.amp_eff_b1_fp16,
+            (2..=4, DType::Fp16) => self.amp_eff_b4_fp16,
+            (5..=8, DType::Fp16) => self.amp_eff_b8_fp16,
+            (_, DType::Fp16) => self.amp_eff_b16_fp16,
+            (1, DType::Fp32) => self.amp_eff_b1_fp32,
+            (2..=4, DType::Fp32) => self.amp_eff_b4_fp32,
+            (5..=8, DType::Fp32) => self.amp_eff_b8_fp32,
+            (_, DType::Fp32) => self.amp_eff_b16_fp32,
+        }
+    }
+}
+
+/// Candidate partition counts for planners: powers of two plus the
+/// 23-multiples that divide the 1472-tile array exactly (1472 = 2^6·23)
+/// — without these a power-of-two-only search strands ~30% of tiles.
+pub fn candidate_splits(dim: usize, max: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut q = 1;
+    while q <= max && q <= dim {
+        v.push(q);
+        q *= 2;
+    }
+    let mut t = 23;
+    while t <= max && t <= dim {
+        v.push(t);
+        t *= 2;
+    }
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_splits_include_tile_friendly_values() {
+        let v = candidate_splits(4096, 1472);
+        assert!(v.contains(&1) && v.contains(&1024));
+        assert!(v.contains(&23) && v.contains(&46) && v.contains(&368));
+        assert!(v.iter().all(|&q| q <= 1472));
+        // sorted and unique
+        let mut s = v.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s, v);
+    }
+
+    #[test]
+    fn candidate_splits_respect_dim() {
+        let v = candidate_splits(8, 1472);
+        assert_eq!(v, vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn bow_peaks_match_datasheet() {
+        let spec = IpuSpec::default();
+        // ~350 TFLOP/s fp16, ~87 TFLOP/s fp32 (Bow-2000 per-IPU).
+        assert!((spec.peak_tflops(DType::Fp16) - 348.7).abs() < 1.0);
+        assert!((spec.peak_tflops(DType::Fp32) - 87.2).abs() < 0.5);
+        // 900 MB chip SRAM.
+        assert!(spec.total_sram() > 890 * 1024 * 1024);
+    }
+
+    #[test]
+    fn eff_monotonic_in_block_size() {
+        let cm = CostModel::default();
+        for dt in [DType::Fp16, DType::Fp32] {
+            assert!(cm.amp_eff_block(1, dt) < cm.amp_eff_block(4, dt));
+            assert!(cm.amp_eff_block(4, dt) < cm.amp_eff_block(8, dt));
+            assert!(cm.amp_eff_block(8, dt) < cm.amp_eff_block(16, dt));
+            assert!(cm.amp_eff_block(16, dt) < cm.amp_eff_dense);
+        }
+        // FP32 sparse efficiency exceeds FP16 at every block size
+        // (scalar/vector code paths; see field docs).
+        for b in [1, 4, 8, 16] {
+            assert!(cm.amp_eff_block(b, DType::Fp32) > cm.amp_eff_block(b, DType::Fp16));
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Exchange-fabric cost helpers.
+//!
+//! The IPU's all-to-all exchange is modelled as a per-tile receive
+//! bandwidth (`IpuSpec::exchange_bytes_per_cycle`); a phase costs
+//! `max-tile incoming bytes / bandwidth`. Broadcast is free on the
+//! sender side (the fabric replicates), so the cost of broadcasting a
+//! slab to `g` tiles is just each receiver's slab size.
+
+/// Bytes each tile receives when a `rows x cols` slab of `dsize`-byte
+/// elements is delivered to it.
+pub fn slab_bytes(rows: usize, cols: usize, dsize: usize) -> u64 {
+    (rows * cols * dsize) as u64
+}
+
+/// Worst-tile incoming bytes of an all-reduce over `parts` partials of
+/// `elems` elements each, where the reduction work is spread over the
+/// same `parts` tiles (each tile gathers `elems/parts` elements from
+/// the other `parts-1` tiles).
+pub fn allreduce_bytes(elems: u64, parts: usize, dsize: usize) -> u64 {
+    if parts <= 1 {
+        return 0;
+    }
+    let per_tile = elems.div_ceil(parts as u64);
+    per_tile * (parts as u64 - 1) * dsize as u64
+}
+
+/// Incoming bytes for a gather-to-one-tile reduction (used when the
+/// output partition is too small to spread).
+pub fn gather_bytes(elems: u64, parts: usize, dsize: usize) -> u64 {
+    if parts <= 1 {
+        return 0;
+    }
+    elems * (parts as u64 - 1) * dsize as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slab() {
+        assert_eq!(slab_bytes(128, 64, 2), 16384);
+    }
+
+    #[test]
+    fn allreduce_incoming_approaches_total() {
+        // Worst-tile incoming bytes grow with parts (toward elems*dsize)
+        // but stay bounded by the total partial volume.
+        let elems = 1u64 << 20;
+        let p4 = allreduce_bytes(elems, 4, 2);
+        let p32 = allreduce_bytes(elems, 32, 2);
+        assert!(p4 < p32);
+        assert!(p32 < elems * 2);
+        assert_eq!(allreduce_bytes(100, 1, 2), 0);
+    }
+
+    #[test]
+    fn gather_is_worse_than_allreduce() {
+        assert!(gather_bytes(1 << 20, 8, 2) > allreduce_bytes(1 << 20, 8, 2));
+    }
+}

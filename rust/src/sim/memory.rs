@@ -1,0 +1,110 @@
+//! Per-tile SRAM accounting.
+//!
+//! Plans must fit every tile's resident buffers into
+//! `IpuSpec::sram_per_tile`. Infeasible configurations surface as
+//! [`crate::Error::OutOfMemory`] — these are the dark-grey cells of the
+//! paper's Figure 7 ("could not fit on single IPU memory").
+
+use crate::error::{Error, Result};
+use crate::sim::chip::IpuSpec;
+
+/// Named per-tile buffer allocations for a plan's most-loaded tile.
+#[derive(Debug, Clone, Default)]
+pub struct MemoryPlan {
+    buffers: Vec<(String, usize)>,
+}
+
+impl MemoryPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a buffer resident on the worst-case tile.
+    pub fn alloc(&mut self, name: impl Into<String>, bytes: usize) {
+        self.buffers.push((name.into(), bytes));
+    }
+
+    /// Total resident bytes on the worst-case tile.
+    pub fn total(&self) -> usize {
+        self.buffers.iter().map(|(_, b)| b).sum()
+    }
+
+    /// The recorded buffers (for reporting).
+    pub fn buffers(&self) -> &[(String, usize)] {
+        &self.buffers
+    }
+
+    /// Check per-tile residency; error carries the shortfall for Fig 7.
+    pub fn check(&self, spec: &IpuSpec) -> Result<()> {
+        // Reserve ~10% for code, stacks and exchange landing buffers.
+        let available = spec.sram_per_tile * 9 / 10;
+        let required = self.total();
+        if required > available {
+            Err(Error::OutOfMemory { required_bytes: required, available_bytes: available })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Check chip-level totals: every tensor (including replicas the
+    /// plan creates) must fit the aggregate SRAM. Input/weight slabs
+    /// stream through bounded working buffers, so per-tile residency is
+    /// the *shares* — the chip-level sum is the binding constraint that
+    /// produces Figure 7's dark-grey (OOM) cells.
+    pub fn check_chip(&self, spec: &IpuSpec) -> Result<()> {
+        let available = spec.total_sram() * 9 / 10;
+        let required = self.total();
+        if required > available {
+            Err(Error::OutOfMemory { required_bytes: required, available_bytes: available })
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_small() {
+        let spec = IpuSpec::default();
+        let mut m = MemoryPlan::new();
+        m.alloc("x_slab", 100 * 1024);
+        m.alloc("y_slab", 200 * 1024);
+        assert_eq!(m.total(), 300 * 1024);
+        assert!(m.check(&spec).is_ok());
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let spec = IpuSpec::default();
+        let mut m = MemoryPlan::new();
+        m.alloc("huge", 700 * 1024);
+        match m.check(&spec) {
+            Err(Error::OutOfMemory { required_bytes, .. }) => {
+                assert_eq!(required_bytes, 700 * 1024)
+            }
+            other => panic!("expected OOM, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reserve_margin_applies() {
+        // 90% of 624KB ≈ 561.6KB: 600KB must NOT fit.
+        let spec = IpuSpec::default();
+        let mut m = MemoryPlan::new();
+        m.alloc("b", 600 * 1024);
+        assert!(m.check(&spec).is_err());
+    }
+
+    #[test]
+    fn chip_level_totals() {
+        let spec = IpuSpec::default();
+        let mut m = MemoryPlan::new();
+        m.alloc("x_total", 500 * 1024 * 1024); // 500 MB fits 900 MB chip
+        assert!(m.check_chip(&spec).is_ok());
+        m.alloc("y_total", 600 * 1024 * 1024); // 1.1 GB does not
+        assert!(m.check_chip(&spec).is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! Cycle-level simulator of an IPU-class BSP chip.
+//!
+//! The paper's IPU numbers are *cycle counts converted to TFLOP/s at a
+//! constant 1.85 GHz clock, host transfers excluded* (§4). This module
+//! reproduces that methodology: planners ([`crate::dense_`],
+//! [`crate::static_`], [`crate::dynamic_`]) lower an SpMM/GEMM into a
+//! [`program::Program`] — a sequence of BSP supersteps with per-phase
+//! worst-tile compute cycles and exchange bytes — and
+//! [`program::execute`] costs it against an [`chip::IpuSpec`] +
+//! [`chip::CostModel`].
+//!
+//! BSP semantics: within a superstep every tile computes on local SRAM,
+//! then all tiles synchronize, then exchange. The superstep's duration
+//! is set by the *slowest* tile in each phase (this is where load
+//! imbalance — the heart of the static/dynamic gap — becomes cycles).
+
+pub mod chip;
+pub mod compute;
+pub mod exchange;
+pub mod memory;
+pub mod program;
+
+pub use chip::{CostModel, IpuSpec};
+pub use memory::MemoryPlan;
+pub use program::{execute, Cost, Program, Superstep};

@@ -1,0 +1,159 @@
+//! BSP programs and their cycle cost.
+//!
+//! A [`Program`] is what a planner emits: an ordered list of
+//! [`Superstep`]s, each carrying the *worst-tile* compute cycles and
+//! exchange bytes for that phase. Executing a program under BSP
+//! semantics sums, per superstep, `max-tile compute + sync + max-tile
+//! exchange + fixed overhead`.
+
+use crate::sim::chip::IpuSpec;
+
+/// One BSP superstep: compute on local data, sync, exchange.
+#[derive(Debug, Clone)]
+pub struct Superstep {
+    /// Human-readable phase name (shows up in cost breakdowns).
+    pub name: String,
+    /// Compute cycles on the most-loaded tile (per repetition).
+    pub compute_cycles: u64,
+    /// Bytes received by the most-loaded tile during exchange (per
+    /// repetition).
+    pub exchange_bytes: u64,
+    /// Times this superstep executes (plans that stream the batch
+    /// dimension in chunks repeat their phase sequence per chunk; each
+    /// repetition pays sync + fixed overhead again).
+    pub repeat: u64,
+}
+
+impl Superstep {
+    pub fn compute(name: impl Into<String>, cycles: u64) -> Self {
+        Self { name: name.into(), compute_cycles: cycles, exchange_bytes: 0, repeat: 1 }
+    }
+
+    pub fn exchange(name: impl Into<String>, bytes: u64) -> Self {
+        Self { name: name.into(), compute_cycles: 0, exchange_bytes: bytes, repeat: 1 }
+    }
+
+    pub fn mixed(name: impl Into<String>, cycles: u64, bytes: u64) -> Self {
+        Self { name: name.into(), compute_cycles: cycles, exchange_bytes: bytes, repeat: 1 }
+    }
+
+    /// Execute this superstep `r` times.
+    pub fn repeated(mut self, r: u64) -> Self {
+        self.repeat = r.max(1);
+        self
+    }
+}
+
+/// A planned BSP program.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub steps: Vec<Superstep>,
+    /// Tiles the plan actually occupies (≤ spec.tiles).
+    pub tiles_used: usize,
+}
+
+impl Program {
+    pub fn new(tiles_used: usize) -> Self {
+        Self { steps: Vec::new(), tiles_used }
+    }
+
+    pub fn push(&mut self, step: Superstep) {
+        self.steps.push(step);
+    }
+}
+
+/// Cost breakdown of an executed program, in cycles.
+#[derive(Debug, Clone, Default)]
+pub struct Cost {
+    pub compute_cycles: u64,
+    pub exchange_cycles: u64,
+    pub sync_cycles: u64,
+    pub fixed_cycles: u64,
+    /// Per-step (name, total cycles) for profiling/reporting.
+    pub per_step: Vec<(String, u64)>,
+}
+
+impl Cost {
+    /// Total cycles.
+    pub fn total(&self) -> u64 {
+        self.compute_cycles + self.exchange_cycles + self.sync_cycles + self.fixed_cycles
+    }
+
+    /// Seconds at the given clock.
+    pub fn seconds(&self, clock_hz: f64) -> f64 {
+        self.total() as f64 / clock_hz
+    }
+
+    /// Fraction of total spent in exchange (communication-boundedness
+    /// indicator used by the perf pass).
+    pub fn exchange_fraction(&self) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        self.exchange_cycles as f64 / self.total() as f64
+    }
+}
+
+/// Execute a program under BSP semantics on `spec`.
+pub fn execute(program: &Program, spec: &IpuSpec) -> Cost {
+    let mut cost = Cost::default();
+    if !program.steps.is_empty() {
+        cost.fixed_cycles += spec.program_dispatch_cycles;
+    }
+    for step in &program.steps {
+        let exch = (step.exchange_bytes as f64 / spec.exchange_bytes_per_cycle).ceil() as u64;
+        // A superstep with any exchange pays one chip-wide sync.
+        let sync = if step.exchange_bytes > 0 { spec.sync_cycles } else { 0 };
+        let r = step.repeat.max(1);
+        cost.compute_cycles += step.compute_cycles * r;
+        cost.exchange_cycles += exch * r;
+        cost.sync_cycles += sync * r;
+        cost.fixed_cycles += spec.superstep_fixed_cycles * r;
+        cost.per_step.push((
+            step.name.clone(),
+            (step.compute_cycles + exch + sync + spec.superstep_fixed_cycles) * r,
+        ));
+    }
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bsp_cost_accounting() {
+        let spec = IpuSpec::default();
+        let mut p = Program::new(4);
+        p.push(Superstep::exchange("in", 4000));
+        p.push(Superstep::compute("mul", 1000));
+        let c = execute(&p, &spec);
+        assert_eq!(c.exchange_cycles, 1000); // 4000 B / 4 B-per-cycle
+        assert_eq!(c.compute_cycles, 1000);
+        assert_eq!(c.sync_cycles, spec.sync_cycles); // only the exchange step syncs
+        assert_eq!(c.fixed_cycles, 2 * spec.superstep_fixed_cycles + spec.program_dispatch_cycles);
+        assert_eq!(
+            c.total(),
+            2000 + spec.sync_cycles + 2 * spec.superstep_fixed_cycles + spec.program_dispatch_cycles
+        );
+        assert_eq!(c.per_step.len(), 2);
+    }
+
+    #[test]
+    fn seconds_and_fraction() {
+        let spec = IpuSpec::default();
+        let mut p = Program::new(1);
+        p.push(Superstep::exchange("x", 4_000_000));
+        let c = execute(&p, &spec);
+        assert!(c.exchange_fraction() > 0.95);
+        let s = c.seconds(spec.clock_hz);
+        assert!(s > 0.0 && s < 1.0);
+    }
+
+    #[test]
+    fn empty_program_is_free() {
+        let c = execute(&Program::new(0), &IpuSpec::default());
+        assert_eq!(c.total(), 0);
+        assert_eq!(c.exchange_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Block CSR (BSR) — the cuSPARSE `cusparseSbsrmm` baseline format and
+//! the natural layout for block-row traversal in the planners.
+
+use crate::error::{Error, Result};
+use crate::sparse::coo::BlockCoo;
+
+/// Block compressed sparse row matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bsr {
+    pub m: usize,
+    pub k: usize,
+    pub b: usize,
+    /// Block-row pointers, length `mb + 1`.
+    pub row_ptr: Vec<u32>,
+    /// Block-column index per non-zero block, sorted within a row.
+    pub col_idx: Vec<u32>,
+    /// Block values, `nnz_b * b * b`, row-major within block.
+    pub values: Vec<f32>,
+}
+
+impl Bsr {
+    /// Convert from block-COO (already row-sorted, so this is a scan).
+    pub fn from_block_coo(coo: &BlockCoo) -> Self {
+        let mb = coo.m / coo.b;
+        let mut row_ptr = vec![0u32; mb + 1];
+        for &r in &coo.block_rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..mb {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Self {
+            m: coo.m,
+            k: coo.k,
+            b: coo.b,
+            row_ptr,
+            col_idx: coo.block_cols.clone(),
+            values: coo.values.clone(),
+        }
+    }
+
+    /// Back to block-COO.
+    pub fn to_block_coo(&self) -> BlockCoo {
+        let mut rows = Vec::with_capacity(self.nnz_blocks());
+        for r in 0..self.mb() {
+            for _ in self.row_ptr[r]..self.row_ptr[r + 1] {
+                rows.push(r as u32);
+            }
+        }
+        BlockCoo::new(self.m, self.k, self.b, rows, self.col_idx.clone(), self.values.clone())
+            .expect("BSR invariants imply valid COO")
+    }
+
+    /// Number of block rows.
+    pub fn mb(&self) -> usize {
+        self.m / self.b
+    }
+
+    /// Number of non-zero blocks.
+    pub fn nnz_blocks(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Non-zero blocks in block-row `r`.
+    pub fn row_nnz_blocks(&self, r: usize) -> usize {
+        (self.row_ptr[r + 1] - self.row_ptr[r]) as usize
+    }
+
+    /// Density.
+    pub fn density(&self) -> f64 {
+        (self.nnz_blocks() * self.b * self.b) as f64 / (self.m as f64 * self.k as f64)
+    }
+
+    /// SpMM against dense `k x n` row-major. Block-row traversal:
+    /// this loop structure is what both the cuSPARSE BSR model and the
+    /// IPU on-tile compute model cost out.
+    pub fn spmm_dense(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        if x.len() != self.k * n {
+            return Err(Error::InvalidFormat(format!(
+                "x has {} elements, expected {}x{n}",
+                x.len(),
+                self.k
+            )));
+        }
+        let b = self.b;
+        let mut y = vec![0f32; self.m * n];
+        for r in 0..self.mb() {
+            for p in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                let c = self.col_idx[p] as usize;
+                let blk = &self.values[p * b * b..(p + 1) * b * b];
+                for br in 0..b {
+                    let yrow = (r * b + br) * n;
+                    for bc in 0..b {
+                        let w = blk[br * b + bc];
+                        let xrow = (c * b + bc) * n;
+                        for j in 0..n {
+                            y[yrow + j] += w * x[xrow + j];
+                        }
+                    }
+                }
+            }
+        }
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_coo() -> BlockCoo {
+        BlockCoo::new(
+            6,
+            6,
+            2,
+            vec![0, 0, 2],
+            vec![0, 2, 1],
+            (0..12).map(|i| i as f32).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn round_trip_coo() {
+        let coo = sample_coo();
+        let bsr = Bsr::from_block_coo(&coo);
+        assert_eq!(bsr.row_ptr, vec![0, 2, 2, 3]);
+        assert_eq!(bsr.row_nnz_blocks(0), 2);
+        assert_eq!(bsr.row_nnz_blocks(1), 0);
+        assert_eq!(bsr.to_block_coo(), coo);
+    }
+
+    #[test]
+    fn spmm_matches_coo() {
+        let coo = sample_coo();
+        let bsr = Bsr::from_block_coo(&coo);
+        let x: Vec<f32> = (0..6 * 4).map(|i| (i as f32).sin()).collect();
+        assert_eq!(bsr.spmm_dense(&x, 4).unwrap(), coo.spmm_dense(&x, 4).unwrap());
+    }
+
+    #[test]
+    fn density() {
+        let bsr = Bsr::from_block_coo(&sample_coo());
+        assert!((bsr.density() - 12.0 / 36.0).abs() < 1e-12);
+    }
+}

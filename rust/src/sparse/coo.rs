@@ -1,0 +1,258 @@
+//! Block-COO: the canonical in-memory block-sparse matrix.
+//!
+//! Coordinates are kept (row, col)-sorted — the same contract as the
+//! L1 Pallas kernel's scalar-prefetch arrays, so a `BlockCoo` can be
+//! handed to the runtime without reshuffling.
+
+use crate::error::{Error, Result};
+use crate::sparse::mask::BlockMask;
+
+/// Block-sparse matrix as a sorted coordinate list of dense blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockCoo {
+    /// Element-level rows.
+    pub m: usize,
+    /// Element-level cols.
+    pub k: usize,
+    /// Block size.
+    pub b: usize,
+    /// Block-row index of each non-zero block (sorted non-decreasing).
+    pub block_rows: Vec<u32>,
+    /// Block-col index of each non-zero block (sorted within a row).
+    pub block_cols: Vec<u32>,
+    /// Block values, `nnz_b * b * b` elements, row-major within block.
+    pub values: Vec<f32>,
+}
+
+impl BlockCoo {
+    /// Build from a mask and a flat value buffer (one `b*b` chunk per
+    /// non-zero block, in the mask's row-major coordinate order).
+    pub fn from_mask_values(mask: &BlockMask, values: Vec<f32>) -> Result<Self> {
+        let coords = mask.coords();
+        let expect = coords.len() * mask.b * mask.b;
+        if values.len() != expect {
+            return Err(Error::InvalidFormat(format!(
+                "expected {expect} values for {} blocks of {}x{}, got {}",
+                coords.len(),
+                mask.b,
+                mask.b,
+                values.len()
+            )));
+        }
+        Ok(Self {
+            m: mask.m(),
+            k: mask.k(),
+            b: mask.b,
+            block_rows: coords.iter().map(|&(r, _)| r as u32).collect(),
+            block_cols: coords.iter().map(|&(_, c)| c as u32).collect(),
+            values,
+        })
+    }
+
+    /// Build with explicit coordinate/value vectors; validates the
+    /// kernel contract (sorted, in-range, value length).
+    pub fn new(
+        m: usize,
+        k: usize,
+        b: usize,
+        block_rows: Vec<u32>,
+        block_cols: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<Self> {
+        if b == 0 || m % b != 0 || k % b != 0 {
+            return Err(Error::InvalidFormat(format!(
+                "m={m}, k={k} must be non-zero multiples of b={b}"
+            )));
+        }
+        if block_rows.len() != block_cols.len() {
+            return Err(Error::InvalidFormat("rows/cols length mismatch".into()));
+        }
+        if values.len() != block_rows.len() * b * b {
+            return Err(Error::InvalidFormat(format!(
+                "expected {} values, got {}",
+                block_rows.len() * b * b,
+                values.len()
+            )));
+        }
+        let (mb, kb) = ((m / b) as u32, (k / b) as u32);
+        for i in 0..block_rows.len() {
+            if block_rows[i] >= mb || block_cols[i] >= kb {
+                return Err(Error::InvalidFormat(format!(
+                    "block ({},{}) outside {mb}x{kb} grid",
+                    block_rows[i], block_cols[i]
+                )));
+            }
+            if i > 0 {
+                let prev = (block_rows[i - 1], block_cols[i - 1]);
+                let cur = (block_rows[i], block_cols[i]);
+                if cur <= prev {
+                    return Err(Error::InvalidFormat(format!(
+                        "blocks not strictly (row,col)-sorted at index {i}: {prev:?} -> {cur:?}"
+                    )));
+                }
+            }
+        }
+        Ok(Self { m, k, b, block_rows, block_cols, values })
+    }
+
+    /// Number of non-zero blocks.
+    pub fn nnz_blocks(&self) -> usize {
+        self.block_rows.len()
+    }
+
+    /// Number of non-zero elements.
+    pub fn nnz(&self) -> usize {
+        self.nnz_blocks() * self.b * self.b
+    }
+
+    /// Density `d`.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.m as f64 * self.k as f64)
+    }
+
+    /// The `i`-th block's values.
+    pub fn block(&self, i: usize) -> &[f32] {
+        let sz = self.b * self.b;
+        &self.values[i * sz..(i + 1) * sz]
+    }
+
+    /// Recover the block mask.
+    pub fn mask(&self) -> BlockMask {
+        let coords: Vec<(usize, usize)> = self
+            .block_rows
+            .iter()
+            .zip(&self.block_cols)
+            .map(|(&r, &c)| (r as usize, c as usize))
+            .collect();
+        BlockMask::from_coords(self.m, self.k, self.b, &coords).expect("coords validated")
+    }
+
+    /// Densify into a row-major `m x k` buffer — the numeric oracle.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.m * self.k];
+        for i in 0..self.nnz_blocks() {
+            let (r, c) = (self.block_rows[i] as usize, self.block_cols[i] as usize);
+            let blk = self.block(i);
+            for br in 0..self.b {
+                for bc in 0..self.b {
+                    out[(r * self.b + br) * self.k + c * self.b + bc] = blk[br * self.b + bc];
+                }
+            }
+        }
+        out
+    }
+
+    /// SpMM against a dense `k x n` matrix (row-major), on the CPU.
+    /// Used as the oracle in integration tests and by the examples when
+    /// double-checking runtime output.
+    pub fn spmm_dense(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        if x.len() != self.k * n {
+            return Err(Error::InvalidFormat(format!(
+                "x has {} elements, expected {}x{n}",
+                x.len(),
+                self.k
+            )));
+        }
+        let mut y = vec![0f32; self.m * n];
+        for i in 0..self.nnz_blocks() {
+            let (r, c) = (self.block_rows[i] as usize, self.block_cols[i] as usize);
+            let blk = self.block(i);
+            for br in 0..self.b {
+                let yrow = (r * self.b + br) * n;
+                for bc in 0..self.b {
+                    let w = blk[br * self.b + bc];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let xrow = (c * self.b + bc) * n;
+                    for j in 0..n {
+                        y[yrow + j] += w * x[xrow + j];
+                    }
+                }
+            }
+        }
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BlockCoo {
+        // 2x2 block grid, b=2; blocks at (0,0) and (1,1).
+        BlockCoo::new(
+            4,
+            4,
+            2,
+            vec![0, 1],
+            vec![0, 1],
+            vec![1., 2., 3., 4., 5., 6., 7., 8.],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn construct_and_stats() {
+        let c = sample();
+        assert_eq!(c.nnz_blocks(), 2);
+        assert_eq!(c.nnz(), 8);
+        assert!((c.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_unsorted_and_duplicates() {
+        assert!(BlockCoo::new(4, 4, 2, vec![1, 0], vec![0, 0], vec![0.0; 8]).is_err());
+        assert!(BlockCoo::new(4, 4, 2, vec![0, 0], vec![1, 1], vec![0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_lengths_and_range() {
+        assert!(BlockCoo::new(4, 4, 2, vec![0], vec![0], vec![0.0; 3]).is_err());
+        assert!(BlockCoo::new(4, 4, 2, vec![2], vec![0], vec![0.0; 4]).is_err());
+        assert!(BlockCoo::new(5, 4, 2, vec![], vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn to_dense_layout() {
+        let d = sample().to_dense();
+        // block (0,0) occupies rows 0-1, cols 0-1
+        assert_eq!(&d[0..2], &[1., 2.]);
+        assert_eq!(&d[4..6], &[3., 4.]);
+        // block (1,1) occupies rows 2-3, cols 2-3
+        assert_eq!(&d[2 * 4 + 2..2 * 4 + 4], &[5., 6.]);
+        // zero elsewhere
+        assert_eq!(d[2], 0.0);
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let c = sample();
+        let n = 3;
+        let x: Vec<f32> = (0..c.k * n).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let y = c.spmm_dense(&x, n).unwrap();
+        // oracle: densify then naive matmul
+        let dense = c.to_dense();
+        let mut expect = vec![0f32; c.m * n];
+        for i in 0..c.m {
+            for j in 0..n {
+                for l in 0..c.k {
+                    expect[i * n + j] += dense[i * c.k + l] * x[l * n + j];
+                }
+            }
+        }
+        for (a, b) in y.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn mask_round_trip() {
+        let c = sample();
+        let mask = c.mask();
+        assert_eq!(mask.nnz_blocks(), 2);
+        assert!(mask.get(0, 0) && mask.get(1, 1));
+        let c2 = BlockCoo::from_mask_values(&mask, c.values.clone()).unwrap();
+        assert_eq!(c, c2);
+    }
+}

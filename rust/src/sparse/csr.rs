@@ -1,0 +1,123 @@
+//! Element-level CSR — the cuSPARSE `cusparseSpMM` baseline format
+//! (unstructured sparsity, block size 1).
+
+use crate::error::{Error, Result};
+use crate::sparse::coo::BlockCoo;
+
+/// Compressed sparse row matrix over scalar elements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub m: usize,
+    pub k: usize,
+    /// Row pointers, length `m + 1`.
+    pub row_ptr: Vec<u32>,
+    /// Column index per non-zero, sorted within a row.
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from a dense row-major buffer, dropping exact zeros.
+    pub fn from_dense(dense: &[f32], m: usize, k: usize) -> Result<Self> {
+        if dense.len() != m * k {
+            return Err(Error::InvalidFormat(format!(
+                "dense has {} elements, expected {m}x{k}",
+                dense.len()
+            )));
+        }
+        let mut row_ptr = Vec::with_capacity(m + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for i in 0..m {
+            for j in 0..k {
+                let v = dense[i * k + j];
+                if v != 0.0 {
+                    col_idx.push(j as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Ok(Self { m, k, row_ptr, col_idx, values })
+    }
+
+    /// Build from block-COO (any block size densifies to elements).
+    pub fn from_block_coo(coo: &BlockCoo) -> Self {
+        Self::from_dense(&coo.to_dense(), coo.m, coo.k).expect("coo densify is consistent")
+    }
+
+    /// Non-zero element count.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Density.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.m as f64 * self.k as f64)
+    }
+
+    /// Non-zeros in row `i`.
+    pub fn row_nnz(&self, i: usize) -> usize {
+        (self.row_ptr[i + 1] - self.row_ptr[i]) as usize
+    }
+
+    /// SpMM against dense `k x n` row-major. CPU oracle path.
+    pub fn spmm_dense(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        if x.len() != self.k * n {
+            return Err(Error::InvalidFormat(format!(
+                "x has {} elements, expected {}x{n}",
+                x.len(),
+                self.k
+            )));
+        }
+        let mut y = vec![0f32; self.m * n];
+        for i in 0..self.m {
+            for p in self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize {
+                let (c, v) = (self.col_idx[p] as usize, self.values[p]);
+                let (yrow, xrow) = (i * n, c * n);
+                for j in 0..n {
+                    y[yrow + j] += v * x[xrow + j];
+                }
+            }
+        }
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_dense_round_trip() {
+        let dense = vec![1., 0., 0., 2., 0., 0., 3., 0., 4.];
+        let csr = Csr::from_dense(&dense, 3, 3).unwrap();
+        assert_eq!(csr.nnz(), 4);
+        assert_eq!(csr.row_ptr, vec![0, 1, 2, 4]);
+        assert_eq!(csr.col_idx, vec![0, 0, 0, 2]);
+        assert_eq!(csr.row_nnz(2), 2);
+        assert!((csr.density() - 4.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spmm_identity() {
+        // identity 3x3 CSR times arbitrary X = X
+        let dense = vec![1., 0., 0., 0., 1., 0., 0., 0., 1.];
+        let csr = Csr::from_dense(&dense, 3, 3).unwrap();
+        let x: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        assert_eq!(csr.spmm_dense(&x, 2).unwrap(), x);
+    }
+
+    #[test]
+    fn from_block_coo_matches_elementwise() {
+        let coo = BlockCoo::new(4, 4, 2, vec![0], vec![1], vec![1., 0., 2., 3.]).unwrap();
+        let csr = Csr::from_block_coo(&coo);
+        // block at block-(0,1) → elements (0,2)=1,(1,2)=2,(1,3)=3; the 0 is dropped
+        assert_eq!(csr.nnz(), 3);
+        let x = vec![1f32; 4];
+        let y_coo = coo.spmm_dense(&x, 1).unwrap();
+        let y_csr = csr.spmm_dense(&x, 1).unwrap();
+        assert_eq!(y_coo, y_csr);
+    }
+}

@@ -1,0 +1,93 @@
+//! Plain dense matrix: the numeric oracle and the dense baseline's
+//! data carrier.
+
+use crate::error::{Error, Result};
+
+/// Row-major dense matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dense {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Dense {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0f32; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::InvalidFormat(format!(
+                "{} elements for {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Naive triple-loop matmul (oracle; performance-irrelevant).
+    pub fn matmul(&self, rhs: &Dense) -> Result<Dense> {
+        if self.cols != rhs.rows {
+            return Err(Error::InvalidFormat(format!(
+                "inner dims: {}x{} @ {}x{}",
+                self.rows, self.cols, rhs.rows, rhs.cols
+            )));
+        }
+        let mut out = Dense::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for l in 0..self.cols {
+                let a = self.get(i, l);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..rhs.cols {
+                    out.data[i * rhs.cols + j] += a * rhs.get(l, j);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Max absolute elementwise difference (test helper).
+    pub fn max_abs_diff(&self, other: &Dense) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Dense::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let b = Dense::from_vec(2, 2, vec![1., 1., 1., 1.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_shape_check() {
+        let a = Dense::zeros(2, 3);
+        let b = Dense::zeros(2, 3);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Dense::from_vec(2, 2, vec![0.0; 3]).is_err());
+    }
+}

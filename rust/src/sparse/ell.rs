@@ -1,0 +1,154 @@
+//! Blocked-ELL — the padded fixed-width block format of the paper's
+//! Appendix B (cuSPARSE blocked-ELL). Every block row stores the same
+//! number of block slots; missing blocks are marked with column `-1`
+//! and padded with zero values.
+//!
+//! The paper did not benchmark this format (the padding changes the
+//! computation), but implements it here because the ablation bench
+//! `fig3b` reports the padding overhead it would introduce.
+
+use crate::error::{Error, Result};
+use crate::sparse::coo::BlockCoo;
+
+/// Marker for an absent block slot (mirrors cuSPARSE's convention).
+pub const ELL_EMPTY: i32 = -1;
+
+/// Blocked-ELL matrix: `mb` block rows of exactly `ell_width` slots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockedEll {
+    pub m: usize,
+    pub k: usize,
+    pub b: usize,
+    /// Slots per block row (max row occupancy of the source pattern).
+    pub ell_width: usize,
+    /// `mb * ell_width` block-column indices, `ELL_EMPTY` when padded.
+    pub col_idx: Vec<i32>,
+    /// `mb * ell_width * b * b` values, zeros in padded slots.
+    pub values: Vec<f32>,
+}
+
+impl BlockedEll {
+    /// Convert from block-COO; width is the max blocks-per-row.
+    pub fn from_block_coo(coo: &BlockCoo) -> Self {
+        let mb = coo.m / coo.b;
+        let mut per_row: Vec<Vec<usize>> = vec![Vec::new(); mb];
+        for (i, &r) in coo.block_rows.iter().enumerate() {
+            per_row[r as usize].push(i);
+        }
+        let ell_width = per_row.iter().map(Vec::len).max().unwrap_or(0);
+        let bsz = coo.b * coo.b;
+        let mut col_idx = vec![ELL_EMPTY; mb * ell_width];
+        let mut values = vec![0f32; mb * ell_width * bsz];
+        for (r, blocks) in per_row.iter().enumerate() {
+            for (slot, &i) in blocks.iter().enumerate() {
+                col_idx[r * ell_width + slot] = coo.block_cols[i] as i32;
+                let dst = (r * ell_width + slot) * bsz;
+                values[dst..dst + bsz].copy_from_slice(coo.block(i));
+            }
+        }
+        Self { m: coo.m, k: coo.k, b: coo.b, ell_width, col_idx, values }
+    }
+
+    /// Stored blocks including padding.
+    pub fn padded_blocks(&self) -> usize {
+        (self.m / self.b) * self.ell_width
+    }
+
+    /// Actual non-zero blocks.
+    pub fn nnz_blocks(&self) -> usize {
+        self.col_idx.iter().filter(|&&c| c != ELL_EMPTY).count()
+    }
+
+    /// Padding overhead ratio: stored / useful (>= 1; the FLOP and
+    /// memory inflation this format pays relative to BSR).
+    pub fn padding_overhead(&self) -> f64 {
+        let nnz = self.nnz_blocks();
+        if nnz == 0 {
+            return 1.0;
+        }
+        self.padded_blocks() as f64 / nnz as f64
+    }
+
+    /// SpMM against dense `k x n` row-major (computes padded slots too,
+    /// as the real format does — zeros contribute nothing).
+    pub fn spmm_dense(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        if x.len() != self.k * n {
+            return Err(Error::InvalidFormat(format!(
+                "x has {} elements, expected {}x{n}",
+                x.len(),
+                self.k
+            )));
+        }
+        let b = self.b;
+        let bsz = b * b;
+        let mb = self.m / b;
+        let mut y = vec![0f32; self.m * n];
+        for r in 0..mb {
+            for slot in 0..self.ell_width {
+                let c = self.col_idx[r * self.ell_width + slot];
+                if c == ELL_EMPTY {
+                    continue;
+                }
+                let blk = &self.values[(r * self.ell_width + slot) * bsz..][..bsz];
+                for br in 0..b {
+                    let yrow = (r * b + br) * n;
+                    for bc in 0..b {
+                        let w = blk[br * b + bc];
+                        let xrow = (c as usize * b + bc) * n;
+                        for j in 0..n {
+                            y[yrow + j] += w * x[xrow + j];
+                        }
+                    }
+                }
+            }
+        }
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn imbalanced_coo() -> BlockCoo {
+        // row 0 has 3 blocks, row 1 has 0, row 2 has 1 → width 3.
+        BlockCoo::new(
+            6,
+            8,
+            2,
+            vec![0, 0, 0, 2],
+            vec![0, 1, 3, 2],
+            (0..16).map(|i| i as f32).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn width_and_padding() {
+        let ell = BlockedEll::from_block_coo(&imbalanced_coo());
+        assert_eq!(ell.ell_width, 3);
+        assert_eq!(ell.nnz_blocks(), 4);
+        assert_eq!(ell.padded_blocks(), 9);
+        assert!((ell.padding_overhead() - 9.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spmm_matches_coo() {
+        let coo = imbalanced_coo();
+        let ell = BlockedEll::from_block_coo(&coo);
+        let x: Vec<f32> = (0..8 * 3).map(|i| (i as f32) * 0.25 - 1.0).collect();
+        let y_ell = ell.spmm_dense(&x, 3).unwrap();
+        let y_coo = coo.spmm_dense(&x, 3).unwrap();
+        for (a, b) in y_ell.iter().zip(&y_coo) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let coo = BlockCoo::new(4, 4, 2, vec![], vec![], vec![]).unwrap();
+        let ell = BlockedEll::from_block_coo(&coo);
+        assert_eq!(ell.ell_width, 0);
+        assert_eq!(ell.padding_overhead(), 1.0);
+    }
+}

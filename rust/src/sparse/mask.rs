@@ -1,0 +1,161 @@
+//! The block mask `M̂`: which `b x b` blocks of the sparse operand are
+//! non-zero.
+
+use crate::error::{Error, Result};
+
+/// A boolean block mask over a `(mb x kb)` grid of `b x b` blocks.
+///
+/// `mask[r * kb + c]` is `true` iff block `(r, c)` is non-zero. The
+/// element-level mask `M` of the paper is `M_ij = M̂[i/b][j/b]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockMask {
+    /// Number of block rows (`⌈m/b⌉`; we require exact divisibility).
+    pub mb: usize,
+    /// Number of block columns.
+    pub kb: usize,
+    /// Block size `b`.
+    pub b: usize,
+    bits: Vec<bool>,
+}
+
+impl BlockMask {
+    /// An all-zero mask for an `m x k` matrix with block size `b`.
+    pub fn zeros(m: usize, k: usize, b: usize) -> Result<Self> {
+        if b == 0 || m == 0 || k == 0 || m % b != 0 || k % b != 0 {
+            return Err(Error::InvalidFormat(format!(
+                "m={m}, k={k} must be non-zero multiples of b={b}"
+            )));
+        }
+        let (mb, kb) = (m / b, k / b);
+        Ok(Self { mb, kb, b, bits: vec![false; mb * kb] })
+    }
+
+    /// Build from explicit block coordinates.
+    pub fn from_coords(m: usize, k: usize, b: usize, coords: &[(usize, usize)]) -> Result<Self> {
+        let mut mask = Self::zeros(m, k, b)?;
+        for &(r, c) in coords {
+            if r >= mask.mb || c >= mask.kb {
+                return Err(Error::InvalidFormat(format!(
+                    "block ({r},{c}) outside {}x{} grid",
+                    mask.mb, mask.kb
+                )));
+            }
+            mask.bits[r * mask.kb + c] = true;
+        }
+        Ok(mask)
+    }
+
+    /// Element-level matrix height.
+    pub fn m(&self) -> usize {
+        self.mb * self.b
+    }
+
+    /// Element-level matrix width.
+    pub fn k(&self) -> usize {
+        self.kb * self.b
+    }
+
+    /// Is block `(r, c)` non-zero?
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        self.bits[r * self.kb + c]
+    }
+
+    /// Set block `(r, c)`.
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        self.bits[r * self.kb + c] = v;
+    }
+
+    /// Number of non-zero blocks.
+    pub fn nnz_blocks(&self) -> usize {
+        self.bits.iter().filter(|&&x| x).count()
+    }
+
+    /// Number of non-zero *elements* (`nnz_blocks * b^2`).
+    pub fn nnz(&self) -> usize {
+        self.nnz_blocks() * self.b * self.b
+    }
+
+    /// Density `d = nnz / (m * k)` (paper §3).
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.m() as f64 * self.k() as f64)
+    }
+
+    /// Non-zero block coordinates in (row, col) lexicographic order —
+    /// the order the L1 kernel contract requires.
+    pub fn coords(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.nnz_blocks());
+        for r in 0..self.mb {
+            for c in 0..self.kb {
+                if self.bits[r * self.kb + c] {
+                    out.push((r, c));
+                }
+            }
+        }
+        out
+    }
+
+    /// Non-zero blocks per block row.
+    pub fn row_counts(&self) -> Vec<usize> {
+        (0..self.mb)
+            .map(|r| (0..self.kb).filter(|&c| self.bits[r * self.kb + c]).count())
+            .collect()
+    }
+
+    /// Non-zero blocks per block column.
+    pub fn col_counts(&self) -> Vec<usize> {
+        (0..self.kb)
+            .map(|c| (0..self.mb).filter(|&r| self.bits[r * self.kb + c]).count())
+            .collect()
+    }
+
+    /// Number of non-zero blocks with column index in `[c0, c1)` —
+    /// used by the static partitioner to balance k-splits.
+    pub fn nnz_blocks_in_col_range(&self, c0: usize, c1: usize) -> usize {
+        (0..self.mb)
+            .map(|r| (c0..c1).filter(|&c| self.bits[r * self.kb + c]).count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_set() {
+        let mut m = BlockMask::zeros(64, 32, 16).unwrap();
+        assert_eq!((m.mb, m.kb), (4, 2));
+        assert_eq!(m.nnz_blocks(), 0);
+        m.set(1, 1, true);
+        assert!(m.get(1, 1));
+        assert_eq!(m.nnz(), 256);
+        assert!((m.density() - 256.0 / 2048.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_non_divisible() {
+        assert!(BlockMask::zeros(60, 32, 16).is_err());
+        assert!(BlockMask::zeros(0, 32, 16).is_err());
+        assert!(BlockMask::zeros(32, 32, 0).is_err());
+    }
+
+    #[test]
+    fn coords_sorted_row_major() {
+        let m = BlockMask::from_coords(64, 64, 16, &[(3, 0), (0, 2), (0, 1), (2, 3)]).unwrap();
+        assert_eq!(m.coords(), vec![(0, 1), (0, 2), (2, 3), (3, 0)]);
+    }
+
+    #[test]
+    fn from_coords_rejects_out_of_range() {
+        assert!(BlockMask::from_coords(32, 32, 16, &[(2, 0)]).is_err());
+    }
+
+    #[test]
+    fn counts() {
+        let m = BlockMask::from_coords(48, 48, 16, &[(0, 0), (0, 2), (1, 0)]).unwrap();
+        assert_eq!(m.row_counts(), vec![2, 1, 0]);
+        assert_eq!(m.col_counts(), vec![2, 0, 1]);
+        assert_eq!(m.nnz_blocks_in_col_range(0, 1), 2);
+        assert_eq!(m.nnz_blocks_in_col_range(1, 3), 1);
+    }
+}

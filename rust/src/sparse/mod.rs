@@ -1,0 +1,32 @@
+//! Block-sparse matrix formats and pattern generation.
+//!
+//! The paper defines the sparse operand as `(M ⊙ W)` where `M` is a
+//! mask derived from a *block mask* `M̂ ∈ B^{⌈m/b⌉ × ⌈k/b⌉}` with block
+//! size `b ∈ {1, 4, 8, 16}`. The formats here carry the block mask and
+//! the non-zero block values:
+//!
+//! * [`mask::BlockMask`] — the pattern `M̂` alone.
+//! * [`coo::BlockCoo`] — coordinate list of non-zero blocks, the
+//!   canonical interchange format (what the AOT kernels consume).
+//! * [`csr::Csr`] — element-level CSR (the cuSPARSE baseline format).
+//! * [`bsr::Bsr`] — block CSR (the cuSPARSE BSR baseline format and
+//!   the natural layout for block-row traversal).
+//! * [`ell::BlockedEll`] — blocked-ELL (Appendix B of the paper).
+//! * [`patterns`] — random pattern generators used by the benchmarks
+//!   (uniform, banded, row-imbalanced, adversarial for dynamic mode).
+//! * [`dense`] — a plain dense matrix + matmul, the numeric oracle.
+
+pub mod bsr;
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod ell;
+pub mod mask;
+pub mod patterns;
+
+pub use bsr::Bsr;
+pub use coo::BlockCoo;
+pub use csr::Csr;
+pub use dense::Dense;
+pub use ell::BlockedEll;
+pub use mask::BlockMask;

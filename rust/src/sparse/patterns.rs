@@ -1,0 +1,275 @@
+//! Random sparsity-pattern generators for the benchmarks.
+//!
+//! The paper benchmarks "randomly generated sparsity pattern and
+//! values" (§4) — [`uniform`] reproduces that. The other generators
+//! drive the ablation benches: dynamic-mode performance depends on how
+//! evenly non-zeros spread over the fixed `(q^m, q^k)` partition grid
+//! (Appendix A.2's best/worst cases), so we also generate banded,
+//! row-imbalanced and adversarial single-partition patterns.
+
+use crate::error::{Error, Result};
+use crate::sparse::coo::BlockCoo;
+use crate::sparse::mask::BlockMask;
+use crate::util::Rng;
+
+/// Deterministic RNG for reproducible benchmarks.
+pub fn rng(seed: u64) -> Rng {
+    Rng::seed_from_u64(seed)
+}
+
+/// Exactly `nnz_b` blocks placed uniformly at random (no duplicates).
+///
+/// Uses Floyd's sampling algorithm: O(nnz_b) memory even on huge block
+/// grids (an m=k=8192, b=1 grid has 67M cells — materialising and
+/// shuffling it would cost half a gigabyte).
+pub fn uniform(m: usize, k: usize, b: usize, nnz_b: usize, seed: u64) -> Result<BlockMask> {
+    let mask = BlockMask::zeros(m, k, b)?;
+    let total = mask.mb * mask.kb;
+    if nnz_b > total {
+        return Err(Error::InvalidFormat(format!(
+            "nnz_b={nnz_b} exceeds block grid {total}"
+        )));
+    }
+    let mut r = rng(seed);
+    // Dense-ish draws (d > 1/128): rejection sampling over a bitmap is
+    // allocation-light and ~20x faster than hash-set Floyd sampling
+    // (§Perf). Sparse draws keep Floyd's algorithm (O(nnz) memory).
+    let coords: Vec<(usize, usize)> = if nnz_b * 128 >= total {
+        // Mark the smaller of {non-zeros, zeros} so the expected
+        // rejection count stays ≤ 2x the marks (full density would
+        // otherwise degrade to coupon-collecting).
+        let invert = nnz_b > total / 2;
+        let marks = if invert { total - nnz_b } else { nnz_b };
+        let mut used = vec![false; total];
+        let mut placed = 0usize;
+        while placed < marks {
+            let cand = r.below(total);
+            if !used[cand] {
+                used[cand] = true;
+                placed += 1;
+            }
+        }
+        used.iter()
+            .enumerate()
+            .filter(|(_, &u)| u != invert)
+            .map(|(i, _)| (i / mask.kb, i % mask.kb))
+            .collect()
+    } else {
+        let mut chosen = std::collections::HashSet::with_capacity(nnz_b * 2);
+        for i in (total - nnz_b)..total {
+            let cand = r.below(i + 1);
+            if !chosen.insert(cand) {
+                chosen.insert(i);
+            }
+        }
+        debug_assert_eq!(chosen.len(), nnz_b);
+        chosen.into_iter().map(|i| (i / mask.kb, i % mask.kb)).collect()
+    };
+    BlockMask::from_coords(m, k, b, &coords)
+}
+
+/// Pattern with target density `d` (rounded to whole blocks).
+pub fn with_density(m: usize, k: usize, b: usize, d: f64, seed: u64) -> Result<BlockMask> {
+    if !(0.0..=1.0).contains(&d) {
+        return Err(Error::InvalidFormat(format!("density {d} outside [0,1]")));
+    }
+    let total = (m / b) * (k / b);
+    let nnz_b = ((total as f64 * d).round() as usize).clamp(1, total);
+    uniform(m, k, b, nnz_b, seed)
+}
+
+/// Band of width `band_blocks` around the diagonal (plus wraparound),
+/// thinned to `nnz_b` blocks. Models the structured patterns of e.g.
+/// butterfly/banded sparse attention.
+pub fn banded(m: usize, k: usize, b: usize, band_blocks: usize, nnz_b: usize, seed: u64) -> Result<BlockMask> {
+    let mask = BlockMask::zeros(m, k, b)?;
+    let (mb, kb) = (mask.mb, mask.kb);
+    let mut in_band = Vec::new();
+    for r in 0..mb {
+        let center = r * kb / mb;
+        for off in 0..band_blocks.max(1) {
+            in_band.push((r, (center + off) % kb));
+        }
+    }
+    in_band.sort_unstable();
+    in_band.dedup();
+    if nnz_b > in_band.len() {
+        return Err(Error::InvalidFormat(format!(
+            "nnz_b={nnz_b} exceeds band capacity {}",
+            in_band.len()
+        )));
+    }
+    rng(seed).shuffle(&mut in_band);
+    BlockMask::from_coords(m, k, b, &in_band[..nnz_b])
+}
+
+/// Row-imbalanced pattern: block-row weights follow a power law with
+/// exponent `alpha` (0 = uniform; larger = more skew). Stresses the
+/// dynamic mode's bucket overflow / propagation machinery.
+pub fn row_imbalanced(
+    m: usize,
+    k: usize,
+    b: usize,
+    nnz_b: usize,
+    alpha: f64,
+    seed: u64,
+) -> Result<BlockMask> {
+    let mask = BlockMask::zeros(m, k, b)?;
+    let (mb, kb) = (mask.mb, mask.kb);
+    if nnz_b > mb * kb {
+        return Err(Error::InvalidFormat(format!(
+            "nnz_b={nnz_b} exceeds block grid {}",
+            mb * kb
+        )));
+    }
+    let mut r = rng(seed);
+    // Zipf-like row weights.
+    let weights: Vec<f64> = (0..mb).map(|i| 1.0 / ((i + 1) as f64).powf(alpha)).collect();
+    let total_w: f64 = weights.iter().sum();
+    let mut coords = Vec::with_capacity(nnz_b);
+    let mut used = vec![false; mb * kb];
+    let mut placed = 0;
+    // Rejection-sample rows by weight, columns uniformly.
+    let mut attempts = 0usize;
+    while placed < nnz_b {
+        attempts += 1;
+        if attempts > nnz_b * 1000 {
+            // Dense fallback: fill remaining cells deterministically.
+            for i in 0..mb * kb {
+                if placed == nnz_b {
+                    break;
+                }
+                if !used[i] {
+                    used[i] = true;
+                    coords.push((i / kb, i % kb));
+                    placed += 1;
+                }
+            }
+            break;
+        }
+        let mut t = r.f64() * total_w;
+        let mut row = 0;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                row = i;
+                break;
+            }
+        }
+        let col = r.below(kb);
+        if !used[row * kb + col] {
+            used[row * kb + col] = true;
+            coords.push((row, col));
+            placed += 1;
+        }
+    }
+    BlockMask::from_coords(m, k, b, &coords)
+}
+
+/// Adversarial worst case for dynamic sparsity (Appendix A.2 / Fig 6b):
+/// all `nnz_b` blocks packed into the top-left corner so they land in a
+/// single `(q^m, q^k)` partition, forcing maximal propagation.
+pub fn corner_packed(m: usize, k: usize, b: usize, nnz_b: usize) -> Result<BlockMask> {
+    let mask = BlockMask::zeros(m, k, b)?;
+    let (mb, kb) = (mask.mb, mask.kb);
+    if nnz_b > mb * kb {
+        return Err(Error::InvalidFormat(format!(
+            "nnz_b={nnz_b} exceeds block grid {}",
+            mb * kb
+        )));
+    }
+    // Fill a near-square corner region row-major.
+    let side = (nnz_b as f64).sqrt().ceil() as usize;
+    let w = side.min(kb);
+    let coords: Vec<(usize, usize)> = (0..nnz_b).map(|i| (i / w, i % w)).collect();
+    if coords.iter().any(|&(r, _)| r >= mb) {
+        return Err(Error::InvalidFormat("corner region exceeds rows".into()));
+    }
+    BlockMask::from_coords(m, k, b, &coords)
+}
+
+/// Fill a mask with deterministic pseudo-random standard-normal-ish
+/// values (Box-Muller over ChaCha), producing the BlockCoo the
+/// runtime/oracle consume.
+pub fn with_values(mask: &BlockMask, seed: u64) -> BlockCoo {
+    let mut r = rng(seed ^ 0x9e3779b97f4a7c15);
+    let n = mask.nnz_blocks() * mask.b * mask.b;
+    let mut values = Vec::with_capacity(n);
+    while values.len() < n {
+        values.push(r.normal() as f32);
+    }
+    BlockCoo::from_mask_values(mask, values).expect("value count matches mask")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_exact_count_and_determinism() {
+        let a = uniform(256, 256, 16, 37, 42).unwrap();
+        let b2 = uniform(256, 256, 16, 37, 42).unwrap();
+        assert_eq!(a.nnz_blocks(), 37);
+        assert_eq!(a, b2, "same seed must reproduce the same pattern");
+        let c = uniform(256, 256, 16, 37, 43).unwrap();
+        assert_ne!(a, c, "different seed should differ");
+    }
+
+    #[test]
+    fn uniform_rejects_overfull() {
+        assert!(uniform(32, 32, 16, 5, 0).is_err());
+    }
+
+    #[test]
+    fn with_density_rounds_to_blocks() {
+        let m = with_density(256, 256, 16, 1.0 / 16.0, 7).unwrap();
+        assert_eq!(m.nnz_blocks(), 16); // 256 blocks * 1/16
+        assert!((m.density() - 1.0 / 16.0).abs() < 1e-9);
+        // full density
+        let f = with_density(64, 64, 16, 1.0, 7).unwrap();
+        assert_eq!(f.nnz_blocks(), 16);
+    }
+
+    #[test]
+    fn banded_stays_near_diagonal() {
+        let m = banded(128, 128, 16, 2, 10, 3).unwrap();
+        assert_eq!(m.nnz_blocks(), 10);
+        for (r, c) in m.coords() {
+            let center = r; // mb == kb here
+            let dist = (c + m.kb - center) % m.kb;
+            assert!(dist < 2, "block ({r},{c}) outside band");
+        }
+    }
+
+    #[test]
+    fn row_imbalanced_skews_rows() {
+        let m = row_imbalanced(512, 512, 16, 128, 2.0, 5).unwrap();
+        assert_eq!(m.nnz_blocks(), 128);
+        let counts = m.row_counts();
+        // with alpha=2 the first rows must hold far more than the last.
+        let head: usize = counts[..4].iter().sum();
+        let tail: usize = counts[counts.len() - 4..].iter().sum();
+        assert!(head > tail, "expected head-heavy skew: head={head} tail={tail}");
+    }
+
+    #[test]
+    fn corner_packed_is_cornered() {
+        let m = corner_packed(256, 256, 16, 9).unwrap();
+        assert_eq!(m.nnz_blocks(), 9);
+        for (r, c) in m.coords() {
+            assert!(r < 3 && c < 3);
+        }
+    }
+
+    #[test]
+    fn with_values_deterministic_and_sized() {
+        let mask = uniform(64, 64, 16, 5, 1).unwrap();
+        let a = with_values(&mask, 9);
+        let b2 = with_values(&mask, 9);
+        assert_eq!(a, b2);
+        assert_eq!(a.values.len(), 5 * 256);
+        // roughly standard-normal: mean near 0, some spread
+        let mean: f32 = a.values.iter().sum::<f32>() / a.values.len() as f32;
+        assert!(mean.abs() < 0.2, "mean {mean} too far from 0");
+    }
+}

@@ -1,0 +1,302 @@
+//! `popsparse::static_::sparseDenseMatMul` — the compile-time-pattern
+//! sparse-dense matmul (paper §3.2).
+//!
+//! At plan time the pattern is fully known: the partitioner splits the
+//! non-zero blocks over the k dimension into `q_k` *uneven* partitions
+//! balancing nnz, and the dense operand over n into `q_n` partitions.
+//! Values are re-ordered host-side to match the tile distribution, so
+//! no weight exchange happens on device; execution is a single compute
+//! superstep plus the output reduction.
+
+pub mod partition;
+
+use crate::error::{Error, Result};
+use crate::sim::chip::{CostModel, IpuSpec};
+use crate::sim::{compute, exchange, execute, Cost, MemoryPlan, Program, Superstep};
+use crate::sparse::mask::BlockMask;
+use crate::DType;
+use partition::{balance_k_stats, KPartition, MaskStats};
+
+/// A planned static sparse-dense matmul.
+#[derive(Debug, Clone)]
+pub struct StaticPlan {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub b: usize,
+    pub nnz_blocks: usize,
+    pub dtype: DType,
+    pub q_k: usize,
+    pub q_n: usize,
+    /// The chosen uneven k-partitions.
+    pub partitions: Vec<KPartition>,
+    pub program: Program,
+    pub cost: Cost,
+    pub memory: MemoryPlan,
+}
+
+impl StaticPlan {
+    /// Density of the planned operand.
+    pub fn density(&self) -> f64 {
+        (self.nnz_blocks * self.b * self.b) as f64 / (self.m as f64 * self.k as f64)
+    }
+
+    /// Achieved TFLOP/s, non-zeros only (paper §3).
+    pub fn tflops(&self, spec: &IpuSpec) -> f64 {
+        crate::tflops(
+            crate::spmm_flops(self.m, self.k, self.n, self.density()),
+            self.cost.total(),
+            spec.clock_hz,
+        )
+    }
+}
+
+use crate::sim::chip::candidate_splits;
+
+/// Cost one `(q_k, q_n)` candidate against precomputed partitions.
+#[allow(clippy::too_many_arguments)]
+fn build_program(
+    mask: &BlockMask,
+    parts: &[KPartition],
+    n: usize,
+    dtype: DType,
+    q_k: usize,
+    q_n: usize,
+    spec: &IpuSpec,
+    cm: &CostModel,
+) -> Result<(Program, Cost, MemoryPlan)> {
+    let tiles = q_k * q_n;
+    if tiles > spec.tiles {
+        return Err(Error::Plan(format!("{tiles} partitions exceed {} tiles", spec.tiles)));
+    }
+    let b = mask.b;
+    let dsize = dtype.size();
+    let tn = n.div_ceil(q_n);
+    let worst = parts
+        .iter()
+        .max_by_key(|p| p.nnz_blocks)
+        .expect("q_k >= 1 yields at least one partition")
+        .clone();
+    let max_kwidth = parts.iter().map(|p| p.k_width(b)).max().unwrap_or(0);
+
+    // --- Memory -------------------------------------------------------
+    // Chip level: one copy of the non-zero values + metadata, the dense
+    // operand, the partial accumulators (touched rows only — static
+    // mode's saving) and the output. (nnz comes from the partitions:
+    // recounting the mask here is an O(mb·kb) scan per candidate.)
+    let nnz_blocks_total: usize = parts.iter().map(|p| p.nnz_blocks).sum();
+    let total_partial_rows: usize = parts.iter().map(|p| p.touched_block_rows * b).sum();
+    let mut mem = MemoryPlan::new();
+    mem.alloc("nz_values", nnz_blocks_total * b * b * dsize);
+    mem.alloc("meta_info", nnz_blocks_total * 4);
+    mem.alloc("x_total", mask.k() * n * dsize);
+    // With q_k = 1 the accumulators ARE the output; otherwise partials
+    // are reduced in bounded stages (at most one extra live copy of
+    // the touched-row volume, capped by one copy of the output).
+    if q_k > 1 {
+        mem.alloc("partials", (total_partial_rows * n * dsize).min(mask.m() * n * dsize));
+    }
+    mem.alloc("y_total", mask.m() * n * dsize);
+    mem.check_chip(spec)?;
+    // Per tile: the partition's values/meta are resident; the partial
+    // accumulator and X slab stream the batch dimension in chunks of
+    // `tn_chunk` columns so the worst tile fits its SRAM. Each chunk
+    // repeats the exchange/compute/reduce phase sequence.
+    let fixed_bytes = worst.nnz_blocks * b * b * dsize + worst.nnz_blocks * 4 + 32 * 1024;
+    let avail = spec.sram_per_tile * 9 / 10;
+    if fixed_bytes >= avail {
+        return Err(Error::OutOfMemory { required_bytes: fixed_bytes, available_bytes: avail });
+    }
+    let per_col_bytes = (worst.touched_block_rows * b + max_kwidth) * dsize;
+    let tn_chunk = if per_col_bytes == 0 {
+        tn
+    } else {
+        ((avail - fixed_bytes) / per_col_bytes).min(tn).max(1)
+    };
+    let n_chunks = (tn as u64).div_ceil(tn_chunk as u64);
+    let mut tile_mem = MemoryPlan::new();
+    tile_mem.alloc("nz_values", worst.nnz_blocks * b * b * dsize);
+    tile_mem.alloc("meta_info", worst.nnz_blocks * 4);
+    tile_mem.alloc("partials", worst.touched_block_rows * b * tn_chunk * dsize);
+    tile_mem.alloc("x_slab", max_kwidth * tn_chunk * dsize);
+    tile_mem.check(spec)?;
+
+    // --- BSP program (repeated per n-chunk) ---------------------------
+    let mut prog = Program::new(tiles);
+    // 1. Dense input exchange: each tile receives the X rows of its
+    //    k-range and n-chunk. Weight values were pre-placed host-side
+    //    (static mode's key saving: no weight exchange, Fig 1 a.1).
+    prog.push(
+        Superstep::exchange("x-exchange", exchange::slab_bytes(max_kwidth, tn_chunk, dsize))
+            .repeated(n_chunks),
+    );
+    // 2. On-tile sparse matmul over the balanced nnz.
+    let macs = (worst.nnz_blocks * b * b) as u64 * tn_chunk as u64;
+    prog.push(
+        Superstep::compute(
+            "spmm",
+            compute::sparse_matmul_cycles(
+                macs,
+                worst.nnz_blocks as u64,
+                b,
+                tn_chunk as u64,
+                dtype,
+                spec,
+                cm,
+            ),
+        )
+        .repeated(n_chunks),
+    );
+    // 3. Reduce partials across the q_k partitions (Fig 1 a.2). Static
+    //    mode only exchanges rows that were actually touched.
+    if q_k > 1 {
+        // Reduction spread over the q_k tiles of each n-group: each
+        // receives its share of every other tile's touched rows.
+        let per_tile_elems = (total_partial_rows as u64 * tn_chunk as u64).div_ceil(q_k as u64);
+        let bytes = per_tile_elems * (q_k as u64 - 1) / (q_k as u64) * dsize as u64;
+        let adds = per_tile_elems;
+        prog.push(
+            Superstep::mixed("reduce", compute::reduce_cycles(adds, cm), bytes)
+                .repeated(n_chunks),
+        );
+    }
+    let cost = execute(&prog, spec);
+    Ok((prog, cost, mem))
+}
+
+/// Plan a static sparse-dense matmul for a known pattern.
+pub fn plan(
+    mask: &BlockMask,
+    n: usize,
+    dtype: DType,
+    spec: &IpuSpec,
+    cm: &CostModel,
+) -> Result<StaticPlan> {
+    if n == 0 {
+        return Err(Error::Plan("zero batch".into()));
+    }
+    if mask.nnz_blocks() == 0 {
+        return Err(Error::Plan("empty sparsity pattern".into()));
+    }
+    let mut best: Option<StaticPlan> = None;
+    let mut last_oom = None;
+    // One O(mb*kb) scan of the mask; every candidate below reuses it.
+    let stats = MaskStats::of(mask);
+    for &q_k in &candidate_splits(mask.kb, spec.tiles) {
+        // Partitions depend only on q_k: compute once per q_k.
+        let partitions = balance_k_stats(&stats, q_k);
+        for &q_n in &candidate_splits(n, spec.tiles / q_k) {
+            match build_program(mask, &partitions, n, dtype, q_k, q_n, spec, cm) {
+                Ok((program, cost, memory)) => {
+                    let better =
+                        best.as_ref().map(|p| cost.total() < p.cost.total()).unwrap_or(true);
+                    if better {
+                        best = Some(StaticPlan {
+                            m: mask.m(),
+                            k: mask.k(),
+                            n,
+                            b: mask.b,
+                            nnz_blocks: mask.nnz_blocks(),
+                            dtype,
+                            q_k,
+                            q_n,
+                            partitions: partitions.clone(),
+                            program,
+                            cost,
+                            memory,
+                        });
+                    }
+                }
+                Err(e @ Error::OutOfMemory { .. }) => last_oom = Some(e),
+                Err(_) => {}
+            }
+        }
+    }
+    best.ok_or_else(|| last_oom.unwrap_or_else(|| Error::Plan("no feasible static plan".into())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::patterns;
+
+    fn env() -> (IpuSpec, CostModel) {
+        (IpuSpec::default(), CostModel::default())
+    }
+
+    fn paper_mask(b: usize, inv_d: usize) -> BlockMask {
+        patterns::with_density(4096, 4096, b, 1.0 / inv_d as f64, 42).unwrap()
+    }
+
+    #[test]
+    fn beats_dense_at_paper_config() {
+        // Table 3: m=k=4096, d=1/16, b=16, FP16 → static/dense ≈ 4.9.
+        let (spec, cm) = env();
+        let mask = paper_mask(16, 16);
+        let n = 8192;
+        let sp = plan(&mask, n, DType::Fp16, &spec, &cm).unwrap();
+        let dn = crate::dense_::plan(4096, 4096, n, DType::Fp16, &spec, &cm).unwrap();
+        let speedup = dn.cost.total() as f64 / sp.cost.total() as f64;
+        assert!((2.0..9.0).contains(&speedup), "speedup {speedup}");
+    }
+
+    #[test]
+    fn unstructured_slower_than_dense_at_d16() {
+        // Table 3: b=1, FP16, d=1/16 → static/dense ≈ 0.7 (< 1).
+        let (spec, cm) = env();
+        let mask = paper_mask(1, 16);
+        let n = 8192;
+        let sp = plan(&mask, n, DType::Fp16, &spec, &cm).unwrap();
+        let dn = crate::dense_::plan(4096, 4096, n, DType::Fp16, &spec, &cm).unwrap();
+        let speedup = dn.cost.total() as f64 / sp.cost.total() as f64;
+        assert!(speedup < 1.5, "b=1 speedup {speedup} should be near or below 1");
+    }
+
+    #[test]
+    fn block_size_monotone() {
+        let (spec, cm) = env();
+        let n = 4096;
+        let mut last = f64::MAX;
+        for b in [1usize, 4, 8, 16] {
+            let mask = paper_mask(b, 16);
+            let p = plan(&mask, n, DType::Fp16, &spec, &cm).unwrap();
+            let cyc = p.cost.total() as f64;
+            assert!(cyc < last, "b={b} must be faster than smaller blocks");
+            last = cyc;
+        }
+    }
+
+    #[test]
+    fn fp32_speedup_exceeds_fp16() {
+        // §5.2: FLOP savings count more in FP32.
+        let (spec, cm) = env();
+        let mask = paper_mask(16, 16);
+        let n = 4096;
+        let ratio = |dt| {
+            let sp = plan(&mask, n, dt, &spec, &cm).unwrap();
+            let dn = crate::dense_::plan(4096, 4096, n, dt, &spec, &cm).unwrap();
+            dn.cost.total() as f64 / sp.cost.total() as f64
+        };
+        assert!(ratio(DType::Fp32) > ratio(DType::Fp16));
+    }
+
+    #[test]
+    fn rejects_empty_and_zero_batch() {
+        let (spec, cm) = env();
+        let empty = BlockMask::zeros(64, 64, 16).unwrap();
+        assert!(plan(&empty, 64, DType::Fp16, &spec, &cm).is_err());
+        let mask = patterns::uniform(64, 64, 16, 4, 0).unwrap();
+        assert!(plan(&mask, 0, DType::Fp16, &spec, &cm).is_err());
+    }
+
+    #[test]
+    fn plan_metadata_consistent() {
+        let (spec, cm) = env();
+        let mask = patterns::uniform(512, 512, 8, 300, 9).unwrap();
+        let p = plan(&mask, 256, DType::Fp32, &spec, &cm).unwrap();
+        assert_eq!(p.partitions.len(), p.q_k);
+        assert_eq!(p.nnz_blocks, 300);
+        assert!(p.q_k * p.q_n <= spec.tiles);
+        assert!(p.tflops(&spec) > 0.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Static-mode partitioning: nnz-balanced, *uneven* splits of the k
+//! dimension (paper §3.2 / Fig. 1a).
+//!
+//! Because the sparsity pattern is known at compile time, the
+//! partitioner can place cut points so every partition holds (nearly)
+//! the same number of non-zero blocks — the property that removes
+//! dynamic mode's overflow/propagation machinery entirely.
+
+use crate::sparse::mask::BlockMask;
+
+/// One k-partition: a half-open block-column range and its contents.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KPartition {
+    /// Block-column range `[c0, c1)`.
+    pub c0: usize,
+    pub c1: usize,
+    /// Non-zero blocks inside the range.
+    pub nnz_blocks: usize,
+    /// Distinct block rows touched (determines reduction volume).
+    pub touched_block_rows: usize,
+}
+
+impl KPartition {
+    /// Width in elements.
+    pub fn k_width(&self, b: usize) -> usize {
+        (self.c1 - self.c0) * b
+    }
+}
+
+/// Precomputed mask statistics shared across partition candidates —
+/// the planner evaluates many `q_k` values against one mask, so the
+/// O(mb·kb) scans happen once, not per candidate.
+#[derive(Debug, Clone)]
+pub struct MaskStats {
+    pub mb: usize,
+    pub kb: usize,
+    /// Non-zero blocks per block column.
+    pub col_counts: Vec<usize>,
+    /// All non-zero coordinates, (row, col) sorted.
+    pub coords: Vec<(usize, usize)>,
+}
+
+impl MaskStats {
+    pub fn of(mask: &BlockMask) -> Self {
+        // Single row-major pass for both statistics (mask.col_counts()
+        // alone walks the grid column-major — a cache-hostile stride).
+        let mut col_counts = vec![0usize; mask.kb];
+        let mut coords = Vec::with_capacity(mask.nnz_blocks());
+        for r in 0..mask.mb {
+            for c in 0..mask.kb {
+                if mask.get(r, c) {
+                    col_counts[c] += 1;
+                    coords.push((r, c));
+                }
+            }
+        }
+        Self { mb: mask.mb, kb: mask.kb, col_counts, coords }
+    }
+}
+
+/// Split the mask's block columns into `q_k` contiguous ranges with
+/// balanced non-zero block counts (greedy over the column prefix sum).
+pub fn balance_k(mask: &BlockMask, q_k: usize) -> Vec<KPartition> {
+    balance_k_stats(&MaskStats::of(mask), q_k)
+}
+
+/// [`balance_k`] against precomputed [`MaskStats`] (one O(nnz) pass).
+pub fn balance_k_stats(stats: &MaskStats, q_k: usize) -> Vec<KPartition> {
+    assert!(q_k >= 1);
+    let total: usize = stats.col_counts.iter().sum();
+    // Cannot split finer than block columns; extra partitions idle.
+    let eff_q_k = q_k.min(stats.kb);
+
+    // 1. Choose cut points greedily on the column prefix sum.
+    let mut cuts = Vec::with_capacity(eff_q_k + 1); // partition boundaries
+    cuts.push(0);
+    let mut acc = 0usize;
+    let mut assigned = 0usize;
+    for c in 0..stats.kb {
+        acc += stats.col_counts[c];
+        let remaining_parts = eff_q_k - (cuts.len() - 1);
+        let remaining_cols = stats.kb - (c + 1);
+        // Close the partition when we reach the running target, or when
+        // we must leave one column per remaining partition.
+        let target = (total - assigned) as f64 / remaining_parts as f64;
+        let close = remaining_parts > 1
+            && (acc as f64 >= target || remaining_cols < remaining_parts - 1);
+        if close || c == stats.kb - 1 {
+            cuts.push(c + 1);
+            assigned += acc;
+            acc = 0;
+            if cuts.len() == eff_q_k + 1 {
+                break;
+            }
+        }
+    }
+    if *cuts.last().expect("cuts always starts with 0") != stats.kb {
+        cuts.push(stats.kb);
+    }
+
+    // 2. One pass over the coordinates: count nnz and touched rows per
+    //    partition (coords are row-sorted, so "touched" is a run test).
+    //    A direct column→partition lookup table replaces a per-coord
+    //    binary search (§Perf: 3-4x on unstructured b=1 planning).
+    let nparts = cuts.len() - 1;
+    let mut col_part = vec![0u32; stats.kb];
+    for p in 0..nparts {
+        for c in cuts[p]..cuts[p + 1] {
+            col_part[c] = p as u32;
+        }
+    }
+    let mut nnz = vec![0usize; nparts];
+    let mut touched = vec![0usize; nparts];
+    let mut last_row_seen = vec![usize::MAX; nparts];
+    for &(r, c) in &stats.coords {
+        let p = col_part[c] as usize;
+        nnz[p] += 1;
+        if last_row_seen[p] != r {
+            last_row_seen[p] = r;
+            touched[p] += 1;
+        }
+    }
+
+    let mut parts: Vec<KPartition> = (0..nparts)
+        .map(|p| KPartition {
+            c0: cuts[p],
+            c1: cuts[p + 1],
+            nnz_blocks: nnz[p],
+            touched_block_rows: touched[p],
+        })
+        .collect();
+    // If columns ran out before q_k partitions, pad with empty ranges
+    // so callers can rely on the length (those tiles simply idle).
+    while parts.len() < q_k {
+        parts.push(KPartition { c0: stats.kb, c1: stats.kb, nnz_blocks: 0, touched_block_rows: 0 });
+    }
+    parts
+}
+
+/// Largest partition nnz divided by the ideal (1.0 = perfectly even).
+pub fn imbalance(parts: &[KPartition]) -> f64 {
+    let total: usize = parts.iter().map(|p| p.nnz_blocks).sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let max = parts.iter().map(|p| p.nnz_blocks).max().unwrap_or(0);
+    max as f64 * parts.len() as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::patterns;
+
+    #[test]
+    fn covers_all_columns_disjointly() {
+        let mask = patterns::uniform(512, 512, 16, 100, 3).unwrap();
+        let parts = balance_k(&mask, 8);
+        assert_eq!(parts.len(), 8);
+        assert_eq!(parts[0].c0, 0);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].c1, w[1].c0, "ranges must be contiguous");
+        }
+        assert_eq!(parts.last().unwrap().c1, mask.kb);
+        let total: usize = parts.iter().map(|p| p.nnz_blocks).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn balances_uniform_patterns_well() {
+        let mask = patterns::uniform(2048, 2048, 16, 2048, 5).unwrap();
+        let parts = balance_k(&mask, 16);
+        assert!(imbalance(&parts) < 1.3, "imbalance {}", imbalance(&parts));
+    }
+
+    #[test]
+    fn adapts_to_skewed_patterns() {
+        // All nnz in the left quarter of the columns: static cuts must
+        // concentrate there, keeping balance far better than even splits.
+        let mask = patterns::corner_packed(1024, 1024, 16, 256).unwrap();
+        let parts = balance_k(&mask, 8);
+        assert!(imbalance(&parts) < 1.6, "imbalance {}", imbalance(&parts));
+        // Even (dynamic-style) splits would put everything in the first
+        // one or two partitions: imbalance ≈ q_k.
+    }
+
+    #[test]
+    fn q_k_larger_than_columns() {
+        let mask = patterns::uniform(64, 64, 16, 6, 1).unwrap(); // kb = 4
+        let parts = balance_k(&mask, 8);
+        assert_eq!(parts.len(), 8);
+        let nnz: usize = parts.iter().map(|p| p.nnz_blocks).sum();
+        assert_eq!(nnz, 6);
+        // padded partitions are empty
+        assert_eq!(parts[7].nnz_blocks, 0);
+    }
+
+    #[test]
+    fn single_partition() {
+        let mask = patterns::uniform(128, 128, 16, 10, 2).unwrap();
+        let parts = balance_k(&mask, 1);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].nnz_blocks, 10);
+        assert_eq!((parts[0].c0, parts[0].c1), (0, mask.kb));
+    }
+
+    #[test]
+    fn touched_rows_counted() {
+        let mask = crate::sparse::BlockMask::from_coords(
+            64,
+            64,
+            16,
+            &[(0, 0), (1, 0), (1, 1), (3, 3)],
+        )
+        .unwrap();
+        let parts = balance_k(&mask, 2);
+        // cols {0} touch rows {0,1}; cols {1..4} touch rows {1,3}: row 1
+        // produces partials in both partitions.
+        assert_eq!(parts.iter().map(|p| p.touched_block_rows).sum::<usize>(), 4);
+    }
+}

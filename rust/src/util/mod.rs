@@ -1,0 +1,8 @@
+//! Small self-contained utilities (the build is fully offline, so we
+//! carry no external dependencies beyond the `xla` bindings).
+
+pub mod json;
+pub mod rng;
+pub mod timing;
+
+pub use rng::Rng;

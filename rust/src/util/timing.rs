@@ -1,0 +1,113 @@
+//! Tiny benchmarking harness (the offline build has no criterion).
+//!
+//! Used by the `rust/benches/*` targets (`harness = false`): warmup,
+//! repeated timed runs, robust summary statistics.
+
+use std::time::{Duration, Instant};
+
+/// Summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iterations: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    /// Mean time in nanoseconds.
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e9
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12} {:>12} {:>12} {:>12}   x{}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.median),
+            fmt_dur(self.min),
+            fmt_dur(self.max),
+            self.iterations,
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_secs_f64() * 1e9;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print the table header matching [`Stats`]'s Display.
+pub fn print_header() {
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>12}   iters",
+        "benchmark", "mean", "median", "min", "max"
+    );
+    println!("{}", "-".repeat(110));
+}
+
+/// Run `f` repeatedly: a few warmup calls, then timed iterations until
+/// `budget` is spent (at least `min_iters`).
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, min_iters: usize, mut f: F) -> Stats {
+    // Warmup.
+    for _ in 0..2 {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || (start.elapsed() < budget && samples.len() < 10_000) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    let stats = Stats {
+        name: name.to_string(),
+        iterations: samples.len(),
+        mean: total / samples.len() as u32,
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: *samples.last().expect("at least min_iters samples"),
+    };
+    println!("{stats}");
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples() {
+        let mut counter = 0u64;
+        let s = bench("noop", Duration::from_millis(5), 10, || {
+            counter = counter.wrapping_add(1);
+        });
+        assert!(s.iterations >= 10);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(counter > 0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

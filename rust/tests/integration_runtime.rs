@@ -1,0 +1,158 @@
+//! Integration: AOT artifacts (Python-built HLO text) execute on the
+//! Rust PJRT runtime and agree with the pure-Rust oracle.
+//!
+//! Requires `make artifacts` (the Makefile runs it before `cargo test`).
+
+use popsparse::runtime::{Arg, Runtime};
+use popsparse::sparse::patterns;
+use popsparse::util::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` before `cargo test`")
+}
+
+fn random_x(k: usize, n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::seed_from_u64(seed);
+    (0..k * n).map(|_| r.normal() as f32).collect()
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let rt = runtime();
+    let names: Vec<&str> =
+        rt.manifest().artifacts.iter().map(|a| a.name.as_str()).collect();
+    for expect in
+        ["spmm_quickstart", "spmm_512_b16_d8", "spmm_256_b4_d16", "spmm_128_b1_d16", "dense_256", "mlp_512x512_b16_d8"]
+    {
+        assert!(names.contains(&expect), "missing artifact {expect}; have {names:?}");
+    }
+}
+
+#[test]
+fn spmm_artifacts_match_oracle() {
+    let rt = runtime();
+    for name in ["spmm_quickstart", "spmm_256_b4_d16", "spmm_128_b1_d16"] {
+        let meta = rt.manifest().get(name).unwrap().clone();
+        let mask = patterns::uniform(meta.m, meta.k, meta.b, meta.nnz_b, 11).unwrap();
+        let coo = patterns::with_values(&mask, 11);
+        let x = random_x(meta.k, meta.n, 13);
+        let y = rt.execute_spmm(name, &coo, &x).unwrap();
+        let expect = coo.spmm_dense(&x, meta.n).unwrap();
+        assert_eq!(y.len(), expect.len(), "{name}: wrong output size");
+        let max_err = y
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "{name}: max err {max_err}");
+    }
+}
+
+#[test]
+fn spmm_artifact_handles_multiple_patterns_without_recompile() {
+    // The block coordinate arrays are runtime operands: one compiled
+    // artifact serves any pattern with the same nnz count (this is the
+    // numeric analogue of the dynamic mode's fixed buckets).
+    let rt = runtime();
+    let meta = rt.manifest().get("spmm_quickstart").unwrap().clone();
+    for seed in [1u64, 2, 3] {
+        let mask = patterns::uniform(meta.m, meta.k, meta.b, meta.nnz_b, seed).unwrap();
+        let coo = patterns::with_values(&mask, seed);
+        let x = random_x(meta.k, meta.n, seed + 100);
+        let y = rt.execute_spmm("spmm_quickstart", &coo, &x).unwrap();
+        let expect = coo.spmm_dense(&x, meta.n).unwrap();
+        let max_err = y
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "seed {seed}: max err {max_err}");
+    }
+}
+
+#[test]
+fn dense_artifact_matches_oracle() {
+    let rt = runtime();
+    let meta = rt.manifest().get("dense_256").unwrap().clone();
+    let mut r = Rng::seed_from_u64(5);
+    let a: Vec<f32> = (0..meta.m * meta.k).map(|_| r.normal() as f32).collect();
+    let x = random_x(meta.k, meta.n, 6);
+    let y = rt.execute("dense_256", &[Arg::F32(&a), Arg::F32(&x)]).unwrap();
+    // oracle
+    let ad = popsparse::sparse::Dense::from_vec(meta.m, meta.k, a).unwrap();
+    let xd = popsparse::sparse::Dense::from_vec(meta.k, meta.n, x).unwrap();
+    let expect = ad.matmul(&xd).unwrap();
+    let max_err = y
+        .iter()
+        .zip(&expect.data)
+        .map(|(p, q)| (p - q).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-2, "max err {max_err}");
+}
+
+#[test]
+fn mlp_artifact_matches_composed_oracle() {
+    let rt = runtime();
+    let name = "mlp_512x512_b16_d8";
+    let meta = rt.manifest().get(name).unwrap().clone();
+    // Two layers, each (blocks, rows, cols); final arg is x.
+    let l0_mask = patterns::uniform(512, 512, 16, 128, 21).unwrap();
+    let l1_mask = patterns::uniform(512, 512, 16, 128, 22).unwrap();
+    let l0 = patterns::with_values(&l0_mask, 21);
+    let l1 = patterns::with_values(&l1_mask, 22);
+    let n = meta.n;
+    let x = random_x(512, n, 23);
+    let to_i32 = |v: &[u32]| v.iter().map(|&u| u as i32).collect::<Vec<i32>>();
+    let (r0, c0) = (to_i32(&l0.block_rows), to_i32(&l0.block_cols));
+    let (r1, c1) = (to_i32(&l1.block_rows), to_i32(&l1.block_cols));
+    let y = rt
+        .execute(
+            name,
+            &[
+                Arg::F32(&l0.values),
+                Arg::I32(&r0),
+                Arg::I32(&c0),
+                Arg::F32(&l1.values),
+                Arg::I32(&r1),
+                Arg::I32(&c1),
+                Arg::F32(&x),
+            ],
+        )
+        .unwrap();
+    // Oracle: spmm -> relu -> spmm.
+    let h = l0.spmm_dense(&x, n).unwrap();
+    let h: Vec<f32> = h.into_iter().map(|v| v.max(0.0)).collect();
+    let expect = l1.spmm_dense(&h, n).unwrap();
+    let max_err = y
+        .iter()
+        .zip(&expect)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-2, "max err {max_err}");
+}
+
+#[test]
+fn runtime_rejects_mismatched_args() {
+    let rt = runtime();
+    let meta = rt.manifest().get("spmm_quickstart").unwrap().clone();
+    // wrong arg count
+    assert!(rt.execute("spmm_quickstart", &[]).is_err());
+    // wrong shape
+    let bad = vec![0f32; 3];
+    let rows = vec![0i32; meta.nnz_b];
+    let cols = vec![0i32; meta.nnz_b];
+    let x = vec![0f32; meta.k * meta.n];
+    assert!(rt
+        .execute(
+            "spmm_quickstart",
+            &[Arg::F32(&bad), Arg::I32(&rows), Arg::I32(&cols), Arg::F32(&x)]
+        )
+        .is_err());
+    // wrong pattern size for execute_spmm
+    let mask = patterns::uniform(meta.m, meta.k, meta.b, meta.nnz_b / 2, 1).unwrap();
+    let coo = patterns::with_values(&mask, 1);
+    assert!(rt.execute_spmm("spmm_quickstart", &coo, &x).is_err());
+    // unknown artifact
+    assert!(rt.execute("nope", &[]).is_err());
+}

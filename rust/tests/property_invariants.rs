@@ -1,0 +1,211 @@
+//! Property-based tests over randomized inputs: planner and host-
+//! utility invariants that must hold for *every* pattern, not just the
+//! handful in unit tests. (The offline build has no proptest crate;
+//! these sweeps use the crate's deterministic RNG and many seeds —
+//! same methodology, explicit generators.)
+
+use popsparse::dynamic_::{host, planner};
+use popsparse::sim::chip::{CostModel, IpuSpec};
+use popsparse::sparse::{patterns, BlockMask, Bsr, Csr};
+use popsparse::static_::partition::{balance_k, imbalance};
+use popsparse::util::Rng;
+use popsparse::DType;
+
+fn env() -> (IpuSpec, CostModel) {
+    (IpuSpec::default(), CostModel::default())
+}
+
+/// Random problem generator for the sweeps.
+fn random_mask(r: &mut Rng) -> BlockMask {
+    let b = [1usize, 4, 8, 16][r.below(4)];
+    let mb = r.range(1, 40);
+    let kb = r.range(1, 40);
+    let total = mb * kb;
+    let nnz = r.range(1, total + 1);
+    patterns::uniform(mb * b, kb * b, b, nnz, r.next_u64()).unwrap()
+}
+
+#[test]
+fn property_partition_conservation_and_coverage() {
+    // For any mask and q_k: partitions are contiguous, cover all
+    // columns, and conserve the non-zero count.
+    let mut r = Rng::seed_from_u64(0xA11CE);
+    for _ in 0..60 {
+        let mask = random_mask(&mut r);
+        let q_k = r.range(1, 33);
+        let parts = balance_k(&mask, q_k);
+        assert_eq!(parts.len(), q_k);
+        assert_eq!(parts[0].c0, 0);
+        for w in parts.windows(2) {
+            assert!(w[0].c1 == w[1].c0 || w[1].c0 == mask.kb, "contiguous ranges");
+        }
+        let nnz: usize = parts.iter().map(|p| p.nnz_blocks).sum();
+        assert_eq!(nnz, mask.nnz_blocks(), "nnz conserved");
+        let touched: usize = parts.iter().map(|p| p.touched_block_rows).sum();
+        assert!(touched >= if mask.nnz_blocks() > 0 { 1 } else { 0 });
+        assert!(touched <= mask.nnz_blocks());
+    }
+}
+
+#[test]
+fn property_static_balance_beats_even_splits_on_skew() {
+    // On column-skewed patterns (where static's uneven cuts matter —
+    // Fig 1a) the nnz-balanced partitioner must beat even splitting
+    // decisively; on uniform patterns it must stay near-ideal.
+    let mut r = Rng::seed_from_u64(0xB0B);
+    for _ in 0..20 {
+        let b = 16;
+        let mb = r.range(16, 64);
+        let kb = r.range(16, 64);
+        let q_k = 8.min(kb);
+        // Column-skewed: everything packed into the left corner.
+        let nnz = r.range(q_k, mb * kb / 4);
+        let mask = patterns::corner_packed(mb * b, kb * b, b, nnz).unwrap();
+        let parts = balance_k(&mask, q_k);
+        let cols_per = kb.div_ceil(q_k);
+        let mut even_counts = vec![0usize; q_k];
+        for (_, c) in mask.coords() {
+            even_counts[(c / cols_per).min(q_k - 1)] += 1;
+        }
+        let ideal = mask.nnz_blocks() as f64 / q_k as f64;
+        let even_imb = *even_counts.iter().max().unwrap() as f64 / ideal;
+        let balanced_imb = imbalance(&parts);
+        assert!(
+            balanced_imb <= even_imb,
+            "balanced {balanced_imb:.3} must not lose to even {even_imb:.3} on skew"
+        );
+
+        // Uniform pattern: balanced cuts stay near the ideal.
+        let umask = patterns::uniform(mb * b, kb * b, b, (mb * kb / 4).max(q_k * 4), r.next_u64())
+            .unwrap();
+        let uimb = imbalance(&balance_k(&umask, q_k));
+        assert!(uimb < 2.0, "uniform imbalance {uimb:.3} too high (mb={mb} kb={kb})");
+    }
+}
+
+#[test]
+fn property_buckets_conserve_blocks_and_respect_capacity() {
+    // For any pattern and any grid: after host encoding, every bucket
+    // holds ≤ capacity, the total equals nnz, and propagation steps
+    // are bounded by the bucket count.
+    let mut r = Rng::seed_from_u64(0xCAFE);
+    for _ in 0..60 {
+        let mask = random_mask(&mut r);
+        let q_m = r.range(1, 9).min(mask.mb);
+        let q_k = r.range(1, 9).min(mask.kb);
+        let p_total = q_m * q_k;
+        let mean = mask.nnz_blocks().div_ceil(p_total);
+        let capacity = (mean + r.range(0, mean + 2)).max(1);
+        if mask.nnz_blocks() > capacity * p_total {
+            continue; // encoder rejects; covered by unit tests
+        }
+        let buckets = host::encode(&mask, q_m, q_k, capacity).unwrap();
+        assert_eq!(buckets.stored.iter().sum::<usize>(), mask.nnz_blocks(), "conservation");
+        assert!(buckets.stored.iter().all(|&s| s <= capacity), "capacity respected");
+        assert!(buckets.propagation_steps() < p_total.max(1), "steps bounded by ring size");
+        // Spills only happen when some partition exceeded capacity.
+        if buckets.spilled_blocks() > 0 {
+            assert!(buckets.max_partition() > capacity);
+        }
+    }
+}
+
+#[test]
+fn property_static_never_slower_than_dynamic() {
+    // Table 3's headline, as an invariant over random problems: for
+    // uniform patterns, the static plan's cycles never exceed the
+    // dynamic execution's cycles on the same problem.
+    let (spec, cm) = env();
+    let mut r = Rng::seed_from_u64(0xD00D);
+    for _ in 0..12 {
+        let b = [4usize, 8, 16][r.below(3)];
+        let mb = r.range(8, 65);
+        let m = mb * b;
+        let total = mb * mb;
+        let nnz = r.range(total / 32 + 1, total / 4 + 2).min(total);
+        let mask = patterns::uniform(m, m, b, nnz, r.next_u64()).unwrap();
+        let n = [64usize, 256, 1024][r.below(3)];
+        let st = popsparse::static_::plan(&mask, n, DType::Fp16, &spec, &cm).unwrap();
+        let dy = popsparse::dynamic_::plan_and_execute(&mask, n, DType::Fp16, &spec, &cm).unwrap();
+        assert!(
+            st.cost.total() <= dy.cost.total(),
+            "m={m} b={b} nnz={nnz} n={n}: static {} > dynamic {}",
+            st.cost.total(),
+            dy.cost.total()
+        );
+    }
+}
+
+#[test]
+fn property_format_conversions_preserve_spmm() {
+    // COO -> BSR / CSR / ELL: all formats compute the same SpMM.
+    let mut r = Rng::seed_from_u64(0xF00D);
+    for _ in 0..25 {
+        let mask = random_mask(&mut r);
+        let coo = patterns::with_values(&mask, r.next_u64());
+        let n = r.range(1, 9);
+        let x: Vec<f32> = (0..coo.k * n).map(|_| r.normal() as f32).collect();
+        let y_coo = coo.spmm_dense(&x, n).unwrap();
+        let y_bsr = Bsr::from_block_coo(&coo).spmm_dense(&x, n).unwrap();
+        let y_csr = Csr::from_block_coo(&coo).spmm_dense(&x, n).unwrap();
+        let y_ell =
+            popsparse::sparse::BlockedEll::from_block_coo(&coo).spmm_dense(&x, n).unwrap();
+        for (i, y0) in y_coo.iter().enumerate() {
+            assert!((y0 - y_bsr[i]).abs() < 1e-4, "bsr mismatch at {i}");
+            assert!((y0 - y_csr[i]).abs() < 1e-4, "csr mismatch at {i}");
+            assert!((y0 - y_ell[i]).abs() < 1e-4, "ell mismatch at {i}");
+        }
+    }
+}
+
+#[test]
+fn property_planner_monotone_in_density() {
+    // More non-zeros must never make the static plan *faster* (same
+    // seed, same shape, growing nnz).
+    let (spec, cm) = env();
+    let mut r = Rng::seed_from_u64(0x5EED);
+    for _ in 0..8 {
+        let b = 16;
+        let mb = r.range(16, 48);
+        let m = mb * b;
+        let n = 256;
+        let mut last = 0u64;
+        for inv_d in [32usize, 16, 8, 4] {
+            let nnz = (mb * mb / inv_d).max(1);
+            let mask = patterns::uniform(m, m, b, nnz, 777).unwrap();
+            let p = popsparse::static_::plan(&mask, n, DType::Fp16, &spec, &cm).unwrap();
+            assert!(
+                p.cost.total() >= last,
+                "m={m} d=1/{inv_d}: {} < previous {last}",
+                p.cost.total()
+            );
+            last = p.cost.total();
+        }
+    }
+}
+
+#[test]
+fn property_dynamic_planner_capacity_covers_dmax() {
+    // For any shape/d_max the planner accepts, buckets must cover the
+    // worst-case pattern (max_blocks), so any legal pattern encodes.
+    let (spec, cm) = env();
+    let mut r = Rng::seed_from_u64(0xBEEF);
+    for _ in 0..20 {
+        let b = [4usize, 8, 16][r.below(3)];
+        let mb = r.range(4, 64);
+        let m = mb * b;
+        let inv_d = [4usize, 8, 16, 32][r.below(4)];
+        let d = 1.0 / inv_d as f64;
+        let n = 128;
+        if let Ok(plan) = planner::plan(m, m, n, b, d, DType::Fp16, &spec, &cm) {
+            assert!(
+                plan.capacity_blocks * plan.q_m * plan.q_k >= plan.max_blocks(),
+                "m={m} b={b} d=1/{inv_d}: buckets cannot hold worst case"
+            );
+            // And a max-density pattern actually encodes:
+            let nnz = plan.max_blocks().min(mb * mb);
+            let mask = patterns::uniform(m, m, b, nnz, r.next_u64()).unwrap();
+            assert!(host::encode(&mask, plan.q_m, plan.q_k, plan.capacity_blocks).is_ok());
+        }
+    }
+}

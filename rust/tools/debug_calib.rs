@@ -1,0 +1,35 @@
+//! Calibration report: reprints the Table 3 cells the cost model was
+//! tuned against, side by side with the paper's numbers. Run after any
+//! change to `CostModel` to confirm the calibration still holds
+//! (EXPERIMENTS.md §Calibration).
+
+use popsparse::bench_harness::sweep::Env;
+use popsparse::DType;
+
+fn main() {
+    let env = Env::default();
+    let d = 1.0 / 16.0;
+    let paper: &[(usize, DType, f64, f64)] = &[
+        (1, DType::Fp16, 0.4, 0.7),
+        (4, DType::Fp16, 1.0, 1.5),
+        (16, DType::Fp16, 1.9, 4.9),
+        (1, DType::Fp32, 0.9, 1.4),
+        (4, DType::Fp32, 2.7, 3.2),
+        (16, DType::Fp32, 3.8, 5.6),
+    ];
+    println!("calibration vs paper Table 3 (m=k=4096, d=1/16, best over n)");
+    println!("{:<12} {:>10} {:>8} {:>10} {:>8}", "config", "dyn", "paper", "static", "paper");
+    for &(b, dt, p_dyn, p_st) in paper {
+        let dense = env.dense_best_tflops(4096, 4096, dt);
+        let st = env.static_best_tflops(4096, b, d, dt).unwrap_or(0.0);
+        let dy = env.dynamic_best_tflops(4096, b, d, dt).unwrap_or(0.0);
+        println!(
+            "{:<12} {:>10.2} {:>8.2} {:>10.2} {:>8.2}",
+            format!("{dt} b={b}"),
+            env.speedup(dy, dense, d),
+            p_dyn,
+            env.speedup(st, dense, d),
+            p_st
+        );
+    }
+}
