@@ -1,0 +1,115 @@
+//! Auto-mode engine walkthrough: regenerate the paper's crossover
+//! frontier from the selector's own decisions, then serve a mixed
+//! workload where every request just says `Mode::Auto`.
+//!
+//! The paper's evaluation (Fig. 4, Table 3, §6) is a map of *when*
+//! each execution path wins: static sparse beats dense only below a
+//! density frontier that moves with matrix size and block size, and
+//! static beats dynamic everywhere it is applicable. PopSparse itself
+//! leaves the choice to the caller; this repository's engine makes it
+//! a serving-time decision. The example shows:
+//!
+//! 1. the crossover table — for each (m, density) the selector's pick
+//!    and every backend's estimated cycles (including the analytical
+//!    A100 GPU baseline);
+//! 2. the power-law pre-filter (Figure 4c) — fitting it and comparing
+//!    fast-path decisions against full planning;
+//! 3. a mixed Auto workload through the coordinator — per-mode
+//!    decision counts, memoization, and estimated-vs-simulated cycles.
+//!
+//! Run with: `cargo run --release --example auto_mode`
+
+use std::time::Instant;
+
+use popsparse::bench_harness::{experiments, sweep::Env};
+use popsparse::coordinator::{Config, Coordinator, JobSpec, Mode};
+use popsparse::engine::ModeSelector;
+use popsparse::sim::chip::{CostModel, IpuSpec};
+use popsparse::DType;
+
+fn main() -> popsparse::Result<()> {
+    let env = Env::default();
+
+    // --- 1. The crossover frontier, as dispatch decisions -------------
+    let t0 = Instant::now();
+    let table = experiments::auto_crossover(&env);
+    table.print();
+    println!("(frontier regenerated in {:?})\n", t0.elapsed());
+
+    // --- 2. Power-law pre-filter ---------------------------------------
+    let mut selector = ModeSelector::new(IpuSpec::default(), CostModel::default());
+    let t0 = Instant::now();
+    let law = selector.fit_prefilter().expect("prefilter fit").clone();
+    println!(
+        "fitted pre-filter: speedup ≈ {:.4} · m^{:.2} · d^{:.2} · b^{:.2} (R² = {:.3}, {:?})",
+        law.coefficient,
+        law.exponents[0],
+        law.exponents[1],
+        law.exponents[2],
+        law.r_squared,
+        t0.elapsed()
+    );
+    let probe = |density: f64| JobSpec {
+        mode: Mode::Auto,
+        m: 4096,
+        k: 4096,
+        n: 2048,
+        b: 16,
+        density,
+        dtype: DType::Fp16,
+        pattern_seed: 1,
+    };
+    for d in [0.5, 0.125, 1.0 / 32.0] {
+        let dec = selector.choose(&probe(d))?;
+        println!(
+            "  d={d:<8} -> {:<7} ({} estimated cycles, {}, {:?})",
+            dec.mode.to_string(),
+            dec.estimated_cycles,
+            if dec.prefiltered { "pre-filtered" } else { "full planning" },
+            dec.selection_time
+        );
+    }
+
+    // --- 3. A mixed workload, every request on Auto --------------------
+    println!("\nserving 120 Auto jobs across the density spectrum...");
+    let coordinator =
+        Coordinator::new(Config::default(), IpuSpec::default(), CostModel::default());
+    let densities = [0.5, 0.25, 0.125, 1.0 / 16.0, 1.0 / 32.0];
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..120)
+        .map(|i| {
+            coordinator.submit(JobSpec {
+                mode: Mode::Auto,
+                m: 2048,
+                k: 2048,
+                n: 64,
+                b: 16,
+                density: densities[i % densities.len()],
+                dtype: DType::Fp16,
+                pattern_seed: (i % 3) as u64,
+            })
+        })
+        .collect();
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().expect("coordinator alive").is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coordinator.metrics();
+    let (memo_hits, memo_misses) = coordinator.mode_memo_stats();
+    println!("completed {ok}/120 in {wall:?}");
+    println!(
+        "decisions: dense {} / static {} / dynamic {} (memo: {memo_hits} hits, {memo_misses} misses)",
+        snap.auto_dense, snap.auto_static, snap.auto_dynamic
+    );
+    println!(
+        "selector estimate vs simulated share: mean relative error {:.1}%",
+        snap.auto_estimate_rel_err * 100.0
+    );
+    println!("mean batch {:.1} jobs over {} batches", snap.mean_batch_size, snap.batches);
+    coordinator.shutdown();
+    println!("\nauto_mode OK");
+    Ok(())
+}

@@ -1,14 +1,17 @@
-//! Quickstart: the whole stack in ~80 lines.
+//! Quickstart: the whole stack in ~100 lines.
 //!
 //! 1. Build a random block-sparse matrix (the paper's `M ⊙ W`).
 //! 2. Plan it with `popsparse::static_` and `popsparse::dynamic_` and
 //!    compare simulated IPU throughput against the dense baseline.
-//! 3. Execute the same SpMM *numerically* through the AOT-compiled
-//!    Pallas kernel on the PJRT CPU runtime and check it against the
-//!    pure-Rust oracle.
+//! 3. Serve the job through the coordinator in `Mode::Auto` — the
+//!    default — letting the engine pick the cheapest execution path
+//!    (the paper's crossover, as a serving-time decision).
+//! 4. Execute the same SpMM *numerically* through the AOT artifact
+//!    runtime and check it against the pure-Rust oracle.
 //!
-//! Run with: `make artifacts && cargo run --release --example quickstart`
+//! Run with: `cargo run --release --example quickstart`
 
+use popsparse::coordinator::{Config, Coordinator, JobSpec, Mode};
 use popsparse::runtime::Runtime;
 use popsparse::sim::chip::{CostModel, IpuSpec};
 use popsparse::sparse::patterns;
@@ -54,8 +57,41 @@ fn main() -> popsparse::Result<()> {
         dy.propagation_steps()
     );
 
-    // --- 3. Numeric execution through the AOT Pallas kernel ----------
-    let rt = Runtime::new("artifacts")?;
+    // --- 3. Serve it in Auto mode (the default) ----------------------
+    // No mode is hard-coded: the coordinator asks the engine's selector
+    // which path is cheapest for this (m, k, n, b, d, dtype) and batches
+    // under the resolved mode.
+    let coordinator =
+        Coordinator::new(Config::default(), spec.clone(), cm.clone());
+    let result = coordinator.submit_wait(JobSpec {
+        mode: Mode::Auto,
+        m,
+        k,
+        n: 512,
+        b,
+        density: d,
+        dtype: DType::Fp16,
+        pattern_seed: 42,
+    })?;
+    println!(
+        "\nauto mode: selector resolved the job to `{}` \
+         (estimated {} cycles, simulated {})",
+        result.spec.mode,
+        result.estimated_cycles.unwrap_or(0),
+        result.cycles
+    );
+    let snap = coordinator.metrics();
+    println!(
+        "auto decisions so far: dense {} / static {} / dynamic {}",
+        snap.auto_dense, snap.auto_static, snap.auto_dynamic
+    );
+    coordinator.shutdown();
+
+    // --- 4. Numeric execution of the AOT artifact --------------------
+    // The offline build runs the artifact through the runtime's
+    // reference interpreter (a port of the Pallas kernel's reference
+    // semantics); see rust/src/runtime/mod.rs for the PJRT notes.
+    let rt = Runtime::open_default()?;
     let meta = rt.manifest().get("spmm_quickstart")?.clone();
     let small_mask = patterns::uniform(meta.m, meta.k, meta.b, meta.nnz_b, 7)?;
     let coo = patterns::with_values(&small_mask, 7);
@@ -69,7 +105,7 @@ fn main() -> popsparse::Result<()> {
     let max_err =
         y.iter().zip(&expect).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
     println!(
-        "\nnumeric path (AOT Pallas kernel, {}x{} @ {} cols, PJRT CPU): {wall:?}, max |err| = {max_err:e}",
+        "\nnumeric path (AOT artifact via reference interpreter, {}x{} @ {} cols): {wall:?}, max |err| = {max_err:e}",
         meta.m, meta.k, meta.n
     );
     assert!(max_err < 1e-3, "numeric check failed");

@@ -35,7 +35,7 @@ struct Served {
 }
 
 fn main() -> popsparse::Result<()> {
-    let rt = Runtime::new("artifacts")?;
+    let rt = Runtime::open_default()?;
     let meta = rt.manifest().get("mlp_512x512_b16_d8")?.clone();
     let (k, slot_n) = (512usize, meta.n); // artifact batch slot
     println!(

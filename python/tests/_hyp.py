@@ -1,0 +1,37 @@
+"""Optional hypothesis shim.
+
+The offline image does not ship hypothesis; the property sweeps are a
+bonus on top of the parametrized fixed-configuration tests, so when
+the real library is missing the sweeps skip cleanly instead of killing
+collection for the whole module.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only offline
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def wrap(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return wrap
+
+    def settings(*_args, **_kwargs):
+        def wrap(fn):
+            return fn
+
+        return wrap
+
+    class _Strategies:
+        def __getattr__(self, _name):
+            def strategy(*_args, **_kwargs):
+                return None
+
+            return strategy
+
+    st = _Strategies()

@@ -10,7 +10,7 @@ use popsparse::util::timing::{bench, print_header};
 use popsparse::util::Rng;
 
 fn main() {
-    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let rt = Runtime::open_default().expect("missing artifacts manifest");
     let budget = Duration::from_millis(600);
     print_header();
 

@@ -3,6 +3,8 @@
 
 use crate::bench_harness::report::{f1, f2, Table};
 use crate::bench_harness::sweep::{seed_for, Env, PaperSweep};
+use crate::coordinator::request::{JobSpec, Mode};
+use crate::engine::{Backend, BackendKind, EngineEnv, GpuBackend, ModeSelector};
 use crate::fit;
 use crate::gpu::{self, A100Spec};
 use crate::sparse::patterns;
@@ -238,6 +240,69 @@ pub fn fig7(env: &Env) -> Vec<Table> {
     tables
 }
 
+/// Beyond the paper's figures: the auto-mode crossover frontier. For
+/// each (m, density) point (b=16, FP16, n=2048) the selector compares
+/// the dense, static and dynamic cost models and reports its choice —
+/// regenerating the paper's crossover structure (Fig. 4 / §6) as the
+/// dispatch decision the serving layer actually makes. The analytical
+/// GPU baseline rides along for reference.
+pub fn auto_crossover(env: &Env) -> Table {
+    let selector = ModeSelector::with_env(EngineEnv::new(env.spec.clone(), env.cm.clone()));
+    let mut t = Table::new(
+        "Auto-mode crossover — selector choice over (m, density), b=16, FP16, n=2048",
+        &["m=k", "density", "dense Mcyc", "static Mcyc", "dynamic Mcyc", "gpu Mcyc", "choice"],
+    );
+    let n = 2048;
+    for &m in &[1024usize, 2048, 4096] {
+        for inv_d in [2usize, 4, 8, 16, 32] {
+            let job = JobSpec {
+                mode: Mode::Auto,
+                m,
+                k: m,
+                n,
+                b: 16,
+                density: 1.0 / inv_d as f64,
+                dtype: DType::Fp16,
+                pattern_seed: seed_for(m, 16, inv_d),
+            };
+            let (cells, choice) = match selector.choose(&job) {
+                Ok(dec) => {
+                    let cell = |kind: BackendKind| {
+                        dec.estimates
+                            .iter()
+                            .find(|e| e.kind == kind)
+                            .map(|e| f2(e.cycles as f64 / 1e6))
+                            .unwrap_or_else(|| "-".into())
+                    };
+                    (
+                        [
+                            cell(BackendKind::Dense),
+                            cell(BackendKind::Static),
+                            cell(BackendKind::Dynamic),
+                        ],
+                        dec.mode.to_string(),
+                    )
+                }
+                Err(_) => (["-".into(), "-".into(), "-".into()], "-".into()),
+            };
+            let gpu_cell = GpuBackend
+                .plan(&job, selector.env())
+                .map(|e| f2(e.cycles as f64 / 1e6))
+                .unwrap_or_else(|_| "-".into());
+            t.row(vec![
+                m.to_string(),
+                format!("1/{inv_d}"),
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+                gpu_cell,
+                choice,
+            ]);
+        }
+    }
+    t
+}
+
 /// Ablation (beyond the paper's figures): blocked-ELL padding overhead
 /// (Appendix B) on row-imbalanced patterns — why the paper skipped the
 /// format.
@@ -317,6 +382,25 @@ mod tests {
         let dense_eff: f64 = last[1].parse().unwrap();
         let bsr16: f64 = last[5].parse().unwrap();
         assert!(bsr16 < dense_eff * 1.6, "bsr {bsr16} vs dense-eff {dense_eff}");
+    }
+
+    #[test]
+    fn auto_crossover_matches_paper_qualitatively() {
+        let t = auto_crossover(&Env::default());
+        assert_eq!(t.rows.len(), 15);
+        let choice_at = |m: &str, d: &str| {
+            t.rows
+                .iter()
+                .find(|r| r[0] == m && r[1] == d)
+                .map(|r| r[6].clone())
+                .expect("row present")
+        };
+        // Near-dense work stays dense; deep block sparsity goes static.
+        assert_eq!(choice_at("1024", "1/2"), "dense");
+        assert_eq!(choice_at("4096", "1/32"), "static");
+        // Static ≥ dynamic everywhere: the selector never picks dynamic
+        // when static is feasible (Table 3).
+        assert!(t.rows.iter().all(|r| r[6] != "dynamic"));
     }
 
     #[test]

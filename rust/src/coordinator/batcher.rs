@@ -29,15 +29,24 @@ pub struct BatchKey {
 }
 
 impl BatchKey {
+    /// Key a job for batching. The coordinator resolves [`Mode::Auto`]
+    /// to a concrete mode *before* batching, so the key normally sees
+    /// only concrete modes; an unresolved `Auto` job is keyed like a
+    /// static job (pattern included) — the conservative grouping.
     pub fn of(job: &JobSpec) -> Self {
+        debug_assert!(job.mode != Mode::Auto, "auto jobs are resolved before batching");
         Self {
             mode: job.mode,
             m: job.m,
             k: job.k,
             b: job.b,
-            density_millionths: (job.density * 1e6).round() as u64,
+            density_millionths: job.density_millionths(),
             dtype: job.dtype,
-            pattern_seed: if job.mode == Mode::Static { job.pattern_seed } else { 0 },
+            pattern_seed: if matches!(job.mode, Mode::Static | Mode::Auto) {
+                job.pattern_seed
+            } else {
+                0
+            },
         }
     }
 }

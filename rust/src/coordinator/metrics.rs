@@ -1,7 +1,11 @@
-//! Serving metrics: counters and latency percentiles.
+//! Serving metrics: counters, latency percentiles, and auto-mode
+//! selector accounting (which mode won, and how close the selector's
+//! cycle estimates were to the simulated outcome).
 
 use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::coordinator::request::Mode;
 
 /// Aggregated serving metrics. Latencies are kept in a bounded
 /// reservoir; percentiles are computed on demand.
@@ -18,6 +22,12 @@ struct Inner {
     batched_jobs: u64,
     simulated_cycles: u64,
     latencies_ns: Vec<u64>,
+    // Auto-mode accounting.
+    auto_dense: u64,
+    auto_static: u64,
+    auto_dynamic: u64,
+    estimate_pairs: u64,
+    estimate_rel_err_sum: f64,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -29,9 +39,23 @@ pub struct Snapshot {
     /// Mean jobs per batch (batching effectiveness).
     pub mean_batch_size: f64,
     pub simulated_cycles: u64,
+    /// Auto-mode jobs resolved to each concrete mode.
+    pub auto_dense: u64,
+    pub auto_static: u64,
+    pub auto_dynamic: u64,
+    /// Mean relative error of the selector's estimated cycles against
+    /// the simulated cycles of completed auto jobs (0.0 when none).
+    pub auto_estimate_rel_err: f64,
     pub p50: Duration,
     pub p99: Duration,
     pub max: Duration,
+}
+
+impl Snapshot {
+    /// Total auto-mode jobs resolved.
+    pub fn auto_resolved(&self) -> u64 {
+        self.auto_dense + self.auto_static + self.auto_dynamic
+    }
 }
 
 const RESERVOIR: usize = 65536;
@@ -60,6 +84,28 @@ impl Metrics {
         g.batched_jobs += jobs as u64;
     }
 
+    /// Record an auto-mode resolution (which concrete mode won).
+    pub fn record_auto_decision(&self, mode: Mode) {
+        let mut g = self.inner.lock().expect("metrics poisoned");
+        match mode {
+            Mode::Dense => g.auto_dense += 1,
+            Mode::Static => g.auto_static += 1,
+            Mode::Dynamic => g.auto_dynamic += 1,
+            Mode::Auto => debug_assert!(false, "resolution must be concrete"),
+        }
+    }
+
+    /// Record estimated-vs-simulated cycles for a completed auto job.
+    pub fn record_auto_outcome(&self, estimated: u64, simulated: u64) {
+        if simulated == 0 {
+            return;
+        }
+        let rel = (estimated as f64 - simulated as f64).abs() / simulated as f64;
+        let mut g = self.inner.lock().expect("metrics poisoned");
+        g.estimate_pairs += 1;
+        g.estimate_rel_err_sum += rel;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().expect("metrics poisoned");
         let mut lat = g.latencies_ns.clone();
@@ -81,6 +127,14 @@ impl Metrics {
                 g.batched_jobs as f64 / g.batches as f64
             },
             simulated_cycles: g.simulated_cycles,
+            auto_dense: g.auto_dense,
+            auto_static: g.auto_static,
+            auto_dynamic: g.auto_dynamic,
+            auto_estimate_rel_err: if g.estimate_pairs == 0 {
+                0.0
+            } else {
+                g.estimate_rel_err_sum / g.estimate_pairs as f64
+            },
             p50: pct(0.50),
             p99: pct(0.99),
             max: pct(1.0),
@@ -116,5 +170,24 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.jobs_completed, 0);
         assert_eq!(s.p50, Duration::ZERO);
+        assert_eq!(s.auto_resolved(), 0);
+        assert_eq!(s.auto_estimate_rel_err, 0.0);
+    }
+
+    #[test]
+    fn auto_accounting() {
+        let m = Metrics::new();
+        m.record_auto_decision(Mode::Static);
+        m.record_auto_decision(Mode::Static);
+        m.record_auto_decision(Mode::Dense);
+        // 10% under-estimate and an exact estimate -> mean 5% error.
+        m.record_auto_outcome(900, 1000);
+        m.record_auto_outcome(500, 500);
+        m.record_auto_outcome(1, 0); // ignored: no simulated cycles
+        let s = m.snapshot();
+        assert_eq!(s.auto_static, 2);
+        assert_eq!(s.auto_dense, 1);
+        assert_eq!(s.auto_resolved(), 3);
+        assert!((s.auto_estimate_rel_err - 0.05).abs() < 1e-9);
     }
 }

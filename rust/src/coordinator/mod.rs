@@ -1,15 +1,22 @@
-//! The serving coordinator: router, plan cache, dynamic batcher,
-//! worker pool and metrics.
+//! The serving coordinator: router, auto-mode resolution, plan cache,
+//! dynamic batcher, worker pool and metrics.
 //!
 //! Architecture (threads + channels; the request path never touches
 //! Python):
 //!
 //! ```text
-//!  submit(job) ──► batcher (groups by weight config, flushes on
-//!                  capacity or delay) ──► worker pool ──► plan cache
-//!                  ──► simulator (cycles) [+ PJRT runtime in the
-//!                  examples for real numerics] ──► JobResult
+//!  submit(job) ──► auto-mode resolution ([`crate::engine::ModeSelector`],
+//!                  memoized in the plan cache) ──► batcher (groups by
+//!                  weight config + resolved mode, flushes on capacity
+//!                  or delay) ──► worker pool ──► plan cache ──►
+//!                  simulator (cycles) [+ the numeric runtime in the
+//!                  examples] ──► JobResult
 //! ```
+//!
+//! Jobs submitted with [`Mode::Auto`] are resolved to the cheapest
+//! concrete mode *before* batching, so every batch is homogeneous in
+//! its resolved mode; [`Metrics`] tracks the decisions and how the
+//! selector's cycle estimates compare to the simulated outcome.
 
 pub mod batcher;
 pub mod metrics;
@@ -24,8 +31,9 @@ use std::time::{Duration, Instant};
 pub use batcher::{Batch, BatchKey, Batcher};
 pub use metrics::{Metrics, Snapshot};
 pub use plan_cache::{CachedPlan, PlanCache};
-pub use request::{JobResult, JobSpec, Mode, PlanKey};
+pub use request::{JobResult, JobSpec, Mode, PlanKey, SelectorKey};
 
+use crate::engine::ModeSelector;
 use crate::error::{Error, Result};
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::patterns;
@@ -48,8 +56,12 @@ impl Default for Config {
 
 type Responder = mpsc::Sender<Result<JobResult>>;
 
+/// Per-job payload threaded through the batcher: the response channel
+/// plus the selector's cycle estimate for auto-resolved jobs.
+type Payload = (Responder, Option<u64>);
+
 enum WorkItem {
-    Batch(Batch<Responder>),
+    Batch(Batch<Payload>),
 }
 
 /// The coordinator. Create with [`Coordinator::new`], submit jobs with
@@ -57,14 +69,46 @@ enum WorkItem {
 pub struct Coordinator {
     cache: Arc<PlanCache>,
     metrics: Arc<Metrics>,
+    selector: Arc<ModeSelector>,
     ingress: Option<mpsc::Sender<(JobSpec, Responder)>>,
     ingress_thread: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     shutting_down: Arc<AtomicBool>,
 }
 
+/// Resolve an auto-mode job on the ingress path. Returns the job (with
+/// a concrete mode) and its payload, or `None` after answering the
+/// caller with the resolution error.
+fn admit(
+    mut job: JobSpec,
+    responder: Responder,
+    cache: &PlanCache,
+    selector: &ModeSelector,
+    metrics: &Metrics,
+) -> Option<(JobSpec, Payload)> {
+    let mut estimate = None;
+    if job.mode == Mode::Auto {
+        match cache.resolve_mode(&job, selector) {
+            Ok((mode, est, _memo_hit)) => {
+                job.mode = mode;
+                estimate = Some(est);
+                metrics.record_auto_decision(mode);
+            }
+            Err(e) => {
+                metrics.record_failure();
+                let _ = responder.send(Err(Error::Coordinator(format!(
+                    "auto-mode resolution failed: {e}"
+                ))));
+                return None;
+            }
+        }
+    }
+    Some((job, (responder, estimate)))
+}
+
 impl Coordinator {
     pub fn new(config: Config, spec: IpuSpec, cm: CostModel) -> Self {
+        let selector = Arc::new(ModeSelector::new(spec.clone(), cm.clone()));
         let cache = Arc::new(PlanCache::new(spec, cm));
         let metrics = Arc::new(Metrics::new());
         let shutting_down = Arc::new(AtomicBool::new(false));
@@ -73,20 +117,26 @@ impl Coordinator {
         let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
         let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
 
-        // Ingress thread: runs the batcher.
+        // Ingress thread: resolves auto-mode jobs, runs the batcher.
         let batch_cfg = config.clone();
         let batch_metrics = metrics.clone();
+        let batch_cache = cache.clone();
+        let batch_selector = selector.clone();
         let batch_tx = work_tx.clone();
         let ingress_thread = std::thread::spawn(move || {
-            let mut batcher: Batcher<Responder> =
+            let mut batcher: Batcher<Payload> =
                 Batcher::new(batch_cfg.max_batch_n, batch_cfg.max_batch_delay);
             loop {
                 // Wait up to the delay budget for new work, then poll.
                 match ingress_rx.recv_timeout(batch_cfg.max_batch_delay) {
                     Ok((job, responder)) => {
-                        if let Some(batch) = batcher.push(job, responder) {
-                            batch_metrics.record_batch(batch.jobs.len());
-                            let _ = batch_tx.send(WorkItem::Batch(batch));
+                        if let Some((job, payload)) =
+                            admit(job, responder, &batch_cache, &batch_selector, &batch_metrics)
+                        {
+                            if let Some(batch) = batcher.push(job, payload) {
+                                batch_metrics.record_batch(batch.jobs.len());
+                                let _ = batch_tx.send(WorkItem::Batch(batch));
+                            }
                         }
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -125,6 +175,7 @@ impl Coordinator {
         let coordinator = Self {
             cache,
             metrics,
+            selector,
             ingress: Some(ingress_tx),
             ingress_thread: Some(ingress_thread),
             workers,
@@ -171,6 +222,16 @@ impl Coordinator {
         self.cache.stats()
     }
 
+    /// Auto-mode decision memo (hits, misses).
+    pub fn mode_memo_stats(&self) -> (u64, u64) {
+        self.cache.mode_stats()
+    }
+
+    /// The selector the coordinator resolves [`Mode::Auto`] with.
+    pub fn selector(&self) -> &ModeSelector {
+        &self.selector
+    }
+
     /// Graceful shutdown: flush the batcher, join all threads.
     pub fn shutdown(mut self) {
         self.shutting_down.store(true, Ordering::Relaxed);
@@ -192,7 +253,7 @@ impl Drop for Coordinator {
 
 /// Execute one batch: plan once at the combined batch size, simulate,
 /// fan results back out.
-fn process_batch(batch: Batch<Responder>, cache: &PlanCache, metrics: &Metrics) {
+fn process_batch(batch: Batch<Payload>, cache: &PlanCache, metrics: &Metrics) {
     let t0 = Instant::now();
     // Plan at the batch's combined n (this is the batching win).
     let mut rep = batch.jobs[0].0.clone();
@@ -201,7 +262,7 @@ fn process_batch(batch: Batch<Responder>, cache: &PlanCache, metrics: &Metrics) 
     match planned {
         Err(e) => {
             let msg = e.to_string();
-            for (_, responder) in batch.jobs {
+            for (_, (responder, _)) in batch.jobs {
                 metrics.record_failure();
                 let _ = responder.send(Err(Error::Coordinator(msg.clone())));
             }
@@ -227,7 +288,7 @@ fn process_batch(batch: Batch<Responder>, cache: &PlanCache, metrics: &Metrics) 
                         Ok(exec) => (exec.cost.total(), exec.propagation_steps()),
                         Err(e) => {
                             let msg = e.to_string();
-                            for (_, responder) in batch.jobs {
+                            for (_, (responder, _)) in batch.jobs {
                                 metrics.record_failure();
                                 let _ = responder.send(Err(Error::Coordinator(msg.clone())));
                             }
@@ -238,15 +299,24 @@ fn process_batch(batch: Batch<Responder>, cache: &PlanCache, metrics: &Metrics) 
             };
             let service_time = t0.elapsed();
             let spec = cache.spec();
-            for (job, responder) in batch.jobs {
+            for (job, (responder, estimated)) in batch.jobs {
                 let tflops = crate::tflops(rep.flops(), cycles, spec.clock_hz);
                 metrics.record_job(service_time, cycles);
+                if let Some(est) = estimated {
+                    // Estimated-vs-simulated: the selector estimated at
+                    // the job's own n; compare per-job shares of the
+                    // batched pass to keep the scales commensurate.
+                    let share = (cycles as f64 * job.n as f64 / batch.total_n.max(1) as f64)
+                        .ceil() as u64;
+                    metrics.record_auto_outcome(est, share.max(1));
+                }
                 let _ = responder.send(Ok(JobResult {
                     spec: job,
                     cycles,
                     tflops,
                     propagation_steps: prop_steps,
                     plan_cache_hit: was_hit,
+                    estimated_cycles: estimated,
                     service_time,
                 }));
             }
@@ -323,6 +393,23 @@ mod tests {
         let res = c.submit_wait(bad);
         assert!(res.is_err());
         assert_eq!(c.metrics().jobs_failed, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn auto_jobs_resolve_and_serve() {
+        let c = Coordinator::new(Config::default(), IpuSpec::default(), CostModel::default());
+        let r = c.submit_wait(job(Mode::Auto, 128, 7)).unwrap();
+        assert_ne!(r.spec.mode, Mode::Auto, "auto must resolve to a concrete mode");
+        assert!(r.cycles > 0);
+        assert!(r.estimated_cycles.expect("auto jobs carry estimates") > 0);
+        // Same geometry, different pattern seed: the decision is memoized.
+        let r2 = c.submit_wait(job(Mode::Auto, 128, 9)).unwrap();
+        assert_eq!(r2.spec.mode, r.spec.mode);
+        assert_eq!(c.mode_memo_stats(), (1, 1));
+        let snap = c.metrics();
+        assert_eq!(snap.auto_resolved(), 2);
+        assert_eq!(snap.jobs_completed, 2);
         c.shutdown();
     }
 }

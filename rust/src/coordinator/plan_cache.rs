@@ -9,10 +9,11 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::request::{JobSpec, Mode, PlanKey};
+use crate::coordinator::request::{JobSpec, Mode, PlanKey, SelectorKey};
 use crate::dense_::DensePlan;
 use crate::dynamic_::DynamicPlan;
-use crate::error::Result;
+use crate::engine::ModeSelector;
+use crate::error::{Error, Result};
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::mask::BlockMask;
 use crate::sparse::patterns;
@@ -28,13 +29,19 @@ pub enum CachedPlan {
     Dynamic(Arc<DynamicPlan>),
 }
 
-/// Thread-safe plan cache with hit/miss accounting.
+/// Thread-safe plan cache with hit/miss accounting. Besides compiled
+/// plans it memoizes auto-mode selector decisions per
+/// [`SelectorKey`] — selection plans up to three backends, so a
+/// serving layer must amortise it the same way it amortises plans.
 pub struct PlanCache {
     spec: IpuSpec,
     cm: CostModel,
     plans: Mutex<HashMap<PlanKey, CachedPlan>>,
+    modes: Mutex<HashMap<SelectorKey, (Mode, u64)>>,
     hits: std::sync::atomic::AtomicU64,
     misses: std::sync::atomic::AtomicU64,
+    mode_hits: std::sync::atomic::AtomicU64,
+    mode_misses: std::sync::atomic::AtomicU64,
 }
 
 impl PlanCache {
@@ -43,8 +50,11 @@ impl PlanCache {
             spec,
             cm,
             plans: Mutex::new(HashMap::new()),
+            modes: Mutex::new(HashMap::new()),
             hits: Default::default(),
             misses: Default::default(),
+            mode_hits: Default::default(),
+            mode_misses: Default::default(),
         }
     }
 
@@ -60,6 +70,42 @@ impl PlanCache {
     pub fn stats(&self) -> (u64, u64) {
         use std::sync::atomic::Ordering::Relaxed;
         (self.hits.load(Relaxed), self.misses.load(Relaxed))
+    }
+
+    /// Auto-mode memo (hits, misses) so far.
+    pub fn mode_stats(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        (self.mode_hits.load(Relaxed), self.mode_misses.load(Relaxed))
+    }
+
+    /// Resolve an [`Mode::Auto`] job to a concrete mode, memoized per
+    /// [`SelectorKey`]. Returns `(mode, estimated_cycles, was_memo_hit)`.
+    ///
+    /// Resolution plans candidate backends at the *job's own* `n` and
+    /// discards those plans; the worker later plans the winning mode
+    /// at the batch's combined `n`, which is a different plan key, so
+    /// the two cannot share a cache entry today. The memo keeps this a
+    /// once-per-geometry cost; feeding resolution-time plans into the
+    /// plan cache for single-job batches is a noted follow-up
+    /// (ROADMAP).
+    pub fn resolve_mode(
+        &self,
+        job: &JobSpec,
+        selector: &ModeSelector,
+    ) -> Result<(Mode, u64, bool)> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let key = job.selector_key();
+        if let Some(&(mode, est)) = self.modes.lock().expect("mode memo poisoned").get(&key) {
+            self.mode_hits.fetch_add(1, Relaxed);
+            return Ok((mode, est, true));
+        }
+        // Decide outside the lock (selection plans several backends).
+        let decision = selector.choose(job)?;
+        self.mode_misses.fetch_add(1, Relaxed);
+        let mut memo = self.modes.lock().expect("mode memo poisoned");
+        let &mut (mode, est) =
+            memo.entry(key).or_insert((decision.mode, decision.estimated_cycles));
+        Ok((mode, est, false))
     }
 
     /// Get or build the plan for a job. Returns (plan, was_hit).
@@ -96,6 +142,9 @@ impl PlanCache {
                 )?;
                 Ok(CachedPlan::Dynamic(Arc::new(p)))
             }
+            Mode::Auto => Err(Error::Coordinator(
+                "auto-mode jobs must be resolved to a concrete mode before planning".into(),
+            )),
         }
     }
 }
@@ -141,5 +190,24 @@ mod tests {
         let (_, h1) = cache.get_or_plan(&job(Mode::Static, 1)).unwrap();
         let (_, h2) = cache.get_or_plan(&job(Mode::Static, 2)).unwrap();
         assert!(!h1 && !h2, "static plans are pattern-specific");
+    }
+
+    #[test]
+    fn auto_decisions_are_memoized() {
+        let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
+        let selector = ModeSelector::new(IpuSpec::default(), CostModel::default());
+        let (m1, e1, hit1) = cache.resolve_mode(&job(Mode::Auto, 1), &selector).unwrap();
+        // Different seed, same geometry: must reuse the decision.
+        let (m2, e2, hit2) = cache.resolve_mode(&job(Mode::Auto, 2), &selector).unwrap();
+        assert!(!hit1 && hit2);
+        assert_eq!((m1, e1), (m2, e2));
+        assert_ne!(m1, Mode::Auto, "resolution must yield a concrete mode");
+        assert_eq!(cache.mode_stats(), (1, 1));
+    }
+
+    #[test]
+    fn unresolved_auto_jobs_never_plan() {
+        let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
+        assert!(cache.get_or_plan(&job(Mode::Auto, 0)).is_err());
     }
 }

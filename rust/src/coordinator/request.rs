@@ -11,6 +11,13 @@ pub enum Mode {
     Static,
     /// `popsparse::dynamic::sparseDenseMatMul`.
     Dynamic,
+    /// Let the engine pick: the coordinator resolves the job to the
+    /// cheapest of the three concrete modes via
+    /// [`crate::engine::ModeSelector`] *before* batching, so batches
+    /// stay homogeneous in their resolved mode. The resolved mode is
+    /// reported back in [`JobResult::spec`], alongside the selector's
+    /// [`JobResult::estimated_cycles`].
+    Auto,
 }
 
 impl std::fmt::Display for Mode {
@@ -19,6 +26,7 @@ impl std::fmt::Display for Mode {
             Mode::Dense => write!(f, "dense"),
             Mode::Static => write!(f, "static"),
             Mode::Dynamic => write!(f, "dynamic"),
+            Mode::Auto => write!(f, "auto"),
         }
     }
 }
@@ -49,10 +57,20 @@ impl JobSpec {
         crate::spmm_flops(self.m, self.k, self.n, d)
     }
 
+    /// Density quantized for key equality. Every coordinator key
+    /// (plan, batch, selector) must quantize identically — a job
+    /// resolved under one key has to batch and plan under keys that
+    /// agree — so this is the single definition.
+    pub fn density_millionths(&self) -> u64 {
+        (self.density * 1e6).round() as u64
+    }
+
     /// Key for plan caching: everything the planner depends on.
     /// Dynamic mode's plan depends on `d_max` but NOT the pattern, so
     /// jobs with different seeds share a plan — the whole point of the
-    /// paper's dynamic mode.
+    /// paper's dynamic mode. `Auto` jobs are resolved to a concrete
+    /// mode by the coordinator before any plan is built, so an `Auto`
+    /// plan key never reaches the cache.
     pub fn plan_key(&self) -> PlanKey {
         PlanKey {
             mode: self.mode,
@@ -60,12 +78,42 @@ impl JobSpec {
             k: self.k,
             n: self.n,
             b: self.b,
-            density_millionths: (self.density * 1e6).round() as u64,
+            density_millionths: self.density_millionths(),
             dtype: self.dtype,
             // Static plans are pattern-specific.
             pattern_seed: if self.mode == Mode::Static { self.pattern_seed } else { 0 },
         }
     }
+
+    /// Key for auto-mode resolution memoization: the job geometry the
+    /// selector's decision depends on, without the mode or the pattern
+    /// seed. The static cost model does see the realized pattern, but
+    /// `with_density` patterns at equal geometry carry identical nnz
+    /// counts and near-identical balanced-partition costs across
+    /// seeds, so decisions are deliberately shared — the residual
+    /// seed-to-seed variance is part of what the selector's documented
+    /// tolerance budget absorbs.
+    pub fn selector_key(&self) -> SelectorKey {
+        SelectorKey {
+            m: self.m,
+            k: self.k,
+            n: self.n,
+            b: self.b,
+            density_millionths: self.density_millionths(),
+            dtype: self.dtype,
+        }
+    }
+}
+
+/// Memoization key for auto-mode decisions (see [`JobSpec::selector_key`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SelectorKey {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub b: usize,
+    pub density_millionths: u64,
+    pub dtype: DType,
 }
 
 /// Plan-cache key.
@@ -84,6 +132,8 @@ pub struct PlanKey {
 /// Result of one job.
 #[derive(Debug, Clone)]
 pub struct JobResult {
+    /// The job as executed. For auto-mode submissions, `spec.mode` is
+    /// the *resolved* concrete mode the selector chose.
     pub spec: JobSpec,
     /// Simulated device cycles.
     pub cycles: u64,
@@ -93,6 +143,10 @@ pub struct JobResult {
     pub propagation_steps: usize,
     /// Whether the plan came from the cache.
     pub plan_cache_hit: bool,
+    /// The selector's estimated cycles, for jobs submitted as
+    /// [`Mode::Auto`] (or executed through an engine backend); `None`
+    /// for explicitly-moded coordinator jobs.
+    pub estimated_cycles: Option<u64>,
     /// Wall-clock time the coordinator spent on this job.
     pub service_time: std::time::Duration,
 }
@@ -126,5 +180,15 @@ mod tests {
         assert!((s.flops() - 2.0 * 1024.0 * 1024.0 * 64.0 / 16.0).abs() < 1.0);
         let d = spec(Mode::Dense, 0);
         assert!((d.flops() - 2.0 * 1024.0 * 1024.0 * 64.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn selector_key_ignores_mode_and_seed() {
+        assert_eq!(Mode::Auto.to_string(), "auto");
+        let mut a = spec(Mode::Auto, 1);
+        let b = spec(Mode::Dense, 2);
+        assert_eq!(a.selector_key(), b.selector_key());
+        a.n = 128;
+        assert_ne!(a.selector_key(), b.selector_key(), "geometry must matter");
     }
 }

@@ -1,0 +1,369 @@
+//! The [`Backend`] trait and its four implementations.
+//!
+//! Each backend turns a [`JobSpec`] into (a) a [`PlanEstimate`] — the
+//! cycles the cost model predicts for the job — and (b) a full
+//! [`JobResult`] when executed. Dense and static execution *is* the
+//! costed plan (the simulator is the device); dynamic execution
+//! additionally encodes the runtime pattern into buckets, so its
+//! estimate (balanced-pattern expectation) and its executed cycles can
+//! differ — exactly the gap [`crate::coordinator::Metrics`] tracks for
+//! auto-mode jobs. The GPU backend is the paper's analytical A100
+//! baseline, reported in IPU-clock-equivalent cycles so every backend
+//! is comparable on one axis.
+
+use std::time::Instant;
+
+use crate::coordinator::request::{JobResult, JobSpec, Mode};
+use crate::error::{Error, Result};
+use crate::gpu::{self, A100Spec};
+use crate::sim::chip::{CostModel, IpuSpec};
+use crate::sparse::patterns;
+use crate::DType;
+
+/// Which execution path a backend models (Table 1's API rows plus the
+/// GPU baseline column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    Dense,
+    Static,
+    Dynamic,
+    Gpu,
+}
+
+impl BackendKind {
+    /// The coordinator [`Mode`] this backend serves, if any. The GPU
+    /// baseline is analytical only — it cannot be scheduled on the
+    /// simulated device, so it maps to no mode.
+    pub fn as_mode(self) -> Option<Mode> {
+        match self {
+            BackendKind::Dense => Some(Mode::Dense),
+            BackendKind::Static => Some(Mode::Static),
+            BackendKind::Dynamic => Some(Mode::Dynamic),
+            BackendKind::Gpu => None,
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendKind::Dense => write!(f, "dense"),
+            BackendKind::Static => write!(f, "static"),
+            BackendKind::Dynamic => write!(f, "dynamic"),
+            BackendKind::Gpu => write!(f, "gpu"),
+        }
+    }
+}
+
+/// Everything a backend needs to cost a job: the IPU spec, the frozen
+/// calibration, and the A100 datasheet model for the GPU baseline.
+#[derive(Debug, Clone)]
+pub struct EngineEnv {
+    pub spec: IpuSpec,
+    pub cm: CostModel,
+    pub gpu: A100Spec,
+}
+
+impl EngineEnv {
+    pub fn new(spec: IpuSpec, cm: CostModel) -> Self {
+        Self { spec, cm, gpu: A100Spec::default() }
+    }
+}
+
+impl Default for EngineEnv {
+    fn default() -> Self {
+        Self::new(IpuSpec::default(), CostModel::default())
+    }
+}
+
+/// A backend's cost prediction for one job.
+#[derive(Debug, Clone)]
+pub struct PlanEstimate {
+    pub kind: BackendKind,
+    /// Estimated device cycles (IPU-clock-equivalent for [`GpuBackend`]).
+    pub cycles: u64,
+    /// Estimated effective throughput. Sparse backends use the paper's
+    /// non-zeros-only convention; dense counts the full GEMM.
+    pub tflops: f64,
+    /// Expected dynamic-mode propagation steps (0 for other backends).
+    pub propagation_steps: usize,
+}
+
+/// One execution path behind a uniform plan/execute interface.
+pub trait Backend: Send + Sync {
+    fn kind(&self) -> BackendKind;
+
+    /// Cost the job without committing to run it.
+    fn plan(&self, job: &JobSpec, env: &EngineEnv) -> Result<PlanEstimate>;
+
+    /// Run the job (on the simulator; numerics live in
+    /// [`crate::runtime`]) and report the achieved cost.
+    fn execute(&self, job: &JobSpec, env: &EngineEnv) -> Result<JobResult> {
+        let t0 = Instant::now();
+        let est = self.plan(job, env)?;
+        Ok(result_from_estimate(job, &est, t0))
+    }
+}
+
+fn result_from_estimate(job: &JobSpec, est: &PlanEstimate, t0: Instant) -> JobResult {
+    JobResult {
+        spec: job.clone(),
+        cycles: est.cycles,
+        tflops: est.tflops,
+        propagation_steps: est.propagation_steps,
+        plan_cache_hit: false,
+        estimated_cycles: Some(est.cycles),
+        service_time: t0.elapsed(),
+    }
+}
+
+/// `poplin::matMul`: the dense baseline.
+pub struct DenseBackend;
+
+impl Backend for DenseBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Dense
+    }
+
+    fn plan(&self, job: &JobSpec, env: &EngineEnv) -> Result<PlanEstimate> {
+        let p = crate::dense_::plan(job.m, job.k, job.n, job.dtype, &env.spec, &env.cm)?;
+        Ok(PlanEstimate {
+            kind: BackendKind::Dense,
+            cycles: p.cost.total(),
+            tflops: p.tflops(&env.spec),
+            propagation_steps: 0,
+        })
+    }
+}
+
+/// `popsparse::static_::sparseDenseMatMul`: compile-time pattern.
+pub struct StaticBackend;
+
+impl Backend for StaticBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Static
+    }
+
+    fn plan(&self, job: &JobSpec, env: &EngineEnv) -> Result<PlanEstimate> {
+        let mask =
+            patterns::with_density(job.m, job.k, job.b, job.density, job.pattern_seed)?;
+        let p = crate::static_::plan(&mask, job.n, job.dtype, &env.spec, &env.cm)?;
+        Ok(PlanEstimate {
+            kind: BackendKind::Static,
+            cycles: p.cost.total(),
+            tflops: p.tflops(&env.spec),
+            propagation_steps: 0,
+        })
+    }
+}
+
+/// `popsparse::dynamic::sparseDenseMatMul`: runtime pattern. `plan`
+/// reports the compile-time expectation (balanced pattern at `d_max`);
+/// `execute` buckets the job's actual pattern, so skewed patterns cost
+/// more than estimated — the propagation tax of Appendix A.2.
+pub struct DynamicBackend;
+
+impl Backend for DynamicBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Dynamic
+    }
+
+    fn plan(&self, job: &JobSpec, env: &EngineEnv) -> Result<PlanEstimate> {
+        let p = crate::dynamic_::planner::plan(
+            job.m, job.k, job.n, job.b, job.density, job.dtype, &env.spec, &env.cm,
+        )?;
+        let cycles = p.expected_cycles;
+        Ok(PlanEstimate {
+            kind: BackendKind::Dynamic,
+            cycles,
+            tflops: crate::tflops(
+                crate::spmm_flops(job.m, job.k, job.n, job.density),
+                cycles,
+                env.spec.clock_hz,
+            ),
+            propagation_steps: 0,
+        })
+    }
+
+    fn execute(&self, job: &JobSpec, env: &EngineEnv) -> Result<JobResult> {
+        let t0 = Instant::now();
+        let plan = crate::dynamic_::planner::plan(
+            job.m, job.k, job.n, job.b, job.density, job.dtype, &env.spec, &env.cm,
+        )?;
+        let estimated = plan.expected_cycles;
+        let mask =
+            patterns::with_density(job.m, job.k, job.b, job.density, job.pattern_seed)?;
+        let exec = crate::dynamic_::execute_pattern(&plan, &mask, &env.spec, &env.cm)?;
+        Ok(JobResult {
+            spec: job.clone(),
+            cycles: exec.cost.total(),
+            tflops: exec.tflops(&env.spec),
+            propagation_steps: exec.propagation_steps(),
+            plan_cache_hit: false,
+            estimated_cycles: Some(estimated),
+            service_time: t0.elapsed(),
+        })
+    }
+}
+
+/// Analytical A100 baseline: cuBLAS for dense work, cuSPARSE CSR for
+/// unstructured patterns, cuSPARSE BSR (FP32-only, as the real API)
+/// for block patterns. Reported in IPU-clock-equivalent cycles.
+pub struct GpuBackend;
+
+impl GpuBackend {
+    fn seconds(job: &JobSpec, env: &EngineEnv) -> Result<f64> {
+        if job.density >= 1.0 {
+            return Ok(gpu::cublas::gemm_seconds(job.m, job.k, job.n, job.dtype, &env.gpu));
+        }
+        if job.b == 0 || job.m % job.b != 0 || job.k % job.b != 0 {
+            return Err(Error::Plan(format!(
+                "bad dims m={} k={} b={}",
+                job.m, job.k, job.b
+            )));
+        }
+        if job.b == 1 {
+            let nnz = ((job.m * job.k) as f64 * job.density).round() as usize;
+            return Ok(gpu::cusparse_csr::csr_spmm_seconds(
+                job.m, job.k, job.n, nnz, job.dtype, &env.gpu,
+            ));
+        }
+        let grid = (job.m / job.b) * (job.k / job.b);
+        let nnz_b = ((grid as f64 * job.density).round() as usize).clamp(1, grid);
+        // cusparseSbsrmm is FP32-only (paper Table 1): FP16 jobs are
+        // modelled on the FP32 path, the best the real API offers.
+        gpu::cusparse_bsr::bsrmm_seconds(
+            job.m,
+            job.k,
+            job.n,
+            nnz_b,
+            job.b,
+            DType::Fp32,
+            &env.gpu,
+        )
+        .ok_or_else(|| Error::Plan("cusparse BSR rejected the configuration".into()))
+    }
+}
+
+impl Backend for GpuBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Gpu
+    }
+
+    fn plan(&self, job: &JobSpec, env: &EngineEnv) -> Result<PlanEstimate> {
+        let secs = Self::seconds(job, env)?;
+        let d = if job.density >= 1.0 { 1.0 } else { job.density };
+        let flops = crate::spmm_flops(job.m, job.k, job.n, d);
+        Ok(PlanEstimate {
+            kind: BackendKind::Gpu,
+            cycles: (secs * env.spec.clock_hz).ceil() as u64,
+            tflops: flops / secs / 1e12,
+            propagation_steps: 0,
+        })
+    }
+}
+
+/// The device-executable backends, in the order the selector evaluates
+/// them (the GPU baseline is analytical only and excluded).
+pub fn device_backends() -> [&'static dyn Backend; 3] {
+    [&DenseBackend, &StaticBackend, &DynamicBackend]
+}
+
+/// Look up a backend by kind.
+pub fn backend_for(kind: BackendKind) -> &'static dyn Backend {
+    match kind {
+        BackendKind::Dense => &DenseBackend,
+        BackendKind::Static => &StaticBackend,
+        BackendKind::Dynamic => &DynamicBackend,
+        BackendKind::Gpu => &GpuBackend,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(density: f64, b: usize) -> JobSpec {
+        JobSpec {
+            mode: Mode::Auto,
+            m: 1024,
+            k: 1024,
+            n: 512,
+            b,
+            density,
+            dtype: DType::Fp16,
+            pattern_seed: 7,
+        }
+    }
+
+    #[test]
+    fn all_backends_plan_the_paper_point() {
+        let env = EngineEnv::default();
+        let j = job(1.0 / 16.0, 16);
+        for backend in device_backends() {
+            let e = backend.plan(&j, &env).unwrap();
+            assert!(e.cycles > 0, "{:?}: zero cycles", e.kind);
+            assert!(e.tflops > 0.0);
+            assert_eq!(e.kind, backend.kind());
+        }
+        let g = GpuBackend.plan(&j, &env).unwrap();
+        assert!(g.cycles > 0 && g.tflops > 0.0);
+    }
+
+    #[test]
+    fn static_never_exceeds_dynamic_execution() {
+        // Table 3's invariant, through the engine interface: dynamic
+        // *execution* (the actual bucketed pattern) never beats static
+        // on the same uniform problem. The dynamic plan estimate alone
+        // is a balanced-pattern expectation and may undercut static by
+        // a sliver near ties — which is exactly why the selector's
+        // tolerance is documented rather than assumed zero.
+        let env = EngineEnv::default();
+        for b in [4usize, 8, 16] {
+            let j = job(1.0 / 8.0, b);
+            let st = StaticBackend.plan(&j, &env).unwrap();
+            let dy = DynamicBackend.execute(&j, &env).unwrap();
+            assert!(
+                st.cycles <= dy.cycles,
+                "b={b}: static {} > dynamic execution {}",
+                st.cycles,
+                dy.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn execute_reports_estimate_and_cycles() {
+        let env = EngineEnv::default();
+        let j = job(1.0 / 16.0, 16);
+        let r = DynamicBackend.execute(&j, &env).unwrap();
+        assert!(r.cycles > 0);
+        assert_eq!(r.spec.m, 1024);
+        let est = r.estimated_cycles.expect("engine executes carry estimates");
+        assert!(est > 0);
+        let s = StaticBackend.execute(&j, &env).unwrap();
+        assert_eq!(Some(s.cycles), s.estimated_cycles, "static execution is its plan");
+    }
+
+    #[test]
+    fn gpu_backend_is_fp32_bound_for_blocks() {
+        // FP16 block-sparse jobs fall back to the FP32 BSR path, so the
+        // dtype does not change the estimate (paper Table 1).
+        let env = EngineEnv::default();
+        let mut j16 = job(1.0 / 16.0, 16);
+        let mut j32 = j16.clone();
+        j16.dtype = DType::Fp16;
+        j32.dtype = DType::Fp32;
+        let a = GpuBackend.plan(&j16, &env).unwrap();
+        let b = GpuBackend.plan(&j32, &env).unwrap();
+        assert_eq!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn kinds_map_to_modes() {
+        assert_eq!(BackendKind::Dense.as_mode(), Some(Mode::Dense));
+        assert_eq!(BackendKind::Static.as_mode(), Some(Mode::Static));
+        assert_eq!(BackendKind::Dynamic.as_mode(), Some(Mode::Dynamic));
+        assert_eq!(BackendKind::Gpu.as_mode(), None);
+    }
+}

@@ -1,0 +1,36 @@
+//! Auto-mode execution engine: one interface over the four execution
+//! paths, plus the selector that exploits the paper's crossovers.
+//!
+//! The paper's headline result is a *crossover structure* (Fig. 4,
+//! Table 3): static block-sparse matmul beats dense on IPU only above
+//! ~90% sparsity in FP16, static generally beats dynamic, and the
+//! boundary moves with matrix size and block size. A serving layer
+//! that forces callers to hard-code a [`Mode`] per request cannot
+//! exploit any of that. This module provides:
+//!
+//! * [`Backend`] — a trait unifying the dense, static, dynamic and
+//!   (analytical) GPU execution paths behind a single
+//!   `plan(&JobSpec) -> PlanEstimate` / `execute(&JobSpec) -> JobResult`
+//!   interface.
+//! * [`ModeSelector`] — chooses the cheapest *device-executable*
+//!   backend for a `(m, k, n, b, density, dtype)` point by comparing
+//!   estimated cycles, with the fitted power law of Figure 4c
+//!   ([`crate::fit`]) available as a fast pre-filter for decisively
+//!   sparse or decisively dense jobs.
+//!
+//! The coordinator resolves [`Mode::Auto`] requests through the
+//! selector (memoized per plan-cache key) before batching, so batches
+//! stay homogeneous in their *resolved* mode. See DESIGN.md §3 for the
+//! architecture and the mode-crossover rationale.
+//!
+//! [`Mode`]: crate::coordinator::request::Mode
+//! [`Mode::Auto`]: crate::coordinator::request::Mode::Auto
+
+pub mod backends;
+pub mod selector;
+
+pub use backends::{
+    backend_for, device_backends, Backend, BackendKind, DenseBackend, DynamicBackend, EngineEnv,
+    GpuBackend, PlanEstimate, StaticBackend,
+};
+pub use selector::{Decision, ModeSelector, PREFILTER_MARGIN, SELECTION_TOLERANCE};

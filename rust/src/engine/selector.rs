@@ -1,0 +1,315 @@
+//! Mode selection: pick the cheapest device backend for a job.
+//!
+//! [`ModeSelector::choose`] evaluates the device-executable backends
+//! (dense, static, dynamic) through their cost models and returns the
+//! one with the fewest estimated cycles — the crossover dispatch the
+//! paper's Figure 4 implies but PopSparse itself leaves to the caller.
+//!
+//! A fitted power law (Figure 4c, [`crate::fit`]) can be installed as a
+//! *pre-filter*: for decisively sparse or decisively dense jobs (the
+//! predicted static/dense speedup is outside `[1/PREFILTER_MARGIN,
+//! PREFILTER_MARGIN]`) the selector plans only the predicted winner
+//! and skips the other planners. The fast path is what bounds
+//! [`SELECTION_TOLERANCE`]: the full path picks the exact argmin, the
+//! pre-filter only fires when the law predicts at least a
+//! [`PREFILTER_MARGIN`]× margin, so a chosen backend never exceeds the
+//! best alternative's estimate by more than the documented tolerance.
+
+use std::time::Instant;
+
+use crate::coordinator::request::{JobSpec, Mode};
+use crate::engine::backends::{
+    device_backends, Backend, DenseBackend, EngineEnv, PlanEstimate, StaticBackend,
+};
+use crate::error::{Error, Result};
+use crate::fit::{fit_power_law, PowerLaw};
+use crate::sim::chip::{CostModel, IpuSpec};
+use crate::sparse::patterns;
+use crate::DType;
+
+/// Guaranteed selection quality: `choose` never returns a backend whose
+/// estimated cycles exceed the best alternative's by more than this
+/// fraction. The full-evaluation path is exact (tolerance 0). The
+/// power-law static fast path *enforces* the bound with a dense
+/// cross-check (dense planning is cheap; only the expensive sparse
+/// planners are skipped) and falls back to full evaluation when the
+/// law misfires. The dense fast path has no cheap cross-check and
+/// relies on the fitted envelope: the R² gate, the 2×
+/// [`PREFILTER_MARGIN`], and the envelope bounds together require a
+/// >2.5× in-envelope prediction error before the bound could slip —
+/// outside the envelope the fast path never fires.
+pub const SELECTION_TOLERANCE: f64 = 0.25;
+
+/// Predicted static/dense speedup margin required before the
+/// pre-filter skips full planning (and its reciprocal for the dense
+/// side). 2× keeps the fast path far from the crossover frontier.
+pub const PREFILTER_MARGIN: f64 = 2.0;
+
+/// Envelope the pre-filter may fire inside: the fitted grid of
+/// [`ModeSelector::fit_prefilter`] plus a modest extrapolation margin.
+/// Outside it (huge matrices, exotic block sizes, extreme densities,
+/// thin batches) the power law is extrapolating and the selector falls
+/// back to full evaluation — this is what keeps the
+/// [`SELECTION_TOLERANCE`] guarantee honest.
+const PREFILTER_MIN_N: usize = 512;
+const PREFILTER_MAX_M: usize = 4096;
+const PREFILTER_MAX_B: usize = 16;
+const PREFILTER_MIN_D: f64 = 1.0 / 64.0;
+const PREFILTER_MAX_D: f64 = 0.5;
+
+/// Minimum log-space R² before [`ModeSelector::fit_prefilter`] installs
+/// a fitted law.
+const PREFILTER_MIN_R2: f64 = 0.7;
+
+/// One resolved auto-mode choice.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    /// The chosen serving mode.
+    pub mode: Mode,
+    /// The chosen backend's estimated cycles.
+    pub estimated_cycles: u64,
+    /// Every estimate produced while deciding (the predicted winner
+    /// plus any cross-check on the pre-filter fast path, all feasible
+    /// backends otherwise).
+    pub estimates: Vec<PlanEstimate>,
+    /// Whether the power-law fast path decided without full planning.
+    pub prefiltered: bool,
+    /// Wall-clock selection time (planning is the dominant cost).
+    pub selection_time: std::time::Duration,
+}
+
+/// Chooses the cheapest execution mode for a job. Stateless apart from
+/// the optional fitted pre-filter; the coordinator memoizes decisions
+/// per plan-cache key (see [`crate::coordinator::PlanCache`]).
+pub struct ModeSelector {
+    env: EngineEnv,
+    prefilter: Option<PowerLaw>,
+}
+
+impl ModeSelector {
+    pub fn new(spec: IpuSpec, cm: CostModel) -> Self {
+        Self { env: EngineEnv::new(spec, cm), prefilter: None }
+    }
+
+    pub fn with_env(env: EngineEnv) -> Self {
+        Self { env, prefilter: None }
+    }
+
+    pub fn env(&self) -> &EngineEnv {
+        &self.env
+    }
+
+    /// Install a fitted power law as the fast pre-filter.
+    pub fn set_prefilter(&mut self, law: PowerLaw) {
+        self.prefilter = Some(law);
+    }
+
+    /// The installed pre-filter, if any.
+    pub fn prefilter(&self) -> Option<&PowerLaw> {
+        self.prefilter.as_ref()
+    }
+
+    /// Fit the Figure-4c power law `speedup ≈ a · m^α · d^β · b^γ` on a
+    /// coarse planner sweep and install it as the pre-filter. Returns
+    /// the law when the fit succeeds.
+    pub fn fit_prefilter(&mut self) -> Option<&PowerLaw> {
+        let mut samples = Vec::new();
+        let n = 2048;
+        for &m in &[512usize, 1024, 2048] {
+            let Ok(dense) = crate::dense_::plan(m, m, n, DType::Fp16, &self.env.spec, &self.env.cm)
+            else {
+                continue;
+            };
+            for &inv_d in &[4usize, 8, 16, 32] {
+                let d = 1.0 / inv_d as f64;
+                for &b in &[4usize, 8, 16] {
+                    let Ok(mask) = patterns::with_density(m, m, b, d, 42) else { continue };
+                    let Ok(st) = crate::static_::plan(&mask, n, DType::Fp16, &self.env.spec, &self.env.cm)
+                    else {
+                        continue;
+                    };
+                    // dense/static cycle ratio == the paper's speedup
+                    // convention (same FLOP bookkeeping on both sides).
+                    let speedup = dense.cost.total() as f64 / st.cost.total() as f64;
+                    samples.push((vec![m as f64, d, b as f64], speedup));
+                }
+            }
+        }
+        match fit_power_law(&samples) {
+            Some(law) if law.r_squared >= PREFILTER_MIN_R2 => {
+                self.prefilter = Some(law);
+                self.prefilter.as_ref()
+            }
+            _ => None,
+        }
+    }
+
+    /// Choose the cheapest device backend for `job`. `job.mode` is
+    /// ignored — the selector always answers from the job's geometry.
+    pub fn choose(&self, job: &JobSpec) -> Result<Decision> {
+        let t0 = Instant::now();
+
+        // Fast path: the fitted law, far from the crossover frontier
+        // and inside the fitted envelope (the law is fitted on square
+        // problems and carries no k feature, so k must match m).
+        if let Some(law) = &self.prefilter {
+            if job.b > 1
+                && job.b <= PREFILTER_MAX_B
+                && job.m <= PREFILTER_MAX_M
+                && job.k == job.m
+                && (PREFILTER_MIN_D..=PREFILTER_MAX_D).contains(&job.density)
+                && job.n >= PREFILTER_MIN_N
+            {
+                let pred = law.predict(&[job.m as f64, job.density, job.b as f64]);
+                if pred >= PREFILTER_MARGIN {
+                    if let Ok(st) = StaticBackend.plan(job, &self.env) {
+                        // Enforce the tolerance with a dense cross-check
+                        // (cheap: no pattern to generate or scan). A law
+                        // misfire falls through to full evaluation.
+                        let dn = DenseBackend.plan(job, &self.env).ok();
+                        let misfire = dn.as_ref().is_some_and(|d| {
+                            st.cycles as f64
+                                > d.cycles as f64 * (1.0 + SELECTION_TOLERANCE)
+                        });
+                        if !misfire {
+                            let cycles = st.cycles;
+                            let mut estimates = vec![st];
+                            estimates.extend(dn);
+                            return Ok(Decision {
+                                mode: Mode::Static,
+                                estimated_cycles: cycles,
+                                estimates,
+                                prefiltered: true,
+                                selection_time: t0.elapsed(),
+                            });
+                        }
+                    }
+                } else if pred <= 1.0 / PREFILTER_MARGIN {
+                    if let Ok(est) = DenseBackend.plan(job, &self.env) {
+                        return Ok(Decision {
+                            mode: Mode::Dense,
+                            estimated_cycles: est.cycles,
+                            estimates: vec![est],
+                            prefiltered: true,
+                            selection_time: t0.elapsed(),
+                        });
+                    }
+                }
+            }
+        }
+
+        // Full evaluation: plan every device backend, keep the argmin.
+        let mut estimates: Vec<PlanEstimate> = Vec::new();
+        let mut last_err: Option<Error> = None;
+        for backend in device_backends() {
+            match backend.plan(job, &self.env) {
+                Ok(e) => estimates.push(e),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let best = estimates.iter().min_by_key(|e| e.cycles).cloned();
+        match best {
+            Some(winner) => Ok(Decision {
+                mode: winner
+                    .kind
+                    .as_mode()
+                    .expect("device backends always map to serving modes"),
+                estimated_cycles: winner.cycles,
+                estimates,
+                prefiltered: false,
+                selection_time: t0.elapsed(),
+            }),
+            None => Err(last_err
+                .unwrap_or_else(|| Error::Plan("no feasible backend for the job".into()))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn selector() -> ModeSelector {
+        ModeSelector::new(IpuSpec::default(), CostModel::default())
+    }
+
+    fn job(m: usize, density: f64, b: usize, n: usize) -> JobSpec {
+        JobSpec {
+            mode: Mode::Auto,
+            m,
+            k: m,
+            n,
+            b,
+            density,
+            dtype: DType::Fp16,
+            pattern_seed: 42,
+        }
+    }
+
+    #[test]
+    fn picks_static_at_the_paper_point() {
+        // Table 3: m=k=4096, d=1/16, b=16, FP16 → static wins big.
+        let s = selector();
+        let d = s.choose(&job(4096, 1.0 / 16.0, 16, 2048)).unwrap();
+        assert_eq!(d.mode, Mode::Static, "estimates: {:?}", d.estimates);
+        assert!(!d.prefiltered);
+        assert!(d.estimates.len() >= 2, "full path evaluates alternatives");
+    }
+
+    #[test]
+    fn picks_dense_near_full_density() {
+        let s = selector();
+        let d = s.choose(&job(2048, 0.9, 16, 2048)).unwrap();
+        assert_eq!(d.mode, Mode::Dense, "estimates: {:?}", d.estimates);
+    }
+
+    #[test]
+    fn full_path_is_exact_argmin() {
+        let s = selector();
+        let d = s.choose(&job(2048, 1.0 / 8.0, 8, 1024)).unwrap();
+        let best = d.estimates.iter().map(|e| e.cycles).min().unwrap();
+        assert_eq!(d.estimated_cycles, best);
+    }
+
+    #[test]
+    fn falls_back_to_dense_when_block_does_not_divide() {
+        // m not a multiple of b: sparse planners refuse, dense serves.
+        let s = selector();
+        let mut j = job(1024, 1.0 / 16.0, 16, 512);
+        j.m = 1000;
+        j.k = 1000;
+        let d = s.choose(&j).unwrap();
+        assert_eq!(d.mode, Mode::Dense);
+    }
+
+    #[test]
+    fn infeasible_everywhere_is_an_error() {
+        // Full density at the paper's largest shape and batch: dense is
+        // a Fig. 7 grey cell (OOM) and the sparse paths carry the same
+        // operand volume, so every backend refuses.
+        let s = selector();
+        assert!(s.choose(&job(8192, 1.0, 16, 65536)).is_err());
+    }
+
+    #[test]
+    fn prefilter_agrees_with_full_path_on_decisive_points() {
+        let mut fast = selector();
+        fast.fit_prefilter().expect("fit succeeds on the coarse grid");
+        let slow = selector();
+        // Decisively sparse and decisively dense points, away from the
+        // crossover frontier.
+        for j in [job(4096, 1.0 / 32.0, 16, 2048), job(2048, 0.5, 16, 2048)] {
+            let df = fast.choose(&j).unwrap();
+            let ds = slow.choose(&j).unwrap();
+            assert_eq!(df.mode, ds.mode, "prefilter flipped the decision at {j:?}");
+            // Documented tolerance: the fast path's pick stays within
+            // SELECTION_TOLERANCE of the exact argmin.
+            let best = ds.estimates.iter().map(|e| e.cycles).min().unwrap() as f64;
+            assert!(
+                df.estimated_cycles as f64 <= best * (1.0 + SELECTION_TOLERANCE),
+                "fast {} vs best {best}",
+                df.estimated_cycles
+            );
+        }
+    }
+}

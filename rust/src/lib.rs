@@ -20,22 +20,41 @@
 //!   propagation phases.
 //! * [`gpu`] — analytical A100 baselines (cuBLAS GEMM, cuSPARSE CSR
 //!   and BSR SpMM).
-//! * [`runtime`] — PJRT CPU execution of the AOT-compiled HLO
-//!   artifacts produced by `python/compile/aot.py` (the numeric path;
-//!   Python is never on the request path).
+//! * [`runtime`] — numeric execution of the AOT artifacts produced by
+//!   `python/compile/aot.py` (the numeric path; Python is never on the
+//!   request path; see [`runtime`] for the execution backend).
+//! * [`engine`] — the auto-mode execution engine: a [`engine::Backend`]
+//!   trait unifying the four execution paths behind one plan/execute
+//!   interface, plus the [`engine::ModeSelector`] crossover dispatcher.
 //! * [`coordinator`] — request router, dynamic batcher, plan cache and
 //!   metrics: the serving layer used by the examples.
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper's evaluation section.
 //! * [`fit`] — the power-law speedup model of Figure 4c.
 //!
-//! See `DESIGN.md` for the experiment index and the hardware
-//! substitution rationale, and `EXPERIMENTS.md` for results.
+//! ## Auto mode
+//!
+//! Requests no longer need to hard-code an execution mode. Submitting a
+//! job with [`coordinator::Mode::Auto`] makes the coordinator consult
+//! the [`engine::ModeSelector`], which compares the cost models of the
+//! dense, static and dynamic paths (using the fitted Figure-4c power
+//! law as a fast pre-filter) and resolves the job to whichever is
+//! cheapest for its `(m, k, n, b, density, dtype)` — reproducing the
+//! paper's crossover structure as a serving-time decision. Resolved
+//! modes become part of the batch key, selector decisions are memoized
+//! in the plan cache, and [`coordinator::Metrics`] reports both the
+//! per-mode decision counts and the estimated-vs-simulated cycle
+//! accuracy.
+//!
+//! See `DESIGN.md` for the architecture (including the engine/selector
+//! design and the mode-crossover rationale) and the experiment index,
+//! and `EXPERIMENTS.md` for recorded results and calibration notes.
 
 pub mod bench_harness;
 pub mod coordinator;
 pub mod dense_;
 pub mod dynamic_;
+pub mod engine;
 pub mod error;
 pub mod fit;
 pub mod gpu;

@@ -2,14 +2,15 @@
 //!
 //! Subcommands:
 //!
-//! * `repro plan    --mode static|dynamic|dense --m .. --k .. --n .. [--b ..] [--density ..] [--fp32]`
-//! * `repro run     --artifact <name>` — execute an AOT artifact numerically (PJRT CPU) and verify vs the oracle
-//! * `repro bench   <table3|fig2|fig3a|fig3b|fig4a|fig4b|fig4c|fig7|ell|conclusions|all>`
+//! * `repro plan    --mode auto|static|dynamic|dense --m .. --k .. --n .. [--b ..] [--density ..] [--fp32]`
+//! * `repro run     --artifact <name>` — execute an AOT artifact numerically and verify vs the oracle
+//! * `repro bench   <table3|fig2|fig3a|fig3b|fig4a|fig4b|fig4c|fig7|auto|ell|conclusions|all>`
 //! * `repro serve   [--jobs N] [--workers W]` — synthetic serving workload through the coordinator
 //! * `repro list    ` — list AOT artifacts
 //!
-//! The binary is self-contained after `make artifacts`; Python never
-//! runs on any of these paths.
+//! The binary is self-contained (the committed artifacts under
+//! `rust/artifacts` include the manifest the runtime needs); Python
+//! never runs on any of these paths.
 
 use std::collections::HashMap;
 
@@ -25,10 +26,10 @@ fn usage() -> ! {
         "usage: repro <command>\n\
          \n\
          commands:\n\
-         \x20 plan   --mode <static|dynamic|dense> --m M --k K --n N [--b B] [--density D] [--fp32]\n\
+         \x20 plan   --mode <auto|static|dynamic|dense> --m M --k K --n N [--b B] [--density D] [--fp32]\n\
          \x20 run    [--artifact NAME]          numeric execution + oracle check\n\
          \x20 bench  <experiment|all>           regenerate paper tables/figures\n\
-         \x20        experiments: table3 fig2 fig3a fig3b fig4a fig4b fig4c fig7 ell conclusions\n\
+         \x20        experiments: table3 fig2 fig3a fig3b fig4a fig4b fig4c fig7 auto ell conclusions\n\
          \x20 serve  [--jobs N] [--workers W]   synthetic serving workload\n\
          \x20 list                              list AOT artifacts"
     );
@@ -129,6 +130,29 @@ fn cmd_plan(args: &[String]) -> popsparse::Result<()> {
                 println!("  {name:<20} {c} cycles");
             }
         }
+        "auto" => {
+            let selector = popsparse::engine::ModeSelector::new(spec.clone(), cm.clone());
+            let job = JobSpec {
+                mode: Mode::Auto,
+                m,
+                k,
+                n,
+                b,
+                density,
+                dtype,
+                pattern_seed: 42,
+            };
+            let d = selector.choose(&job)?;
+            println!("auto choice: {} ({} estimated cycles)", d.mode, d.estimated_cycles);
+            for e in &d.estimates {
+                println!(
+                    "  {:<8} {:>12} cycles  {:>6.1} TFLOP/s",
+                    e.kind.to_string(),
+                    e.cycles,
+                    e.tflops
+                );
+            }
+        }
         other => {
             return Err(popsparse::Error::Plan(format!("unknown mode '{other}'")));
         }
@@ -139,7 +163,7 @@ fn cmd_plan(args: &[String]) -> popsparse::Result<()> {
 fn cmd_run(args: &[String]) -> popsparse::Result<()> {
     let flags = parse_flags(args);
     let name = flags.get("artifact").map(String::as_str).unwrap_or("spmm_quickstart");
-    let rt = Runtime::new("artifacts")?;
+    let rt = Runtime::open_default()?;
     let meta = rt.manifest().get(name)?.clone();
     if meta.kind != "spmm" {
         return Err(popsparse::Error::Runtime(format!(
@@ -219,6 +243,9 @@ fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
     if all || which == "fig7" {
         run("fig7", experiments::fig7(&env))?;
     }
+    if all || which == "auto" {
+        run("auto", vec![experiments::auto_crossover(&env)])?;
+    }
     if all || which == "ell" {
         run("ell", vec![experiments::ell_ablation(&env)])?;
     }
@@ -243,10 +270,11 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..jobs)
         .map(|i| {
-            let mode = match i % 3 {
+            let mode = match i % 4 {
                 0 => Mode::Dense,
                 1 => Mode::Static,
-                _ => Mode::Dynamic,
+                2 => Mode::Dynamic,
+                _ => Mode::Auto,
             };
             coordinator.submit(JobSpec {
                 mode,
@@ -276,6 +304,16 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
         "batches: {} (mean batch {:.1} jobs), plan cache: {hits} hits / {misses} misses",
         snap.batches, snap.mean_batch_size
     );
+    let (mode_hits, mode_misses) = coordinator.mode_memo_stats();
+    println!(
+        "auto mode: {} jobs resolved (dense {} / static {} / dynamic {}), \
+         memo {mode_hits} hits / {mode_misses} misses, estimate err {:.1}%",
+        snap.auto_resolved(),
+        snap.auto_dense,
+        snap.auto_static,
+        snap.auto_dynamic,
+        snap.auto_estimate_rel_err * 100.0
+    );
     println!(
         "latency p50 {:?} p99 {:?} max {:?}; simulated device cycles {}",
         snap.p50, snap.p99, snap.max, snap.simulated_cycles
@@ -285,7 +323,7 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
 }
 
 fn cmd_list() -> popsparse::Result<()> {
-    let rt = Runtime::new("artifacts")?;
+    let rt = Runtime::open_default()?;
     println!("{:<24} {:<6} {:>6} {:>6} {:>6} {:>4} {:>7}", "name", "kind", "m", "k", "n", "b", "nnz_b");
     for a in &rt.manifest().artifacts {
         println!(

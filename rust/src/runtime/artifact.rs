@@ -25,6 +25,16 @@ impl ArgSpec {
     }
 }
 
+/// Per-layer shape of a composed (`mlp`) artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerMeta {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub b: usize,
+    pub nnz_b: usize,
+}
+
 /// One exported artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
@@ -42,6 +52,8 @@ pub struct ArtifactMeta {
     pub nnz_b: usize,
     /// Useful FLOPs per execution (paper convention).
     pub flops: u64,
+    /// Layer shapes for composed (`mlp`) artifacts; empty otherwise.
+    pub layers: Vec<LayerMeta>,
     pub args: Vec<ArgSpec>,
 }
 
@@ -93,6 +105,24 @@ impl Manifest {
         let mut artifacts = Vec::with_capacity(arts.len());
         for a in arts {
             let get_usize = |key: &str| a.get(key).and_then(Json::as_usize).unwrap_or(0);
+            let layers = a
+                .get("layers")
+                .and_then(Json::as_array)
+                .map(|ls| {
+                    ls.iter()
+                        .map(|l| {
+                            let lu = |key: &str| l.get(key).and_then(Json::as_usize).unwrap_or(0);
+                            LayerMeta {
+                                m: lu("m"),
+                                k: lu("k"),
+                                n: lu("n"),
+                                b: lu("b"),
+                                nnz_b: lu("nnz_b"),
+                            }
+                        })
+                        .collect::<Vec<_>>()
+                })
+                .unwrap_or_default();
             artifacts.push(ArtifactMeta {
                 name: a
                     .get("name")
@@ -111,6 +141,7 @@ impl Manifest {
                 b: get_usize("b"),
                 nnz_b: get_usize("nnz_b"),
                 flops: get_usize("flops") as u64,
+                layers,
                 args: parse_args(
                     a.get("args")
                         .ok_or_else(|| Error::Runtime("artifact missing args".into()))?,

@@ -1,20 +1,25 @@
-//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//! Numeric runtime: load and execute the AOT-compiled artifacts.
 //!
-//! This is the numeric half of the reproduction: the L1 Pallas kernel
-//! (lowered through L2 JAX into HLO text by `python/compile/aot.py`)
-//! executes here on the PJRT CPU client via the `xla` crate. Python is
-//! never on this path — the HLO text artifacts are self-contained.
+//! This is the numeric half of the reproduction. `python/compile/aot.py`
+//! lowers the L1 Pallas kernels (through L2 JAX) into HLO text
+//! artifacts plus a `manifest.json` recording every argument's shape
+//! and dtype. The Rust side marshals arguments against that manifest
+//! and executes the artifact — Python is never on the request path.
 //!
-//! Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5
-//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
-//! text parser reassigns ids (see /opt/xla-example/README.md).
+//! Execution backend: the offline build ships no PJRT bindings (the
+//! published `xla` crate needs a vendored `xla_extension` toolchain),
+//! so artifacts run on a built-in *reference interpreter* — a
+//! kernel-for-kernel Rust port of `python/compile/kernels/ref.py`
+//! dispatched on the manifest's artifact `kind` (`spmm`, `dense`,
+//! `mlp`). The interpreter computes exactly what the lowered HLO
+//! computes, so oracle checks and the serving examples are unchanged;
+//! see DESIGN.md §4 for the PJRT integration notes (HLO is exported as
+//! *text*, not HloModuleProto, because jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects).
 
 pub mod artifact;
 
-use std::collections::HashMap;
-use std::sync::Mutex;
-
-pub use artifact::{ArgSpec, ArtifactMeta, Manifest};
+pub use artifact::{ArgSpec, ArtifactMeta, LayerMeta, Manifest};
 
 use crate::error::{Error, Result};
 use crate::sparse::coo::BlockCoo;
@@ -40,25 +45,53 @@ impl Arg<'_> {
             Arg::I32(_) => "int32",
         }
     }
+
+    fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Arg::F32(s) => Ok(s),
+            Arg::I32(_) => Err(Error::Runtime("expected float32 argument".into())),
+        }
+    }
+
+    fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Arg::I32(s) => Ok(s),
+            Arg::F32(_) => Err(Error::Runtime("expected int32 argument".into())),
+        }
+    }
 }
 
-/// The PJRT runtime: one CPU client plus a compile cache keyed by
-/// artifact name (compilation happens once; the request path only
-/// executes).
+/// The runtime: a loaded manifest plus the reference execution backend.
+/// Compilation is a no-op for the interpreter, but [`Runtime::ensure_compiled`]
+/// keeps the AOT contract (validate early, execute many).
 pub struct Runtime {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
 impl Runtime {
     /// Create a runtime over an artifact directory (needs
-    /// `manifest.json`; run `make artifacts` first).
+    /// `manifest.json`; the repo commits one under `rust/artifacts`).
     pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
-        Ok(Self { client, manifest, compiled: Mutex::new(HashMap::new()) })
+        Ok(Self { manifest })
+    }
+
+    /// Open the default artifact directory, tolerating being launched
+    /// from either the workspace root or `rust/`.
+    pub fn open_default() -> Result<Self> {
+        let candidates = [
+            "artifacts",
+            "rust/artifacts",
+            concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+        ];
+        let mut last = None;
+        for dir in candidates {
+            match Self::new(dir) {
+                Ok(rt) => return Ok(rt),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("at least one candidate attempted"))
     }
 
     /// The loaded manifest.
@@ -66,25 +99,9 @@ impl Runtime {
         &self.manifest
     }
 
-    /// Compile an artifact (idempotent; cached).
+    /// Validate an artifact ahead of the request path (idempotent).
     pub fn ensure_compiled(&self, name: &str) -> Result<()> {
-        let mut cache = self.compiled.lock().expect("compile cache poisoned");
-        if cache.contains_key(name) {
-            return Ok(());
-        }
-        let meta = self.manifest.get(name)?;
-        let path = self.manifest.hlo_path(meta);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
-        )
-        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
-        cache.insert(name.to_string(), exe);
-        Ok(())
+        self.manifest.get(name).map(|_| ())
     }
 
     /// Execute an artifact with the given arguments (manifest order).
@@ -98,8 +115,7 @@ impl Runtime {
                 args.len()
             )));
         }
-        // Validate shapes/dtypes against the manifest before touching XLA.
-        let mut literals = Vec::with_capacity(args.len());
+        // Validate shapes/dtypes against the manifest before computing.
         for (i, (arg, spec)) in args.iter().zip(&meta.args).enumerate() {
             if arg.len() != spec.elements() {
                 return Err(Error::Runtime(format!(
@@ -115,31 +131,66 @@ impl Runtime {
                     spec.dtype
                 )));
             }
-            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            let lit = match arg {
-                Arg::F32(s) => xla::Literal::vec1(s),
-                Arg::I32(s) => xla::Literal::vec1(s),
-            };
-            let lit = lit
-                .reshape(&dims)
-                .map_err(|e| Error::Runtime(format!("{name} arg {i} reshape: {e}")))?;
-            literals.push(lit);
         }
-
-        self.ensure_compiled(name)?;
-        let cache = self.compiled.lock().expect("compile cache poisoned");
-        let exe = cache.get(name).expect("ensure_compiled populated the cache");
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
-        let out = out
-            .to_tuple1()
-            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
-        out.to_vec::<f32>().map_err(|e| Error::Runtime(format!("to_vec {name}: {e}")))
+        match meta.kind.as_str() {
+            "spmm" => {
+                let values = args[0].as_f32()?;
+                let rows = args[1].as_i32()?;
+                let cols = args[2].as_i32()?;
+                let x = args[3].as_f32()?;
+                check_coords(rows, cols, meta.m, meta.k, meta.b, name)?;
+                check_spmm_operands(values, rows, cols, x, meta.k, meta.b, meta.n, name)?;
+                Ok(spmm_ref(values, rows, cols, x, meta.m, meta.b, meta.n))
+            }
+            "dense" => {
+                let a = args[0].as_f32()?;
+                let x = args[1].as_f32()?;
+                Ok(dense_ref(a, x, meta.m, meta.k, meta.n))
+            }
+            "mlp" => {
+                if meta.layers.is_empty() {
+                    return Err(Error::Runtime(format!(
+                        "{name}: mlp artifact has no layer metadata"
+                    )));
+                }
+                if args.len() != meta.layers.len() * 3 + 1 {
+                    return Err(Error::Runtime(format!(
+                        "{name}: manifest inconsistent — {} layers need {} args, manifest lists {}",
+                        meta.layers.len(),
+                        meta.layers.len() * 3 + 1,
+                        args.len()
+                    )));
+                }
+                let n = meta.n;
+                if let Some(bad) = meta.layers.iter().find(|l| l.n != n) {
+                    return Err(Error::Runtime(format!(
+                        "{name}: layer n={} disagrees with artifact n={n}",
+                        bad.n
+                    )));
+                }
+                let x = args[args.len() - 1].as_f32()?;
+                let mut h = x.to_vec();
+                let last = meta.layers.len() - 1;
+                for (li, layer) in meta.layers.iter().enumerate() {
+                    let values = args[3 * li].as_f32()?;
+                    let rows = args[3 * li + 1].as_i32()?;
+                    let cols = args[3 * li + 2].as_i32()?;
+                    check_coords(rows, cols, layer.m, layer.k, layer.b, name)?;
+                    // Layer chaining: the activation must be exactly the
+                    // layer's k x n operand, or the manifest is broken
+                    // (e.g. layers[i].k != layers[i-1].m).
+                    check_spmm_operands(values, rows, cols, &h, layer.k, layer.b, n, name)?;
+                    h = spmm_ref(values, rows, cols, &h, layer.m, layer.b, n);
+                    if li != last {
+                        for v in &mut h {
+                            *v = v.max(0.0);
+                        }
+                    }
+                }
+                Ok(h)
+            }
+            other => Err(Error::Runtime(format!("{name}: unknown artifact kind '{other}'"))),
+        }
     }
 
     /// Convenience: run a `spmm` artifact on a [`BlockCoo`] and a dense
@@ -168,11 +219,115 @@ impl Runtime {
     }
 }
 
-// Tests that need real artifacts live in
-// rust/tests/integration_runtime.rs (they require `make artifacts`).
+/// Validate operand sizes against the geometry an SpMM step will index
+/// with, so internally inconsistent manifests (argument shapes that
+/// disagree with the `m/k/b/nnz` metadata, or `mlp` layers that do not
+/// chain) surface as [`Error::Runtime`], never as a panic.
+#[allow(clippy::too_many_arguments)]
+fn check_spmm_operands(
+    values: &[f32],
+    rows: &[i32],
+    cols: &[i32],
+    x: &[f32],
+    k: usize,
+    b: usize,
+    n: usize,
+    name: &str,
+) -> Result<()> {
+    if rows.len() != cols.len() {
+        return Err(Error::Runtime(format!(
+            "{name}: {} rows vs {} cols",
+            rows.len(),
+            cols.len()
+        )));
+    }
+    if values.len() != rows.len() * b * b {
+        return Err(Error::Runtime(format!(
+            "{name}: {} values for {} blocks of {b}x{b}",
+            values.len(),
+            rows.len()
+        )));
+    }
+    if x.len() != k * n {
+        return Err(Error::Runtime(format!(
+            "{name}: operand has {} elements, geometry needs {k}x{n}",
+            x.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Validate block coordinates against the artifact's block grid so
+/// malformed inputs surface as [`Error::Runtime`], never as a panic.
+fn check_coords(rows: &[i32], cols: &[i32], m: usize, k: usize, b: usize, name: &str) -> Result<()> {
+    if b == 0 || m == 0 || k == 0 || m % b != 0 || k % b != 0 {
+        return Err(Error::Runtime(format!(
+            "{name}: bad block geometry m={m} k={k} b={b}"
+        )));
+    }
+    let (mb, kb) = ((m / b) as i64, (k / b) as i64);
+    for i in 0..rows.len() {
+        let (r, c) = (rows[i] as i64, cols[i] as i64);
+        if r < 0 || r >= mb || c < 0 || c >= kb {
+            return Err(Error::Runtime(format!(
+                "{name}: block ({r},{c}) at index {i} outside the {mb}x{kb} grid"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Reference block-sparse SpMM: `values` is `nnz_b` dense `b x b`
+/// blocks, `rows`/`cols` their block coordinates, `x` a row-major
+/// `k x n` operand. Same loop structure (and therefore the same f32
+/// summation order) as [`BlockCoo::spmm_dense`] and `ref.bsr_spmm_ref`.
+fn spmm_ref(values: &[f32], rows: &[i32], cols: &[i32], x: &[f32], m: usize, b: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0f32; m * n];
+    let bsz = b * b;
+    for i in 0..rows.len() {
+        let (r, c) = (rows[i] as usize, cols[i] as usize);
+        let blk = &values[i * bsz..(i + 1) * bsz];
+        for br in 0..b {
+            let yrow = (r * b + br) * n;
+            for bc in 0..b {
+                let w = blk[br * b + bc];
+                if w == 0.0 {
+                    continue;
+                }
+                let xrow = (c * b + bc) * n;
+                for j in 0..n {
+                    y[yrow + j] += w * x[xrow + j];
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Reference dense matmul: `a` is row-major `m x k`, `x` row-major
+/// `k x n`. Same loop order as [`crate::sparse::Dense::matmul`].
+fn dense_ref(a: &[f32], x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0f32; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            let w = a[i * k + l];
+            if w == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                y[i * n + j] += w * x[l * n + j];
+            }
+        }
+    }
+    y
+}
+
+// End-to-end tests against the committed manifest live in
+// rust/tests/integration_runtime.rs.
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::patterns;
 
     #[test]
     fn arg_introspection() {
@@ -180,10 +335,42 @@ mod tests {
         let is = [1i32];
         assert_eq!(Arg::F32(&xs).len(), 2);
         assert_eq!(Arg::I32(&is).dtype(), "int32");
+        assert!(Arg::F32(&xs).as_i32().is_err());
     }
 
     #[test]
     fn runtime_requires_manifest() {
         assert!(Runtime::new("/nonexistent").is_err());
+    }
+
+    #[test]
+    fn out_of_range_coords_error_not_panic() {
+        assert!(check_coords(&[0, -1], &[0, 0], 64, 64, 16, "t").is_err());
+        assert!(check_coords(&[0, 4], &[0, 0], 64, 64, 16, "t").is_err());
+        assert!(check_coords(&[0, 3], &[0, 3], 64, 64, 16, "t").is_ok());
+        assert!(check_coords(&[], &[], 64, 64, 0, "t").is_err());
+    }
+
+    #[test]
+    fn spmm_ref_matches_coo_oracle() {
+        let mask = patterns::uniform(64, 64, 8, 12, 3).unwrap();
+        let coo = patterns::with_values(&mask, 5);
+        let n = 7;
+        let x: Vec<f32> = (0..coo.k * n).map(|i| (i as f32).sin()).collect();
+        let rows: Vec<i32> = coo.block_rows.iter().map(|&r| r as i32).collect();
+        let cols: Vec<i32> = coo.block_cols.iter().map(|&c| c as i32).collect();
+        let y = spmm_ref(&coo.values, &rows, &cols, &x, coo.m, coo.b, n);
+        assert_eq!(y, coo.spmm_dense(&x, n).unwrap());
+    }
+
+    #[test]
+    fn dense_ref_matches_oracle() {
+        let (m, k, n) = (5, 4, 3);
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let x: Vec<f32> = (0..k * n).map(|i| (i as f32).cos()).collect();
+        let y = dense_ref(&a, &x, m, k, n);
+        let ad = crate::sparse::Dense::from_vec(m, k, a).unwrap();
+        let xd = crate::sparse::Dense::from_vec(k, n, x).unwrap();
+        assert_eq!(y, ad.matmul(&xd).unwrap().data);
     }
 }

@@ -1,0 +1,171 @@
+//! Differential oracle tests over randomized patterns (seeded RNG, no
+//! proptest in the offline build):
+//!
+//! * every sparse format computes the SpMM the dense oracle computes;
+//! * `static_::plan` and `dynamic_::plan_and_execute` report geometry
+//!   consistent with the pattern they were given (nnz, density,
+//!   conservation through partitions and buckets);
+//! * `ModeSelector::choose` never picks a backend whose estimated
+//!   cycles exceed the best alternative's by more than the documented
+//!   [`SELECTION_TOLERANCE`].
+
+use popsparse::coordinator::{JobSpec, Mode};
+use popsparse::engine::{device_backends, Backend, ModeSelector, SELECTION_TOLERANCE};
+use popsparse::sim::chip::{CostModel, IpuSpec};
+use popsparse::sparse::{patterns, Dense};
+use popsparse::util::Rng;
+use popsparse::DType;
+
+fn env() -> (IpuSpec, CostModel) {
+    (IpuSpec::default(), CostModel::default())
+}
+
+#[test]
+fn spmm_agrees_with_dense_oracle() {
+    // (M ⊙ W) X through the block-sparse path must equal densify +
+    // naive matmul, for any pattern.
+    let mut r = Rng::seed_from_u64(0xD1FF);
+    for _ in 0..20 {
+        let b = [1usize, 4, 8, 16][r.below(4)];
+        let mb = r.range(1, 12);
+        let kb = r.range(1, 12);
+        let nnz = r.range(1, mb * kb + 1);
+        let mask = patterns::uniform(mb * b, kb * b, b, nnz, r.next_u64()).unwrap();
+        let coo = patterns::with_values(&mask, r.next_u64());
+        let n = r.range(1, 6);
+        let x: Vec<f32> = (0..coo.k * n).map(|_| r.normal() as f32).collect();
+
+        let y = coo.spmm_dense(&x, n).unwrap();
+        let ad = Dense::from_vec(coo.m, coo.k, coo.to_dense()).unwrap();
+        let xd = Dense::from_vec(coo.k, n, x).unwrap();
+        let expect = ad.matmul(&xd).unwrap();
+        for (i, (a, e)) in y.iter().zip(&expect.data).enumerate() {
+            assert!(
+                (a - e).abs() < 1e-4,
+                "b={b} mb={mb} kb={kb}: mismatch at {i}: {a} vs {e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn static_plan_is_consistent_with_its_pattern() {
+    let (spec, cm) = env();
+    let mut r = Rng::seed_from_u64(0x57A7);
+    for _ in 0..10 {
+        let b = [4usize, 8, 16][r.below(3)];
+        let mb = r.range(8, 33);
+        let m = mb * b;
+        let total = mb * mb;
+        let nnz = r.range(total / 16 + 1, total / 2 + 2).min(total);
+        let mask = patterns::uniform(m, m, b, nnz, r.next_u64()).unwrap();
+        let n = [128usize, 512][r.below(2)];
+        let p = popsparse::static_::plan(&mask, n, DType::Fp16, &spec, &cm).unwrap();
+        assert_eq!(p.nnz_blocks, mask.nnz_blocks(), "plan must carry the pattern's nnz");
+        assert!((p.density() - mask.density()).abs() < 1e-12);
+        assert_eq!((p.m, p.k, p.n, p.b), (m, m, n, b));
+        let part_nnz: usize = p.partitions.iter().map(|q| q.nnz_blocks).sum();
+        assert_eq!(part_nnz, nnz, "partitions must conserve non-zeros");
+        assert!(p.q_k * p.q_n <= spec.tiles);
+        assert!(p.cost.total() > 0);
+    }
+}
+
+#[test]
+fn dynamic_execution_is_consistent_with_its_pattern() {
+    let (spec, cm) = env();
+    let mut r = Rng::seed_from_u64(0xD1A);
+    for _ in 0..10 {
+        let b = [4usize, 8, 16][r.below(3)];
+        let mb = r.range(8, 33);
+        let m = mb * b;
+        let total = mb * mb;
+        let nnz = r.range(total / 16 + 1, total / 4 + 2).min(total);
+        let mask = patterns::uniform(m, m, b, nnz, r.next_u64()).unwrap();
+        let n = 256;
+        let e = popsparse::dynamic_::plan_and_execute(&mask, n, DType::Fp16, &spec, &cm).unwrap();
+        assert!((e.density() - mask.density()).abs() < 1e-12);
+        assert_eq!(
+            e.buckets.stored.iter().sum::<usize>(),
+            nnz,
+            "buckets must conserve non-zeros"
+        );
+        assert!(e.cost.total() > 0);
+        // Dynamic can never beat static on the same uniform problem.
+        let st = popsparse::static_::plan(&mask, n, DType::Fp16, &spec, &cm).unwrap();
+        assert!(st.cost.total() <= e.cost.total());
+    }
+}
+
+fn auto_job(m: usize, b: usize, density: f64, n: usize, seed: u64) -> JobSpec {
+    JobSpec {
+        mode: Mode::Auto,
+        m,
+        k: m,
+        n,
+        b,
+        density,
+        dtype: DType::Fp16,
+        pattern_seed: seed,
+    }
+}
+
+#[test]
+fn selector_choice_is_within_documented_tolerance() {
+    // The full-evaluation path must return the exact argmin over the
+    // feasible device backends; the documented SELECTION_TOLERANCE is
+    // an upper bound on any path.
+    let (spec, cm) = env();
+    let selector = ModeSelector::new(spec.clone(), cm.clone());
+    let mut r = Rng::seed_from_u64(0x70C);
+    for _ in 0..8 {
+        let b = [4usize, 8, 16][r.below(3)];
+        let mb = [32usize, 64, 96][r.below(3)];
+        let density = [0.25, 0.125, 0.0625, 0.03125][r.below(4)];
+        let n = [256usize, 1024][r.below(2)];
+        let job = auto_job(mb * b, b, density, n, r.next_u64());
+        let decision = selector.choose(&job).expect("feasible geometry");
+        // Independent re-evaluation of every backend.
+        let best = device_backends()
+            .iter()
+            .filter_map(|be| be.plan(&job, selector.env()).ok())
+            .map(|e| e.cycles)
+            .min()
+            .expect("at least one backend feasible");
+        assert_eq!(decision.estimated_cycles, best, "full path is exact: {job:?}");
+        assert!(
+            decision.estimated_cycles as f64 <= best as f64 * (1.0 + SELECTION_TOLERANCE)
+        );
+    }
+}
+
+#[test]
+fn prefiltered_selector_stays_within_tolerance() {
+    // The power-law fast path only fires with a 2x predicted margin,
+    // so its pick must stay inside the documented tolerance of the
+    // exact argmin.
+    let (spec, cm) = env();
+    let mut fast = ModeSelector::new(spec.clone(), cm.clone());
+    fast.fit_prefilter().expect("prefilter fit succeeds");
+    for &(m, density) in &[
+        (2048usize, 1.0 / 32.0),
+        (4096, 1.0 / 16.0),
+        (2048, 0.5),
+        (1024, 0.5),
+    ] {
+        let job = auto_job(m, 16, density, 2048, 7);
+        let decision = fast.choose(&job).expect("feasible geometry");
+        let best = device_backends()
+            .iter()
+            .filter_map(|be| be.plan(&job, fast.env()).ok())
+            .map(|e| e.cycles)
+            .min()
+            .expect("feasible");
+        assert!(
+            decision.estimated_cycles as f64 <= best as f64 * (1.0 + SELECTION_TOLERANCE),
+            "m={m} d={density}: chose {} ({} cycles) vs best {best}",
+            decision.mode,
+            decision.estimated_cycles
+        );
+    }
+}

@@ -1,0 +1,193 @@
+//! Property tests (seeded RNG sweeps, no proptest in the offline
+//! build) for the format layer and the batching layer:
+//!
+//! * mask ↔ COO ↔ CSR ↔ BSR ↔ blocked-ELL conversions preserve nnz,
+//!   shape, and values (values checked both directly and through SpMM
+//!   agreement);
+//! * batcher invariants: flush on `max_batch_n`, flush on
+//!   `max_batch_delay`, conservation over an arbitrary push stream,
+//!   and no job dropped across coordinator `shutdown`.
+
+use std::time::{Duration, Instant};
+
+use popsparse::coordinator::{Batcher, Config, Coordinator, JobSpec, Mode};
+use popsparse::sim::chip::{CostModel, IpuSpec};
+use popsparse::sparse::{patterns, BlockMask, BlockedEll, Bsr, Csr};
+use popsparse::util::Rng;
+use popsparse::DType;
+
+fn random_mask(r: &mut Rng) -> BlockMask {
+    let b = [1usize, 2, 4, 8, 16][r.below(5)];
+    let mb = r.range(1, 16);
+    let kb = r.range(1, 16);
+    let nnz = r.range(1, mb * kb + 1);
+    patterns::uniform(mb * b, kb * b, b, nnz, r.next_u64()).unwrap()
+}
+
+#[test]
+fn property_format_round_trips_preserve_nnz_shape_values() {
+    let mut r = Rng::seed_from_u64(0xF0F0);
+    for _ in 0..30 {
+        let mask = random_mask(&mut r);
+        let coo = patterns::with_values(&mask, r.next_u64());
+
+        // mask ↔ COO: exact pattern round-trip.
+        assert_eq!(coo.mask(), mask);
+        assert_eq!(coo.nnz_blocks(), mask.nnz_blocks());
+        assert_eq!((coo.m, coo.k, coo.b), (mask.m(), mask.k(), mask.b));
+
+        // COO ↔ BSR: exact value round-trip.
+        let bsr = Bsr::from_block_coo(&coo);
+        assert_eq!(bsr.nnz_blocks(), coo.nnz_blocks());
+        assert_eq!(bsr.to_block_coo(), coo, "BSR must round-trip exactly");
+
+        // COO → blocked-ELL: pattern and values preserved (plus
+        // explicit zero padding).
+        let ell = BlockedEll::from_block_coo(&coo);
+        assert_eq!(ell.nnz_blocks(), coo.nnz_blocks());
+        assert_eq!((ell.m, ell.k, ell.b), (coo.m, coo.k, coo.b));
+        assert!(ell.padded_blocks() >= ell.nnz_blocks());
+
+        // COO → CSR: element-level; exact zeros inside blocks are
+        // dropped, everything else is preserved.
+        let csr = Csr::from_block_coo(&coo);
+        assert_eq!((csr.m, csr.k), (coo.m, coo.k));
+        assert!(csr.nnz() <= coo.nnz());
+
+        // Values: every format computes the same SpMM.
+        let n = r.range(1, 5);
+        let x: Vec<f32> = (0..coo.k * n).map(|_| r.normal() as f32).collect();
+        let y = coo.spmm_dense(&x, n).unwrap();
+        let y_bsr = bsr.spmm_dense(&x, n).unwrap();
+        let y_ell = ell.spmm_dense(&x, n).unwrap();
+        let y_csr = csr.spmm_dense(&x, n).unwrap();
+        for i in 0..y.len() {
+            assert!((y[i] - y_bsr[i]).abs() < 1e-4, "bsr values diverge at {i}");
+            assert!((y[i] - y_ell[i]).abs() < 1e-4, "ell values diverge at {i}");
+            assert!((y[i] - y_csr[i]).abs() < 1e-4, "csr values diverge at {i}");
+        }
+    }
+}
+
+fn job(mode: Mode, m: usize, n: usize, seed: u64) -> JobSpec {
+    JobSpec {
+        mode,
+        m,
+        k: m,
+        n,
+        b: 16,
+        density: 1.0 / 8.0,
+        dtype: DType::Fp16,
+        pattern_seed: seed,
+    }
+}
+
+#[test]
+fn property_batcher_flushes_exactly_on_capacity() {
+    let mut r = Rng::seed_from_u64(0xBA7C);
+    for _ in 0..20 {
+        let cap = r.range(64, 1024);
+        let mut batcher: Batcher<usize> = Batcher::new(cap, Duration::from_secs(3600));
+        let mut pushed_n = 0usize;
+        let mut id = 0usize;
+        loop {
+            let n = r.range(1, 128);
+            let out = batcher.push(job(Mode::Dynamic, 256, n, 0), id);
+            id += 1;
+            pushed_n += n;
+            match out {
+                None => {
+                    assert!(pushed_n < cap, "must have flushed at {pushed_n} >= {cap}");
+                }
+                Some(batch) => {
+                    assert!(batch.total_n >= cap, "flushed early: {} < {cap}", batch.total_n);
+                    assert_eq!(batch.total_n, pushed_n, "flush carries everything pushed");
+                    assert_eq!(batch.jobs.len(), id);
+                    assert_eq!(batcher.pending(), 0);
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn property_batcher_flushes_on_delay() {
+    let mut r = Rng::seed_from_u64(0xDE1A);
+    for _ in 0..10 {
+        let delay = Duration::from_millis(r.range(50, 200) as u64);
+        let mut batcher: Batcher<usize> = Batcher::new(usize::MAX, delay);
+        // Several distinct keys (different m), none reaching capacity.
+        let keys = r.range(1, 5);
+        let mut total = 0usize;
+        for i in 0..keys {
+            for s in 0..r.range(1, 4) {
+                assert!(batcher.push(job(Mode::Dense, 256 * (i + 1), 16, s as u64), 0).is_none());
+                total += 1;
+            }
+        }
+        // Before the deadline nothing flushes; after it, everything does.
+        assert!(batcher.poll(Instant::now()).is_empty());
+        let flushed = batcher.poll(Instant::now() + delay);
+        let flushed_jobs: usize = flushed.iter().map(|b| b.jobs.len()).sum();
+        assert_eq!(flushed_jobs, total, "delay flush must release every queue");
+        assert_eq!(batcher.pending(), 0);
+    }
+}
+
+#[test]
+fn property_batcher_conserves_jobs_across_flush_and_drain() {
+    let mut r = Rng::seed_from_u64(0xC0C0);
+    let mut batcher: Batcher<usize> = Batcher::new(512, Duration::from_secs(3600));
+    let total = 300usize;
+    let mut delivered = vec![false; total];
+    let mut note = |batches: Vec<popsparse::coordinator::Batch<usize>>| {
+        for batch in batches {
+            for (_, payload) in batch.jobs {
+                assert!(!delivered[payload], "job {payload} delivered twice");
+                delivered[payload] = true;
+            }
+        }
+    };
+    for id in 0..total {
+        let mode = [Mode::Dense, Mode::Static, Mode::Dynamic][r.below(3)];
+        let m = 256 * r.range(1, 4);
+        let n = r.range(1, 200);
+        if let Some(batch) = batcher.push(job(mode, m, n, r.below(3) as u64), id) {
+            note(vec![batch]);
+        }
+    }
+    note(batcher.drain());
+    assert_eq!(batcher.pending(), 0);
+    assert!(delivered.iter().all(|&d| d), "every pushed job must come back out");
+}
+
+#[test]
+fn no_job_dropped_across_coordinator_shutdown() {
+    // Jobs parked in the batcher (capacity and delay both unreachable)
+    // must still be answered when the coordinator shuts down.
+    let c = Coordinator::new(
+        Config {
+            workers: 2,
+            max_batch_n: usize::MAX,
+            max_batch_delay: Duration::from_secs(3600),
+        },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    let rxs: Vec<_> = (0..24)
+        .map(|i| {
+            let mode = [Mode::Dense, Mode::Static, Mode::Dynamic, Mode::Auto][i % 4];
+            c.submit(job(mode, 256, 16, (i % 2) as u64))
+        })
+        .collect();
+    c.shutdown();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("job {i} dropped without a response"))
+            .unwrap_or_else(|e| panic!("job {i} failed: {e}"));
+        assert!(r.cycles > 0);
+        assert_ne!(r.spec.mode, Mode::Auto, "auto jobs resolve even on the drain path");
+    }
+}
