@@ -14,10 +14,15 @@
 //!    A100 GPU baseline);
 //! 2. the power-law pre-filter (Figure 4c) — fitting it and comparing
 //!    fast-path decisions against full planning;
-//! 3. a mixed Auto workload through the coordinator — per-mode
-//!    decision counts, memoization, and estimated-vs-simulated cycles.
+//! 3. a mixed Auto workload through the coordinator — requests batch
+//!    under a provisional key and are resolved at *batch-formation
+//!    time*, at the combined batch size, with resolution-time plans
+//!    reused at execution and observed cycles feeding the
+//!    calibration's per-(backend, geometry-bucket) corrections.
 //!
 //! Run with: `cargo run --release --example auto_mode`
+//! (add `--calibrated` to `repro bench auto` for the calibrated
+//! crossover table.)
 
 use std::time::Instant;
 
@@ -105,10 +110,29 @@ fn main() -> popsparse::Result<()> {
         snap.auto_dense, snap.auto_static, snap.auto_dynamic
     );
     println!(
-        "selector estimate vs simulated share: mean relative error {:.1}%",
-        snap.auto_estimate_rel_err * 100.0
+        "resolution estimate vs simulated share: mean relative error {:.1}% raw, {:.1}% calibrated",
+        snap.auto_estimate_rel_err * 100.0,
+        snap.auto_estimate_rel_err_calibrated * 100.0
     );
     println!("mean batch {:.1} jobs over {} batches", snap.mean_batch_size, snap.batches);
+    // Batch-time selection: resolution runs on the worker pool at the
+    // batch's combined n — the ingress thread never plans — and the
+    // candidate plans selection builds are the plans execution reuses.
+    let (hits, misses) = coordinator.plan_cache_stats();
+    let (res_hits, res_misses) = coordinator.resolution_plan_stats();
+    println!(
+        "selection: {} on workers / {} at ingress ({:?} total), {} calibration flips",
+        snap.worker_selections, snap.ingress_selections, snap.selection_time, snap.decision_flips
+    );
+    println!(
+        "plan cache: execution {hits} hits / {misses} misses \
+         (resolution planted {res_misses} plans, re-costed {res_hits} from cache)"
+    );
+    println!(
+        "calibration: {} buckets learned from {} observed executions",
+        coordinator.calibration().buckets(),
+        coordinator.calibration().observations()
+    );
     coordinator.shutdown();
     println!("\nauto_mode OK");
     Ok(())

@@ -1,7 +1,7 @@
 //! End-to-end serving driver: a block-sparse MLP served with dynamic
 //! batching, real numerics on every request.
 //!
-//! This is the repository's end-to-end validation (DESIGN.md §5): it
+//! This is the repository's end-to-end validation (DESIGN.md §6): it
 //! loads the AOT-compiled two-layer block-sparse MLP artifact
 //! (512→512→512, b=16, d=1/8 — compiled once by `make artifacts` from
 //! the L1 Pallas kernels), serves batched inference requests through

@@ -1,5 +1,5 @@
 //! Bench harness: regenerates every table and figure of the paper's
-//! evaluation section (see DESIGN.md §5 for the experiment index).
+//! evaluation section (see DESIGN.md §6 for the experiment index).
 //!
 //! Each experiment function returns [`report::Table`]s that print as
 //! aligned markdown and can be written as CSV. The CLI (`repro bench

@@ -4,10 +4,13 @@
 //! The paper's results (Fig. 2, §5) show both IPU and GPU throughput
 //! climb steeply with batch size `n` — a serving layer that executes
 //! requests one-by-one at n=4 throws away an order of magnitude. The
-//! batcher groups jobs by everything *except* `n` (mode, shape, block
-//! size, density, dtype, and pattern for static mode) and flushes when
-//! the accumulated batch reaches `max_batch_n` or the oldest job has
-//! waited `max_delay`.
+//! batcher groups jobs by everything *except* `n` (mode — with
+//! [`Mode::Auto`] as a provisional group of its own — shape, block
+//! size, density, dtype, and pattern for static and unresolved-auto
+//! jobs) and flushes when the accumulated batch reaches `max_batch_n`
+//! or the oldest job has waited `max_delay`. Auto batches are resolved
+//! to a concrete mode by the worker at flush time, at the batch's
+//! combined `n`.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -29,12 +32,14 @@ pub struct BatchKey {
 }
 
 impl BatchKey {
-    /// Key a job for batching. The coordinator resolves [`Mode::Auto`]
-    /// to a concrete mode *before* batching, so the key normally sees
-    /// only concrete modes; an unresolved `Auto` job is keyed like a
-    /// static job (pattern included) — the conservative grouping.
+    /// Key a job for batching. [`Mode::Auto`] is a *provisional* key:
+    /// unresolved auto jobs group among themselves (never with
+    /// explicit jobs) and are keyed like static jobs (pattern
+    /// included) — the conservative grouping, since the batch may
+    /// resolve to static where the pattern matters. The worker
+    /// resolves the whole batch to one concrete mode at its combined
+    /// `n` when the batch flushes.
     pub fn of(job: &JobSpec) -> Self {
-        debug_assert!(job.mode != Mode::Auto, "auto jobs are resolved before batching");
         Self {
             mode: job.mode,
             m: job.m,
@@ -180,6 +185,23 @@ mod tests {
         let flushed = b.poll(Instant::now() + Duration::from_millis(1));
         assert_eq!(flushed.len(), 1);
         assert_eq!(flushed[0].jobs.len(), 1);
+    }
+
+    #[test]
+    fn auto_jobs_batch_under_a_provisional_key() {
+        let mut b = Batcher::new(128, Duration::from_secs(60));
+        // Auto jobs with one pattern coalesce...
+        assert!(b.push(job(64, 1, Mode::Auto), ()).is_none());
+        let batch = b.push(job(64, 1, Mode::Auto), ()).expect("capacity flush");
+        assert_eq!(batch.key.mode, Mode::Auto, "the key stays provisional until resolution");
+        assert_eq!(batch.total_n, 128);
+        // ...but never with explicit jobs of the same geometry, and
+        // (conservatively) not across patterns either.
+        let mut b2 = Batcher::new(128, Duration::from_secs(60));
+        assert!(b2.push(job(64, 1, Mode::Auto), ()).is_none());
+        assert!(b2.push(job(64, 1, Mode::Dense), ()).is_none());
+        assert!(b2.push(job(64, 2, Mode::Auto), ()).is_none());
+        assert_eq!(b2.pending(), 3, "auto/explicit/other-pattern stay separate");
     }
 
     #[test]

@@ -1,11 +1,29 @@
 //! Serving metrics: counters, latency percentiles, and auto-mode
-//! selector accounting (which mode won, and how close the selector's
-//! cycle estimates were to the simulated outcome).
+//! selector accounting — which mode won, where selection ran
+//! (ingress vs worker), how often calibration flipped a decision, and
+//! how close the raw and calibrated cycle estimates were to the
+//! simulated outcome.
 
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::coordinator::request::Mode;
+
+/// Where a selection (auto-mode resolution) was performed. Batch-time
+/// selection runs on the worker pool; the ingress thread performs no
+/// backend planning. The *enforced* form of that invariant is
+/// structural — the ingress thread's closure captures neither the
+/// plan cache nor the calibration, so reintroducing ingress-time
+/// planning requires re-plumbing state into it — while this enum
+/// keeps the accounting honest: any future ingress-side selection
+/// must report itself here, where the stress suite's
+/// `ingress_selections == 0` assertion and the serving dashboards
+/// will surface it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionSite {
+    Ingress,
+    Worker,
+}
 
 /// Aggregated serving metrics. Latencies are kept in a bounded
 /// reservoir; percentiles are computed on demand.
@@ -28,6 +46,12 @@ struct Inner {
     auto_dynamic: u64,
     estimate_pairs: u64,
     estimate_rel_err_sum: f64,
+    calibrated_rel_err_sum: f64,
+    // Selection accounting.
+    ingress_selections: u64,
+    worker_selections: u64,
+    selection_ns: u64,
+    decision_flips: u64,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -43,9 +67,25 @@ pub struct Snapshot {
     pub auto_dense: u64,
     pub auto_static: u64,
     pub auto_dynamic: u64,
-    /// Mean relative error of the selector's estimated cycles against
-    /// the simulated cycles of completed auto jobs (0.0 when none).
+    /// Mean relative error of the selector's *raw* estimated cycles
+    /// against the simulated cycles of completed auto jobs (0.0 when
+    /// none).
     pub auto_estimate_rel_err: f64,
+    /// Same, for the calibration-corrected estimates — the measure of
+    /// whether the observed-cycle feedback loop is helping.
+    pub auto_estimate_rel_err_calibrated: f64,
+    /// Batch-time resolutions where the calibration correction changed
+    /// the selector's raw argmin.
+    pub decision_flips: u64,
+    /// Selections performed on the ingress thread. Zero by
+    /// construction since batch-time selection landed; asserted by the
+    /// stress suite.
+    pub ingress_selections: u64,
+    /// Selections performed on the worker pool (fresh resolutions, not
+    /// memo hits).
+    pub worker_selections: u64,
+    /// Total wall-clock spent in selection (planning candidates).
+    pub selection_time: Duration,
     pub p50: Duration,
     pub p99: Duration,
     pub max: Duration,
@@ -95,15 +135,39 @@ impl Metrics {
         }
     }
 
-    /// Record estimated-vs-simulated cycles for a completed auto job.
-    pub fn record_auto_outcome(&self, estimated: u64, simulated: u64) {
+    /// Record estimated-vs-simulated cycles for a completed auto job:
+    /// the raw cost-model estimate and the calibration-corrected one,
+    /// each against the simulated outcome.
+    pub fn record_auto_outcome(
+        &self,
+        estimated_raw: u64,
+        estimated_calibrated: u64,
+        simulated: u64,
+    ) {
         if simulated == 0 {
             return;
         }
-        let rel = (estimated as f64 - simulated as f64).abs() / simulated as f64;
+        let rel = |est: u64| (est as f64 - simulated as f64).abs() / simulated as f64;
         let mut g = self.inner.lock().expect("metrics poisoned");
         g.estimate_pairs += 1;
-        g.estimate_rel_err_sum += rel;
+        g.estimate_rel_err_sum += rel(estimated_raw);
+        g.calibrated_rel_err_sum += rel(estimated_calibrated);
+    }
+
+    /// Record one selection (auto-mode resolution): where it ran and
+    /// how long the candidate planning took.
+    pub fn record_selection(&self, site: SelectionSite, took: Duration) {
+        let mut g = self.inner.lock().expect("metrics poisoned");
+        match site {
+            SelectionSite::Ingress => g.ingress_selections += 1,
+            SelectionSite::Worker => g.worker_selections += 1,
+        }
+        g.selection_ns += took.as_nanos() as u64;
+    }
+
+    /// Record a resolution where calibration flipped the raw argmin.
+    pub fn record_decision_flip(&self) {
+        self.inner.lock().expect("metrics poisoned").decision_flips += 1;
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -135,6 +199,15 @@ impl Metrics {
             } else {
                 g.estimate_rel_err_sum / g.estimate_pairs as f64
             },
+            auto_estimate_rel_err_calibrated: if g.estimate_pairs == 0 {
+                0.0
+            } else {
+                g.calibrated_rel_err_sum / g.estimate_pairs as f64
+            },
+            decision_flips: g.decision_flips,
+            ingress_selections: g.ingress_selections,
+            worker_selections: g.worker_selections,
+            selection_time: Duration::from_nanos(g.selection_ns),
             p50: pct(0.50),
             p99: pct(0.99),
             max: pct(1.0),
@@ -172,6 +245,10 @@ mod tests {
         assert_eq!(s.p50, Duration::ZERO);
         assert_eq!(s.auto_resolved(), 0);
         assert_eq!(s.auto_estimate_rel_err, 0.0);
+        assert_eq!(s.auto_estimate_rel_err_calibrated, 0.0);
+        assert_eq!(s.decision_flips, 0);
+        assert_eq!((s.ingress_selections, s.worker_selections), (0, 0));
+        assert_eq!(s.selection_time, Duration::ZERO);
     }
 
     #[test]
@@ -180,14 +257,31 @@ mod tests {
         m.record_auto_decision(Mode::Static);
         m.record_auto_decision(Mode::Static);
         m.record_auto_decision(Mode::Dense);
-        // 10% under-estimate and an exact estimate -> mean 5% error.
-        m.record_auto_outcome(900, 1000);
-        m.record_auto_outcome(500, 500);
-        m.record_auto_outcome(1, 0); // ignored: no simulated cycles
+        // Raw: 10% under-estimate and an exact estimate -> mean 5%
+        // error. Calibrated: exact both times -> 0.
+        m.record_auto_outcome(900, 1000, 1000);
+        m.record_auto_outcome(500, 500, 500);
+        m.record_auto_outcome(1, 1, 0); // ignored: no simulated cycles
+        m.record_decision_flip();
         let s = m.snapshot();
         assert_eq!(s.auto_static, 2);
         assert_eq!(s.auto_dense, 1);
         assert_eq!(s.auto_resolved(), 3);
         assert!((s.auto_estimate_rel_err - 0.05).abs() < 1e-9);
+        assert_eq!(s.auto_estimate_rel_err_calibrated, 0.0);
+        assert_eq!(s.decision_flips, 1);
+    }
+
+    #[test]
+    fn selection_sites_are_tracked_separately() {
+        let m = Metrics::new();
+        m.record_selection(SelectionSite::Worker, Duration::from_micros(30));
+        m.record_selection(SelectionSite::Worker, Duration::from_micros(20));
+        let s = m.snapshot();
+        assert_eq!(s.worker_selections, 2);
+        assert_eq!(s.ingress_selections, 0);
+        assert_eq!(s.selection_time, Duration::from_micros(50));
+        m.record_selection(SelectionSite::Ingress, Duration::ZERO);
+        assert_eq!(m.snapshot().ingress_selections, 1);
     }
 }

@@ -1,22 +1,36 @@
-//! The serving coordinator: router, auto-mode resolution, plan cache,
-//! dynamic batcher, worker pool and metrics.
+//! The serving coordinator: router, dynamic batcher, batch-time
+//! auto-mode resolution, plan cache, calibration, worker pool and
+//! metrics.
 //!
 //! Architecture (threads + channels; the request path never touches
 //! Python):
 //!
 //! ```text
-//!  submit(job) ──► auto-mode resolution ([`crate::engine::ModeSelector`],
-//!                  memoized in the plan cache) ──► batcher (groups by
-//!                  weight config + resolved mode, flushes on capacity
-//!                  or delay) ──► worker pool ──► plan cache ──►
-//!                  simulator (cycles) [+ the numeric runtime in the
-//!                  examples] ──► JobResult
+//!  submit(job) ──► ingress thread (no planning: enqueue only) ──►
+//!                  batcher (groups by weight config + mode — Auto is
+//!                  a provisional key — flushes on capacity or delay)
+//!                  ──► worker pool:
+//!                        resolve Auto at the batch's combined n
+//!                        ([`PlanCache::resolve_batch`], calibrated,
+//!                        memoized; candidate plans land in the plan
+//!                        cache) ──► plan cache (execution reuses the
+//!                        resolution-time plan) ──► simulator
+//!                        (cycles) ──► observed cycles feed
+//!                        [`crate::engine::Calibration`] ──► JobResult
 //! ```
 //!
-//! Jobs submitted with [`Mode::Auto`] are resolved to the cheapest
-//! concrete mode *before* batching, so every batch is homogeneous in
-//! its resolved mode; [`Metrics`] tracks the decisions and how the
-//! selector's cycle estimates compare to the simulated outcome.
+//! Jobs submitted with [`Mode::Auto`] batch under a provisional key
+//! and are resolved to the cheapest concrete mode *at batch-formation
+//! time*, at the combined batch size actually executed — so selection
+//! sees the real geometry, resolution-time plans are reused at
+//! execution (every freshly-resolved batch executes a plan-cache hit;
+//! the one re-plan left is a memoized *static* decision meeting a new
+//! pattern, which is pattern-specific work by design), and a memo
+//! miss costs worker time instead of head-of-line blocking the
+//! ingress thread. [`Metrics`] tracks the
+//! decisions, where selection ran, calibration decision flips, and
+//! how raw vs calibration-corrected cycle estimates compare to the
+//! simulated outcome.
 
 pub mod batcher;
 pub mod metrics;
@@ -29,11 +43,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 pub use batcher::{Batch, BatchKey, Batcher};
-pub use metrics::{Metrics, Snapshot};
-pub use plan_cache::{CachedPlan, PlanCache};
+pub use metrics::{Metrics, SelectionSite, Snapshot};
+pub use plan_cache::{BatchResolution, CachedPlan, PlanCache};
 pub use request::{JobResult, JobSpec, Mode, PlanKey, SelectorKey};
 
-use crate::engine::ModeSelector;
+use crate::engine::{BackendKind, Calibration};
 use crate::error::{Error, Result};
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::patterns;
@@ -56,12 +70,8 @@ impl Default for Config {
 
 type Responder = mpsc::Sender<Result<JobResult>>;
 
-/// Per-job payload threaded through the batcher: the response channel
-/// plus the selector's cycle estimate for auto-resolved jobs.
-type Payload = (Responder, Option<u64>);
-
 enum WorkItem {
-    Batch(Batch<Payload>),
+    Batch(Batch<Responder>),
 }
 
 /// The coordinator. Create with [`Coordinator::new`], submit jobs with
@@ -69,74 +79,41 @@ enum WorkItem {
 pub struct Coordinator {
     cache: Arc<PlanCache>,
     metrics: Arc<Metrics>,
-    selector: Arc<ModeSelector>,
+    calibration: Arc<Calibration>,
     ingress: Option<mpsc::Sender<(JobSpec, Responder)>>,
     ingress_thread: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     shutting_down: Arc<AtomicBool>,
 }
 
-/// Resolve an auto-mode job on the ingress path. Returns the job (with
-/// a concrete mode) and its payload, or `None` after answering the
-/// caller with the resolution error.
-fn admit(
-    mut job: JobSpec,
-    responder: Responder,
-    cache: &PlanCache,
-    selector: &ModeSelector,
-    metrics: &Metrics,
-) -> Option<(JobSpec, Payload)> {
-    let mut estimate = None;
-    if job.mode == Mode::Auto {
-        match cache.resolve_mode(&job, selector) {
-            Ok((mode, est, _memo_hit)) => {
-                job.mode = mode;
-                estimate = Some(est);
-                metrics.record_auto_decision(mode);
-            }
-            Err(e) => {
-                metrics.record_failure();
-                let _ = responder.send(Err(Error::Coordinator(format!(
-                    "auto-mode resolution failed: {e}"
-                ))));
-                return None;
-            }
-        }
-    }
-    Some((job, (responder, estimate)))
-}
-
 impl Coordinator {
     pub fn new(config: Config, spec: IpuSpec, cm: CostModel) -> Self {
-        let selector = Arc::new(ModeSelector::new(spec.clone(), cm.clone()));
         let cache = Arc::new(PlanCache::new(spec, cm));
         let metrics = Arc::new(Metrics::new());
+        let calibration = Arc::new(Calibration::default());
         let shutting_down = Arc::new(AtomicBool::new(false));
 
         let (ingress_tx, ingress_rx) = mpsc::channel::<(JobSpec, Responder)>();
         let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
         let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
 
-        // Ingress thread: resolves auto-mode jobs, runs the batcher.
+        // Ingress thread: runs the batcher, nothing else. Auto-mode
+        // jobs pass through unresolved (provisional batch key); no
+        // planning happens here, so a selection-memo miss can never
+        // head-of-line-block unrelated submissions.
         let batch_cfg = config.clone();
         let batch_metrics = metrics.clone();
-        let batch_cache = cache.clone();
-        let batch_selector = selector.clone();
         let batch_tx = work_tx.clone();
         let ingress_thread = std::thread::spawn(move || {
-            let mut batcher: Batcher<Payload> =
+            let mut batcher: Batcher<Responder> =
                 Batcher::new(batch_cfg.max_batch_n, batch_cfg.max_batch_delay);
             loop {
                 // Wait up to the delay budget for new work, then poll.
                 match ingress_rx.recv_timeout(batch_cfg.max_batch_delay) {
                     Ok((job, responder)) => {
-                        if let Some((job, payload)) =
-                            admit(job, responder, &batch_cache, &batch_selector, &batch_metrics)
-                        {
-                            if let Some(batch) = batcher.push(job, payload) {
-                                batch_metrics.record_batch(batch.jobs.len());
-                                let _ = batch_tx.send(WorkItem::Batch(batch));
-                            }
+                        if let Some(batch) = batcher.push(job, responder) {
+                            batch_metrics.record_batch(batch.jobs.len());
+                            let _ = batch_tx.send(WorkItem::Batch(batch));
                         }
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -154,28 +131,30 @@ impl Coordinator {
             drop(batch_tx);
         });
 
-        // Worker pool.
+        // Worker pool: batch-time resolution + execution.
         let mut workers = Vec::with_capacity(config.workers);
         for _ in 0..config.workers.max(1) {
             let rx = work_rx.clone();
             let cache = cache.clone();
             let metrics = metrics.clone();
+            let calibration = calibration.clone();
             workers.push(std::thread::spawn(move || loop {
                 let item = {
                     let guard = rx.lock().expect("work queue poisoned");
                     guard.recv()
                 };
                 match item {
-                    Ok(WorkItem::Batch(batch)) => process_batch(batch, &cache, &metrics),
+                    Ok(WorkItem::Batch(batch)) => {
+                        process_batch(batch, &cache, &calibration, &metrics)
+                    }
                     Err(_) => break,
                 }
             }));
         }
-        // Keep one work_tx alive for shutdown signalling.
         let coordinator = Self {
             cache,
             metrics,
-            selector,
+            calibration,
             ingress: Some(ingress_tx),
             ingress_thread: Some(ingress_thread),
             workers,
@@ -218,8 +197,15 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
+    /// Execution-path plan cache (hits, misses).
     pub fn plan_cache_stats(&self) -> (u64, u64) {
         self.cache.stats()
+    }
+
+    /// Resolution-path plan cache (hits, misses) — candidate planning
+    /// during batch-time auto resolution.
+    pub fn resolution_plan_stats(&self) -> (u64, u64) {
+        self.cache.resolution_stats()
     }
 
     /// Auto-mode decision memo (hits, misses).
@@ -227,9 +213,10 @@ impl Coordinator {
         self.cache.mode_stats()
     }
 
-    /// The selector the coordinator resolves [`Mode::Auto`] with.
-    pub fn selector(&self) -> &ModeSelector {
-        &self.selector
+    /// The observed-cycle calibration the coordinator resolves
+    /// [`Mode::Auto`] batches with.
+    pub fn calibration(&self) -> &Calibration {
+        &self.calibration
     }
 
     /// Graceful shutdown: flush the batcher, join all threads.
@@ -251,29 +238,71 @@ impl Drop for Coordinator {
     }
 }
 
-/// Execute one batch: plan once at the combined batch size, simulate,
-/// fan results back out.
-fn process_batch(batch: Batch<Payload>, cache: &PlanCache, metrics: &Metrics) {
+/// Execute one batch: resolve auto batches at the combined batch size,
+/// plan once (for freshly-resolved auto batches a cache hit —
+/// resolution already planted the plan), simulate, feed observed
+/// cycles back into the calibration, fan results out.
+fn process_batch(
+    batch: Batch<Responder>,
+    cache: &PlanCache,
+    calibration: &Calibration,
+    metrics: &Metrics,
+) {
     let t0 = Instant::now();
-    // Plan at the batch's combined n (this is the batching win).
+    // The representative job: the batch's shared geometry at the
+    // combined n (this is the batching win).
     let mut rep = batch.jobs[0].0.clone();
     rep.n = batch.total_n;
+
+    // Batch-time auto resolution, at the geometry actually executed.
+    let mut auto_estimates = None;
+    if batch.key.mode == Mode::Auto {
+        let sel_t0 = Instant::now();
+        match cache.resolve_batch(&rep, Some(calibration)) {
+            Ok(res) => {
+                if !res.memo_hit {
+                    metrics.record_selection(SelectionSite::Worker, sel_t0.elapsed());
+                    if res.flipped {
+                        metrics.record_decision_flip();
+                    }
+                }
+                for _ in &batch.jobs {
+                    metrics.record_auto_decision(res.mode);
+                }
+                rep.mode = res.mode;
+                auto_estimates = Some((res.raw_cycles, res.corrected_cycles));
+            }
+            Err(e) => {
+                let msg = format!("auto-mode resolution failed: {e}");
+                for (_, responder) in batch.jobs {
+                    metrics.record_failure();
+                    let _ = responder.send(Err(Error::Coordinator(msg.clone())));
+                }
+                return;
+            }
+        }
+    }
+
     let planned = cache.get_or_plan(&rep);
     match planned {
         Err(e) => {
             let msg = e.to_string();
-            for (_, (responder, _)) in batch.jobs {
+            for (_, responder) in batch.jobs {
                 metrics.record_failure();
                 let _ = responder.send(Err(Error::Coordinator(msg.clone())));
             }
         }
         Ok((plan, was_hit)) => {
+            // The plan's own raw estimate — what the calibration
+            // learns against (the same definition resolution corrects,
+            // see `CachedPlan::estimated_cycles`).
+            let plan_estimate = plan.estimated_cycles();
             let (cycles, prop_steps) = match &plan {
                 CachedPlan::Dense(p) => (p.cost.total(), 0),
                 CachedPlan::Static(p, _) => (p.cost.total(), 0),
                 CachedPlan::Dynamic(p) => {
                     // Dynamic: bucket the batch's (fresh) pattern now.
-                    let seed = batch.jobs[0].0.pattern_seed;
+                    let seed = rep.pattern_seed;
                     match patterns::with_density(rep.m, rep.k, rep.b, rep.density, seed)
                         .map_err(|e| Error::Coordinator(e.to_string()))
                         .and_then(|mask| {
@@ -288,7 +317,7 @@ fn process_batch(batch: Batch<Payload>, cache: &PlanCache, metrics: &Metrics) {
                         Ok(exec) => (exec.cost.total(), exec.propagation_steps()),
                         Err(e) => {
                             let msg = e.to_string();
-                            for (_, (responder, _)) in batch.jobs {
+                            for (_, responder) in batch.jobs {
                                 metrics.record_failure();
                                 let _ = responder.send(Err(Error::Coordinator(msg.clone())));
                             }
@@ -297,19 +326,30 @@ fn process_batch(batch: Batch<Payload>, cache: &PlanCache, metrics: &Metrics) {
                     }
                 }
             };
+            // Close the estimation loop: observed execution cycles
+            // refresh this (backend, geometry-bucket) EWMA.
+            if let Some(kind) = BackendKind::of_mode(rep.mode) {
+                calibration.observe(kind, &rep, plan_estimate, cycles);
+            }
             let service_time = t0.elapsed();
             let spec = cache.spec();
-            for (job, (responder, estimated)) in batch.jobs {
+            let resolved_mode = rep.mode;
+            let total_n = batch.total_n.max(1) as f64;
+            for (mut job, responder) in batch.jobs {
+                if job.mode == Mode::Auto {
+                    job.mode = resolved_mode;
+                }
                 let tflops = crate::tflops(rep.flops(), cycles, spec.clock_hz);
                 metrics.record_job(service_time, cycles);
-                if let Some(est) = estimated {
-                    // Estimated-vs-simulated: the selector estimated at
-                    // the job's own n; compare per-job shares of the
-                    // batched pass to keep the scales commensurate.
-                    let share = (cycles as f64 * job.n as f64 / batch.total_n.max(1) as f64)
-                        .ceil() as u64;
-                    metrics.record_auto_outcome(est, share.max(1));
-                }
+                // Attribute the batch-level estimates and outcome to
+                // each member by its share of the combined n, keeping
+                // the scales commensurate.
+                let job_n = job.n as f64;
+                let share = move |v: u64| ((v as f64 * job_n / total_n).ceil() as u64).max(1);
+                let estimated = auto_estimates.map(|(raw, corrected)| {
+                    metrics.record_auto_outcome(share(raw), share(corrected), share(cycles));
+                    share(corrected)
+                });
                 let _ = responder.send(Ok(JobResult {
                     spec: job,
                     cycles,
@@ -403,13 +443,48 @@ mod tests {
         assert_ne!(r.spec.mode, Mode::Auto, "auto must resolve to a concrete mode");
         assert!(r.cycles > 0);
         assert!(r.estimated_cycles.expect("auto jobs carry estimates") > 0);
-        // Same geometry, different pattern seed: the decision is memoized.
+        // Batch-time resolution planted the executed plan in the
+        // cache: the execution-path lookup must have been a hit.
+        assert!(r.plan_cache_hit, "resolution plans must be reused at execution");
+        // Same geometry, different pattern seed: the decision is
+        // memoized (the seed is not part of the selector key).
         let r2 = c.submit_wait(job(Mode::Auto, 128, 9)).unwrap();
         assert_eq!(r2.spec.mode, r.spec.mode);
         assert_eq!(c.mode_memo_stats(), (1, 1));
         let snap = c.metrics();
         assert_eq!(snap.auto_resolved(), 2);
         assert_eq!(snap.jobs_completed, 2);
+        // Selection ran on the worker pool, never at ingress.
+        assert_eq!(snap.worker_selections, 1);
+        assert_eq!(snap.ingress_selections, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn auto_batches_resolve_at_combined_n() {
+        // Four auto jobs of n=64 coalesce to one batch; the resolution
+        // memo must be keyed at the *combined* n=256, not the per-job
+        // n — a follow-up explicit probe at n=256 shares its plan.
+        let c = Coordinator::new(
+            Config { workers: 1, max_batch_n: 256, max_batch_delay: Duration::from_secs(5) },
+            IpuSpec::default(),
+            CostModel::default(),
+        );
+        let rxs: Vec<_> = (0..4).map(|_| c.submit(job(Mode::Auto, 64, 3))).collect();
+        let results: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        let resolved = results[0].spec.mode;
+        assert_ne!(resolved, Mode::Auto);
+        assert!(results.iter().all(|r| r.spec.mode == resolved), "one batch, one mode");
+        assert!(results.iter().all(|r| r.plan_cache_hit), "executed plan came from resolution");
+        assert_eq!(c.metrics().worker_selections, 1, "one batch, one selection");
+        // The resolution planned at n=256: an explicit job with the
+        // resolved mode at that combined geometry is already cached.
+        let (hits_before, misses_before) = c.plan_cache_stats();
+        let probe = c.submit_wait(job(resolved, 256, 3)).unwrap();
+        assert!(probe.plan_cache_hit, "combined-n plan must be reusable");
+        let (hits_after, misses_after) = c.plan_cache_stats();
+        assert_eq!(hits_after, hits_before + 1);
+        assert_eq!(misses_after, misses_before);
         c.shutdown();
     }
 }

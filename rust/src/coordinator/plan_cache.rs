@@ -7,12 +7,14 @@
 //! static plans are pattern-specific.
 
 use std::collections::HashMap;
+use std::sync::atomic::AtomicU64;
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::request::{JobSpec, Mode, PlanKey, SelectorKey};
 use crate::dense_::DensePlan;
 use crate::dynamic_::DynamicPlan;
-use crate::engine::ModeSelector;
+use crate::engine::calibration::corrected_argmin;
+use crate::engine::{BackendKind, Calibration, PlanEstimate};
 use crate::error::{Error, Result};
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::mask::BlockMask;
@@ -29,19 +31,72 @@ pub enum CachedPlan {
     Dynamic(Arc<DynamicPlan>),
 }
 
+impl CachedPlan {
+    /// The cycle estimate this plan carries — identical to what the
+    /// corresponding [`crate::engine::Backend::plan`] reports (dense
+    /// and static plans cost exactly what they execute; dynamic plans
+    /// carry the balanced-pattern expectation, execution buckets the
+    /// realized pattern). Both batch-time resolution and the worker's
+    /// calibration feedback read this one definition, so the estimate
+    /// the argmin corrects is the estimate observations are ratioed
+    /// against.
+    pub fn estimated_cycles(&self) -> u64 {
+        match self {
+            CachedPlan::Dense(p) => p.cost.total(),
+            CachedPlan::Static(p, _) => p.cost.total(),
+            CachedPlan::Dynamic(p) => p.expected_cycles,
+        }
+    }
+}
+
+/// One memoized batch-time resolution, tagged with the calibration's
+/// geometry stamp it was computed under so the decision gets revisited
+/// once enough new informative observations land in *its* buckets.
+#[derive(Debug, Clone, Copy)]
+struct MemoEntry {
+    mode: Mode,
+    raw_cycles: u64,
+    corrected_cycles: u64,
+    stamp: u64,
+}
+
+/// The outcome of resolving one auto-mode batch at its combined `n`.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchResolution {
+    /// The winning concrete mode (argmin over corrected estimates).
+    pub mode: Mode,
+    /// The winner's uncorrected cost-model estimate at the batch's
+    /// combined `n`.
+    pub raw_cycles: u64,
+    /// The winner's estimate after calibration correction (equals
+    /// `raw_cycles` without a calibration).
+    pub corrected_cycles: u64,
+    /// Whether calibration flipped the decision away from the raw
+    /// argmin (always `false` on memo hits — the flip was counted when
+    /// the entry was computed).
+    pub flipped: bool,
+    /// Whether the decision came from the memo.
+    pub memo_hit: bool,
+}
+
 /// Thread-safe plan cache with hit/miss accounting. Besides compiled
-/// plans it memoizes auto-mode selector decisions per
+/// plans it memoizes batch-time auto-mode resolutions per
 /// [`SelectorKey`] — selection plans up to three backends, so a
 /// serving layer must amortise it the same way it amortises plans.
+/// Resolution-time planning goes *through* the cache
+/// ([`PlanCache::resolve_batch`]), so the plans selection builds are
+/// the plans execution reuses.
 pub struct PlanCache {
     spec: IpuSpec,
     cm: CostModel,
     plans: Mutex<HashMap<PlanKey, CachedPlan>>,
-    modes: Mutex<HashMap<SelectorKey, (Mode, u64)>>,
-    hits: std::sync::atomic::AtomicU64,
-    misses: std::sync::atomic::AtomicU64,
-    mode_hits: std::sync::atomic::AtomicU64,
-    mode_misses: std::sync::atomic::AtomicU64,
+    modes: Mutex<HashMap<SelectorKey, MemoEntry>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    mode_hits: AtomicU64,
+    mode_misses: AtomicU64,
+    resolution_hits: AtomicU64,
+    resolution_misses: AtomicU64,
 }
 
 impl PlanCache {
@@ -55,6 +110,8 @@ impl PlanCache {
             misses: Default::default(),
             mode_hits: Default::default(),
             mode_misses: Default::default(),
+            resolution_hits: Default::default(),
+            resolution_misses: Default::default(),
         }
     }
 
@@ -78,47 +135,133 @@ impl PlanCache {
         (self.mode_hits.load(Relaxed), self.mode_misses.load(Relaxed))
     }
 
-    /// Resolve an [`Mode::Auto`] job to a concrete mode, memoized per
-    /// [`SelectorKey`]. Returns `(mode, estimated_cycles, was_memo_hit)`.
-    ///
-    /// Resolution plans candidate backends at the *job's own* `n` and
-    /// discards those plans; the worker later plans the winning mode
-    /// at the batch's combined `n`, which is a different plan key, so
-    /// the two cannot share a cache entry today. The memo keeps this a
-    /// once-per-geometry cost; feeding resolution-time plans into the
-    /// plan cache for single-job batches is a noted follow-up
-    /// (ROADMAP).
-    pub fn resolve_mode(
-        &self,
-        job: &JobSpec,
-        selector: &ModeSelector,
-    ) -> Result<(Mode, u64, bool)> {
+    /// Resolution-path plan lookups (hits, misses) so far. Kept apart
+    /// from [`PlanCache::stats`] so the execution path's hit rate —
+    /// the serving-latency signal — is not diluted by speculative
+    /// candidate planning.
+    pub fn resolution_stats(&self) -> (u64, u64) {
         use std::sync::atomic::Ordering::Relaxed;
-        let key = job.selector_key();
-        if let Some(&(mode, est)) = self.modes.lock().expect("mode memo poisoned").get(&key) {
-            self.mode_hits.fetch_add(1, Relaxed);
-            return Ok((mode, est, true));
+        (self.resolution_hits.load(Relaxed), self.resolution_misses.load(Relaxed))
+    }
+
+    /// Resolve an auto-mode *batch* to a concrete mode at `rep`'s
+    /// geometry — `rep` must be the batch's representative job with
+    /// `n` set to the combined batch size, i.e. the geometry the
+    /// worker will actually execute.
+    ///
+    /// Candidate backends are planned *through the plan cache*, so the
+    /// plans selection builds (in particular the winner's) are already
+    /// cached when the worker executes the batch — under the PR-1
+    /// ingress-time scheme resolution planned at the job's own `n` and
+    /// discarded the plans, so execution at the combined `n` always
+    /// re-planned. (A *memo hit* skips candidate planning entirely;
+    /// execution then still hits the cache for dense/dynamic
+    /// resolutions, whose plan keys ignore the pattern seed, while a
+    /// memoized static decision meeting a new pattern plans that
+    /// pattern at execution — static plans are pattern-specific by
+    /// design, so that build is required work, not waste.) Decisions
+    /// are memoized per [`SelectorKey`] and tagged with the
+    /// calibration's per-geometry stamp: once this geometry's buckets
+    /// accumulate
+    /// [`OBSERVATIONS_PER_REVISIT`](crate::engine::OBSERVATIONS_PER_REVISIT)
+    /// new informative observations the memo entry goes stale and the
+    /// decision is recomputed (cheaply — the candidate plans are cache
+    /// hits) so the frontier can move with the observed stream, while
+    /// unrelated geometries keep their memo hits.
+    ///
+    /// The argmin is the selector's own
+    /// [`corrected_argmin`](crate::engine::calibration::corrected_argmin)
+    /// over the same candidate order, so resolution matches the
+    /// full-evaluation path of
+    /// [`ModeSelector::choose_with`](crate::engine::ModeSelector::choose_with)
+    /// at the same geometry by construction (and
+    /// `rust/tests/property_selection.rs` pins the agreement).
+    /// The selector's power-law pre-filter is deliberately not used
+    /// here: at batch time every candidate plan is a reusable cache
+    /// entry, so skipping planners saves nothing after the first
+    /// batch per geometry.
+    pub fn resolve_batch(
+        &self,
+        rep: &JobSpec,
+        calibration: Option<&Calibration>,
+    ) -> Result<BatchResolution> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let key = rep.selector_key();
+        let stamp = calibration.map(|c| c.geometry_stamp(rep)).unwrap_or(0);
+        if let Some(e) = self.modes.lock().expect("mode memo poisoned").get(&key) {
+            if stamp.saturating_sub(e.stamp) < crate::engine::OBSERVATIONS_PER_REVISIT {
+                self.mode_hits.fetch_add(1, Relaxed);
+                return Ok(BatchResolution {
+                    mode: e.mode,
+                    raw_cycles: e.raw_cycles,
+                    corrected_cycles: e.corrected_cycles,
+                    flipped: false,
+                    memo_hit: true,
+                });
+            }
         }
-        // Decide outside the lock (selection plans several backends).
-        let decision = selector.choose(job)?;
+        // Fresh (or stale-epoch) resolution: plan every candidate mode
+        // at the batch geometry, through the cache, in the selector's
+        // full-evaluation order (Dense, Static, Dynamic — see
+        // `device_backends`) so tie-breaking agrees; the argmin itself
+        // is the selector's `corrected_argmin`, so the two paths
+        // cannot drift. The estimates carry only kind + cycles (that
+        // is all the argmin reads); throughput is reported at
+        // execution time.
+        let mut estimates: Vec<PlanEstimate> = Vec::new();
+        let mut last_err: Option<Error> = None;
+        for mode in [Mode::Dense, Mode::Static, Mode::Dynamic] {
+            let mut cand = rep.clone();
+            cand.mode = mode;
+            match self.get_or_plan_inner(&cand, &self.resolution_hits, &self.resolution_misses) {
+                Ok((plan, _)) => estimates.push(PlanEstimate {
+                    kind: BackendKind::of_mode(mode).expect("candidates are concrete modes"),
+                    cycles: plan.estimated_cycles(),
+                    tflops: 0.0,
+                    propagation_steps: 0,
+                }),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let best = corrected_argmin(&estimates, calibration, rep);
+        let Some((winner, corrected_cycles)) = best else {
+            return Err(last_err
+                .unwrap_or_else(|| Error::Plan("no feasible backend for the job".into())));
+        };
+        let mode = winner.kind.as_mode().expect("candidates are concrete modes");
+        let raw_cycles = winner.cycles;
+        let raw_mode = corrected_argmin(&estimates, None, rep)
+            .map(|(e, _)| e.kind.as_mode().expect("candidates are concrete modes"))
+            .expect("the candidate list is non-empty");
+        let flipped = raw_mode != mode;
         self.mode_misses.fetch_add(1, Relaxed);
-        let mut memo = self.modes.lock().expect("mode memo poisoned");
-        let &mut (mode, est) =
-            memo.entry(key).or_insert((decision.mode, decision.estimated_cycles));
-        Ok((mode, est, false))
+        self.modes
+            .lock()
+            .expect("mode memo poisoned")
+            .insert(key, MemoEntry { mode, raw_cycles, corrected_cycles, stamp });
+        Ok(BatchResolution { mode, raw_cycles, corrected_cycles, flipped, memo_hit: false })
     }
 
     /// Get or build the plan for a job. Returns (plan, was_hit).
     pub fn get_or_plan(&self, job: &JobSpec) -> Result<(CachedPlan, bool)> {
+        self.get_or_plan_inner(job, &self.hits, &self.misses)
+    }
+
+    fn get_or_plan_inner(
+        &self,
+        job: &JobSpec,
+        hits: &AtomicU64,
+        misses: &AtomicU64,
+    ) -> Result<(CachedPlan, bool)> {
         use std::sync::atomic::Ordering::Relaxed;
         let key = job.plan_key();
         if let Some(plan) = self.plans.lock().expect("plan cache poisoned").get(&key) {
-            self.hits.fetch_add(1, Relaxed);
+            hits.fetch_add(1, Relaxed);
             return Ok((plan.clone(), true));
         }
         // Plan outside the lock (planning can take milliseconds).
         let plan = self.build(job)?;
-        self.misses.fetch_add(1, Relaxed);
+        misses.fetch_add(1, Relaxed);
         let mut map = self.plans.lock().expect("plan cache poisoned");
         let entry = map.entry(key).or_insert(plan);
         Ok((entry.clone(), false))
@@ -193,16 +336,75 @@ mod tests {
     }
 
     #[test]
-    fn auto_decisions_are_memoized() {
+    fn batch_resolutions_are_memoized() {
         let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
-        let selector = ModeSelector::new(IpuSpec::default(), CostModel::default());
-        let (m1, e1, hit1) = cache.resolve_mode(&job(Mode::Auto, 1), &selector).unwrap();
+        let r1 = cache.resolve_batch(&job(Mode::Auto, 1), None).unwrap();
         // Different seed, same geometry: must reuse the decision.
-        let (m2, e2, hit2) = cache.resolve_mode(&job(Mode::Auto, 2), &selector).unwrap();
-        assert!(!hit1 && hit2);
-        assert_eq!((m1, e1), (m2, e2));
-        assert_ne!(m1, Mode::Auto, "resolution must yield a concrete mode");
+        let r2 = cache.resolve_batch(&job(Mode::Auto, 2), None).unwrap();
+        assert!(!r1.memo_hit && r2.memo_hit);
+        assert_eq!((r1.mode, r1.raw_cycles), (r2.mode, r2.raw_cycles));
+        assert_ne!(r1.mode, Mode::Auto, "resolution must yield a concrete mode");
+        assert_eq!(r1.raw_cycles, r1.corrected_cycles, "no calibration, no correction");
+        assert!(!r1.flipped);
         assert_eq!(cache.mode_stats(), (1, 1));
+    }
+
+    #[test]
+    fn resolution_plans_seed_the_cache_for_execution() {
+        // The PR-1 stale-plan-waste fix: the plan selection builds at
+        // the batch geometry is the plan execution looks up, so the
+        // execution-path lookup is a HIT (under ingress-time
+        // resolution it was always a miss).
+        let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
+        let rep = job(Mode::Auto, 1);
+        let res = cache.resolve_batch(&rep, None).unwrap();
+        let mut exec = rep.clone();
+        exec.mode = res.mode;
+        let (_, was_hit) = cache.get_or_plan(&exec).unwrap();
+        assert!(was_hit, "resolution must have cached the winning plan");
+        assert_eq!(cache.stats(), (1, 0), "execution path never re-plans");
+        let (res_hits, res_misses) = cache.resolution_stats();
+        assert_eq!(res_hits, 0);
+        assert_eq!(res_misses, 3, "all three candidates planned once");
+        // A stale re-resolution re-costs candidates from cache. Ratio
+        // 2.0 keeps every observation informative across the whole
+        // revisit window (the EWMA is still >= INFORMATIVE_DELTA away
+        // from the target on the 16th step).
+        let cal = Calibration::default();
+        for _ in 0..crate::engine::OBSERVATIONS_PER_REVISIT {
+            cal.observe(BackendKind::Dense, &rep, 1_000, 2_000);
+        }
+        let res2 = cache.resolve_batch(&rep, Some(&cal)).unwrap();
+        assert!(!res2.memo_hit, "an advanced geometry stamp must invalidate the memo");
+        assert_eq!(cache.resolution_stats(), (3, 3), "re-resolution is all cache hits");
+    }
+
+    #[test]
+    fn informative_observations_revisit_memo_and_can_flip() {
+        let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
+        let rep = job(Mode::Auto, 1);
+        // Default alpha: the EWMA approaches the 4.0 ratio gradually,
+        // so each of the 16 observations still disagrees with the
+        // current factor and counts as informative.
+        let cal = Calibration::default();
+        let r1 = cache.resolve_batch(&rep, Some(&cal)).unwrap();
+        // Saturate the winner's correction factor upward across a full
+        // revisit window of observations at this geometry.
+        let kind = BackendKind::of_mode(r1.mode).unwrap();
+        for _ in 0..crate::engine::OBSERVATIONS_PER_REVISIT {
+            cal.observe(kind, &rep, 1_000, 4_000);
+        }
+        // An unrelated geometry's decision would still memo-hit; this
+        // one must be revisited.
+        let r2 = cache.resolve_batch(&rep, Some(&cal)).unwrap();
+        assert!(!r2.memo_hit);
+        if r2.mode != r1.mode {
+            assert!(r2.flipped, "a changed decision is a raw-vs-corrected flip");
+        } else {
+            // Even unflipped, the corrected estimate must now carry
+            // the saturated factor.
+            assert!(r2.corrected_cycles >= r2.raw_cycles);
+        }
     }
 
     #[test]

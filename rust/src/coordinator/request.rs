@@ -11,11 +11,13 @@ pub enum Mode {
     Static,
     /// `popsparse::dynamic::sparseDenseMatMul`.
     Dynamic,
-    /// Let the engine pick: the coordinator resolves the job to the
-    /// cheapest of the three concrete modes via
-    /// [`crate::engine::ModeSelector`] *before* batching, so batches
-    /// stay homogeneous in their resolved mode. The resolved mode is
-    /// reported back in [`JobResult::spec`], alongside the selector's
+    /// Let the engine pick: auto jobs batch under a provisional key
+    /// and the worker resolves the whole batch to the cheapest of the
+    /// three concrete modes *at batch-formation time*, at the batch's
+    /// combined `n` (calibration-corrected argmin; see
+    /// [`crate::coordinator::PlanCache::resolve_batch`]). The resolved
+    /// mode is reported back in [`JobResult::spec`], alongside the
+    /// per-job share of the batch estimate in
     /// [`JobResult::estimated_cycles`].
     Auto,
 }
@@ -85,9 +87,13 @@ impl JobSpec {
         }
     }
 
-    /// Key for auto-mode resolution memoization: the job geometry the
-    /// selector's decision depends on, without the mode or the pattern
-    /// seed. The static cost model does see the realized pattern, but
+    /// Key for auto-mode resolution memoization: the geometry the
+    /// decision depends on, without the mode or the pattern seed. For
+    /// batch-time resolution the memoized key carries the *combined*
+    /// batch `n` (the resolver is handed the batch's representative
+    /// job), so traffic that coalesces differently resolves — and
+    /// caches plans — at the geometry it actually executes. The
+    /// static cost model does see the realized pattern, but
     /// `with_density` patterns at equal geometry carry identical nnz
     /// counts and near-identical balanced-partition costs across
     /// seeds, so decisions are deliberately shared — the residual
@@ -143,7 +149,8 @@ pub struct JobResult {
     pub propagation_steps: usize,
     /// Whether the plan came from the cache.
     pub plan_cache_hit: bool,
-    /// The selector's estimated cycles, for jobs submitted as
+    /// The resolution-time estimated cycles (calibration-corrected,
+    /// scaled to this job's share of its batch), for jobs submitted as
     /// [`Mode::Auto`] (or executed through an engine backend); `None`
     /// for explicitly-moded coordinator jobs.
     pub estimated_cycles: Option<u64>,

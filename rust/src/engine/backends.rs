@@ -42,6 +42,17 @@ impl BackendKind {
             BackendKind::Gpu => None,
         }
     }
+
+    /// The backend serving a concrete [`Mode`] (`None` for
+    /// [`Mode::Auto`], which is a selection request, not a backend).
+    pub fn of_mode(mode: Mode) -> Option<Self> {
+        match mode {
+            Mode::Dense => Some(BackendKind::Dense),
+            Mode::Static => Some(BackendKind::Static),
+            Mode::Dynamic => Some(BackendKind::Dynamic),
+            Mode::Auto => None,
+        }
+    }
 }
 
 impl std::fmt::Display for BackendKind {
@@ -365,5 +376,9 @@ mod tests {
         assert_eq!(BackendKind::Static.as_mode(), Some(Mode::Static));
         assert_eq!(BackendKind::Dynamic.as_mode(), Some(Mode::Dynamic));
         assert_eq!(BackendKind::Gpu.as_mode(), None);
+        for kind in [BackendKind::Dense, BackendKind::Static, BackendKind::Dynamic] {
+            assert_eq!(BackendKind::of_mode(kind.as_mode().unwrap()), Some(kind));
+        }
+        assert_eq!(BackendKind::of_mode(Mode::Auto), None);
     }
 }

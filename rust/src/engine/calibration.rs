@@ -1,0 +1,364 @@
+//! Observed-cycle calibration: closing the estimation loop.
+//!
+//! The selector decides between backends by *analytical* cycle
+//! estimates (the planners' cost models). Gale et al.'s sparse GPU
+//! kernels and the Sparsity Roofline both argue that measured kernel
+//! cost, not analytical cost alone, should drive dispatch: cost models
+//! drift from realized cycles in backend-specific, geometry-dependent
+//! ways (here most visibly in dynamic mode, whose plan estimate is a
+//! balanced-pattern expectation while execution buckets the *actual*
+//! pattern). [`Calibration`] keeps one EWMA correction factor per
+//! (backend, geometry-bucket): the ratio of observed execution cycles
+//! to the raw estimate, learned from the simulator/interpreter as
+//! batches complete, and applied to [`PlanEstimate`] cycles *before*
+//! the selector's argmin.
+//!
+//! Guarantee: calibrated selection preserves the documented
+//! [`SELECTION_TOLERANCE`](crate::engine::SELECTION_TOLERANCE) bound
+//! *with respect to corrected estimates* — the full path is still an
+//! exact argmin, only over corrected values, and factors are clamped
+//! to [`MAX_CORRECTION`] so a burst of skewed observations cannot pin
+//! a backend arbitrarily far from its model. With identity
+//! observations (observed == estimated) every factor stays at 1.0 and
+//! corrected estimates equal raw estimates — calibration is a strict
+//! no-op until the observed stream disagrees with the model
+//! (`rust/tests/property_selection.rs` pins both properties).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::request::JobSpec;
+use crate::engine::backends::{BackendKind, PlanEstimate};
+use crate::DType;
+
+/// Default EWMA smoothing weight for new observations.
+pub const DEFAULT_ALPHA: f64 = 0.25;
+
+/// Correction factors are clamped to `[1/MAX_CORRECTION,
+/// MAX_CORRECTION]`: calibration may reshape the frontier, but a
+/// pathological observation stream cannot move any backend more than
+/// this factor away from its analytical estimate.
+pub const MAX_CORRECTION: f64 = 4.0;
+
+/// A memoized auto-mode decision goes stale — and is revisited — once
+/// its *own geometry* accumulates this many new informative
+/// observations (see [`Calibration::geometry_stamp`]): often enough
+/// that the frontier tracks the observed stream, rarely enough that
+/// the memo still amortises selection, and confined to the decisions
+/// the new observations could actually flip. Re-selection is cheap
+/// because resolution plans live in the plan cache.
+pub const OBSERVATIONS_PER_REVISIT: u64 = 16;
+
+/// An observation is *informative* — advances its bucket's update
+/// count and thereby re-opens memoized decisions at that geometry —
+/// only when its observed/estimated ratio disagrees with the bucket's
+/// *current* factor by at least this much. Observations that confirm
+/// what the calibration already believes (identity ratios at an
+/// untouched bucket — dense and static execute exactly at their
+/// estimates on the simulator — or a converged stream at any factor)
+/// still count toward [`Calibration::observations`] but carry no
+/// information that could flip a decision, so they must not churn the
+/// decision memo. Crucially the gate is relative to the factor, not
+/// to 1.0: identity observations arriving at a bucket that had
+/// learned a correction *are* informative — they un-learn it — and
+/// must re-open the memo so decisions can swing back.
+pub const INFORMATIVE_DELTA: f64 = 0.01;
+
+/// Geometry bucket a correction factor applies to: backend kind plus
+/// the job's shape quantized to powers of two (and the density decade).
+/// Coarse on purpose — correction factors model *systematic* estimate
+/// bias per regime, not per-point noise, and coarse buckets let a few
+/// observations generalize to neighbouring geometries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BucketKey {
+    pub kind: BackendKind,
+    pub log2_m: u32,
+    pub log2_k: u32,
+    pub log2_n: u32,
+    pub b: usize,
+    /// `round(-log2(density))`: 0 for dense, 4 for d=1/16, ...
+    pub log2_inv_density: i32,
+    pub dtype: DType,
+}
+
+impl BucketKey {
+    pub fn of(kind: BackendKind, job: &JobSpec) -> Self {
+        let d = job.density.clamp(1e-9, 1.0);
+        Self {
+            kind,
+            log2_m: job.m.max(1).ilog2(),
+            log2_k: job.k.max(1).ilog2(),
+            log2_n: job.n.max(1).ilog2(),
+            b: job.b,
+            log2_inv_density: (-d.log2()).round() as i32,
+            dtype: job.dtype,
+        }
+    }
+}
+
+/// Per-(backend, geometry-bucket) EWMA correction factors over
+/// observed-vs-estimated execution cycles. Thread-safe; shared between
+/// the worker pool (which observes) and the resolver (which corrects).
+/// One bucket's learned state: the EWMA factor plus how many
+/// informative observations have shaped it (the staleness signal for
+/// decisions memoized against this bucket).
+#[derive(Debug, Clone, Copy)]
+struct Ewma {
+    factor: f64,
+    informative: u64,
+}
+
+#[derive(Debug)]
+pub struct Calibration {
+    alpha: f64,
+    factors: Mutex<HashMap<BucketKey, Ewma>>,
+    observations: AtomicU64,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Self::new(DEFAULT_ALPHA)
+    }
+}
+
+impl Calibration {
+    pub fn new(alpha: f64) -> Self {
+        Self {
+            alpha: alpha.clamp(0.0, 1.0),
+            factors: Mutex::new(HashMap::new()),
+            observations: AtomicU64::new(0),
+        }
+    }
+
+    /// The correction factor for this backend at this job's geometry
+    /// bucket (1.0 when nothing has been observed yet).
+    pub fn factor(&self, kind: BackendKind, job: &JobSpec) -> f64 {
+        let key = BucketKey::of(kind, job);
+        self.factors
+            .lock()
+            .expect("calibration poisoned")
+            .get(&key)
+            .map(|e| e.factor)
+            .unwrap_or(1.0)
+    }
+
+    /// Apply the bucket's correction to a raw cycle estimate.
+    pub fn correct(&self, kind: BackendKind, job: &JobSpec, raw_cycles: u64) -> u64 {
+        let corrected = raw_cycles as f64 * self.factor(kind, job);
+        (corrected.round() as u64).max(1)
+    }
+
+    /// Feed one observed execution back: `estimated` is the raw
+    /// (uncorrected) cycle estimate the plan carried, `observed` the
+    /// cycles the simulator/interpreter actually reported. Zero on
+    /// either side is ignored (nothing to learn from).
+    pub fn observe(&self, kind: BackendKind, job: &JobSpec, estimated: u64, observed: u64) {
+        if estimated == 0 || observed == 0 {
+            return;
+        }
+        let ratio =
+            (observed as f64 / estimated as f64).clamp(1.0 / MAX_CORRECTION, MAX_CORRECTION);
+        let key = BucketKey::of(kind, job);
+        let mut factors = self.factors.lock().expect("calibration poisoned");
+        let e = factors.entry(key).or_insert(Ewma { factor: 1.0, informative: 0 });
+        if (ratio - e.factor).abs() >= INFORMATIVE_DELTA {
+            e.informative += 1;
+        }
+        e.factor = (e.factor + self.alpha * (ratio - e.factor))
+            .clamp(1.0 / MAX_CORRECTION, MAX_CORRECTION);
+        drop(factors);
+        self.observations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total observations fed in so far.
+    pub fn observations(&self) -> u64 {
+        self.observations.load(Ordering::Relaxed)
+    }
+
+    /// Staleness stamp for decisions at `job`'s geometry: the total
+    /// informative observations (ratio disagreeing with the bucket's
+    /// current factor by at least [`INFORMATIVE_DELTA`]) across the
+    /// device-backend buckets the decision depends on. Memoized
+    /// resolutions record the stamp they were computed under and go
+    /// stale once it has advanced by [`OBSERVATIONS_PER_REVISIT`] —
+    /// so only geometries whose observed stream actually moved (in
+    /// either direction: learning a correction or un-learning one)
+    /// get revisited, while confirming observations — e.g. explicit
+    /// dense/static traffic, whose simulated executions equal their
+    /// estimates by construction — never churn the memo.
+    pub fn geometry_stamp(&self, job: &JobSpec) -> u64 {
+        let factors = self.factors.lock().expect("calibration poisoned");
+        [BackendKind::Dense, BackendKind::Static, BackendKind::Dynamic]
+            .iter()
+            .map(|&kind| {
+                factors.get(&BucketKey::of(kind, job)).map(|e| e.informative).unwrap_or(0)
+            })
+            .sum()
+    }
+
+    /// Number of (backend, geometry-bucket) factors tracked.
+    pub fn buckets(&self) -> usize {
+        self.factors.lock().expect("calibration poisoned").len()
+    }
+
+    /// All tracked factors, for reporting.
+    pub fn snapshot(&self) -> Vec<(BucketKey, f64)> {
+        let mut v: Vec<(BucketKey, f64)> = self
+            .factors
+            .lock()
+            .expect("calibration poisoned")
+            .iter()
+            .map(|(k, e)| (*k, e.factor))
+            .collect();
+        v.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        v
+    }
+}
+
+/// First-minimum argmin over `estimates` by *corrected* cycles (raw
+/// cycles when `calibration` is `None`). Returns the winning estimate
+/// and its corrected value. Both the selector's full path
+/// ([`ModeSelector::choose_with`](crate::engine::ModeSelector::choose_with))
+/// and the plan cache's batch resolver funnel through this one
+/// function, so their argmin (including tie-breaking on the backend
+/// evaluation order) cannot drift apart —
+/// `rust/tests/property_selection.rs` pins the agreement end to end.
+pub fn corrected_argmin<'a>(
+    estimates: &'a [PlanEstimate],
+    calibration: Option<&Calibration>,
+    job: &JobSpec,
+) -> Option<(&'a PlanEstimate, u64)> {
+    let mut best: Option<(&PlanEstimate, u64)> = None;
+    for e in estimates {
+        let corrected = match calibration {
+            Some(c) => c.correct(e.kind, job, e.cycles),
+            None => e.cycles,
+        };
+        let better = match best {
+            None => true,
+            Some((_, best_cycles)) => corrected < best_cycles,
+        };
+        if better {
+            best = Some((e, corrected));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Mode;
+
+    fn job(m: usize, n: usize, density: f64) -> JobSpec {
+        JobSpec {
+            mode: Mode::Auto,
+            m,
+            k: m,
+            n,
+            b: 16,
+            density,
+            dtype: DType::Fp16,
+            pattern_seed: 0,
+        }
+    }
+
+    #[test]
+    fn identity_observations_are_a_noop() {
+        let cal = Calibration::default();
+        let j = job(1024, 256, 1.0 / 16.0);
+        for est in [100u64, 5_000, 123_456] {
+            cal.observe(BackendKind::Static, &j, est, est);
+        }
+        assert_eq!(cal.factor(BackendKind::Static, &j), 1.0);
+        assert_eq!(cal.correct(BackendKind::Static, &j, 777), 777);
+        assert_eq!(cal.observations(), 3);
+        assert_eq!(cal.geometry_stamp(&j), 0, "identity observations are not informative");
+    }
+
+    #[test]
+    fn factors_move_toward_observed_ratio_and_clamp() {
+        let cal = Calibration::new(0.5);
+        let j = job(1024, 256, 1.0 / 16.0);
+        cal.observe(BackendKind::Dynamic, &j, 1000, 2000); // ratio 2.0
+        let f1 = cal.factor(BackendKind::Dynamic, &j);
+        assert!(f1 > 1.0 && f1 <= 2.0, "factor {f1}");
+        // Saturating in one direction must clamp at MAX_CORRECTION.
+        for _ in 0..64 {
+            cal.observe(BackendKind::Dynamic, &j, 1, u64::MAX / 2);
+        }
+        assert!(cal.factor(BackendKind::Dynamic, &j) <= MAX_CORRECTION);
+        // Other backends and geometries are untouched.
+        assert_eq!(cal.factor(BackendKind::Static, &j), 1.0);
+        assert_eq!(cal.factor(BackendKind::Dynamic, &job(4096, 256, 1.0 / 16.0)), 1.0);
+    }
+
+    #[test]
+    fn buckets_are_coarse_but_separate_backends() {
+        let a = job(1024, 256, 1.0 / 16.0);
+        let mut b = a.clone();
+        b.pattern_seed = 99; // seed never affects the bucket
+        assert_eq!(BucketKey::of(BackendKind::Static, &a), BucketKey::of(BackendKind::Static, &b));
+        assert_ne!(
+            BucketKey::of(BackendKind::Static, &a),
+            BucketKey::of(BackendKind::Dynamic, &a)
+        );
+        // Same power-of-two decade buckets together; different decades apart.
+        let mut c = a.clone();
+        c.n = 300; // still log2 = 8
+        assert_eq!(BucketKey::of(BackendKind::Static, &a), BucketKey::of(BackendKind::Static, &c));
+        c.n = 1024;
+        assert_ne!(BucketKey::of(BackendKind::Static, &a), BucketKey::of(BackendKind::Static, &c));
+    }
+
+    #[test]
+    fn geometry_stamp_counts_informative_observations_per_geometry() {
+        let cal = Calibration::default();
+        let j = job(512, 128, 0.25);
+        let other = job(2048, 512, 0.0625);
+        assert_eq!(cal.geometry_stamp(&j), 0);
+        // Identity observations never advance the stamp...
+        for _ in 0..4 * OBSERVATIONS_PER_REVISIT {
+            cal.observe(BackendKind::Dense, &j, 10, 10);
+        }
+        assert_eq!(cal.geometry_stamp(&j), 0);
+        // ...informative ones (ratio 1.2) do, summed across the
+        // backends the geometry's decision depends on.
+        for _ in 0..3 {
+            cal.observe(BackendKind::Dense, &j, 10, 12);
+        }
+        cal.observe(BackendKind::Dynamic, &j, 10, 15);
+        assert_eq!(cal.geometry_stamp(&j), 4);
+        // Unrelated geometries are untouched: their memoized
+        // decisions must not churn on this stream.
+        assert_eq!(cal.geometry_stamp(&other), 0);
+        // Un-learning is informative too: an identity observation at a
+        // bucket that has learned a correction disagrees with the
+        // current factor, so it must advance the stamp (decisions can
+        // swing back when the workload reverts).
+        let learned = cal.geometry_stamp(&j);
+        cal.observe(BackendKind::Dynamic, &j, 10, 10);
+        assert_eq!(cal.geometry_stamp(&j), learned + 1);
+    }
+
+    #[test]
+    fn corrected_argmin_is_first_min_and_respects_factors() {
+        let j = job(1024, 256, 1.0 / 16.0);
+        let est = |kind, cycles| PlanEstimate { kind, cycles, tflops: 1.0, propagation_steps: 0 };
+        let estimates = vec![
+            est(BackendKind::Dense, 1000),
+            est(BackendKind::Static, 800),
+            est(BackendKind::Dynamic, 800),
+        ];
+        // No calibration: exact raw argmin, first of the tie wins.
+        let (win, c) = corrected_argmin(&estimates, None, &j).unwrap();
+        assert_eq!((win.kind, c), (BackendKind::Static, 800));
+        // Penalize static hard enough and the argmin flips.
+        let cal = Calibration::new(1.0);
+        cal.observe(BackendKind::Static, &j, 1000, 2000);
+        let (win, c) = corrected_argmin(&estimates, Some(&cal), &j).unwrap();
+        assert_eq!(win.kind, BackendKind::Dynamic);
+        assert_eq!(c, 800);
+    }
+}

@@ -17,20 +17,29 @@
 //!   estimated cycles, with the fitted power law of Figure 4c
 //!   ([`crate::fit`]) available as a fast pre-filter for decisively
 //!   sparse or decisively dense jobs.
+//! * [`Calibration`] — per-(backend, geometry-bucket) EWMA correction
+//!   factors learned from observed execution cycles and applied to
+//!   [`PlanEstimate`] cycles before the selector's argmin, so dispatch
+//!   follows measured cost rather than the analytical model alone.
 //!
-//! The coordinator resolves [`Mode::Auto`] requests through the
-//! selector (memoized per plan-cache key) before batching, so batches
-//! stay homogeneous in their *resolved* mode. See DESIGN.md §3 for the
-//! architecture and the mode-crossover rationale.
+//! [`Mode::Auto`] jobs batch under a provisional key and are resolved
+//! at *batch-formation time*, at the batch's combined `n` — the
+//! geometry actually executed — with resolution-time plans seeded into
+//! the [`PlanCache`](crate::coordinator::PlanCache) (memoized per
+//! selector key, revisited as the calibration evolves). See DESIGN.md
+//! §3 and §4 for the architecture and the selection/calibration
+//! lifecycle.
 //!
 //! [`Mode`]: crate::coordinator::request::Mode
 //! [`Mode::Auto`]: crate::coordinator::request::Mode::Auto
 
 pub mod backends;
+pub mod calibration;
 pub mod selector;
 
 pub use backends::{
     backend_for, device_backends, Backend, BackendKind, DenseBackend, DynamicBackend, EngineEnv,
     GpuBackend, PlanEstimate, StaticBackend,
 };
+pub use calibration::{Calibration, INFORMATIVE_DELTA, MAX_CORRECTION, OBSERVATIONS_PER_REVISIT};
 pub use selector::{Decision, ModeSelector, PREFILTER_MARGIN, SELECTION_TOLERANCE};

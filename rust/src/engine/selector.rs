@@ -21,6 +21,7 @@ use crate::coordinator::request::{JobSpec, Mode};
 use crate::engine::backends::{
     device_backends, Backend, DenseBackend, EngineEnv, PlanEstimate, StaticBackend,
 };
+use crate::engine::calibration::{corrected_argmin, Calibration};
 use crate::error::{Error, Result};
 use crate::fit::{fit_power_law, PowerLaw};
 use crate::sim::chip::{CostModel, IpuSpec};
@@ -66,8 +67,12 @@ const PREFILTER_MIN_R2: f64 = 0.7;
 pub struct Decision {
     /// The chosen serving mode.
     pub mode: Mode,
-    /// The chosen backend's estimated cycles.
+    /// The chosen backend's estimated cycles, after any calibration
+    /// correction (equals [`Decision::raw_estimated_cycles`] when no
+    /// calibration was supplied).
     pub estimated_cycles: u64,
+    /// The chosen backend's uncorrected cost-model estimate.
+    pub raw_estimated_cycles: u64,
     /// Every estimate produced while deciding (the predicted winner
     /// plus any cross-check on the pre-filter fast path, all feasible
     /// backends otherwise).
@@ -147,12 +152,29 @@ impl ModeSelector {
     /// Choose the cheapest device backend for `job`. `job.mode` is
     /// ignored — the selector always answers from the job's geometry.
     pub fn choose(&self, job: &JobSpec) -> Result<Decision> {
+        self.choose_with(job, None)
+    }
+
+    /// [`ModeSelector::choose`] with observed-cycle calibration: every
+    /// candidate's raw estimate is corrected by the calibration's
+    /// per-(backend, geometry-bucket) factor *before* the argmin, so
+    /// the decision follows measured cost. The documented
+    /// [`SELECTION_TOLERANCE`] bound holds over corrected estimates:
+    /// when a calibration is supplied the power-law fast path is
+    /// bypassed entirely (the law predicts *raw* cost ratios, so its
+    /// shortcut cannot honour corrected ones) and selection is the
+    /// exact corrected argmin. With no calibration this is exactly
+    /// `choose`.
+    pub fn choose_with(&self, job: &JobSpec, cal: Option<&Calibration>) -> Result<Decision> {
         let t0 = Instant::now();
 
         // Fast path: the fitted law, far from the crossover frontier
         // and inside the fitted envelope (the law is fitted on square
         // problems and carries no k feature, so k must match m).
-        if let Some(law) = &self.prefilter {
+        // Uncalibrated selection only — the law models raw planner
+        // cost, and skipping planners under a calibration could pick a
+        // backend whose corrected estimate busts the tolerance.
+        if let (Some(law), None) = (&self.prefilter, cal) {
             if job.b > 1
                 && job.b <= PREFILTER_MAX_B
                 && job.m <= PREFILTER_MAX_M
@@ -168,8 +190,7 @@ impl ModeSelector {
                         // misfire falls through to full evaluation.
                         let dn = DenseBackend.plan(job, &self.env).ok();
                         let misfire = dn.as_ref().is_some_and(|d| {
-                            st.cycles as f64
-                                > d.cycles as f64 * (1.0 + SELECTION_TOLERANCE)
+                            st.cycles as f64 > d.cycles as f64 * (1.0 + SELECTION_TOLERANCE)
                         });
                         if !misfire {
                             let cycles = st.cycles;
@@ -178,6 +199,7 @@ impl ModeSelector {
                             return Ok(Decision {
                                 mode: Mode::Static,
                                 estimated_cycles: cycles,
+                                raw_estimated_cycles: cycles,
                                 estimates,
                                 prefiltered: true,
                                 selection_time: t0.elapsed(),
@@ -186,9 +208,11 @@ impl ModeSelector {
                     }
                 } else if pred <= 1.0 / PREFILTER_MARGIN {
                     if let Ok(est) = DenseBackend.plan(job, &self.env) {
+                        let cycles = est.cycles;
                         return Ok(Decision {
                             mode: Mode::Dense,
-                            estimated_cycles: est.cycles,
+                            estimated_cycles: cycles,
+                            raw_estimated_cycles: cycles,
                             estimates: vec![est],
                             prefiltered: true,
                             selection_time: t0.elapsed(),
@@ -198,7 +222,9 @@ impl ModeSelector {
             }
         }
 
-        // Full evaluation: plan every device backend, keep the argmin.
+        // Full evaluation: plan every device backend, keep the argmin
+        // over corrected estimates (exact raw argmin when there is no
+        // calibration).
         let mut estimates: Vec<PlanEstimate> = Vec::new();
         let mut last_err: Option<Error> = None;
         for backend in device_backends() {
@@ -207,15 +233,15 @@ impl ModeSelector {
                 Err(e) => last_err = Some(e),
             }
         }
-        let best = estimates.iter().min_by_key(|e| e.cycles).cloned();
-        match best {
-            Some(winner) => Ok(Decision {
+        match corrected_argmin(&estimates, cal, job) {
+            Some((winner, corrected)) => Ok(Decision {
                 mode: winner
                     .kind
                     .as_mode()
                     .expect("device backends always map to serving modes"),
-                estimated_cycles: winner.cycles,
-                estimates,
+                estimated_cycles: corrected,
+                raw_estimated_cycles: winner.cycles,
+                estimates: estimates.clone(),
                 prefiltered: false,
                 selection_time: t0.elapsed(),
             }),
@@ -228,6 +254,7 @@ impl ModeSelector {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::calibration::MAX_CORRECTION;
 
     fn selector() -> ModeSelector {
         ModeSelector::new(IpuSpec::default(), CostModel::default())
@@ -289,6 +316,47 @@ mod tests {
         // operand volume, so every backend refuses.
         let s = selector();
         assert!(s.choose(&job(8192, 1.0, 16, 65536)).is_err());
+    }
+
+    #[test]
+    fn identity_calibration_reproduces_choose_and_saturation_flips() {
+        let s = selector();
+        let j = job(4096, 1.0 / 16.0, 16, 2048);
+        let base = s.choose(&j).unwrap();
+        // Identity calibration: bit-identical decision.
+        let id = Calibration::default();
+        let same = s.choose_with(&j, Some(&id)).unwrap();
+        assert_eq!(same.mode, base.mode);
+        assert_eq!(same.estimated_cycles, base.estimated_cycles);
+        assert_eq!(same.raw_estimated_cycles, base.raw_estimated_cycles);
+        assert_eq!(base.estimated_cycles, base.raw_estimated_cycles);
+        // Saturate the winner's correction upward: if any alternative's
+        // raw estimate is within MAX_CORRECTION of the winner's, the
+        // corrected argmin must abandon the original winner.
+        let cal = Calibration::new(1.0);
+        let winner_kind = base
+            .estimates
+            .iter()
+            .min_by_key(|e| e.cycles)
+            .expect("decision carries estimates")
+            .kind;
+        cal.observe(winner_kind, &j, 1_000, 4_000);
+        let best_alt = base
+            .estimates
+            .iter()
+            .filter(|e| e.kind != winner_kind)
+            .map(|e| e.cycles)
+            .min();
+        let flipped = s.choose_with(&j, Some(&cal)).unwrap();
+        if let Some(alt) = best_alt {
+            if (alt as f64) < base.raw_estimated_cycles as f64 * MAX_CORRECTION {
+                assert_ne!(
+                    flipped.mode, base.mode,
+                    "saturated correction must flip the choice: {:?}",
+                    flipped.estimates
+                );
+            }
+        }
     }
 
     #[test]

@@ -28,8 +28,9 @@ fn usage() -> ! {
          commands:\n\
          \x20 plan   --mode <auto|static|dynamic|dense> --m M --k K --n N [--b B] [--density D] [--fp32]\n\
          \x20 run    [--artifact NAME]          numeric execution + oracle check\n\
-         \x20 bench  <experiment|all>           regenerate paper tables/figures\n\
+         \x20 bench  <experiment|all> [--calibrated]  regenerate paper tables/figures\n\
          \x20        experiments: table3 fig2 fig3a fig3b fig4a fig4b fig4c fig7 auto ell conclusions\n\
+         \x20        --calibrated: add the observed-cycle-calibrated crossover arm to `auto`\n\
          \x20 serve  [--jobs N] [--workers W]   synthetic serving workload\n\
          \x20 list                              list AOT artifacts"
     );
@@ -202,7 +203,11 @@ fn cmd_run(args: &[String]) -> popsparse::Result<()> {
 }
 
 fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
-    let which = args.first().map(String::as_str).unwrap_or("all");
+    // The experiment name is the first non-flag argument, so
+    // `repro bench --calibrated auto` and `repro bench auto
+    // --calibrated` both work (flags alone default to `all`).
+    let which = args.iter().find(|a| !a.starts_with("--")).map(String::as_str).unwrap_or("all");
+    let flags = parse_flags(args);
     let env = Env::default();
     let out_dir = std::path::Path::new("target/bench_results");
     let run = |name: &str, tables: Vec<popsparse::bench_harness::Table>| -> popsparse::Result<()> {
@@ -245,6 +250,13 @@ fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
     }
     if all || which == "auto" {
         run("auto", vec![experiments::auto_crossover(&env)])?;
+        if flags.contains_key("calibrated") {
+            // The `--calibrated` arm: warm a calibration from observed
+            // (simulated) execution cycles, then reprint the frontier
+            // with corrections applied so the shift is side-by-side
+            // with the raw table above.
+            run("auto_calibrated", vec![experiments::auto_crossover_calibrated(&env)])?;
+        }
     }
     if all || which == "ell" {
         run("ell", vec![experiments::ell_ablation(&env)])?;
@@ -307,12 +319,26 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
     let (mode_hits, mode_misses) = coordinator.mode_memo_stats();
     println!(
         "auto mode: {} jobs resolved (dense {} / static {} / dynamic {}), \
-         memo {mode_hits} hits / {mode_misses} misses, estimate err {:.1}%",
+         memo {mode_hits} hits / {mode_misses} misses, estimate err {:.1}% \
+         raw / {:.1}% calibrated",
         snap.auto_resolved(),
         snap.auto_dense,
         snap.auto_static,
         snap.auto_dynamic,
-        snap.auto_estimate_rel_err * 100.0
+        snap.auto_estimate_rel_err * 100.0,
+        snap.auto_estimate_rel_err_calibrated * 100.0
+    );
+    let (res_hits, res_misses) = coordinator.resolution_plan_stats();
+    println!(
+        "batch-time selection: {} on workers / {} at ingress, {:?} total, \
+         {} calibration flips, resolution plans {res_hits} hits / {res_misses} misses, \
+         {} calibration buckets over {} observations",
+        snap.worker_selections,
+        snap.ingress_selections,
+        snap.selection_time,
+        snap.decision_flips,
+        coordinator.calibration().buckets(),
+        coordinator.calibration().observations()
     );
     println!(
         "latency p50 {:?} p99 {:?} max {:?}; simulated device cycles {}",

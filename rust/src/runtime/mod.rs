@@ -13,7 +13,7 @@
 //! dispatched on the manifest's artifact `kind` (`spmm`, `dense`,
 //! `mlp`). The interpreter computes exactly what the lowered HLO
 //! computes, so oracle checks and the serving examples are unchanged;
-//! see DESIGN.md §4 for the PJRT integration notes (HLO is exported as
+//! see DESIGN.md §5 for the PJRT integration notes (HLO is exported as
 //! *text*, not HloModuleProto, because jax ≥ 0.5 emits 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects).
 

@@ -7,10 +7,16 @@
 //!   conservation through partitions and buckets);
 //! * `ModeSelector::choose` never picks a backend whose estimated
 //!   cycles exceed the best alternative's by more than the documented
-//!   [`SELECTION_TOLERANCE`].
+//!   [`SELECTION_TOLERANCE`];
+//! * batches formed from `Mode::Auto` jobs produce bit-identical
+//!   results to the same jobs submitted with the resolved mode
+//!   explicitly, across dense/static/dynamic and block sizes
+//!   {4, 8, 16}.
 
-use popsparse::coordinator::{JobSpec, Mode};
-use popsparse::engine::{device_backends, Backend, ModeSelector, SELECTION_TOLERANCE};
+use std::time::Duration;
+
+use popsparse::coordinator::{Config, Coordinator, JobResult, JobSpec, Mode};
+use popsparse::engine::{device_backends, Backend, BackendKind, ModeSelector, SELECTION_TOLERANCE};
 use popsparse::sim::chip::{CostModel, IpuSpec};
 use popsparse::sparse::{patterns, Dense};
 use popsparse::util::Rng;
@@ -137,6 +143,118 @@ fn selector_choice_is_within_documented_tolerance() {
             decision.estimated_cycles as f64 <= best as f64 * (1.0 + SELECTION_TOLERANCE)
         );
     }
+}
+
+/// One batch of three same-geometry jobs through a fresh coordinator;
+/// returns the per-job results. `max_batch_n` equals the combined n,
+/// so all three jobs flush as a single batch deterministically.
+fn serve_batch_of_three(job: &JobSpec) -> Vec<JobResult> {
+    let c = Coordinator::new(
+        Config { workers: 1, max_batch_n: 3 * job.n, max_batch_delay: Duration::from_secs(5) },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    let rxs: Vec<_> = (0..3).map(|_| c.submit(job.clone())).collect();
+    let results = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    c.shutdown();
+    results
+}
+
+fn assert_bit_identical(auto: &[JobResult], explicit: &[JobResult], context: &str) {
+    assert_eq!(auto.len(), explicit.len());
+    for (a, e) in auto.iter().zip(explicit) {
+        assert_eq!(a.spec.mode, e.spec.mode, "{context}");
+        assert_eq!(a.cycles, e.cycles, "{context}: simulated cycles must match");
+        assert_eq!(a.propagation_steps, e.propagation_steps, "{context}");
+        assert_eq!(
+            a.tflops.to_bits(),
+            e.tflops.to_bits(),
+            "{context}: throughput must be bit-identical"
+        );
+    }
+}
+
+#[test]
+fn auto_batches_match_explicit_submissions_bit_for_bit() {
+    // Auto batches resolve at the combined n and execute through the
+    // same plan the explicit submission builds, so results must agree
+    // to the bit — for every block size and on both sides of the
+    // density frontier (covering dense and static resolutions; the
+    // dynamic resolution is covered by the calibration-forced test
+    // below).
+    for &b in &[4usize, 8, 16] {
+        for &density in &[0.5, 0.125, 1.0 / 32.0] {
+            let auto_job = JobSpec {
+                mode: Mode::Auto,
+                m: 1024,
+                k: 1024,
+                n: 64,
+                b,
+                density,
+                dtype: DType::Fp16,
+                pattern_seed: 11,
+            };
+            let auto_results = serve_batch_of_three(&auto_job);
+            let resolved = auto_results[0].spec.mode;
+            assert_ne!(resolved, Mode::Auto);
+            let mut explicit_job = auto_job.clone();
+            explicit_job.mode = resolved;
+            let explicit_results = serve_batch_of_three(&explicit_job);
+            assert_bit_identical(
+                &auto_results,
+                &explicit_results,
+                &format!("b={b} d={density} resolved={resolved}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn calibration_forced_dynamic_batch_matches_explicit_dynamic() {
+    // Force a dynamic resolution by teaching the calibration that
+    // static and dense run far above their estimates at the batch's
+    // geometry bucket. At m=1024, d=1/8 the dynamic plan estimate
+    // sits within a sliver of static's (the balanced-pattern
+    // expectation — see `engine::backends` tests), so saturated 4x
+    // corrections on the other two make dynamic the corrected argmin
+    // with a wide margin. The resulting auto batch must still be
+    // bit-identical to an explicit dynamic batch: calibration only
+    // steers the decision, never the execution.
+    let auto_job = JobSpec {
+        mode: Mode::Auto,
+        m: 1024,
+        k: 1024,
+        n: 64,
+        b: 16,
+        density: 1.0 / 8.0,
+        dtype: DType::Fp16,
+        pattern_seed: 21,
+    };
+    let c = Coordinator::new(
+        Config { workers: 1, max_batch_n: 3 * auto_job.n, max_batch_delay: Duration::from_secs(5) },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    // The batch rep carries the combined n: observe at that bucket.
+    let mut rep = auto_job.clone();
+    rep.n = 3 * auto_job.n;
+    for _ in 0..32 {
+        c.calibration().observe(BackendKind::Static, &rep, 1_000, 4_000);
+        c.calibration().observe(BackendKind::Dense, &rep, 1_000, 4_000);
+    }
+    let rxs: Vec<_> = (0..3).map(|_| c.submit(auto_job.clone())).collect();
+    let auto_results: Vec<JobResult> =
+        rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    c.shutdown();
+    assert_eq!(
+        auto_results[0].spec.mode,
+        Mode::Dynamic,
+        "saturated corrections on dense and static must push the batch to dynamic"
+    );
+    let mut explicit_job = auto_job.clone();
+    explicit_job.mode = Mode::Dynamic;
+    let explicit_results = serve_batch_of_three(&explicit_job);
+    assert_bit_identical(&auto_results, &explicit_results, "calibration-forced dynamic");
 }
 
 #[test]

@@ -88,6 +88,41 @@ fn dynamic_plan_shared_while_patterns_vary() {
 }
 
 #[test]
+fn auto_trace_cache_hit_rate_beats_ingress_time_resolution() {
+    // Regression for the PR-1 stale-plan waste: ingress-time
+    // resolution planned candidates at the job's own n and DISCARDED
+    // the plans, so on this 6-job auto trace the execution path
+    // scored (5 hits, 1 miss) — the first batch always re-planned.
+    // Batch-time resolution plans candidates through the cache at the
+    // executed geometry, so every execution lookup is a hit: (6, 0),
+    // a strictly higher hit rate on the same trace.
+    let c = Coordinator::new(
+        Config { workers: 1, max_batch_n: 64, max_batch_delay: Duration::from_millis(1) },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    // One shared pattern seed keeps the executed plan key identical
+    // across the trace whichever mode the selector picks, so the
+    // hit-rate comparison is independent of where the frontier sits.
+    let auto = job(Mode::Auto, 1024, 64, 3);
+    for i in 0..6u64 {
+        let r = c.submit_wait(auto.clone()).unwrap();
+        assert_ne!(r.spec.mode, Mode::Auto);
+        assert!(r.plan_cache_hit, "execution must reuse the resolution-time plan (job {i})");
+    }
+    let (hits, misses) = c.plan_cache_stats();
+    assert_eq!((hits, misses), (6, 0), "strictly better than PR-1's (5, 1) on this trace");
+    // The planning cost lives on the resolution path instead, paid
+    // once per geometry (first batch plans up to 3 candidates; the
+    // memoized decisions never re-plan).
+    let (res_hits, res_misses) = c.resolution_plan_stats();
+    assert!(res_misses <= 3, "one fresh resolution: {res_misses} candidate builds");
+    assert_eq!(res_hits, 0, "memoized decisions never re-cost candidates");
+    assert_eq!(c.mode_memo_stats(), (5, 1));
+    c.shutdown();
+}
+
+#[test]
 fn throughput_improves_with_batching() {
     // Serving the same 32 jobs with and without effective batching:
     // the batched coordinator must need fewer total simulated cycles

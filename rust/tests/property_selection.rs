@@ -1,0 +1,157 @@
+//! Property tests over randomized geometries (seeded RNG, no proptest
+//! in the offline build) for batch-time selection and calibration:
+//!
+//! * batch-time resolution never violates the documented
+//!   [`SELECTION_TOLERANCE`], even with calibration factors applied —
+//!   the bound calibrated selection guarantees is over *corrected*
+//!   estimates, and the full path is an exact argmin over them;
+//! * a batch's resolved mode equals what the selector would choose at
+//!   the batch's *combined* `n` (same argmin, same correction, same
+//!   tie-breaking — [`PlanCache::resolve_batch`] and
+//!   [`ModeSelector::choose_with`] may not drift apart);
+//! * calibration with identity observations is a strict no-op
+//!   (corrected estimates equal raw estimates, decisions unchanged).
+
+use std::time::Duration;
+
+use popsparse::coordinator::{Config, Coordinator, JobSpec, Mode, PlanCache};
+use popsparse::engine::{
+    device_backends, Backend, BackendKind, Calibration, ModeSelector, SELECTION_TOLERANCE,
+};
+use popsparse::sim::chip::{CostModel, IpuSpec};
+use popsparse::util::Rng;
+use popsparse::DType;
+
+const KINDS: [BackendKind; 3] = [BackendKind::Dense, BackendKind::Static, BackendKind::Dynamic];
+
+fn random_job(r: &mut Rng) -> JobSpec {
+    let b = [4usize, 8, 16][r.below(3)];
+    let mb = [16usize, 32, 64][r.below(3)];
+    let density = [0.5, 0.25, 0.125, 0.0625, 0.03125][r.below(5)];
+    let n = [64usize, 128, 256, 512][r.below(4)];
+    JobSpec {
+        mode: Mode::Auto,
+        m: mb * b,
+        k: mb * b,
+        n,
+        b,
+        density,
+        dtype: DType::Fp16,
+        pattern_seed: r.next_u64(),
+    }
+}
+
+/// A calibration with random (but bounded) correction factors for
+/// every backend at `job`'s geometry bucket.
+fn random_calibration(r: &mut Rng, job: &JobSpec) -> Calibration {
+    let cal = Calibration::new(1.0);
+    for kind in KINDS {
+        // Observed/estimated ratio in [0.33, 3.00].
+        let ratio = 0.33 + r.below(268) as f64 / 100.0;
+        cal.observe(kind, job, 1_000_000, (1_000_000.0 * ratio).round() as u64);
+    }
+    cal
+}
+
+#[test]
+fn calibrated_batch_resolution_respects_tolerance() {
+    let (spec, cm) = (IpuSpec::default(), CostModel::default());
+    let selector = ModeSelector::new(spec.clone(), cm.clone());
+    let mut r = Rng::seed_from_u64(0xCA11B);
+    for _ in 0..12 {
+        let rep = random_job(&mut r);
+        let cal = random_calibration(&mut r, &rep);
+        let cache = PlanCache::new(spec.clone(), cm.clone());
+        let res = cache.resolve_batch(&rep, Some(&cal)).expect("feasible geometry");
+        // Independently correct every feasible backend's estimate.
+        let best = device_backends()
+            .iter()
+            .filter_map(|be| be.plan(&rep, selector.env()).ok())
+            .map(|e| cal.correct(e.kind, &rep, e.cycles))
+            .min()
+            .expect("at least one backend feasible");
+        assert!(
+            res.corrected_cycles as f64 <= best as f64 * (1.0 + SELECTION_TOLERANCE),
+            "tolerance violated at {rep:?}: chose {} vs best {best}",
+            res.corrected_cycles
+        );
+        // In fact the batch path is an exact argmin over corrected
+        // estimates (tolerance 0 on the full path).
+        assert_eq!(res.corrected_cycles, best, "{rep:?}");
+    }
+}
+
+#[test]
+fn batch_resolution_matches_selector_at_the_same_geometry() {
+    let (spec, cm) = (IpuSpec::default(), CostModel::default());
+    let selector = ModeSelector::new(spec.clone(), cm.clone());
+    let mut r = Rng::seed_from_u64(0xBA7C4);
+    for _ in 0..10 {
+        let rep = random_job(&mut r);
+        let cal = random_calibration(&mut r, &rep);
+        let cache = PlanCache::new(spec.clone(), cm.clone());
+        let res = cache.resolve_batch(&rep, Some(&cal)).expect("feasible geometry");
+        let dec = selector.choose_with(&rep, Some(&cal)).expect("feasible geometry");
+        assert_eq!(res.mode, dec.mode, "batch and selector disagree at {rep:?}");
+        assert_eq!(res.corrected_cycles, dec.estimated_cycles, "{rep:?}");
+        assert_eq!(res.raw_cycles, dec.raw_estimated_cycles, "{rep:?}");
+    }
+}
+
+#[test]
+fn coordinator_resolves_batches_at_their_combined_n() {
+    // Four Auto jobs of n=64 coalesce under one provisional key and
+    // flush at capacity 256: the serving decision must equal the
+    // selector's decision at the *combined* n=256 — resolution sees
+    // the geometry actually executed, not the per-job one.
+    let c = Coordinator::new(
+        Config { workers: 2, max_batch_n: 256, max_batch_delay: Duration::from_secs(5) },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    let job = JobSpec {
+        mode: Mode::Auto,
+        m: 2048,
+        k: 2048,
+        n: 64,
+        b: 16,
+        density: 1.0 / 16.0,
+        dtype: DType::Fp16,
+        pattern_seed: 5,
+    };
+    let rxs: Vec<_> = (0..4).map(|_| c.submit(job.clone())).collect();
+    let results: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    let selector = ModeSelector::new(IpuSpec::default(), CostModel::default());
+    let mut rep = job.clone();
+    rep.n = 256;
+    let expect = selector.choose(&rep).expect("feasible geometry").mode;
+    for r in &results {
+        assert_eq!(r.spec.mode, expect, "batch must resolve at combined n");
+        assert!(r.plan_cache_hit, "execution reuses the resolution-time plan");
+    }
+    assert_eq!(c.metrics().worker_selections, 1, "one batch, one fresh resolution");
+    c.shutdown();
+}
+
+#[test]
+fn identity_calibration_is_a_noop_for_resolution() {
+    let (spec, cm) = (IpuSpec::default(), CostModel::default());
+    let mut r = Rng::seed_from_u64(0x1DE57);
+    for _ in 0..10 {
+        let rep = random_job(&mut r);
+        let cal = Calibration::default();
+        for kind in KINDS {
+            for est in [1_000u64, 37_011, 9_999_999] {
+                cal.observe(kind, &rep, est, est);
+            }
+        }
+        let cache = PlanCache::new(spec.clone(), cm.clone());
+        let with = cache.resolve_batch(&rep, Some(&cal)).expect("feasible geometry");
+        let cache2 = PlanCache::new(spec.clone(), cm.clone());
+        let without = cache2.resolve_batch(&rep, None).expect("feasible geometry");
+        assert_eq!(with.mode, without.mode, "identity calibration changed the mode: {rep:?}");
+        assert_eq!(with.corrected_cycles, with.raw_cycles, "corrected == raw under identity");
+        assert_eq!(with.raw_cycles, without.raw_cycles, "{rep:?}");
+        assert!(!with.flipped, "identity calibration cannot flip a decision");
+    }
+}

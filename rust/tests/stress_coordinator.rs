@@ -1,0 +1,146 @@
+//! Concurrency/stress: many threads submitting mixed `Mode::Auto` and
+//! explicit jobs with staggered geometries. CI runs this file under a
+//! bounded timeout, so a reintroduced deadlock *fails* the build
+//! instead of hanging it. All liveness claims are asserted via
+//! metrics and channel state, not wall-clock timing:
+//!
+//! * every responder receives exactly one reply, including through a
+//!   shutdown with work still in flight;
+//! * ingress is never serialized behind auto-mode resolution: all
+//!   candidate planning happens on the worker pool, so a memo-miss
+//!   auto job cannot head-of-line-block unrelated submissions. (The
+//!   enforced invariant is structural — the ingress thread's closure
+//!   captures no plan cache or calibration; the selection-site
+//!   counters asserted here keep the *accounting* honest for any
+//!   future code that does plan at ingress and reports it.)
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use popsparse::coordinator::{Config, Coordinator, JobSpec, Mode};
+use popsparse::sim::chip::{CostModel, IpuSpec};
+use popsparse::DType;
+
+fn job(mode: Mode, m: usize, n: usize, density: f64, seed: u64) -> JobSpec {
+    JobSpec { mode, m, k: m, n, b: 16, density, dtype: DType::Fp16, pattern_seed: seed }
+}
+
+#[test]
+fn concurrent_mixed_submissions_each_get_exactly_one_reply() {
+    let c = Coordinator::new(
+        Config { workers: 4, max_batch_n: 512, max_batch_delay: Duration::from_millis(2) },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 32;
+    let completed = AtomicUsize::new(0);
+    let failed = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let c = &c;
+            let completed = &completed;
+            let failed = &failed;
+            s.spawn(move || {
+                let mut rxs = Vec::with_capacity(PER_THREAD);
+                for i in 0..PER_THREAD {
+                    let mode = match (t + i) % 4 {
+                        0 => Mode::Dense,
+                        1 => Mode::Static,
+                        2 => Mode::Dynamic,
+                        _ => Mode::Auto,
+                    };
+                    // Staggered geometries: stripes of (m, n, density)
+                    // so auto jobs keep hitting fresh selector keys
+                    // while explicit traffic batches around them.
+                    let m = [256usize, 512, 1024][(t + i) % 3];
+                    let n = [16usize, 32, 64, 128][i % 4];
+                    let d = [0.5, 0.25, 0.125, 0.0625][(t * 7 + i) % 4];
+                    rxs.push(c.submit(job(mode, m, n, d, (i % 3) as u64)));
+                }
+                for rx in rxs {
+                    match rx.recv().expect("a responder must never be dropped unanswered") {
+                        Ok(r) => {
+                            assert!(r.cycles > 0);
+                            assert_ne!(r.spec.mode, Mode::Auto, "results carry resolved modes");
+                            completed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    // Exactly one: a second receive must find the
+                    // channel empty or closed, never another message.
+                    assert!(rx.try_recv().is_err(), "a job must be answered exactly once");
+                }
+            });
+        }
+    });
+    let done = completed.load(Ordering::Relaxed);
+    let bad = failed.load(Ordering::Relaxed);
+    assert_eq!(done + bad, THREADS * PER_THREAD);
+    assert_eq!(bad, 0, "all staggered geometries are feasible");
+    let snap = c.metrics();
+    assert_eq!(snap.jobs_completed as usize, done);
+    assert_eq!(snap.jobs_failed as usize, bad);
+    // Resolution happened — and only ever on the worker pool.
+    assert!(snap.worker_selections > 0, "auto traffic must trigger batch-time selection");
+    assert_eq!(snap.ingress_selections, 0, "the ingress thread must never plan");
+    c.shutdown();
+}
+
+#[test]
+fn shutdown_mid_flight_answers_every_responder() {
+    // Huge capacity and delay budget: submissions sit in the batcher
+    // until shutdown's drain path flushes them — guaranteeing work is
+    // in flight when shutdown begins. Every responder must still get
+    // exactly one reply, and shutdown must not deadlock (bounded by
+    // the CI timeout on this test binary).
+    let c = Coordinator::new(
+        Config { workers: 2, max_batch_n: 1 << 20, max_batch_delay: Duration::from_secs(60) },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    let rxs: Vec<_> = (0..64)
+        .map(|i| {
+            let mode = [Mode::Auto, Mode::Dense, Mode::Static, Mode::Dynamic][i % 4];
+            c.submit(job(mode, 512, 32, 0.125, (i % 2) as u64))
+        })
+        .collect();
+    c.shutdown();
+    let mut replies = 0;
+    for rx in rxs {
+        let r = rx.recv().expect("the drain path must answer every in-flight job");
+        assert!(r.is_ok(), "drained jobs still execute: {r:?}");
+        assert!(rx.try_recv().is_err(), "exactly one reply per job");
+        replies += 1;
+    }
+    assert_eq!(replies, 64);
+}
+
+#[test]
+fn memo_miss_resolution_does_not_block_unrelated_ingress() {
+    // One fresh-geometry Auto job (a selection-memo miss, which plans
+    // up to three candidate backends) plus a stream of explicit dense
+    // jobs. Under PR-1's ingress-time resolution the dense jobs would
+    // queue behind that planning; with batch-time resolution the
+    // ingress thread only enqueues. Asserted structurally: zero
+    // ingress selections, exactly one worker selection, and the dense
+    // stream batches independently.
+    let c = Coordinator::new(
+        Config { workers: 2, max_batch_n: 128, max_batch_delay: Duration::from_millis(1) },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    let auto_rx = c.submit(job(Mode::Auto, 1024, 96, 1.0 / 32.0, 9));
+    let dense_rxs: Vec<_> = (0..16).map(|_| c.submit(job(Mode::Dense, 256, 64, 0.5, 0))).collect();
+    for rx in dense_rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    auto_rx.recv().unwrap().unwrap();
+    let snap = c.metrics();
+    assert_eq!(snap.ingress_selections, 0, "ingress must never plan");
+    assert_eq!(snap.worker_selections, 1, "the one auto geometry resolved once, on a worker");
+    assert!(snap.batches >= 2, "dense traffic batches independently of the pending auto job");
+    c.shutdown();
+}
