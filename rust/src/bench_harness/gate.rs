@@ -1,0 +1,264 @@
+//! The CI bench-regression gate: compare a run's machine-readable
+//! cycle-estimate points against a committed baseline.
+//!
+//! Every point ([`crate::bench_harness::experiments::bench_ci_points`])
+//! is a pure function of the frozen cost model and fixed seeds — the
+//! numbers are bit-deterministic, so the gate needs no statistics:
+//! any point drifting above the baseline by more than the tolerance
+//! is a real regression some code change caused, and the gate fails.
+//! Improvements (and brand-new points) pass with a note telling the
+//! operator to re-seed the baseline and lock them in.
+//!
+//! Bootstrap: a baseline file with `"seeded": false` is the committed
+//! placeholder from before the first toolchain run. The gate passes
+//! in that state — there is nothing to compare — and prints the
+//! one-command seeding instruction; `repro bench ci --seed-baseline`
+//! writes the real numbers in place, and committing that file arms
+//! the gate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Schema version written to and required from `BENCH_*.json`.
+pub const BENCH_SCHEMA: u64 = 1;
+
+/// Default regression tolerance: a point more than 10% above its
+/// baseline fails the gate.
+pub const DEFAULT_TOLERANCE: f64 = 0.10;
+
+/// A parsed `BENCH_*.json` document.
+#[derive(Debug, Clone)]
+pub struct BenchDoc {
+    /// `false` marks the committed pre-toolchain placeholder.
+    pub seeded: bool,
+    pub points: BTreeMap<String, f64>,
+}
+
+impl BenchDoc {
+    pub fn from_points(points: &[(String, f64)]) -> Self {
+        Self { seeded: true, points: points.iter().cloned().collect() }
+    }
+
+    /// Parse the on-disk format (see [`BenchDoc::to_json`]).
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = Json::parse(text)?;
+        let schema = doc
+            .get("schema")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| Error::Runtime("bench doc: missing schema".into()))?;
+        if schema as u64 != BENCH_SCHEMA {
+            return Err(Error::Runtime(format!("bench doc: unsupported schema {schema}")));
+        }
+        let seeded = matches!(doc.get("seeded"), Some(Json::Bool(true)));
+        let mut points = BTreeMap::new();
+        if let Some(map) = doc.get("points").and_then(Json::as_object) {
+            for (k, v) in map {
+                let v = v
+                    .as_f64()
+                    .ok_or_else(|| Error::Runtime(format!("bench doc: non-number at {k}")))?;
+                points.insert(k.clone(), v);
+            }
+        }
+        Ok(Self { seeded, points })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::Runtime(format!("bench doc {}: {e}", path.as_ref().display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Serialize. Keys are sorted (`BTreeMap`) and floats print their
+    /// shortest round-trip form, so equal points produce byte-equal
+    /// files — `git diff` on a re-seeded baseline shows exactly the
+    /// moved numbers.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"schema\": {BENCH_SCHEMA},\n"));
+        out.push_str(&format!("  \"seeded\": {},\n", self.seeded));
+        out.push_str("  \"points\": {");
+        let mut first = true;
+        for (k, v) in &self.points {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!("\n    \"{}\": {}", escape(k), fmt_f64(*v)));
+        }
+        if !first {
+            out.push('\n');
+            out.push_str("  ");
+        }
+        out.push_str("}\n}\n");
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json()).map_err(|e| {
+            Error::Runtime(format!("bench doc {}: {e}", path.as_ref().display()))
+        })
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        // Integral cycle counts print as integers (still valid JSON
+        // numbers, parsed back to the same f64).
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// One gate verdict line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub key: String,
+    pub baseline: f64,
+    pub current: f64,
+}
+
+/// The gate's full comparison report.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    /// Baseline not seeded: nothing to compare, gate passes vacuously.
+    pub bootstrap: bool,
+    pub compared: usize,
+    /// Points above baseline by more than the tolerance — failures.
+    pub regressions: Vec<Finding>,
+    /// Baseline points absent from the current run — failures (a
+    /// silently dropped experiment is a coverage regression).
+    pub missing: Vec<String>,
+    /// Points below baseline by more than the tolerance — pass, but
+    /// worth re-seeding to lock in.
+    pub improvements: Vec<Finding>,
+    /// Current points the baseline has never seen — pass with a note.
+    pub added: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.bootstrap || (self.regressions.is_empty() && self.missing.is_empty())
+    }
+}
+
+/// Compare `current` against `baseline` at `tolerance`.
+pub fn compare(baseline: &BenchDoc, current: &BenchDoc, tolerance: f64) -> GateReport {
+    if !baseline.seeded {
+        return GateReport { bootstrap: true, ..Default::default() };
+    }
+    let mut report = GateReport::default();
+    for (key, &base) in &baseline.points {
+        let Some(&cur) = current.points.get(key) else {
+            report.missing.push(key.clone());
+            continue;
+        };
+        report.compared += 1;
+        let finding = || Finding { key: key.clone(), baseline: base, current: cur };
+        // Guard the degenerate baselines: a zero baseline compares on
+        // absolute difference (ratio would be infinite).
+        if base == 0.0 {
+            if cur != 0.0 {
+                report.regressions.push(finding());
+            }
+            continue;
+        }
+        let ratio = cur / base;
+        if ratio > 1.0 + tolerance {
+            report.regressions.push(finding());
+        } else if ratio < 1.0 - tolerance {
+            report.improvements.push(finding());
+        }
+    }
+    for key in current.points.keys() {
+        if !baseline.points.contains_key(key) {
+            report.added.push(key.clone());
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(points: &[(&str, f64)]) -> BenchDoc {
+        BenchDoc {
+            seeded: true,
+            points: points.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let d = doc(&[("a/b", 123.0), ("c", 4.5), ("quo\"te", 1.0)]);
+        let text = d.to_json();
+        let back = BenchDoc::parse(&text).unwrap();
+        assert!(back.seeded);
+        assert_eq!(back.points, d.points);
+        // Byte-stable: serializing the parse reproduces the text.
+        assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn empty_points_serialize_and_parse() {
+        let d = BenchDoc { seeded: false, points: BTreeMap::new() };
+        let back = BenchDoc::parse(&d.to_json()).unwrap();
+        assert!(!back.seeded);
+        assert!(back.points.is_empty());
+    }
+
+    #[test]
+    fn gate_flags_regressions_not_improvements() {
+        let base = doc(&[("x", 100.0), ("y", 100.0), ("z", 100.0)]);
+        let cur = doc(&[("x", 109.0), ("y", 111.0), ("z", 80.0)]);
+        let r = compare(&base, &cur, DEFAULT_TOLERANCE);
+        assert!(!r.passed());
+        assert_eq!(r.compared, 3);
+        assert_eq!(r.regressions.len(), 1);
+        assert_eq!(r.regressions[0].key, "y");
+        assert_eq!(r.improvements.len(), 1);
+        assert_eq!(r.improvements[0].key, "z");
+    }
+
+    #[test]
+    fn gate_fails_on_missing_points_and_notes_added_ones() {
+        let base = doc(&[("x", 100.0), ("gone", 5.0)]);
+        let cur = doc(&[("x", 100.0), ("new", 7.0)]);
+        let r = compare(&base, &cur, DEFAULT_TOLERANCE);
+        assert!(!r.passed());
+        assert_eq!(r.missing, vec!["gone".to_string()]);
+        assert_eq!(r.added, vec!["new".to_string()]);
+    }
+
+    #[test]
+    fn bootstrap_baseline_passes_vacuously() {
+        let base = BenchDoc { seeded: false, points: BTreeMap::new() };
+        let cur = doc(&[("x", 1e9)]);
+        let r = compare(&base, &cur, DEFAULT_TOLERANCE);
+        assert!(r.bootstrap);
+        assert!(r.passed());
+    }
+
+    #[test]
+    fn schema_is_enforced() {
+        assert!(BenchDoc::parse("{\"schema\": 99, \"points\": {}}").is_err());
+        assert!(BenchDoc::parse("{\"points\": {}}").is_err());
+        assert!(BenchDoc::parse("{\"schema\": 1, \"seeded\": true, \"points\": {\"a\": \"no\"}}")
+            .is_err());
+    }
+}

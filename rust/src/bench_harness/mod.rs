@@ -3,10 +3,15 @@
 //!
 //! Each experiment function returns [`report::Table`]s that print as
 //! aligned markdown and can be written as CSV. The CLI (`repro bench
-//! <experiment>`) and the `rust/benches/*` targets drive these.
+//! <experiment>`) and the `rust/benches/*` targets drive these. The
+//! [`gate`] module compares the deterministic cycle-estimate points
+//! of `repro bench ci` against a committed baseline — the CI
+//! perf-regression gate (DESIGN.md §4.4).
 
 pub mod experiments;
+pub mod gate;
 pub mod report;
 pub mod sweep;
 
+pub use gate::{BenchDoc, GateReport};
 pub use report::Table;

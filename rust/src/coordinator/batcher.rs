@@ -11,12 +11,76 @@
 //! or the oldest job has waited `max_delay`. Auto batches are resolved
 //! to a concrete mode by the worker at flush time, at the batch's
 //! combined `n`.
+//!
+//! Keying unresolved auto jobs on the pattern seed is the
+//! conservative default — the batch *might* resolve static, where the
+//! pattern matters — but it forfeits the batching win entirely for
+//! auto traffic whose patterns are fresh per request (every job its
+//! own singleton batch). [`PatternHints`] recovers it: a small shared
+//! map of each pattern geometry's last resolved mode, written by the
+//! workers after every resolution. Once a geometry is known to
+//! resolve dense or dynamic — modes whose execution ignores the
+//! pattern seed — the provisional key drops the seed and fresh-pattern
+//! auto traffic coalesces again. If the memoized decision later flips
+//! back to static, the hint flips with it (new traffic re-keys
+//! per-pattern) and any already-coalesced mixed-seed batch is split
+//! back into per-pattern sub-batches by the worker — see
+//! `process_batch` in [`crate::coordinator`] — so correctness never
+//! depends on the hint being current.
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::request::{JobSpec, Mode};
+use crate::coordinator::request::{JobSpec, Mode, PatternKey};
+use crate::util::LruMap;
 use crate::DType;
+
+/// Default capacity of the pattern-relevance hint map (entries, LRU).
+pub const DEFAULT_HINT_CAPACITY: usize = 4096;
+
+/// Shared map of each pattern geometry's most recent auto-resolution:
+/// written by the worker pool after every batch resolution, read by
+/// the batcher when keying unresolved auto jobs. Strictly a
+/// performance hint — a stale (or evicted) entry only costs
+/// coalescing or a re-key split, never correctness — so the ingress
+/// thread consulting it still performs no planning.
+#[derive(Debug)]
+pub struct PatternHints {
+    map: Mutex<LruMap<PatternKey, Mode>>,
+}
+
+impl Default for PatternHints {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_HINT_CAPACITY)
+    }
+}
+
+impl PatternHints {
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self { map: Mutex::new(LruMap::new(capacity)) }
+    }
+
+    /// Record `key`'s latest resolved mode.
+    pub fn record(&self, key: PatternKey, mode: Mode) {
+        debug_assert_ne!(mode, Mode::Auto, "hints hold resolved modes");
+        self.map.lock().expect("pattern hints poisoned").insert(key, mode);
+    }
+
+    /// The last resolved mode at `key`, if still resident.
+    pub fn get(&self, key: PatternKey) -> Option<Mode> {
+        self.map.lock().expect("pattern hints poisoned").get(&key).copied()
+    }
+
+    /// Number of geometries hinted.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("pattern hints poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
 
 /// Grouping key: jobs with equal keys can share a device pass.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -40,6 +104,32 @@ impl BatchKey {
     /// resolves the whole batch to one concrete mode at its combined
     /// `n` when the batch flushes.
     pub fn of(job: &JobSpec) -> Self {
+        Self::keyed(job, job.pattern_seed)
+    }
+
+    /// [`BatchKey::of`] with pattern hints: an unresolved auto job at
+    /// a geometry whose last resolution was dense or dynamic drops
+    /// the seed from the provisional key, so fresh-pattern auto
+    /// traffic coalesces into shared batches. Dense cost is
+    /// pattern-independent outright; dynamic reuses one plan across
+    /// every pattern and the shared pass simulates the batch
+    /// representative's mask — the same approximation explicit
+    /// dynamic batches have always made (their key has carried seed 0
+    /// since the batcher existed), now extended to auto traffic.
+    /// Geometries hinted static (or not yet hinted) keep the
+    /// conservative per-pattern key.
+    pub fn of_hinted(job: &JobSpec, hints: &PatternHints) -> Self {
+        let seed = match job.mode {
+            Mode::Auto => match hints.get(job.pattern_key()) {
+                Some(Mode::Dense) | Some(Mode::Dynamic) => 0,
+                _ => job.pattern_seed,
+            },
+            _ => job.pattern_seed,
+        };
+        Self::keyed(job, seed)
+    }
+
+    fn keyed(job: &JobSpec, seed: u64) -> Self {
         Self {
             mode: job.mode,
             m: job.m,
@@ -47,11 +137,7 @@ impl BatchKey {
             b: job.b,
             density_millionths: job.density_millionths(),
             dtype: job.dtype,
-            pattern_seed: if matches!(job.mode, Mode::Static | Mode::Auto) {
-                job.pattern_seed
-            } else {
-                0
-            },
+            pattern_seed: if matches!(job.mode, Mode::Static | Mode::Auto) { seed } else { 0 },
         }
     }
 }
@@ -76,11 +162,19 @@ pub struct Batcher<T> {
     max_batch_n: usize,
     max_delay: Duration,
     queues: HashMap<BatchKey, PendingQueue<T>>,
+    /// When present, auto jobs key through [`BatchKey::of_hinted`].
+    hints: Option<Arc<PatternHints>>,
 }
 
 impl<T> Batcher<T> {
     pub fn new(max_batch_n: usize, max_delay: Duration) -> Self {
-        Self { max_batch_n, max_delay, queues: HashMap::new() }
+        Self { max_batch_n, max_delay, queues: HashMap::new(), hints: None }
+    }
+
+    /// A batcher that keys unresolved auto jobs through the shared
+    /// pattern-relevance hints (see [`PatternHints`]).
+    pub fn with_hints(max_batch_n: usize, max_delay: Duration, hints: Arc<PatternHints>) -> Self {
+        Self { max_batch_n, max_delay, queues: HashMap::new(), hints: Some(hints) }
     }
 
     /// Number of jobs currently waiting.
@@ -90,7 +184,10 @@ impl<T> Batcher<T> {
 
     /// Add a job; returns a batch if this key's queue became full.
     pub fn push(&mut self, job: JobSpec, payload: T) -> Option<Batch<T>> {
-        let key = BatchKey::of(&job);
+        let key = match &self.hints {
+            Some(hints) => BatchKey::of_hinted(&job, hints),
+            None => BatchKey::of(&job),
+        };
         let q = self.queues.entry(key).or_insert_with(|| PendingQueue {
             jobs: Vec::new(),
             total_n: 0,
@@ -202,6 +299,35 @@ mod tests {
         assert!(b2.push(job(64, 1, Mode::Dense), ()).is_none());
         assert!(b2.push(job(64, 2, Mode::Auto), ()).is_none());
         assert_eq!(b2.pending(), 3, "auto/explicit/other-pattern stay separate");
+    }
+
+    #[test]
+    fn hinted_auto_jobs_coalesce_across_patterns_once_seedless() {
+        let hints = Arc::new(PatternHints::default());
+        let mut b = Batcher::with_hints(128, Duration::from_secs(60), hints.clone());
+        // Unhinted geometry: conservative per-pattern keys, no flush.
+        assert!(b.push(job(64, 1, Mode::Auto), ()).is_none());
+        assert!(b.push(job(64, 2, Mode::Auto), ()).is_none());
+        assert_eq!(b.pending(), 2);
+        // A dense hint at this geometry drops the seed: fresh patterns
+        // now share one queue and flush at capacity.
+        hints.record(job(64, 0, Mode::Auto).pattern_key(), Mode::Dense);
+        assert!(b.push(job(64, 3, Mode::Auto), ()).is_none());
+        let batch = b.push(job(64, 4, Mode::Auto), ()).expect("seedless queue flushes");
+        assert_eq!(batch.jobs.len(), 2, "fresh-pattern jobs coalesced");
+        assert_eq!(batch.key.pattern_seed, 0);
+        assert_eq!(batch.key.mode, Mode::Auto, "the key stays provisional");
+        // A static hint flips the geometry back to per-pattern keys.
+        hints.record(job(64, 0, Mode::Auto).pattern_key(), Mode::Static);
+        assert!(b.push(job(64, 5, Mode::Auto), ()).is_none());
+        assert!(b.push(job(64, 6, Mode::Auto), ()).is_none());
+        assert_eq!(b.pending(), 4, "static-hinted traffic re-keys per pattern");
+        // Explicit jobs never consult hints.
+        let mut b2 = Batcher::with_hints(128, Duration::from_secs(60), hints.clone());
+        hints.record(job(64, 0, Mode::Auto).pattern_key(), Mode::Dense);
+        assert!(b2.push(job(64, 1, Mode::Static), ()).is_none());
+        assert!(b2.push(job(64, 2, Mode::Static), ()).is_none());
+        assert_eq!(b2.pending(), 2, "explicit static stays pattern-keyed");
     }
 
     #[test]

@@ -52,6 +52,10 @@ struct Inner {
     worker_selections: u64,
     selection_ns: u64,
     decision_flips: u64,
+    churn_shifts: u64,
+    // Re-keying accounting (seedless auto batches resolving static).
+    rekeyed_batches: u64,
+    rekeyed_groups: u64,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -77,6 +81,15 @@ pub struct Snapshot {
     /// Batch-time resolutions where the calibration correction changed
     /// the selector's raw argmin.
     pub decision_flips: u64,
+    /// Batch-time resolutions where the pattern-churn surcharge moved
+    /// the (calibrated) argmin — workload-aware scoring changing
+    /// dispatch, typically static -> dynamic under churn.
+    pub churn_shifts: u64,
+    /// Seedless auto batches that resolved static with mixed patterns
+    /// and were split back into per-pattern sub-batches (the safe
+    /// re-keying path), and the sub-batches that produced.
+    pub rekeyed_batches: u64,
+    pub rekeyed_groups: u64,
     /// Selections performed on the ingress thread. Zero by
     /// construction since batch-time selection landed; asserted by the
     /// stress suite.
@@ -170,6 +183,20 @@ impl Metrics {
         self.inner.lock().expect("metrics poisoned").decision_flips += 1;
     }
 
+    /// Record a resolution where the pattern-churn surcharge moved the
+    /// calibrated argmin.
+    pub fn record_churn_shift(&self) {
+        self.inner.lock().expect("metrics poisoned").churn_shifts += 1;
+    }
+
+    /// Record one seedless auto batch split into `groups` per-pattern
+    /// sub-batches because its resolution came back static.
+    pub fn record_rekeyed_batch(&self, groups: usize) {
+        let mut g = self.inner.lock().expect("metrics poisoned");
+        g.rekeyed_batches += 1;
+        g.rekeyed_groups += groups as u64;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().expect("metrics poisoned");
         let mut lat = g.latencies_ns.clone();
@@ -205,6 +232,9 @@ impl Metrics {
                 g.calibrated_rel_err_sum / g.estimate_pairs as f64
             },
             decision_flips: g.decision_flips,
+            churn_shifts: g.churn_shifts,
+            rekeyed_batches: g.rekeyed_batches,
+            rekeyed_groups: g.rekeyed_groups,
             ingress_selections: g.ingress_selections,
             worker_selections: g.worker_selections,
             selection_time: Duration::from_nanos(g.selection_ns),
@@ -247,8 +277,22 @@ mod tests {
         assert_eq!(s.auto_estimate_rel_err, 0.0);
         assert_eq!(s.auto_estimate_rel_err_calibrated, 0.0);
         assert_eq!(s.decision_flips, 0);
+        assert_eq!(s.churn_shifts, 0);
+        assert_eq!((s.rekeyed_batches, s.rekeyed_groups), (0, 0));
         assert_eq!((s.ingress_selections, s.worker_selections), (0, 0));
         assert_eq!(s.selection_time, Duration::ZERO);
+    }
+
+    #[test]
+    fn rekey_and_churn_shift_accounting() {
+        let m = Metrics::new();
+        m.record_churn_shift();
+        m.record_rekeyed_batch(3);
+        m.record_rekeyed_batch(2);
+        let s = m.snapshot();
+        assert_eq!(s.churn_shifts, 1);
+        assert_eq!(s.rekeyed_batches, 2);
+        assert_eq!(s.rekeyed_groups, 5);
     }
 
     #[test]

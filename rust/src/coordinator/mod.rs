@@ -8,14 +8,21 @@
 //! ```text
 //!  submit(job) ──► ingress thread (no planning: enqueue only) ──►
 //!                  batcher (groups by weight config + mode — Auto is
-//!                  a provisional key — flushes on capacity or delay)
+//!                  a provisional key, seedless once [`PatternHints`]
+//!                  says the geometry resolves dense/dynamic —
+//!                  flushes on capacity or delay)
 //!                  ──► worker pool:
+//!                        observe the pattern stream
+//!                        ([`crate::engine::ChurnTracker`]) ──►
 //!                        resolve Auto at the batch's combined n
-//!                        ([`PlanCache::resolve_batch`], calibrated,
-//!                        memoized; candidate plans land in the plan
-//!                        cache) ──► plan cache (execution reuses the
-//!                        resolution-time plan) ──► simulator
-//!                        (cycles) ──► observed cycles feed
+//!                        ([`PlanCache::resolve_batch_with`],
+//!                        calibrated + churn-amortized, memoized;
+//!                        candidate plans land in the plan cache;
+//!                        resolved mode published to the hints;
+//!                        seedless batches resolving static split
+//!                        per pattern) ──► plan cache (execution
+//!                        reuses the resolution-time plan) ──►
+//!                        simulator (cycles) ──► observed cycles feed
 //!                        [`crate::engine::Calibration`] ──► JobResult
 //! ```
 //!
@@ -27,10 +34,12 @@
 //! the one re-plan left is a memoized *static* decision meeting a new
 //! pattern, which is pattern-specific work by design), and a memo
 //! miss costs worker time instead of head-of-line blocking the
-//! ingress thread. [`Metrics`] tracks the
-//! decisions, where selection ran, calibration decision flips, and
-//! how raw vs calibration-corrected cycle estimates compare to the
-//! simulated outcome.
+//! ingress thread. Every serving-side map — plans, decision memo,
+//! calibration buckets, churn EWMAs, pattern hints — is bounded by
+//! LRU eviction ([`CacheConfig`]). [`Metrics`] tracks the decisions,
+//! where selection ran, calibration decision flips, churn shifts,
+//! re-key splits, and how raw vs calibration-corrected cycle
+//! estimates compare to the simulated outcome.
 
 pub mod batcher;
 pub mod metrics;
@@ -42,15 +51,46 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-pub use batcher::{Batch, BatchKey, Batcher};
+pub use batcher::{Batch, BatchKey, Batcher, PatternHints};
 pub use metrics::{Metrics, SelectionSite, Snapshot};
 pub use plan_cache::{BatchResolution, CachedPlan, PlanCache};
-pub use request::{JobResult, JobSpec, Mode, PlanKey, SelectorKey};
+pub use request::{JobResult, JobSpec, Mode, PatternKey, PlanKey, SelectorKey};
 
-use crate::engine::{BackendKind, Calibration};
+use crate::engine::calibration::DEFAULT_ALPHA;
+use crate::engine::{BackendKind, Calibration, ChurnTracker};
 use crate::error::{Error, Result};
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::patterns;
+
+/// Capacities of every bounded serving-side map (entries, LRU each).
+/// Defaults sit far above paper-scale working sets, so bounded and
+/// unbounded behaviour coincide on paper traces; open-world traffic
+/// is where the bounds bite (see `rust/tests/stress_eviction.rs`).
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    /// Compiled plans ([`PlanCache`]).
+    pub plan_capacity: usize,
+    /// Memoized auto-mode decisions ([`PlanCache`]).
+    pub memo_capacity: usize,
+    /// Calibration (backend, geometry-bucket) factors.
+    pub calibration_capacity: usize,
+    /// Pattern-relevance hints for batch keying ([`PatternHints`]).
+    pub hint_capacity: usize,
+    /// Pattern-churn EWMAs ([`ChurnTracker`]).
+    pub churn_capacity: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self {
+            plan_capacity: plan_cache::DEFAULT_PLAN_CAPACITY,
+            memo_capacity: plan_cache::DEFAULT_MODE_MEMO_CAPACITY,
+            calibration_capacity: crate::engine::calibration::DEFAULT_CALIBRATION_CAPACITY,
+            hint_capacity: batcher::DEFAULT_HINT_CAPACITY,
+            churn_capacity: crate::engine::churn::DEFAULT_CHURN_CAPACITY,
+        }
+    }
+}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -60,11 +100,18 @@ pub struct Config {
     pub max_batch_n: usize,
     /// Max time a job waits for batch-mates.
     pub max_batch_delay: Duration,
+    /// Bounds for the serving-side maps.
+    pub caches: CacheConfig,
 }
 
 impl Default for Config {
     fn default() -> Self {
-        Self { workers: 4, max_batch_n: 4096, max_batch_delay: Duration::from_millis(2) }
+        Self {
+            workers: 4,
+            max_batch_n: 4096,
+            max_batch_delay: Duration::from_millis(2),
+            caches: CacheConfig::default(),
+        }
     }
 }
 
@@ -80,6 +127,8 @@ pub struct Coordinator {
     cache: Arc<PlanCache>,
     metrics: Arc<Metrics>,
     calibration: Arc<Calibration>,
+    churn: Arc<ChurnTracker>,
+    hints: Arc<PatternHints>,
     ingress: Option<mpsc::Sender<(JobSpec, Responder)>>,
     ingress_thread: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -88,9 +137,18 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(config: Config, spec: IpuSpec, cm: CostModel) -> Self {
-        let cache = Arc::new(PlanCache::new(spec, cm));
+        let caches = config.caches;
+        let cache = Arc::new(PlanCache::with_capacity(
+            spec,
+            cm,
+            caches.plan_capacity,
+            caches.memo_capacity,
+        ));
         let metrics = Arc::new(Metrics::new());
-        let calibration = Arc::new(Calibration::default());
+        let calibration =
+            Arc::new(Calibration::with_capacity(DEFAULT_ALPHA, caches.calibration_capacity));
+        let churn = Arc::new(ChurnTracker::with_capacity(caches.churn_capacity));
+        let hints = Arc::new(PatternHints::with_capacity(caches.hint_capacity));
         let shutting_down = Arc::new(AtomicBool::new(false));
 
         let (ingress_tx, ingress_rx) = mpsc::channel::<(JobSpec, Responder)>();
@@ -100,13 +158,19 @@ impl Coordinator {
         // Ingress thread: runs the batcher, nothing else. Auto-mode
         // jobs pass through unresolved (provisional batch key); no
         // planning happens here, so a selection-memo miss can never
-        // head-of-line-block unrelated submissions.
+        // head-of-line-block unrelated submissions. The only shared
+        // state this closure captures is the pattern-relevance hint
+        // map — an O(1) read per push, no planners behind it.
         let batch_cfg = config.clone();
         let batch_metrics = metrics.clone();
         let batch_tx = work_tx.clone();
+        let batch_hints = hints.clone();
         let ingress_thread = std::thread::spawn(move || {
-            let mut batcher: Batcher<Responder> =
-                Batcher::new(batch_cfg.max_batch_n, batch_cfg.max_batch_delay);
+            let mut batcher: Batcher<Responder> = Batcher::with_hints(
+                batch_cfg.max_batch_n,
+                batch_cfg.max_batch_delay,
+                batch_hints,
+            );
             loop {
                 // Wait up to the delay budget for new work, then poll.
                 match ingress_rx.recv_timeout(batch_cfg.max_batch_delay) {
@@ -138,6 +202,8 @@ impl Coordinator {
             let cache = cache.clone();
             let metrics = metrics.clone();
             let calibration = calibration.clone();
+            let churn = churn.clone();
+            let hints = hints.clone();
             workers.push(std::thread::spawn(move || loop {
                 let item = {
                     let guard = rx.lock().expect("work queue poisoned");
@@ -145,7 +211,7 @@ impl Coordinator {
                 };
                 match item {
                     Ok(WorkItem::Batch(batch)) => {
-                        process_batch(batch, &cache, &calibration, &metrics)
+                        process_batch(batch, &cache, &calibration, &churn, &hints, &metrics)
                     }
                     Err(_) => break,
                 }
@@ -155,6 +221,8 @@ impl Coordinator {
             cache,
             metrics,
             calibration,
+            churn,
+            hints,
             ingress: Some(ingress_tx),
             ingress_thread: Some(ingress_thread),
             workers,
@@ -219,6 +287,22 @@ impl Coordinator {
         &self.calibration
     }
 
+    /// The pattern-churn tracker feeding workload-aware scoring.
+    pub fn churn(&self) -> &ChurnTracker {
+        &self.churn
+    }
+
+    /// The pattern-relevance hints the batcher keys auto jobs with.
+    pub fn pattern_hints(&self) -> &PatternHints {
+        &self.hints
+    }
+
+    /// The plan cache itself, for capacity/eviction introspection
+    /// (stat shortcuts above cover the common counters).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
     /// Graceful shutdown: flush the batcher, join all threads.
     pub fn shutdown(mut self) {
         self.shutting_down.store(true, Ordering::Relaxed);
@@ -238,14 +322,22 @@ impl Drop for Coordinator {
     }
 }
 
-/// Execute one batch: resolve auto batches at the combined batch size,
-/// plan once (for freshly-resolved auto batches a cache hit —
-/// resolution already planted the plan), simulate, feed observed
-/// cycles back into the calibration, fan results out.
+/// Execute one batch: resolve auto batches at the combined batch size
+/// (workload-aware — the pattern stream is observed first, and the
+/// churn surcharge scores the static candidate), plan once (for
+/// freshly-resolved auto batches a cache hit — resolution already
+/// planted the plan), simulate, feed observed cycles back into the
+/// calibration, fan results out. A seedless auto batch that resolves
+/// *static* with mixed pattern seeds takes the safe re-keying path:
+/// it is split back into per-pattern sub-batches, each executed
+/// against its own pattern — one static pass must never impose one
+/// job's pattern on another's.
 fn process_batch(
     batch: Batch<Responder>,
     cache: &PlanCache,
     calibration: &Calibration,
+    churn: &ChurnTracker,
+    hints: &PatternHints,
     metrics: &Metrics,
 ) {
     let t0 = Instant::now();
@@ -257,18 +349,29 @@ fn process_batch(
     // Batch-time auto resolution, at the geometry actually executed.
     let mut auto_estimates = None;
     if batch.key.mode == Mode::Auto {
+        // Feed the pattern stream before resolving, so the decision
+        // sees the churn regime this batch is part of.
+        for (job, _) in &batch.jobs {
+            churn.observe(job);
+        }
         let sel_t0 = Instant::now();
-        match cache.resolve_batch(&rep, Some(calibration)) {
+        match cache.resolve_batch_with(&rep, Some(calibration), Some(churn)) {
             Ok(res) => {
                 if !res.memo_hit {
                     metrics.record_selection(SelectionSite::Worker, sel_t0.elapsed());
                     if res.flipped {
                         metrics.record_decision_flip();
                     }
+                    if res.churn_shifted {
+                        metrics.record_churn_shift();
+                    }
                 }
                 for _ in &batch.jobs {
                     metrics.record_auto_decision(res.mode);
                 }
+                // Publish the resolved mode so the batcher keys future
+                // traffic at this pattern geometry accordingly.
+                hints.record(rep.pattern_key(), res.mode);
                 rep.mode = res.mode;
                 auto_estimates = Some((res.raw_cycles, res.corrected_cycles));
             }
@@ -281,13 +384,71 @@ fn process_batch(
                 return;
             }
         }
+        // Safe re-keying: a hint-coalesced (seedless) batch that
+        // resolved static holds jobs whose patterns differ, and a
+        // static plan embeds exactly one pattern. Split it back into
+        // per-pattern sub-batches and execute each against its own
+        // mask; the hint above already flipped, so subsequent traffic
+        // re-keys per pattern at ingress. (Hints carry no batch
+        // dimension while decisions resolve at the combined n, so a
+        // weight geometry whose small-n and large-n batches straddle
+        // the static frontier can flap the hint and revisit this path
+        // — each visit stays correct and merely costs the coalescing
+        // the per-seed keying would have forfeited anyway.)
+        if rep.mode == Mode::Static
+            && batch.jobs.iter().any(|(j, _)| j.pattern_seed != rep.pattern_seed)
+        {
+            let mut groups = Vec::new();
+            for (job, responder) in batch.jobs {
+                match groups.iter_mut().find(|(seed, _)| *seed == job.pattern_seed) {
+                    Some((_, members)) => members.push((job, responder)),
+                    None => groups.push((job.pattern_seed, vec![(job, responder)])),
+                }
+            }
+            metrics.record_rekeyed_batch(groups.len());
+            for (_, members) in groups {
+                let mut group_rep = members[0].0.clone();
+                group_rep.mode = Mode::Static;
+                group_rep.n = members.iter().map(|(j, _)| j.n).sum();
+                execute_group(
+                    &group_rep,
+                    members,
+                    batch.total_n,
+                    auto_estimates,
+                    t0,
+                    cache,
+                    calibration,
+                    metrics,
+                );
+            }
+            return;
+        }
     }
 
-    let planned = cache.get_or_plan(&rep);
+    execute_group(&rep, batch.jobs, batch.total_n, auto_estimates, t0, cache, calibration, metrics);
+}
+
+/// Plan, simulate and answer one homogeneous group of jobs sharing
+/// `rep`'s geometry, mode and (where it matters) pattern. `rep.n` is
+/// the group's combined batch dimension; `batch_total_n` is the
+/// *original* batch's combined n, the denominator for attributing the
+/// batch-level resolution estimates in `auto_estimates` to members.
+#[allow(clippy::too_many_arguments)]
+fn execute_group(
+    rep: &JobSpec,
+    jobs: Vec<(JobSpec, Responder)>,
+    batch_total_n: usize,
+    auto_estimates: Option<(u64, u64)>,
+    t0: Instant,
+    cache: &PlanCache,
+    calibration: &Calibration,
+    metrics: &Metrics,
+) {
+    let planned = cache.get_or_plan(rep);
     match planned {
         Err(e) => {
             let msg = e.to_string();
-            for (_, responder) in batch.jobs {
+            for (_, responder) in jobs {
                 metrics.record_failure();
                 let _ = responder.send(Err(Error::Coordinator(msg.clone())));
             }
@@ -317,7 +478,7 @@ fn process_batch(
                         Ok(exec) => (exec.cost.total(), exec.propagation_steps()),
                         Err(e) => {
                             let msg = e.to_string();
-                            for (_, responder) in batch.jobs {
+                            for (_, responder) in jobs {
                                 metrics.record_failure();
                                 let _ = responder.send(Err(Error::Coordinator(msg.clone())));
                             }
@@ -329,26 +490,34 @@ fn process_batch(
             // Close the estimation loop: observed execution cycles
             // refresh this (backend, geometry-bucket) EWMA.
             if let Some(kind) = BackendKind::of_mode(rep.mode) {
-                calibration.observe(kind, &rep, plan_estimate, cycles);
+                calibration.observe(kind, rep, plan_estimate, cycles);
             }
             let service_time = t0.elapsed();
             let spec = cache.spec();
             let resolved_mode = rep.mode;
-            let total_n = batch.total_n.max(1) as f64;
-            for (mut job, responder) in batch.jobs {
+            let total_n = batch_total_n.max(1) as f64;
+            let group_n = rep.n.max(1) as f64;
+            for (mut job, responder) in jobs {
                 if job.mode == Mode::Auto {
                     job.mode = resolved_mode;
                 }
                 let tflops = crate::tflops(rep.flops(), cycles, spec.clock_hz);
                 metrics.record_job(service_time, cycles);
-                // Attribute the batch-level estimates and outcome to
-                // each member by its share of the combined n, keeping
-                // the scales commensurate.
+                // Attribute batch-level resolution estimates by the
+                // job's share of the original combined n, and the
+                // group-level simulated outcome by its share of the
+                // group's n, keeping each pair of scales commensurate.
                 let job_n = job.n as f64;
-                let share = move |v: u64| ((v as f64 * job_n / total_n).ceil() as u64).max(1);
+                let share = move |v: u64, denom: f64| {
+                    ((v as f64 * job_n / denom).ceil() as u64).max(1)
+                };
                 let estimated = auto_estimates.map(|(raw, corrected)| {
-                    metrics.record_auto_outcome(share(raw), share(corrected), share(cycles));
-                    share(corrected)
+                    metrics.record_auto_outcome(
+                        share(raw, total_n),
+                        share(corrected, total_n),
+                        share(cycles, group_n),
+                    );
+                    share(corrected, total_n)
                 });
                 let _ = responder.send(Ok(JobResult {
                     spec: job,
@@ -398,7 +567,12 @@ mod tests {
     #[test]
     fn batches_concurrent_jobs() {
         let c = Coordinator::new(
-            Config { workers: 2, max_batch_n: 256, max_batch_delay: Duration::from_millis(20) },
+            Config {
+                workers: 2,
+                max_batch_n: 256,
+                max_batch_delay: Duration::from_millis(20),
+                ..Config::default()
+            },
             IpuSpec::default(),
             CostModel::default(),
         );
@@ -414,7 +588,12 @@ mod tests {
     #[test]
     fn plan_cache_reused_across_batches() {
         let c = Coordinator::new(
-            Config { workers: 1, max_batch_n: 64, max_batch_delay: Duration::from_millis(1) },
+            Config {
+                workers: 1,
+                max_batch_n: 64,
+                max_batch_delay: Duration::from_millis(1),
+                ..Config::default()
+            },
             IpuSpec::default(),
             CostModel::default(),
         );
@@ -466,7 +645,12 @@ mod tests {
         // memo must be keyed at the *combined* n=256, not the per-job
         // n — a follow-up explicit probe at n=256 shares its plan.
         let c = Coordinator::new(
-            Config { workers: 1, max_batch_n: 256, max_batch_delay: Duration::from_secs(5) },
+            Config {
+                workers: 1,
+                max_batch_n: 256,
+                max_batch_delay: Duration::from_secs(5),
+                ..Config::default()
+            },
             IpuSpec::default(),
             CostModel::default(),
         );

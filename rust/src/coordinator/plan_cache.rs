@@ -1,25 +1,51 @@
-//! Plan cache: compile-once, run-many.
+//! Plan cache: compile-once, run-many — bounded.
 //!
 //! The IPU's ahead-of-time model means planning/compilation is
 //! expensive and executions are cheap; a serving layer must therefore
 //! cache plans aggressively. Dynamic-mode plans are reusable across
 //! *any* pattern under their `d_max` (the paper's headline property);
 //! static plans are pattern-specific.
+//!
+//! Both maps this type owns — compiled plans and memoized auto-mode
+//! resolutions — are bounded by LRU eviction
+//! ([`crate::util::LruMap`]): open-world traffic streams unbounded
+//! key populations (static plan keys in particular carry the pattern
+//! seed), and an unbounded cache is a memory leak with a hit rate.
+//! Capacities default far above paper-scale working sets
+//! ([`DEFAULT_PLAN_CAPACITY`], [`DEFAULT_MODE_MEMO_CAPACITY`]), so
+//! paper traces keep their unbounded hit rate; eviction accounting
+//! ([`PlanCache::plan_eviction_stats`],
+//! [`PlanCache::memo_eviction_stats`]) tells an operator when a
+//! deployment's working set has outgrown the bound.
 
-use std::collections::HashMap;
 use std::sync::atomic::AtomicU64;
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::request::{JobSpec, Mode, PlanKey, SelectorKey};
 use crate::dense_::DensePlan;
 use crate::dynamic_::DynamicPlan;
-use crate::engine::calibration::corrected_argmin;
-use crate::engine::{BackendKind, Calibration, PlanEstimate};
+use crate::engine::calibration::{
+    corrected_argmin, corrected_argmin_amortized, static_surcharge_for,
+};
+use crate::engine::{BackendKind, Calibration, ChurnTracker, PlanEstimate};
 use crate::error::{Error, Result};
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::mask::BlockMask;
 use crate::sparse::patterns;
 use crate::static_::StaticPlan;
+use crate::util::LruMap;
+
+/// Default compiled-plan capacity (entries, LRU). Sized for serving:
+/// far above any paper-scale working set (a full `repro bench all`
+/// touches a few hundred plan keys), small enough that a pattern-churn
+/// flood of static plans cannot grow the process unboundedly.
+pub const DEFAULT_PLAN_CAPACITY: usize = 4096;
+
+/// Default auto-mode decision-memo capacity (entries, LRU). Selector
+/// keys carry no pattern seed, so this population grows with distinct
+/// *geometries* — slower than plan keys, but just as unbounded in an
+/// open world.
+pub const DEFAULT_MODE_MEMO_CAPACITY: usize = 4096;
 
 /// A cached plan for one plan key.
 #[derive(Debug, Clone)]
@@ -50,14 +76,17 @@ impl CachedPlan {
 }
 
 /// One memoized batch-time resolution, tagged with the calibration's
-/// geometry stamp it was computed under so the decision gets revisited
-/// once enough new informative observations land in *its* buckets.
+/// geometry stamp and the churn tracker's pattern-geometry stamp it
+/// was computed under, so the decision gets revisited once enough new
+/// informative observations land in *its* buckets — or the workload's
+/// pattern-churn regime moves.
 #[derive(Debug, Clone, Copy)]
 struct MemoEntry {
     mode: Mode,
     raw_cycles: u64,
     corrected_cycles: u64,
     stamp: u64,
+    churn_stamp: u64,
 }
 
 /// The outcome of resolving one auto-mode batch at its combined `n`.
@@ -75,6 +104,11 @@ pub struct BatchResolution {
     /// argmin (always `false` on memo hits — the flip was counted when
     /// the entry was computed).
     pub flipped: bool,
+    /// Whether the pattern-churn surcharge shifted the decision away
+    /// from the (calibrated) single-job argmin — the workload-aware
+    /// scoring changing dispatch. Like `flipped`, always `false` on
+    /// memo hits.
+    pub churn_shifted: bool,
     /// Whether the decision came from the memo.
     pub memo_hit: bool,
 }
@@ -89,8 +123,8 @@ pub struct BatchResolution {
 pub struct PlanCache {
     spec: IpuSpec,
     cm: CostModel,
-    plans: Mutex<HashMap<PlanKey, CachedPlan>>,
-    modes: Mutex<HashMap<SelectorKey, MemoEntry>>,
+    plans: Mutex<LruMap<PlanKey, CachedPlan>>,
+    modes: Mutex<LruMap<SelectorKey, MemoEntry>>,
     hits: AtomicU64,
     misses: AtomicU64,
     mode_hits: AtomicU64,
@@ -101,11 +135,23 @@ pub struct PlanCache {
 
 impl PlanCache {
     pub fn new(spec: IpuSpec, cm: CostModel) -> Self {
+        Self::with_capacity(spec, cm, DEFAULT_PLAN_CAPACITY, DEFAULT_MODE_MEMO_CAPACITY)
+    }
+
+    /// A cache holding at most `plan_capacity` compiled plans and
+    /// `memo_capacity` memoized auto-mode decisions, each evicted LRU
+    /// (floored at 1; pass `usize::MAX` for effectively unbounded).
+    pub fn with_capacity(
+        spec: IpuSpec,
+        cm: CostModel,
+        plan_capacity: usize,
+        memo_capacity: usize,
+    ) -> Self {
         Self {
             spec,
             cm,
-            plans: Mutex::new(HashMap::new()),
-            modes: Mutex::new(HashMap::new()),
+            plans: Mutex::new(LruMap::new(plan_capacity)),
+            modes: Mutex::new(LruMap::new(memo_capacity)),
             hits: Default::default(),
             misses: Default::default(),
             mode_hits: Default::default(),
@@ -142,6 +188,34 @@ impl PlanCache {
     pub fn resolution_stats(&self) -> (u64, u64) {
         use std::sync::atomic::Ordering::Relaxed;
         (self.resolution_hits.load(Relaxed), self.resolution_misses.load(Relaxed))
+    }
+
+    /// Compiled-plan eviction accounting: (evictions,
+    /// misses-after-evict). The second number is the re-planning cost
+    /// the bound actually caused — misses on keys a previous eviction
+    /// threw away.
+    pub fn plan_eviction_stats(&self) -> (u64, u64) {
+        let g = self.plans.lock().expect("plan cache poisoned");
+        (g.evictions(), g.misses_after_evict())
+    }
+
+    /// Decision-memo eviction accounting: (evictions,
+    /// misses-after-evict). A miss-after-evict here re-runs selection
+    /// — cheap when the candidate plans are still cached, a full
+    /// re-plan when they were evicted too.
+    pub fn memo_eviction_stats(&self) -> (u64, u64) {
+        let g = self.modes.lock().expect("mode memo poisoned");
+        (g.evictions(), g.misses_after_evict())
+    }
+
+    /// Live compiled plans.
+    pub fn plans_len(&self) -> usize {
+        self.plans.lock().expect("plan cache poisoned").len()
+    }
+
+    /// Live memoized auto-mode decisions.
+    pub fn memo_len(&self) -> usize {
+        self.modes.lock().expect("mode memo poisoned").len()
     }
 
     /// Resolve an auto-mode *batch* to a concrete mode at `rep`'s
@@ -185,17 +259,49 @@ impl PlanCache {
         rep: &JobSpec,
         calibration: Option<&Calibration>,
     ) -> Result<BatchResolution> {
+        self.resolve_batch_with(rep, calibration, None)
+    }
+
+    /// [`PlanCache::resolve_batch`] with workload-aware scoring: when
+    /// a [`ChurnTracker`] is supplied, the static candidate is scored
+    /// with its amortized per-pattern replan surcharge (see
+    /// [`static_surcharge_for`]) before the argmin, and memo entries
+    /// additionally record the tracker's pattern-geometry stamp —
+    /// once the churn EWMA at this geometry has moved informatively
+    /// [`CHURN_MOVES_PER_REVISIT`](crate::engine::CHURN_MOVES_PER_REVISIT)
+    /// times, the memoized decision goes stale and is recomputed under
+    /// the new regime (cheaply — the candidate plans are cache hits).
+    /// With no tracker, or a tracker that has observed no churn at
+    /// this pattern family, scoring is bit-identical to
+    /// [`PlanCache::resolve_batch`].
+    pub fn resolve_batch_with(
+        &self,
+        rep: &JobSpec,
+        calibration: Option<&Calibration>,
+        churn: Option<&ChurnTracker>,
+    ) -> Result<BatchResolution> {
         use std::sync::atomic::Ordering::Relaxed;
         let key = rep.selector_key();
         let stamp = calibration.map(|c| c.geometry_stamp(rep)).unwrap_or(0);
+        let churn_stamp = churn.map(|t| t.stamp(rep.pattern_key())).unwrap_or(0);
         if let Some(e) = self.modes.lock().expect("mode memo poisoned").get(&key) {
-            if stamp.saturating_sub(e.stamp) < crate::engine::OBSERVATIONS_PER_REVISIT {
+            // Stamps are monotone per bucket but RESET when the
+            // bounded calibration/churn maps evict a bucket — a
+            // current stamp *below* the entry's means the regime the
+            // decision was computed under is gone entirely, which is
+            // at least as stale as the threshold being crossed.
+            let cal_fresh = stamp >= e.stamp
+                && stamp - e.stamp < crate::engine::OBSERVATIONS_PER_REVISIT;
+            let churn_fresh = churn_stamp >= e.churn_stamp
+                && churn_stamp - e.churn_stamp < crate::engine::CHURN_MOVES_PER_REVISIT;
+            if cal_fresh && churn_fresh {
                 self.mode_hits.fetch_add(1, Relaxed);
                 return Ok(BatchResolution {
                     mode: e.mode,
                     raw_cycles: e.raw_cycles,
                     corrected_cycles: e.corrected_cycles,
                     flipped: false,
+                    churn_shifted: false,
                     memo_hit: true,
                 });
             }
@@ -204,9 +310,9 @@ impl PlanCache {
         // at the batch geometry, through the cache, in the selector's
         // full-evaluation order (Dense, Static, Dynamic — see
         // `device_backends`) so tie-breaking agrees; the argmin itself
-        // is the selector's `corrected_argmin`, so the two paths
-        // cannot drift. The estimates carry only kind + cycles (that
-        // is all the argmin reads); throughput is reported at
+        // is the selector's `corrected_argmin_amortized`, so the two
+        // paths cannot drift. The estimates carry only kind + cycles
+        // (that is all the argmin reads); throughput is reported at
         // execution time.
         let mut estimates: Vec<PlanEstimate> = Vec::new();
         let mut last_err: Option<Error> = None;
@@ -223,23 +329,43 @@ impl PlanCache {
                 Err(e) => last_err = Some(e),
             }
         }
-        let best = corrected_argmin(&estimates, calibration, rep);
+        let surcharge = static_surcharge_for(&estimates, calibration, rep, churn);
+        let best = corrected_argmin_amortized(&estimates, calibration, rep, surcharge);
         let Some((winner, corrected_cycles)) = best else {
             return Err(last_err
                 .unwrap_or_else(|| Error::Plan("no feasible backend for the job".into())));
         };
         let mode = winner.kind.as_mode().expect("candidates are concrete modes");
         let raw_cycles = winner.cycles;
+        let as_mode = |e: &PlanEstimate| e.kind.as_mode().expect("candidates are concrete modes");
         let raw_mode = corrected_argmin(&estimates, None, rep)
-            .map(|(e, _)| e.kind.as_mode().expect("candidates are concrete modes"))
+            .map(|(e, _)| as_mode(e))
             .expect("the candidate list is non-empty");
-        let flipped = raw_mode != mode;
+        // Attribution: `flipped` is calibration's own doing (raw vs
+        // corrected single-job argmin); `churn_shifted` is the
+        // amortization moving the corrected argmin further.
+        let calibrated_mode = if surcharge == 0 {
+            mode
+        } else {
+            corrected_argmin(&estimates, calibration, rep)
+                .map(|(e, _)| as_mode(e))
+                .expect("the candidate list is non-empty")
+        };
+        let flipped = calibrated_mode != raw_mode;
+        let churn_shifted = mode != calibrated_mode;
         self.mode_misses.fetch_add(1, Relaxed);
-        self.modes
-            .lock()
-            .expect("mode memo poisoned")
-            .insert(key, MemoEntry { mode, raw_cycles, corrected_cycles, stamp });
-        Ok(BatchResolution { mode, raw_cycles, corrected_cycles, flipped, memo_hit: false })
+        self.modes.lock().expect("mode memo poisoned").insert(
+            key,
+            MemoEntry { mode, raw_cycles, corrected_cycles, stamp, churn_stamp },
+        );
+        Ok(BatchResolution {
+            mode,
+            raw_cycles,
+            corrected_cycles,
+            flipped,
+            churn_shifted,
+            memo_hit: false,
+        })
     }
 
     /// Get or build the plan for a job. Returns (plan, was_hit).
@@ -263,8 +389,14 @@ impl PlanCache {
         let plan = self.build(job)?;
         misses.fetch_add(1, Relaxed);
         let mut map = self.plans.lock().expect("plan cache poisoned");
-        let entry = map.entry(key).or_insert(plan);
-        Ok((entry.clone(), false))
+        // A racing thread may have planted the plan while we built
+        // ours; keep theirs (peek: the first lookup already did this
+        // miss's accounting).
+        if let Some(existing) = map.peek(&key) {
+            return Ok((existing.clone(), false));
+        }
+        map.insert(key, plan.clone());
+        Ok((plan, false))
     }
 
     fn build(&self, job: &JobSpec) -> Result<CachedPlan> {
@@ -411,5 +543,91 @@ mod tests {
     fn unresolved_auto_jobs_never_plan() {
         let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
         assert!(cache.get_or_plan(&job(Mode::Auto, 0)).is_err());
+    }
+
+    #[test]
+    fn bounded_plan_cache_evicts_lru_and_counts_the_damage() {
+        let cache = PlanCache::with_capacity(IpuSpec::default(), CostModel::default(), 2, 2);
+        // Three pattern-specific static plans through a capacity-2 map.
+        for seed in 1..=3u64 {
+            cache.get_or_plan(&job(Mode::Static, seed)).unwrap();
+        }
+        assert_eq!(cache.plans_len(), 2);
+        assert_eq!(cache.plan_eviction_stats(), (1, 0), "seed 1 was the LRU victim");
+        // Re-admission: a fresh build, counted as a miss-after-evict,
+        // which in turn evicts the new LRU (seed 2).
+        let (_, hit) = cache.get_or_plan(&job(Mode::Static, 1)).unwrap();
+        assert!(!hit, "an evicted plan must be rebuilt");
+        assert_eq!(cache.plan_eviction_stats(), (2, 1));
+    }
+
+    #[test]
+    fn evicted_memo_decisions_are_rederived_not_stale() {
+        let cache =
+            PlanCache::with_capacity(IpuSpec::default(), CostModel::default(), usize::MAX, 1);
+        let a = job(Mode::Auto, 1);
+        let mut b = job(Mode::Auto, 2);
+        b.n = 256; // a distinct selector key
+        let r1 = cache.resolve_batch(&a, None).unwrap();
+        assert!(!r1.memo_hit);
+        let r2 = cache.resolve_batch(&b, None).unwrap();
+        assert!(!r2.memo_hit, "b displaces a in the capacity-1 memo");
+        assert_eq!(cache.memo_len(), 1);
+        let r3 = cache.resolve_batch(&a, None).unwrap();
+        assert!(!r3.memo_hit, "a re-admitted geometry's decision must be re-derived");
+        assert_eq!(r3.mode, r1.mode, "re-derivation reproduces the decision");
+        let (evictions, after) = cache.memo_eviction_stats();
+        assert_eq!(evictions, 2);
+        assert_eq!(after, 1, "a's second lookup was a miss-after-evict");
+    }
+
+    #[test]
+    fn stamp_reset_after_calibration_eviction_reopens_the_memo() {
+        use crate::engine::calibration::DEFAULT_ALPHA;
+        // A capacity-1 calibration: any unrelated observation evicts
+        // the bucket a memoized decision was stamped against, so the
+        // geometry's stamp RESETS below the entry's. That must read
+        // as stale (the learned regime is gone), not as fresh.
+        let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
+        let cal = Calibration::with_capacity(DEFAULT_ALPHA, 1);
+        let rep = job(Mode::Auto, 1);
+        for _ in 0..4 {
+            cal.observe(BackendKind::Dense, &rep, 1_000, 2_000);
+        }
+        assert_eq!(cal.geometry_stamp(&rep), 4);
+        let r1 = cache.resolve_batch(&rep, Some(&cal)).unwrap();
+        assert!(!r1.memo_hit);
+        let mut other = rep.clone();
+        other.m = 4096;
+        other.k = 4096;
+        cal.observe(BackendKind::Dense, &other, 1_000, 2_000);
+        assert!(cal.geometry_stamp(&rep) < 4, "the bucket was evicted");
+        let r2 = cache.resolve_batch(&rep, Some(&cal)).unwrap();
+        assert!(!r2.memo_hit, "a reset stamp must re-open the decision, not freeze it");
+    }
+
+    #[test]
+    fn churn_regime_change_reopens_the_memo() {
+        use crate::engine::ChurnTracker;
+        let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
+        let rep = job(Mode::Auto, 1);
+        let churn = ChurnTracker::default();
+        churn.observe(&rep);
+        let r1 = cache.resolve_batch_with(&rep, None, Some(&churn)).unwrap();
+        assert!(!r1.memo_hit);
+        let r2 = cache.resolve_batch_with(&rep, None, Some(&churn)).unwrap();
+        assert!(r2.memo_hit, "no churn movement: the memo holds");
+        // A burst of fresh patterns at this geometry moves the churn
+        // EWMA informatively past the revisit threshold.
+        for seed in 0..16u64 {
+            let mut fresh = rep.clone();
+            fresh.pattern_seed = 1000 + seed;
+            churn.observe(&fresh);
+        }
+        let r3 = cache.resolve_batch_with(&rep, None, Some(&churn)).unwrap();
+        assert!(!r3.memo_hit, "a churn regime change must re-open the decision");
+        // A decision taken under the settled regime memo-hits again.
+        let r4 = cache.resolve_batch_with(&rep, None, Some(&churn)).unwrap();
+        assert!(r4.memo_hit, "the re-derived decision carries the new churn stamp");
     }
 }

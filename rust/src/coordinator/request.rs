@@ -87,6 +87,25 @@ impl JobSpec {
         }
     }
 
+    /// Key for everything that cares about the *pattern family* a job
+    /// draws from, independent of the batch dimension: the weight
+    /// geometry `(m, k, b, density, dtype)` without `n` and without
+    /// the mode. Patterns mask the weight operand, so two jobs share a
+    /// pattern family exactly when they could share (or churn) masks —
+    /// however their activations batch. This keys the pattern-churn
+    /// EWMA ([`crate::engine::ChurnTracker`]) and the batcher's
+    /// pattern-relevance hints
+    /// ([`crate::coordinator::batcher::PatternHints`]).
+    pub fn pattern_key(&self) -> PatternKey {
+        PatternKey {
+            m: self.m,
+            k: self.k,
+            b: self.b,
+            density_millionths: self.density_millionths(),
+            dtype: self.dtype,
+        }
+    }
+
     /// Key for auto-mode resolution memoization: the geometry the
     /// decision depends on, without the mode or the pattern seed. For
     /// batch-time resolution the memoized key carries the *combined*
@@ -109,6 +128,17 @@ impl JobSpec {
             dtype: self.dtype,
         }
     }
+}
+
+/// Pattern-family key (see [`JobSpec::pattern_key`]): the weight
+/// geometry without the batch dimension or the mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PatternKey {
+    pub m: usize,
+    pub k: usize,
+    pub b: usize,
+    pub density_millionths: u64,
+    pub dtype: DType,
 }
 
 /// Memoization key for auto-mode decisions (see [`JobSpec::selector_key`]).
@@ -187,6 +217,17 @@ mod tests {
         assert!((s.flops() - 2.0 * 1024.0 * 1024.0 * 64.0 / 16.0).abs() < 1.0);
         let d = spec(Mode::Dense, 0);
         assert!((d.flops() - 2.0 * 1024.0 * 1024.0 * 64.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn pattern_key_ignores_mode_seed_and_n() {
+        let mut a = spec(Mode::Auto, 1);
+        let b = spec(Mode::Static, 9);
+        assert_eq!(a.pattern_key(), b.pattern_key());
+        a.n = 4096; // the batch dimension never splits a pattern family
+        assert_eq!(a.pattern_key(), b.pattern_key());
+        a.m = 2048;
+        assert_ne!(a.pattern_key(), b.pattern_key(), "weight geometry must matter");
     }
 
     #[test]

@@ -24,16 +24,24 @@
 //! no-op until the observed stream disagrees with the model
 //! (`rust/tests/property_selection.rs` pins both properties).
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::coordinator::request::JobSpec;
 use crate::engine::backends::{BackendKind, PlanEstimate};
+use crate::util::LruMap;
 use crate::DType;
 
 /// Default EWMA smoothing weight for new observations.
 pub const DEFAULT_ALPHA: f64 = 0.25;
+
+/// Default capacity of the (backend, geometry-bucket) factor map.
+/// Buckets are power-of-two coarse, so paper-scale traffic touches a
+/// few dozen — the bound exists for open-world traffic, where the key
+/// population is adversarial. Evicting a bucket forgets its learned
+/// correction (it restarts at 1.0 if the geometry returns), which is
+/// safe: factors only steer selection, never execution.
+pub const DEFAULT_CALIBRATION_CAPACITY: usize = 4096;
 
 /// Correction factors are clamped to `[1/MAX_CORRECTION,
 /// MAX_CORRECTION]`: calibration may reshape the frontier, but a
@@ -112,7 +120,7 @@ struct Ewma {
 #[derive(Debug)]
 pub struct Calibration {
     alpha: f64,
-    factors: Mutex<HashMap<BucketKey, Ewma>>,
+    factors: Mutex<LruMap<BucketKey, Ewma>>,
     observations: AtomicU64,
 }
 
@@ -124,9 +132,17 @@ impl Default for Calibration {
 
 impl Calibration {
     pub fn new(alpha: f64) -> Self {
+        Self::with_capacity(alpha, DEFAULT_CALIBRATION_CAPACITY)
+    }
+
+    /// A calibration whose factor map holds at most `capacity`
+    /// (backend, geometry-bucket) entries, evicted LRU — recency is
+    /// refreshed by both corrections and observations, so the buckets
+    /// live traffic leans on stay resident.
+    pub fn with_capacity(alpha: f64, capacity: usize) -> Self {
         Self {
             alpha: alpha.clamp(0.0, 1.0),
-            factors: Mutex::new(HashMap::new()),
+            factors: Mutex::new(LruMap::new(capacity)),
             observations: AtomicU64::new(0),
         }
     }
@@ -161,7 +177,7 @@ impl Calibration {
             (observed as f64 / estimated as f64).clamp(1.0 / MAX_CORRECTION, MAX_CORRECTION);
         let key = BucketKey::of(kind, job);
         let mut factors = self.factors.lock().expect("calibration poisoned");
-        let e = factors.entry(key).or_insert(Ewma { factor: 1.0, informative: 0 });
+        let e = factors.get_or_insert_with(key, || Ewma { factor: 1.0, informative: 0 });
         if (ratio - e.factor).abs() >= INFORMATIVE_DELTA {
             e.informative += 1;
         }
@@ -192,7 +208,7 @@ impl Calibration {
         [BackendKind::Dense, BackendKind::Static, BackendKind::Dynamic]
             .iter()
             .map(|&kind| {
-                factors.get(&BucketKey::of(kind, job)).map(|e| e.informative).unwrap_or(0)
+                factors.peek(&BucketKey::of(kind, job)).map(|e| e.informative).unwrap_or(0)
             })
             .sum()
     }
@@ -200,6 +216,15 @@ impl Calibration {
     /// Number of (backend, geometry-bucket) factors tracked.
     pub fn buckets(&self) -> usize {
         self.factors.lock().expect("calibration poisoned").len()
+    }
+
+    /// Bucket-map eviction accounting: (evictions,
+    /// misses-after-evict). The second number counts lookups that
+    /// found their bucket gone — learned corrections the bound threw
+    /// away and traffic then asked for.
+    pub fn eviction_stats(&self) -> (u64, u64) {
+        let g = self.factors.lock().expect("calibration poisoned");
+        (g.evictions(), g.misses_after_evict())
     }
 
     /// All tracked factors, for reporting.
@@ -229,21 +254,72 @@ pub fn corrected_argmin<'a>(
     calibration: Option<&Calibration>,
     job: &JobSpec,
 ) -> Option<(&'a PlanEstimate, u64)> {
-    let mut best: Option<(&PlanEstimate, u64)> = None;
+    corrected_argmin_amortized(estimates, calibration, job, 0)
+}
+
+/// [`corrected_argmin`] with workload-aware amortization: the static
+/// candidate is *scored* with `static_surcharge` extra cycles (the
+/// per-pattern replan cost over the expected pattern lifetime — see
+/// [`ChurnTracker::static_surcharge`](crate::engine::ChurnTracker::static_surcharge)),
+/// so under pattern churn the argmin shifts away from static. The
+/// surcharge steers the comparison only: the returned corrected value
+/// is the winner's corrected *execution* estimate, without the
+/// surcharge, so downstream estimate-accuracy accounting stays honest
+/// against simulated cycles. With `static_surcharge == 0` this is
+/// exactly [`corrected_argmin`] — the single argmin definition every
+/// selection path funnels through.
+pub fn corrected_argmin_amortized<'a>(
+    estimates: &'a [PlanEstimate],
+    calibration: Option<&Calibration>,
+    job: &JobSpec,
+    static_surcharge: u64,
+) -> Option<(&'a PlanEstimate, u64)> {
+    let mut best: Option<(&PlanEstimate, u64, u64)> = None;
     for e in estimates {
         let corrected = match calibration {
             Some(c) => c.correct(e.kind, job, e.cycles),
             None => e.cycles,
         };
+        let score = if e.kind == BackendKind::Static {
+            corrected.saturating_add(static_surcharge)
+        } else {
+            corrected
+        };
         let better = match best {
             None => true,
-            Some((_, best_cycles)) => corrected < best_cycles,
+            Some((_, _, best_score)) => score < best_score,
         };
         if better {
-            best = Some((e, corrected));
+            best = Some((e, corrected, score));
         }
     }
-    best
+    best.map(|(e, corrected, _)| (e, corrected))
+}
+
+/// The amortized static-replan surcharge for scoring `estimates` at
+/// `job`'s pattern family: static's *corrected* per-batch estimate
+/// times the replan factor over the expected pattern lifetime. Zero
+/// when there is no static candidate, no churn tracker, or no
+/// observed churn. Both
+/// [`ModeSelector::choose_workload`](crate::engine::ModeSelector::choose_workload)
+/// and [`PlanCache::resolve_batch_with`](crate::coordinator::PlanCache::resolve_batch_with)
+/// compute their surcharge here, so workload scoring cannot drift
+/// between the two paths.
+pub fn static_surcharge_for(
+    estimates: &[PlanEstimate],
+    calibration: Option<&Calibration>,
+    job: &JobSpec,
+    churn: Option<&crate::engine::ChurnTracker>,
+) -> u64 {
+    let Some(churn) = churn else { return 0 };
+    let Some(st) = estimates.iter().find(|e| e.kind == BackendKind::Static) else {
+        return 0;
+    };
+    let corrected = match calibration {
+        Some(c) => c.correct(BackendKind::Static, job, st.cycles),
+        None => st.cycles,
+    };
+    churn.static_surcharge(job, corrected)
 }
 
 #[cfg(test)]
@@ -340,6 +416,48 @@ mod tests {
         let learned = cal.geometry_stamp(&j);
         cal.observe(BackendKind::Dynamic, &j, 10, 10);
         assert_eq!(cal.geometry_stamp(&j), learned + 1);
+    }
+
+    #[test]
+    fn amortized_argmin_shifts_static_but_reports_execution_estimates() {
+        let j = job(1024, 256, 1.0 / 16.0);
+        let est = |kind, cycles| PlanEstimate { kind, cycles, tflops: 1.0, propagation_steps: 0 };
+        let estimates = vec![
+            est(BackendKind::Dense, 4000),
+            est(BackendKind::Static, 1000),
+            est(BackendKind::Dynamic, 2500),
+        ];
+        // Zero surcharge: exactly the plain corrected argmin.
+        let (win, c) = corrected_argmin_amortized(&estimates, None, &j, 0).unwrap();
+        assert_eq!((win.kind, c), (BackendKind::Static, 1000));
+        // A surcharge below the gap leaves static the winner...
+        let (win, _) = corrected_argmin_amortized(&estimates, None, &j, 1000).unwrap();
+        assert_eq!(win.kind, BackendKind::Static);
+        // ...past the gap the argmin shifts to dynamic, and the
+        // reported corrected value is dynamic's execution estimate
+        // (never a surcharged score).
+        let (win, c) = corrected_argmin_amortized(&estimates, None, &j, 2000).unwrap();
+        assert_eq!((win.kind, c), (BackendKind::Dynamic, 2500));
+    }
+
+    #[test]
+    fn static_surcharge_helper_requires_churn_and_a_static_candidate() {
+        use crate::engine::churn::ChurnTracker;
+        let j = job(1024, 256, 1.0 / 16.0);
+        let est = |kind, cycles| PlanEstimate { kind, cycles, tflops: 1.0, propagation_steps: 0 };
+        let estimates = vec![est(BackendKind::Dense, 4000), est(BackendKind::Static, 1000)];
+        assert_eq!(static_surcharge_for(&estimates, None, &j, None), 0);
+        let churned = ChurnTracker::default();
+        for seed in 0..64u64 {
+            let mut f = j.clone();
+            f.pattern_seed = seed;
+            churned.observe(&f);
+        }
+        let s = static_surcharge_for(&estimates, None, &j, Some(&churned));
+        assert!(s > 0, "observed churn must surcharge the static candidate");
+        // No static candidate: nothing to amortize.
+        let dense_only = vec![est(BackendKind::Dense, 4000)];
+        assert_eq!(static_surcharge_for(&dense_only, None, &j, Some(&churned)), 0);
     }
 
     #[test]

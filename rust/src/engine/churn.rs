@@ -1,0 +1,356 @@
+//! Pattern-churn tracking: scoring modes by pattern *lifetime*, not
+//! single jobs.
+//!
+//! The paper's crossover result — static beats dynamic wherever both
+//! apply (Table 3) — prices only execution. It holds when a sparsity
+//! pattern is planned once and reused; a static plan is
+//! pattern-specific, so every *fresh* pattern pays the static planning
+//! cost again, while a dynamic plan amortizes one compilation across
+//! every pattern under its `d_max` (the paper's headline property, and
+//! the workload realism Gale et al. and the Sparsity Roofline insist
+//! on measuring). A selector that scores single jobs therefore
+//! systematically over-picks static under pattern churn.
+//!
+//! [`ChurnTracker`] closes that gap: a per-[`PatternKey`] EWMA of the
+//! *distinct-pattern rate* — how often traffic at a weight geometry
+//! arrives with a pattern not in its recent window. The reciprocal is
+//! the expected pattern lifetime (jobs per pattern), and static's
+//! per-pattern planning cost divided by that lifetime is a surcharge
+//! added to static's corrected estimate before the argmin
+//! ([`corrected_argmin_amortized`](crate::engine::calibration::corrected_argmin_amortized)).
+//! Zero observed churn keeps the surcharge at exactly zero, so
+//! pattern-stable traffic reproduces the unamortized decisions
+//! bit-for-bit; as the churn rate rises the static/dynamic argmin
+//! shifts toward dynamic — the `repro bench churn` sweep plots the
+//! flip.
+//!
+//! Like [`Calibration`](crate::engine::Calibration), staleness is
+//! counted in *informative movements*: an observation only advances a
+//! geometry's churn stamp when it actually moved the EWMA, so memoized
+//! decisions ([`PlanCache::resolve_batch`]) are revisited when the
+//! workload's churn regime changes and left alone while it merely
+//! continues.
+//!
+//! [`PlanCache::resolve_batch`]: crate::coordinator::PlanCache::resolve_batch
+
+use std::sync::Mutex;
+
+use crate::coordinator::request::{JobSpec, PatternKey};
+use crate::util::LruMap;
+
+/// EWMA smoothing weight for distinct-pattern observations.
+pub const CHURN_ALPHA: f64 = 0.25;
+
+/// How many recently-seen distinct pattern seeds a geometry remembers
+/// (LRU: reuse refreshes a seed's slot); a seed outside this window
+/// counts as fresh. The window is a bounded recency horizon, not a
+/// plan-cache mirror — a rotation through more than this many live
+/// patterns reads as churn even where a large plan cache would still
+/// serve it, which errs toward dynamic's pattern-robust plan exactly
+/// when the pattern population is large.
+pub const CHURN_WINDOW: usize = 8;
+
+/// An observation is *informative* — advances the geometry's churn
+/// stamp — only when it moved the EWMA by at least this much. A
+/// converged stream (steady reuse or steady churn) stops advancing the
+/// stamp, so memoized decisions settle once the regime settles.
+pub const CHURN_INFORMATIVE_DELTA: f64 = 0.01;
+
+/// A memoized auto-mode decision goes stale once its geometry's churn
+/// EWMA has moved informatively this many times since the decision
+/// was taken. Deliberately small: the EWMA saturates after ~a dozen
+/// one-directional moves, so a larger threshold could leave a memo
+/// frozen in the wrong regime forever.
+pub const CHURN_MOVES_PER_REVISIT: u64 = 4;
+
+/// Expected pattern lifetime is clamped to `[1, MAX_PATTERN_LIFETIME]`
+/// jobs: even a fully-churning stream replans at most once per job,
+/// and a near-zero rate must not divide the surcharge to nothing
+/// prematurely (zero observed churn skips the surcharge entirely
+/// instead).
+pub const MAX_PATTERN_LIFETIME: f64 = 256.0;
+
+/// Static's per-pattern planning cost, as a multiple of its own
+/// per-batch execution estimate. On real IPUs a static pattern means
+/// graph recompilation — orders of magnitude above one execution; the
+/// simulator has no compile path to measure, so this documented factor
+/// stands in for it. With the clamp above, pattern-stable traffic pays
+/// at most `8/256 ≈ 3%` (and exactly 0 before any churn is observed),
+/// while per-job-fresh patterns pay the full 8× — decisively past the
+/// ~2.6× dynamic/static execution gap at the paper's block sizes, so
+/// the argmin flips.
+pub const STATIC_REPLAN_COST_FACTOR: f64 = 8.0;
+
+/// Default capacity of the per-geometry churn map (entries, LRU).
+pub const DEFAULT_CHURN_CAPACITY: usize = 4096;
+
+#[derive(Debug, Clone)]
+struct ChurnState {
+    /// Ring of recently-seen distinct seeds, newest last.
+    recent: Vec<u64>,
+    /// EWMA of the fresh-pattern indicator. Stays exactly 0.0 until a
+    /// second distinct pattern is observed.
+    rate: f64,
+    /// Informative movements of `rate` (the staleness stamp).
+    moves: u64,
+}
+
+impl ChurnState {
+    fn new() -> Self {
+        Self { recent: Vec::with_capacity(CHURN_WINDOW), rate: 0.0, moves: 0 }
+    }
+
+    fn observe(&mut self, seed: u64) {
+        if self.recent.is_empty() {
+            // The first pattern ever seen is not churn evidence —
+            // there was nothing to reuse. Record it and keep the rate
+            // at exactly 0.0.
+            self.recent.push(seed);
+            return;
+        }
+        let hit = self.recent.iter().position(|&s| s == seed);
+        let prev = self.rate;
+        self.rate += CHURN_ALPHA * ((hit.is_none() as u8 as f64) - self.rate);
+        if (self.rate - prev).abs() >= CHURN_INFORMATIVE_DELTA {
+            self.moves += 1;
+        }
+        // LRU window: reuse refreshes the seed's recency, so steadily
+        // reused patterns stay resident while one-shot patterns age
+        // out.
+        if let Some(i) = hit {
+            self.recent.remove(i);
+        } else if self.recent.len() >= CHURN_WINDOW {
+            self.recent.remove(0);
+        }
+        self.recent.push(seed);
+    }
+}
+
+/// Thread-safe per-pattern-geometry churn EWMAs, bounded by LRU
+/// eviction. Shared between the worker pool (which observes the
+/// pattern stream) and the resolver (which scores with it).
+#[derive(Debug)]
+pub struct ChurnTracker {
+    states: Mutex<LruMap<PatternKey, ChurnState>>,
+}
+
+impl Default for ChurnTracker {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_CHURN_CAPACITY)
+    }
+}
+
+impl ChurnTracker {
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self { states: Mutex::new(LruMap::new(capacity)) }
+    }
+
+    /// Feed one observed pattern arrival at `job`'s pattern family.
+    pub fn observe(&self, job: &JobSpec) {
+        let mut g = self.states.lock().expect("churn tracker poisoned");
+        g.get_or_insert_with(job.pattern_key(), ChurnState::new).observe(job.pattern_seed);
+    }
+
+    /// The distinct-pattern rate EWMA at `key` (0.0 when unseen or
+    /// pattern-stable).
+    pub fn rate(&self, key: PatternKey) -> f64 {
+        self.states
+            .lock()
+            .expect("churn tracker poisoned")
+            .peek(&key)
+            .map(|s| s.rate)
+            .unwrap_or(0.0)
+    }
+
+    /// Staleness stamp at `key`: how many times the churn EWMA has
+    /// moved informatively. Memoized decisions record the stamp they
+    /// were computed under and go stale once it advances by
+    /// [`CHURN_MOVES_PER_REVISIT`].
+    pub fn stamp(&self, key: PatternKey) -> u64 {
+        self.states
+            .lock()
+            .expect("churn tracker poisoned")
+            .peek(&key)
+            .map(|s| s.moves)
+            .unwrap_or(0)
+    }
+
+    /// Expected jobs per pattern at `key`, the amortization horizon
+    /// for pattern-specific (static) planning: the reciprocal churn
+    /// rate, clamped to `[1, MAX_PATTERN_LIFETIME]`; the maximum when
+    /// no churn has been observed.
+    pub fn expected_pattern_lifetime(&self, key: PatternKey) -> f64 {
+        lifetime_for_rate(self.rate(key))
+    }
+
+    /// The amortized replan surcharge (cycles) to add to static's
+    /// estimate of `static_cycles` at `job`'s pattern family: the
+    /// per-pattern planning cost spread over the expected pattern
+    /// lifetime. Exactly 0 while no churn has been observed, so
+    /// pattern-stable and churn-blind scoring agree bit-for-bit.
+    pub fn static_surcharge(&self, job: &JobSpec, static_cycles: u64) -> u64 {
+        // One lock acquisition: this runs inside every workload-aware
+        // resolution.
+        let rate = self.rate(job.pattern_key());
+        if rate == 0.0 {
+            return 0;
+        }
+        let life = lifetime_for_rate(rate);
+        (static_cycles as f64 * STATIC_REPLAN_COST_FACTOR / life).round() as u64
+    }
+
+    /// Number of pattern geometries tracked.
+    pub fn geometries(&self) -> usize {
+        self.states.lock().expect("churn tracker poisoned").len()
+    }
+
+    /// Entries evicted from the bounded map so far.
+    pub fn evictions(&self) -> u64 {
+        self.states.lock().expect("churn tracker poisoned").evictions()
+    }
+}
+
+/// The clamped reciprocal-rate lifetime (see
+/// [`ChurnTracker::expected_pattern_lifetime`]).
+fn lifetime_for_rate(rate: f64) -> f64 {
+    if rate <= 1.0 / MAX_PATTERN_LIFETIME {
+        MAX_PATTERN_LIFETIME
+    } else {
+        (1.0 / rate).clamp(1.0, MAX_PATTERN_LIFETIME)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Mode;
+    use crate::DType;
+
+    fn job(m: usize, seed: u64) -> JobSpec {
+        JobSpec {
+            mode: Mode::Auto,
+            m,
+            k: m,
+            n: 128,
+            b: 16,
+            density: 1.0 / 16.0,
+            dtype: DType::Fp16,
+            pattern_seed: seed,
+        }
+    }
+
+    #[test]
+    fn pattern_stable_traffic_never_registers_churn() {
+        let t = ChurnTracker::default();
+        let j = job(1024, 7);
+        for _ in 0..100 {
+            t.observe(&j);
+        }
+        assert_eq!(t.rate(j.pattern_key()), 0.0);
+        assert_eq!(t.stamp(j.pattern_key()), 0);
+        assert_eq!(t.static_surcharge(&j, 1_000_000), 0, "no churn, no surcharge");
+        assert_eq!(t.expected_pattern_lifetime(j.pattern_key()), MAX_PATTERN_LIFETIME);
+    }
+
+    #[test]
+    fn fresh_pattern_stream_converges_to_full_churn() {
+        let t = ChurnTracker::default();
+        for seed in 0..64u64 {
+            t.observe(&job(1024, seed));
+        }
+        let key = job(1024, 0).pattern_key();
+        assert!(t.rate(key) > 0.95, "rate {} after 64 fresh patterns", t.rate(key));
+        assert!((1.0..=1.1).contains(&t.expected_pattern_lifetime(key)));
+        // The surcharge approaches the full replan factor.
+        let s = t.static_surcharge(&job(1024, 99), 1_000_000);
+        let full = (1_000_000.0 * STATIC_REPLAN_COST_FACTOR) as u64;
+        assert!(s > full * 9 / 10, "surcharge {s} vs full {full}");
+        // And the stamp advanced while the EWMA was moving.
+        assert!(t.stamp(key) >= CHURN_MOVES_PER_REVISIT);
+    }
+
+    #[test]
+    fn stamp_settles_once_the_regime_converges() {
+        let t = ChurnTracker::default();
+        for seed in 0..200u64 {
+            t.observe(&job(512, seed));
+        }
+        let key = job(512, 0).pattern_key();
+        let settled = t.stamp(key);
+        for seed in 200..240u64 {
+            t.observe(&job(512, seed));
+        }
+        assert_eq!(t.stamp(key), settled, "a converged stream must stop moving the stamp");
+    }
+
+    #[test]
+    fn window_reuse_is_not_churn_and_geometries_are_independent() {
+        let t = ChurnTracker::default();
+        // Two alternating seeds: the second observation is fresh, all
+        // later ones hit the window.
+        for i in 0..40u64 {
+            t.observe(&job(2048, i % 2));
+        }
+        let key = job(2048, 0).pattern_key();
+        assert!(t.rate(key) < 0.01, "alternating within the window decays: {}", t.rate(key));
+        // An unrelated geometry saw nothing.
+        assert_eq!(t.rate(job(4096, 0).pattern_key()), 0.0);
+    }
+
+    #[test]
+    fn reuse_refreshes_window_recency() {
+        // Seed 1 is reused mid-stream, which must refresh its window
+        // slot (LRU): after eight other distinct seeds it is still
+        // resident, so its next arrival decays the rate instead of
+        // re-counting as fresh. (A FIFO window would have aged it out
+        // by first-insertion and re-counted it.)
+        let t = ChurnTracker::default();
+        for s in [1u64, 2, 3, 4, 1, 5, 6, 7, 8, 9] {
+            t.observe(&job(1024, s));
+        }
+        let key = job(1024, 0).pattern_key();
+        let before = t.rate(key);
+        t.observe(&job(1024, 1));
+        assert!(
+            t.rate(key) < before,
+            "a refreshed seed must not re-count as fresh: {} -> {}",
+            before,
+            t.rate(key)
+        );
+    }
+
+    #[test]
+    fn lifetime_is_the_reciprocal_rate_mid_spectrum() {
+        let t = ChurnTracker::default();
+        // 1 fresh seed in every 4 arrivals (seeds cycle through a pool
+        // of 3 in-window values plus a fresh one).
+        let mut fresh = 1000u64;
+        for i in 0..400u64 {
+            let seed = if i % 4 == 0 {
+                fresh += 1;
+                fresh
+            } else {
+                i % 3
+            };
+            t.observe(&job(256, seed));
+        }
+        let key = job(256, 0).pattern_key();
+        // The EWMA oscillates around the true 0.25 fresh rate (rising
+        // on the fresh arrival, decaying across the three reuses);
+        // sampled after a decay run it sits in the lower half.
+        let rate = t.rate(key);
+        assert!((0.10..0.40).contains(&rate), "rate {rate} should track the 0.25 stream");
+        let life = t.expected_pattern_lifetime(key);
+        assert!((2.5..10.0).contains(&life), "lifetime {life} should hover near 1/rate");
+    }
+
+    #[test]
+    fn churn_map_is_bounded() {
+        let t = ChurnTracker::with_capacity(16);
+        for m in 1..200usize {
+            t.observe(&job(16 * m, 0));
+        }
+        assert!(t.geometries() <= 16);
+        assert!(t.evictions() > 0);
+    }
+}

@@ -21,6 +21,12 @@
 //!   factors learned from observed execution cycles and applied to
 //!   [`PlanEstimate`] cycles before the selector's argmin, so dispatch
 //!   follows measured cost rather than the analytical model alone.
+//! * [`ChurnTracker`] — per-pattern-geometry EWMA of the
+//!   distinct-pattern rate; static's pattern-specific planning cost is
+//!   amortized over the expected pattern lifetime and added to its
+//!   score before the argmin, so under pattern churn dispatch shifts
+//!   toward the plan-reusing backends (the workload realism the
+//!   single-job crossover misses).
 //!
 //! [`Mode::Auto`] jobs batch under a provisional key and are resolved
 //! at *batch-formation time*, at the batch's combined `n` — the
@@ -35,6 +41,7 @@
 
 pub mod backends;
 pub mod calibration;
+pub mod churn;
 pub mod selector;
 
 pub use backends::{
@@ -42,4 +49,7 @@ pub use backends::{
     GpuBackend, PlanEstimate, StaticBackend,
 };
 pub use calibration::{Calibration, INFORMATIVE_DELTA, MAX_CORRECTION, OBSERVATIONS_PER_REVISIT};
+pub use churn::{
+    CHURN_MOVES_PER_REVISIT, ChurnTracker, MAX_PATTERN_LIFETIME, STATIC_REPLAN_COST_FACTOR,
+};
 pub use selector::{Decision, ModeSelector, PREFILTER_MARGIN, SELECTION_TOLERANCE};

@@ -21,7 +21,8 @@ use crate::coordinator::request::{JobSpec, Mode};
 use crate::engine::backends::{
     device_backends, Backend, DenseBackend, EngineEnv, PlanEstimate, StaticBackend,
 };
-use crate::engine::calibration::{corrected_argmin, Calibration};
+use crate::engine::calibration::{corrected_argmin_amortized, static_surcharge_for, Calibration};
+use crate::engine::churn::ChurnTracker;
 use crate::error::{Error, Result};
 use crate::fit::{fit_power_law, PowerLaw};
 use crate::sim::chip::{CostModel, IpuSpec};
@@ -166,15 +167,38 @@ impl ModeSelector {
     /// exact corrected argmin. With no calibration this is exactly
     /// `choose`.
     pub fn choose_with(&self, job: &JobSpec, cal: Option<&Calibration>) -> Result<Decision> {
+        self.choose_workload(job, cal, None)
+    }
+
+    /// [`ModeSelector::choose_with`] plus workload-aware scoring: when
+    /// a [`ChurnTracker`] is supplied, the static candidate is scored
+    /// with its amortized per-pattern replan surcharge (corrected
+    /// estimate × replan factor ÷ expected pattern lifetime at the
+    /// job's pattern family), so under pattern churn the argmin shifts
+    /// from static toward the plan-reusing backends. The surcharge
+    /// steers the comparison only — [`Decision::estimated_cycles`]
+    /// stays the winner's corrected *execution* estimate. With no
+    /// observed churn the surcharge is exactly zero and this is
+    /// bit-identical to [`ModeSelector::choose_with`]; like
+    /// calibration, workload scoring always takes the full-evaluation
+    /// path (the power-law fast path models raw single-job cost and
+    /// cannot honour an amortized score).
+    pub fn choose_workload(
+        &self,
+        job: &JobSpec,
+        cal: Option<&Calibration>,
+        churn: Option<&ChurnTracker>,
+    ) -> Result<Decision> {
         let t0 = Instant::now();
 
         // Fast path: the fitted law, far from the crossover frontier
         // and inside the fitted envelope (the law is fitted on square
         // problems and carries no k feature, so k must match m).
-        // Uncalibrated selection only — the law models raw planner
-        // cost, and skipping planners under a calibration could pick a
-        // backend whose corrected estimate busts the tolerance.
-        if let (Some(law), None) = (&self.prefilter, cal) {
+        // Uncalibrated, churn-blind selection only — the law models
+        // raw planner cost, and skipping planners under a calibration
+        // or a churn surcharge could pick a backend whose corrected
+        // (or amortized) estimate busts the tolerance.
+        if let (Some(law), None, None) = (&self.prefilter, cal, churn) {
             if job.b > 1
                 && job.b <= PREFILTER_MAX_B
                 && job.m <= PREFILTER_MAX_M
@@ -223,8 +247,9 @@ impl ModeSelector {
         }
 
         // Full evaluation: plan every device backend, keep the argmin
-        // over corrected estimates (exact raw argmin when there is no
-        // calibration).
+        // over corrected estimates — with the static candidate scored
+        // at its amortized replan surcharge when a churn tracker is
+        // supplied (exact raw argmin when there is neither).
         let mut estimates: Vec<PlanEstimate> = Vec::new();
         let mut last_err: Option<Error> = None;
         for backend in device_backends() {
@@ -233,7 +258,8 @@ impl ModeSelector {
                 Err(e) => last_err = Some(e),
             }
         }
-        match corrected_argmin(&estimates, cal, job) {
+        let surcharge = static_surcharge_for(&estimates, cal, job, churn);
+        match corrected_argmin_amortized(&estimates, cal, job, surcharge) {
             Some((winner, corrected)) => Ok(Decision {
                 mode: winner
                     .kind
@@ -357,6 +383,53 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn churn_shifts_the_static_dynamic_argmin() {
+        use crate::engine::churn::ChurnTracker;
+        use crate::engine::BackendKind;
+        let s = selector();
+        // Table 3's point: static decisively wins on single-job cost.
+        let j = job(4096, 1.0 / 16.0, 16, 2048);
+        let base = s.choose(&j).unwrap();
+        assert_eq!(base.mode, Mode::Static);
+        // A pattern-stable stream (same seed throughout) must leave
+        // the decision bit-identical — zero observed churn, zero
+        // surcharge.
+        let stable = ChurnTracker::default();
+        for _ in 0..32 {
+            stable.observe(&j);
+        }
+        let same = s.choose_workload(&j, None, Some(&stable)).unwrap();
+        assert_eq!(same.mode, base.mode);
+        assert_eq!(same.estimated_cycles, base.estimated_cycles);
+        // A fresh-pattern-per-job stream amortizes static's replan
+        // cost over a lifetime of ~1 job: the 8x surcharge dwarfs the
+        // ~2.6x dynamic/static execution gap, so the argmin shifts to
+        // the pattern-reusing dynamic plan.
+        let churned = ChurnTracker::default();
+        for seed in 0..64u64 {
+            let mut f = j.clone();
+            f.pattern_seed = seed;
+            churned.observe(&f);
+        }
+        let shifted = s.choose_workload(&j, None, Some(&churned)).unwrap();
+        assert_eq!(
+            shifted.mode,
+            Mode::Dynamic,
+            "full churn must flip static -> dynamic: {:?}",
+            shifted.estimates
+        );
+        // The reported estimate stays an execution estimate (dynamic's
+        // own), not a surcharged score.
+        let dyn_est = shifted
+            .estimates
+            .iter()
+            .find(|e| e.kind == BackendKind::Dynamic)
+            .expect("dynamic was planned")
+            .cycles;
+        assert_eq!(shifted.estimated_cycles, dyn_est);
     }
 
     #[test]

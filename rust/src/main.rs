@@ -29,8 +29,12 @@ fn usage() -> ! {
          \x20 plan   --mode <auto|static|dynamic|dense> --m M --k K --n N [--b B] [--density D] [--fp32]\n\
          \x20 run    [--artifact NAME]          numeric execution + oracle check\n\
          \x20 bench  <experiment|all> [--calibrated]  regenerate paper tables/figures\n\
-         \x20        experiments: table3 fig2 fig3a fig3b fig4a fig4b fig4c fig7 auto ell conclusions\n\
+         \x20        experiments: table3 fig2 fig3a fig3b fig4a fig4b fig4c fig7 auto churn ell conclusions\n\
          \x20        --calibrated: add the observed-cycle-calibrated crossover arm to `auto`\n\
+         \x20 bench  ci [--out FILE] [--seed-baseline]  churn-sweep + calibrated crossover,\n\
+         \x20        machine-readable points to FILE (default BENCH_ci.json)\n\
+         \x20 bench  gate [--baseline FILE] [--current FILE] [--tolerance F]\n\
+         \x20        fail on >F cycle-estimate regression vs the committed baseline (default 0.10)\n\
          \x20 serve  [--jobs N] [--workers W]   synthetic serving workload\n\
          \x20 list                              list AOT artifacts"
     );
@@ -208,6 +212,11 @@ fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
     // --calibrated` both work (flags alone default to `all`).
     let which = args.iter().find(|a| !a.starts_with("--")).map(String::as_str).unwrap_or("all");
     let flags = parse_flags(args);
+    match which {
+        "ci" => return cmd_bench_ci(&flags),
+        "gate" => return cmd_bench_gate(&flags),
+        _ => {}
+    }
     let env = Env::default();
     let out_dir = std::path::Path::new("target/bench_results");
     let run = |name: &str, tables: Vec<popsparse::bench_harness::Table>| -> popsparse::Result<()> {
@@ -258,6 +267,9 @@ fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
             run("auto_calibrated", vec![experiments::auto_crossover_calibrated(&env)])?;
         }
     }
+    if all || which == "churn" {
+        run("churn", vec![experiments::churn_sweep(&env)])?;
+    }
     if all || which == "ell" {
         run("ell", vec![experiments::ell_ablation(&env)])?;
     }
@@ -265,6 +277,99 @@ fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
         run("conclusions", vec![experiments::conclusions(&env)])?;
     }
     println!("(CSV written under {})", out_dir.display());
+    Ok(())
+}
+
+/// `repro bench ci`: run the deterministic churn-sweep and calibrated
+/// crossover experiments, print their tables, and write the
+/// machine-readable cycle-estimate points the bench gate compares
+/// (`--out`, default `BENCH_ci.json`; `--seed-baseline` writes
+/// `BENCH_baseline.json` instead, arming the gate).
+fn cmd_bench_ci(flags: &HashMap<String, String>) -> popsparse::Result<()> {
+    let env = Env::default();
+    experiments::churn_sweep(&env).print();
+    experiments::auto_crossover_calibrated(&env).print();
+    // `bench_ci_points` is the single definition of the gated point
+    // set — the same call the tier-1 gate test makes — so the emitted
+    // artifact and the test can never gate different sets. (The table
+    // above recomputes the sweep; it is a few planner calls.)
+    let points = experiments::bench_ci_points(&env);
+    let doc = popsparse::bench_harness::BenchDoc::from_points(&points);
+    let default_out = if flags.contains_key("seed-baseline") {
+        "BENCH_baseline.json"
+    } else {
+        "BENCH_ci.json"
+    };
+    let out = flags.get("out").map(String::as_str).unwrap_or(default_out);
+    doc.write(out)?;
+    println!("wrote {} points to {out}", doc.points.len());
+    if flags.contains_key("seed-baseline") {
+        println!("baseline seeded — commit {out} to arm the bench gate");
+    }
+    Ok(())
+}
+
+/// `repro bench gate`: compare current points against the committed
+/// baseline; exit non-zero on any regression past the tolerance.
+fn cmd_bench_gate(flags: &HashMap<String, String>) -> popsparse::Result<()> {
+    use popsparse::bench_harness::{gate, BenchDoc};
+    let baseline_path = flags.get("baseline").map(String::as_str).unwrap_or("BENCH_baseline.json");
+    let current_path = flags.get("current").map(String::as_str).unwrap_or("BENCH_ci.json");
+    // A typo'd tolerance must not silently loosen the gate.
+    let tolerance: f64 = match flags.get("tolerance") {
+        Some(v) => v.parse().map_err(|_| {
+            popsparse::Error::Runtime(format!("bad --tolerance '{v}' (want e.g. 0.10)"))
+        })?,
+        None => gate::DEFAULT_TOLERANCE,
+    };
+    let baseline = BenchDoc::load(baseline_path)?;
+    let current = BenchDoc::load(current_path)?;
+    let report = gate::compare(&baseline, &current, tolerance);
+    if report.bootstrap {
+        println!(
+            "bench gate: baseline {baseline_path} is un-seeded (bootstrap) — nothing to \
+             compare.\nseed it with: cargo run --release --bin repro -- bench ci \
+             --seed-baseline\nthen commit {baseline_path} to arm the gate."
+        );
+        return Ok(());
+    }
+    println!(
+        "bench gate: {} points compared at {:.0}% tolerance",
+        report.compared,
+        tolerance * 100.0
+    );
+    for f in &report.regressions {
+        println!(
+            "  REGRESSION {}: {} -> {} (+{:.1}%)",
+            f.key,
+            f.baseline,
+            f.current,
+            (f.current / f.baseline - 1.0) * 100.0
+        );
+    }
+    for key in &report.missing {
+        println!("  MISSING {key}: in the baseline, absent from this run");
+    }
+    for f in &report.improvements {
+        println!(
+            "  improvement {}: {} -> {} ({:.1}%) — re-seed the baseline to lock in",
+            f.key,
+            f.baseline,
+            f.current,
+            (f.current / f.baseline - 1.0) * 100.0
+        );
+    }
+    for key in &report.added {
+        println!("  new point {key}: not in the baseline — re-seed to start gating it");
+    }
+    if !report.passed() {
+        return Err(popsparse::Error::Runtime(format!(
+            "bench gate FAILED: {} regression(s), {} missing point(s)",
+            report.regressions.len(),
+            report.missing.len()
+        )));
+    }
+    println!("bench gate OK");
     Ok(())
 }
 
@@ -339,6 +444,24 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
         snap.decision_flips,
         coordinator.calibration().buckets(),
         coordinator.calibration().observations()
+    );
+    let (plan_ev, plan_rem) = coordinator.plan_cache().plan_eviction_stats();
+    let (memo_ev, memo_rem) = coordinator.plan_cache().memo_eviction_stats();
+    let (cal_ev, cal_rem) = coordinator.calibration().eviction_stats();
+    println!(
+        "bounded maps: {} plans ({plan_ev} evicted, {plan_rem} re-missed), \
+         {} decisions ({memo_ev} evicted, {memo_rem} re-missed), \
+         {} calibration buckets ({cal_ev} evicted, {cal_rem} re-missed), \
+         {} hint + {} churn geometries",
+        coordinator.plan_cache().plans_len(),
+        coordinator.plan_cache().memo_len(),
+        coordinator.calibration().buckets(),
+        coordinator.pattern_hints().len(),
+        coordinator.churn().geometries()
+    );
+    println!(
+        "workload-aware serving: {} churn shifts, {} re-keyed batches -> {} sub-batches",
+        snap.churn_shifts, snap.rekeyed_batches, snap.rekeyed_groups
     );
     println!(
         "latency p50 {:?} p99 {:?} max {:?}; simulated device cycles {}",

@@ -1,0 +1,270 @@
+//! Bounded least-recently-used map: the eviction primitive behind the
+//! serving layer's caches.
+//!
+//! Open-world traffic streams unbounded key populations through the
+//! plan cache, the auto-mode decision memo, the calibration's bucket
+//! factors and the pattern-relevance hints. Paper-scale traces touch a
+//! few dozen keys, so PR-2 could get away with plain `HashMap`s; a
+//! serving deployment cannot — every one of those maps must be capped
+//! without losing the hit rate that makes the amortization story work.
+//! [`LruMap`] is that cap: a `HashMap` for O(1) lookup plus a
+//! `BTreeMap` recency index keyed by a monotone access tick, giving
+//! O(log n) recency updates and strict least-recently-used eviction.
+//!
+//! Accounting answers the two questions an operator asks about a
+//! bounded cache: *how often does it evict* ([`LruMap::evictions`])
+//! and *how often does an eviction come back to bite* — a miss on a
+//! key that was previously evicted ([`LruMap::misses_after_evict`]).
+//! The latter is tracked through a bounded tombstone set (capped at a
+//! small multiple of the capacity and cleared wholesale when full), so
+//! the meta-accounting cannot itself grow unboundedly; it undercounts
+//! after a clear, never overcounts.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::hash::Hash;
+
+/// A bounded map with least-recently-used eviction. Not thread-safe on
+/// its own — callers wrap it in the same `Mutex` they already hold for
+/// the unbounded map it replaces.
+#[derive(Debug)]
+pub struct LruMap<K, V> {
+    capacity: usize,
+    /// Monotone access counter; the recency order.
+    tick: u64,
+    map: HashMap<K, Slot<V>>,
+    /// tick -> key, oldest first. Every live entry has exactly one
+    /// index row (ticks are unique by construction).
+    order: BTreeMap<u64, K>,
+    evictions: u64,
+    misses_after_evict: u64,
+    /// Bounded memory of evicted keys (see module docs).
+    tombstones: HashSet<K>,
+    tombstone_cap: usize,
+}
+
+#[derive(Debug)]
+struct Slot<V> {
+    value: V,
+    tick: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> LruMap<K, V> {
+    /// A map that holds at most `capacity` entries (floored at 1).
+    /// Pass `usize::MAX` for an effectively unbounded map with the
+    /// same accounting surface.
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            capacity,
+            tick: 0,
+            map: HashMap::new(),
+            order: BTreeMap::new(),
+            evictions: 0,
+            misses_after_evict: 0,
+            tombstones: HashSet::new(),
+            tombstone_cap: capacity.saturating_mul(4).clamp(1024, 65536),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Entries evicted so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Misses on keys that were previously evicted — the cost of the
+    /// bound. A high rate relative to [`LruMap::evictions`] means the
+    /// working set exceeds the capacity (thrash); near zero means the
+    /// evicted tail was genuinely cold.
+    pub fn misses_after_evict(&self) -> u64 {
+        self.misses_after_evict
+    }
+
+    fn touch(&mut self, key: &K) {
+        let slot = self.map.get_mut(key).expect("touch on a live key");
+        self.order.remove(&slot.tick);
+        self.tick += 1;
+        slot.tick = self.tick;
+        self.order.insert(self.tick, key.clone());
+    }
+
+    /// Look up `key`, refreshing its recency on a hit (one hash
+    /// lookup — this sits on serving hot paths under a mutex). A miss
+    /// on a previously-evicted key advances the miss-after-evict
+    /// counter.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(key) {
+            Some(slot) => {
+                self.order.remove(&slot.tick);
+                slot.tick = tick;
+                self.order.insert(tick, key.clone());
+                Some(&slot.value)
+            }
+            None => {
+                if self.tombstones.contains(key) {
+                    self.misses_after_evict += 1;
+                }
+                None
+            }
+        }
+    }
+
+    /// Look up `key` without touching recency or accounting (for
+    /// introspection/snapshot paths that must not perturb eviction
+    /// order).
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.map.get(key).map(|s| &s.value)
+    }
+
+    /// Insert (or overwrite) `key`, refreshing its recency, then evict
+    /// least-recently-used entries until the map fits its capacity.
+    pub fn insert(&mut self, key: K, value: V) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(old) = self.map.insert(key.clone(), Slot { value, tick }) {
+            self.order.remove(&old.tick);
+        }
+        self.tombstones.remove(&key);
+        self.order.insert(tick, key);
+        self.evict_to_capacity();
+    }
+
+    /// Get `key`'s value for in-place mutation, inserting
+    /// `default()` first when absent (the miss is accounted like
+    /// [`LruMap::get`]'s). Eviction triggered by the insert can only
+    /// remove *other* entries — the fresh key carries the newest tick.
+    pub fn get_or_insert_with(&mut self, key: K, default: impl FnOnce() -> V) -> &mut V {
+        if !self.map.contains_key(&key) {
+            if self.tombstones.contains(&key) {
+                self.misses_after_evict += 1;
+            }
+            self.insert(key.clone(), default());
+        } else {
+            self.touch(&key);
+        }
+        &mut self.map.get_mut(&key).expect("just inserted or touched").value
+    }
+
+    fn evict_to_capacity(&mut self) {
+        while self.map.len() > self.capacity {
+            let (&oldest_tick, _) = self.order.iter().next().expect("map non-empty");
+            let key = self.order.remove(&oldest_tick).expect("index row exists");
+            self.map.remove(&key);
+            self.evictions += 1;
+            if self.tombstones.len() >= self.tombstone_cap {
+                // Bounded meta-accounting: forget the old tombstones
+                // wholesale (undercounts misses-after-evict from here
+                // on, never overcounts).
+                self.tombstones.clear();
+            }
+            self.tombstones.insert(key);
+        }
+    }
+
+    /// Iterate entries in arbitrary order, without touching recency.
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
+        self.map.iter().map(|(k, s)| (k, &s.value))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut m: LruMap<u32, u32> = LruMap::new(2);
+        m.insert(1, 10);
+        m.insert(2, 20);
+        assert_eq!(m.get(&1), Some(&10)); // 1 is now the most recent
+        m.insert(3, 30); // evicts 2, the LRU
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.get(&2), None);
+        assert_eq!(m.get(&1), Some(&10));
+        assert_eq!(m.get(&3), Some(&30));
+        assert_eq!(m.evictions(), 1);
+    }
+
+    #[test]
+    fn miss_after_evict_is_counted_and_reinsertion_clears_it() {
+        let mut m: LruMap<u32, u32> = LruMap::new(1);
+        m.insert(1, 10);
+        m.insert(2, 20); // evicts 1
+        assert_eq!(m.get(&1), None);
+        assert_eq!(m.misses_after_evict(), 1);
+        assert_eq!(m.get(&99), None, "never-seen keys are plain misses");
+        assert_eq!(m.misses_after_evict(), 1);
+        m.insert(1, 11); // re-admitted: its tombstone is gone
+        m.insert(3, 30); // evicts nothing relevant to the tombstone check
+        assert_eq!(m.get(&2), None);
+        assert_eq!(m.misses_after_evict(), 2, "2 was evicted by the re-admission");
+    }
+
+    #[test]
+    fn overwrite_refreshes_recency_without_eviction() {
+        let mut m: LruMap<u32, u32> = LruMap::new(2);
+        m.insert(1, 10);
+        m.insert(2, 20);
+        m.insert(1, 11); // overwrite: no eviction, 2 becomes LRU
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.evictions(), 0);
+        m.insert(3, 30);
+        assert_eq!(m.get(&2), None, "overwrite must have made 2 the LRU");
+        assert_eq!(m.peek(&1), Some(&11));
+    }
+
+    #[test]
+    fn peek_does_not_perturb_recency() {
+        let mut m: LruMap<u32, u32> = LruMap::new(2);
+        m.insert(1, 10);
+        m.insert(2, 20);
+        assert_eq!(m.peek(&1), Some(&10)); // no touch: 1 stays LRU
+        m.insert(3, 30);
+        assert_eq!(m.get(&1), None, "peek must not have refreshed 1");
+        assert_eq!(m.get(&2), Some(&20));
+    }
+
+    #[test]
+    fn get_or_insert_with_updates_in_place() {
+        let mut m: LruMap<&'static str, Vec<u32>> = LruMap::new(4);
+        m.get_or_insert_with("a", Vec::new).push(1);
+        m.get_or_insert_with("a", Vec::new).push(2);
+        assert_eq!(m.peek(&"a"), Some(&vec![1, 2]));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn stays_bounded_under_churn() {
+        let mut m: LruMap<u64, u64> = LruMap::new(8);
+        for i in 0..10_000u64 {
+            m.insert(i, i);
+            assert!(m.len() <= 8);
+        }
+        assert_eq!(m.evictions(), 10_000 - 8);
+        // The tombstone set is itself bounded.
+        assert!(m.tombstones.len() <= m.tombstone_cap);
+    }
+
+    #[test]
+    fn unbounded_mode_never_evicts() {
+        let mut m: LruMap<u64, u64> = LruMap::new(usize::MAX);
+        for i in 0..1000u64 {
+            m.insert(i, i);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m.evictions(), 0);
+    }
+}

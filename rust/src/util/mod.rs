@@ -2,7 +2,9 @@
 //! carry no external dependencies beyond the `xla` bindings).
 
 pub mod json;
+pub mod lru;
 pub mod rng;
 pub mod timing;
 
+pub use lru::LruMap;
 pub use rng::Rng;

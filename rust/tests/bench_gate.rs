@@ -1,0 +1,52 @@
+//! The bench gate as a tier-1 test: the committed `BENCH_baseline.json`
+//! gates the current build's deterministic cycle-estimate points, so a
+//! cost-model or selection regression fails `cargo test` exactly like
+//! it fails the CI bench job — one comparison implementation
+//! (`bench_harness::gate`), two enforcement points.
+
+use popsparse::bench_harness::{experiments, gate, sweep::Env, BenchDoc};
+
+fn baseline_path() -> std::path::PathBuf {
+    // The test binary runs with the package dir as cwd; the baseline
+    // lives at the repo root one level up.
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_baseline.json")
+}
+
+#[test]
+fn committed_baseline_gates_current_points() {
+    let baseline = BenchDoc::load(baseline_path()).expect("BENCH_baseline.json must be committed");
+    let points = experiments::bench_ci_points(&Env::default());
+    let current = BenchDoc::from_points(&points);
+    let report = gate::compare(&baseline, &current, gate::DEFAULT_TOLERANCE);
+    if report.bootstrap {
+        // Pre-toolchain placeholder: the gate is vacuous until a
+        // maintainer runs `repro bench ci --seed-baseline` and commits
+        // the result. The points themselves must still be gate-ready.
+        assert!(!current.points.is_empty());
+        return;
+    }
+    assert!(
+        report.passed(),
+        "bench gate failed: regressions {:?}, missing {:?}",
+        report
+            .regressions
+            .iter()
+            .map(|f| format!("{} {}->{}", f.key, f.baseline, f.current))
+            .collect::<Vec<_>>(),
+        report.missing
+    );
+}
+
+#[test]
+fn ci_doc_round_trips_byte_stable() {
+    // The file `repro bench ci` writes parses back to equal points and
+    // re-serializes byte-identically — a re-seeded baseline diffs only
+    // where numbers actually moved.
+    let points = experiments::bench_ci_points(&Env::default());
+    let doc = BenchDoc::from_points(&points);
+    let text = doc.to_json();
+    let back = BenchDoc::parse(&text).expect("own output must parse");
+    assert!(back.seeded);
+    assert_eq!(back.points, doc.points);
+    assert_eq!(back.to_json(), text);
+}

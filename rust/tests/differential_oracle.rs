@@ -150,7 +150,12 @@ fn selector_choice_is_within_documented_tolerance() {
 /// so all three jobs flush as a single batch deterministically.
 fn serve_batch_of_three(job: &JobSpec) -> Vec<JobResult> {
     let c = Coordinator::new(
-        Config { workers: 1, max_batch_n: 3 * job.n, max_batch_delay: Duration::from_secs(5) },
+        Config {
+            workers: 1,
+            max_batch_n: 3 * job.n,
+            max_batch_delay: Duration::from_secs(5),
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );
@@ -231,7 +236,12 @@ fn calibration_forced_dynamic_batch_matches_explicit_dynamic() {
         pattern_seed: 21,
     };
     let c = Coordinator::new(
-        Config { workers: 1, max_batch_n: 3 * auto_job.n, max_batch_delay: Duration::from_secs(5) },
+        Config {
+            workers: 1,
+            max_batch_n: 3 * auto_job.n,
+            max_batch_delay: Duration::from_secs(5),
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );

@@ -23,7 +23,12 @@ fn job(mode: Mode, m: usize, n: usize, seed: u64) -> JobSpec {
 #[test]
 fn mixed_workload_completes() {
     let c = Coordinator::new(
-        Config { workers: 4, max_batch_n: 512, max_batch_delay: Duration::from_millis(5) },
+        Config {
+            workers: 4,
+            max_batch_n: 512,
+            max_batch_delay: Duration::from_millis(5),
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );
@@ -73,7 +78,12 @@ fn sparse_jobs_simulate_faster_than_dense_at_scale() {
 #[test]
 fn dynamic_plan_shared_while_patterns_vary() {
     let c = Coordinator::new(
-        Config { workers: 2, max_batch_n: 64, max_batch_delay: Duration::from_millis(1) },
+        Config {
+            workers: 2,
+            max_batch_n: 64,
+            max_batch_delay: Duration::from_millis(1),
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );
@@ -97,7 +107,12 @@ fn auto_trace_cache_hit_rate_beats_ingress_time_resolution() {
     // executed geometry, so every execution lookup is a hit: (6, 0),
     // a strictly higher hit rate on the same trace.
     let c = Coordinator::new(
-        Config { workers: 1, max_batch_n: 64, max_batch_delay: Duration::from_millis(1) },
+        Config {
+            workers: 1,
+            max_batch_n: 64,
+            max_batch_delay: Duration::from_millis(1),
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );
@@ -128,7 +143,12 @@ fn throughput_improves_with_batching() {
     // the batched coordinator must need fewer total simulated cycles
     // (shared device passes) than one-job-per-pass serving.
     let batched = Coordinator::new(
-        Config { workers: 1, max_batch_n: 1024, max_batch_delay: Duration::from_millis(50) },
+        Config {
+            workers: 1,
+            max_batch_n: 1024,
+            max_batch_delay: Duration::from_millis(50),
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );
@@ -140,7 +160,12 @@ fn throughput_improves_with_batching() {
     batched.shutdown();
 
     let single = Coordinator::new(
-        Config { workers: 1, max_batch_n: 32, max_batch_delay: Duration::from_millis(0) },
+        Config {
+            workers: 1,
+            max_batch_n: 32,
+            max_batch_delay: Duration::from_millis(0),
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );

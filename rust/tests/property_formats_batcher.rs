@@ -171,6 +171,7 @@ fn no_job_dropped_across_coordinator_shutdown() {
             workers: 2,
             max_batch_n: usize::MAX,
             max_batch_delay: Duration::from_secs(3600),
+            ..Config::default()
         },
         IpuSpec::default(),
         CostModel::default(),

@@ -105,7 +105,12 @@ fn coordinator_resolves_batches_at_their_combined_n() {
     // selector's decision at the *combined* n=256 — resolution sees
     // the geometry actually executed, not the per-job one.
     let c = Coordinator::new(
-        Config { workers: 2, max_batch_n: 256, max_batch_delay: Duration::from_secs(5) },
+        Config {
+            workers: 2,
+            max_batch_n: 256,
+            max_batch_delay: Duration::from_secs(5),
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );

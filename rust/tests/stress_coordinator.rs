@@ -28,7 +28,12 @@ fn job(mode: Mode, m: usize, n: usize, density: f64, seed: u64) -> JobSpec {
 #[test]
 fn concurrent_mixed_submissions_each_get_exactly_one_reply() {
     let c = Coordinator::new(
-        Config { workers: 4, max_batch_n: 512, max_batch_delay: Duration::from_millis(2) },
+        Config {
+            workers: 4,
+            max_batch_n: 512,
+            max_batch_delay: Duration::from_millis(2),
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );
@@ -97,7 +102,12 @@ fn shutdown_mid_flight_answers_every_responder() {
     // exactly one reply, and shutdown must not deadlock (bounded by
     // the CI timeout on this test binary).
     let c = Coordinator::new(
-        Config { workers: 2, max_batch_n: 1 << 20, max_batch_delay: Duration::from_secs(60) },
+        Config {
+            workers: 2,
+            max_batch_n: 1 << 20,
+            max_batch_delay: Duration::from_secs(60),
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );
@@ -128,7 +138,12 @@ fn memo_miss_resolution_does_not_block_unrelated_ingress() {
     // ingress selections, exactly one worker selection, and the dense
     // stream batches independently.
     let c = Coordinator::new(
-        Config { workers: 2, max_batch_n: 128, max_batch_delay: Duration::from_millis(1) },
+        Config {
+            workers: 2,
+            max_batch_n: 128,
+            max_batch_delay: Duration::from_millis(1),
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );

@@ -1,0 +1,153 @@
+//! Eviction under open-world traffic: every serving-side map stays at
+//! its configured capacity while correctness is untouched — each job
+//! answered exactly once, no panics mid-eviction, evicted state
+//! re-derived (never served stale) on re-admission — and at
+//! paper-scale traffic the default bounds are invisible (hit rate
+//! within tolerance of unbounded). CI runs this file under a bounded
+//! timeout alongside the coordinator stress suite.
+
+use std::time::Duration;
+
+use popsparse::coordinator::{CacheConfig, Config, Coordinator, JobSpec, Mode};
+use popsparse::sim::chip::{CostModel, IpuSpec};
+use popsparse::DType;
+
+fn job(mode: Mode, m: usize, n: usize, density: f64, seed: u64) -> JobSpec {
+    JobSpec { mode, m, k: m, n, b: 16, density, dtype: DType::Fp16, pattern_seed: seed }
+}
+
+#[test]
+fn open_world_trace_keeps_every_map_bounded() {
+    let caches = CacheConfig {
+        plan_capacity: 16,
+        memo_capacity: 8,
+        calibration_capacity: 16,
+        hint_capacity: 8,
+        churn_capacity: 8,
+    };
+    let c = Coordinator::new(
+        Config { workers: 4, max_batch_n: 128, max_batch_delay: Duration::from_millis(1), caches },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    // Two waves over far more distinct geometries than any map holds:
+    // the second wave re-admits keys the first wave's tail evicted,
+    // exercising eviction, tombstone accounting and re-derivation
+    // concurrently on the worker pool.
+    const WAVE: usize = 48;
+    let mut completed = 0usize;
+    for _wave in 0..2 {
+        let rxs: Vec<_> = (0..WAVE)
+            .map(|i| {
+                let mode = [Mode::Dense, Mode::Static, Mode::Dynamic, Mode::Auto][i % 4];
+                // 23 is coprime with the mode/density/n cycles, so
+                // auto traffic alone sweeps 12 distinct geometries —
+                // comfortably past every capacity above.
+                let m = 256 + 16 * (i % 23);
+                let n = [32usize, 64][i % 2];
+                let d = [0.5, 0.25, 0.125][i % 3];
+                c.submit(job(mode, m, n, d, (i % 5) as u64))
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().expect("worker alive").expect("all geometries feasible");
+            completed += 1;
+        }
+    }
+    assert_eq!(completed, 2 * WAVE);
+    let snap = c.metrics();
+    assert_eq!(snap.jobs_completed as usize, completed);
+    assert_eq!(snap.jobs_failed, 0);
+
+    // Every map sits at or under its configured bound...
+    assert!(c.plan_cache().plans_len() <= caches.plan_capacity);
+    assert!(c.plan_cache().memo_len() <= caches.memo_capacity);
+    assert!(c.calibration().buckets() <= caches.calibration_capacity);
+    assert!(c.pattern_hints().len() <= caches.hint_capacity);
+    assert!(c.churn().geometries() <= caches.churn_capacity);
+    // ...and the traffic genuinely overflowed them (the bounds were
+    // exercised, not merely configured).
+    assert!(c.plan_cache().plan_eviction_stats().0 > 0, "plan keys must have overflowed");
+    assert!(c.plan_cache().memo_eviction_stats().0 > 0, "memo keys must have overflowed");
+    assert!(c.calibration().eviction_stats().0 > 0, "calibration buckets must have overflowed");
+    assert!(c.churn().evictions() > 0, "churn geometries must have overflowed");
+    c.shutdown();
+}
+
+#[test]
+fn readmitted_auto_geometry_rederives_its_decision() {
+    // Capacity-1 decision memo: alternating geometries evict each
+    // other, so every arrival is a fresh resolution — stale decisions
+    // are structurally impossible after eviction.
+    let caches = CacheConfig { memo_capacity: 1, ..CacheConfig::default() };
+    let c = Coordinator::new(
+        Config { workers: 1, max_batch_n: 64, max_batch_delay: Duration::from_millis(1), caches },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    let a = || job(Mode::Auto, 512, 64, 0.125, 1);
+    let b = || job(Mode::Auto, 1024, 64, 0.125, 1);
+    let ra1 = c.submit_wait(a()).unwrap();
+    let _rb = c.submit_wait(b()).unwrap();
+    let ra2 = c.submit_wait(a()).unwrap();
+    assert_ne!(ra1.spec.mode, Mode::Auto);
+    assert_eq!(ra1.spec.mode, ra2.spec.mode, "re-derivation reproduces the decision");
+    // Three resolutions, zero memo hits: geometry a's second visit
+    // found its entry evicted and re-derived it.
+    assert_eq!(c.mode_memo_stats(), (0, 3));
+    assert_eq!(c.metrics().worker_selections, 3);
+    let (evictions, misses_after) = c.plan_cache().memo_eviction_stats();
+    assert!(evictions >= 2, "each alternation evicts: {evictions}");
+    assert!(misses_after >= 1, "a's re-admission was a miss-after-evict");
+    c.shutdown();
+}
+
+#[test]
+fn paper_scale_trace_hit_rate_matches_unbounded() {
+    // The acceptance bar for bounding the caches at all: on
+    // paper-scale traffic (a handful of geometries, heavy reuse) the
+    // default capacities must not cost hit rate. The trace is served
+    // twice — default bounds vs effectively unbounded — single-worker
+    // and sequential, so the two runs see identical streams.
+    fn run(caches: CacheConfig) -> ((u64, u64), u64) {
+        let c = Coordinator::new(
+            Config {
+                workers: 1,
+                max_batch_n: 64,
+                max_batch_delay: Duration::from_millis(1),
+                caches,
+            },
+            IpuSpec::default(),
+            CostModel::default(),
+        );
+        for _rep in 0..4 {
+            for &m in &[512usize, 1024, 2048] {
+                for &d in &[0.125, 0.0625] {
+                    for mode in [Mode::Dense, Mode::Static, Mode::Dynamic, Mode::Auto] {
+                        c.submit_wait(job(mode, m, 64, d, 7)).unwrap();
+                    }
+                }
+            }
+        }
+        let stats = c.plan_cache_stats();
+        let evictions = c.plan_cache().plan_eviction_stats().0;
+        c.shutdown();
+        (stats, evictions)
+    }
+    let ((bh, bm), bounded_evictions) = run(CacheConfig::default());
+    let ((uh, um), _) = run(CacheConfig {
+        plan_capacity: usize::MAX,
+        memo_capacity: usize::MAX,
+        calibration_capacity: usize::MAX,
+        hint_capacity: usize::MAX,
+        churn_capacity: usize::MAX,
+    });
+    let rate = |h: u64, m: u64| h as f64 / (h + m).max(1) as f64;
+    let (bounded, unbounded) = (rate(bh, bm), rate(uh, um));
+    assert!(
+        (bounded - unbounded).abs() <= 0.05,
+        "bounded hit rate {bounded:.3} vs unbounded {unbounded:.3}"
+    );
+    assert!(unbounded > 0.5, "the paper trace reuses plans heavily: {unbounded:.3}");
+    assert_eq!(bounded_evictions, 0, "default capacities must not evict at paper scale");
+}
