@@ -88,9 +88,11 @@ fn main() -> popsparse::Result<()> {
     coordinator.shutdown();
 
     // --- 4. Numeric execution of the AOT artifact --------------------
-    // The offline build runs the artifact through the runtime's
-    // reference interpreter (a port of the Pallas kernel's reference
-    // semantics); see rust/src/runtime/mod.rs for the PJRT notes.
+    // The offline build runs the artifact through the runtime, whose
+    // hot path is the native compute layer (popsparse::kernels:
+    // prepared operand + tiled block-specialized SpMM); the naive
+    // reference stays as the oracle below. See rust/src/runtime/mod.rs
+    // for the PJRT notes.
     let rt = Runtime::open_default()?;
     let meta = rt.manifest().get("spmm_quickstart")?.clone();
     let small_mask = patterns::uniform(meta.m, meta.k, meta.b, meta.nnz_b, 7)?;

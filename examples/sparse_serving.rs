@@ -1,14 +1,17 @@
 //! End-to-end serving driver: a block-sparse MLP served with dynamic
 //! batching, real numerics on every request.
 //!
-//! This is the repository's end-to-end validation (DESIGN.md §6): it
+//! This is the repository's end-to-end validation (DESIGN.md §7): it
 //! loads the AOT-compiled two-layer block-sparse MLP artifact
 //! (512→512→512, b=16, d=1/8 — compiled once by `make artifacts` from
 //! the L1 Pallas kernels), serves batched inference requests through
-//! the PJRT CPU runtime, verifies a sample of responses against the
-//! pure-Rust oracle, and reports latency percentiles and throughput.
-//! In parallel it asks the IPU simulator what the same workload would
-//! cost on device, static vs dynamic vs dense.
+//! the runtime — whose hot path is the native compute layer
+//! (`popsparse::kernels`): prepared operands, tiled block kernels,
+//! ping-ponged activation buffers — verifies a sample of responses
+//! against the pure-Rust oracle, and reports latency percentiles and
+//! measured throughput. In parallel it asks the IPU simulator what
+//! the same workload would cost on device, static vs dynamic vs
+//! dense.
 //!
 //! Run with: `make artifacts && cargo run --release --example sparse_serving`
 
@@ -130,9 +133,13 @@ fn main() -> popsparse::Result<()> {
     lats.sort_unstable();
     let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
     println!("\nserved {total_requests} requests in {batches} batches, wall {wall:?}");
+    // Useful-FLOP throughput of the numeric path (2 sparse layers per
+    // batch at the artifact's batch slot, nnz-only convention).
+    let kernel_flops = 2.0 * (l0.nnz() + l1.nnz()) as f64 * slot_n as f64 * batches as f64;
     println!(
-        "throughput: {:.0} req/s | latency p50 {:?} p99 {:?}",
+        "throughput: {:.0} req/s, {:.2} GFLOP/s end-to-end | latency p50 {:?} p99 {:?}",
         total_requests as f64 / wall.as_secs_f64(),
+        kernel_flops / wall.as_secs_f64() / 1e9,
         pct(0.5),
         pct(0.99)
     );

@@ -1,17 +1,21 @@
 //! Bench harness: regenerates every table and figure of the paper's
-//! evaluation section (see DESIGN.md §6 for the experiment index).
+//! evaluation section (see DESIGN.md §7 for the experiment index).
 //!
 //! Each experiment function returns [`report::Table`]s that print as
 //! aligned markdown and can be written as CSV. The CLI (`repro bench
 //! <experiment>`) and the `rust/benches/*` targets drive these. The
 //! [`gate`] module compares the deterministic cycle-estimate points
 //! of `repro bench ci` against a committed baseline — the CI
-//! perf-regression gate (DESIGN.md §4.4).
+//! perf-regression gate (DESIGN.md §4.4). The [`wall`] module is the
+//! measured-wall-time arm (`repro bench wall`): naive-ref vs
+//! prepared-tiled vs parallel kernel GFLOP/s, reported but never
+//! gated (machine-dependent).
 
 pub mod experiments;
 pub mod gate;
 pub mod report;
 pub mod sweep;
+pub mod wall;
 
 pub use gate::{BenchDoc, GateReport};
 pub use report::Table;

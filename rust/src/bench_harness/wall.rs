@@ -1,0 +1,242 @@
+//! Wall-time benchmark arm (`repro bench wall`): measured GFLOP/s of
+//! the naive reference kernels against the prepared-tiled and
+//! row-panel-parallel kernels of [`crate::kernels`].
+//!
+//! Everything else in the bench harness reports *simulated device
+//! cycles*; this arm times the actual f32 arithmetic on the host —
+//! the one performance axis measurable on this machine, and the
+//! ROADMAP's "as fast as the hardware allows" made concrete. Three
+//! arms per sweep point:
+//!
+//! * **naive-ref** — [`BlockCoo::spmm_dense`] (and
+//!   [`crate::runtime::dense_ref`] for the dense table): the
+//!   allocation-heavy triple loop that used to be the serving hot
+//!   path, kept as the differential oracle;
+//! * **prepared-tiled** — [`crate::kernels::spmm`] over a
+//!   [`PreparedBsr`], single-threaded;
+//! * **parallel** — [`crate::kernels::spmm_parallel`] across
+//!   nnz-balanced row panels.
+//!
+//! Each point is oracle-checked (tolerance contract, DESIGN.md §5)
+//! before it is timed. Wall-time numbers are machine-dependent and
+//! therefore **reported, never gated** — the CI bench gate compares
+//! only the deterministic cycle-estimate points (DESIGN.md §4.4);
+//! recorded sweeps live in EXPERIMENTS.md §Wall-time.
+//!
+//! [`BlockCoo::spmm_dense`]: crate::sparse::coo::BlockCoo::spmm_dense
+
+use std::time::Duration;
+
+use crate::bench_harness::report::{f2, Table};
+use crate::bench_harness::sweep::seed_for;
+use crate::error::Result;
+use crate::kernels::{self, fill_pseudo, PreparedBsr};
+use crate::runtime;
+use crate::sparse::patterns;
+use crate::util::timing;
+
+/// One sweep point of the sparse wall benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct WallCase {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub b: usize,
+    pub inv_d: usize,
+}
+
+impl WallCase {
+    const fn new(m: usize, k: usize, n: usize, b: usize, inv_d: usize) -> Self {
+        Self { m, k, n, b, inv_d }
+    }
+}
+
+/// The full sweep: paper-scale shapes around the headline point
+/// (m = k = 4096, n = 512, b = 16, d = 1/16 — Table 3's geometry),
+/// block-size and density scaling, and an odd `n` so the tile
+/// remainder path is measured, not just tested.
+pub fn paper_cases() -> Vec<WallCase> {
+    vec![
+        WallCase::new(1024, 1024, 512, 16, 16),
+        WallCase::new(2048, 2048, 512, 16, 16),
+        WallCase::new(4096, 4096, 512, 4, 16),
+        WallCase::new(4096, 4096, 512, 8, 16),
+        WallCase::new(4096, 4096, 512, 16, 16),
+        WallCase::new(4096, 4096, 512, 16, 32),
+        WallCase::new(4096, 4096, 509, 16, 16),
+    ]
+}
+
+/// Tiny shapes for the CI smoke run: every kernel path (specialized,
+/// generic b = 1, remainder tiles, parallel) exercised end-to-end in
+/// well under a second.
+pub fn smoke_cases() -> Vec<WallCase> {
+    vec![
+        WallCase::new(256, 256, 64, 16, 8),
+        WallCase::new(256, 256, 33, 4, 8),
+        WallCase::new(128, 128, 16, 1, 8),
+    ]
+}
+
+/// The sparse sweep: naive-ref vs prepared-tiled vs parallel GFLOP/s
+/// (nnz-only FLOPs) per case, with speedups over naive.
+pub fn spmm_table(cases: &[WallCase], budget: Duration, threads: usize) -> Result<Table> {
+    let mut t = Table::new(
+        format!(
+            "Wall-time SpMM — naive-ref vs prepared-tiled vs parallel ({threads} threads); \
+             GFLOP/s on nnz, machine-dependent, not gated"
+        ),
+        &[
+            "m=k",
+            "n",
+            "b",
+            "density",
+            "nnz",
+            "naive GF/s",
+            "tiled GF/s",
+            "par GF/s",
+            "tiled x",
+            "par x",
+        ],
+    );
+    timing::print_header();
+    for case in cases {
+        let d = 1.0 / case.inv_d as f64;
+        let seed = seed_for(case.m, case.b, case.inv_d);
+        let mask = patterns::with_density(case.m, case.k, case.b, d, seed)?;
+        let coo = patterns::with_values(&mask, seed);
+        let prep = PreparedBsr::from_coo(&coo);
+        let mut x = vec![0f32; case.k * case.n];
+        fill_pseudo(&mut x, seed ^ 1);
+        let mut y = vec![0f32; case.m * case.n];
+        let flops = 2.0 * coo.nnz() as f64 * case.n as f64;
+
+        // Oracle check before timing: the measured kernels must be the
+        // correct kernels.
+        let expect = coo.spmm_dense(&x, case.n)?;
+        kernels::spmm(&prep, &x, case.n, &mut y)?;
+        for (i, (&u, &v)) in y.iter().zip(&expect).enumerate() {
+            assert!(
+                kernels::close_enough(u, v),
+                "tiled kernel diverged from oracle at {i}: {u} vs {v}"
+            );
+        }
+
+        let tag = format!("m{} n{} b{} d1/{}", case.m, case.n, case.b, case.inv_d);
+        let naive = timing::bench(&format!("spmm naive   {tag}"), budget, 2, || {
+            let _ = coo.spmm_dense(&x, case.n);
+        });
+        let tiled = timing::bench(&format!("spmm tiled   {tag}"), budget, 2, || {
+            let _ = kernels::spmm(&prep, &x, case.n, &mut y);
+        });
+        let par = timing::bench(&format!("spmm parallel {tag}"), budget, 2, || {
+            let _ = kernels::spmm_parallel(&prep, &x, case.n, &mut y, threads);
+        });
+        let gf = |mean_ns: f64| flops / mean_ns; // flops/ns == GFLOP/s
+        let (g_naive, g_tiled, g_par) =
+            (gf(naive.mean_ns()), gf(tiled.mean_ns()), gf(par.mean_ns()));
+        t.row(vec![
+            case.m.to_string(),
+            case.n.to_string(),
+            case.b.to_string(),
+            format!("1/{}", case.inv_d),
+            coo.nnz_blocks().to_string(),
+            f2(g_naive),
+            f2(g_tiled),
+            f2(g_par),
+            format!("{:.1}x", g_tiled / g_naive),
+            format!("{:.1}x", g_par / g_naive),
+        ]);
+    }
+    Ok(t)
+}
+
+/// The dense companion: naive `dense_ref` (fresh output `Vec` per
+/// call) vs the `ikj`-tiled kernel with a reused buffer.
+pub fn dense_table(smoke: bool, budget: Duration) -> Result<Table> {
+    let mut t = Table::new(
+        "Wall-time dense matmul — naive-ref vs ikj-tiled; GFLOP/s, machine-dependent, not gated",
+        &["m=k", "n", "naive GF/s", "tiled GF/s", "tiled x"],
+    );
+    let shapes: &[(usize, usize)] =
+        if smoke { &[(128, 32)] } else { &[(512, 512), (1024, 512), (2048, 512)] };
+    for &(m, n) in shapes {
+        let k = m;
+        let mut a = vec![0f32; m * k];
+        let mut x = vec![0f32; k * n];
+        fill_pseudo(&mut a, 11);
+        fill_pseudo(&mut x, 12);
+        let mut y = vec![0f32; m * n];
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+
+        let expect = runtime::dense_ref(&a, &x, m, k, n);
+        kernels::dense::matmul(&a, &x, m, k, n, &mut y)?;
+        for (i, (&u, &v)) in y.iter().zip(&expect).enumerate() {
+            assert!(
+                kernels::close_enough(u, v),
+                "tiled dense kernel diverged from oracle at {i}: {u} vs {v}"
+            );
+        }
+
+        let naive = timing::bench(&format!("dense naive  m{m} n{n}"), budget, 2, || {
+            let _ = runtime::dense_ref(&a, &x, m, k, n);
+        });
+        let tiled = timing::bench(&format!("dense tiled  m{m} n{n}"), budget, 2, || {
+            let _ = kernels::dense::matmul(&a, &x, m, k, n, &mut y);
+        });
+        let gf = |mean_ns: f64| flops / mean_ns;
+        let (g_naive, g_tiled) = (gf(naive.mean_ns()), gf(tiled.mean_ns()));
+        t.row(vec![
+            m.to_string(),
+            n.to_string(),
+            f2(g_naive),
+            f2(g_tiled),
+            format!("{:.1}x", g_tiled / g_naive),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Both wall tables. `smoke` selects the tiny CI shapes and a short
+/// per-arm budget; the full sweep spends ~1.5 s per arm per point.
+pub fn wall_tables(smoke: bool, threads: usize) -> Result<Vec<Table>> {
+    let (cases, budget) = if smoke {
+        (smoke_cases(), Duration::from_millis(40))
+    } else {
+        (paper_cases(), Duration::from_millis(1500))
+    };
+    Ok(vec![spmm_table(&cases, budget, threads)?, dense_table(smoke, budget)?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_tables_build_and_check_oracles() {
+        // The smoke sweep runs the full measurement path (including
+        // the in-bench oracle assertions) in test time.
+        let tables =
+            wall_tables(true, kernels::default_threads().min(2)).expect("smoke sweep runs");
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].rows.len(), smoke_cases().len());
+        assert_eq!(tables[1].rows.len(), 1);
+        for row in &tables[0].rows {
+            let naive: f64 = row[5].parse().expect("numeric GF/s");
+            assert!(naive > 0.0);
+        }
+    }
+
+    #[test]
+    fn case_sets_cover_the_acceptance_point() {
+        // The headline acceptance point (m = k = 4096, n = 512,
+        // b = 16, d = 1/16) must stay in the full sweep.
+        assert!(paper_cases()
+            .iter()
+            .any(|c| c.m == 4096 && c.n == 512 && c.b == 16 && c.inv_d == 16));
+        // And the smoke set must exercise specialized, generic and
+        // remainder paths.
+        assert!(smoke_cases().iter().any(|c| c.b == 1));
+        assert!(smoke_cases().iter().any(|c| c.n % kernels::N_TILE != 0));
+    }
+}

@@ -2,7 +2,10 @@
 //! selector accounting — which mode won, where selection ran
 //! (ingress vs worker), how often calibration flipped a decision, and
 //! how close the raw and calibrated cycle estimates were to the
-//! simulated outcome.
+//! simulated outcome. Since PR 4 also the *wall-clock* arm: measured
+//! native-kernel execution time (histogram reservoir + aggregate
+//! GFLOP/s — the first throughput number that is real time, not
+//! simulated cycles) and worker queue-wait time.
 
 use std::sync::Mutex;
 use std::time::Duration;
@@ -56,6 +59,15 @@ struct Inner {
     // Re-keying accounting (seedless auto batches resolving static).
     rekeyed_batches: u64,
     rekeyed_groups: u64,
+    // Native-kernel execution accounting (numeric serving arm).
+    kernel_execs: u64,
+    kernel_failures: u64,
+    kernel_wall_ns: Vec<u64>,
+    kernel_wall_total_ns: u64,
+    kernel_flops_sum: f64,
+    // Worker queue-wait accounting.
+    queue_waits: u64,
+    queue_wait_ns: u64,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -99,6 +111,28 @@ pub struct Snapshot {
     pub worker_selections: u64,
     /// Total wall-clock spent in selection (planning candidates).
     pub selection_time: Duration,
+    /// Native-kernel executions performed by workers (numeric serving
+    /// arm; 0 unless `Config.numeric` is on).
+    pub kernel_execs: u64,
+    /// Native-kernel executions that errored (shape mismatches — a
+    /// code bug, surfaced here rather than failing the already-served
+    /// job).
+    pub kernel_failures: u64,
+    /// Total measured kernel wall time.
+    pub kernel_wall_total: Duration,
+    /// Kernel wall-time percentiles over the histogram reservoir.
+    pub kernel_wall_p50: Duration,
+    pub kernel_wall_p99: Duration,
+    /// Achieved numeric throughput: total kernel FLOPs over total
+    /// kernel wall time (nnz-only convention for sparse jobs), in
+    /// GFLOP/s. This is the serving-throughput observability the
+    /// simulated-cycle metrics cannot provide.
+    pub kernel_gflops: f64,
+    /// Times a worker blocked waiting on the shared work queue.
+    pub queue_waits: u64,
+    /// Total worker time spent blocked on the work queue (idle wait +
+    /// queue-lock contention — the starvation/contention signal).
+    pub queue_wait_total: Duration,
     pub p50: Duration,
     pub p99: Duration,
     pub max: Duration,
@@ -197,17 +231,45 @@ impl Metrics {
         g.rekeyed_groups += groups as u64;
     }
 
+    /// Record one native-kernel execution: measured wall time and the
+    /// FLOPs it performed (nnz-only for sparse). Wall samples land in
+    /// the bounded histogram reservoir behind the kernel percentiles.
+    pub fn record_kernel(&self, wall: Duration, flops: f64) {
+        let mut g = self.inner.lock().expect("metrics poisoned");
+        g.kernel_execs += 1;
+        g.kernel_wall_total_ns += wall.as_nanos() as u64;
+        g.kernel_flops_sum += flops;
+        if g.kernel_wall_ns.len() < RESERVOIR {
+            g.kernel_wall_ns.push(wall.as_nanos() as u64);
+        }
+    }
+
+    /// Record a native-kernel execution failure.
+    pub fn record_kernel_failure(&self) {
+        self.inner.lock().expect("metrics poisoned").kernel_failures += 1;
+    }
+
+    /// Record one worker wait on the shared work queue.
+    pub fn record_queue_wait(&self, wait: Duration) {
+        let mut g = self.inner.lock().expect("metrics poisoned");
+        g.queue_waits += 1;
+        g.queue_wait_ns += wait.as_nanos() as u64;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().expect("metrics poisoned");
         let mut lat = g.latencies_ns.clone();
         lat.sort_unstable();
-        let pct = |p: f64| -> Duration {
-            if lat.is_empty() {
+        let pct_of = |sorted: &[u64], p: f64| -> Duration {
+            if sorted.is_empty() {
                 return Duration::ZERO;
             }
-            let idx = ((lat.len() - 1) as f64 * p) as usize;
-            Duration::from_nanos(lat[idx])
+            let idx = ((sorted.len() - 1) as f64 * p) as usize;
+            Duration::from_nanos(sorted[idx])
         };
+        let pct = |p: f64| pct_of(&lat, p);
+        let mut kernel = g.kernel_wall_ns.clone();
+        kernel.sort_unstable();
         Snapshot {
             jobs_completed: g.jobs_completed,
             jobs_failed: g.jobs_failed,
@@ -238,6 +300,18 @@ impl Metrics {
             ingress_selections: g.ingress_selections,
             worker_selections: g.worker_selections,
             selection_time: Duration::from_nanos(g.selection_ns),
+            kernel_execs: g.kernel_execs,
+            kernel_failures: g.kernel_failures,
+            kernel_wall_total: Duration::from_nanos(g.kernel_wall_total_ns),
+            kernel_wall_p50: pct_of(&kernel, 0.50),
+            kernel_wall_p99: pct_of(&kernel, 0.99),
+            kernel_gflops: if g.kernel_wall_total_ns == 0 {
+                0.0
+            } else {
+                g.kernel_flops_sum / (g.kernel_wall_total_ns as f64 / 1e9) / 1e9
+            },
+            queue_waits: g.queue_waits,
+            queue_wait_total: Duration::from_nanos(g.queue_wait_ns),
             p50: pct(0.50),
             p99: pct(0.99),
             max: pct(1.0),
@@ -281,6 +355,31 @@ mod tests {
         assert_eq!((s.rekeyed_batches, s.rekeyed_groups), (0, 0));
         assert_eq!((s.ingress_selections, s.worker_selections), (0, 0));
         assert_eq!(s.selection_time, Duration::ZERO);
+        assert_eq!((s.kernel_execs, s.kernel_failures), (0, 0));
+        assert_eq!(s.kernel_wall_total, Duration::ZERO);
+        assert_eq!(s.kernel_gflops, 0.0);
+        assert_eq!((s.queue_waits, s.queue_wait_total), (0, Duration::ZERO));
+    }
+
+    #[test]
+    fn kernel_and_queue_wait_accounting() {
+        let m = Metrics::new();
+        // Two kernel runs: 2 GFLOP in 1 ms, 2 GFLOP in 3 ms -> 4 GFLOP
+        // over 4 ms = 1000 GFLOP/s aggregate.
+        m.record_kernel(Duration::from_millis(1), 2e9);
+        m.record_kernel(Duration::from_millis(3), 2e9);
+        m.record_kernel_failure();
+        m.record_queue_wait(Duration::from_micros(40));
+        m.record_queue_wait(Duration::from_micros(60));
+        let s = m.snapshot();
+        assert_eq!(s.kernel_execs, 2);
+        assert_eq!(s.kernel_failures, 1);
+        assert_eq!(s.kernel_wall_total, Duration::from_millis(4));
+        assert_eq!(s.kernel_wall_p50, Duration::from_millis(1));
+        assert!(s.kernel_wall_p99 >= s.kernel_wall_p50);
+        assert!((s.kernel_gflops - 1000.0).abs() < 1e-6, "{}", s.kernel_gflops);
+        assert_eq!(s.queue_waits, 2);
+        assert_eq!(s.queue_wait_total, Duration::from_micros(100));
     }
 
     #[test]

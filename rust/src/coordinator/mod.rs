@@ -35,11 +35,22 @@
 //! pattern, which is pattern-specific work by design), and a memo
 //! miss costs worker time instead of head-of-line blocking the
 //! ingress thread. Every serving-side map — plans, decision memo,
-//! calibration buckets, churn EWMAs, pattern hints — is bounded by
-//! LRU eviction ([`CacheConfig`]). [`Metrics`] tracks the decisions,
-//! where selection ran, calibration decision flips, churn shifts,
-//! re-key splits, and how raw vs calibration-corrected cycle
-//! estimates compare to the simulated outcome.
+//! prepared numeric operands, calibration buckets, churn EWMAs,
+//! pattern hints — is bounded by LRU eviction ([`CacheConfig`]).
+//! [`Metrics`] tracks the decisions, where selection ran, calibration
+//! decision flips, churn shifts, re-key splits, and how raw vs
+//! calibration-corrected cycle estimates compare to the simulated
+//! outcome.
+//!
+//! With [`Config::numeric`] on, workers additionally execute every
+//! batch's actual f32 kernel through the native compute layer
+//! ([`crate::kernels`]) — prepared operands cached per pattern in the
+//! [`PlanCache`], measured kernel wall time and achieved GFLOP/s in
+//! [`Metrics`] — so serving throughput is observable in real time,
+//! not only simulated cycles (DESIGN.md §5). Workers pull batches
+//! from a condvar-backed [`WorkQueue`] (lock held only across
+//! push/pop, never across a blocking wait) and their queue-wait time
+//! is metered.
 
 pub mod batcher;
 pub mod metrics;
@@ -59,8 +70,10 @@ pub use request::{JobResult, JobSpec, Mode, PatternKey, PlanKey, SelectorKey};
 use crate::engine::calibration::DEFAULT_ALPHA;
 use crate::engine::{BackendKind, Calibration, ChurnTracker};
 use crate::error::{Error, Result};
+use crate::kernels::Scratch;
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::patterns;
+use crate::util::WorkQueue;
 
 /// Capacities of every bounded serving-side map (entries, LRU each).
 /// Defaults sit far above paper-scale working sets, so bounded and
@@ -72,6 +85,9 @@ pub struct CacheConfig {
     pub plan_capacity: usize,
     /// Memoized auto-mode decisions ([`PlanCache`]).
     pub memo_capacity: usize,
+    /// Prepared numeric operands ([`crate::kernels::PreparedBsr`] in
+    /// the [`PlanCache`]).
+    pub prepared_capacity: usize,
     /// Calibration (backend, geometry-bucket) factors.
     pub calibration_capacity: usize,
     /// Pattern-relevance hints for batch keying ([`PatternHints`]).
@@ -85,6 +101,7 @@ impl Default for CacheConfig {
         Self {
             plan_capacity: plan_cache::DEFAULT_PLAN_CAPACITY,
             memo_capacity: plan_cache::DEFAULT_MODE_MEMO_CAPACITY,
+            prepared_capacity: plan_cache::DEFAULT_PREPARED_CAPACITY,
             calibration_capacity: crate::engine::calibration::DEFAULT_CALIBRATION_CAPACITY,
             hint_capacity: batcher::DEFAULT_HINT_CAPACITY,
             churn_capacity: crate::engine::churn::DEFAULT_CHURN_CAPACITY,
@@ -102,6 +119,15 @@ pub struct Config {
     pub max_batch_delay: Duration,
     /// Bounds for the serving-side maps.
     pub caches: CacheConfig,
+    /// Execute every batch numerically through the native kernel layer
+    /// ([`crate::kernels`]) after the cycle simulation, timing the
+    /// kernel and feeding the [`Metrics`] wall-time histogram — the
+    /// serving-throughput observability arm. Sparse operands come from
+    /// the plan cache's prepared slot, so steady-state traffic
+    /// performs zero `BlockCoo -> PreparedBsr` conversions. Off by
+    /// default: simulated-only serving (cycle benches, latency tests)
+    /// stays numeric-free.
+    pub numeric: bool,
 }
 
 impl Default for Config {
@@ -111,6 +137,7 @@ impl Default for Config {
             max_batch_n: 4096,
             max_batch_delay: Duration::from_millis(2),
             caches: CacheConfig::default(),
+            numeric: false,
         }
     }
 }
@@ -129,6 +156,7 @@ pub struct Coordinator {
     calibration: Arc<Calibration>,
     churn: Arc<ChurnTracker>,
     hints: Arc<PatternHints>,
+    work: Arc<WorkQueue<WorkItem>>,
     ingress: Option<mpsc::Sender<(JobSpec, Responder)>>,
     ingress_thread: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -143,6 +171,7 @@ impl Coordinator {
             cm,
             caches.plan_capacity,
             caches.memo_capacity,
+            caches.prepared_capacity,
         ));
         let metrics = Arc::new(Metrics::new());
         let calibration =
@@ -152,8 +181,11 @@ impl Coordinator {
         let shutting_down = Arc::new(AtomicBool::new(false));
 
         let (ingress_tx, ingress_rx) = mpsc::channel::<(JobSpec, Responder)>();
-        let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
-        let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
+        // Workers share a condvar-backed MPMC queue: the lock is held
+        // only for the push/pop itself, never across a blocking wait
+        // (the old `Mutex<mpsc::Receiver>` held it through `recv`, so
+        // wakeups serialized through lock handoff).
+        let work = Arc::new(WorkQueue::<WorkItem>::new());
 
         // Ingress thread: runs the batcher, nothing else. Auto-mode
         // jobs pass through unresolved (provisional batch key); no
@@ -163,7 +195,7 @@ impl Coordinator {
         // map — an O(1) read per push, no planners behind it.
         let batch_cfg = config.clone();
         let batch_metrics = metrics.clone();
-        let batch_tx = work_tx.clone();
+        let batch_queue = work.clone();
         let batch_hints = hints.clone();
         let ingress_thread = std::thread::spawn(move || {
             let mut batcher: Batcher<Responder> = Batcher::with_hints(
@@ -177,7 +209,7 @@ impl Coordinator {
                     Ok((job, responder)) => {
                         if let Some(batch) = batcher.push(job, responder) {
                             batch_metrics.record_batch(batch.jobs.len());
-                            let _ = batch_tx.send(WorkItem::Batch(batch));
+                            batch_queue.push(WorkItem::Batch(batch));
                         }
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -185,53 +217,62 @@ impl Coordinator {
                 }
                 for batch in batcher.poll(Instant::now()) {
                     batch_metrics.record_batch(batch.jobs.len());
-                    let _ = batch_tx.send(WorkItem::Batch(batch));
+                    batch_queue.push(WorkItem::Batch(batch));
                 }
             }
             for batch in batcher.drain() {
                 batch_metrics.record_batch(batch.jobs.len());
-                let _ = batch_tx.send(WorkItem::Batch(batch));
+                batch_queue.push(WorkItem::Batch(batch));
             }
-            drop(batch_tx);
+            // No further batches can arrive: workers drain the queue
+            // and exit.
+            batch_queue.close();
         });
 
-        // Worker pool: batch-time resolution + execution.
+        // Worker pool: batch-time resolution + execution. Each worker
+        // owns a kernel scratch (reusable operand/output buffers) so
+        // the numeric arm allocates nothing at steady state.
+        let numeric = config.numeric;
         let mut workers = Vec::with_capacity(config.workers);
         for _ in 0..config.workers.max(1) {
-            let rx = work_rx.clone();
+            let queue = work.clone();
             let cache = cache.clone();
             let metrics = metrics.clone();
             let calibration = calibration.clone();
             let churn = churn.clone();
             let hints = hints.clone();
-            workers.push(std::thread::spawn(move || loop {
-                let item = {
-                    let guard = rx.lock().expect("work queue poisoned");
-                    guard.recv()
-                };
-                match item {
-                    Ok(WorkItem::Batch(batch)) => {
-                        process_batch(batch, &cache, &calibration, &churn, &hints, &metrics)
+            workers.push(std::thread::spawn(move || {
+                let mut scratch = crate::kernels::Scratch::default();
+                loop {
+                    let (item, waited) = queue.pop();
+                    metrics.record_queue_wait(waited);
+                    match item {
+                        Some(WorkItem::Batch(batch)) => process_batch(
+                            batch,
+                            &cache,
+                            &calibration,
+                            &churn,
+                            &hints,
+                            &metrics,
+                            numeric.then_some(&mut scratch),
+                        ),
+                        None => break,
                     }
-                    Err(_) => break,
                 }
             }));
         }
-        let coordinator = Self {
+        Self {
             cache,
             metrics,
             calibration,
             churn,
             hints,
+            work,
             ingress: Some(ingress_tx),
             ingress_thread: Some(ingress_thread),
             workers,
             shutting_down,
-        };
-        // work_tx dropped here: workers exit when ingress thread ends
-        // and all batch senders are gone.
-        drop(work_tx);
-        coordinator
+        }
     }
 
     /// Submit a job; the returned channel yields its result.
@@ -310,6 +351,10 @@ impl Coordinator {
         if let Some(t) = self.ingress_thread.take() {
             let _ = t.join();
         }
+        // The ingress thread closes the queue on its way out; closing
+        // again is an idempotent no-op, and it keeps the worker joins
+        // below from hanging if that thread ever died abnormally.
+        self.work.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -332,6 +377,7 @@ impl Drop for Coordinator {
 /// it is split back into per-pattern sub-batches, each executed
 /// against its own pattern — one static pass must never impose one
 /// job's pattern on another's.
+#[allow(clippy::too_many_arguments)]
 fn process_batch(
     batch: Batch<Responder>,
     cache: &PlanCache,
@@ -339,6 +385,7 @@ fn process_batch(
     churn: &ChurnTracker,
     hints: &PatternHints,
     metrics: &Metrics,
+    mut numeric: Option<&mut Scratch>,
 ) {
     let t0 = Instant::now();
     // The representative job: the batch's shared geometry at the
@@ -419,13 +466,24 @@ fn process_batch(
                     cache,
                     calibration,
                     metrics,
+                    numeric.as_deref_mut(),
                 );
             }
             return;
         }
     }
 
-    execute_group(&rep, batch.jobs, batch.total_n, auto_estimates, t0, cache, calibration, metrics);
+    execute_group(
+        &rep,
+        batch.jobs,
+        batch.total_n,
+        auto_estimates,
+        t0,
+        cache,
+        calibration,
+        metrics,
+        numeric,
+    );
 }
 
 /// Plan, simulate and answer one homogeneous group of jobs sharing
@@ -443,6 +501,7 @@ fn execute_group(
     cache: &PlanCache,
     calibration: &Calibration,
     metrics: &Metrics,
+    numeric: Option<&mut Scratch>,
 ) {
     let planned = cache.get_or_plan(rep);
     match planned {
@@ -491,6 +550,34 @@ fn execute_group(
             // refresh this (backend, geometry-bucket) EWMA.
             if let Some(kind) = BackendKind::of_mode(rep.mode) {
                 calibration.observe(kind, rep, plan_estimate, cycles);
+            }
+            // Numeric arm (Config.numeric): run the group's actual f32
+            // kernel at the combined batch geometry and record the
+            // measured wall time — sparse operands come from the plan
+            // cache's prepared slot, so a steady-state pattern costs
+            // zero conversions here. Single-threaded per worker: the
+            // pool itself is the serving-side parallelism; the
+            // row-panel parallel path is for dedicated execution
+            // (`repro bench wall`). A kernel error cannot un-serve the
+            // already-simulated jobs, so it lands in its own counter.
+            if let Some(scratch) = numeric {
+                let run = match rep.mode {
+                    Mode::Static | Mode::Dynamic => {
+                        cache.get_or_prepare(rep).and_then(|(prepared, _)| {
+                            crate::engine::backends::execute_kernel(
+                                rep,
+                                Some(prepared.as_ref()),
+                                scratch,
+                                1,
+                            )
+                        })
+                    }
+                    _ => crate::engine::backends::execute_kernel(rep, None, scratch, 1),
+                };
+                match run {
+                    Ok(r) => metrics.record_kernel(r.wall, r.flops),
+                    Err(_) => metrics.record_kernel_failure(),
+                }
             }
             let service_time = t0.elapsed();
             let spec = cache.spec();
@@ -612,6 +699,43 @@ mod tests {
         let res = c.submit_wait(bad);
         assert!(res.is_err());
         assert_eq!(c.metrics().jobs_failed, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn numeric_serving_times_kernels_and_reuses_prepared_operands() {
+        let c = Coordinator::new(
+            Config { workers: 1, numeric: true, ..Config::default() },
+            IpuSpec::default(),
+            CostModel::default(),
+        );
+        // Two static batches and a dynamic one, all realizing the same
+        // pattern: one conversion, then prepared-operand hits only.
+        let _ = c.submit_wait(job(Mode::Static, 64, 7)).unwrap();
+        let _ = c.submit_wait(job(Mode::Static, 64, 7)).unwrap();
+        let _ = c.submit_wait(job(Mode::Dynamic, 64, 7)).unwrap();
+        let snap = c.metrics();
+        assert_eq!(snap.kernel_execs, 3, "every batch executes numerically");
+        assert_eq!(snap.kernel_failures, 0);
+        assert!(snap.kernel_wall_total > Duration::ZERO);
+        assert!(snap.kernel_gflops > 0.0, "wall-time throughput observable");
+        assert!(snap.queue_waits >= 3, "every pop meters its wait");
+        assert_eq!(
+            c.plan_cache().prepared_conversions(),
+            1,
+            "steady-state serving converts each pattern exactly once"
+        );
+        assert_eq!(c.plan_cache().prepared_stats(), (2, 1));
+        c.shutdown();
+    }
+
+    #[test]
+    fn simulated_only_serving_stays_numeric_free() {
+        let c = Coordinator::new(Config::default(), IpuSpec::default(), CostModel::default());
+        let _ = c.submit_wait(job(Mode::Static, 64, 7)).unwrap();
+        let snap = c.metrics();
+        assert_eq!(snap.kernel_execs, 0, "numeric arm is opt-in");
+        assert_eq!(c.plan_cache().prepared_conversions(), 0);
         c.shutdown();
     }
 

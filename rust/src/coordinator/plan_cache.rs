@@ -6,8 +6,11 @@
 //! *any* pattern under their `d_max` (the paper's headline property);
 //! static plans are pattern-specific.
 //!
-//! Both maps this type owns — compiled plans and memoized auto-mode
-//! resolutions — are bounded by LRU eviction
+//! All three maps this type owns — compiled plans, memoized auto-mode
+//! resolutions, and prepared numeric operands
+//! ([`crate::kernels::PreparedBsr`], converted once per realized
+//! pattern so the wall-time serving arm never re-lays-out a cached
+//! pattern's values) — are bounded by LRU eviction
 //! ([`crate::util::LruMap`]): open-world traffic streams unbounded
 //! key populations (static plan keys in particular carry the pattern
 //! seed), and an unbounded cache is a memory leak with a hit rate.
@@ -21,7 +24,7 @@
 use std::sync::atomic::AtomicU64;
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::request::{JobSpec, Mode, PlanKey, SelectorKey};
+use crate::coordinator::request::{JobSpec, Mode, PlanKey, PreparedKey, SelectorKey};
 use crate::dense_::DensePlan;
 use crate::dynamic_::DynamicPlan;
 use crate::engine::calibration::{
@@ -29,6 +32,7 @@ use crate::engine::calibration::{
 };
 use crate::engine::{BackendKind, Calibration, ChurnTracker, PlanEstimate};
 use crate::error::{Error, Result};
+use crate::kernels::PreparedBsr;
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::mask::BlockMask;
 use crate::sparse::patterns;
@@ -46,6 +50,13 @@ pub const DEFAULT_PLAN_CAPACITY: usize = 4096;
 /// *geometries* — slower than plan keys, but just as unbounded in an
 /// open world.
 pub const DEFAULT_MODE_MEMO_CAPACITY: usize = 4096;
+
+/// Default prepared-operand capacity (entries, LRU). Deliberately
+/// smaller than the plan capacity: a [`PreparedBsr`] holds the full
+/// block values (megabytes at paper scale — `4096x4096` at `d = 1/16`,
+/// `b = 16` is ~4 MiB), so this bound is a memory budget, not just an
+/// entry count.
+pub const DEFAULT_PREPARED_CAPACITY: usize = 512;
 
 /// A cached plan for one plan key.
 #[derive(Debug, Clone)]
@@ -125,39 +136,55 @@ pub struct PlanCache {
     cm: CostModel,
     plans: Mutex<LruMap<PlanKey, CachedPlan>>,
     modes: Mutex<LruMap<SelectorKey, MemoEntry>>,
+    prepared: Mutex<LruMap<PreparedKey, Arc<PreparedBsr>>>,
     hits: AtomicU64,
     misses: AtomicU64,
     mode_hits: AtomicU64,
     mode_misses: AtomicU64,
     resolution_hits: AtomicU64,
     resolution_misses: AtomicU64,
+    prepared_hits: AtomicU64,
+    prepared_misses: AtomicU64,
+    prepared_conversions: AtomicU64,
 }
 
 impl PlanCache {
     pub fn new(spec: IpuSpec, cm: CostModel) -> Self {
-        Self::with_capacity(spec, cm, DEFAULT_PLAN_CAPACITY, DEFAULT_MODE_MEMO_CAPACITY)
+        Self::with_capacity(
+            spec,
+            cm,
+            DEFAULT_PLAN_CAPACITY,
+            DEFAULT_MODE_MEMO_CAPACITY,
+            DEFAULT_PREPARED_CAPACITY,
+        )
     }
 
-    /// A cache holding at most `plan_capacity` compiled plans and
-    /// `memo_capacity` memoized auto-mode decisions, each evicted LRU
+    /// A cache holding at most `plan_capacity` compiled plans,
+    /// `memo_capacity` memoized auto-mode decisions and
+    /// `prepared_capacity` prepared numeric operands, each evicted LRU
     /// (floored at 1; pass `usize::MAX` for effectively unbounded).
     pub fn with_capacity(
         spec: IpuSpec,
         cm: CostModel,
         plan_capacity: usize,
         memo_capacity: usize,
+        prepared_capacity: usize,
     ) -> Self {
         Self {
             spec,
             cm,
             plans: Mutex::new(LruMap::new(plan_capacity)),
             modes: Mutex::new(LruMap::new(memo_capacity)),
+            prepared: Mutex::new(LruMap::new(prepared_capacity)),
             hits: Default::default(),
             misses: Default::default(),
             mode_hits: Default::default(),
             mode_misses: Default::default(),
             resolution_hits: Default::default(),
             resolution_misses: Default::default(),
+            prepared_hits: Default::default(),
+            prepared_misses: Default::default(),
+            prepared_conversions: Default::default(),
         }
     }
 
@@ -208,6 +235,28 @@ impl PlanCache {
         (g.evictions(), g.misses_after_evict())
     }
 
+    /// Prepared-operand lookups (hits, misses) so far.
+    pub fn prepared_stats(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        (self.prepared_hits.load(Relaxed), self.prepared_misses.load(Relaxed))
+    }
+
+    /// `BlockCoo -> PreparedBsr` conversions actually performed — the
+    /// steady-state-serving invariant is that this stops moving once
+    /// the working set's patterns are cached (pinned by a test; under
+    /// a lookup race it can exceed the miss count, since both racers
+    /// convert and one insert is discarded).
+    pub fn prepared_conversions(&self) -> u64 {
+        self.prepared_conversions.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Prepared-operand eviction accounting: (evictions,
+    /// misses-after-evict), mirroring [`PlanCache::plan_eviction_stats`].
+    pub fn prepared_eviction_stats(&self) -> (u64, u64) {
+        let g = self.prepared.lock().expect("prepared operands poisoned");
+        (g.evictions(), g.misses_after_evict())
+    }
+
     /// Live compiled plans.
     pub fn plans_len(&self) -> usize {
         self.plans.lock().expect("plan cache poisoned").len()
@@ -216,6 +265,44 @@ impl PlanCache {
     /// Live memoized auto-mode decisions.
     pub fn memo_len(&self) -> usize {
         self.modes.lock().expect("mode memo poisoned").len()
+    }
+
+    /// Live prepared operands.
+    pub fn prepared_len(&self) -> usize {
+        self.prepared.lock().expect("prepared operands poisoned").len()
+    }
+
+    /// Get or convert the prepared numeric operand for `job`'s
+    /// realized pattern. Returns `(operand, was_hit)`. Keyed at the
+    /// pattern level ([`JobSpec::prepared_key`]): static and dynamic
+    /// jobs with the same seed share the operand across every batch
+    /// shape, so steady-state serving performs **zero** conversions —
+    /// [`PlanCache::prepared_conversions`] is the proof. Conversion
+    /// happens outside the lock (it walks the whole value buffer).
+    pub fn get_or_prepare(&self, job: &JobSpec) -> Result<(Arc<PreparedBsr>, bool)> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let key = job.prepared_key();
+        if let Some(p) = self.prepared.lock().expect("prepared operands poisoned").get(&key) {
+            self.prepared_hits.fetch_add(1, Relaxed);
+            return Ok((p.clone(), true));
+        }
+        let built = Arc::new(PreparedBsr::from_pattern(
+            job.m,
+            job.k,
+            job.b,
+            job.density,
+            job.pattern_seed,
+        )?);
+        self.prepared_conversions.fetch_add(1, Relaxed);
+        self.prepared_misses.fetch_add(1, Relaxed);
+        let mut map = self.prepared.lock().expect("prepared operands poisoned");
+        // A racing thread may have planted the operand while we
+        // converted; keep theirs (peek: this miss is already counted).
+        if let Some(existing) = map.peek(&key) {
+            return Ok((existing.clone(), false));
+        }
+        map.insert(key, built.clone());
+        Ok((built, false))
     }
 
     /// Resolve an auto-mode *batch* to a concrete mode at `rep`'s
@@ -547,7 +634,7 @@ mod tests {
 
     #[test]
     fn bounded_plan_cache_evicts_lru_and_counts_the_damage() {
-        let cache = PlanCache::with_capacity(IpuSpec::default(), CostModel::default(), 2, 2);
+        let cache = PlanCache::with_capacity(IpuSpec::default(), CostModel::default(), 2, 2, 2);
         // Three pattern-specific static plans through a capacity-2 map.
         for seed in 1..=3u64 {
             cache.get_or_plan(&job(Mode::Static, seed)).unwrap();
@@ -563,8 +650,13 @@ mod tests {
 
     #[test]
     fn evicted_memo_decisions_are_rederived_not_stale() {
-        let cache =
-            PlanCache::with_capacity(IpuSpec::default(), CostModel::default(), usize::MAX, 1);
+        let cache = PlanCache::with_capacity(
+            IpuSpec::default(),
+            CostModel::default(),
+            usize::MAX,
+            1,
+            usize::MAX,
+        );
         let a = job(Mode::Auto, 1);
         let mut b = job(Mode::Auto, 2);
         b.n = 256; // a distinct selector key
@@ -604,6 +696,27 @@ mod tests {
         assert!(cal.geometry_stamp(&rep) < 4, "the bucket was evicted");
         let r2 = cache.resolve_batch(&rep, Some(&cal)).unwrap();
         assert!(!r2.memo_hit, "a reset stamp must re-open the decision, not freeze it");
+    }
+
+    #[test]
+    fn prepared_operands_are_cached_per_pattern() {
+        let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
+        let (p1, h1) = cache.get_or_prepare(&job(Mode::Static, 1)).unwrap();
+        assert!(!h1);
+        assert_eq!(cache.prepared_conversions(), 1);
+        // Same pattern, different mode and batch shape: a hit.
+        let mut dynamic = job(Mode::Dynamic, 1);
+        dynamic.n = 4096;
+        let (p2, h2) = cache.get_or_prepare(&dynamic).unwrap();
+        assert!(h2, "mode/batch shape must not re-convert");
+        assert!(Arc::ptr_eq(&p1, &p2), "one operand, shared");
+        assert_eq!(cache.prepared_conversions(), 1);
+        // A different seed is a different realized pattern.
+        let (_, h3) = cache.get_or_prepare(&job(Mode::Static, 2)).unwrap();
+        assert!(!h3);
+        assert_eq!(cache.prepared_stats(), (1, 2));
+        assert_eq!(cache.prepared_len(), 2);
+        assert_eq!(cache.prepared_eviction_stats(), (0, 0));
     }
 
     #[test]

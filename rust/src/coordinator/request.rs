@@ -106,6 +106,22 @@ impl JobSpec {
         }
     }
 
+    /// Key for prepared-operand caching ([`crate::kernels::PreparedBsr`]
+    /// in the plan cache): the *realized pattern* — geometry plus the
+    /// pattern seed, without the batch dimension or the mode (static
+    /// and dynamic jobs with the same seed realize the same operand,
+    /// and the operand does not depend on `n`). One conversion serves
+    /// every batch shape the pattern is executed at.
+    pub fn prepared_key(&self) -> PreparedKey {
+        PreparedKey {
+            m: self.m,
+            k: self.k,
+            b: self.b,
+            density_millionths: self.density_millionths(),
+            pattern_seed: self.pattern_seed,
+        }
+    }
+
     /// Key for auto-mode resolution memoization: the geometry the
     /// decision depends on, without the mode or the pattern seed. For
     /// batch-time resolution the memoized key carries the *combined*
@@ -139,6 +155,17 @@ pub struct PatternKey {
     pub b: usize,
     pub density_millionths: u64,
     pub dtype: DType,
+}
+
+/// Prepared-operand cache key (see [`JobSpec::prepared_key`]): one
+/// realized pattern, any batch shape or sparse mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PreparedKey {
+    pub m: usize,
+    pub k: usize,
+    pub b: usize,
+    pub density_millionths: u64,
+    pub pattern_seed: u64,
 }
 
 /// Memoization key for auto-mode decisions (see [`JobSpec::selector_key`]).
@@ -228,6 +255,17 @@ mod tests {
         assert_eq!(a.pattern_key(), b.pattern_key());
         a.m = 2048;
         assert_ne!(a.pattern_key(), b.pattern_key(), "weight geometry must matter");
+    }
+
+    #[test]
+    fn prepared_key_is_pattern_level() {
+        let mut a = spec(Mode::Static, 5);
+        let b = spec(Mode::Dynamic, 5);
+        assert_eq!(a.prepared_key(), b.prepared_key(), "mode must not matter");
+        a.n = 4096;
+        assert_eq!(a.prepared_key(), b.prepared_key(), "batch shape must not matter");
+        a.pattern_seed = 6;
+        assert_ne!(a.prepared_key(), b.prepared_key(), "the realized pattern matters");
     }
 
     #[test]

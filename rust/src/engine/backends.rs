@@ -11,11 +11,12 @@
 //! baseline, reported in IPU-clock-equivalent cycles so every backend
 //! is comparable on one axis.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::request::{JobResult, JobSpec, Mode};
 use crate::error::{Error, Result};
 use crate::gpu::{self, A100Spec};
+use crate::kernels::{self, PreparedBsr, Scratch};
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::patterns;
 use crate::DType;
@@ -274,6 +275,76 @@ impl Backend for GpuBackend {
     }
 }
 
+/// One native-kernel numeric execution: the measured wall time and
+/// the FLOPs it performed (nnz-only for sparse jobs — the paper's
+/// throughput convention).
+#[derive(Debug, Clone, Copy)]
+pub struct KernelRun {
+    pub wall: Duration,
+    pub flops: f64,
+}
+
+impl KernelRun {
+    /// Achieved throughput in GFLOP/s.
+    pub fn gflops(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.flops / self.wall.as_secs_f64() / 1e9
+    }
+}
+
+/// Numerically execute `job` through the native compute layer
+/// ([`crate::kernels`]): the actual f32 SpMM/GEMM this machine can
+/// *time*, complementing the simulated device cycles the backends'
+/// `plan`/`execute` report. Sparse modes run the prepared tiled
+/// kernel — a caller holding the pattern's cached [`PreparedBsr`]
+/// (the coordinator's plan cache) passes it via `prepared`, `None`
+/// converts from the job's pattern seed — and dense jobs run the
+/// `ikj`-tiled kernel. Operands are deterministic pseudo-data from
+/// `scratch` (reused across calls; nothing allocates at steady
+/// state), and the output stays in `scratch` for oracle checks.
+/// `threads` bounds the row-panel parallelism; `spmm_auto` decides
+/// whether the job is large enough to spend it.
+pub fn execute_kernel(
+    job: &JobSpec,
+    prepared: Option<&PreparedBsr>,
+    scratch: &mut Scratch,
+    threads: usize,
+) -> Result<KernelRun> {
+    match job.mode {
+        Mode::Dense => {
+            let (a, x, y) = scratch.dense_operands(job.m, job.k, job.n);
+            let t0 = Instant::now();
+            kernels::dense::matmul(a, x, job.m, job.k, job.n, y)?;
+            Ok(KernelRun { wall: t0.elapsed(), flops: job.flops() })
+        }
+        Mode::Static | Mode::Dynamic => {
+            let converted;
+            let prep = match prepared {
+                Some(p) => p,
+                None => {
+                    converted = PreparedBsr::from_pattern(
+                        job.m,
+                        job.k,
+                        job.b,
+                        job.density,
+                        job.pattern_seed,
+                    )?;
+                    &converted
+                }
+            };
+            let (x, y) = scratch.spmm_operands(job.m, job.k, job.n);
+            let t0 = Instant::now();
+            kernels::spmm_auto(prep, x, job.n, y, threads)?;
+            Ok(KernelRun { wall: t0.elapsed(), flops: job.flops() })
+        }
+        Mode::Auto => Err(Error::Coordinator(
+            "auto-mode jobs must be resolved to a concrete mode before numeric execution".into(),
+        )),
+    }
+}
+
 /// The device-executable backends, in the order the selector evaluates
 /// them (the GPU baseline is analytical only and excluded).
 pub fn device_backends() -> [&'static dyn Backend; 3] {
@@ -368,6 +439,63 @@ mod tests {
         let a = GpuBackend.plan(&j16, &env).unwrap();
         let b = GpuBackend.plan(&j32, &env).unwrap();
         assert_eq!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn kernel_execution_matches_numeric_oracle() {
+        // The backends' numeric arm runs on crate::kernels; its output
+        // must agree with the naive reference on the same operands
+        // within the documented kernel tolerance (not bit-equality —
+        // the tiled path reorders f32 partial sums).
+        let mut j = job(1.0 / 8.0, 8);
+        j.m = 256;
+        j.k = 256;
+        j.n = 33; // exercises the n-tile remainder
+        let mut scratch = Scratch::default();
+        for mode in [Mode::Static, Mode::Dynamic] {
+            j.mode = mode;
+            // Pin the operand contents first, then execute at the same
+            // shape (the scratch refills only on resize).
+            let x = scratch.spmm_operands(j.m, j.k, j.n).0.to_vec();
+            let run = execute_kernel(&j, None, &mut scratch, 2).unwrap();
+            assert!(run.flops > 0.0);
+            let mask =
+                patterns::with_density(j.m, j.k, j.b, j.density, j.pattern_seed).unwrap();
+            let coo = patterns::with_values(&mask, j.pattern_seed);
+            let expect = coo.spmm_dense(&x, j.n).unwrap();
+            for (i, (&u, &v)) in scratch.output().iter().zip(&expect).enumerate() {
+                assert!(kernels::close_enough(u, v), "{mode}: element {i}: {u} vs {v}");
+            }
+        }
+        j.mode = Mode::Dense;
+        let (a, x, _) = scratch.dense_operands(j.m, j.k, j.n);
+        let (a, x) = (a.to_vec(), x.to_vec());
+        let run = execute_kernel(&j, None, &mut scratch, 2).unwrap();
+        assert!(run.gflops() > 0.0);
+        let expect = crate::runtime::dense_ref(&a, &x, j.m, j.k, j.n);
+        for (i, (&u, &v)) in scratch.output().iter().zip(&expect).enumerate() {
+            assert!(kernels::close_enough(u, v), "dense: element {i}: {u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn kernel_execution_accepts_cached_prepared_operand() {
+        let mut j = job(1.0 / 8.0, 16);
+        j.mode = Mode::Static;
+        j.m = 128;
+        j.k = 128;
+        j.n = 16;
+        let prep =
+            PreparedBsr::from_pattern(j.m, j.k, j.b, j.density, j.pattern_seed).unwrap();
+        let mut scratch = Scratch::default();
+        let cached = execute_kernel(&j, Some(&prep), &mut scratch, 1).unwrap();
+        let y_cached = scratch.output().to_vec();
+        let fresh = execute_kernel(&j, None, &mut scratch, 1).unwrap();
+        assert_eq!(y_cached, scratch.output(), "cached and fresh operands agree");
+        assert_eq!(cached.flops, fresh.flops);
+        let mut auto = j.clone();
+        auto.mode = Mode::Auto;
+        assert!(execute_kernel(&auto, None, &mut scratch, 1).is_err());
     }
 
     #[test]

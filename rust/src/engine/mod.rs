@@ -45,8 +45,8 @@ pub mod churn;
 pub mod selector;
 
 pub use backends::{
-    backend_for, device_backends, Backend, BackendKind, DenseBackend, DynamicBackend, EngineEnv,
-    GpuBackend, PlanEstimate, StaticBackend,
+    backend_for, device_backends, execute_kernel, Backend, BackendKind, DenseBackend,
+    DynamicBackend, EngineEnv, GpuBackend, KernelRun, PlanEstimate, StaticBackend,
 };
 pub use calibration::{Calibration, INFORMATIVE_DELTA, MAX_CORRECTION, OBSERVATIONS_PER_REVISIT};
 pub use churn::{

@@ -1,0 +1,106 @@
+//! Tiled dense matmul: the `ikj` register-blocked GEMM the dense
+//! numeric path runs on.
+//!
+//! The naive reference ([`crate::runtime::dense_ref`]) streams `y`
+//! through memory once per `k` step; this kernel blocks `I_TILE`
+//! output rows by [`N_TILE`](crate::kernels::N_TILE) output columns so
+//! the accumulator panel stays in registers across the whole `k` loop
+//! and each output element is written exactly once, into a
+//! caller-owned (reusable) buffer.
+
+use crate::error::{Error, Result};
+use crate::kernels::spmm::N_TILE;
+
+/// Output-row tile height of the register panel.
+pub const I_TILE: usize = 4;
+
+/// Tiled dense matmul: `y = A x`, `a` row-major `m x k`, `x` row-major
+/// `k x n`, `y` row-major `m x n`. Overwrites all of `y`.
+pub fn matmul(a: &[f32], x: &[f32], m: usize, k: usize, n: usize, y: &mut [f32]) -> Result<()> {
+    if a.len() != m * k {
+        return Err(Error::InvalidFormat(format!(
+            "a has {} elements, kernel needs {m} x {k}",
+            a.len()
+        )));
+    }
+    if x.len() != k * n {
+        return Err(Error::InvalidFormat(format!(
+            "x has {} elements, kernel needs {k} x {n}",
+            x.len()
+        )));
+    }
+    if y.len() != m * n {
+        return Err(Error::InvalidFormat(format!(
+            "y has {} elements, kernel needs {m} x {n}",
+            y.len()
+        )));
+    }
+    let mut i0 = 0;
+    while i0 < m {
+        let ib = I_TILE.min(m - i0);
+        let mut j = 0;
+        while j < n {
+            let tile = N_TILE.min(n - j);
+            let mut acc = [[0f32; N_TILE]; I_TILE];
+            for l in 0..k {
+                let xrow = &x[l * n + j..][..tile];
+                for (ii, acc_row) in acc.iter_mut().enumerate().take(ib) {
+                    let w = a[(i0 + ii) * k + l];
+                    for (v, &xv) in acc_row.iter_mut().zip(xrow) {
+                        *v += w * xv;
+                    }
+                }
+            }
+            for (ii, acc_row) in acc.iter().enumerate().take(ib) {
+                y[(i0 + ii) * n + j..(i0 + ii) * n + j + tile]
+                    .copy_from_slice(&acc_row[..tile]);
+            }
+            j += tile;
+        }
+        i0 += ib;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::spmm::close_enough;
+    use crate::util::Rng;
+
+    fn reference(a: &[f32], x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0f32; m * n];
+        for i in 0..m {
+            for l in 0..k {
+                for j in 0..n {
+                    y[i * n + j] += a[i * k + l] * x[l * n + j];
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn matches_reference_including_remainders() {
+        let mut rng = Rng::seed_from_u64(0xDE5E);
+        // Shapes straddling both tile boundaries (m % I_TILE, n % N_TILE).
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (4, 8, 16), (5, 7, 17), (9, 3, 33)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let x: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let mut y = vec![f32::NAN; m * n];
+            matmul(&a, &x, m, k, n, &mut y).unwrap();
+            let expect = reference(&a, &x, m, k, n);
+            for (i, (&u, &v)) in y.iter().zip(&expect).enumerate() {
+                assert!(close_enough(u, v), "m={m} k={k} n={n} elem {i}: {u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_errors_not_panics() {
+        let mut y = vec![0f32; 4];
+        assert!(matmul(&[0.0; 3], &[0.0; 4], 2, 2, 2, &mut y).is_err());
+        assert!(matmul(&[0.0; 4], &[0.0; 3], 2, 2, 2, &mut y).is_err());
+        assert!(matmul(&[0.0; 4], &[0.0; 4], 2, 2, 2, &mut y[..3]).is_err());
+    }
+}

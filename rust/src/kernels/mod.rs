@@ -1,0 +1,138 @@
+//! Native compute layer: the single numeric engine behind the runtime
+//! interpreter, the engine backends and the coordinator's wall-time
+//! serving arm (DESIGN.md §5).
+//!
+//! The reproduction's other layers optimize *simulated* cycles; this
+//! one optimizes the wall clock this machine can actually measure.
+//! Structure:
+//!
+//! * [`PreparedBsr`] — the prepared operand: CSR-style block-row
+//!   pointers with per-row contiguous columns/values, converted once
+//!   from [`BlockCoo`](crate::sparse::coo::BlockCoo) and cached per
+//!   pattern alongside plans in the
+//!   [`PlanCache`](crate::coordinator::PlanCache).
+//! * [`spmm`] / [`spmm_parallel`] / [`spmm_auto`] — block-size-
+//!   specialized, `n`-tiled SpMM microkernels (`b` ∈ {4, 8, 16}
+//!   monomorphized, generic fallback elsewhere), with nnz-balanced
+//!   row-panel parallelism over disjoint output slices.
+//! * [`dense::matmul`] — the `ikj`-tiled dense kernel with a reusable
+//!   caller-owned output buffer.
+//! * [`Scratch`] — reusable operand/output buffers so steady-state
+//!   numeric execution allocates nothing.
+//!
+//! The naive triple loops ([`crate::runtime::spmm_ref`],
+//! [`crate::runtime::dense_ref`],
+//! [`BlockCoo::spmm_dense`](crate::sparse::coo::BlockCoo::spmm_dense))
+//! stay exactly as they are — they are the differential oracle the
+//! kernel tests compare against, under the documented tolerance
+//! ([`close_enough`]). `repro bench wall` measures all three paths
+//! side by side.
+
+pub mod dense;
+pub mod parallel;
+pub mod prepared;
+pub mod spmm;
+
+pub use parallel::{
+    default_threads, partition_panels, spmm_auto, spmm_parallel, MIN_FLOPS_PER_THREAD,
+};
+pub use prepared::PreparedBsr;
+pub use spmm::{close_enough, spmm, ABS_TOLERANCE, N_TILE, REL_TOLERANCE};
+
+use crate::util::Rng;
+
+/// Reusable operand/output buffers for repeated numeric executions.
+/// Buffers grow to the working-set size and stay there; operand
+/// contents are deterministic pseudo-data (re-filled only when a
+/// buffer is resized — the values feed wall-time measurement, not a
+/// numeric contract).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    x: Vec<f32>,
+    a: Vec<f32>,
+    y: Vec<f32>,
+}
+
+/// Fill a buffer with cheap deterministic pseudo-data in [-0.5, 0.5)
+/// (operands for wall-time measurement — shared by [`Scratch`] and
+/// the wall bench so their operand streams cannot drift).
+pub(crate) fn fill_pseudo(buf: &mut [f32], seed: u64) {
+    let mut rng = Rng::seed_from_u64(seed);
+    for v in buf.iter_mut() {
+        *v = (rng.next_u64() >> 40) as f32 / (1u64 << 24) as f32 - 0.5;
+    }
+}
+
+impl Scratch {
+    fn ensure(buf: &mut Vec<f32>, len: usize, seed: u64) {
+        if buf.len() != len {
+            buf.clear();
+            buf.resize(len, 0.0);
+            fill_pseudo(buf, seed);
+        }
+    }
+
+    /// The `k x n` activation operand and the `m x n` output buffer
+    /// for an SpMM (disjoint borrows from one scratch).
+    pub fn spmm_operands(&mut self, m: usize, k: usize, n: usize) -> (&[f32], &mut [f32]) {
+        Self::ensure(&mut self.x, k * n, 1);
+        if self.y.len() != m * n {
+            self.y.clear();
+            self.y.resize(m * n, 0.0);
+        }
+        (&self.x, &mut self.y)
+    }
+
+    /// The `m x k` weight operand, `k x n` activation operand and
+    /// `m x n` output buffer for a dense matmul.
+    pub fn dense_operands(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> (&[f32], &[f32], &mut [f32]) {
+        Self::ensure(&mut self.a, m * k, 2);
+        Self::ensure(&mut self.x, k * n, 1);
+        if self.y.len() != m * n {
+            self.y.clear();
+            self.y.resize(m * n, 0.0);
+        }
+        (&self.a, &self.x, &mut self.y)
+    }
+
+    /// The most recent output buffer (oracle checks in tests).
+    pub fn output(&self) -> &[f32] {
+        &self.y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_reuses_buffers_across_same_shape_calls() {
+        let mut s = Scratch::default();
+        let (x1_ptr, x1_val) = {
+            let (x, y) = s.spmm_operands(8, 8, 4);
+            assert_eq!((x.len(), y.len()), (32, 32));
+            (x.as_ptr(), x[0])
+        };
+        let (x, _) = s.spmm_operands(8, 8, 4);
+        assert_eq!(x.as_ptr(), x1_ptr, "same shape must not reallocate");
+        assert_eq!(x[0], x1_val, "same shape must not refill");
+        // A different shape re-provisions.
+        let (x, y) = s.spmm_operands(16, 8, 8);
+        assert_eq!((x.len(), y.len()), (64, 128));
+    }
+
+    #[test]
+    fn dense_operands_are_disjoint_and_sized() {
+        let mut s = Scratch::default();
+        let (a, x, y) = s.dense_operands(3, 4, 5);
+        assert_eq!((a.len(), x.len(), y.len()), (12, 20, 15));
+        assert!(a.iter().any(|&v| v != 0.0), "pseudo-data filled");
+        y[0] = 7.0;
+        assert_eq!(s.output()[0], 7.0);
+    }
+}

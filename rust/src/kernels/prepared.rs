@@ -1,0 +1,244 @@
+//! Prepared block-sparse operand: the layout the tiled kernels consume.
+//!
+//! [`crate::sparse::coo::BlockCoo`] is the *canonical* in-memory
+//! format — a sorted coordinate list, convenient to build and
+//! validate. The kernels instead want CSR-style block-row pointers
+//! (so a row panel is one contiguous range of blocks, no coordinate
+//! scan) with column indices and block values laid out contiguously
+//! per block-row. [`PreparedBsr`] is that layout, converted **once**
+//! per pattern and cached alongside plans in
+//! [`PlanCache`](crate::coordinator::PlanCache) so steady-state
+//! serving never re-converts (DESIGN.md §5).
+
+use crate::error::{Error, Result};
+use crate::sparse::coo::BlockCoo;
+use crate::sparse::patterns;
+
+/// A block-sparse matrix in kernel-ready block-CSR layout.
+///
+/// Invariants (established by every constructor): `row_ptr` has
+/// `m / b + 1` monotone entries with `row_ptr[0] == 0` and
+/// `row_ptr[mb] == cols.len()`; `cols[row_ptr[r]..row_ptr[r + 1]]`
+/// are the block-columns of block-row `r`; `values` holds one
+/// row-major `b x b` block per entry of `cols`, in the same order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PreparedBsr {
+    /// Element-level rows.
+    pub m: usize,
+    /// Element-level cols.
+    pub k: usize,
+    /// Block size.
+    pub b: usize,
+    /// Block-row pointers, `m / b + 1` entries.
+    pub row_ptr: Vec<u32>,
+    /// Block-column index per non-zero block, grouped by block-row.
+    pub cols: Vec<u32>,
+    /// Block values, `b * b` per block, same order as `cols`.
+    pub values: Vec<f32>,
+}
+
+impl PreparedBsr {
+    /// Convert from the canonical sorted coordinate list. `BlockCoo`'s
+    /// strict `(row, col)` ordering means the blocks are already
+    /// grouped by row in column order, so the conversion is one
+    /// counting pass plus two buffer copies — no re-sorting.
+    pub fn from_coo(coo: &BlockCoo) -> Self {
+        let mb = if coo.b == 0 { 0 } else { coo.m / coo.b };
+        let mut row_ptr = vec![0u32; mb + 1];
+        for &r in &coo.block_rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for r in 0..mb {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        Self {
+            m: coo.m,
+            k: coo.k,
+            b: coo.b,
+            row_ptr,
+            cols: coo.block_cols.clone(),
+            values: coo.values.clone(),
+        }
+    }
+
+    /// Convert from raw coordinate arrays (the runtime's artifact
+    /// operands), which are **not** required to be sorted: blocks are
+    /// stably counting-scattered into row groups, preserving the input
+    /// order within each row. Row-sorted input — the `BlockCoo`
+    /// contract, and what every committed artifact caller passes —
+    /// takes a fast path: the values are already row-grouped, so the
+    /// relayout degenerates to two bulk copies. Coordinates must
+    /// already be validated against the `mb x kb` grid (the runtime's
+    /// `check_coords` does).
+    pub fn from_parts(
+        m: usize,
+        k: usize,
+        b: usize,
+        rows: &[i32],
+        cols: &[i32],
+        values: &[f32],
+    ) -> Self {
+        let mb = if b == 0 { 0 } else { m / b };
+        let bsz = b * b;
+        let mut row_ptr = vec![0u32; mb + 1];
+        for &r in rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for r in 0..mb {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        if rows.windows(2).all(|w| w[0] <= w[1]) {
+            return Self {
+                m,
+                k,
+                b,
+                row_ptr,
+                cols: cols.iter().map(|&c| c as u32).collect(),
+                values: values.to_vec(),
+            };
+        }
+        let mut next: Vec<u32> = row_ptr[..mb].to_vec();
+        let mut out_cols = vec![0u32; rows.len()];
+        let mut out_values = vec![0f32; values.len()];
+        for (i, &r) in rows.iter().enumerate() {
+            let slot = next[r as usize] as usize;
+            next[r as usize] += 1;
+            out_cols[slot] = cols[i] as u32;
+            out_values[slot * bsz..(slot + 1) * bsz]
+                .copy_from_slice(&values[i * bsz..(i + 1) * bsz]);
+        }
+        Self { m, k, b, row_ptr, cols: out_cols, values: out_values }
+    }
+
+    /// Realize a pattern family's operand from its parameters: the
+    /// mask from `(m, k, b, density, seed)` and the values from the
+    /// same seed — exactly the operand the simulated job describes.
+    /// This is the conversion the plan cache's prepared-operand slot
+    /// performs on a miss.
+    pub fn from_pattern(m: usize, k: usize, b: usize, density: f64, seed: u64) -> Result<Self> {
+        let mask = patterns::with_density(m, k, b, density, seed)?;
+        Ok(Self::from_coo(&patterns::with_values(&mask, seed)))
+    }
+
+    /// Number of block-rows.
+    pub fn mb(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    /// Number of non-zero blocks.
+    pub fn nnz_blocks(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Number of non-zero blocks in block-rows `[r0, r1)`.
+    pub fn nnz_in_rows(&self, r0: usize, r1: usize) -> usize {
+        (self.row_ptr[r1] - self.row_ptr[r0]) as usize
+    }
+
+    /// Approximate heap footprint in bytes (cache sizing aid).
+    pub fn bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.cols.len() * 4 + self.values.len() * 4
+    }
+
+    /// Recover the canonical coordinate form. Exact inverse of
+    /// [`PreparedBsr::from_coo`]: the reconstructed `BlockCoo` is
+    /// equal (coordinates, values, bit-for-bit) to the original —
+    /// pinned by the round-trip property test.
+    pub fn to_block_coo(&self) -> Result<BlockCoo> {
+        let mut block_rows = Vec::with_capacity(self.cols.len());
+        for r in 0..self.mb() {
+            for _ in self.row_ptr[r]..self.row_ptr[r + 1] {
+                block_rows.push(r as u32);
+            }
+        }
+        BlockCoo::new(self.m, self.k, self.b, block_rows, self.cols.clone(), self.values.clone())
+            .map_err(|e| Error::InvalidFormat(format!("prepared operand not canonical: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BlockCoo {
+        // 3x3 block grid, b=2; blocks at (0,1), (2,0), (2,2); row 1 empty.
+        BlockCoo::new(
+            6,
+            6,
+            2,
+            vec![0, 2, 2],
+            vec![1, 0, 2],
+            (1..=12).map(|v| v as f32).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn from_coo_builds_row_ptr() {
+        let p = PreparedBsr::from_coo(&sample());
+        assert_eq!(p.row_ptr, vec![0, 1, 1, 3]);
+        assert_eq!(p.cols, vec![1, 0, 2]);
+        assert_eq!(p.mb(), 3);
+        assert_eq!(p.nnz_blocks(), 3);
+        assert_eq!(p.nnz_in_rows(0, 1), 1);
+        assert_eq!(p.nnz_in_rows(1, 2), 0);
+        assert_eq!(p.nnz_in_rows(2, 3), 2);
+    }
+
+    #[test]
+    fn round_trips_exactly() {
+        let coo = sample();
+        let back = PreparedBsr::from_coo(&coo).to_block_coo().unwrap();
+        assert_eq!(coo, back);
+    }
+
+    #[test]
+    fn from_parts_handles_unsorted_coordinates() {
+        let coo = sample();
+        // Shuffle the block order; from_parts must regroup by row.
+        let rows = vec![2i32, 0, 2];
+        let cols = vec![2i32, 1, 0];
+        let mut values = vec![0f32; 12];
+        values[0..4].copy_from_slice(coo.block(2));
+        values[4..8].copy_from_slice(coo.block(0));
+        values[8..12].copy_from_slice(coo.block(1));
+        let p = PreparedBsr::from_parts(6, 6, 2, &rows, &cols, &values);
+        assert_eq!(p.row_ptr, vec![0, 1, 1, 3]);
+        // Row 2 keeps input order: col 2 (arrived first), then col 0.
+        assert_eq!(p.cols, vec![1, 2, 0]);
+        assert_eq!(&p.values[0..4], coo.block(0));
+        assert_eq!(&p.values[4..8], coo.block(2));
+        assert_eq!(&p.values[8..12], coo.block(1));
+    }
+
+    #[test]
+    fn from_parts_sorted_fast_path_matches_scatter_semantics() {
+        // Row-sorted (but not column-sorted) input takes the bulk-copy
+        // fast path; the result must be exactly what the stable
+        // scatter produces: input order preserved within each row.
+        let rows = vec![0i32, 2, 2];
+        let cols = vec![1i32, 2, 0];
+        let values: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let p = PreparedBsr::from_parts(6, 6, 2, &rows, &cols, &values);
+        assert_eq!(p.row_ptr, vec![0, 1, 1, 3]);
+        assert_eq!(p.cols, vec![1, 2, 0]);
+        assert_eq!(p.values, values);
+    }
+
+    #[test]
+    fn from_pattern_matches_manual_conversion() {
+        let mask = patterns::with_density(64, 64, 8, 0.25, 42).unwrap();
+        let coo = patterns::with_values(&mask, 42);
+        let p = PreparedBsr::from_pattern(64, 64, 8, 0.25, 42).unwrap();
+        assert_eq!(p, PreparedBsr::from_coo(&coo));
+        assert!(p.bytes() > 0);
+    }
+
+    #[test]
+    fn empty_matrix_is_representable() {
+        let coo = BlockCoo::new(4, 4, 2, vec![], vec![], vec![]).unwrap();
+        let p = PreparedBsr::from_coo(&coo);
+        assert_eq!(p.row_ptr, vec![0, 0, 0]);
+        assert_eq!(p.to_block_coo().unwrap(), coo);
+    }
+}

@@ -1,0 +1,293 @@
+//! Tiled block-sparse SpMM microkernels over [`PreparedBsr`].
+//!
+//! Layout of the computation (Gale et al.'s row-offset recipe, scaled
+//! to one CPU core): the output is walked one block-row at a time; for
+//! each block-row the batch dimension `n` is processed in fixed-width
+//! tiles of [`N_TILE`] columns so the `b x N_TILE` accumulator panel
+//! lives in registers across the whole block-row — every `x` row
+//! segment is loaded once per block and reused across the block's `b`
+//! output rows, and each output element is **written exactly once**
+//! (block-rows with no blocks are zero-filled). Block sizes 4, 8 and
+//! 16 are monomorphized via const generics so the inner loops have
+//! compile-time trip counts and autovectorize; other block sizes take
+//! a structurally identical generic fallback.
+//!
+//! Numerics: per output element, contributions accumulate in the same
+//! (block, then intra-block column) order as the naive references
+//! ([`crate::runtime::spmm_ref`], [`BlockCoo::spmm_dense`]), but the
+//! tiled path does not skip explicit zeros inside blocks and keeps
+//! partial sums in a register panel — agreement with the references is
+//! therefore contracted to the documented tolerance
+//! ([`close_enough`]), not bit-equality (DESIGN.md §5).
+//!
+//! [`BlockCoo::spmm_dense`]: crate::sparse::coo::BlockCoo::spmm_dense
+
+use crate::error::{Error, Result};
+use crate::kernels::prepared::PreparedBsr;
+
+/// Batch-dimension tile width (f32 lanes) of the register accumulator
+/// panel. 16 lanes = two AVX2 / one AVX-512 vector per accumulator
+/// row; the `n % N_TILE` remainder takes a narrower epilogue.
+pub const N_TILE: usize = 16;
+
+/// Tolerance contract for comparing tiled/parallel kernel output
+/// against the naive references: relative error per element, with an
+/// absolute floor for near-zero outputs. Tiling reorders f32 partial
+/// sums (and keeps them in registers), so oracle comparisons where a
+/// tiled path is under test use this bound instead of bit-equality.
+pub const REL_TOLERANCE: f32 = 1e-5;
+
+/// Absolute floor companion to [`REL_TOLERANCE`].
+pub const ABS_TOLERANCE: f32 = 1e-5;
+
+/// Whether two f32 values agree within the documented kernel
+/// tolerance: `|a - b| <= ABS_TOLERANCE + REL_TOLERANCE * max(|a|, |b|)`.
+pub fn close_enough(a: f32, b: f32) -> bool {
+    (a - b).abs() <= ABS_TOLERANCE + REL_TOLERANCE * a.abs().max(b.abs())
+}
+
+/// Validate SpMM operand shapes against the prepared matrix.
+fn check_operands(p: &PreparedBsr, x: &[f32], n: usize, y: &[f32]) -> Result<()> {
+    if x.len() != p.k * n {
+        return Err(Error::InvalidFormat(format!(
+            "x has {} elements, kernel needs {} x {n}",
+            x.len(),
+            p.k
+        )));
+    }
+    if y.len() != p.m * n {
+        return Err(Error::InvalidFormat(format!(
+            "y has {} elements, kernel needs {} x {n}",
+            y.len(),
+            p.m
+        )));
+    }
+    Ok(())
+}
+
+/// Single-threaded tiled SpMM: `y = A x` with `A` prepared, `x`
+/// row-major `k x n`, `y` row-major `m x n`. Overwrites all of `y`
+/// (no pre-zeroing needed).
+pub fn spmm(p: &PreparedBsr, x: &[f32], n: usize, y: &mut [f32]) -> Result<()> {
+    check_operands(p, x, n, y)?;
+    spmm_rows(p, x, n, 0, p.mb(), y);
+    Ok(())
+}
+
+/// Compute block-rows `[r0, r1)` into `y_panel`, the panel's own
+/// output slice of length `(r1 - r0) * b * n`. Dispatches to the
+/// block-size-specialized microkernel. This is the unit of work a
+/// parallel panel executes; `spmm` is the single-panel case.
+pub(crate) fn spmm_rows(
+    p: &PreparedBsr,
+    x: &[f32],
+    n: usize,
+    r0: usize,
+    r1: usize,
+    y_panel: &mut [f32],
+) {
+    debug_assert_eq!(y_panel.len(), (r1 - r0) * p.b * n);
+    match p.b {
+        4 => spmm_rows_b::<4>(p, x, n, r0, r1, y_panel),
+        8 => spmm_rows_b::<8>(p, x, n, r0, r1, y_panel),
+        16 => spmm_rows_b::<16>(p, x, n, r0, r1, y_panel),
+        _ => spmm_rows_generic(p, x, n, r0, r1, y_panel),
+    }
+}
+
+/// The monomorphized microkernel: `B` is a compile-time block size, so
+/// the accumulator panel `[[f32; N_TILE]; B]` is a fixed-size stack
+/// array and every inner loop has a constant trip count.
+fn spmm_rows_b<const B: usize>(
+    p: &PreparedBsr,
+    x: &[f32],
+    n: usize,
+    r0: usize,
+    r1: usize,
+    y_panel: &mut [f32],
+) {
+    debug_assert_eq!(p.b, B);
+    let bsz = B * B;
+    for (ri, r) in (r0..r1).enumerate() {
+        let (lo, hi) = (p.row_ptr[r] as usize, p.row_ptr[r + 1] as usize);
+        let out = &mut y_panel[ri * B * n..(ri + 1) * B * n];
+        if lo == hi {
+            out.fill(0.0);
+            continue;
+        }
+        let mut j = 0;
+        while j + N_TILE <= n {
+            let mut acc = [[0f32; N_TILE]; B];
+            for blk in lo..hi {
+                let c = p.cols[blk] as usize;
+                let vals = &p.values[blk * bsz..(blk + 1) * bsz];
+                for bc in 0..B {
+                    let xrow = &x[(c * B + bc) * n + j..][..N_TILE];
+                    for (br, acc_row) in acc.iter_mut().enumerate() {
+                        let w = vals[br * B + bc];
+                        for (a, &xv) in acc_row.iter_mut().zip(xrow) {
+                            *a += w * xv;
+                        }
+                    }
+                }
+            }
+            for (br, acc_row) in acc.iter().enumerate() {
+                out[br * n + j..br * n + j + N_TILE].copy_from_slice(acc_row);
+            }
+            j += N_TILE;
+        }
+        if j < n {
+            let rem = n - j;
+            let mut acc = [[0f32; N_TILE]; B];
+            for blk in lo..hi {
+                let c = p.cols[blk] as usize;
+                let vals = &p.values[blk * bsz..(blk + 1) * bsz];
+                for bc in 0..B {
+                    let xrow = &x[(c * B + bc) * n + j..][..rem];
+                    for (br, acc_row) in acc.iter_mut().enumerate() {
+                        let w = vals[br * B + bc];
+                        for (a, &xv) in acc_row.iter_mut().zip(xrow) {
+                            *a += w * xv;
+                        }
+                    }
+                }
+            }
+            for (br, acc_row) in acc.iter().enumerate() {
+                out[br * n + j..br * n + n].copy_from_slice(&acc_row[..rem]);
+            }
+        }
+    }
+}
+
+/// Structurally identical fallback for block sizes without a
+/// monomorphized kernel (`b = 1` unstructured patterns, odd sizes).
+/// The accumulator panel is one reusable heap buffer per call — the
+/// call covers a whole row range, so the allocation amortizes.
+fn spmm_rows_generic(
+    p: &PreparedBsr,
+    x: &[f32],
+    n: usize,
+    r0: usize,
+    r1: usize,
+    y_panel: &mut [f32],
+) {
+    let b = p.b;
+    let bsz = b * b;
+    let mut acc = vec![0f32; b * N_TILE];
+    for (ri, r) in (r0..r1).enumerate() {
+        let (lo, hi) = (p.row_ptr[r] as usize, p.row_ptr[r + 1] as usize);
+        let out = &mut y_panel[ri * b * n..(ri + 1) * b * n];
+        if lo == hi {
+            out.fill(0.0);
+            continue;
+        }
+        let mut j = 0;
+        while j < n {
+            let tile = N_TILE.min(n - j);
+            acc.fill(0.0);
+            for blk in lo..hi {
+                let c = p.cols[blk] as usize;
+                let vals = &p.values[blk * bsz..(blk + 1) * bsz];
+                for bc in 0..b {
+                    let xrow = &x[(c * b + bc) * n + j..][..tile];
+                    for br in 0..b {
+                        let w = vals[br * b + bc];
+                        let acc_row = &mut acc[br * N_TILE..br * N_TILE + tile];
+                        for (a, &xv) in acc_row.iter_mut().zip(xrow) {
+                            *a += w * xv;
+                        }
+                    }
+                }
+            }
+            for br in 0..b {
+                out[br * n + j..br * n + j + tile]
+                    .copy_from_slice(&acc[br * N_TILE..br * N_TILE + tile]);
+            }
+            j += tile;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::patterns;
+    use crate::util::Rng;
+
+    fn reference(p: &PreparedBsr, x: &[f32], n: usize) -> Vec<f32> {
+        p.to_block_coo().unwrap().spmm_dense(x, n).unwrap()
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], context: &str) {
+        assert_eq!(a.len(), b.len(), "{context}: length");
+        for (i, (&u, &v)) in a.iter().zip(b).enumerate() {
+            assert!(close_enough(u, v), "{context}: element {i}: {u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn specialized_kernels_match_reference() {
+        let mut rng = Rng::seed_from_u64(0xBEEF);
+        for &b in &[4usize, 8, 16] {
+            for &n in &[1usize, 16, 33] {
+                let mb = 6;
+                let mask =
+                    patterns::uniform(mb * b, mb * b, b, mb * mb / 3, rng.next_u64()).unwrap();
+                let coo = patterns::with_values(&mask, rng.next_u64());
+                let p = PreparedBsr::from_coo(&coo);
+                let x: Vec<f32> = (0..p.k * n).map(|_| rng.normal() as f32).collect();
+                let mut y = vec![f32::NAN; p.m * n];
+                spmm(&p, &x, n, &mut y).unwrap();
+                assert_close(&y, &reference(&p, &x, n), &format!("b={b} n={n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn generic_fallback_matches_reference() {
+        let mut rng = Rng::seed_from_u64(0xFA11);
+        for &b in &[1usize, 2, 5] {
+            let mb = 9;
+            let n = 19;
+            let mask = patterns::uniform(mb * b, mb * b, b, mb * mb / 2, rng.next_u64()).unwrap();
+            let coo = patterns::with_values(&mask, rng.next_u64());
+            let p = PreparedBsr::from_coo(&coo);
+            let x: Vec<f32> = (0..p.k * n).map(|_| rng.normal() as f32).collect();
+            let mut y = vec![f32::NAN; p.m * n];
+            spmm(&p, &x, n, &mut y).unwrap();
+            assert_close(&y, &reference(&p, &x, n), &format!("b={b}"));
+        }
+    }
+
+    #[test]
+    fn empty_rows_are_zero_filled_without_prezeroing() {
+        // One block at (0, 0) in a 3x3 grid: rows 1-2 must come out
+        // zero even though y starts as NaN garbage.
+        let coo = crate::sparse::coo::BlockCoo::new(
+            12,
+            12,
+            4,
+            vec![0],
+            vec![0],
+            vec![1.0; 16],
+        )
+        .unwrap();
+        let p = PreparedBsr::from_coo(&coo);
+        let n = 5;
+        let x = vec![1f32; p.k * n];
+        let mut y = vec![f32::NAN; p.m * n];
+        spmm(&p, &x, n, &mut y).unwrap();
+        assert!(y[..4 * n].iter().all(|&v| v == 4.0), "populated block-row");
+        assert!(y[4 * n..].iter().all(|&v| v == 0.0), "empty block-rows zeroed");
+    }
+
+    #[test]
+    fn operand_shape_errors_not_panics() {
+        let coo = crate::sparse::coo::BlockCoo::new(4, 4, 2, vec![], vec![], vec![]).unwrap();
+        let p = PreparedBsr::from_coo(&coo);
+        let mut y = vec![0f32; 8];
+        assert!(spmm(&p, &[0.0; 7], 2, &mut y).is_err());
+        assert!(spmm(&p, &[0.0; 8], 2, &mut y[..7]).is_err());
+        assert!(spmm(&p, &[0.0; 8], 2, &mut y).is_ok());
+    }
+}

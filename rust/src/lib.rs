@@ -58,6 +58,7 @@ pub mod engine;
 pub mod error;
 pub mod fit;
 pub mod gpu;
+pub mod kernels;
 pub mod runtime;
 pub mod sim;
 pub mod sparse;

@@ -31,11 +31,14 @@ fn usage() -> ! {
          \x20 bench  <experiment|all> [--calibrated]  regenerate paper tables/figures\n\
          \x20        experiments: table3 fig2 fig3a fig3b fig4a fig4b fig4c fig7 auto churn ell conclusions\n\
          \x20        --calibrated: add the observed-cycle-calibrated crossover arm to `auto`\n\
+         \x20 bench  wall [--smoke] [--threads N]  measured kernel GFLOP/s: naive-ref vs\n\
+         \x20        prepared-tiled vs row-panel-parallel (reported, never gated)\n\
          \x20 bench  ci [--out FILE] [--seed-baseline]  churn-sweep + calibrated crossover,\n\
          \x20        machine-readable points to FILE (default BENCH_ci.json)\n\
          \x20 bench  gate [--baseline FILE] [--current FILE] [--tolerance F]\n\
          \x20        fail on >F cycle-estimate regression vs the committed baseline (default 0.10)\n\
-         \x20 serve  [--jobs N] [--workers W]   synthetic serving workload\n\
+         \x20 serve  [--jobs N] [--workers W] [--numeric]  synthetic serving workload\n\
+         \x20        --numeric: execute every batch's f32 kernel and report measured wall time\n\
          \x20 list                              list AOT artifacts"
     );
     std::process::exit(2);
@@ -215,6 +218,7 @@ fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
     match which {
         "ci" => return cmd_bench_ci(&flags),
         "gate" => return cmd_bench_gate(&flags),
+        "wall" => return cmd_bench_wall(&flags),
         _ => {}
     }
     let env = Env::default();
@@ -275,6 +279,24 @@ fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
     }
     if all || which == "conclusions" {
         run("conclusions", vec![experiments::conclusions(&env)])?;
+    }
+    println!("(CSV written under {})", out_dir.display());
+    Ok(())
+}
+
+/// `repro bench wall`: measure naive-ref vs prepared-tiled vs
+/// parallel kernel GFLOP/s on the host (`--smoke` for the tiny CI
+/// shapes; `--threads N` to bound the panel parallelism). Wall-time
+/// numbers are machine-dependent: they are reported (and recorded in
+/// EXPERIMENTS.md), never fed to the regression gate.
+fn cmd_bench_wall(flags: &HashMap<String, String>) -> popsparse::Result<()> {
+    let smoke = flags.contains_key("smoke");
+    let threads = flag_usize(flags, "threads", popsparse::kernels::default_threads());
+    let tables = popsparse::bench_harness::wall::wall_tables(smoke, threads)?;
+    let out_dir = std::path::Path::new("target/bench_results");
+    for (i, t) in tables.iter().enumerate() {
+        t.print();
+        t.write_csv(out_dir.join(format!("wall_{i}.csv")))?;
     }
     println!("(CSV written under {})", out_dir.display());
     Ok(())
@@ -377,12 +399,16 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
     let flags = parse_flags(args);
     let jobs = flag_usize(&flags, "jobs", 200);
     let workers = flag_usize(&flags, "workers", 4);
+    let numeric = flags.contains_key("numeric");
     let coordinator = Coordinator::new(
-        Config { workers, ..Config::default() },
+        Config { workers, numeric, ..Config::default() },
         IpuSpec::default(),
         CostModel::default(),
     );
-    println!("serving {jobs} synthetic SpMM jobs on {workers} workers...");
+    println!(
+        "serving {jobs} synthetic SpMM jobs on {workers} workers{}...",
+        if numeric { " (numeric kernels on)" } else { "" }
+    );
     let mut rng = popsparse::util::Rng::seed_from_u64(1);
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..jobs)
@@ -462,6 +488,25 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
     println!(
         "workload-aware serving: {} churn shifts, {} re-keyed batches -> {} sub-batches",
         snap.churn_shifts, snap.rekeyed_batches, snap.rekeyed_groups
+    );
+    if numeric {
+        let (prep_hits, prep_misses) = coordinator.plan_cache().prepared_stats();
+        println!(
+            "numeric kernels: {} execs ({} failed), wall total {:?} (p50 {:?} p99 {:?}), \
+             {:.2} GFLOP/s aggregate; prepared operands {prep_hits} hits / {prep_misses} \
+             misses, {} conversions",
+            snap.kernel_execs,
+            snap.kernel_failures,
+            snap.kernel_wall_total,
+            snap.kernel_wall_p50,
+            snap.kernel_wall_p99,
+            snap.kernel_gflops,
+            coordinator.plan_cache().prepared_conversions()
+        );
+    }
+    println!(
+        "worker queue: {} waits, {:?} total blocked",
+        snap.queue_waits, snap.queue_wait_total
     );
     println!(
         "latency p50 {:?} p99 {:?} max {:?}; simulated device cycles {}",

@@ -8,12 +8,19 @@
 //!
 //! Execution backend: the offline build ships no PJRT bindings (the
 //! published `xla` crate needs a vendored `xla_extension` toolchain),
-//! so artifacts run on a built-in *reference interpreter* — a
-//! kernel-for-kernel Rust port of `python/compile/kernels/ref.py`
-//! dispatched on the manifest's artifact `kind` (`spmm`, `dense`,
-//! `mlp`). The interpreter computes exactly what the lowered HLO
-//! computes, so oracle checks and the serving examples are unchanged;
-//! see DESIGN.md §5 for the PJRT integration notes (HLO is exported as
+//! so artifacts are interpreted in Rust, dispatched on the manifest's
+//! artifact `kind` (`spmm`, `dense`, `mlp`). Since PR 4 the hot path
+//! runs on the native compute layer ([`crate::kernels`]): block
+//! operands are converted to [`PreparedBsr`] and executed through the
+//! block-size-specialized tiled kernels (row-panel parallel for large
+//! shapes), dense matmuls through the `ikj`-tiled kernel, and the
+//! `mlp` layer loop ping-pongs two reusable activation buffers instead
+//! of allocating a fresh `Vec` per layer. The naive triple-loop ports
+//! of `python/compile/kernels/ref.py` remain here as [`spmm_ref`] and
+//! [`dense_ref`] — the differential oracle; kernel output agrees with
+//! them within the documented tolerance
+//! ([`crate::kernels::close_enough`], DESIGN.md §5), not bit-equality.
+//! See DESIGN.md §6 for the PJRT integration notes (HLO is exported as
 //! *text*, not HloModuleProto, because jax ≥ 0.5 emits 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects).
 
@@ -22,6 +29,7 @@ pub mod artifact;
 pub use artifact::{ArgSpec, ArtifactMeta, LayerMeta, Manifest};
 
 use crate::error::{Error, Result};
+use crate::kernels::{self, PreparedBsr};
 use crate::sparse::coo::BlockCoo;
 
 /// A concrete argument for an artifact execution.
@@ -106,6 +114,15 @@ impl Runtime {
 
     /// Execute an artifact with the given arguments (manifest order).
     /// Returns the flattened f32 output.
+    ///
+    /// The runtime API is deliberately stateless: block operands are
+    /// runtime *arguments* here (any pattern per call), so each call
+    /// relays them into the kernel layout — for row-sorted operands
+    /// (the `BlockCoo` contract every caller follows) that is a bulk
+    /// copy, not a scatter. Callers with a steady pattern working set
+    /// should serve through the coordinator, whose plan cache holds
+    /// prepared operands across calls
+    /// ([`PlanCache::get_or_prepare`](crate::coordinator::PlanCache::get_or_prepare)).
     pub fn execute(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<f32>> {
         let meta = self.manifest.get(name)?.clone();
         if args.len() != meta.args.len() {
@@ -140,12 +157,17 @@ impl Runtime {
                 let x = args[3].as_f32()?;
                 check_coords(rows, cols, meta.m, meta.k, meta.b, name)?;
                 check_spmm_operands(values, rows, cols, x, meta.k, meta.b, meta.n, name)?;
-                Ok(spmm_ref(values, rows, cols, x, meta.m, meta.b, meta.n))
+                let prep = PreparedBsr::from_parts(meta.m, meta.k, meta.b, rows, cols, values);
+                let mut y = vec![0f32; meta.m * meta.n];
+                kernels::spmm_auto(&prep, x, meta.n, &mut y, kernels::default_threads())?;
+                Ok(y)
             }
             "dense" => {
                 let a = args[0].as_f32()?;
                 let x = args[1].as_f32()?;
-                Ok(dense_ref(a, x, meta.m, meta.k, meta.n))
+                let mut y = vec![0f32; meta.m * meta.n];
+                kernels::dense::matmul(a, x, meta.m, meta.k, meta.n, &mut y)?;
+                Ok(y)
             }
             "mlp" => {
                 if meta.layers.is_empty() {
@@ -169,8 +191,16 @@ impl Runtime {
                     )));
                 }
                 let x = args[args.len() - 1].as_f32()?;
-                let mut h = x.to_vec();
+                // Ping-pong two reusable activation buffers through the
+                // layer loop (the old path allocated a fresh output
+                // `Vec` per layer): `cur` holds the layer input, `next`
+                // is resized (capacity reused) only when the layer's
+                // output geometry differs, and the kernel overwrites
+                // every element, so no re-zeroing is needed.
+                let mut cur = x.to_vec();
+                let mut next: Vec<f32> = Vec::new();
                 let last = meta.layers.len() - 1;
+                let threads = kernels::default_threads();
                 for (li, layer) in meta.layers.iter().enumerate() {
                     let values = args[3 * li].as_f32()?;
                     let rows = args[3 * li + 1].as_i32()?;
@@ -179,15 +209,19 @@ impl Runtime {
                     // Layer chaining: the activation must be exactly the
                     // layer's k x n operand, or the manifest is broken
                     // (e.g. layers[i].k != layers[i-1].m).
-                    check_spmm_operands(values, rows, cols, &h, layer.k, layer.b, n, name)?;
-                    h = spmm_ref(values, rows, cols, &h, layer.m, layer.b, n);
+                    check_spmm_operands(values, rows, cols, &cur, layer.k, layer.b, n, name)?;
+                    let prep =
+                        PreparedBsr::from_parts(layer.m, layer.k, layer.b, rows, cols, values);
+                    next.resize(layer.m * n, 0.0);
+                    kernels::spmm_auto(&prep, &cur, n, &mut next, threads)?;
                     if li != last {
-                        for v in &mut h {
+                        for v in &mut next {
                             *v = v.max(0.0);
                         }
                     }
+                    std::mem::swap(&mut cur, &mut next);
                 }
-                Ok(h)
+                Ok(cur)
             }
             other => Err(Error::Runtime(format!("{name}: unknown artifact kind '{other}'"))),
         }
@@ -281,7 +315,10 @@ fn check_coords(rows: &[i32], cols: &[i32], m: usize, k: usize, b: usize, name: 
 /// blocks, `rows`/`cols` their block coordinates, `x` a row-major
 /// `k x n` operand. Same loop structure (and therefore the same f32
 /// summation order) as [`BlockCoo::spmm_dense`] and `ref.bsr_spmm_ref`.
-fn spmm_ref(values: &[f32], rows: &[i32], cols: &[i32], x: &[f32], m: usize, b: usize, n: usize) -> Vec<f32> {
+/// This is the naive-ref arm of the differential oracle — the tiled
+/// kernels in [`crate::kernels`] are tested against it (and `repro
+/// bench wall` measures it) but never replace it.
+pub fn spmm_ref(values: &[f32], rows: &[i32], cols: &[i32], x: &[f32], m: usize, b: usize, n: usize) -> Vec<f32> {
     let mut y = vec![0f32; m * n];
     let bsz = b * b;
     for i in 0..rows.len() {
@@ -305,8 +342,10 @@ fn spmm_ref(values: &[f32], rows: &[i32], cols: &[i32], x: &[f32], m: usize, b: 
 }
 
 /// Reference dense matmul: `a` is row-major `m x k`, `x` row-major
-/// `k x n`. Same loop order as [`crate::sparse::Dense::matmul`].
-fn dense_ref(a: &[f32], x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// `k x n`. Same loop order as [`crate::sparse::Dense::matmul`]. Like
+/// [`spmm_ref`], this is the oracle arm the tiled
+/// [`crate::kernels::dense::matmul`] is measured and tested against.
+pub fn dense_ref(a: &[f32], x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut y = vec![0f32; m * n];
     for i in 0..m {
         for l in 0..k {

@@ -142,9 +142,15 @@ impl BlockCoo {
         out
     }
 
-    /// SpMM against a dense `k x n` matrix (row-major), on the CPU.
-    /// Used as the oracle in integration tests and by the examples when
-    /// double-checking runtime output.
+    /// SpMM against a dense `k x n` matrix (row-major), on the CPU —
+    /// the naive-ref triple loop, kept deliberately simple: it is the
+    /// differential oracle for the tiled/parallel kernels in
+    /// [`crate::kernels`] (which agree with it within the documented
+    /// tolerance, see [`crate::kernels::close_enough`]), the baseline
+    /// arm of `repro bench wall`, and the double-check the examples
+    /// run against runtime output. Hot paths should convert once to
+    /// [`crate::kernels::PreparedBsr`] and use the kernel layer
+    /// instead.
     pub fn spmm_dense(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
         if x.len() != self.k * n {
             return Err(Error::InvalidFormat(format!(

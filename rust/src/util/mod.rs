@@ -5,6 +5,8 @@ pub mod json;
 pub mod lru;
 pub mod rng;
 pub mod timing;
+pub mod work_queue;
 
 pub use lru::LruMap;
 pub use rng::Rng;
+pub use work_queue::WorkQueue;

@@ -1,0 +1,146 @@
+//! A tiny blocking MPMC work queue (mutex + condvar).
+//!
+//! The coordinator's worker pool previously shared one
+//! `mpsc::Receiver` behind a `Mutex`, so an idle worker blocked
+//! *inside* `recv` while holding the lock: every other worker queued
+//! on the mutex instead of the channel, and wakeups serialized through
+//! lock handoff even when several batches were ready. A condvar wait
+//! releases the lock, so here the lock is held only for the push/pop
+//! itself — contention is bounded by queue bookkeeping, not by how
+//! long a worker sleeps. [`WorkQueue::pop`] also reports how long the
+//! caller waited, feeding the coordinator's worker queue-wait metric.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Blocking multi-producer multi-consumer FIFO queue.
+#[derive(Debug)]
+pub struct WorkQueue<T> {
+    inner: Mutex<Inner<T>>,
+    ready: Condvar,
+}
+
+#[derive(Debug)]
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Default for WorkQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue an item; returns `false` (dropping the item) if the
+    /// queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().expect("work queue poisoned");
+        if g.closed {
+            return false;
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Close the queue: no further pushes are accepted; consumers
+    /// drain the remaining items and then see `None`.
+    pub fn close(&self) {
+        self.inner.lock().expect("work queue poisoned").closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Dequeue, blocking until an item arrives or the queue is closed
+    /// and drained. Returns the item (or `None` on close) and how long
+    /// this call waited — the consumer's queue-wait time.
+    pub fn pop(&self) -> (Option<T>, Duration) {
+        let t0 = Instant::now();
+        let mut g = self.inner.lock().expect("work queue poisoned");
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return (Some(item), t0.elapsed());
+            }
+            if g.closed {
+                return (None, t0.elapsed());
+            }
+            g = self.ready.wait(g).expect("work queue poisoned");
+        }
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("work queue poisoned").items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_and_close_semantics() {
+        let q = WorkQueue::new();
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().0, Some(1));
+        q.close();
+        assert!(!q.push(3), "closed queue rejects pushes");
+        assert_eq!(q.pop().0, Some(2), "close drains remaining items");
+        assert_eq!(q.pop().0, None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn concurrent_consumers_each_get_items_exactly_once() {
+        let q = Arc::new(WorkQueue::new());
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let (Some(item), _) = q.pop() {
+                        got.push(item);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..100 {
+            q.push(i);
+        }
+        q.close();
+        let mut all: Vec<i32> =
+            consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pop_reports_wait_time() {
+        let q = Arc::new(WorkQueue::new());
+        let qc = q.clone();
+        let waiter = std::thread::spawn(move || qc.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(7u8);
+        let (item, waited) = waiter.join().unwrap();
+        assert_eq!(item, Some(7));
+        assert!(waited >= Duration::from_millis(10), "waited {waited:?}");
+    }
+}

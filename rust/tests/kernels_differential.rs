@@ -1,0 +1,193 @@
+//! Differential tests of the native compute layer (`popsparse::kernels`)
+//! against the naive reference kernels, under the documented tolerance
+//! contract (`kernels::close_enough`, DESIGN.md §5):
+//!
+//! * prepared/tiled/parallel SpMM vs `BlockCoo::spmm_dense` across
+//!   block sizes {1, 4, 8, 16}, odd `n` (tile remainder), empty
+//!   patterns, single-block matrices, and a heavily row-skewed
+//!   pattern (exercises the nnz-balanced panel partitioning);
+//! * the tiled dense kernel vs `runtime::dense_ref`;
+//! * the `PreparedBsr -> BlockCoo` round-trip property (exact, not
+//!   tolerance-based: preparation is a relayout, not arithmetic);
+//! * the serving-side invariant that steady-state numeric serving
+//!   performs zero `BlockCoo -> PreparedBsr` conversions (pinned via
+//!   the plan cache's conversion counter).
+
+use std::time::Duration;
+
+use popsparse::coordinator::{Config, Coordinator, JobSpec, Mode};
+use popsparse::kernels::{self, PreparedBsr};
+use popsparse::runtime;
+use popsparse::sim::chip::{CostModel, IpuSpec};
+use popsparse::sparse::coo::BlockCoo;
+use popsparse::sparse::patterns;
+use popsparse::util::Rng;
+use popsparse::DType;
+
+fn assert_close(got: &[f32], want: &[f32], context: &str) {
+    assert_eq!(got.len(), want.len(), "{context}: output length");
+    for (i, (&u, &v)) in got.iter().zip(want).enumerate() {
+        assert!(kernels::close_enough(u, v), "{context}: element {i}: {u} vs {v}");
+    }
+}
+
+/// Run every kernel path on `coo` and compare against the naive
+/// reference: single-threaded tiled, parallel at several thread
+/// counts, and auto dispatch.
+fn check_all_paths(coo: &BlockCoo, n: usize, rng: &mut Rng, context: &str) {
+    let p = PreparedBsr::from_coo(coo);
+    let x: Vec<f32> = (0..coo.k * n).map(|_| rng.normal() as f32).collect();
+    let want = coo.spmm_dense(&x, n).unwrap();
+    // Outputs start as NaN so "writes every element exactly once"
+    // failures (stale or skipped slots) cannot hide.
+    let mut y = vec![f32::NAN; coo.m * n];
+    kernels::spmm(&p, &x, n, &mut y).unwrap();
+    assert_close(&y, &want, &format!("{context} tiled"));
+    for threads in [2usize, 3, 8] {
+        let mut y_par = vec![f32::NAN; coo.m * n];
+        kernels::spmm_parallel(&p, &x, n, &mut y_par, threads).unwrap();
+        assert_eq!(y, y_par, "{context}: parallel({threads}) must equal single-threaded");
+    }
+    let mut y_auto = vec![f32::NAN; coo.m * n];
+    kernels::spmm_auto(&p, &x, n, &mut y_auto, 4).unwrap();
+    assert_eq!(y, y_auto, "{context}: auto dispatch");
+}
+
+#[test]
+fn kernels_match_reference_across_block_sizes_and_odd_n() {
+    let mut rng = Rng::seed_from_u64(0x5EED);
+    for &b in &[1usize, 4, 8, 16] {
+        // n values straddling the N_TILE boundary: sub-tile, exact
+        // tiles, and remainders.
+        for &n in &[1usize, 7, 16, 17, 48, 51] {
+            let mb = 8;
+            let grid = mb * mb;
+            let nnz = grid / 3;
+            let mask = patterns::uniform(mb * b, mb * b, b, nnz, rng.next_u64()).unwrap();
+            let coo = patterns::with_values(&mask, rng.next_u64());
+            check_all_paths(&coo, n, &mut rng, &format!("b={b} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn kernels_handle_empty_and_single_block_patterns() {
+    let mut rng = Rng::seed_from_u64(0xE0);
+    // Entirely empty pattern: all output rows zero-filled.
+    let empty = BlockCoo::new(32, 32, 4, vec![], vec![], vec![]).unwrap();
+    check_all_paths(&empty, 9, &mut rng, "empty");
+    // A single block in a corner of a larger grid.
+    for &b in &[1usize, 16] {
+        let vals: Vec<f32> = (0..b * b).map(|i| i as f32 - 1.5).collect();
+        let single = BlockCoo::new(8 * b, 8 * b, b, vec![5], vec![2], vals).unwrap();
+        check_all_paths(&single, 17, &mut rng, &format!("single-block b={b}"));
+    }
+}
+
+#[test]
+fn kernels_handle_heavy_row_skew_and_panels_stay_balanced() {
+    let mut rng = Rng::seed_from_u64(0x5CE4);
+    // Heavy power-law skew: most nnz in a few block-rows — the shape
+    // that serializes a row-count partition.
+    let mask = patterns::row_imbalanced(512, 512, 16, 400, 2.5, 13).unwrap();
+    let coo = patterns::with_values(&mask, 13);
+    check_all_paths(&coo, 33, &mut rng, "row-skewed");
+    let p = PreparedBsr::from_coo(&coo);
+    let panels = kernels::partition_panels(&p, 4);
+    assert!(panels.len() >= 2, "skewed pattern still splits: {panels:?}");
+    let heaviest = panels.iter().map(|&(r0, r1)| p.nnz_in_rows(r0, r1)).max().unwrap();
+    assert!(
+        heaviest <= p.nnz_blocks() / 2,
+        "nnz-balanced panels bound the heaviest panel: {heaviest}/{}",
+        p.nnz_blocks()
+    );
+}
+
+#[test]
+fn prepared_round_trips_block_coo_exactly() {
+    // Property: from_coo . to_block_coo is the identity — coordinates
+    // and values bit-for-bit — across randomized patterns.
+    let mut rng = Rng::seed_from_u64(0x707);
+    for _ in 0..40 {
+        let b = [1usize, 2, 4, 8, 16][rng.below(5)];
+        let mb = rng.range(1, 10);
+        let kb = rng.range(1, 10);
+        let nnz = rng.range(0, mb * kb + 1);
+        let coo = if nnz == 0 {
+            BlockCoo::new(mb * b, kb * b, b, vec![], vec![], vec![]).unwrap()
+        } else {
+            let mask = patterns::uniform(mb * b, kb * b, b, nnz, rng.next_u64()).unwrap();
+            patterns::with_values(&mask, rng.next_u64())
+        };
+        let back = PreparedBsr::from_coo(&coo).to_block_coo().unwrap();
+        assert_eq!(coo, back, "b={b} mb={mb} kb={kb} nnz={nnz}");
+    }
+}
+
+#[test]
+fn tiled_dense_matches_reference_kernel() {
+    let mut rng = Rng::seed_from_u64(0xDE2);
+    for &(m, k, n) in &[(64usize, 64usize, 64usize), (33, 65, 17), (5, 128, 1)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![f32::NAN; m * n];
+        kernels::dense::matmul(&a, &x, m, k, n, &mut y).unwrap();
+        assert_close(&y, &runtime::dense_ref(&a, &x, m, k, n), &format!("m={m} k={k} n={n}"));
+    }
+}
+
+fn job(mode: Mode, n: usize, seed: u64) -> JobSpec {
+    JobSpec {
+        mode,
+        m: 512,
+        k: 512,
+        n,
+        b: 16,
+        density: 1.0 / 8.0,
+        dtype: DType::Fp16,
+        pattern_seed: seed,
+    }
+}
+
+#[test]
+fn steady_state_numeric_serving_never_reconverts() {
+    // The acceptance invariant: once a pattern's prepared operand is
+    // cached, plan-cache-hit traffic performs zero BlockCoo ->
+    // PreparedBsr conversions — pinned through the conversion counter,
+    // across static and dynamic modes and changing batch shapes.
+    let c = Coordinator::new(
+        Config {
+            workers: 1,
+            max_batch_n: 64,
+            max_batch_delay: Duration::from_millis(1),
+            numeric: true,
+            ..Config::default()
+        },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    let warm = c.submit_wait(job(Mode::Static, 64, 3)).unwrap();
+    assert!(warm.cycles > 0);
+    assert_eq!(c.plan_cache().prepared_conversions(), 1, "first sight converts once");
+    // Steady state: same pattern again (plan-cache hit), a different
+    // batch shape, and the dynamic mode on the same pattern.
+    let again = c.submit_wait(job(Mode::Static, 64, 3)).unwrap();
+    assert!(again.plan_cache_hit, "steady-state premise: the plan was cached");
+    let _ = c.submit_wait(job(Mode::Static, 32, 3)).unwrap();
+    let _ = c.submit_wait(job(Mode::Dynamic, 64, 3)).unwrap();
+    assert_eq!(
+        c.plan_cache().prepared_conversions(),
+        1,
+        "steady-state serving must perform zero further conversions"
+    );
+    let (hits, misses) = c.plan_cache().prepared_stats();
+    assert_eq!((hits, misses), (3, 1));
+    // A genuinely new pattern converts (once).
+    let _ = c.submit_wait(job(Mode::Static, 64, 4)).unwrap();
+    assert_eq!(c.plan_cache().prepared_conversions(), 2);
+    let snap = c.metrics();
+    assert_eq!(snap.kernel_execs, 5, "every batch ran its kernel");
+    assert_eq!(snap.kernel_failures, 0);
+    assert!(snap.kernel_gflops > 0.0, "serving throughput is observable in GFLOP/s");
+    c.shutdown();
+}

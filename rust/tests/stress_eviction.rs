@@ -21,12 +21,19 @@ fn open_world_trace_keeps_every_map_bounded() {
     let caches = CacheConfig {
         plan_capacity: 16,
         memo_capacity: 8,
+        prepared_capacity: 4,
         calibration_capacity: 16,
         hint_capacity: 8,
         churn_capacity: 8,
     };
     let c = Coordinator::new(
-        Config { workers: 4, max_batch_n: 128, max_batch_delay: Duration::from_millis(1), caches },
+        Config {
+            workers: 4,
+            max_batch_n: 128,
+            max_batch_delay: Duration::from_millis(1),
+            caches,
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );
@@ -81,7 +88,13 @@ fn readmitted_auto_geometry_rederives_its_decision() {
     // are structurally impossible after eviction.
     let caches = CacheConfig { memo_capacity: 1, ..CacheConfig::default() };
     let c = Coordinator::new(
-        Config { workers: 1, max_batch_n: 64, max_batch_delay: Duration::from_millis(1), caches },
+        Config {
+            workers: 1,
+            max_batch_n: 64,
+            max_batch_delay: Duration::from_millis(1),
+            caches,
+            ..Config::default()
+        },
         IpuSpec::default(),
         CostModel::default(),
     );
@@ -116,6 +129,7 @@ fn paper_scale_trace_hit_rate_matches_unbounded() {
                 max_batch_n: 64,
                 max_batch_delay: Duration::from_millis(1),
                 caches,
+                ..Config::default()
             },
             IpuSpec::default(),
             CostModel::default(),
@@ -138,6 +152,7 @@ fn paper_scale_trace_hit_rate_matches_unbounded() {
     let ((uh, um), _) = run(CacheConfig {
         plan_capacity: usize::MAX,
         memo_capacity: usize::MAX,
+        prepared_capacity: usize::MAX,
         calibration_capacity: usize::MAX,
         hint_capacity: usize::MAX,
         churn_capacity: usize::MAX,
