@@ -8,6 +8,10 @@
 //!    (the paper's crossover, as a serving-time decision).
 //! 4. Execute the same SpMM *numerically* through the AOT artifact
 //!    runtime and check it against the pure-Rust oracle.
+//! 5. Run the same operand through the FP16 storage kernels (f16
+//!    values, f32 accumulation — the AMP semantics the paper
+//!    benchmarks) and check it against the oracle under the f16
+//!    tolerance contract.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
@@ -111,6 +115,35 @@ fn main() -> popsparse::Result<()> {
         meta.m, meta.k, meta.n
     );
     assert!(max_err < 1e-3, "numeric check failed");
+
+    // --- 5. The same SpMM in FP16 storage ----------------------------
+    // The kernels are generic over the storage element: quantize the
+    // operand and the activations once, run the f16 kernel (f32
+    // accumulation), and compare against the f32 oracle evaluated on
+    // the same quantized values — the documented f16 contract.
+    use popsparse::kernels::{self, F16};
+    let prep16 = kernels::PreparedBsr::<F16>::from_coo(&coo);
+    let x16: Vec<F16> = kernels::quantize(&x);
+    let mut y16 = vec![F16::ZERO; meta.m * meta.n];
+    let t0 = std::time::Instant::now();
+    kernels::spmm_auto(&prep16, &x16, meta.n, &mut y16, kernels::default_threads())?;
+    let wall16 = t0.elapsed();
+    let expect16 = prep16.to_block_coo()?.spmm_dense(&kernels::dequantize(&x16), meta.n)?;
+    let max_err16 = kernels::dequantize(&y16)
+        .iter()
+        .zip(&expect16)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "fp16 storage path (same operand, half the value bytes): {wall16:?}, max |err| vs f32 oracle = {max_err16:e}"
+    );
+    assert!(
+        kernels::dequantize(&y16)
+            .iter()
+            .zip(&expect16)
+            .all(|(&a, &b)| kernels::close_enough_for(popsparse::DType::Fp16, a, b)),
+        "fp16 numeric check failed"
+    );
     println!("quickstart OK");
     Ok(())
 }

@@ -535,41 +535,46 @@ pub fn churn_sweep_points(env: &Env) -> (Table, Vec<(String, f64)>) {
 
 /// Machine-readable cycle-estimate points for the CI bench gate
 /// (`repro bench ci`): the churn-sweep scores plus the calibrated
-/// crossover grid's per-backend estimates ([`crossover_points`]).
-/// Everything here is a pure function of the frozen cost model and
-/// fixed seeds, so any drift is a code change, not noise.
+/// crossover grid's per-backend estimates ([`crossover_points`]),
+/// the latter in **both dtypes** — FP16 is where the paper's
+/// crossover lives and FP32 is where it moves, so the gate pins the
+/// cost model's dtype separation, not just one precision's absolute
+/// level. Everything here is a pure function of the frozen cost model
+/// and fixed seeds, so any drift is a code change, not noise.
 pub fn bench_ci_points(env: &Env) -> Vec<(String, f64)> {
     let mut points = churn_sweep_points(env).1;
     points.extend(crossover_points(env));
     points
 }
 
-/// The crossover grid's per-backend cycle estimates as gate points —
-/// including dynamic's *observed* row-imbalanced execution cycles,
-/// the propagation-tax input the calibrated arm learns from.
+/// The crossover grid's per-(backend, dtype) cycle estimates as gate
+/// points — including dynamic's *observed* row-imbalanced execution
+/// cycles, the propagation-tax input the calibrated arm learns from.
 pub fn crossover_points(env: &Env) -> Vec<(String, f64)> {
     let engine_env = EngineEnv::new(env.spec.clone(), env.cm.clone());
     let mut points = Vec::new();
-    for &m in &[1024usize, 2048, 4096] {
-        for inv_d in [2usize, 4, 8, 16, 32] {
-            let job = JobSpec {
-                mode: Mode::Auto,
-                m,
-                k: m,
-                n: 2048,
-                b: 16,
-                density: 1.0 / inv_d as f64,
-                dtype: DType::Fp16,
-                pattern_seed: seed_for(m, 16, inv_d),
-            };
-            let prefix = format!("crossover/m{m}_d{inv_d}");
-            for backend in device_backends() {
-                if let Ok(est) = backend.plan(&job, &engine_env) {
-                    points.push((format!("{prefix}/{}", est.kind), est.cycles as f64));
+    for &dtype in &[DType::Fp16, DType::Fp32] {
+        for &m in &[1024usize, 2048, 4096] {
+            for inv_d in [2usize, 4, 8, 16, 32] {
+                let job = JobSpec {
+                    mode: Mode::Auto,
+                    m,
+                    k: m,
+                    n: 2048,
+                    b: 16,
+                    density: 1.0 / inv_d as f64,
+                    dtype,
+                    pattern_seed: seed_for(m, 16, inv_d),
+                };
+                let prefix = format!("crossover/{dtype}/m{m}_d{inv_d}");
+                for backend in device_backends() {
+                    if let Ok(est) = backend.plan(&job, &engine_env) {
+                        points.push((format!("{prefix}/{}", est.kind), est.cycles as f64));
+                    }
                 }
-            }
-            if let Some(observed) = skewed_dynamic_cycles(&job, &engine_env) {
-                points.push((format!("{prefix}/dynamic_observed"), observed as f64));
+                if let Some(observed) = skewed_dynamic_cycles(&job, &engine_env) {
+                    points.push((format!("{prefix}/dynamic_observed"), observed as f64));
+                }
             }
         }
     }
@@ -740,6 +745,13 @@ mod tests {
         let keys: std::collections::BTreeSet<&str> =
             points.iter().map(|(k, _)| k.as_str()).collect();
         assert_eq!(keys.len(), points.len(), "point keys must be unique");
+        // Both dtypes are gated, and the cost model separates them:
+        // at the FP16 headline point static must be cheaper than its
+        // FP32 counterpart (half-width operands on an AMP device).
+        let find = |key: &str| points.iter().find(|(k, _)| k == key).map(|(_, v)| *v);
+        let st16 = find("crossover/fp16/m4096_d16/static").expect("fp16 static point");
+        let st32 = find("crossover/fp32/m4096_d16/static").expect("fp32 static point");
+        assert!(st16 < st32, "fp16 static {st16} must undercut fp32 {st32}");
         assert_eq!(points, bench_ci_points(&env), "bit-deterministic run over run");
     }
 

@@ -1,27 +1,37 @@
 //! Wall-time benchmark arm (`repro bench wall`): measured GFLOP/s of
 //! the naive reference kernels against the prepared-tiled and
-//! row-panel-parallel kernels of [`crate::kernels`].
+//! row-panel-parallel kernels of [`crate::kernels`], **per storage
+//! dtype** (f32 and the software-f16 storage kernels).
 //!
 //! Everything else in the bench harness reports *simulated device
-//! cycles*; this arm times the actual f32 arithmetic on the host —
-//! the one performance axis measurable on this machine, and the
-//! ROADMAP's "as fast as the hardware allows" made concrete. Three
-//! arms per sweep point:
+//! cycles*; this arm times the actual arithmetic on the host — the
+//! one performance axis measurable on this machine, and the ROADMAP's
+//! "as fast as the hardware allows" made concrete. Three arms per
+//! sweep point:
 //!
 //! * **naive-ref** — [`BlockCoo::spmm_dense`] (and
 //!   [`crate::runtime::dense_ref`] for the dense table): the
-//!   allocation-heavy triple loop that used to be the serving hot
-//!   path, kept as the differential oracle;
+//!   allocation-heavy f32 triple loop that used to be the serving hot
+//!   path, kept as the differential oracle. The naive arm always runs
+//!   f32 — it *is* the oracle — so the f16 rows read as "f16 storage
+//!   vs the f32 reference on the same (quantized) operands";
 //! * **prepared-tiled** — [`crate::kernels::spmm`] over a
-//!   [`PreparedBsr`], single-threaded;
+//!   [`PreparedBsr`] in the case's dtype, single-threaded;
 //! * **parallel** — [`crate::kernels::spmm_parallel`] across
 //!   nnz-balanced row panels.
 //!
-//! Each point is oracle-checked (tolerance contract, DESIGN.md §5)
-//! before it is timed. Wall-time numbers are machine-dependent and
-//! therefore **reported, never gated** — the CI bench gate compares
-//! only the deterministic cycle-estimate points (DESIGN.md §4.4);
-//! recorded sweeps live in EXPERIMENTS.md §Wall-time.
+//! The [`crossover_table`] is the paper's headline question asked of
+//! this host: at the same geometry, from what density down does the
+//! tiled *sparse* kernel beat the tiled *dense* kernel — per dtype
+//! (the FP16 ~90% crossover of Table 3, measured in wall time rather
+//! than simulated cycles; recorded in EXPERIMENTS.md §Wall-time).
+//!
+//! Each point is oracle-checked (per-dtype tolerance contract,
+//! DESIGN.md §5) before it is timed. Wall-time numbers are
+//! machine-dependent and therefore **reported, never gated** — the CI
+//! bench gate compares only the deterministic cycle-estimate points
+//! (DESIGN.md §4.4); table *shapes* (rows, columns, sweep points) are
+//! deterministic, which is what the smoke test pins.
 //!
 //! [`BlockCoo::spmm_dense`]: crate::sparse::coo::BlockCoo::spmm_dense
 
@@ -30,10 +40,12 @@ use std::time::Duration;
 use crate::bench_harness::report::{f2, Table};
 use crate::bench_harness::sweep::seed_for;
 use crate::error::Result;
-use crate::kernels::{self, fill_pseudo, PreparedBsr};
+use crate::kernels::{self, fill_pseudo, quantize, Element, PreparedBsr, F16};
 use crate::runtime;
+use crate::sparse::coo::BlockCoo;
 use crate::sparse::patterns;
 use crate::util::timing;
+use crate::DType;
 
 /// One sweep point of the sparse wall benchmark.
 #[derive(Debug, Clone, Copy)]
@@ -43,50 +55,104 @@ pub struct WallCase {
     pub n: usize,
     pub b: usize,
     pub inv_d: usize,
+    pub dtype: DType,
 }
 
 impl WallCase {
-    const fn new(m: usize, k: usize, n: usize, b: usize, inv_d: usize) -> Self {
-        Self { m, k, n, b, inv_d }
+    const fn new(m: usize, k: usize, n: usize, b: usize, inv_d: usize, dtype: DType) -> Self {
+        Self { m, k, n, b, inv_d, dtype }
     }
+}
+
+/// Both-dtype variants of a shape list (fp32 first, so the f32 rows of
+/// a sweep read together).
+fn per_dtype(shapes: &[(usize, usize, usize, usize, usize)]) -> Vec<WallCase> {
+    let mut cases = Vec::with_capacity(shapes.len() * 2);
+    for &dtype in &[DType::Fp32, DType::Fp16] {
+        for &(m, k, n, b, inv_d) in shapes {
+            cases.push(WallCase::new(m, k, n, b, inv_d, dtype));
+        }
+    }
+    cases
 }
 
 /// The full sweep: paper-scale shapes around the headline point
 /// (m = k = 4096, n = 512, b = 16, d = 1/16 — Table 3's geometry),
 /// block-size and density scaling, and an odd `n` so the tile
-/// remainder path is measured, not just tested.
+/// remainder path is measured, not just tested — each in both
+/// storage dtypes.
 pub fn paper_cases() -> Vec<WallCase> {
-    vec![
-        WallCase::new(1024, 1024, 512, 16, 16),
-        WallCase::new(2048, 2048, 512, 16, 16),
-        WallCase::new(4096, 4096, 512, 4, 16),
-        WallCase::new(4096, 4096, 512, 8, 16),
-        WallCase::new(4096, 4096, 512, 16, 16),
-        WallCase::new(4096, 4096, 512, 16, 32),
-        WallCase::new(4096, 4096, 509, 16, 16),
-    ]
+    per_dtype(&[
+        (1024, 1024, 512, 16, 16),
+        (2048, 2048, 512, 16, 16),
+        (4096, 4096, 512, 4, 16),
+        (4096, 4096, 512, 8, 16),
+        (4096, 4096, 512, 16, 16),
+        (4096, 4096, 512, 16, 32),
+        (4096, 4096, 509, 16, 16),
+    ])
 }
 
 /// Tiny shapes for the CI smoke run: every kernel path (specialized,
 /// generic b = 1, remainder tiles, parallel) exercised end-to-end in
-/// well under a second.
+/// well under a second, in both dtypes.
 pub fn smoke_cases() -> Vec<WallCase> {
-    vec![
-        WallCase::new(256, 256, 64, 16, 8),
-        WallCase::new(256, 256, 33, 4, 8),
-        WallCase::new(128, 128, 16, 1, 8),
-    ]
+    per_dtype(&[(256, 256, 64, 16, 8), (256, 256, 33, 4, 8), (128, 128, 16, 1, 8)])
+}
+
+/// Time the tiled and parallel arms of one case in storage type `E`,
+/// oracle-checking first. `x32` is the deterministic f32 operand
+/// stream; `expect` the f32 oracle on the (quantized) operands.
+/// Returns (tiled GFLOP/s, parallel GFLOP/s).
+fn time_sparse_arms<E: Element>(
+    case: &WallCase,
+    coo: &BlockCoo,
+    x32: &[f32],
+    expect: &[f32],
+    flops: f64,
+    budget: Duration,
+    threads: usize,
+) -> (f64, f64) {
+    let prep = PreparedBsr::<E>::from_coo(coo);
+    let x: Vec<E> = quantize(x32);
+    let mut y = vec![E::ZERO; case.m * case.n];
+
+    // Oracle check before timing: the measured kernels must be the
+    // correct kernels, under the dtype's documented tolerance.
+    kernels::spmm(&prep, &x, case.n, &mut y).expect("bench shapes are valid");
+    for (i, (&u, &v)) in y.iter().zip(expect).enumerate() {
+        let u = u.to_f32();
+        assert!(
+            kernels::close_enough_for(E::DTYPE, u, v),
+            "tiled {} kernel diverged from oracle at {i}: {u} vs {v}",
+            E::DTYPE
+        );
+    }
+
+    let tag = format!(
+        "m{} n{} b{} d1/{} {}",
+        case.m, case.n, case.b, case.inv_d, E::DTYPE
+    );
+    let tiled = timing::bench(&format!("spmm tiled    {tag}"), budget, 2, || {
+        let _ = kernels::spmm(&prep, &x, case.n, &mut y);
+    });
+    let par = timing::bench(&format!("spmm parallel {tag}"), budget, 2, || {
+        let _ = kernels::spmm_parallel(&prep, &x, case.n, &mut y, threads);
+    });
+    (flops / tiled.mean_ns(), flops / par.mean_ns())
 }
 
 /// The sparse sweep: naive-ref vs prepared-tiled vs parallel GFLOP/s
-/// (nnz-only FLOPs) per case, with speedups over naive.
+/// (nnz-only FLOPs) per (case, dtype), with speedups over the f32
+/// naive baseline.
 pub fn spmm_table(cases: &[WallCase], budget: Duration, threads: usize) -> Result<Table> {
     let mut t = Table::new(
         format!(
-            "Wall-time SpMM — naive-ref vs prepared-tiled vs parallel ({threads} threads); \
-             GFLOP/s on nnz, machine-dependent, not gated"
+            "Wall-time SpMM — naive-ref (f32 oracle) vs prepared-tiled vs parallel \
+             ({threads} threads); GFLOP/s on nnz, machine-dependent, not gated"
         ),
         &[
+            "dtype",
             "m=k",
             "n",
             "b",
@@ -105,37 +171,41 @@ pub fn spmm_table(cases: &[WallCase], budget: Duration, threads: usize) -> Resul
         let seed = seed_for(case.m, case.b, case.inv_d);
         let mask = patterns::with_density(case.m, case.k, case.b, d, seed)?;
         let coo = patterns::with_values(&mask, seed);
-        let prep = PreparedBsr::from_coo(&coo);
         let mut x = vec![0f32; case.k * case.n];
         fill_pseudo(&mut x, seed ^ 1);
-        let mut y = vec![0f32; case.m * case.n];
         let flops = 2.0 * coo.nnz() as f64 * case.n as f64;
 
-        // Oracle check before timing: the measured kernels must be the
-        // correct kernels.
-        let expect = coo.spmm_dense(&x, case.n)?;
-        kernels::spmm(&prep, &x, case.n, &mut y)?;
-        for (i, (&u, &v)) in y.iter().zip(&expect).enumerate() {
-            assert!(
-                kernels::close_enough(u, v),
-                "tiled kernel diverged from oracle at {i}: {u} vs {v}"
-            );
-        }
+        // The oracle (and the naive arm) on the operands the measured
+        // kernel will actually consume: for f16 that means the
+        // quantized view, so the comparison isolates kernel error from
+        // input rounding.
+        let (oracle_coo, oracle_x) = match case.dtype {
+            DType::Fp32 => (coo.clone(), x.clone()),
+            DType::Fp16 => (
+                PreparedBsr::<F16>::from_coo(&coo).to_block_coo()?,
+                kernels::dequantize(&quantize::<F16>(&x)),
+            ),
+        };
+        let expect = oracle_coo.spmm_dense(&oracle_x, case.n)?;
 
-        let tag = format!("m{} n{} b{} d1/{}", case.m, case.n, case.b, case.inv_d);
-        let naive = timing::bench(&format!("spmm naive   {tag}"), budget, 2, || {
-            let _ = coo.spmm_dense(&x, case.n);
+        let tag = format!(
+            "m{} n{} b{} d1/{} {}",
+            case.m, case.n, case.b, case.inv_d, case.dtype
+        );
+        let naive = timing::bench(&format!("spmm naive    {tag}"), budget, 2, || {
+            let _ = oracle_coo.spmm_dense(&oracle_x, case.n);
         });
-        let tiled = timing::bench(&format!("spmm tiled   {tag}"), budget, 2, || {
-            let _ = kernels::spmm(&prep, &x, case.n, &mut y);
-        });
-        let par = timing::bench(&format!("spmm parallel {tag}"), budget, 2, || {
-            let _ = kernels::spmm_parallel(&prep, &x, case.n, &mut y, threads);
-        });
-        let gf = |mean_ns: f64| flops / mean_ns; // flops/ns == GFLOP/s
-        let (g_naive, g_tiled, g_par) =
-            (gf(naive.mean_ns()), gf(tiled.mean_ns()), gf(par.mean_ns()));
+        let g_naive = flops / naive.mean_ns(); // flops/ns == GFLOP/s
+        let (g_tiled, g_par) = match case.dtype {
+            DType::Fp32 => {
+                time_sparse_arms::<f32>(case, &coo, &x, &expect, flops, budget, threads)
+            }
+            DType::Fp16 => {
+                time_sparse_arms::<F16>(case, &coo, &x, &expect, flops, budget, threads)
+            }
+        };
         t.row(vec![
+            case.dtype.to_string(),
             case.m.to_string(),
             case.n.to_string(),
             case.b.to_string(),
@@ -151,12 +221,54 @@ pub fn spmm_table(cases: &[WallCase], budget: Duration, threads: usize) -> Resul
     Ok(t)
 }
 
-/// The dense companion: naive `dense_ref` (fresh output `Vec` per
-/// call) vs the `ikj`-tiled kernel with a reused buffer.
+/// Time the tiled dense kernel in storage type `E` (oracle-checked).
+/// Returns GFLOP/s.
+fn time_dense_arm<E: Element>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a32: &[f32],
+    x32: &[f32],
+    budget: Duration,
+) -> f64 {
+    let a: Vec<E> = quantize(a32);
+    let x: Vec<E> = quantize(x32);
+    let mut y = vec![E::ZERO; m * n];
+    let expect = runtime::dense_ref(
+        &kernels::dequantize(&a),
+        &kernels::dequantize(&x),
+        m,
+        k,
+        n,
+    );
+    kernels::dense::matmul(&a, &x, m, k, n, &mut y).expect("bench shapes are valid");
+    for (i, (&u, &v)) in y.iter().zip(&expect).enumerate() {
+        let u = u.to_f32();
+        assert!(
+            kernels::close_enough_for(E::DTYPE, u, v),
+            "tiled dense {} kernel diverged from oracle at {i}: {u} vs {v}",
+            E::DTYPE
+        );
+    }
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let tiled = timing::bench(
+        &format!("dense tiled   m{m} n{n} {}", E::DTYPE),
+        budget,
+        2,
+        || {
+            let _ = kernels::dense::matmul(&a, &x, m, k, n, &mut y);
+        },
+    );
+    flops / tiled.mean_ns()
+}
+
+/// The dense companion: naive f32 `dense_ref` (fresh output `Vec` per
+/// call, the oracle baseline) vs the `ikj`-tiled kernel per dtype.
 pub fn dense_table(smoke: bool, budget: Duration) -> Result<Table> {
     let mut t = Table::new(
-        "Wall-time dense matmul — naive-ref vs ikj-tiled; GFLOP/s, machine-dependent, not gated",
-        &["m=k", "n", "naive GF/s", "tiled GF/s", "tiled x"],
+        "Wall-time dense matmul — naive-ref (f32) vs ikj-tiled per dtype; GFLOP/s, \
+         machine-dependent, not gated",
+        &["dtype", "m=k", "n", "naive GF/s", "tiled GF/s", "tiled x"],
     );
     let shapes: &[(usize, usize)] =
         if smoke { &[(128, 32)] } else { &[(512, 512), (1024, 512), (2048, 512)] };
@@ -166,46 +278,152 @@ pub fn dense_table(smoke: bool, budget: Duration) -> Result<Table> {
         let mut x = vec![0f32; k * n];
         fill_pseudo(&mut a, 11);
         fill_pseudo(&mut x, 12);
-        let mut y = vec![0f32; m * n];
         let flops = 2.0 * m as f64 * k as f64 * n as f64;
-
-        let expect = runtime::dense_ref(&a, &x, m, k, n);
-        kernels::dense::matmul(&a, &x, m, k, n, &mut y)?;
-        for (i, (&u, &v)) in y.iter().zip(&expect).enumerate() {
-            assert!(
-                kernels::close_enough(u, v),
-                "tiled dense kernel diverged from oracle at {i}: {u} vs {v}"
-            );
-        }
-
-        let naive = timing::bench(&format!("dense naive  m{m} n{n}"), budget, 2, || {
+        // One naive measurement per shape: the naive arm is f32 (it is
+        // the oracle), so it is shared by both dtypes' rows rather
+        // than re-timed — the fp16 row's baseline is the same number,
+        // not the same benchmark re-run with fresh noise.
+        let naive = timing::bench(&format!("dense naive   m{m} n{n} f32"), budget, 2, || {
             let _ = runtime::dense_ref(&a, &x, m, k, n);
         });
-        let tiled = timing::bench(&format!("dense tiled  m{m} n{n}"), budget, 2, || {
-            let _ = kernels::dense::matmul(&a, &x, m, k, n, &mut y);
-        });
-        let gf = |mean_ns: f64| flops / mean_ns;
-        let (g_naive, g_tiled) = (gf(naive.mean_ns()), gf(tiled.mean_ns()));
-        t.row(vec![
-            m.to_string(),
-            n.to_string(),
-            f2(g_naive),
-            f2(g_tiled),
-            format!("{:.1}x", g_tiled / g_naive),
-        ]);
+        let g_naive = flops / naive.mean_ns();
+        for &dtype in &[DType::Fp32, DType::Fp16] {
+            let g_tiled = match dtype {
+                DType::Fp32 => time_dense_arm::<f32>(m, k, n, &a, &x, budget),
+                DType::Fp16 => time_dense_arm::<F16>(m, k, n, &a, &x, budget),
+            };
+            t.row(vec![
+                dtype.to_string(),
+                m.to_string(),
+                n.to_string(),
+                f2(g_naive),
+                f2(g_tiled),
+                format!("{:.1}x", g_tiled / g_naive),
+            ]);
+        }
     }
     Ok(t)
 }
 
-/// Both wall tables. `smoke` selects the tiny CI shapes and a short
-/// per-arm budget; the full sweep spends ~1.5 s per arm per point.
+/// Densities the crossover sweeps, as 1/d (90% sparsity — the paper's
+/// FP16 headline — is the `10` point).
+pub fn crossover_inv_densities(smoke: bool) -> &'static [usize] {
+    if smoke {
+        &[4, 16]
+    } else {
+        &[2, 4, 8, 10, 16, 32]
+    }
+}
+
+/// The measured sparse-vs-dense crossover per dtype: at one geometry,
+/// the tiled dense kernel's wall time against the prepared tiled
+/// sparse kernel's across a density sweep. `sparse/dense x` above 1
+/// means the sparse path wins at that density — the wall-time answer
+/// to the paper's "from what sparsity is the sparse kernel worth it"
+/// (Table 3 asks it in simulated cycles; EXPERIMENTS.md records this
+/// table per dtype).
+pub fn crossover_table(smoke: bool, budget: Duration, threads: usize) -> Result<Table> {
+    let (m, n, b) = if smoke { (256usize, 32usize, 16usize) } else { (2048, 256, 16) };
+    let k = m;
+    let mut t = Table::new(
+        format!(
+            "Wall-time sparse-vs-dense crossover — m=k={m}, n={n}, b={b}, tiled kernels \
+             ({threads} threads for sparse); machine-dependent, not gated"
+        ),
+        &["dtype", "density", "dense ms", "sparse ms", "sparse/dense x", "sparse wins"],
+    );
+    let mut a32 = vec![0f32; m * k];
+    let mut x32 = vec![0f32; k * n];
+    fill_pseudo(&mut a32, 21);
+    fill_pseudo(&mut x32, 22);
+    for &dtype in &[DType::Fp32, DType::Fp16] {
+        // One dense measurement per dtype, shared across the density
+        // sweep (the dense kernel does not see the pattern).
+        let dense_ms = match dtype {
+            DType::Fp32 => dense_ms_for::<f32>(m, k, n, &a32, &x32, budget),
+            DType::Fp16 => dense_ms_for::<F16>(m, k, n, &a32, &x32, budget),
+        };
+        for &inv_d in crossover_inv_densities(smoke) {
+            let d = 1.0 / inv_d as f64;
+            let seed = seed_for(m, b, inv_d);
+            let mask = patterns::with_density(m, k, b, d, seed)?;
+            let coo = patterns::with_values(&mask, seed);
+            let sparse_ms = match dtype {
+                DType::Fp32 => sparse_ms_for::<f32>(&coo, n, &x32, budget, threads),
+                DType::Fp16 => sparse_ms_for::<F16>(&coo, n, &x32, budget, threads),
+            };
+            let speedup = dense_ms / sparse_ms;
+            t.row(vec![
+                dtype.to_string(),
+                format!("1/{inv_d}"),
+                f2(dense_ms),
+                f2(sparse_ms),
+                f2(speedup),
+                if speedup > 1.0 { "yes".into() } else { "no".into() },
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+fn dense_ms_for<E: Element>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a32: &[f32],
+    x32: &[f32],
+    budget: Duration,
+) -> f64 {
+    let a: Vec<E> = quantize(a32);
+    let x: Vec<E> = quantize(x32);
+    let mut y = vec![E::ZERO; m * n];
+    let stats = timing::bench(
+        &format!("xover dense   m{m} n{n} {}", E::DTYPE),
+        budget,
+        2,
+        || {
+            let _ = kernels::dense::matmul(&a, &x, m, k, n, &mut y);
+        },
+    );
+    stats.mean_ns() / 1e6
+}
+
+fn sparse_ms_for<E: Element>(
+    coo: &BlockCoo,
+    n: usize,
+    x32: &[f32],
+    budget: Duration,
+    threads: usize,
+) -> f64 {
+    let prep = PreparedBsr::<E>::from_coo(coo);
+    let x: Vec<E> = quantize(x32);
+    let mut y = vec![E::ZERO; coo.m * n];
+    let stats = timing::bench(
+        &format!("xover sparse  m{} n{n} nnz{} {}", coo.m, coo.nnz_blocks(), E::DTYPE),
+        budget,
+        2,
+        || {
+            let _ = kernels::spmm_auto(&prep, &x, n, &mut y, threads);
+        },
+    );
+    stats.mean_ns() / 1e6
+}
+
+/// All three wall tables: the sparse sweep, the dense companion, and
+/// the per-dtype sparse-vs-dense crossover. `smoke` selects the tiny
+/// CI shapes and a short per-arm budget; the full sweep spends ~1.5 s
+/// per arm per point.
 pub fn wall_tables(smoke: bool, threads: usize) -> Result<Vec<Table>> {
     let (cases, budget) = if smoke {
         (smoke_cases(), Duration::from_millis(40))
     } else {
         (paper_cases(), Duration::from_millis(1500))
     };
-    Ok(vec![spmm_table(&cases, budget, threads)?, dense_table(smoke, budget)?])
+    Ok(vec![
+        spmm_table(&cases, budget, threads)?,
+        dense_table(smoke, budget)?,
+        crossover_table(smoke, budget, threads)?,
+    ])
 }
 
 #[cfg(test)]
@@ -215,28 +433,47 @@ mod tests {
     #[test]
     fn smoke_tables_build_and_check_oracles() {
         // The smoke sweep runs the full measurement path (including
-        // the in-bench oracle assertions) in test time.
+        // the in-bench oracle assertions, in both dtypes) in test
+        // time, with deterministic table shapes.
         let tables =
             wall_tables(true, kernels::default_threads().min(2)).expect("smoke sweep runs");
-        assert_eq!(tables.len(), 2);
+        assert_eq!(tables.len(), 3);
         assert_eq!(tables[0].rows.len(), smoke_cases().len());
-        assert_eq!(tables[1].rows.len(), 1);
+        assert_eq!(tables[1].rows.len(), 2, "dense smoke: one shape per dtype");
+        assert_eq!(
+            tables[2].rows.len(),
+            2 * crossover_inv_densities(true).len(),
+            "crossover smoke: each dtype sweeps every density"
+        );
         for row in &tables[0].rows {
-            let naive: f64 = row[5].parse().expect("numeric GF/s");
+            let naive: f64 = row[6].parse().expect("numeric GF/s");
             assert!(naive > 0.0);
+        }
+        // Both dtypes are represented in every table.
+        for t in &tables {
+            assert!(t.rows.iter().any(|r| r[0] == "fp16"));
+            assert!(t.rows.iter().any(|r| r[0] == "fp32"));
         }
     }
 
     #[test]
-    fn case_sets_cover_the_acceptance_point() {
+    fn case_sets_cover_the_acceptance_points() {
         // The headline acceptance point (m = k = 4096, n = 512,
-        // b = 16, d = 1/16) must stay in the full sweep.
-        assert!(paper_cases()
-            .iter()
-            .any(|c| c.m == 4096 && c.n == 512 && c.b == 16 && c.inv_d == 16));
-        // And the smoke set must exercise specialized, generic and
+        // b = 16, d = 1/16) must stay in the full sweep — in both
+        // dtypes now.
+        for dtype in [DType::Fp32, DType::Fp16] {
+            assert!(paper_cases().iter().any(|c| c.m == 4096
+                && c.n == 512
+                && c.b == 16
+                && c.inv_d == 16
+                && c.dtype == dtype));
+        }
+        // The smoke set must exercise specialized, generic and
         // remainder paths.
         assert!(smoke_cases().iter().any(|c| c.b == 1));
         assert!(smoke_cases().iter().any(|c| c.n % kernels::N_TILE != 0));
+        // The crossover sweep includes the paper's ~90%-sparsity
+        // headline density.
+        assert!(crossover_inv_densities(false).contains(&10));
     }
 }

@@ -65,6 +65,7 @@ struct Inner {
     kernel_wall_ns: Vec<u64>,
     kernel_wall_total_ns: u64,
     kernel_flops_sum: f64,
+    wall_observations: u64,
     // Worker queue-wait accounting.
     queue_waits: u64,
     queue_wait_ns: u64,
@@ -128,6 +129,10 @@ pub struct Snapshot {
     /// GFLOP/s. This is the serving-throughput observability the
     /// simulated-cycle metrics cannot provide.
     pub kernel_gflops: f64,
+    /// Measured kernel wall times that reached the wall-fed
+    /// calibration through the units layer (post-warm-up
+    /// [`WallFeedback`](crate::engine::WallFeedback) observations).
+    pub wall_observations: u64,
     /// Times a worker blocked waiting on the shared work queue.
     pub queue_waits: u64,
     /// Total worker time spent blocked on the work queue (idle wait +
@@ -249,6 +254,12 @@ impl Metrics {
         self.inner.lock().expect("metrics poisoned").kernel_failures += 1;
     }
 
+    /// Record one measured wall time fed through the units layer into
+    /// the wall calibration.
+    pub fn record_wall_observation(&self) {
+        self.inner.lock().expect("metrics poisoned").wall_observations += 1;
+    }
+
     /// Record one worker wait on the shared work queue.
     pub fn record_queue_wait(&self, wait: Duration) {
         let mut g = self.inner.lock().expect("metrics poisoned");
@@ -310,6 +321,7 @@ impl Metrics {
             } else {
                 g.kernel_flops_sum / (g.kernel_wall_total_ns as f64 / 1e9) / 1e9
             },
+            wall_observations: g.wall_observations,
             queue_waits: g.queue_waits,
             queue_wait_total: Duration::from_nanos(g.queue_wait_ns),
             p50: pct(0.50),
@@ -358,6 +370,7 @@ mod tests {
         assert_eq!((s.kernel_execs, s.kernel_failures), (0, 0));
         assert_eq!(s.kernel_wall_total, Duration::ZERO);
         assert_eq!(s.kernel_gflops, 0.0);
+        assert_eq!(s.wall_observations, 0);
         assert_eq!((s.queue_waits, s.queue_wait_total), (0, Duration::ZERO));
     }
 
@@ -369,9 +382,11 @@ mod tests {
         m.record_kernel(Duration::from_millis(1), 2e9);
         m.record_kernel(Duration::from_millis(3), 2e9);
         m.record_kernel_failure();
+        m.record_wall_observation();
         m.record_queue_wait(Duration::from_micros(40));
         m.record_queue_wait(Duration::from_micros(60));
         let s = m.snapshot();
+        assert_eq!(s.wall_observations, 1);
         assert_eq!(s.kernel_execs, 2);
         assert_eq!(s.kernel_failures, 1);
         assert_eq!(s.kernel_wall_total, Duration::from_millis(4));

@@ -43,14 +43,19 @@
 //! outcome.
 //!
 //! With [`Config::numeric`] on, workers additionally execute every
-//! batch's actual f32 kernel through the native compute layer
-//! ([`crate::kernels`]) — prepared operands cached per pattern in the
-//! [`PlanCache`], measured kernel wall time and achieved GFLOP/s in
-//! [`Metrics`] — so serving throughput is observable in real time,
-//! not only simulated cycles (DESIGN.md §5). Workers pull batches
-//! from a condvar-backed [`WorkQueue`] (lock held only across
-//! push/pop, never across a blocking wait) and their queue-wait time
-//! is metered.
+//! batch's actual kernel — **in the batch's declared dtype** (FP16
+//! jobs run the f16-storage kernels with f32 accumulation) — through
+//! the native compute layer ([`crate::kernels`]): prepared operands
+//! cached per (pattern, dtype) in the [`PlanCache`], measured kernel
+//! wall time and achieved GFLOP/s in [`Metrics`], and each measured
+//! wall fed into the [`WallFeedback`] units layer so a wall-fed
+//! calibration accumulates per (backend, geometry-bucket, dtype).
+//! With [`Config::wall_calibrated`] on, auto-mode resolution argmins
+//! over *that* calibration — dispatch follows measured kernel
+//! reality, closing the ROADMAP's wall-time feedback loop without
+//! PJRT (DESIGN.md §5). Workers pull batches from a condvar-backed
+//! [`WorkQueue`] (lock held only across push/pop, never across a
+//! blocking wait) and their queue-wait time is metered.
 
 pub mod batcher;
 pub mod metrics;
@@ -68,7 +73,7 @@ pub use plan_cache::{BatchResolution, CachedPlan, PlanCache};
 pub use request::{JobResult, JobSpec, Mode, PatternKey, PlanKey, SelectorKey};
 
 use crate::engine::calibration::DEFAULT_ALPHA;
-use crate::engine::{BackendKind, Calibration, ChurnTracker};
+use crate::engine::{BackendKind, Calibration, ChurnTracker, WallFeedback};
 use crate::error::{Error, Result};
 use crate::kernels::Scratch;
 use crate::sim::chip::{CostModel, IpuSpec};
@@ -120,14 +125,24 @@ pub struct Config {
     /// Bounds for the serving-side maps.
     pub caches: CacheConfig,
     /// Execute every batch numerically through the native kernel layer
-    /// ([`crate::kernels`]) after the cycle simulation, timing the
-    /// kernel and feeding the [`Metrics`] wall-time histogram — the
-    /// serving-throughput observability arm. Sparse operands come from
-    /// the plan cache's prepared slot, so steady-state traffic
-    /// performs zero `BlockCoo -> PreparedBsr` conversions. Off by
-    /// default: simulated-only serving (cycle benches, latency tests)
-    /// stays numeric-free.
+    /// ([`crate::kernels`]) after the cycle simulation — **in the
+    /// batch's declared dtype** (FP16 jobs run the f16-storage
+    /// kernels) — timing the kernel and feeding the [`Metrics`]
+    /// wall-time histogram: the serving-throughput observability arm.
+    /// Sparse operands come from the plan cache's dtype-keyed prepared
+    /// slot, so steady-state traffic performs zero
+    /// `BlockCoo -> PreparedBsr` conversions per (pattern, dtype).
+    /// Measured kernel wall times additionally feed the coordinator's
+    /// [`WallFeedback`] units layer. Off by default: simulated-only
+    /// serving (cycle benches, latency tests) stays numeric-free.
     pub numeric: bool,
+    /// Resolve auto-mode batches against the **wall-fed** calibration
+    /// (the [`WallFeedback`] the numeric arm populates) instead of the
+    /// simulated-cycle one — dispatch follows measured kernel reality.
+    /// Only meaningful with [`Config::numeric`]; with the numeric arm
+    /// off the wall calibration never learns and resolution behaves
+    /// as uncorrected. Off by default.
+    pub wall_calibrated: bool,
 }
 
 impl Default for Config {
@@ -138,6 +153,7 @@ impl Default for Config {
             max_batch_delay: Duration::from_millis(2),
             caches: CacheConfig::default(),
             numeric: false,
+            wall_calibrated: false,
         }
     }
 }
@@ -154,6 +170,7 @@ pub struct Coordinator {
     cache: Arc<PlanCache>,
     metrics: Arc<Metrics>,
     calibration: Arc<Calibration>,
+    wall: Arc<WallFeedback>,
     churn: Arc<ChurnTracker>,
     hints: Arc<PatternHints>,
     work: Arc<WorkQueue<WorkItem>>,
@@ -176,6 +193,8 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
         let calibration =
             Arc::new(Calibration::with_capacity(DEFAULT_ALPHA, caches.calibration_capacity));
+        let wall =
+            Arc::new(WallFeedback::with_capacity(DEFAULT_ALPHA, caches.calibration_capacity));
         let churn = Arc::new(ChurnTracker::with_capacity(caches.churn_capacity));
         let hints = Arc::new(PatternHints::with_capacity(caches.hint_capacity));
         let shutting_down = Arc::new(AtomicBool::new(false));
@@ -230,15 +249,18 @@ impl Coordinator {
         });
 
         // Worker pool: batch-time resolution + execution. Each worker
-        // owns a kernel scratch (reusable operand/output buffers) so
-        // the numeric arm allocates nothing at steady state.
+        // owns a kernel scratch (reusable per-dtype operand/output
+        // buffers) so the numeric arm allocates nothing at steady
+        // state in either precision.
         let numeric = config.numeric;
+        let wall_calibrated = config.wall_calibrated;
         let mut workers = Vec::with_capacity(config.workers);
         for _ in 0..config.workers.max(1) {
             let queue = work.clone();
             let cache = cache.clone();
             let metrics = metrics.clone();
             let calibration = calibration.clone();
+            let wall = wall.clone();
             let churn = churn.clone();
             let hints = hints.clone();
             workers.push(std::thread::spawn(move || {
@@ -247,15 +269,28 @@ impl Coordinator {
                     let (item, waited) = queue.pop();
                     metrics.record_queue_wait(waited);
                     match item {
-                        Some(WorkItem::Batch(batch)) => process_batch(
-                            batch,
-                            &cache,
-                            &calibration,
-                            &churn,
-                            &hints,
-                            &metrics,
-                            numeric.then_some(&mut scratch),
-                        ),
+                        Some(WorkItem::Batch(batch)) => {
+                            // Which calibration steers the argmin: the
+                            // wall-fed one when configured (dispatch
+                            // follows measured kernels), the
+                            // simulated-cycle one otherwise.
+                            let resolve_cal: &Calibration = if wall_calibrated {
+                                wall.calibration()
+                            } else {
+                                &calibration
+                            };
+                            process_batch(
+                                batch,
+                                &cache,
+                                resolve_cal,
+                                &calibration,
+                                &churn,
+                                &hints,
+                                &metrics,
+                                numeric
+                                    .then_some(NumericArm { scratch: &mut scratch, wall: &wall }),
+                            )
+                        }
                         None => break,
                     }
                 }
@@ -265,6 +300,7 @@ impl Coordinator {
             cache,
             metrics,
             calibration,
+            wall,
             churn,
             hints,
             work,
@@ -323,9 +359,18 @@ impl Coordinator {
     }
 
     /// The observed-cycle calibration the coordinator resolves
-    /// [`Mode::Auto`] batches with.
+    /// [`Mode::Auto`] batches with (unless
+    /// [`Config::wall_calibrated`] routed resolution to the wall-fed
+    /// one).
     pub fn calibration(&self) -> &Calibration {
         &self.calibration
+    }
+
+    /// The measured-wall-time feedback the numeric arm populates: the
+    /// units-normalization layer plus the wall-fed calibration
+    /// ([`Config::wall_calibrated`] resolves against it).
+    pub fn wall_feedback(&self) -> &WallFeedback {
+        &self.wall
     }
 
     /// The pattern-churn tracker feeding workload-aware scoring.
@@ -344,19 +389,32 @@ impl Coordinator {
         &self.cache
     }
 
-    /// Graceful shutdown: flush the batcher, join all threads.
+    /// Graceful shutdown: flush the batcher, join all threads. A
+    /// thread that died of a panic mid-flight (poisoned lock,
+    /// kernel-layer bug) is reported to stderr rather than silently
+    /// swallowed — its queued responders were already dropped, so
+    /// every waiting submitter has seen a disconnect, and the
+    /// remaining threads still join (the queue is closed below
+    /// regardless of how the ingress thread ended).
     pub fn shutdown(mut self) {
         self.shutting_down.store(true, Ordering::Relaxed);
         drop(self.ingress.take());
+        let mut died = 0usize;
         if let Some(t) = self.ingress_thread.take() {
-            let _ = t.join();
+            died += usize::from(t.join().is_err());
         }
         // The ingress thread closes the queue on its way out; closing
         // again is an idempotent no-op, and it keeps the worker joins
         // below from hanging if that thread ever died abnormally.
         self.work.close();
         for w in self.workers.drain(..) {
-            let _ = w.join();
+            died += usize::from(w.join().is_err());
+        }
+        if died > 0 {
+            eprintln!(
+                "coordinator shutdown: {died} thread(s) had panicked mid-flight; \
+                 their in-flight jobs saw channel disconnects"
+            );
         }
     }
 }
@@ -367,25 +425,46 @@ impl Drop for Coordinator {
     }
 }
 
+/// The numeric serving arm a worker threads through batch execution:
+/// its reusable per-dtype kernel scratch plus the wall-time feedback
+/// sink the measured kernels report into.
+struct NumericArm<'a> {
+    scratch: &'a mut Scratch,
+    wall: &'a WallFeedback,
+}
+
+impl NumericArm<'_> {
+    /// Reborrow for a sub-batch (the re-keying split executes several
+    /// groups through one worker's arm).
+    fn reborrow(&mut self) -> NumericArm<'_> {
+        NumericArm { scratch: &mut *self.scratch, wall: self.wall }
+    }
+}
+
 /// Execute one batch: resolve auto batches at the combined batch size
 /// (workload-aware — the pattern stream is observed first, and the
-/// churn surcharge scores the static candidate), plan once (for
-/// freshly-resolved auto batches a cache hit — resolution already
-/// planted the plan), simulate, feed observed cycles back into the
-/// calibration, fan results out. A seedless auto batch that resolves
-/// *static* with mixed pattern seeds takes the safe re-keying path:
-/// it is split back into per-pattern sub-batches, each executed
-/// against its own pattern — one static pass must never impose one
-/// job's pattern on another's.
+/// churn surcharge scores the static candidate; `resolve_cal` is the
+/// calibration steering the argmin — the wall-fed one under
+/// [`Config::wall_calibrated`], the simulated-cycle `calibration`
+/// otherwise), plan once (for freshly-resolved auto batches a cache
+/// hit — resolution already planted the plan), simulate, feed
+/// observed cycles back into the calibration (and measured kernel
+/// wall times into the wall feedback when the numeric arm is on), fan
+/// results out. A seedless auto batch that resolves *static* with
+/// mixed pattern seeds takes the safe re-keying path: it is split
+/// back into per-pattern sub-batches, each executed against its own
+/// pattern — one static pass must never impose one job's pattern on
+/// another's.
 #[allow(clippy::too_many_arguments)]
 fn process_batch(
     batch: Batch<Responder>,
     cache: &PlanCache,
+    resolve_cal: &Calibration,
     calibration: &Calibration,
     churn: &ChurnTracker,
     hints: &PatternHints,
     metrics: &Metrics,
-    mut numeric: Option<&mut Scratch>,
+    mut numeric: Option<NumericArm<'_>>,
 ) {
     let t0 = Instant::now();
     // The representative job: the batch's shared geometry at the
@@ -402,7 +481,7 @@ fn process_batch(
             churn.observe(job);
         }
         let sel_t0 = Instant::now();
-        match cache.resolve_batch_with(&rep, Some(calibration), Some(churn)) {
+        match cache.resolve_batch_with(&rep, Some(resolve_cal), Some(churn)) {
             Ok(res) => {
                 if !res.memo_hit {
                     metrics.record_selection(SelectionSite::Worker, sel_t0.elapsed());
@@ -466,7 +545,7 @@ fn process_batch(
                     cache,
                     calibration,
                     metrics,
-                    numeric.as_deref_mut(),
+                    numeric.as_mut().map(|arm| arm.reborrow()),
                 );
             }
             return;
@@ -501,7 +580,7 @@ fn execute_group(
     cache: &PlanCache,
     calibration: &Calibration,
     metrics: &Metrics,
-    numeric: Option<&mut Scratch>,
+    numeric: Option<NumericArm<'_>>,
 ) {
     let planned = cache.get_or_plan(rep);
     match planned {
@@ -551,31 +630,42 @@ fn execute_group(
             if let Some(kind) = BackendKind::of_mode(rep.mode) {
                 calibration.observe(kind, rep, plan_estimate, cycles);
             }
-            // Numeric arm (Config.numeric): run the group's actual f32
-            // kernel at the combined batch geometry and record the
-            // measured wall time — sparse operands come from the plan
-            // cache's prepared slot, so a steady-state pattern costs
-            // zero conversions here. Single-threaded per worker: the
-            // pool itself is the serving-side parallelism; the
-            // row-panel parallel path is for dedicated execution
-            // (`repro bench wall`). A kernel error cannot un-serve the
+            // Numeric arm (Config.numeric): run the group's actual
+            // kernel — in the batch's declared dtype — at the combined
+            // batch geometry and record the measured wall time; sparse
+            // operands come from the plan cache's dtype-keyed prepared
+            // slot, so a steady-state (pattern, dtype) costs zero
+            // conversions here. Single-threaded per worker: the pool
+            // itself is the serving-side parallelism; the row-panel
+            // parallel path is for dedicated execution (`repro bench
+            // wall`). A kernel error cannot un-serve the
             // already-simulated jobs, so it lands in its own counter.
-            if let Some(scratch) = numeric {
+            // Successful runs also feed the wall-time units layer, so
+            // measured kernel reality accumulates per (backend,
+            // geometry-bucket, dtype) for wall-calibrated dispatch.
+            if let Some(arm) = numeric {
                 let run = match rep.mode {
                     Mode::Static | Mode::Dynamic => {
                         cache.get_or_prepare(rep).and_then(|(prepared, _)| {
                             crate::engine::backends::execute_kernel(
                                 rep,
-                                Some(prepared.as_ref()),
-                                scratch,
+                                Some(&prepared),
+                                arm.scratch,
                                 1,
                             )
                         })
                     }
-                    _ => crate::engine::backends::execute_kernel(rep, None, scratch, 1),
+                    _ => crate::engine::backends::execute_kernel(rep, None, arm.scratch, 1),
                 };
                 match run {
-                    Ok(r) => metrics.record_kernel(r.wall, r.flops),
+                    Ok(r) => {
+                        metrics.record_kernel(r.wall, r.flops);
+                        if let Some(kind) = BackendKind::of_mode(rep.mode) {
+                            if arm.wall.observe_wall(kind, rep, plan_estimate, r.wall) {
+                                metrics.record_wall_observation();
+                            }
+                        }
+                    }
                     Err(_) => metrics.record_kernel_failure(),
                 }
             }
@@ -638,11 +728,22 @@ mod tests {
         }
     }
 
+    /// Drain a submission's response channel with actionable failure
+    /// messages: a `RecvError` here means the serving side dropped the
+    /// responder (worker panic or shutdown race), which the bare
+    /// `unwrap()` chains this helper replaced reported as an opaque
+    /// `Err(RecvError)`.
+    fn wait_ok(rx: mpsc::Receiver<Result<JobResult>>) -> JobResult {
+        rx.recv()
+            .expect("worker dropped the response channel (panic or shutdown mid-flight)")
+            .expect("job failed — serving-side error, see message")
+    }
+
     #[test]
     fn serves_all_three_modes() {
         let c = Coordinator::new(Config::default(), IpuSpec::default(), CostModel::default());
         for mode in [Mode::Dense, Mode::Static, Mode::Dynamic] {
-            let r = c.submit_wait(job(mode, 128, 7)).unwrap();
+            let r = c.submit_wait(job(mode, 128, 7)).expect("job serves");
             assert!(r.cycles > 0, "{mode}: zero cycles");
             assert!(r.tflops > 0.0);
         }
@@ -664,7 +765,7 @@ mod tests {
             CostModel::default(),
         );
         let rxs: Vec<_> = (0..4).map(|_| c.submit(job(Mode::Dynamic, 64, 3))).collect();
-        let results: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        let results: Vec<_> = rxs.into_iter().map(wait_ok).collect();
         assert_eq!(results.len(), 4);
         // 4 jobs x n=64 = 256 -> one flush at capacity.
         let snap = c.metrics();
@@ -684,8 +785,8 @@ mod tests {
             IpuSpec::default(),
             CostModel::default(),
         );
-        let _ = c.submit_wait(job(Mode::Dense, 64, 0)).unwrap();
-        let r2 = c.submit_wait(job(Mode::Dense, 64, 0)).unwrap();
+        let _ = c.submit_wait(job(Mode::Dense, 64, 0)).expect("first job serves");
+        let r2 = c.submit_wait(job(Mode::Dense, 64, 0)).expect("second job serves");
         assert!(r2.plan_cache_hit);
         c.shutdown();
     }
@@ -710,10 +811,12 @@ mod tests {
             CostModel::default(),
         );
         // Two static batches and a dynamic one, all realizing the same
-        // pattern: one conversion, then prepared-operand hits only.
-        let _ = c.submit_wait(job(Mode::Static, 64, 7)).unwrap();
-        let _ = c.submit_wait(job(Mode::Static, 64, 7)).unwrap();
-        let _ = c.submit_wait(job(Mode::Dynamic, 64, 7)).unwrap();
+        // FP16 pattern: one conversion, then prepared-operand hits
+        // only (the jobs declare Fp16, so the kernels run in f16
+        // storage).
+        let _ = c.submit_wait(job(Mode::Static, 64, 7)).expect("static serves");
+        let _ = c.submit_wait(job(Mode::Static, 64, 7)).expect("static again");
+        let _ = c.submit_wait(job(Mode::Dynamic, 64, 7)).expect("dynamic serves");
         let snap = c.metrics();
         assert_eq!(snap.kernel_execs, 3, "every batch executes numerically");
         assert_eq!(snap.kernel_failures, 0);
@@ -723,16 +826,83 @@ mod tests {
         assert_eq!(
             c.plan_cache().prepared_conversions(),
             1,
-            "steady-state serving converts each pattern exactly once"
+            "steady-state FP16 serving converts each pattern exactly once"
         );
         assert_eq!(c.plan_cache().prepared_stats(), (2, 1));
+        // The measured kernels reached the wall-feedback units layer
+        // (still warming up at 3 samples — nothing fed yet, but the
+        // scale is live).
+        assert_eq!(c.wall_feedback().scale_samples(), 3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn mixed_dtype_numeric_serving_keys_operands_per_dtype() {
+        let c = Coordinator::new(
+            Config { workers: 1, numeric: true, ..Config::default() },
+            IpuSpec::default(),
+            CostModel::default(),
+        );
+        // The same pattern served in FP16 and FP32: one conversion per
+        // dtype, zero steady-state conversions after that in either.
+        let mut fp32 = job(Mode::Static, 64, 7);
+        fp32.dtype = DType::Fp32;
+        let _ = c.submit_wait(job(Mode::Static, 64, 7)).expect("fp16 serves");
+        let _ = c.submit_wait(fp32.clone()).expect("fp32 serves");
+        assert_eq!(c.plan_cache().prepared_conversions(), 2, "one conversion per dtype");
+        let _ = c.submit_wait(job(Mode::Static, 64, 7)).expect("fp16 steady state");
+        let _ = c.submit_wait(fp32).expect("fp32 steady state");
+        assert_eq!(
+            c.plan_cache().prepared_conversions(),
+            2,
+            "steady state per dtype: no re-conversion on dtype flips"
+        );
+        assert_eq!(c.metrics().kernel_execs, 4);
+        assert_eq!(c.metrics().kernel_failures, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn wall_feedback_flows_from_numeric_serving() {
+        use crate::engine::WALL_WARMUP_OBSERVATIONS;
+        let c = Coordinator::new(
+            Config { workers: 1, numeric: true, wall_calibrated: true, ..Config::default() },
+            IpuSpec::default(),
+            CostModel::default(),
+        );
+        // Enough batches to clear the units-layer warm-up: measured
+        // wall times then feed the wall calibration the resolver is
+        // configured to use.
+        let rounds = 2 * WALL_WARMUP_OBSERVATIONS as usize + 4;
+        for i in 0..rounds {
+            let mode = if i % 2 == 0 { Mode::Static } else { Mode::Dense };
+            let _ = c.submit_wait(job(mode, 64, 7)).expect("job serves");
+        }
+        assert_eq!(c.metrics().kernel_execs as usize, rounds);
+        assert!(c.wall_feedback().scale_samples() as usize >= rounds);
+        assert!(
+            c.wall_feedback().observations() > 0,
+            "post-warm-up kernel walls must reach the wall calibration"
+        );
+        assert!(c.wall_feedback().ns_per_cycle() > 0.0);
+        assert_eq!(
+            c.metrics().wall_observations,
+            c.wall_feedback().observations(),
+            "metrics mirror the feedback counter"
+        );
+        // An auto job resolves against the wall-fed calibration
+        // without error (the decision itself is machine-dependent — a
+        // flip under synthetic walls is pinned in
+        // engine::calibration's unit tests).
+        let r = c.submit_wait(job(Mode::Auto, 64, 7)).expect("auto resolves wall-calibrated");
+        assert_ne!(r.spec.mode, Mode::Auto);
         c.shutdown();
     }
 
     #[test]
     fn simulated_only_serving_stays_numeric_free() {
         let c = Coordinator::new(Config::default(), IpuSpec::default(), CostModel::default());
-        let _ = c.submit_wait(job(Mode::Static, 64, 7)).unwrap();
+        let _ = c.submit_wait(job(Mode::Static, 64, 7)).expect("job serves");
         let snap = c.metrics();
         assert_eq!(snap.kernel_execs, 0, "numeric arm is opt-in");
         assert_eq!(c.plan_cache().prepared_conversions(), 0);
@@ -742,7 +912,7 @@ mod tests {
     #[test]
     fn auto_jobs_resolve_and_serve() {
         let c = Coordinator::new(Config::default(), IpuSpec::default(), CostModel::default());
-        let r = c.submit_wait(job(Mode::Auto, 128, 7)).unwrap();
+        let r = c.submit_wait(job(Mode::Auto, 128, 7)).expect("auto serves");
         assert_ne!(r.spec.mode, Mode::Auto, "auto must resolve to a concrete mode");
         assert!(r.cycles > 0);
         assert!(r.estimated_cycles.expect("auto jobs carry estimates") > 0);
@@ -751,7 +921,7 @@ mod tests {
         assert!(r.plan_cache_hit, "resolution plans must be reused at execution");
         // Same geometry, different pattern seed: the decision is
         // memoized (the seed is not part of the selector key).
-        let r2 = c.submit_wait(job(Mode::Auto, 128, 9)).unwrap();
+        let r2 = c.submit_wait(job(Mode::Auto, 128, 9)).expect("memoized auto serves");
         assert_eq!(r2.spec.mode, r.spec.mode);
         assert_eq!(c.mode_memo_stats(), (1, 1));
         let snap = c.metrics();
@@ -779,7 +949,7 @@ mod tests {
             CostModel::default(),
         );
         let rxs: Vec<_> = (0..4).map(|_| c.submit(job(Mode::Auto, 64, 3))).collect();
-        let results: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        let results: Vec<_> = rxs.into_iter().map(wait_ok).collect();
         let resolved = results[0].spec.mode;
         assert_ne!(resolved, Mode::Auto);
         assert!(results.iter().all(|r| r.spec.mode == resolved), "one batch, one mode");
@@ -788,7 +958,7 @@ mod tests {
         // The resolution planned at n=256: an explicit job with the
         // resolved mode at that combined geometry is already cached.
         let (hits_before, misses_before) = c.plan_cache_stats();
-        let probe = c.submit_wait(job(resolved, 256, 3)).unwrap();
+        let probe = c.submit_wait(job(resolved, 256, 3)).expect("probe serves");
         assert!(probe.plan_cache_hit, "combined-n plan must be reusable");
         let (hits_after, misses_after) = c.plan_cache_stats();
         assert_eq!(hits_after, hits_before + 1);

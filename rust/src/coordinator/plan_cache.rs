@@ -8,9 +8,10 @@
 //!
 //! All three maps this type owns — compiled plans, memoized auto-mode
 //! resolutions, and prepared numeric operands
-//! ([`crate::kernels::PreparedBsr`], converted once per realized
-//! pattern so the wall-time serving arm never re-lays-out a cached
-//! pattern's values) — are bounded by LRU eviction
+//! ([`crate::kernels::PreparedOperand`], converted once per realized
+//! (pattern, storage-dtype) pair so the wall-time serving arm never
+//! re-lays-out or re-quantizes a cached pattern's values) — are
+//! bounded by LRU eviction
 //! ([`crate::util::LruMap`]): open-world traffic streams unbounded
 //! key populations (static plan keys in particular carry the pattern
 //! seed), and an unbounded cache is a memory leak with a hit rate.
@@ -32,7 +33,7 @@ use crate::engine::calibration::{
 };
 use crate::engine::{BackendKind, Calibration, ChurnTracker, PlanEstimate};
 use crate::error::{Error, Result};
-use crate::kernels::PreparedBsr;
+use crate::kernels::PreparedOperand;
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::mask::BlockMask;
 use crate::sparse::patterns;
@@ -52,10 +53,13 @@ pub const DEFAULT_PLAN_CAPACITY: usize = 4096;
 pub const DEFAULT_MODE_MEMO_CAPACITY: usize = 4096;
 
 /// Default prepared-operand capacity (entries, LRU). Deliberately
-/// smaller than the plan capacity: a [`PreparedBsr`] holds the full
-/// block values (megabytes at paper scale — `4096x4096` at `d = 1/16`,
-/// `b = 16` is ~4 MiB), so this bound is a memory budget, not just an
-/// entry count.
+/// smaller than the plan capacity: a
+/// [`PreparedBsr`](crate::kernels::PreparedBsr) holds the full block
+/// values (megabytes at paper scale — `4096x4096` at `d = 1/16`,
+/// `b = 16` is ~4 MiB in f32, half that in f16), so this bound is a
+/// memory budget, not just an entry count. Keys carry the storage
+/// dtype, so mixed-precision traffic holds one entry per (pattern,
+/// dtype).
 pub const DEFAULT_PREPARED_CAPACITY: usize = 512;
 
 /// A cached plan for one plan key.
@@ -136,7 +140,7 @@ pub struct PlanCache {
     cm: CostModel,
     plans: Mutex<LruMap<PlanKey, CachedPlan>>,
     modes: Mutex<LruMap<SelectorKey, MemoEntry>>,
-    prepared: Mutex<LruMap<PreparedKey, Arc<PreparedBsr>>>,
+    prepared: Mutex<LruMap<PreparedKey, PreparedOperand>>,
     hits: AtomicU64,
     misses: AtomicU64,
     mode_hits: AtomicU64,
@@ -273,26 +277,29 @@ impl PlanCache {
     }
 
     /// Get or convert the prepared numeric operand for `job`'s
-    /// realized pattern. Returns `(operand, was_hit)`. Keyed at the
-    /// pattern level ([`JobSpec::prepared_key`]): static and dynamic
-    /// jobs with the same seed share the operand across every batch
-    /// shape, so steady-state serving performs **zero** conversions —
-    /// [`PlanCache::prepared_conversions`] is the proof. Conversion
-    /// happens outside the lock (it walks the whole value buffer).
-    pub fn get_or_prepare(&self, job: &JobSpec) -> Result<(Arc<PreparedBsr>, bool)> {
+    /// realized pattern *in the job's storage dtype*. Returns
+    /// `(operand, was_hit)`. Keyed at the (pattern, dtype) level
+    /// ([`JobSpec::prepared_key`]): static and dynamic jobs with the
+    /// same seed and dtype share the operand across every batch shape,
+    /// so steady-state serving performs **zero** conversions per
+    /// precision — [`PlanCache::prepared_conversions`] is the proof.
+    /// Conversion happens outside the lock (it walks the whole value
+    /// buffer, quantizing for narrow dtypes).
+    pub fn get_or_prepare(&self, job: &JobSpec) -> Result<(PreparedOperand, bool)> {
         use std::sync::atomic::Ordering::Relaxed;
         let key = job.prepared_key();
         if let Some(p) = self.prepared.lock().expect("prepared operands poisoned").get(&key) {
             self.prepared_hits.fetch_add(1, Relaxed);
             return Ok((p.clone(), true));
         }
-        let built = Arc::new(PreparedBsr::from_pattern(
+        let built = PreparedOperand::from_pattern(
             job.m,
             job.k,
             job.b,
             job.density,
             job.pattern_seed,
-        )?);
+            job.dtype,
+        )?;
         self.prepared_conversions.fetch_add(1, Relaxed);
         self.prepared_misses.fetch_add(1, Relaxed);
         let mut map = self.prepared.lock().expect("prepared operands poisoned");
@@ -699,23 +706,36 @@ mod tests {
     }
 
     #[test]
-    fn prepared_operands_are_cached_per_pattern() {
+    fn prepared_operands_are_cached_per_pattern_and_dtype() {
         let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
         let (p1, h1) = cache.get_or_prepare(&job(Mode::Static, 1)).unwrap();
         assert!(!h1);
+        assert_eq!(p1.dtype(), DType::Fp16, "operands are built in the job's dtype");
         assert_eq!(cache.prepared_conversions(), 1);
         // Same pattern, different mode and batch shape: a hit.
         let mut dynamic = job(Mode::Dynamic, 1);
         dynamic.n = 4096;
         let (p2, h2) = cache.get_or_prepare(&dynamic).unwrap();
         assert!(h2, "mode/batch shape must not re-convert");
-        assert!(Arc::ptr_eq(&p1, &p2), "one operand, shared");
+        assert!(p1.ptr_eq(&p2), "one operand, shared");
         assert_eq!(cache.prepared_conversions(), 1);
+        // The same pattern at the other precision is its own operand:
+        // one more conversion, then hits.
+        let mut fp32 = job(Mode::Static, 1);
+        fp32.dtype = DType::Fp32;
+        let (p3, h3) = cache.get_or_prepare(&fp32).unwrap();
+        assert!(!h3, "a new dtype converts once");
+        assert_eq!(p3.dtype(), DType::Fp32);
+        assert!(!p3.ptr_eq(&p1));
+        assert!(p3.bytes() > p1.bytes(), "f32 values are twice the f16 storage");
+        let (_, h3b) = cache.get_or_prepare(&fp32).unwrap();
+        assert!(h3b, "steady state per dtype");
+        assert_eq!(cache.prepared_conversions(), 2);
         // A different seed is a different realized pattern.
-        let (_, h3) = cache.get_or_prepare(&job(Mode::Static, 2)).unwrap();
-        assert!(!h3);
-        assert_eq!(cache.prepared_stats(), (1, 2));
-        assert_eq!(cache.prepared_len(), 2);
+        let (_, h4) = cache.get_or_prepare(&job(Mode::Static, 2)).unwrap();
+        assert!(!h4);
+        assert_eq!(cache.prepared_stats(), (2, 3));
+        assert_eq!(cache.prepared_len(), 3);
         assert_eq!(cache.prepared_eviction_stats(), (0, 0));
     }
 

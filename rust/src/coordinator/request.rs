@@ -107,17 +107,22 @@ impl JobSpec {
     }
 
     /// Key for prepared-operand caching ([`crate::kernels::PreparedBsr`]
-    /// in the plan cache): the *realized pattern* — geometry plus the
-    /// pattern seed, without the batch dimension or the mode (static
-    /// and dynamic jobs with the same seed realize the same operand,
-    /// and the operand does not depend on `n`). One conversion serves
-    /// every batch shape the pattern is executed at.
+    /// in the plan cache): the *realized pattern in its storage dtype*
+    /// — geometry plus the pattern seed plus the dtype, without the
+    /// batch dimension or the mode (static and dynamic jobs with the
+    /// same seed realize the same operand, and the operand does not
+    /// depend on `n`). One conversion serves every batch shape the
+    /// pattern is executed at; FP16 and FP32 traffic on the same
+    /// pattern hold *different* operands (half-width value storage,
+    /// quantized once), so the dtype is part of the key — without it,
+    /// mixed-precision traffic would re-convert on every dtype flip.
     pub fn prepared_key(&self) -> PreparedKey {
         PreparedKey {
             m: self.m,
             k: self.k,
             b: self.b,
             density_millionths: self.density_millionths(),
+            dtype: self.dtype,
             pattern_seed: self.pattern_seed,
         }
     }
@@ -158,13 +163,15 @@ pub struct PatternKey {
 }
 
 /// Prepared-operand cache key (see [`JobSpec::prepared_key`]): one
-/// realized pattern, any batch shape or sparse mode.
+/// realized pattern in one storage dtype, any batch shape or sparse
+/// mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PreparedKey {
     pub m: usize,
     pub k: usize,
     pub b: usize,
     pub density_millionths: u64,
+    pub dtype: DType,
     pub pattern_seed: u64,
 }
 
@@ -258,12 +265,19 @@ mod tests {
     }
 
     #[test]
-    fn prepared_key_is_pattern_level() {
+    fn prepared_key_is_pattern_and_dtype_level() {
         let mut a = spec(Mode::Static, 5);
         let b = spec(Mode::Dynamic, 5);
         assert_eq!(a.prepared_key(), b.prepared_key(), "mode must not matter");
         a.n = 4096;
         assert_eq!(a.prepared_key(), b.prepared_key(), "batch shape must not matter");
+        a.dtype = DType::Fp32;
+        assert_ne!(
+            a.prepared_key(),
+            b.prepared_key(),
+            "storage dtype splits the operand: fp16 and fp32 hold different layouts"
+        );
+        a.dtype = b.dtype;
         a.pattern_seed = 6;
         assert_ne!(a.prepared_key(), b.prepared_key(), "the realized pattern matters");
     }

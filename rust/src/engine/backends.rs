@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::request::{JobResult, JobSpec, Mode};
 use crate::error::{Error, Result};
 use crate::gpu::{self, A100Spec};
-use crate::kernels::{self, PreparedBsr, Scratch};
+use crate::kernels::{self, Element, PreparedBsr, PreparedOperand, Scratch, TypedScratch, F16};
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::patterns;
 use crate::DType;
@@ -295,21 +295,58 @@ impl KernelRun {
 }
 
 /// Numerically execute `job` through the native compute layer
-/// ([`crate::kernels`]): the actual f32 SpMM/GEMM this machine can
-/// *time*, complementing the simulated device cycles the backends'
-/// `plan`/`execute` report. Sparse modes run the prepared tiled
-/// kernel — a caller holding the pattern's cached [`PreparedBsr`]
-/// (the coordinator's plan cache) passes it via `prepared`, `None`
-/// converts from the job's pattern seed — and dense jobs run the
-/// `ikj`-tiled kernel. Operands are deterministic pseudo-data from
-/// `scratch` (reused across calls; nothing allocates at steady
-/// state), and the output stays in `scratch` for oracle checks.
-/// `threads` bounds the row-panel parallelism; `spmm_auto` decides
-/// whether the job is large enough to spend it.
+/// ([`crate::kernels`]) **in the job's declared dtype**: the actual
+/// SpMM/GEMM this machine can *time* (f32 storage, or f16 storage
+/// with f32 accumulation — the AMP contract), complementing the
+/// simulated device cycles the backends' `plan`/`execute` report.
+/// Sparse modes run the prepared tiled kernel — a caller holding the
+/// pattern's cached [`PreparedOperand`] (the coordinator's plan
+/// cache) passes it via `prepared`, `None` converts from the job's
+/// pattern seed; a dtype mismatch between the handle and the job is a
+/// caller bug and errors rather than silently widening — and dense
+/// jobs run the `ikj`-tiled kernel. Operands are deterministic
+/// pseudo-data from the matching half of `scratch` (reused across
+/// calls; nothing allocates at steady state in either precision), and
+/// the output stays in the scratch for oracle checks. `threads`
+/// bounds the row-panel parallelism; `spmm_auto` decides whether the
+/// job is large enough to spend it.
 pub fn execute_kernel(
     job: &JobSpec,
-    prepared: Option<&PreparedBsr>,
+    prepared: Option<&PreparedOperand>,
     scratch: &mut Scratch,
+    threads: usize,
+) -> Result<KernelRun> {
+    if let Some(p) = prepared {
+        if p.dtype() != job.dtype {
+            return Err(Error::InvalidFormat(format!(
+                "prepared operand is {} but the job executes in {}",
+                p.dtype(),
+                job.dtype
+            )));
+        }
+    }
+    match job.dtype {
+        DType::Fp32 => execute_typed::<f32>(
+            job,
+            prepared.and_then(PreparedOperand::as_f32).map(|p| p.as_ref()),
+            scratch.fp32(),
+            threads,
+        ),
+        DType::Fp16 => execute_typed::<F16>(
+            job,
+            prepared.and_then(PreparedOperand::as_f16).map(|p| p.as_ref()),
+            scratch.fp16(),
+            threads,
+        ),
+    }
+}
+
+/// The monomorphized execution behind [`execute_kernel`]: one storage
+/// element, one scratch half.
+fn execute_typed<E: Element>(
+    job: &JobSpec,
+    prepared: Option<&PreparedBsr<E>>,
+    scratch: &mut TypedScratch<E>,
     threads: usize,
 ) -> Result<KernelRun> {
     match job.mode {
@@ -324,7 +361,7 @@ pub fn execute_kernel(
             let prep = match prepared {
                 Some(p) => p,
                 None => {
-                    converted = PreparedBsr::from_pattern(
+                    converted = PreparedBsr::<E>::from_pattern(
                         job.m,
                         job.k,
                         job.b,
@@ -443,11 +480,12 @@ mod tests {
 
     #[test]
     fn kernel_execution_matches_numeric_oracle() {
-        // The backends' numeric arm runs on crate::kernels; its output
-        // must agree with the naive reference on the same operands
-        // within the documented kernel tolerance (not bit-equality —
-        // the tiled path reorders f32 partial sums).
+        // The backends' numeric arm runs on crate::kernels; its f32
+        // output must agree with the naive reference on the same
+        // operands within the documented kernel tolerance (not
+        // bit-equality — the tiled path reorders f32 partial sums).
         let mut j = job(1.0 / 8.0, 8);
+        j.dtype = DType::Fp32;
         j.m = 256;
         j.k = 256;
         j.n = 33; // exercises the n-tile remainder
@@ -479,20 +517,76 @@ mod tests {
     }
 
     #[test]
+    fn fp16_jobs_execute_in_f16_storage() {
+        // A declared-FP16 job must run the F16 kernel on the f16
+        // scratch half — output lands in f16 storage and agrees with
+        // the f32 oracle on the quantized operands within the f16
+        // contract.
+        let mut j = job(1.0 / 8.0, 8);
+        assert_eq!(j.dtype, DType::Fp16);
+        j.mode = Mode::Static;
+        j.m = 128;
+        j.k = 128;
+        j.n = 33;
+        let mut scratch = Scratch::default();
+        let x16 = scratch.fp16().spmm_operands(j.m, j.k, j.n).0.to_vec();
+        let run = execute_kernel(&j, None, &mut scratch, 1).unwrap();
+        assert!(run.flops > 0.0);
+        assert!(scratch.output().is_empty(), "the f32 half must stay untouched");
+        let prep16 = PreparedBsr::<F16>::from_pattern(
+            j.m, j.k, j.b, j.density, j.pattern_seed,
+        )
+        .unwrap();
+        let expect = prep16
+            .to_block_coo()
+            .unwrap()
+            .spmm_dense(&kernels::dequantize(&x16), j.n)
+            .unwrap();
+        for (i, (&u, &v)) in
+            kernels::dequantize(scratch.output_f16()).iter().zip(&expect).enumerate()
+        {
+            assert!(
+                kernels::close_enough_for(DType::Fp16, u, v),
+                "element {i}: {u} vs {v}"
+            );
+        }
+    }
+
+    #[test]
     fn kernel_execution_accepts_cached_prepared_operand() {
         let mut j = job(1.0 / 8.0, 16);
         j.mode = Mode::Static;
         j.m = 128;
         j.k = 128;
         j.n = 16;
-        let prep =
-            PreparedBsr::from_pattern(j.m, j.k, j.b, j.density, j.pattern_seed).unwrap();
+        for dtype in [DType::Fp32, DType::Fp16] {
+            j.dtype = dtype;
+            let prep = PreparedOperand::from_pattern(
+                j.m, j.k, j.b, j.density, j.pattern_seed, dtype,
+            )
+            .unwrap();
+            let mut scratch = Scratch::default();
+            let cached = execute_kernel(&j, Some(&prep), &mut scratch, 1).unwrap();
+            let y_cached = match dtype {
+                DType::Fp32 => scratch.output().to_vec(),
+                DType::Fp16 => kernels::dequantize(scratch.output_f16()),
+            };
+            let fresh = execute_kernel(&j, None, &mut scratch, 1).unwrap();
+            let y_fresh = match dtype {
+                DType::Fp32 => scratch.output().to_vec(),
+                DType::Fp16 => kernels::dequantize(scratch.output_f16()),
+            };
+            assert_eq!(y_cached, y_fresh, "{dtype}: cached and fresh operands agree");
+            assert_eq!(cached.flops, fresh.flops);
+        }
+        // A dtype-mismatched handle is a caller bug, not a silent
+        // widening.
+        j.dtype = DType::Fp16;
+        let wrong =
+            PreparedOperand::from_pattern(j.m, j.k, j.b, j.density, j.pattern_seed, DType::Fp32)
+                .unwrap();
         let mut scratch = Scratch::default();
-        let cached = execute_kernel(&j, Some(&prep), &mut scratch, 1).unwrap();
-        let y_cached = scratch.output().to_vec();
-        let fresh = execute_kernel(&j, None, &mut scratch, 1).unwrap();
-        assert_eq!(y_cached, scratch.output(), "cached and fresh operands agree");
-        assert_eq!(cached.flops, fresh.flops);
+        assert!(execute_kernel(&j, Some(&wrong), &mut scratch, 1).is_err());
         let mut auto = j.clone();
         auto.mode = Mode::Auto;
         assert!(execute_kernel(&auto, None, &mut scratch, 1).is_err());

@@ -296,6 +296,129 @@ pub fn corrected_argmin_amortized<'a>(
     best.map(|(e, corrected, _)| (e, corrected))
 }
 
+/// Default EWMA weight for the wall-per-cycle scale ([`WallFeedback`]).
+/// Deliberately slower than the factor EWMA: the scale is a property
+/// of the *host*, not of any backend, so it should average across the
+/// whole observation stream rather than chase the latest kernel.
+pub const WALL_SCALE_ALPHA: f64 = 0.1;
+
+/// Scale observations required before [`WallFeedback`] starts feeding
+/// normalized observations into its calibration. Until the
+/// wall-per-cycle scale has seen this many samples it is dominated by
+/// whichever backend happened to run first, and normalized ratios
+/// would encode startup noise rather than backend-relative cost.
+pub const WALL_WARMUP_OBSERVATIONS: u64 = 8;
+
+/// Measured-wall-time feedback into a [`Calibration`] — the
+/// units-normalization layer that closes the ROADMAP's "feed measured
+/// wall times into `Calibration::observe`" item without a PJRT
+/// backend.
+///
+/// `Calibration` learns from *cycle* ratios; a kernel measurement is
+/// *seconds*. The two are bridged by one EWMA of the host's
+/// nanoseconds-per-estimated-cycle over every observation
+/// ([`WALL_SCALE_ALPHA`]): an incoming wall time is divided by the
+/// current scale to yield equivalent observed cycles, then fed into
+/// the wrapped calibration against the plan's raw cycle estimate.
+/// Absolute host speed cancels out — a uniformly slow machine moves
+/// the scale, not the factors — so what the factors learn is exactly
+/// the *relative* disagreement between the cost model and measured
+/// wall time per (backend, geometry-bucket, dtype) (the bucket key
+/// carries the dtype, so FP16 and FP32 kernels calibrate
+/// independently). A backend whose kernels run slow *per estimated
+/// cycle* relative to the traffic-wide mean accumulates a factor
+/// above 1 and loses argmin ties it used to win; see
+/// `wall_fed_calibration_flips_a_skewed_argmin` for the end-to-end
+/// property.
+#[derive(Debug)]
+pub struct WallFeedback {
+    calibration: Calibration,
+    scale: Mutex<WallScale>,
+    fed: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct WallScale {
+    ns_per_cycle: f64,
+    samples: u64,
+}
+
+impl Default for WallFeedback {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_ALPHA, DEFAULT_CALIBRATION_CAPACITY)
+    }
+}
+
+impl WallFeedback {
+    /// A wall feedback whose inner calibration uses `alpha` smoothing
+    /// and at most `capacity` (backend, geometry-bucket) factors.
+    pub fn with_capacity(alpha: f64, capacity: usize) -> Self {
+        Self {
+            calibration: Calibration::with_capacity(alpha, capacity),
+            scale: Mutex::new(WallScale { ns_per_cycle: 0.0, samples: 0 }),
+            fed: AtomicU64::new(0),
+        }
+    }
+
+    /// Feed one measured kernel execution: `estimated` is the plan's
+    /// raw cycle estimate for the executed geometry, `wall` the
+    /// measured kernel time. Returns `true` once the observation
+    /// actually reached the calibration (scale warm, inputs sane).
+    pub fn observe_wall(
+        &self,
+        kind: BackendKind,
+        job: &JobSpec,
+        estimated: u64,
+        wall: std::time::Duration,
+    ) -> bool {
+        let wall_ns = wall.as_secs_f64() * 1e9;
+        if estimated == 0 || wall_ns <= 0.0 {
+            return false;
+        }
+        let ratio = wall_ns / estimated as f64;
+        let (scale, samples) = {
+            let mut g = self.scale.lock().expect("wall scale poisoned");
+            if g.samples == 0 {
+                g.ns_per_cycle = ratio;
+            } else {
+                g.ns_per_cycle += WALL_SCALE_ALPHA * (ratio - g.ns_per_cycle);
+            }
+            g.samples += 1;
+            (g.ns_per_cycle, g.samples)
+        };
+        if samples <= WALL_WARMUP_OBSERVATIONS || scale <= 0.0 {
+            return false;
+        }
+        let observed_equiv = ((wall_ns / scale).round() as u64).max(1);
+        self.calibration.observe(kind, job, estimated, observed_equiv);
+        self.fed.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// The wall-fed calibration, to hand to the resolver in place of
+    /// the simulated-cycle one.
+    pub fn calibration(&self) -> &Calibration {
+        &self.calibration
+    }
+
+    /// The current host scale in nanoseconds per estimated cycle (0.0
+    /// before the first observation).
+    pub fn ns_per_cycle(&self) -> f64 {
+        self.scale.lock().expect("wall scale poisoned").ns_per_cycle
+    }
+
+    /// Raw wall measurements seen (including warm-up samples that were
+    /// not yet fed through).
+    pub fn scale_samples(&self) -> u64 {
+        self.scale.lock().expect("wall scale poisoned").samples
+    }
+
+    /// Normalized observations actually fed into the calibration.
+    pub fn observations(&self) -> u64 {
+        self.fed.load(Ordering::Relaxed)
+    }
+}
+
 /// The amortized static-replan surcharge for scoring `estimates` at
 /// `job`'s pattern family: static's *corrected* per-batch estimate
 /// times the replan factor over the expected pattern lifetime. Zero
@@ -458,6 +581,108 @@ mod tests {
         // No static candidate: nothing to amortize.
         let dense_only = vec![est(BackendKind::Dense, 4000)];
         assert_eq!(static_surcharge_for(&dense_only, None, &j, Some(&churned)), 0);
+    }
+
+    #[test]
+    fn wall_feedback_warms_up_then_normalizes_units() {
+        use std::time::Duration;
+        let wf = WallFeedback::default();
+        let j = job(1024, 256, 1.0 / 16.0);
+        // Warm-up: uniform 1 ns/cycle across backends — nothing feeds
+        // until the scale has settled.
+        let mut fed_during_warmup = false;
+        for i in 0..WALL_WARMUP_OBSERVATIONS {
+            let kind = if i % 2 == 0 { BackendKind::Dense } else { BackendKind::Static };
+            fed_during_warmup |=
+                wf.observe_wall(kind, &j, 1_000, Duration::from_micros(1));
+        }
+        assert!(!fed_during_warmup, "warm-up samples must not feed the calibration");
+        assert_eq!(wf.observations(), 0);
+        assert!((wf.ns_per_cycle() - 1.0).abs() < 1e-9, "uniform stream settles the scale");
+        // Post-warmup, a backend matching the fleet scale observes
+        // ~identity: no factor learned.
+        assert!(wf.observe_wall(BackendKind::Dense, &j, 1_000, Duration::from_micros(1)));
+        assert!((wf.calibration().factor(BackendKind::Dense, &j) - 1.0).abs() < 0.05);
+        // Degenerate inputs are ignored.
+        assert!(!wf.observe_wall(BackendKind::Dense, &j, 0, Duration::from_micros(1)));
+        assert!(!wf.observe_wall(BackendKind::Dense, &j, 1_000, Duration::ZERO));
+    }
+
+    #[test]
+    fn wall_fed_calibration_flips_a_skewed_argmin() {
+        use std::time::Duration;
+        // The acceptance property: measured wall times, fed through
+        // the units layer, demonstrably shift an auto-mode decision.
+        // Workload: dynamic is the raw argmin by a sliver, but its
+        // kernels measure ~3x slower per estimated cycle than the
+        // dense/static fleet (a skewed pattern paying real propagation
+        // cost the model missed).
+        let wf = WallFeedback::default();
+        let j = job(1024, 256, 1.0 / 16.0);
+        let est = |kind, cycles| PlanEstimate { kind, cycles, tflops: 1.0, propagation_steps: 0 };
+        let estimates = vec![
+            est(BackendKind::Dense, 4000),
+            est(BackendKind::Static, 1050),
+            est(BackendKind::Dynamic, 1000),
+        ];
+        let (raw, _) = corrected_argmin(&estimates, None, &j).unwrap();
+        assert_eq!(raw.kind, BackendKind::Dynamic, "premise: dynamic wins raw");
+        // Mixed measured stream: 1 ns/cycle for dense and static, 3
+        // ns/cycle for dynamic.
+        for _ in 0..32 {
+            wf.observe_wall(BackendKind::Dense, &j, 4000, Duration::from_nanos(4000));
+            wf.observe_wall(BackendKind::Static, &j, 1050, Duration::from_nanos(1050));
+            wf.observe_wall(BackendKind::Dynamic, &j, 1000, Duration::from_nanos(3000));
+        }
+        assert!(wf.observations() > 0, "post-warmup observations fed through");
+        // The learned factors are relative to the traffic-wide scale:
+        // dynamic's must sit clearly above the dense/static ones.
+        let f_dyn = wf.calibration().factor(BackendKind::Dynamic, &j);
+        let f_st = wf.calibration().factor(BackendKind::Static, &j);
+        assert!(f_dyn > f_st * 1.5, "dynamic {f_dyn} vs static {f_st}");
+        // And the argmin flips to static under the wall-fed
+        // calibration — the measured-reality dispatch shift.
+        let (win, _) = corrected_argmin(&estimates, Some(wf.calibration()), &j).unwrap();
+        assert_eq!(win.kind, BackendKind::Static, "wall feedback must flip the argmin");
+    }
+
+    #[test]
+    fn wall_feedback_is_invariant_to_absolute_host_speed() {
+        use std::time::Duration;
+        // Two hosts, one 10x slower across the board: the learned
+        // factors must agree — absolute speed lands in the scale, not
+        // the factors.
+        let j = job(512, 128, 0.25);
+        let factors_at = |ns_per_cycle: u64| {
+            let wf = WallFeedback::default();
+            for _ in 0..24 {
+                wf.observe_wall(
+                    BackendKind::Dense,
+                    &j,
+                    1_000,
+                    Duration::from_nanos(1_000 * ns_per_cycle),
+                );
+                wf.observe_wall(
+                    BackendKind::Dynamic,
+                    &j,
+                    1_000,
+                    Duration::from_nanos(2_000 * ns_per_cycle),
+                );
+            }
+            (
+                wf.calibration().factor(BackendKind::Dense, &j),
+                wf.calibration().factor(BackendKind::Dynamic, &j),
+                wf.ns_per_cycle(),
+            )
+        };
+        let (d1, dy1, s1) = factors_at(1);
+        let (d10, dy10, s10) = factors_at(10);
+        // The normalizer rounds equivalent cycles to integers, so the
+        // two hosts can differ by a cycle here and there — but the
+        // factors must agree far beyond the dense/dynamic gap.
+        assert!((d1 - d10).abs() < 1e-2 && (dy1 - dy10).abs() < 1e-2);
+        assert!(dy1 > d1, "the relatively slow backend learns the high factor");
+        assert!(s10 > s1 * 5.0, "absolute speed lives in the scale");
     }
 
     #[test]

@@ -17,10 +17,17 @@
 //!   estimated cycles, with the fitted power law of Figure 4c
 //!   ([`crate::fit`]) available as a fast pre-filter for decisively
 //!   sparse or decisively dense jobs.
-//! * [`Calibration`] — per-(backend, geometry-bucket) EWMA correction
-//!   factors learned from observed execution cycles and applied to
-//!   [`PlanEstimate`] cycles before the selector's argmin, so dispatch
-//!   follows measured cost rather than the analytical model alone.
+//! * [`Calibration`] — per-(backend, geometry-bucket, dtype) EWMA
+//!   correction factors learned from observed execution cycles and
+//!   applied to [`PlanEstimate`] cycles before the selector's argmin,
+//!   so dispatch follows measured cost rather than the analytical
+//!   model alone.
+//! * [`WallFeedback`] — the units-normalization layer that feeds
+//!   *measured kernel wall times* (the numeric serving arm) into a
+//!   calibration: one EWMA of the host's ns-per-estimated-cycle
+//!   converts seconds into equivalent cycles, so factors learn the
+//!   relative disagreement between cost model and measured reality —
+//!   the ROADMAP's wall-time feedback item, closed without PJRT.
 //! * [`ChurnTracker`] — per-pattern-geometry EWMA of the
 //!   distinct-pattern rate; static's pattern-specific planning cost is
 //!   amortized over the expected pattern lifetime and added to its
@@ -48,7 +55,10 @@ pub use backends::{
     backend_for, device_backends, execute_kernel, Backend, BackendKind, DenseBackend,
     DynamicBackend, EngineEnv, GpuBackend, KernelRun, PlanEstimate, StaticBackend,
 };
-pub use calibration::{Calibration, INFORMATIVE_DELTA, MAX_CORRECTION, OBSERVATIONS_PER_REVISIT};
+pub use calibration::{
+    Calibration, WallFeedback, INFORMATIVE_DELTA, MAX_CORRECTION, OBSERVATIONS_PER_REVISIT,
+    WALL_SCALE_ALPHA, WALL_WARMUP_OBSERVATIONS,
+};
 pub use churn::{
     CHURN_MOVES_PER_REVISIT, ChurnTracker, MAX_PATTERN_LIFETIME, STATIC_REPLAN_COST_FACTOR,
 };

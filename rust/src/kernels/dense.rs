@@ -6,17 +6,29 @@
 //! output rows by [`N_TILE`](crate::kernels::N_TILE) output columns so
 //! the accumulator panel stays in registers across the whole `k` loop
 //! and each output element is written exactly once, into a
-//! caller-owned (reusable) buffer.
+//! caller-owned (reusable) buffer. Like the SpMM kernels it is generic
+//! over the storage element ([`Element`]): operands and outputs live
+//! in the job's dtype, partial sums accumulate in f32 (the AMP
+//! contract), and the output store quantizes once.
 
 use crate::error::{Error, Result};
+use crate::kernels::element::Element;
 use crate::kernels::spmm::N_TILE;
 
 /// Output-row tile height of the register panel.
 pub const I_TILE: usize = 4;
 
 /// Tiled dense matmul: `y = A x`, `a` row-major `m x k`, `x` row-major
-/// `k x n`, `y` row-major `m x n`. Overwrites all of `y`.
-pub fn matmul(a: &[f32], x: &[f32], m: usize, k: usize, n: usize, y: &mut [f32]) -> Result<()> {
+/// `k x n`, `y` row-major `m x n`, all in storage type `E` with f32
+/// accumulation. Overwrites all of `y`.
+pub fn matmul<E: Element>(
+    a: &[E],
+    x: &[E],
+    m: usize,
+    k: usize,
+    n: usize,
+    y: &mut [E],
+) -> Result<()> {
     if a.len() != m * k {
         return Err(Error::InvalidFormat(format!(
             "a has {} elements, kernel needs {m} x {k}",
@@ -44,16 +56,23 @@ pub fn matmul(a: &[f32], x: &[f32], m: usize, k: usize, n: usize, y: &mut [f32])
             let mut acc = [[0f32; N_TILE]; I_TILE];
             for l in 0..k {
                 let xrow = &x[l * n + j..][..tile];
+                let mut xf = [0f32; N_TILE];
+                for (d, &s) in xf.iter_mut().zip(xrow) {
+                    *d = s.to_f32();
+                }
                 for (ii, acc_row) in acc.iter_mut().enumerate().take(ib) {
-                    let w = a[(i0 + ii) * k + l];
-                    for (v, &xv) in acc_row.iter_mut().zip(xrow) {
+                    let w = a[(i0 + ii) * k + l].to_f32();
+                    for (v, &xv) in acc_row.iter_mut().zip(&xf[..tile]) {
                         *v += w * xv;
                     }
                 }
             }
             for (ii, acc_row) in acc.iter().enumerate().take(ib) {
-                y[(i0 + ii) * n + j..(i0 + ii) * n + j + tile]
-                    .copy_from_slice(&acc_row[..tile]);
+                for (o, &v) in
+                    y[(i0 + ii) * n + j..(i0 + ii) * n + j + tile].iter_mut().zip(&acc_row[..tile])
+                {
+                    *o = E::from_f32(v);
+                }
             }
             j += tile;
         }
@@ -65,8 +84,10 @@ pub fn matmul(a: &[f32], x: &[f32], m: usize, k: usize, n: usize, y: &mut [f32])
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::spmm::close_enough;
+    use crate::kernels::element::{dequantize, quantize, F16};
+    use crate::kernels::spmm::{close_enough, close_enough_for};
     use crate::util::Rng;
+    use crate::DType;
 
     fn reference(a: &[f32], x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         let mut y = vec![0f32; m * n];
@@ -93,6 +114,22 @@ mod tests {
             for (i, (&u, &v)) in y.iter().zip(&expect).enumerate() {
                 assert!(close_enough(u, v), "m={m} k={k} n={n} elem {i}: {u} vs {v}");
             }
+        }
+    }
+
+    #[test]
+    fn f16_matmul_matches_f32_oracle_on_quantized_operands() {
+        let mut rng = Rng::seed_from_u64(0xDE16);
+        let (m, k, n) = (9, 17, 33);
+        let af: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let xf: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let a16: Vec<F16> = quantize(&af);
+        let x16: Vec<F16> = quantize(&xf);
+        let mut y16 = vec![F16(0x7E00); m * n];
+        matmul(&a16, &x16, m, k, n, &mut y16).unwrap();
+        let expect = reference(&dequantize(&a16), &dequantize(&x16), m, k, n);
+        for (i, (&u, &v)) in dequantize(&y16).iter().zip(&expect).enumerate() {
+            assert!(close_enough_for(DType::Fp16, u, v), "elem {i}: {u} vs {v}");
         }
     }
 

@@ -1,0 +1,272 @@
+//! Storage element types for the native compute layer.
+//!
+//! The kernels are generic over the *storage* element ([`Element`]):
+//! operands and outputs live in the job's declared precision while
+//! every partial sum accumulates in f32 — the IPU AMP contract the
+//! paper benchmarks (FP16 inputs, FP32 partials), and the reason the
+//! FP16 kernels are a memory-bandwidth story rather than a different
+//! arithmetic one. Two implementations exist:
+//!
+//! * `f32` — identity conversions; the compiler erases them, so the
+//!   monomorphized f32 kernels are byte-for-byte the pre-generic ones.
+//! * [`F16`] — IEEE 754 binary16 stored as its raw bit pattern, with
+//!   in-repo software conversion (round-to-nearest-even on the way in,
+//!   exact widening on the way out; no external dependency). The
+//!   offline toolchain has no `half` crate, and the conversion is ~20
+//!   lines each way.
+//!
+//! Conversion contract (pinned exhaustively in the tests below):
+//! f16 -> f32 -> f16 is bit-identical for **all** 65536 bit patterns
+//! (signs, subnormals, infinities and every NaN payload included —
+//! modulo the quiet bit on signaling NaNs, which Rust permits
+//! platforms to set when an f32 moves through registers), and
+//! f32 -> f16 rounds to nearest-even with overflow to infinity and
+//! underflow through the subnormal range to signed zero.
+
+use crate::DType;
+
+/// A kernel storage element: convertible to/from the f32 the
+/// accumulators run in, tagged with the [`DType`] it serves.
+pub trait Element:
+    Copy + Clone + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static
+{
+    /// The job-level dtype this storage element implements.
+    const DTYPE: DType;
+
+    /// Additive identity (what empty output rows are filled with).
+    const ZERO: Self;
+
+    /// Quantize an f32 into this storage type (round-to-nearest-even
+    /// for [`F16`], identity for `f32`).
+    fn from_f32(v: f32) -> Self;
+
+    /// Widen to f32 (exact for every representable value).
+    fn to_f32(self) -> f32;
+}
+
+impl Element for f32 {
+    const DTYPE: DType = DType::Fp32;
+    const ZERO: Self = 0.0;
+
+    #[inline(always)]
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+/// IEEE 754 binary16, stored as its raw bit pattern (1 sign, 5
+/// exponent, 10 mantissa bits). Arithmetic never happens *in* f16 —
+/// kernels widen to f32, accumulate, and quantize once on store — so
+/// the type only needs the two conversions plus equality on bits.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct F16(pub u16);
+
+impl F16 {
+    /// Positive zero.
+    pub const ZERO: F16 = F16(0);
+    /// Largest finite value, 65504.0.
+    pub const MAX: F16 = F16(0x7BFF);
+    /// Smallest positive subnormal, 2^-24.
+    pub const MIN_POSITIVE_SUBNORMAL: F16 = F16(0x0001);
+    /// Positive infinity.
+    pub const INFINITY: F16 = F16(0x7C00);
+
+    /// Round an f32 to the nearest representable f16 (ties to even).
+    /// Overflow saturates to the matching infinity; magnitudes below
+    /// half the smallest subnormal flush to signed zero; NaN stays NaN.
+    pub fn from_f32(v: f32) -> F16 {
+        let bits = v.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let man = bits & 0x007F_FFFF;
+        if exp == 0xFF {
+            // Infinity or NaN. Keep the top 10 payload bits so
+            // f16-originated NaNs round-trip bit-exactly; a NaN whose
+            // payload lives entirely in the truncated low bits still
+            // needs *some* payload to stay a NaN.
+            if man == 0 {
+                return F16(sign | 0x7C00);
+            }
+            let payload = (man >> 13) as u16 & 0x03FF;
+            return F16(sign | 0x7C00 | if payload == 0 { 0x0200 } else { payload });
+        }
+        // Re-bias: f32 exponent bias 127, f16 bias 15.
+        let e = exp - 127 + 15;
+        if e >= 0x1F {
+            return F16(sign | 0x7C00); // overflow -> infinity
+        }
+        if e <= 0 {
+            // Subnormal range: the value is (man|implicit1) * 2^(e-24)
+            // in units of the f16 subnormal step 2^-24. Below half the
+            // smallest step the round is always to zero.
+            if e < -10 {
+                return F16(sign);
+            }
+            let m32 = man | 0x0080_0000;
+            let shift = (14 - e) as u32; // 14..=24
+            let man16 = (m32 >> shift) as u16;
+            let rem = m32 & ((1u32 << shift) - 1);
+            let half = 1u32 << (shift - 1);
+            let mut h = sign | man16;
+            if rem > half || (rem == half && (man16 & 1) == 1) {
+                h += 1; // may carry into the smallest normal: correct
+            }
+            return F16(h);
+        }
+        // Normal: drop 13 mantissa bits with round-to-nearest-even. A
+        // mantissa carry bumps the exponent (and saturates to infinity
+        // at the top) through plain integer addition.
+        let man16 = (man >> 13) as u16;
+        let rem = man & 0x1FFF;
+        let mut h = sign | ((e as u16) << 10) | man16;
+        if rem > 0x1000 || (rem == 0x1000 && (man16 & 1) == 1) {
+            h += 1;
+        }
+        F16(h)
+    }
+
+    /// Widen to f32. Exact for every bit pattern: normals and
+    /// infinities re-bias, NaN payloads shift into the high mantissa
+    /// bits, and subnormals are rebuilt as `mantissa * 2^-24` (exact —
+    /// the product is a normal f32).
+    pub fn to_f32(self) -> f32 {
+        let h = self.0 as u32;
+        let sign = (h & 0x8000) << 16;
+        let exp = (h >> 10) & 0x1F;
+        let man = h & 0x03FF;
+        if exp == 0x1F {
+            return f32::from_bits(sign | 0x7F80_0000 | (man << 13));
+        }
+        if exp == 0 {
+            // Signed zero or subnormal.
+            let mag = man as f32 * (1.0 / 16_777_216.0); // * 2^-24, exact
+            return if sign != 0 { -mag } else { mag };
+        }
+        f32::from_bits(sign | ((exp + 127 - 15) << 23) | (man << 13))
+    }
+}
+
+impl Element for F16 {
+    const DTYPE: DType = DType::Fp16;
+    const ZERO: Self = F16::ZERO;
+
+    #[inline(always)]
+    fn from_f32(v: f32) -> Self {
+        F16::from_f32(v)
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        F16::to_f32(self)
+    }
+}
+
+/// Quantize an f32 slice into the storage type (used by the f16
+/// differential suite and the wall bench to build operands whose f32
+/// oracle sees exactly what the f16 kernel sees).
+pub fn quantize<E: Element>(src: &[f32]) -> Vec<E> {
+    src.iter().map(|&v| E::from_f32(v)).collect()
+}
+
+/// Widen a storage slice back to f32 (oracle comparisons).
+pub fn dequantize<E: Element>(src: &[E]) -> Vec<f32> {
+    src.iter().map(|&v| v.to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_f16_bit_pattern_round_trips_exactly() {
+        // The representable-value property, exhaustively: widening to
+        // f32 and re-quantizing reproduces every one of the 65536 bit
+        // patterns — all normals, subnormals, signed zeros, infinities
+        // and every NaN payload. One documented allowance: Rust
+        // reserves the right (x87-class targets) to set a NaN's quiet
+        // bit when an f32 moves through registers, so a signaling-NaN
+        // pattern may come back with 0x0200 OR'd in — that exact
+        // transformation and nothing else.
+        for bits in 0..=u16::MAX {
+            let h = F16(bits);
+            let back = F16::from_f32(h.to_f32()).0;
+            let is_nan = (bits & 0x7FFF) > 0x7C00;
+            assert!(
+                back == bits || (is_nan && back == (bits | 0x0200)),
+                "bit pattern {bits:#06x} failed the round trip: got {back:#06x}"
+            );
+        }
+    }
+
+    #[test]
+    fn known_values_convert_exactly() {
+        for &(f, bits) in &[
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3C00),
+            (-2.0, 0xC000),
+            (0.5, 0x3800),
+            (65504.0, 0x7BFF),                  // f16::MAX
+            (f32::powi(2.0, -14), 0x0400),      // smallest normal
+            (f32::powi(2.0, -24), 0x0001),      // smallest subnormal
+            (f32::INFINITY, 0x7C00),
+            (f32::NEG_INFINITY, 0xFC00),
+        ] {
+            assert_eq!(F16::from_f32(f).0, bits, "from_f32({f})");
+            assert_eq!(F16(bits).to_f32(), f, "to_f32({bits:#06x})");
+        }
+        assert!(F16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1.0 + 2^-11 sits exactly between 1.0 and the next f16
+        // (1.0 + 2^-10): ties go to the even mantissa, 1.0.
+        assert_eq!(F16::from_f32(1.0 + f32::powi(2.0, -11)).0, 0x3C00);
+        // The next midpoint up (odd low bit) rounds away.
+        let above = (1.0 + f32::powi(2.0, -10)) + f32::powi(2.0, -11);
+        assert_eq!(F16::from_f32(above).0, 0x3C02);
+        // Just past a midpoint always rounds up.
+        assert_eq!(F16::from_f32(1.0 + f32::powi(2.0, -11) + 1e-5).0, 0x3C01);
+    }
+
+    #[test]
+    fn overflow_and_underflow_saturate() {
+        // 65520 is the midpoint between MAX (65504) and 2^16; RNE
+        // picks the even neighbour, which is infinity.
+        assert_eq!(F16::from_f32(65520.0).0, 0x7C00);
+        assert_eq!(F16::from_f32(65519.0).0, 0x7BFF);
+        assert_eq!(F16::from_f32(-1e9).0, 0xFC00);
+        // Half the smallest subnormal ties to (even) zero; anything
+        // smaller flushes.
+        assert_eq!(F16::from_f32(f32::powi(2.0, -25)).0, 0x0000);
+        assert_eq!(F16::from_f32(-f32::powi(2.0, -26)).0, 0x8000);
+        // 1.5 * 2^-25 rounds up to the smallest subnormal.
+        assert_eq!(F16::from_f32(1.5 * f32::powi(2.0, -25)).0, 0x0001);
+    }
+
+    #[test]
+    fn subnormal_rounding_carries_into_normals() {
+        // The largest subnormal plus one step's midpoint rounds up
+        // into the smallest normal through the plain bit increment.
+        let largest_sub = F16(0x03FF).to_f32();
+        let step = F16::MIN_POSITIVE_SUBNORMAL.to_f32();
+        assert_eq!(F16::from_f32(largest_sub + 0.6 * step).0, 0x0400);
+    }
+
+    #[test]
+    fn quantize_dequantize_are_inverse_on_representables() {
+        let reps: Vec<f32> = (0..1000u16).map(|b| F16(b * 64).to_f32()).collect();
+        let q: Vec<F16> = quantize(&reps);
+        assert_eq!(dequantize(&q), reps);
+        // f32 instantiations are the identity.
+        let xs = [1.0f32, -2.5, 3.25e-9];
+        let q32: Vec<f32> = quantize(&xs);
+        assert_eq!(q32, xs);
+    }
+}

@@ -4,105 +4,165 @@
 //!
 //! The reproduction's other layers optimize *simulated* cycles; this
 //! one optimizes the wall clock this machine can actually measure.
+//! Since PR 5 the whole layer is generic over the storage element
+//! ([`Element`]: `f32`, or the in-repo software [`F16`]), with f32
+//! accumulation everywhere — jobs execute in their declared
+//! [`DType`](crate::DType) instead of silently widening to FP32.
 //! Structure:
 //!
+//! * [`element`] — the [`Element`] trait and the software IEEE
+//!   binary16 type ([`F16`]: bit-exact round-trip, RNE quantization).
 //! * [`PreparedBsr`] — the prepared operand: CSR-style block-row
 //!   pointers with per-row contiguous columns/values, converted once
-//!   from [`BlockCoo`](crate::sparse::coo::BlockCoo) and cached per
-//!   pattern alongside plans in the
-//!   [`PlanCache`](crate::coordinator::PlanCache).
+//!   from [`BlockCoo`](crate::sparse::coo::BlockCoo) per (pattern,
+//!   dtype) and cached alongside plans in the
+//!   [`PlanCache`](crate::coordinator::PlanCache);
+//!   [`PreparedOperand`] is the dtype-erased cached handle.
 //! * [`spmm`] / [`spmm_parallel`] / [`spmm_auto`] — block-size-
 //!   specialized, `n`-tiled SpMM microkernels (`b` ∈ {4, 8, 16}
 //!   monomorphized, generic fallback elsewhere), with nnz-balanced
 //!   row-panel parallelism over disjoint output slices.
 //! * [`dense::matmul`] — the `ikj`-tiled dense kernel with a reusable
 //!   caller-owned output buffer.
-//! * [`Scratch`] — reusable operand/output buffers so steady-state
-//!   numeric execution allocates nothing.
+//! * [`Scratch`] — reusable per-dtype operand/output buffers so
+//!   steady-state numeric execution allocates nothing in either
+//!   precision.
 //!
 //! The naive triple loops ([`crate::runtime::spmm_ref`],
 //! [`crate::runtime::dense_ref`],
 //! [`BlockCoo::spmm_dense`](crate::sparse::coo::BlockCoo::spmm_dense))
 //! stay exactly as they are — they are the differential oracle the
-//! kernel tests compare against, under the documented tolerance
-//! ([`close_enough`]). `repro bench wall` measures all three paths
-//! side by side.
+//! kernel tests compare against, under the documented per-dtype
+//! tolerance ([`close_enough`], [`close_enough_for`]; the FP16
+//! contract compares against the oracle on f16-quantized operands).
+//! `repro bench wall` measures the paths side by side in both dtypes.
 
 pub mod dense;
+pub mod element;
 pub mod parallel;
 pub mod prepared;
 pub mod spmm;
 
+pub use element::{dequantize, quantize, Element, F16};
 pub use parallel::{
     default_threads, partition_panels, spmm_auto, spmm_parallel, MIN_FLOPS_PER_THREAD,
 };
-pub use prepared::PreparedBsr;
-pub use spmm::{close_enough, spmm, ABS_TOLERANCE, N_TILE, REL_TOLERANCE};
+pub use prepared::{PreparedBsr, PreparedOperand};
+pub use spmm::{
+    close_enough, close_enough_for, spmm, tolerance, ABS_TOLERANCE, ABS_TOLERANCE_F16, N_TILE,
+    REL_TOLERANCE, REL_TOLERANCE_F16,
+};
 
 use crate::util::Rng;
 
-/// Reusable operand/output buffers for repeated numeric executions.
-/// Buffers grow to the working-set size and stay there; operand
-/// contents are deterministic pseudo-data (re-filled only when a
-/// buffer is resized — the values feed wall-time measurement, not a
-/// numeric contract).
-#[derive(Debug, Default)]
-pub struct Scratch {
-    x: Vec<f32>,
-    a: Vec<f32>,
-    y: Vec<f32>,
-}
-
 /// Fill a buffer with cheap deterministic pseudo-data in [-0.5, 0.5)
 /// (operands for wall-time measurement — shared by [`Scratch`] and
-/// the wall bench so their operand streams cannot drift).
-pub(crate) fn fill_pseudo(buf: &mut [f32], seed: u64) {
+/// the wall bench so their operand streams cannot drift). The f32
+/// value stream is dtype-independent; narrow storage quantizes it
+/// element-wise, so an FP16 buffer holds exactly the quantized view of
+/// the FP32 one.
+pub(crate) fn fill_pseudo<E: Element>(buf: &mut [E], seed: u64) {
     let mut rng = Rng::seed_from_u64(seed);
     for v in buf.iter_mut() {
-        *v = (rng.next_u64() >> 40) as f32 / (1u64 << 24) as f32 - 0.5;
+        *v = E::from_f32((rng.next_u64() >> 40) as f32 / (1u64 << 24) as f32 - 0.5);
     }
 }
 
-impl Scratch {
-    fn ensure(buf: &mut Vec<f32>, len: usize, seed: u64) {
+/// Reusable operand/output buffers for repeated numeric executions in
+/// one storage dtype. Buffers grow to the working-set size and stay
+/// there; operand contents are deterministic pseudo-data (re-filled
+/// only when a buffer is resized — the values feed wall-time
+/// measurement, not a numeric contract).
+#[derive(Debug, Default)]
+pub struct TypedScratch<E: Element> {
+    x: Vec<E>,
+    a: Vec<E>,
+    y: Vec<E>,
+}
+
+impl<E: Element> TypedScratch<E> {
+    fn ensure(buf: &mut Vec<E>, len: usize, seed: u64) {
         if buf.len() != len {
             buf.clear();
-            buf.resize(len, 0.0);
+            buf.resize(len, E::ZERO);
             fill_pseudo(buf, seed);
         }
     }
 
     /// The `k x n` activation operand and the `m x n` output buffer
     /// for an SpMM (disjoint borrows from one scratch).
-    pub fn spmm_operands(&mut self, m: usize, k: usize, n: usize) -> (&[f32], &mut [f32]) {
+    pub fn spmm_operands(&mut self, m: usize, k: usize, n: usize) -> (&[E], &mut [E]) {
         Self::ensure(&mut self.x, k * n, 1);
         if self.y.len() != m * n {
             self.y.clear();
-            self.y.resize(m * n, 0.0);
+            self.y.resize(m * n, E::ZERO);
         }
         (&self.x, &mut self.y)
     }
 
     /// The `m x k` weight operand, `k x n` activation operand and
     /// `m x n` output buffer for a dense matmul.
+    pub fn dense_operands(&mut self, m: usize, k: usize, n: usize) -> (&[E], &[E], &mut [E]) {
+        Self::ensure(&mut self.a, m * k, 2);
+        Self::ensure(&mut self.x, k * n, 1);
+        if self.y.len() != m * n {
+            self.y.clear();
+            self.y.resize(m * n, E::ZERO);
+        }
+        (&self.a, &self.x, &mut self.y)
+    }
+
+    /// The most recent output buffer (oracle checks in tests).
+    pub fn output(&self) -> &[E] {
+        &self.y
+    }
+}
+
+/// Per-worker scratch covering both storage dtypes: one
+/// [`TypedScratch`] each for f32 and f16, so a worker serving mixed-
+/// precision traffic still allocates nothing at steady state (each
+/// dtype's working set warms once and stays).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    s32: TypedScratch<f32>,
+    s16: TypedScratch<F16>,
+}
+
+impl Scratch {
+    /// The f32 half (also behind the f32-flavoured convenience
+    /// accessors below, which predate the dtype split).
+    pub fn fp32(&mut self) -> &mut TypedScratch<f32> {
+        &mut self.s32
+    }
+
+    /// The f16 half.
+    pub fn fp16(&mut self) -> &mut TypedScratch<F16> {
+        &mut self.s16
+    }
+
+    /// f32 SpMM operands (see [`TypedScratch::spmm_operands`]).
+    pub fn spmm_operands(&mut self, m: usize, k: usize, n: usize) -> (&[f32], &mut [f32]) {
+        self.s32.spmm_operands(m, k, n)
+    }
+
+    /// f32 dense operands (see [`TypedScratch::dense_operands`]).
     pub fn dense_operands(
         &mut self,
         m: usize,
         k: usize,
         n: usize,
     ) -> (&[f32], &[f32], &mut [f32]) {
-        Self::ensure(&mut self.a, m * k, 2);
-        Self::ensure(&mut self.x, k * n, 1);
-        if self.y.len() != m * n {
-            self.y.clear();
-            self.y.resize(m * n, 0.0);
-        }
-        (&self.a, &self.x, &mut self.y)
+        self.s32.dense_operands(m, k, n)
     }
 
-    /// The most recent output buffer (oracle checks in tests).
+    /// The most recent f32 output buffer.
     pub fn output(&self) -> &[f32] {
-        &self.y
+        self.s32.output()
+    }
+
+    /// The most recent f16 output buffer.
+    pub fn output_f16(&self) -> &[F16] {
+        self.s16.output()
     }
 }
 
@@ -134,5 +194,20 @@ mod tests {
         assert!(a.iter().any(|&v| v != 0.0), "pseudo-data filled");
         y[0] = 7.0;
         assert_eq!(s.output()[0], 7.0);
+    }
+
+    #[test]
+    fn dtype_halves_are_independent_and_quantization_consistent() {
+        let mut s = Scratch::default();
+        let x32 = s.fp32().spmm_operands(8, 8, 4).0.to_vec();
+        let x16 = s.fp16().spmm_operands(8, 8, 4).0.to_vec();
+        // Same deterministic f32 stream, quantized per dtype: the f16
+        // operand is exactly the quantized view of the f32 one.
+        for (a, b) in x32.iter().zip(&x16) {
+            assert_eq!(F16::from_f32(*a), *b);
+        }
+        // Warming one half never perturbs the other.
+        let again = s.fp32().spmm_operands(8, 8, 4).0.to_vec();
+        assert_eq!(again, x32);
     }
 }

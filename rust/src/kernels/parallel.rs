@@ -8,9 +8,13 @@
 //! the output (`split_at_mut`), so panels run with no reduction, no
 //! locking and no false sharing on `y`; every panel executes the same
 //! per-row microkernel as the single-threaded path, so the parallel
-//! result is element-for-element identical to [`spmm`]'s.
+//! result is element-for-element identical to [`spmm`]'s — in every
+//! storage dtype (the kernels are generic over
+//! [`Element`](crate::kernels::Element); partition decisions read only
+//! the dtype-independent row structure).
 
 use crate::error::Result;
+use crate::kernels::element::Element;
 use crate::kernels::prepared::PreparedBsr;
 use crate::kernels::spmm::{spmm, spmm_rows};
 
@@ -28,7 +32,7 @@ pub fn default_threads() -> usize {
 /// panels with roughly equal non-zero block counts. Every block-row is
 /// covered exactly once; panels are non-empty in rows (an all-zero
 /// row span still needs its output zero-filled by someone).
-pub fn partition_panels(p: &PreparedBsr, parts: usize) -> Vec<(usize, usize)> {
+pub fn partition_panels<E: Element>(p: &PreparedBsr<E>, parts: usize) -> Vec<(usize, usize)> {
     let mb = p.mb();
     let parts = parts.max(1);
     if mb == 0 {
@@ -65,11 +69,11 @@ pub fn partition_panels(p: &PreparedBsr, parts: usize) -> Vec<(usize, usize)> {
 /// Parallel tiled SpMM: `y = A x` across nnz-balanced row panels on a
 /// scoped thread pool. Falls back to the single-threaded kernel when
 /// one panel results. Overwrites all of `y`.
-pub fn spmm_parallel(
-    p: &PreparedBsr,
-    x: &[f32],
+pub fn spmm_parallel<E: Element>(
+    p: &PreparedBsr<E>,
+    x: &[E],
     n: usize,
-    y: &mut [f32],
+    y: &mut [E],
     threads: usize,
 ) -> Result<()> {
     let panels = partition_panels(p, threads);
@@ -82,7 +86,7 @@ pub fn spmm_parallel(
         return spmm(p, x, n, y); // reuse the single-thread shape error
     }
     std::thread::scope(|scope| {
-        let mut rest: &mut [f32] = y;
+        let mut rest: &mut [E] = y;
         for &(r0, r1) in &panels {
             let (panel, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * p.b * n);
             rest = tail;
@@ -96,11 +100,11 @@ pub fn spmm_parallel(
 /// the job is big enough to amortize thread spawns
 /// ([`MIN_FLOPS_PER_THREAD`] per thread), the single-threaded tiled
 /// kernel otherwise.
-pub fn spmm_auto(
-    p: &PreparedBsr,
-    x: &[f32],
+pub fn spmm_auto<E: Element>(
+    p: &PreparedBsr<E>,
+    x: &[E],
     n: usize,
-    y: &mut [f32],
+    y: &mut [E],
     threads: usize,
 ) -> Result<()> {
     let flops = 2.0 * p.nnz_blocks() as f64 * (p.b * p.b) as f64 * n as f64;
@@ -114,13 +118,14 @@ pub fn spmm_auto(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::element::{quantize, F16};
     use crate::sparse::patterns;
     use crate::util::Rng;
 
     #[test]
     fn panels_cover_rows_exactly_once() {
         let mask = patterns::uniform(64, 64, 4, 100, 3).unwrap();
-        let p = PreparedBsr::from_coo(&patterns::with_values(&mask, 3));
+        let p: PreparedBsr = PreparedBsr::from_coo(&patterns::with_values(&mask, 3));
         for parts in [1usize, 2, 3, 7, 100] {
             let panels = partition_panels(&p, parts);
             assert!(panels.len() <= parts.max(1));
@@ -138,7 +143,7 @@ mod tests {
         // Heavy skew: the balanced partition must not put most of the
         // nnz into one panel the way an equal-row split would.
         let mask = patterns::row_imbalanced(256, 256, 4, 512, 2.5, 9).unwrap();
-        let p = PreparedBsr::from_coo(&patterns::with_values(&mask, 9));
+        let p: PreparedBsr = PreparedBsr::from_coo(&patterns::with_values(&mask, 9));
         let panels = partition_panels(&p, 4);
         assert!(panels.len() >= 2);
         let max_nnz =
@@ -165,6 +170,24 @@ mod tests {
         spmm_parallel(&p, &x, n, &mut y4, 4).unwrap();
         // Same per-row kernel, disjoint outputs: identical, not just
         // close.
+        assert_eq!(y1, y4);
+    }
+
+    #[test]
+    fn f16_parallel_matches_f16_single_threaded_bit_exactly() {
+        // The exactness argument is dtype-independent: panels run the
+        // same microkernel on disjoint outputs, so the F16 parallel
+        // result equals the F16 single-threaded result bit-for-bit.
+        let mut rng = Rng::seed_from_u64(0xF1);
+        let mask = patterns::row_imbalanced(128, 128, 8, 120, 1.5, 6).unwrap();
+        let p = PreparedBsr::<F16>::from_coo(&patterns::with_values(&mask, 6));
+        let n = 21;
+        let xf: Vec<f32> = (0..p.k * n).map(|_| rng.normal() as f32).collect();
+        let x: Vec<F16> = quantize(&xf);
+        let mut y1 = vec![F16(0x7E00); p.m * n];
+        let mut y4 = vec![F16(0x7E00); p.m * n];
+        spmm(&p, &x, n, &mut y1).unwrap();
+        spmm_parallel(&p, &x, n, &mut y4, 4).unwrap();
         assert_eq!(y1, y4);
     }
 

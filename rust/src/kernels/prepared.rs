@@ -6,15 +6,30 @@
 //! (so a row panel is one contiguous range of blocks, no coordinate
 //! scan) with column indices and block values laid out contiguously
 //! per block-row. [`PreparedBsr`] is that layout, converted **once**
-//! per pattern and cached alongside plans in
-//! [`PlanCache`](crate::coordinator::PlanCache) so steady-state
+//! per realized pattern *and storage dtype* and cached alongside plans
+//! in the [`PlanCache`](crate::coordinator::PlanCache) so steady-state
 //! serving never re-converts (DESIGN.md §5).
+//!
+//! The struct is generic over the storage element
+//! ([`Element`](crate::kernels::Element)): `PreparedBsr<f32>` is the
+//! original layout, `PreparedBsr<F16>` stores every block value as
+//! IEEE binary16 (quantized once, at conversion time — kernels never
+//! re-round weights). [`PreparedOperand`] is the dtype-erased handle
+//! the serving-side cache stores, keyed by
+//! [`JobSpec::prepared_key`](crate::coordinator::request::JobSpec::prepared_key)
+//! (which includes the dtype, so FP16 and FP32 traffic on the same
+//! pattern each convert exactly once).
+
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
+use crate::kernels::element::{Element, F16};
 use crate::sparse::coo::BlockCoo;
 use crate::sparse::patterns;
+use crate::DType;
 
-/// A block-sparse matrix in kernel-ready block-CSR layout.
+/// A block-sparse matrix in kernel-ready block-CSR layout, stored in
+/// element type `E`.
 ///
 /// Invariants (established by every constructor): `row_ptr` has
 /// `m / b + 1` monotone entries with `row_ptr[0] == 0` and
@@ -22,7 +37,7 @@ use crate::sparse::patterns;
 /// are the block-columns of block-row `r`; `values` holds one
 /// row-major `b x b` block per entry of `cols`, in the same order.
 #[derive(Debug, Clone, PartialEq)]
-pub struct PreparedBsr {
+pub struct PreparedBsr<E: Element = f32> {
     /// Element-level rows.
     pub m: usize,
     /// Element-level cols.
@@ -33,15 +48,17 @@ pub struct PreparedBsr {
     pub row_ptr: Vec<u32>,
     /// Block-column index per non-zero block, grouped by block-row.
     pub cols: Vec<u32>,
-    /// Block values, `b * b` per block, same order as `cols`.
-    pub values: Vec<f32>,
+    /// Block values, `b * b` per block, same order as `cols`
+    /// (quantized once at conversion for narrow `E`).
+    pub values: Vec<E>,
 }
 
-impl PreparedBsr {
+impl<E: Element> PreparedBsr<E> {
     /// Convert from the canonical sorted coordinate list. `BlockCoo`'s
     /// strict `(row, col)` ordering means the blocks are already
     /// grouped by row in column order, so the conversion is one
-    /// counting pass plus two buffer copies — no re-sorting.
+    /// counting pass plus two buffer copies — no re-sorting. Values
+    /// quantize element-wise into `E` (identity for f32).
     pub fn from_coo(coo: &BlockCoo) -> Self {
         let mb = if coo.b == 0 { 0 } else { coo.m / coo.b };
         let mut row_ptr = vec![0u32; mb + 1];
@@ -57,7 +74,7 @@ impl PreparedBsr {
             b: coo.b,
             row_ptr,
             cols: coo.block_cols.clone(),
-            values: coo.values.clone(),
+            values: coo.values.iter().map(|&v| E::from_f32(v)).collect(),
         }
     }
 
@@ -67,9 +84,9 @@ impl PreparedBsr {
     /// order within each row. Row-sorted input — the `BlockCoo`
     /// contract, and what every committed artifact caller passes —
     /// takes a fast path: the values are already row-grouped, so the
-    /// relayout degenerates to two bulk copies. Coordinates must
-    /// already be validated against the `mb x kb` grid (the runtime's
-    /// `check_coords` does).
+    /// relayout degenerates to a bulk quantizing copy. Coordinates
+    /// must already be validated against the `mb x kb` grid (the
+    /// runtime's `check_coords` does).
     pub fn from_parts(
         m: usize,
         k: usize,
@@ -94,18 +111,21 @@ impl PreparedBsr {
                 b,
                 row_ptr,
                 cols: cols.iter().map(|&c| c as u32).collect(),
-                values: values.to_vec(),
+                values: values.iter().map(|&v| E::from_f32(v)).collect(),
             };
         }
         let mut next: Vec<u32> = row_ptr[..mb].to_vec();
         let mut out_cols = vec![0u32; rows.len()];
-        let mut out_values = vec![0f32; values.len()];
+        let mut out_values = vec![E::ZERO; values.len()];
         for (i, &r) in rows.iter().enumerate() {
             let slot = next[r as usize] as usize;
             next[r as usize] += 1;
             out_cols[slot] = cols[i] as u32;
-            out_values[slot * bsz..(slot + 1) * bsz]
-                .copy_from_slice(&values[i * bsz..(i + 1) * bsz]);
+            for (dst, &src) in
+                out_values[slot * bsz..(slot + 1) * bsz].iter_mut().zip(&values[i * bsz..])
+            {
+                *dst = E::from_f32(src);
+            }
         }
         Self { m, k, b, row_ptr, cols: out_cols, values: out_values }
     }
@@ -135,15 +155,20 @@ impl PreparedBsr {
         (self.row_ptr[r1] - self.row_ptr[r0]) as usize
     }
 
-    /// Approximate heap footprint in bytes (cache sizing aid).
+    /// Approximate heap footprint in bytes (cache sizing aid) — an
+    /// FP16 operand costs half an FP32 one's value storage.
     pub fn bytes(&self) -> usize {
-        self.row_ptr.len() * 4 + self.cols.len() * 4 + self.values.len() * 4
+        self.row_ptr.len() * 4 + self.cols.len() * 4
+            + self.values.len() * std::mem::size_of::<E>()
     }
 
-    /// Recover the canonical coordinate form. Exact inverse of
-    /// [`PreparedBsr::from_coo`]: the reconstructed `BlockCoo` is
-    /// equal (coordinates, values, bit-for-bit) to the original —
-    /// pinned by the round-trip property test.
+    /// Recover the canonical coordinate form, widening values back to
+    /// f32. For `E = f32` this is the exact inverse of
+    /// [`PreparedBsr::from_coo`] (coordinates and values bit-for-bit —
+    /// pinned by the round-trip property test); for `F16` the
+    /// reconstructed values are the f16-quantized ones, which equal the
+    /// originals exactly when those were f16-representable (the
+    /// element round-trip property).
     pub fn to_block_coo(&self) -> Result<BlockCoo> {
         let mut block_rows = Vec::with_capacity(self.cols.len());
         for r in 0..self.mb() {
@@ -151,8 +176,98 @@ impl PreparedBsr {
                 block_rows.push(r as u32);
             }
         }
-        BlockCoo::new(self.m, self.k, self.b, block_rows, self.cols.clone(), self.values.clone())
-            .map_err(|e| Error::InvalidFormat(format!("prepared operand not canonical: {e}")))
+        BlockCoo::new(
+            self.m,
+            self.k,
+            self.b,
+            block_rows,
+            self.cols.clone(),
+            self.values.iter().map(|&v| v.to_f32()).collect(),
+        )
+        .map_err(|e| Error::InvalidFormat(format!("prepared operand not canonical: {e}")))
+    }
+}
+
+/// A dtype-erased shared prepared operand: what the serving-side
+/// prepared cache stores and [`execute_kernel`] consumes. One variant
+/// per supported storage dtype; the job's [`DType`] picks at dispatch.
+///
+/// [`execute_kernel`]: crate::engine::backends::execute_kernel
+#[derive(Debug, Clone)]
+pub enum PreparedOperand {
+    F32(Arc<PreparedBsr<f32>>),
+    F16(Arc<PreparedBsr<F16>>),
+}
+
+impl PreparedOperand {
+    /// Realize a pattern in the requested storage dtype (the prepared
+    /// cache's miss path).
+    pub fn from_pattern(
+        m: usize,
+        k: usize,
+        b: usize,
+        density: f64,
+        seed: u64,
+        dtype: DType,
+    ) -> Result<Self> {
+        Ok(match dtype {
+            DType::Fp32 => {
+                PreparedOperand::F32(Arc::new(PreparedBsr::from_pattern(m, k, b, density, seed)?))
+            }
+            DType::Fp16 => {
+                PreparedOperand::F16(Arc::new(PreparedBsr::from_pattern(m, k, b, density, seed)?))
+            }
+        })
+    }
+
+    /// The storage dtype this operand holds.
+    pub fn dtype(&self) -> DType {
+        match self {
+            PreparedOperand::F32(_) => DType::Fp32,
+            PreparedOperand::F16(_) => DType::Fp16,
+        }
+    }
+
+    /// The f32 operand, if that is what this holds.
+    pub fn as_f32(&self) -> Option<&Arc<PreparedBsr<f32>>> {
+        match self {
+            PreparedOperand::F32(p) => Some(p),
+            PreparedOperand::F16(_) => None,
+        }
+    }
+
+    /// The f16 operand, if that is what this holds.
+    pub fn as_f16(&self) -> Option<&Arc<PreparedBsr<F16>>> {
+        match self {
+            PreparedOperand::F16(p) => Some(p),
+            PreparedOperand::F32(_) => None,
+        }
+    }
+
+    /// Non-zero blocks (dtype-independent).
+    pub fn nnz_blocks(&self) -> usize {
+        match self {
+            PreparedOperand::F32(p) => p.nnz_blocks(),
+            PreparedOperand::F16(p) => p.nnz_blocks(),
+        }
+    }
+
+    /// Approximate heap footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        match self {
+            PreparedOperand::F32(p) => p.bytes(),
+            PreparedOperand::F16(p) => p.bytes(),
+        }
+    }
+
+    /// Whether two handles share the same underlying allocation (cache
+    /// identity checks in tests).
+    pub fn ptr_eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (PreparedOperand::F32(a), PreparedOperand::F32(b)) => Arc::ptr_eq(a, b),
+            (PreparedOperand::F16(a), PreparedOperand::F16(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
     }
 }
 
@@ -175,7 +290,7 @@ mod tests {
 
     #[test]
     fn from_coo_builds_row_ptr() {
-        let p = PreparedBsr::from_coo(&sample());
+        let p: PreparedBsr = PreparedBsr::from_coo(&sample());
         assert_eq!(p.row_ptr, vec![0, 1, 1, 3]);
         assert_eq!(p.cols, vec![1, 0, 2]);
         assert_eq!(p.mb(), 3);
@@ -188,8 +303,27 @@ mod tests {
     #[test]
     fn round_trips_exactly() {
         let coo = sample();
-        let back = PreparedBsr::from_coo(&coo).to_block_coo().unwrap();
+        let back = PreparedBsr::<f32>::from_coo(&coo).to_block_coo().unwrap();
         assert_eq!(coo, back);
+        // Small integers are f16-representable, so the F16 layout
+        // round-trips this sample exactly too — and at half the value
+        // storage.
+        let p16 = PreparedBsr::<F16>::from_coo(&coo);
+        assert_eq!(p16.to_block_coo().unwrap(), coo);
+        let p32 = PreparedBsr::<f32>::from_coo(&coo);
+        assert!(p16.bytes() < p32.bytes());
+    }
+
+    #[test]
+    fn f16_conversion_quantizes_once() {
+        // A non-representable value is rounded at conversion; the
+        // reconstructed coo carries the quantized value, not the
+        // original.
+        let v = 1.0 + f32::powi(2.0, -12); // rounds to 1.0 in f16
+        let coo = BlockCoo::new(2, 2, 1, vec![0], vec![0], vec![v]).unwrap();
+        let p16 = PreparedBsr::<F16>::from_coo(&coo);
+        assert_eq!(p16.values[0], F16::from_f32(v));
+        assert_eq!(p16.to_block_coo().unwrap().values[0], 1.0);
     }
 
     #[test]
@@ -202,13 +336,18 @@ mod tests {
         values[0..4].copy_from_slice(coo.block(2));
         values[4..8].copy_from_slice(coo.block(0));
         values[8..12].copy_from_slice(coo.block(1));
-        let p = PreparedBsr::from_parts(6, 6, 2, &rows, &cols, &values);
+        let p: PreparedBsr = PreparedBsr::from_parts(6, 6, 2, &rows, &cols, &values);
         assert_eq!(p.row_ptr, vec![0, 1, 1, 3]);
         // Row 2 keeps input order: col 2 (arrived first), then col 0.
         assert_eq!(p.cols, vec![1, 2, 0]);
         assert_eq!(&p.values[0..4], coo.block(0));
         assert_eq!(&p.values[4..8], coo.block(2));
         assert_eq!(&p.values[8..12], coo.block(1));
+        // The F16 scatter produces the same layout, quantized.
+        let p16: PreparedBsr<F16> = PreparedBsr::from_parts(6, 6, 2, &rows, &cols, &values);
+        assert_eq!(p16.row_ptr, p.row_ptr);
+        assert_eq!(p16.cols, p.cols);
+        assert_eq!(p16.values[0].to_f32(), p.values[0]);
     }
 
     #[test]
@@ -219,7 +358,7 @@ mod tests {
         let rows = vec![0i32, 2, 2];
         let cols = vec![1i32, 2, 0];
         let values: Vec<f32> = (0..12).map(|v| v as f32).collect();
-        let p = PreparedBsr::from_parts(6, 6, 2, &rows, &cols, &values);
+        let p: PreparedBsr = PreparedBsr::from_parts(6, 6, 2, &rows, &cols, &values);
         assert_eq!(p.row_ptr, vec![0, 1, 1, 3]);
         assert_eq!(p.cols, vec![1, 2, 0]);
         assert_eq!(p.values, values);
@@ -229,7 +368,7 @@ mod tests {
     fn from_pattern_matches_manual_conversion() {
         let mask = patterns::with_density(64, 64, 8, 0.25, 42).unwrap();
         let coo = patterns::with_values(&mask, 42);
-        let p = PreparedBsr::from_pattern(64, 64, 8, 0.25, 42).unwrap();
+        let p: PreparedBsr = PreparedBsr::from_pattern(64, 64, 8, 0.25, 42).unwrap();
         assert_eq!(p, PreparedBsr::from_coo(&coo));
         assert!(p.bytes() > 0);
     }
@@ -237,8 +376,22 @@ mod tests {
     #[test]
     fn empty_matrix_is_representable() {
         let coo = BlockCoo::new(4, 4, 2, vec![], vec![], vec![]).unwrap();
-        let p = PreparedBsr::from_coo(&coo);
+        let p: PreparedBsr = PreparedBsr::from_coo(&coo);
         assert_eq!(p.row_ptr, vec![0, 0, 0]);
         assert_eq!(p.to_block_coo().unwrap(), coo);
+    }
+
+    #[test]
+    fn prepared_operand_dispatches_on_dtype() {
+        let p32 = PreparedOperand::from_pattern(32, 32, 8, 0.5, 1, DType::Fp32).unwrap();
+        let p16 = PreparedOperand::from_pattern(32, 32, 8, 0.5, 1, DType::Fp16).unwrap();
+        assert_eq!(p32.dtype(), DType::Fp32);
+        assert_eq!(p16.dtype(), DType::Fp16);
+        assert!(p32.as_f32().is_some() && p32.as_f16().is_none());
+        assert!(p16.as_f16().is_some() && p16.as_f32().is_none());
+        assert_eq!(p32.nnz_blocks(), p16.nnz_blocks());
+        assert!(p16.bytes() < p32.bytes(), "f16 storage is the point");
+        assert!(p32.ptr_eq(&p32.clone()));
+        assert!(!p32.ptr_eq(&p16));
     }
 }

@@ -12,42 +12,83 @@
 //! compile-time trip counts and autovectorize; other block sizes take
 //! a structurally identical generic fallback.
 //!
-//! Numerics: per output element, contributions accumulate in the same
-//! (block, then intra-block column) order as the naive references
-//! ([`crate::runtime::spmm_ref`], [`BlockCoo::spmm_dense`]), but the
-//! tiled path does not skip explicit zeros inside blocks and keeps
-//! partial sums in a register panel — agreement with the references is
-//! therefore contracted to the documented tolerance
-//! ([`close_enough`]), not bit-equality (DESIGN.md §5).
+//! Numerics: the kernels are generic over the storage element
+//! ([`Element`]) — operands and outputs live in the job's dtype while
+//! **every partial sum accumulates in f32** (the IPU AMP contract:
+//! FP16 inputs, FP32 partials). Per output element, contributions
+//! accumulate in the same (block, then intra-block column) order as
+//! the naive references ([`crate::runtime::spmm_ref`],
+//! [`BlockCoo::spmm_dense`]), but the tiled path does not skip
+//! explicit zeros inside blocks and keeps partial sums in a register
+//! panel — agreement with the references is therefore contracted to
+//! the documented tolerance ([`close_enough`] /
+//! [`close_enough_for`]), not bit-equality (DESIGN.md §5).
 //!
 //! [`BlockCoo::spmm_dense`]: crate::sparse::coo::BlockCoo::spmm_dense
 
 use crate::error::{Error, Result};
+use crate::kernels::element::Element;
 use crate::kernels::prepared::PreparedBsr;
+use crate::DType;
 
-/// Batch-dimension tile width (f32 lanes) of the register accumulator
+/// Batch-dimension tile width (f32 accumulator lanes) of the register
 /// panel. 16 lanes = two AVX2 / one AVX-512 vector per accumulator
 /// row; the `n % N_TILE` remainder takes a narrower epilogue.
 pub const N_TILE: usize = 16;
 
-/// Tolerance contract for comparing tiled/parallel kernel output
-/// against the naive references: relative error per element, with an
-/// absolute floor for near-zero outputs. Tiling reorders f32 partial
-/// sums (and keeps them in registers), so oracle comparisons where a
-/// tiled path is under test use this bound instead of bit-equality.
+/// Tolerance contract for comparing f32 kernel output against the
+/// naive references: relative error per element, with an absolute
+/// floor for near-zero outputs. Tiling reorders f32 partial sums (and
+/// keeps them in registers), so oracle comparisons where a tiled path
+/// is under test use this bound instead of bit-equality.
 pub const REL_TOLERANCE: f32 = 1e-5;
 
 /// Absolute floor companion to [`REL_TOLERANCE`].
 pub const ABS_TOLERANCE: f32 = 1e-5;
 
-/// Whether two f32 values agree within the documented kernel
-/// tolerance: `|a - b| <= ABS_TOLERANCE + REL_TOLERANCE * max(|a|, |b|)`.
+/// Tolerance contract for the FP16 storage kernels, **against an f32
+/// oracle evaluated on the same f16-quantized operands** (quantize
+/// first, then hand both sides identical values — input rounding is
+/// then shared, not part of the error budget). What remains is the
+/// single output-store rounding (≤ 2^-11 ≈ 4.9e-4 relative) plus
+/// f32 accumulation-order differences; 2e-3 is a 4x margin over the
+/// store rounding. Comparisons against an oracle on *unquantized*
+/// operands are outside the contract — input rounding error compounds
+/// with the reduction length there.
+pub const REL_TOLERANCE_F16: f32 = 2e-3;
+
+/// Absolute floor companion to [`REL_TOLERANCE_F16`] (an output that
+/// rounds to the nearest f16 can be off by half an f16 subnormal step
+/// near zero, and cancellation leaves small absolute residue).
+pub const ABS_TOLERANCE_F16: f32 = 2e-3;
+
+/// The (relative, absolute) tolerance pair contracted for a storage
+/// dtype's kernel output.
+pub fn tolerance(dtype: DType) -> (f32, f32) {
+    match dtype {
+        DType::Fp32 => (REL_TOLERANCE, ABS_TOLERANCE),
+        DType::Fp16 => (REL_TOLERANCE_F16, ABS_TOLERANCE_F16),
+    }
+}
+
+/// Whether two f32 values agree within the documented kernel tolerance
+/// for `dtype` storage:
+/// `|a - b| <= abs + rel * max(|a|, |b|)` with `(rel, abs)` from
+/// [`tolerance`]. For FP16 the contract presumes both sides consumed
+/// the same f16-quantized operands (see [`REL_TOLERANCE_F16`]).
+pub fn close_enough_for(dtype: DType, a: f32, b: f32) -> bool {
+    let (rel, abs) = tolerance(dtype);
+    (a - b).abs() <= abs + rel * a.abs().max(b.abs())
+}
+
+/// [`close_enough_for`] at the f32 contract — the original PR-4
+/// tolerance, unchanged.
 pub fn close_enough(a: f32, b: f32) -> bool {
-    (a - b).abs() <= ABS_TOLERANCE + REL_TOLERANCE * a.abs().max(b.abs())
+    close_enough_for(DType::Fp32, a, b)
 }
 
 /// Validate SpMM operand shapes against the prepared matrix.
-fn check_operands(p: &PreparedBsr, x: &[f32], n: usize, y: &[f32]) -> Result<()> {
+fn check_operands<E: Element>(p: &PreparedBsr<E>, x: &[E], n: usize, y: &[E]) -> Result<()> {
     if x.len() != p.k * n {
         return Err(Error::InvalidFormat(format!(
             "x has {} elements, kernel needs {} x {n}",
@@ -66,9 +107,10 @@ fn check_operands(p: &PreparedBsr, x: &[f32], n: usize, y: &[f32]) -> Result<()>
 }
 
 /// Single-threaded tiled SpMM: `y = A x` with `A` prepared, `x`
-/// row-major `k x n`, `y` row-major `m x n`. Overwrites all of `y`
-/// (no pre-zeroing needed).
-pub fn spmm(p: &PreparedBsr, x: &[f32], n: usize, y: &mut [f32]) -> Result<()> {
+/// row-major `k x n`, `y` row-major `m x n`, all in storage type `E`
+/// with f32 accumulation. Overwrites all of `y` (no pre-zeroing
+/// needed).
+pub fn spmm<E: Element>(p: &PreparedBsr<E>, x: &[E], n: usize, y: &mut [E]) -> Result<()> {
     check_operands(p, x, n, y)?;
     spmm_rows(p, x, n, 0, p.mb(), y);
     Ok(())
@@ -78,33 +120,37 @@ pub fn spmm(p: &PreparedBsr, x: &[f32], n: usize, y: &mut [f32]) -> Result<()> {
 /// output slice of length `(r1 - r0) * b * n`. Dispatches to the
 /// block-size-specialized microkernel. This is the unit of work a
 /// parallel panel executes; `spmm` is the single-panel case.
-pub(crate) fn spmm_rows(
-    p: &PreparedBsr,
-    x: &[f32],
+pub(crate) fn spmm_rows<E: Element>(
+    p: &PreparedBsr<E>,
+    x: &[E],
     n: usize,
     r0: usize,
     r1: usize,
-    y_panel: &mut [f32],
+    y_panel: &mut [E],
 ) {
     debug_assert_eq!(y_panel.len(), (r1 - r0) * p.b * n);
     match p.b {
-        4 => spmm_rows_b::<4>(p, x, n, r0, r1, y_panel),
-        8 => spmm_rows_b::<8>(p, x, n, r0, r1, y_panel),
-        16 => spmm_rows_b::<16>(p, x, n, r0, r1, y_panel),
+        4 => spmm_rows_b::<E, 4>(p, x, n, r0, r1, y_panel),
+        8 => spmm_rows_b::<E, 8>(p, x, n, r0, r1, y_panel),
+        16 => spmm_rows_b::<E, 16>(p, x, n, r0, r1, y_panel),
         _ => spmm_rows_generic(p, x, n, r0, r1, y_panel),
     }
 }
 
 /// The monomorphized microkernel: `B` is a compile-time block size, so
 /// the accumulator panel `[[f32; N_TILE]; B]` is a fixed-size stack
-/// array and every inner loop has a constant trip count.
-fn spmm_rows_b<const B: usize>(
-    p: &PreparedBsr,
-    x: &[f32],
+/// array and every inner loop has a constant trip count. The `x` tile
+/// row is widened into an f32 stack buffer once per (block, column)
+/// and reused across the block's `B` output rows, so narrow storage
+/// pays one conversion per load, not one per multiply (for `E = f32`
+/// the widening is the identity and the buffer is a register copy).
+fn spmm_rows_b<E: Element, const B: usize>(
+    p: &PreparedBsr<E>,
+    x: &[E],
     n: usize,
     r0: usize,
     r1: usize,
-    y_panel: &mut [f32],
+    y_panel: &mut [E],
 ) {
     debug_assert_eq!(p.b, B);
     let bsz = B * B;
@@ -112,7 +158,7 @@ fn spmm_rows_b<const B: usize>(
         let (lo, hi) = (p.row_ptr[r] as usize, p.row_ptr[r + 1] as usize);
         let out = &mut y_panel[ri * B * n..(ri + 1) * B * n];
         if lo == hi {
-            out.fill(0.0);
+            out.fill(E::ZERO);
             continue;
         }
         let mut j = 0;
@@ -123,16 +169,22 @@ fn spmm_rows_b<const B: usize>(
                 let vals = &p.values[blk * bsz..(blk + 1) * bsz];
                 for bc in 0..B {
                     let xrow = &x[(c * B + bc) * n + j..][..N_TILE];
+                    let mut xf = [0f32; N_TILE];
+                    for (d, &s) in xf.iter_mut().zip(xrow) {
+                        *d = s.to_f32();
+                    }
                     for (br, acc_row) in acc.iter_mut().enumerate() {
-                        let w = vals[br * B + bc];
-                        for (a, &xv) in acc_row.iter_mut().zip(xrow) {
+                        let w = vals[br * B + bc].to_f32();
+                        for (a, &xv) in acc_row.iter_mut().zip(&xf) {
                             *a += w * xv;
                         }
                     }
                 }
             }
             for (br, acc_row) in acc.iter().enumerate() {
-                out[br * n + j..br * n + j + N_TILE].copy_from_slice(acc_row);
+                for (o, &a) in out[br * n + j..br * n + j + N_TILE].iter_mut().zip(acc_row) {
+                    *o = E::from_f32(a);
+                }
             }
             j += N_TILE;
         }
@@ -144,16 +196,22 @@ fn spmm_rows_b<const B: usize>(
                 let vals = &p.values[blk * bsz..(blk + 1) * bsz];
                 for bc in 0..B {
                     let xrow = &x[(c * B + bc) * n + j..][..rem];
+                    let mut xf = [0f32; N_TILE];
+                    for (d, &s) in xf.iter_mut().zip(xrow) {
+                        *d = s.to_f32();
+                    }
                     for (br, acc_row) in acc.iter_mut().enumerate() {
-                        let w = vals[br * B + bc];
-                        for (a, &xv) in acc_row.iter_mut().zip(xrow) {
+                        let w = vals[br * B + bc].to_f32();
+                        for (a, &xv) in acc_row.iter_mut().zip(&xf[..rem]) {
                             *a += w * xv;
                         }
                     }
                 }
             }
             for (br, acc_row) in acc.iter().enumerate() {
-                out[br * n + j..br * n + n].copy_from_slice(&acc_row[..rem]);
+                for (o, &a) in out[br * n + j..br * n + n].iter_mut().zip(&acc_row[..rem]) {
+                    *o = E::from_f32(a);
+                }
             }
         }
     }
@@ -163,13 +221,13 @@ fn spmm_rows_b<const B: usize>(
 /// monomorphized kernel (`b = 1` unstructured patterns, odd sizes).
 /// The accumulator panel is one reusable heap buffer per call — the
 /// call covers a whole row range, so the allocation amortizes.
-fn spmm_rows_generic(
-    p: &PreparedBsr,
-    x: &[f32],
+fn spmm_rows_generic<E: Element>(
+    p: &PreparedBsr<E>,
+    x: &[E],
     n: usize,
     r0: usize,
     r1: usize,
-    y_panel: &mut [f32],
+    y_panel: &mut [E],
 ) {
     let b = p.b;
     let bsz = b * b;
@@ -178,7 +236,7 @@ fn spmm_rows_generic(
         let (lo, hi) = (p.row_ptr[r] as usize, p.row_ptr[r + 1] as usize);
         let out = &mut y_panel[ri * b * n..(ri + 1) * b * n];
         if lo == hi {
-            out.fill(0.0);
+            out.fill(E::ZERO);
             continue;
         }
         let mut j = 0;
@@ -190,18 +248,26 @@ fn spmm_rows_generic(
                 let vals = &p.values[blk * bsz..(blk + 1) * bsz];
                 for bc in 0..b {
                     let xrow = &x[(c * b + bc) * n + j..][..tile];
+                    let mut xf = [0f32; N_TILE];
+                    for (d, &s) in xf.iter_mut().zip(xrow) {
+                        *d = s.to_f32();
+                    }
                     for br in 0..b {
-                        let w = vals[br * b + bc];
+                        let w = vals[br * b + bc].to_f32();
                         let acc_row = &mut acc[br * N_TILE..br * N_TILE + tile];
-                        for (a, &xv) in acc_row.iter_mut().zip(xrow) {
+                        for (a, &xv) in acc_row.iter_mut().zip(&xf[..tile]) {
                             *a += w * xv;
                         }
                     }
                 }
             }
             for br in 0..b {
-                out[br * n + j..br * n + j + tile]
-                    .copy_from_slice(&acc[br * N_TILE..br * N_TILE + tile]);
+                for (o, &a) in out[br * n + j..br * n + j + tile]
+                    .iter_mut()
+                    .zip(&acc[br * N_TILE..br * N_TILE + tile])
+                {
+                    *o = E::from_f32(a);
+                }
             }
             j += tile;
         }
@@ -211,6 +277,7 @@ fn spmm_rows_generic(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::element::{dequantize, quantize, F16};
     use crate::sparse::patterns;
     use crate::util::Rng;
 
@@ -260,6 +327,45 @@ mod tests {
     }
 
     #[test]
+    fn f16_kernels_match_f32_oracle_on_quantized_operands() {
+        // The FP16 contract end-to-end: quantize operands once, run
+        // the F16 storage kernel, and compare against the f32 oracle
+        // evaluated on the *same* quantized values — within the
+        // documented f16 tolerance.
+        let mut rng = Rng::seed_from_u64(0xF16);
+        for &b in &[1usize, 4, 8, 16] {
+            let mb = 6;
+            let n = 33; // remainder tile included
+            let mask = patterns::uniform(mb * b, mb * b, b, mb * mb / 3, rng.next_u64()).unwrap();
+            let coo = patterns::with_values(&mask, rng.next_u64());
+            let p16 = PreparedBsr::<F16>::from_coo(&coo);
+            let xf: Vec<f32> = (0..p16.k * n).map(|_| rng.normal() as f32).collect();
+            let x16: Vec<F16> = quantize(&xf);
+            let mut y16 = vec![F16(0x7E00); p16.m * n]; // NaN garbage
+            spmm(&p16, &x16, n, &mut y16).unwrap();
+            // Oracle on the quantized operands: to_block_coo widens the
+            // quantized weights; the x side widens the quantized x.
+            let want =
+                p16.to_block_coo().unwrap().spmm_dense(&dequantize(&x16), n).unwrap();
+            for (i, (&u, &v)) in dequantize(&y16).iter().zip(&want).enumerate() {
+                assert!(
+                    close_enough_for(DType::Fp16, u, v),
+                    "b={b}: element {i}: {u} vs {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tolerance_pairs_are_ordered() {
+        let (r32, a32) = tolerance(DType::Fp32);
+        let (r16, a16) = tolerance(DType::Fp16);
+        assert!(r16 > r32 && a16 > a32, "f16 storage is contracted looser");
+        assert!(close_enough_for(DType::Fp16, 1.0, 1.0005));
+        assert!(!close_enough_for(DType::Fp32, 1.0, 1.0005));
+    }
+
+    #[test]
     fn empty_rows_are_zero_filled_without_prezeroing() {
         // One block at (0, 0) in a 3x3 grid: rows 1-2 must come out
         // zero even though y starts as NaN garbage.
@@ -279,6 +385,13 @@ mod tests {
         spmm(&p, &x, n, &mut y).unwrap();
         assert!(y[..4 * n].iter().all(|&v| v == 4.0), "populated block-row");
         assert!(y[4 * n..].iter().all(|&v| v == 0.0), "empty block-rows zeroed");
+        // Same invariant through the F16 instantiation.
+        let p16 = PreparedBsr::<F16>::from_coo(&coo);
+        let x16 = vec![F16::from_f32(1.0); p16.k * n];
+        let mut y16 = vec![F16(0x7E00); p16.m * n];
+        spmm(&p16, &x16, n, &mut y16).unwrap();
+        assert!(y16[..4 * n].iter().all(|&v| v.to_f32() == 4.0));
+        assert!(y16[4 * n..].iter().all(|&v| v == F16::ZERO));
     }
 
     #[test]

@@ -20,6 +20,11 @@
 //!   propagation phases.
 //! * [`gpu`] — analytical A100 baselines (cuBLAS GEMM, cuSPARSE CSR
 //!   and BSR SpMM).
+//! * [`kernels`] — the native compute layer: dtype-generic (f32 /
+//!   software-f16 storage with f32 accumulation) tiled SpMM and GEMM
+//!   kernels, prepared operands and row-panel parallelism — the
+//!   wall-clock engine behind the runtime, the backends' numeric arm
+//!   and numeric serving.
 //! * [`runtime`] — numeric execution of the AOT artifacts produced by
 //!   `python/compile/aot.py` (the numeric path; Python is never on the
 //!   request path; see [`runtime`] for the execution backend).
@@ -67,10 +72,14 @@ pub mod util;
 
 pub use error::{Error, Result};
 
-/// Floating-point element types supported by the planners/cost models.
+/// Floating-point element types supported by the planners/cost models
+/// **and** the native compute layer.
 ///
-/// The numeric artifacts are compiled in FP32 (CPU PJRT path); FP16 is
-/// modelled in the cost layer exactly as the paper benchmarks it.
+/// FP16 is modelled in the cost layer exactly as the paper benchmarks
+/// it, and since PR 5 also *executed*: the kernels in [`kernels`] are
+/// generic over a storage element, so an Fp16 job runs f16-storage
+/// kernels (software binary16, f32 accumulation — AMP semantics)
+/// rather than silently widening to f32.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
     /// IEEE half precision (IPU AMP native, GPU tensor-core native).

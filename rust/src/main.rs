@@ -31,14 +31,18 @@ fn usage() -> ! {
          \x20 bench  <experiment|all> [--calibrated]  regenerate paper tables/figures\n\
          \x20        experiments: table3 fig2 fig3a fig3b fig4a fig4b fig4c fig7 auto churn ell conclusions\n\
          \x20        --calibrated: add the observed-cycle-calibrated crossover arm to `auto`\n\
-         \x20 bench  wall [--smoke] [--threads N]  measured kernel GFLOP/s: naive-ref vs\n\
-         \x20        prepared-tiled vs row-panel-parallel (reported, never gated)\n\
-         \x20 bench  ci [--out FILE] [--seed-baseline]  churn-sweep + calibrated crossover,\n\
-         \x20        machine-readable points to FILE (default BENCH_ci.json)\n\
+         \x20 bench  wall [--smoke] [--threads N] [--out DIR]  measured kernel GFLOP/s in\n\
+         \x20        fp32+fp16: naive-ref vs prepared-tiled vs row-panel-parallel, plus the\n\
+         \x20        per-dtype sparse-vs-dense crossover (reported, never gated; CSV to DIR,\n\
+         \x20        default target/bench_results)\n\
+         \x20 bench  ci [--out FILE] [--seed-baseline]  churn-sweep + calibrated crossover\n\
+         \x20        (both dtypes), machine-readable points to FILE (default BENCH_ci.json)\n\
          \x20 bench  gate [--baseline FILE] [--current FILE] [--tolerance F]\n\
          \x20        fail on >F cycle-estimate regression vs the committed baseline (default 0.10)\n\
-         \x20 serve  [--jobs N] [--workers W] [--numeric]  synthetic serving workload\n\
-         \x20        --numeric: execute every batch's f32 kernel and report measured wall time\n\
+         \x20 serve  [--jobs N] [--workers W] [--numeric] [--wall-calibrated]\n\
+         \x20        synthetic serving workload; --numeric executes every batch's kernel in\n\
+         \x20        its declared dtype and reports measured wall time; --wall-calibrated\n\
+         \x20        resolves auto batches against the wall-fed calibration\n\
          \x20 list                              list AOT artifacts"
     );
     std::process::exit(2);
@@ -285,18 +289,27 @@ fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
 }
 
 /// `repro bench wall`: measure naive-ref vs prepared-tiled vs
-/// parallel kernel GFLOP/s on the host (`--smoke` for the tiny CI
-/// shapes; `--threads N` to bound the panel parallelism). Wall-time
-/// numbers are machine-dependent: they are reported (and recorded in
-/// EXPERIMENTS.md), never fed to the regression gate.
+/// parallel kernel GFLOP/s on the host, in both storage dtypes, plus
+/// the per-dtype sparse-vs-dense crossover (`--smoke` for the tiny CI
+/// shapes; `--threads N` to bound the panel parallelism; `--out DIR`
+/// to choose where the named CSVs land — CI uploads that directory as
+/// an artifact). Wall-time numbers are machine-dependent: they are
+/// reported (and recorded in EXPERIMENTS.md), never fed to the
+/// regression gate.
 fn cmd_bench_wall(flags: &HashMap<String, String>) -> popsparse::Result<()> {
     let smoke = flags.contains_key("smoke");
     let threads = flag_usize(flags, "threads", popsparse::kernels::default_threads());
     let tables = popsparse::bench_harness::wall::wall_tables(smoke, threads)?;
-    let out_dir = std::path::Path::new("target/bench_results");
-    for (i, t) in tables.iter().enumerate() {
+    let out_dir = flags
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("target/bench_results"));
+    // One named CSV per table, stable across runs so CI artifact
+    // consumers can rely on the paths.
+    let names = ["wall_spmm.csv", "wall_dense.csv", "wall_crossover.csv"];
+    for (t, name) in tables.iter().zip(names) {
         t.print();
-        t.write_csv(out_dir.join(format!("wall_{i}.csv")))?;
+        t.write_csv(out_dir.join(name))?;
     }
     println!("(CSV written under {})", out_dir.display());
     Ok(())
@@ -400,14 +413,16 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
     let jobs = flag_usize(&flags, "jobs", 200);
     let workers = flag_usize(&flags, "workers", 4);
     let numeric = flags.contains_key("numeric");
+    let wall_calibrated = flags.contains_key("wall-calibrated");
     let coordinator = Coordinator::new(
-        Config { workers, numeric, ..Config::default() },
+        Config { workers, numeric, wall_calibrated, ..Config::default() },
         IpuSpec::default(),
         CostModel::default(),
     );
     println!(
-        "serving {jobs} synthetic SpMM jobs on {workers} workers{}...",
-        if numeric { " (numeric kernels on)" } else { "" }
+        "serving {jobs} synthetic SpMM jobs on {workers} workers{}{}...",
+        if numeric { " (numeric kernels on)" } else { "" },
+        if wall_calibrated { " (wall-calibrated dispatch)" } else { "" }
     );
     let mut rng = popsparse::util::Rng::seed_from_u64(1);
     let t0 = std::time::Instant::now();
@@ -419,6 +434,10 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
                 2 => Mode::Dynamic,
                 _ => Mode::Auto,
             };
+            // Mixed-precision traffic: 2/3 FP16 (the paper's headline
+            // precision), 1/3 FP32 — exercising the dtype-keyed
+            // prepared-operand cache and both kernel instantiations.
+            let dtype = if i % 3 == 2 { DType::Fp32 } else { DType::Fp16 };
             coordinator.submit(JobSpec {
                 mode,
                 m: 1024,
@@ -426,7 +445,7 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
                 n: 1 << (rng.range(4, 9)), // 16..256
                 b: 16,
                 density: 1.0 / 16.0,
-                dtype: DType::Fp16,
+                dtype,
                 pattern_seed: (i % 5) as u64,
             })
         })
@@ -494,7 +513,7 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
         println!(
             "numeric kernels: {} execs ({} failed), wall total {:?} (p50 {:?} p99 {:?}), \
              {:.2} GFLOP/s aggregate; prepared operands {prep_hits} hits / {prep_misses} \
-             misses, {} conversions",
+             misses, {} conversions (dtype-keyed: one per pattern per precision)",
             snap.kernel_execs,
             snap.kernel_failures,
             snap.kernel_wall_total,
@@ -502,6 +521,16 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
             snap.kernel_wall_p99,
             snap.kernel_gflops,
             coordinator.plan_cache().prepared_conversions()
+        );
+        let wf = coordinator.wall_feedback();
+        println!(
+            "wall feedback: {} measured walls ({} fed through the units layer), \
+             host scale {:.3} ns/cycle, {} wall-calibration buckets{}",
+            wf.scale_samples(),
+            wf.observations(),
+            wf.ns_per_cycle(),
+            wf.calibration().buckets(),
+            if wall_calibrated { " — steering dispatch" } else { "" }
         );
     }
     println!(

@@ -9,6 +9,7 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 use crate::util::json::Json;
+use crate::DType;
 
 /// One argument's shape/dtype.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -52,9 +53,27 @@ pub struct ArtifactMeta {
     pub nnz_b: usize,
     /// Useful FLOPs per execution (paper convention).
     pub flops: u64,
+    /// Storage precision the artifact *executes* at. Argument
+    /// marshalling stays f32 (the manifest `args` contract) — for
+    /// [`DType::Fp16`] the interpreter quantizes operands to binary16
+    /// storage on entry and widens the output on exit, mirroring an
+    /// AMP device's f16-storage/f32-accumulate execution. Manifests
+    /// without a `dtype` field (every pre-PR-5 artifact) execute f32.
+    pub dtype: DType,
     /// Layer shapes for composed (`mlp`) artifacts; empty otherwise.
     pub layers: Vec<LayerMeta>,
     pub args: Vec<ArgSpec>,
+}
+
+/// Parse a manifest `dtype` string ("float32"/"fp32", "float16"/
+/// "fp16"; absent means f32). An unknown string is a manifest error,
+/// not a silent f32 fallback.
+fn parse_dtype(s: Option<&str>) -> Result<DType> {
+    match s {
+        None | Some("float32") | Some("fp32") => Ok(DType::Fp32),
+        Some("float16") | Some("fp16") => Ok(DType::Fp16),
+        Some(other) => Err(Error::Runtime(format!("manifest: unknown dtype '{other}'"))),
+    }
 }
 
 /// The parsed manifest.
@@ -141,6 +160,7 @@ impl Manifest {
                 b: get_usize("b"),
                 nnz_b: get_usize("nnz_b"),
                 flops: get_usize("flops") as u64,
+                dtype: parse_dtype(a.get("dtype").and_then(Json::as_str))?,
                 layers,
                 args: parse_args(
                     a.get("args")
@@ -191,8 +211,32 @@ mod tests {
         assert_eq!(a.b, 16);
         assert_eq!(a.args[0].elements(), 1024);
         assert_eq!(a.args[1].dtype, "int32");
+        assert_eq!(a.dtype, DType::Fp32, "absent dtype means f32 (pre-PR-5 manifests)");
         assert!(m.hlo_path(a).ends_with("a.hlo.txt"));
         assert!(m.get("missing").is_err());
+    }
+
+    #[test]
+    fn dtype_field_parses_and_rejects_unknowns() {
+        assert_eq!(parse_dtype(None).unwrap(), DType::Fp32);
+        assert_eq!(parse_dtype(Some("float32")).unwrap(), DType::Fp32);
+        assert_eq!(parse_dtype(Some("float16")).unwrap(), DType::Fp16);
+        assert_eq!(parse_dtype(Some("fp16")).unwrap(), DType::Fp16);
+        assert!(parse_dtype(Some("bfloat16")).is_err(), "unknown dtypes are manifest errors");
+        let dir = std::env::temp_dir().join("popsparse_manifest_dtype_test");
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "artifacts": [
+                {"name": "h", "kind": "spmm", "file": "h.hlo.txt", "dtype": "float16",
+                 "m": 8, "k": 8, "n": 2, "b": 4, "nnz_b": 2, "flops": 128,
+                 "args": [{"shape": [2, 4, 4], "dtype": "float32"},
+                          {"shape": [2], "dtype": "int32"},
+                          {"shape": [2], "dtype": "int32"},
+                          {"shape": [8, 2], "dtype": "float32"}]}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.get("h").unwrap().dtype, DType::Fp16);
     }
 
     #[test]

@@ -15,7 +15,11 @@
 //! block-size-specialized tiled kernels (row-panel parallel for large
 //! shapes), dense matmuls through the `ikj`-tiled kernel, and the
 //! `mlp` layer loop ping-pongs two reusable activation buffers instead
-//! of allocating a fresh `Vec` per layer. The naive triple-loop ports
+//! of allocating a fresh `Vec` per layer. Since PR 5 execution honours
+//! the manifest's `dtype`: a `float16` artifact runs the kernels' F16
+//! instantiation (f16 storage, f32 accumulation — AMP semantics;
+//! operands quantize once on entry, the output widens on exit), while
+//! manifests without the field keep executing f32 bit-for-bit. The naive triple-loop ports
 //! of `python/compile/kernels/ref.py` remain here as [`spmm_ref`] and
 //! [`dense_ref`] — the differential oracle; kernel output agrees with
 //! them within the documented tolerance
@@ -29,8 +33,9 @@ pub mod artifact;
 pub use artifact::{ArgSpec, ArtifactMeta, LayerMeta, Manifest};
 
 use crate::error::{Error, Result};
-use crate::kernels::{self, PreparedBsr};
+use crate::kernels::{self, Element, PreparedBsr, F16};
 use crate::sparse::coo::BlockCoo;
+use crate::DType;
 
 /// A concrete argument for an artifact execution.
 #[derive(Debug, Clone)]
@@ -149,6 +154,24 @@ impl Runtime {
                 )));
             }
         }
+        // Execute at the artifact's declared storage precision: the
+        // f32 instantiation is the pre-PR-5 interpreter unchanged; the
+        // f16 one quantizes operands once on entry (f16 storage, f32
+        // accumulation — AMP semantics) and widens the output on exit.
+        match meta.dtype {
+            DType::Fp32 => self.execute_typed::<f32>(&meta, args, name),
+            DType::Fp16 => self.execute_typed::<F16>(&meta, args, name),
+        }
+    }
+
+    /// The monomorphized interpreter behind [`Runtime::execute`].
+    fn execute_typed<E: Element>(
+        &self,
+        meta: &ArtifactMeta,
+        args: &[Arg<'_>],
+        name: &str,
+    ) -> Result<Vec<f32>> {
+        let widen = |y: Vec<E>| y.into_iter().map(|v| v.to_f32()).collect::<Vec<f32>>();
         match meta.kind.as_str() {
             "spmm" => {
                 let values = args[0].as_f32()?;
@@ -156,18 +179,22 @@ impl Runtime {
                 let cols = args[2].as_i32()?;
                 let x = args[3].as_f32()?;
                 check_coords(rows, cols, meta.m, meta.k, meta.b, name)?;
-                check_spmm_operands(values, rows, cols, x, meta.k, meta.b, meta.n, name)?;
-                let prep = PreparedBsr::from_parts(meta.m, meta.k, meta.b, rows, cols, values);
-                let mut y = vec![0f32; meta.m * meta.n];
-                kernels::spmm_auto(&prep, x, meta.n, &mut y, kernels::default_threads())?;
-                Ok(y)
+                check_spmm_operands(values, rows, cols, x.len(), meta.k, meta.b, meta.n, name)?;
+                let prep =
+                    PreparedBsr::<E>::from_parts(meta.m, meta.k, meta.b, rows, cols, values);
+                let xe: Vec<E> = x.iter().map(|&v| E::from_f32(v)).collect();
+                let mut y = vec![E::ZERO; meta.m * meta.n];
+                kernels::spmm_auto(&prep, &xe, meta.n, &mut y, kernels::default_threads())?;
+                Ok(widen(y))
             }
             "dense" => {
                 let a = args[0].as_f32()?;
                 let x = args[1].as_f32()?;
-                let mut y = vec![0f32; meta.m * meta.n];
-                kernels::dense::matmul(a, x, meta.m, meta.k, meta.n, &mut y)?;
-                Ok(y)
+                let ae: Vec<E> = a.iter().map(|&v| E::from_f32(v)).collect();
+                let xe: Vec<E> = x.iter().map(|&v| E::from_f32(v)).collect();
+                let mut y = vec![E::ZERO; meta.m * meta.n];
+                kernels::dense::matmul(&ae, &xe, meta.m, meta.k, meta.n, &mut y)?;
+                Ok(widen(y))
             }
             "mlp" => {
                 if meta.layers.is_empty() {
@@ -196,9 +223,11 @@ impl Runtime {
                 // `Vec` per layer): `cur` holds the layer input, `next`
                 // is resized (capacity reused) only when the layer's
                 // output geometry differs, and the kernel overwrites
-                // every element, so no re-zeroing is needed.
-                let mut cur = x.to_vec();
-                let mut next: Vec<f32> = Vec::new();
+                // every element, so no re-zeroing is needed. In f16
+                // storage the activations stay f16 between layers —
+                // exactly the AMP pipeline an on-device MLP runs.
+                let mut cur: Vec<E> = x.iter().map(|&v| E::from_f32(v)).collect();
+                let mut next: Vec<E> = Vec::new();
                 let last = meta.layers.len() - 1;
                 let threads = kernels::default_threads();
                 for (li, layer) in meta.layers.iter().enumerate() {
@@ -209,19 +238,23 @@ impl Runtime {
                     // Layer chaining: the activation must be exactly the
                     // layer's k x n operand, or the manifest is broken
                     // (e.g. layers[i].k != layers[i-1].m).
-                    check_spmm_operands(values, rows, cols, &cur, layer.k, layer.b, n, name)?;
+                    check_spmm_operands(values, rows, cols, cur.len(), layer.k, layer.b, n, name)?;
                     let prep =
-                        PreparedBsr::from_parts(layer.m, layer.k, layer.b, rows, cols, values);
-                    next.resize(layer.m * n, 0.0);
+                        PreparedBsr::<E>::from_parts(layer.m, layer.k, layer.b, rows, cols, values);
+                    next.resize(layer.m * n, E::ZERO);
                     kernels::spmm_auto(&prep, &cur, n, &mut next, threads)?;
                     if li != last {
-                        for v in &mut next {
-                            *v = v.max(0.0);
+                        for v in next.iter_mut() {
+                            // ReLU on the sign: exact in any storage
+                            // dtype (max(0, x) never rounds).
+                            if v.to_f32() < 0.0 {
+                                *v = E::ZERO;
+                            }
                         }
                     }
                     std::mem::swap(&mut cur, &mut next);
                 }
-                Ok(cur)
+                Ok(widen(cur))
             }
             other => Err(Error::Runtime(format!("{name}: unknown artifact kind '{other}'"))),
         }
@@ -262,7 +295,7 @@ fn check_spmm_operands(
     values: &[f32],
     rows: &[i32],
     cols: &[i32],
-    x: &[f32],
+    x_len: usize,
     k: usize,
     b: usize,
     n: usize,
@@ -282,10 +315,9 @@ fn check_spmm_operands(
             rows.len()
         )));
     }
-    if x.len() != k * n {
+    if x_len != k * n {
         return Err(Error::Runtime(format!(
-            "{name}: operand has {} elements, geometry needs {k}x{n}",
-            x.len()
+            "{name}: operand has {x_len} elements, geometry needs {k}x{n}"
         )));
     }
     Ok(())
@@ -388,6 +420,45 @@ mod tests {
         assert!(check_coords(&[0, 4], &[0, 0], 64, 64, 16, "t").is_err());
         assert!(check_coords(&[0, 3], &[0, 3], 64, 64, 16, "t").is_ok());
         assert!(check_coords(&[], &[], 64, 64, 0, "t").is_err());
+    }
+
+    #[test]
+    fn fp16_artifact_executes_in_f16_storage() {
+        // A manifest declaring dtype float16 runs the interpreter's
+        // F16 instantiation: output agrees with the f32 oracle on the
+        // f16-quantized operands within the documented f16 contract
+        // (and differs in general from the pure-f32 execution).
+        let dir = std::env::temp_dir().join("popsparse_runtime_f16_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "artifacts": [
+                {"name": "h", "kind": "spmm", "file": "h.hlo.txt", "dtype": "float16",
+                 "m": 8, "k": 8, "n": 3, "b": 4, "nnz_b": 2, "flops": 192,
+                 "args": [{"shape": [2, 4, 4], "dtype": "float32"},
+                          {"shape": [2], "dtype": "int32"},
+                          {"shape": [2], "dtype": "int32"},
+                          {"shape": [8, 3], "dtype": "float32"}]}
+            ]}"#,
+        )
+        .unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        let mask = patterns::uniform(8, 8, 4, 2, 11).unwrap();
+        let coo = patterns::with_values(&mask, 11);
+        let x: Vec<f32> = (0..8 * 3).map(|i| (i as f32 * 0.37).sin()).collect();
+        let y = rt.execute_spmm("h", &coo, &x).unwrap();
+        // Oracle on the quantized operands.
+        let qcoo = crate::kernels::PreparedBsr::<crate::kernels::F16>::from_coo(&coo)
+            .to_block_coo()
+            .unwrap();
+        let xq = crate::kernels::dequantize(&crate::kernels::quantize::<crate::kernels::F16>(&x));
+        let want = qcoo.spmm_dense(&xq, 3).unwrap();
+        for (i, (&u, &v)) in y.iter().zip(&want).enumerate() {
+            assert!(
+                crate::kernels::close_enough_for(crate::DType::Fp16, u, v),
+                "element {i}: {u} vs {v}"
+            );
+        }
     }
 
     #[test]

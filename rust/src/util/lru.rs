@@ -259,6 +259,48 @@ mod tests {
     }
 
     #[test]
+    fn capacity_zero_is_floored_to_one() {
+        // The documented floor: a capacity-0 request yields a working
+        // capacity-1 map, not a map that evicts everything on insert
+        // (or divides by zero sizing its tombstone cap).
+        let mut m: LruMap<u32, u32> = LruMap::new(0);
+        assert_eq!(m.capacity(), 1);
+        m.insert(1, 10);
+        assert_eq!(m.get(&1), Some(&10), "the single slot holds");
+        m.insert(2, 20);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.get(&2), Some(&20));
+        assert_eq!(m.get(&1), None);
+        assert_eq!(m.evictions(), 1);
+    }
+
+    #[test]
+    fn capacity_one_thrash_keeps_exact_accounting() {
+        // The degenerate single-slot map: every insert of a new key
+        // evicts the previous one; get_or_insert_with on the resident
+        // key must NOT evict (the touch path, not the insert path);
+        // and the tombstone accounting tracks the full thrash.
+        let mut m: LruMap<u32, Vec<u32>> = LruMap::new(1);
+        m.get_or_insert_with(1, Vec::new).push(10);
+        m.get_or_insert_with(1, Vec::new).push(11);
+        assert_eq!(m.peek(&1), Some(&vec![10, 11]), "resident key mutates in place");
+        assert_eq!(m.evictions(), 0, "touching the resident key never evicts");
+        m.get_or_insert_with(2, Vec::new).push(20);
+        assert_eq!((m.len(), m.evictions()), (1, 1));
+        assert_eq!(m.peek(&1), None);
+        // Re-admitting the evicted key counts the miss-after-evict and
+        // displaces the other.
+        m.get_or_insert_with(1, Vec::new).push(12);
+        assert_eq!(m.misses_after_evict(), 1);
+        assert_eq!(m.peek(&1), Some(&vec![12]), "re-admission starts fresh");
+        assert_eq!(m.evictions(), 2);
+        // An overwrite of the resident key is not an eviction either.
+        m.insert(1, vec![13]);
+        assert_eq!(m.evictions(), 2);
+        assert_eq!(m.peek(&1), Some(&vec![13]));
+    }
+
+    #[test]
     fn unbounded_mode_never_evicts() {
         let mut m: LruMap<u64, u64> = LruMap::new(usize::MAX);
         for i in 0..1000u64 {

@@ -133,6 +133,58 @@ mod tests {
     }
 
     #[test]
+    fn close_while_consumers_are_waiting_wakes_them_all() {
+        // The close/wait race: consumers blocked *inside* the condvar
+        // wait when close() fires must all wake and observe the
+        // closed flag (notify_all), not sleep forever on a lost
+        // wakeup. A regression here hangs rather than fails, which is
+        // why the CI stress job runs this suite under a hard timeout.
+        let q: Arc<WorkQueue<u32>> = Arc::new(WorkQueue::new());
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || q.pop())
+            })
+            .collect();
+        // Give every consumer time to reach the blocking wait so the
+        // close genuinely races sleeping waiters (a scheduling delay
+        // here only makes the test weaker, never flaky).
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        for c in consumers {
+            let (item, _) = c.join().expect("consumer must wake, not hang");
+            assert_eq!(item, None, "woken by close: no item, clean shutdown signal");
+        }
+        // Closing again stays an idempotent no-op, and the queue keeps
+        // rejecting work.
+        q.close();
+        assert!(!q.push(1));
+        assert_eq!(q.pop().0, None);
+    }
+
+    #[test]
+    fn close_races_a_mid_drain_consumer() {
+        // Items pushed before close are all drained even when close()
+        // lands while a consumer is mid-stream: close never drops
+        // queued work.
+        let q: Arc<WorkQueue<u32>> = Arc::new(WorkQueue::new());
+        for i in 0..64 {
+            q.push(i);
+        }
+        let qc = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let (Some(item), _) = qc.pop() {
+                got.push(item);
+            }
+            got
+        });
+        q.close();
+        let got = consumer.join().expect("drain completes");
+        assert_eq!(got.len(), 64, "close drains, never drops");
+    }
+
+    #[test]
     fn pop_reports_wait_time() {
         let q = Arc::new(WorkQueue::new());
         let qc = q.clone();

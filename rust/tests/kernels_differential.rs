@@ -1,22 +1,28 @@
 //! Differential tests of the native compute layer (`popsparse::kernels`)
-//! against the naive reference kernels, under the documented tolerance
-//! contract (`kernels::close_enough`, DESIGN.md §5):
+//! against the naive reference kernels, under the documented per-dtype
+//! tolerance contract (`kernels::close_enough` /
+//! `kernels::close_enough_for`, DESIGN.md §5):
 //!
 //! * prepared/tiled/parallel SpMM vs `BlockCoo::spmm_dense` across
 //!   block sizes {1, 4, 8, 16}, odd `n` (tile remainder), empty
 //!   patterns, single-block matrices, and a heavily row-skewed
-//!   pattern (exercises the nnz-balanced panel partitioning);
+//!   pattern (exercises the nnz-balanced panel partitioning) — **in
+//!   both storage dtypes** (the FP16 arm compares against the f32
+//!   oracle on f16-quantized operands, per the contract);
 //! * the tiled dense kernel vs `runtime::dense_ref`;
-//! * the `PreparedBsr -> BlockCoo` round-trip property (exact, not
-//!   tolerance-based: preparation is a relayout, not arithmetic);
+//! * the `PreparedBsr -> BlockCoo` round-trip property (exact for
+//!   f32 — preparation is a relayout, not arithmetic — and exact for
+//!   `F16` when the values are f16-representable: the element
+//!   round-trip property at the operand level);
 //! * the serving-side invariant that steady-state numeric serving
-//!   performs zero `BlockCoo -> PreparedBsr` conversions (pinned via
-//!   the plan cache's conversion counter).
+//!   performs zero `BlockCoo -> PreparedBsr` conversions per
+//!   (pattern, dtype) (pinned via the plan cache's conversion
+//!   counter, across an FP16/FP32 mix).
 
 use std::time::Duration;
 
 use popsparse::coordinator::{Config, Coordinator, JobSpec, Mode};
-use popsparse::kernels::{self, PreparedBsr};
+use popsparse::kernels::{self, dequantize, quantize, PreparedBsr, F16};
 use popsparse::runtime;
 use popsparse::sim::chip::{CostModel, IpuSpec};
 use popsparse::sparse::coo::BlockCoo;
@@ -53,6 +59,34 @@ fn check_all_paths(coo: &BlockCoo, n: usize, rng: &mut Rng, context: &str) {
     assert_eq!(y, y_auto, "{context}: auto dispatch");
 }
 
+/// The f16 counterpart of [`check_all_paths`]: quantize the operands
+/// once, run every F16 kernel path, and compare against the f32
+/// oracle evaluated on the same quantized values — tiled within the
+/// f16 tolerance, parallel and auto bit-identical to tiled.
+fn check_all_paths_f16(coo: &BlockCoo, n: usize, rng: &mut Rng, context: &str) {
+    let p = PreparedBsr::<F16>::from_coo(coo);
+    let xf: Vec<f32> = (0..coo.k * n).map(|_| rng.normal() as f32).collect();
+    let x: Vec<F16> = quantize(&xf);
+    let want = p.to_block_coo().unwrap().spmm_dense(&dequantize(&x), n).unwrap();
+    // NaN-pattern garbage so skipped slots cannot hide.
+    let mut y = vec![F16(0x7E00); coo.m * n];
+    kernels::spmm(&p, &x, n, &mut y).unwrap();
+    for (i, (&u, &v)) in dequantize(&y).iter().zip(&want).enumerate() {
+        assert!(
+            kernels::close_enough_for(DType::Fp16, u, v),
+            "{context} f16 tiled: element {i}: {u} vs {v}"
+        );
+    }
+    for threads in [2usize, 3, 8] {
+        let mut y_par = vec![F16(0x7E00); coo.m * n];
+        kernels::spmm_parallel(&p, &x, n, &mut y_par, threads).unwrap();
+        assert_eq!(y, y_par, "{context}: f16 parallel({threads}) must equal single-threaded");
+    }
+    let mut y_auto = vec![F16(0x7E00); coo.m * n];
+    kernels::spmm_auto(&p, &x, n, &mut y_auto, 4).unwrap();
+    assert_eq!(y, y_auto, "{context}: f16 auto dispatch");
+}
+
 #[test]
 fn kernels_match_reference_across_block_sizes_and_odd_n() {
     let mut rng = Rng::seed_from_u64(0x5EED);
@@ -66,6 +100,25 @@ fn kernels_match_reference_across_block_sizes_and_odd_n() {
             let mask = patterns::uniform(mb * b, mb * b, b, nnz, rng.next_u64()).unwrap();
             let coo = patterns::with_values(&mask, rng.next_u64());
             check_all_paths(&coo, n, &mut rng, &format!("b={b} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn f16_kernels_match_reference_across_block_sizes_and_odd_n() {
+    // The acceptance grid: both dtypes across b ∈ {1, 4, 8, 16} with
+    // sub-tile, exact-tile and remainder batch widths. (The f32 half
+    // of the grid is the test above; this is the F16 instantiation of
+    // the same paths.)
+    let mut rng = Rng::seed_from_u64(0x5EED16);
+    for &b in &[1usize, 4, 8, 16] {
+        for &n in &[1usize, 16, 33] {
+            let mb = 8;
+            let grid = mb * mb;
+            let nnz = grid / 3;
+            let mask = patterns::uniform(mb * b, mb * b, b, nnz, rng.next_u64()).unwrap();
+            let coo = patterns::with_values(&mask, rng.next_u64());
+            check_all_paths_f16(&coo, n, &mut rng, &format!("b={b} n={n}"));
         }
     }
 }
@@ -119,8 +172,40 @@ fn prepared_round_trips_block_coo_exactly() {
             let mask = patterns::uniform(mb * b, kb * b, b, nnz, rng.next_u64()).unwrap();
             patterns::with_values(&mask, rng.next_u64())
         };
-        let back = PreparedBsr::from_coo(&coo).to_block_coo().unwrap();
+        let back = PreparedBsr::<f32>::from_coo(&coo).to_block_coo().unwrap();
         assert_eq!(coo, back, "b={b} mb={mb} kb={kb} nnz={nnz}");
+    }
+}
+
+#[test]
+fn f16_prepared_round_trips_representable_values_exactly() {
+    // The F16 round-trip property at the operand level: once values
+    // are f16-representable (quantize them first), from_coo .
+    // to_block_coo through F16 storage is the exact identity too —
+    // quantization happens exactly once, at the first conversion.
+    let mut rng = Rng::seed_from_u64(0x717);
+    for _ in 0..20 {
+        let b = [1usize, 4, 16][rng.below(3)];
+        let mb = rng.range(1, 8);
+        let nnz = rng.range(1, mb * mb + 1);
+        let mask = patterns::uniform(mb * b, mb * b, b, nnz, rng.next_u64()).unwrap();
+        let raw = patterns::with_values(&mask, rng.next_u64());
+        // Realize the f16-representable version of the operand.
+        let quantized = BlockCoo::new(
+            raw.m,
+            raw.k,
+            raw.b,
+            raw.block_rows.clone(),
+            raw.block_cols.clone(),
+            dequantize(&quantize::<F16>(&raw.values)),
+        )
+        .unwrap();
+        let back = PreparedBsr::<F16>::from_coo(&quantized).to_block_coo().unwrap();
+        assert_eq!(quantized, back, "b={b} mb={mb} nnz={nnz}");
+        // And a second trip through F16 is the identity of the first:
+        // quantization is idempotent.
+        let twice = PreparedBsr::<F16>::from_coo(&back).to_block_coo().unwrap();
+        assert_eq!(back, twice);
     }
 }
 
@@ -151,10 +236,13 @@ fn job(mode: Mode, n: usize, seed: u64) -> JobSpec {
 
 #[test]
 fn steady_state_numeric_serving_never_reconverts() {
-    // The acceptance invariant: once a pattern's prepared operand is
-    // cached, plan-cache-hit traffic performs zero BlockCoo ->
-    // PreparedBsr conversions — pinned through the conversion counter,
-    // across static and dynamic modes and changing batch shapes.
+    // The acceptance invariant: once a (pattern, dtype)'s prepared
+    // operand is cached, plan-cache-hit traffic performs zero
+    // BlockCoo -> PreparedBsr conversions — pinned through the
+    // conversion counter, across static and dynamic modes, changing
+    // batch shapes, and a precision mix (the jobs here declare FP16,
+    // so this is FP16 serving executing f16 kernels; the FP32 arm
+    // joins below).
     let c = Coordinator::new(
         Config {
             workers: 1,
@@ -166,27 +254,36 @@ fn steady_state_numeric_serving_never_reconverts() {
         IpuSpec::default(),
         CostModel::default(),
     );
-    let warm = c.submit_wait(job(Mode::Static, 64, 3)).unwrap();
+    let warm = c.submit_wait(job(Mode::Static, 64, 3)).expect("warm-up serves");
     assert!(warm.cycles > 0);
+    assert_eq!(warm.spec.dtype, DType::Fp16, "this is the FP16 serving invariant");
     assert_eq!(c.plan_cache().prepared_conversions(), 1, "first sight converts once");
     // Steady state: same pattern again (plan-cache hit), a different
     // batch shape, and the dynamic mode on the same pattern.
-    let again = c.submit_wait(job(Mode::Static, 64, 3)).unwrap();
+    let again = c.submit_wait(job(Mode::Static, 64, 3)).expect("steady state serves");
     assert!(again.plan_cache_hit, "steady-state premise: the plan was cached");
-    let _ = c.submit_wait(job(Mode::Static, 32, 3)).unwrap();
-    let _ = c.submit_wait(job(Mode::Dynamic, 64, 3)).unwrap();
+    let _ = c.submit_wait(job(Mode::Static, 32, 3)).expect("other batch shape serves");
+    let _ = c.submit_wait(job(Mode::Dynamic, 64, 3)).expect("dynamic serves");
     assert_eq!(
         c.plan_cache().prepared_conversions(),
         1,
-        "steady-state serving must perform zero further conversions"
+        "steady-state FP16 serving must perform zero further conversions"
     );
     let (hits, misses) = c.plan_cache().prepared_stats();
     assert_eq!((hits, misses), (3, 1));
+    // The same pattern in FP32 is a different operand: one more
+    // conversion, then its own steady state.
+    let mut fp32 = job(Mode::Static, 64, 3);
+    fp32.dtype = DType::Fp32;
+    let _ = c.submit_wait(fp32.clone()).expect("fp32 serves");
+    assert_eq!(c.plan_cache().prepared_conversions(), 2, "new dtype converts once");
+    let _ = c.submit_wait(fp32).expect("fp32 steady state");
+    assert_eq!(c.plan_cache().prepared_conversions(), 2, "fp32 steady state holds");
     // A genuinely new pattern converts (once).
-    let _ = c.submit_wait(job(Mode::Static, 64, 4)).unwrap();
-    assert_eq!(c.plan_cache().prepared_conversions(), 2);
+    let _ = c.submit_wait(job(Mode::Static, 64, 4)).expect("new pattern serves");
+    assert_eq!(c.plan_cache().prepared_conversions(), 3);
     let snap = c.metrics();
-    assert_eq!(snap.kernel_execs, 5, "every batch ran its kernel");
+    assert_eq!(snap.kernel_execs, 7, "every batch ran its kernel");
     assert_eq!(snap.kernel_failures, 0);
     assert!(snap.kernel_gflops > 0.0, "serving throughput is observable in GFLOP/s");
     c.shutdown();
