@@ -1,7 +1,19 @@
-//! One function per paper table/figure. See DESIGN.md §6 for the
+//! One function per paper table/figure. See DESIGN.md §8 for the
 //! experiment index and EXPERIMENTS.md for recorded results.
+//!
+//! The deterministic serving-layer experiments (`auto`,
+//! `auto --calibrated`, `churn` and the CI gate's point emitters) are
+//! defined as [`runner::Experiment`] specs and executed by the
+//! generic [`runner::Runner`] (DESIGN.md §7); the public functions
+//! below are thin wrappers preserving the original signatures and
+//! byte-identical output (`tests/runner_parity.rs`). The pure
+//! paper-figure tables (`table3`, `fig2`–`fig7`, `ell`,
+//! `conclusions`) predate the runner and stay as plain functions.
 
 use crate::bench_harness::report::{f1, f2, Table};
+use crate::bench_harness::runner::{
+    Axis, Experiment, ExperimentSpec, GridPoint, PointOutput, Runner,
+};
 use crate::bench_harness::sweep::{seed_for, Env, PaperSweep};
 use crate::coordinator::request::{JobSpec, Mode};
 use crate::engine::{
@@ -250,60 +262,94 @@ pub fn fig7(env: &Env) -> Vec<Table> {
 /// dispatch decision the serving layer actually makes. The analytical
 /// GPU baseline rides along for reference.
 pub fn auto_crossover(env: &Env) -> Table {
-    let selector = ModeSelector::with_env(EngineEnv::new(env.spec.clone(), env.cm.clone()));
-    let mut t = Table::new(
-        "Auto-mode crossover — selector choice over (m, density), b=16, FP16, n=2048",
-        &["m=k", "density", "dense Mcyc", "static Mcyc", "dynamic Mcyc", "gpu Mcyc", "choice"],
-    );
-    let n = 2048;
-    for &m in &[1024usize, 2048, 4096] {
-        for inv_d in [2usize, 4, 8, 16, 32] {
-            let job = JobSpec {
-                mode: Mode::Auto,
-                m,
-                k: m,
-                n,
-                b: 16,
-                density: 1.0 / inv_d as f64,
-                dtype: DType::Fp16,
-                pattern_seed: seed_for(m, 16, inv_d),
-            };
-            let (cells, choice) = match selector.choose(&job) {
-                Ok(dec) => {
-                    let cell = |kind: BackendKind| {
-                        dec.estimates
-                            .iter()
-                            .find(|e| e.kind == kind)
-                            .map(|e| f2(e.cycles as f64 / 1e6))
-                            .unwrap_or_else(|| "-".into())
-                    };
-                    (
-                        [
-                            cell(BackendKind::Dense),
-                            cell(BackendKind::Static),
-                            cell(BackendKind::Dynamic),
-                        ],
-                        dec.mode.to_string(),
-                    )
-                }
-                Err(_) => (["-".into(), "-".into(), "-".into()], "-".into()),
-            };
-            let gpu_cell = GpuBackend
-                .plan(&job, selector.env())
-                .map(|e| f2(e.cycles as f64 / 1e6))
-                .unwrap_or_else(|_| "-".into());
-            t.row(vec![
-                m.to_string(),
-                format!("1/{inv_d}"),
-                cells[0].clone(),
-                cells[1].clone(),
-                cells[2].clone(),
-                gpu_cell,
-                choice,
-            ]);
-        }
+    let mut exp = AutoCrossoverExperiment {
+        spec: crossover_grid_spec(
+            "auto",
+            "Auto-mode crossover — selector choice over (m, density), b=16, FP16, n=2048",
+            &["m=k", "density", "dense Mcyc", "static Mcyc", "dynamic Mcyc", "gpu Mcyc", "choice"],
+            false,
+        ),
+        selector: ModeSelector::with_env(EngineEnv::new(env.spec.clone(), env.cm.clone())),
+    };
+    Runner::run(&mut exp).table
+}
+
+/// The crossover sweep grid shared by the `auto` family and the CI
+/// crossover points: `m` outermost, inverse density inner — one spec,
+/// not per-experiment re-rolls.
+fn crossover_grid_spec(
+    name: &'static str,
+    title: &str,
+    headers: &[&str],
+    calibrated: bool,
+) -> ExperimentSpec {
+    ExperimentSpec::new(name, title, headers)
+        .axis(Axis::ints("m", &[1024, 2048, 4096]))
+        .axis(Axis::ints("inv_d", &[2, 4, 8, 16, 32]))
+        .calibrated(calibrated)
+}
+
+/// The auto-family job at one crossover grid point (b=16, n=2048).
+fn crossover_grid_job(m: usize, inv_d: usize, dtype: DType) -> JobSpec {
+    JobSpec {
+        mode: Mode::Auto,
+        m,
+        k: m,
+        n: 2048,
+        b: 16,
+        density: 1.0 / inv_d as f64,
+        dtype,
+        pattern_seed: seed_for(m, 16, inv_d),
     }
-    t
+}
+
+struct AutoCrossoverExperiment {
+    spec: ExperimentSpec,
+    selector: ModeSelector,
+}
+
+impl Experiment for AutoCrossoverExperiment {
+    fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    fn measure(&mut self, point: &GridPoint) -> PointOutput {
+        let (m, inv_d) = (point.int("m"), point.int("inv_d"));
+        let job = crossover_grid_job(m, inv_d, DType::Fp16);
+        let (cells, choice) = match self.selector.choose(&job) {
+            Ok(dec) => {
+                let cell = |kind: BackendKind| {
+                    dec.estimates
+                        .iter()
+                        .find(|e| e.kind == kind)
+                        .map(|e| f2(e.cycles as f64 / 1e6))
+                        .unwrap_or_else(|| "-".into())
+                };
+                (
+                    [
+                        cell(BackendKind::Dense),
+                        cell(BackendKind::Static),
+                        cell(BackendKind::Dynamic),
+                    ],
+                    dec.mode.to_string(),
+                )
+            }
+            Err(_) => (["-".into(), "-".into(), "-".into()], "-".into()),
+        };
+        let gpu_cell = GpuBackend
+            .plan(&job, self.selector.env())
+            .map(|e| f2(e.cycles as f64 / 1e6))
+            .unwrap_or_else(|_| "-".into());
+        PointOutput::row(vec![
+            m.to_string(),
+            format!("1/{inv_d}"),
+            cells[0].clone(),
+            cells[1].clone(),
+            cells[2].clone(),
+            gpu_cell,
+            choice,
+        ])
+    }
 }
 
 /// The crossover frontier under observed-cycle calibration
@@ -320,88 +366,95 @@ pub fn auto_crossover(env: &Env) -> Table {
 /// marked FLIP are points where the corrected argmin departs from the
 /// raw one.
 pub fn auto_crossover_calibrated(env: &Env) -> Table {
-    let engine_env = EngineEnv::new(env.spec.clone(), env.cm.clone());
-    let selector = ModeSelector::with_env(EngineEnv::new(env.spec.clone(), env.cm.clone()));
-    let cal = Calibration::default();
-    let n = 2048;
-    let grid_m = [1024usize, 2048, 4096];
-    let grid_inv_d = [2usize, 4, 8, 16, 32];
-    let grid_job = |m: usize, inv_d: usize| JobSpec {
-        mode: Mode::Auto,
-        m,
-        k: m,
-        n,
-        b: 16,
-        density: 1.0 / inv_d as f64,
-        dtype: DType::Fp16,
-        pattern_seed: seed_for(m, 16, inv_d),
+    let mut exp = CalibratedCrossoverExperiment {
+        spec: crossover_grid_spec(
+            "auto_calibrated",
+            "Auto-mode crossover, calibrated — observed cycles correct estimates before argmin",
+            &[
+                "m=k",
+                "density",
+                "raw choice",
+                "cal choice",
+                "dyn corr",
+                "dyn/st raw",
+                "dyn/st cal",
+                "flip",
+            ],
+            true,
+        ),
+        engine_env: EngineEnv::new(env.spec.clone(), env.cm.clone()),
+        selector: ModeSelector::with_env(EngineEnv::new(env.spec.clone(), env.cm.clone())),
+        cal: Calibration::default(),
     };
-    // Warm-up: one simulated execution per (point, backend), replayed
-    // to EWMA convergence.
-    for &m in &grid_m {
-        for &inv_d in &grid_inv_d {
-            let job = grid_job(m, inv_d);
+    Runner::run(&mut exp).table
+}
+
+struct CalibratedCrossoverExperiment {
+    spec: ExperimentSpec,
+    engine_env: EngineEnv,
+    selector: ModeSelector,
+    cal: Calibration,
+}
+
+impl Experiment for CalibratedCrossoverExperiment {
+    fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    /// Warm-up: one simulated execution per (point, backend), replayed
+    /// to EWMA convergence — the runner hands over the same grid the
+    /// sweep will measure, so the calibration sees exactly the points
+    /// it will correct.
+    fn warm_up(&mut self, grid: &[GridPoint]) {
+        for point in grid {
+            let job = crossover_grid_job(point.int("m"), point.int("inv_d"), DType::Fp16);
             for backend in device_backends() {
-                let Ok(est) = backend.plan(&job, &engine_env) else { continue };
+                let Ok(est) = backend.plan(&job, &self.engine_env) else { continue };
                 let observed = match backend.kind() {
-                    BackendKind::Dynamic => skewed_dynamic_cycles(&job, &engine_env),
-                    _ => backend.execute(&job, &engine_env).ok().map(|r| r.cycles),
+                    BackendKind::Dynamic => skewed_dynamic_cycles(&job, &self.engine_env),
+                    _ => backend.execute(&job, &self.engine_env).ok().map(|r| r.cycles),
                 }
                 .unwrap_or(est.cycles);
                 for _ in 0..8 {
-                    cal.observe(backend.kind(), &job, est.cycles, observed);
+                    self.cal.observe(backend.kind(), &job, est.cycles, observed);
                 }
             }
         }
     }
-    let mut t = Table::new(
-        "Auto-mode crossover, calibrated — observed cycles correct estimates before argmin",
-        &[
-            "m=k",
-            "density",
-            "raw choice",
-            "cal choice",
-            "dyn corr",
-            "dyn/st raw",
-            "dyn/st cal",
-            "flip",
-        ],
-    );
-    for &m in &grid_m {
-        for &inv_d in &grid_inv_d {
-            let job = grid_job(m, inv_d);
-            let raw_choice = match selector.choose(&job) {
-                Ok(d) => d.mode.to_string(),
-                Err(_) => "-".into(),
-            };
-            let cal_choice = match selector.choose_with(&job, Some(&cal)) {
-                Ok(d) => d.mode.to_string(),
-                Err(_) => "-".into(),
-            };
-            let flip = if raw_choice != "-" && raw_choice != cal_choice { "FLIP" } else { "" };
-            let st = StaticBackend.plan(&job, &engine_env).ok();
-            let dy = DynamicBackend.plan(&job, &engine_env).ok();
-            let (margin_raw, margin_cal) = match (&st, &dy) {
-                (Some(s), Some(d)) => {
-                    let dyn_cal = cal.correct(BackendKind::Dynamic, &job, d.cycles) as f64;
-                    let st_cal = cal.correct(BackendKind::Static, &job, s.cycles) as f64;
-                    (f2(d.cycles as f64 / s.cycles as f64), f2(dyn_cal / st_cal))
-                }
-                _ => ("-".into(), "-".into()),
-            };
-            t.row(vec![
-                m.to_string(),
-                format!("1/{inv_d}"),
-                raw_choice,
-                cal_choice,
-                f2(cal.factor(BackendKind::Dynamic, &job)),
-                margin_raw,
-                margin_cal,
-                flip.into(),
-            ]);
-        }
+
+    fn measure(&mut self, point: &GridPoint) -> PointOutput {
+        let (m, inv_d) = (point.int("m"), point.int("inv_d"));
+        let job = crossover_grid_job(m, inv_d, DType::Fp16);
+        let raw_choice = match self.selector.choose(&job) {
+            Ok(d) => d.mode.to_string(),
+            Err(_) => "-".into(),
+        };
+        let cal_choice = match self.selector.choose_with(&job, Some(&self.cal)) {
+            Ok(d) => d.mode.to_string(),
+            Err(_) => "-".into(),
+        };
+        let flip = if raw_choice != "-" && raw_choice != cal_choice { "FLIP" } else { "" };
+        let st = StaticBackend.plan(&job, &self.engine_env).ok();
+        let dy = DynamicBackend.plan(&job, &self.engine_env).ok();
+        let (margin_raw, margin_cal) = match (&st, &dy) {
+            (Some(s), Some(d)) => {
+                let dyn_cal = self.cal.correct(BackendKind::Dynamic, &job, d.cycles) as f64;
+                let st_cal = self.cal.correct(BackendKind::Static, &job, s.cycles) as f64;
+                (f2(d.cycles as f64 / s.cycles as f64), f2(dyn_cal / st_cal))
+            }
+            _ => ("-".into(), "-".into()),
+        };
+        PointOutput::row(vec![
+            m.to_string(),
+            format!("1/{inv_d}"),
+            raw_choice,
+            cal_choice,
+            f2(self.cal.factor(BackendKind::Dynamic, &job)),
+            margin_raw,
+            margin_cal,
+            flip.into(),
+        ])
     }
-    t
 }
 
 /// Observed dynamic-mode cycles for the calibration warm-up: execute
@@ -438,45 +491,74 @@ pub fn churn_sweep(env: &Env) -> Table {
 /// [`churn_sweep`] plus the machine-readable (key, cycles) points the
 /// CI bench gate compares run-over-run.
 pub fn churn_sweep_points(env: &Env) -> (Table, Vec<(String, f64)>) {
-    let engine_env = EngineEnv::new(env.spec.clone(), env.cm.clone());
-    let selector = ModeSelector::with_env(EngineEnv::new(env.spec.clone(), env.cm.clone()));
     let (m, b, inv_d, n) = (4096usize, 16usize, 16usize, 2048usize);
-    let job = JobSpec {
-        mode: Mode::Auto,
-        m,
-        k: m,
-        n,
-        b,
-        density: 1.0 / inv_d as f64,
-        dtype: DType::Fp16,
-        pattern_seed: seed_for(m, b, inv_d),
-    };
-    let mut t = Table::new(
-        "Churn sweep — workload-aware choice vs distinct-pattern rate, \
-         m=k=4096, d=1/16, b=16, n=2048",
-        &[
+    let mut exp = ChurnSweepExperiment {
+        spec: ExperimentSpec::new(
             "churn",
-            "rate ewma",
-            "lifetime",
-            "static Mcyc",
-            "amortized Mcyc",
-            "dynamic Mcyc",
-            "dense Mcyc",
-            "choice",
-        ],
-    );
-    let mut points = Vec::new();
-    let mut flip_percent: Option<u64> = None;
-    // Target fresh-pattern fractions, in eighths: 0 = full reuse,
-    // 8 = a fresh pattern on every request.
-    for fresh_in_8 in [0usize, 1, 2, 4, 6, 8] {
+            "Churn sweep — workload-aware choice vs distinct-pattern rate, \
+             m=k=4096, d=1/16, b=16, n=2048",
+            &[
+                "churn",
+                "rate ewma",
+                "lifetime",
+                "static Mcyc",
+                "amortized Mcyc",
+                "dynamic Mcyc",
+                "dense Mcyc",
+                "choice",
+            ],
+        )
+        // Target fresh-pattern fractions, in eighths: 0 = full reuse,
+        // 8 = a fresh pattern on every request.
+        .axis(Axis::ints("fresh_in_8", &[0, 1, 2, 4, 6, 8])),
+        engine_env: EngineEnv::new(env.spec.clone(), env.cm.clone()),
+        selector: ModeSelector::with_env(EngineEnv::new(env.spec.clone(), env.cm.clone())),
+        job: JobSpec {
+            mode: Mode::Auto,
+            m,
+            k: m,
+            n,
+            b,
+            density: 1.0 / inv_d as f64,
+            dtype: DType::Fp16,
+            pattern_seed: seed_for(m, b, inv_d),
+        },
+        inv_d,
+        flip_percent: None,
+    };
+    let out = Runner::run(&mut exp);
+    (out.table, out.points)
+}
+
+struct ChurnSweepExperiment {
+    spec: ExperimentSpec,
+    engine_env: EngineEnv,
+    selector: ModeSelector,
+    job: JobSpec,
+    inv_d: usize,
+    flip_percent: Option<u64>,
+}
+
+impl ChurnSweepExperiment {
+    fn key_prefix(&self) -> String {
+        format!("churn/m{}_d{}_b{}", self.job.m, self.inv_d, self.job.b)
+    }
+}
+
+impl Experiment for ChurnSweepExperiment {
+    fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    fn measure(&mut self, point: &GridPoint) -> PointOutput {
+        let fresh_in_8 = point.int("fresh_in_8");
         // A deterministic stream realizing the target rate: cycle of
         // 8 arrivals with `fresh_in_8` never-seen seeds, the rest
         // drawn from a small reused pool.
         let tracker = ChurnTracker::default();
         let mut next_fresh = 1_000_000u64;
         for i in 0..64usize {
-            let mut arrival = job.clone();
+            let mut arrival = self.job.clone();
             arrival.pattern_seed = if i % 8 < fresh_in_8 {
                 next_fresh += 1;
                 next_fresh
@@ -485,22 +567,25 @@ pub fn churn_sweep_points(env: &Env) -> (Table, Vec<(String, f64)>) {
             };
             tracker.observe(&arrival);
         }
+        let job = &self.job;
         let key = job.pattern_key();
         let rate = tracker.rate(key);
         let lifetime = tracker.expected_pattern_lifetime(key);
-        let st = StaticBackend.plan(&job, &engine_env).expect("static feasible here").cycles;
-        let dy = DynamicBackend.plan(&job, &engine_env).expect("dynamic feasible here").cycles;
-        let de = DenseBackend.plan(&job, &engine_env).expect("dense feasible here").cycles;
-        let amortized = st + tracker.static_surcharge(&job, st);
-        let choice = selector
-            .choose_workload(&job, None, Some(&tracker))
+        let st = StaticBackend.plan(job, &self.engine_env).expect("static feasible here").cycles;
+        let dy = DynamicBackend.plan(job, &self.engine_env).expect("dynamic feasible here").cycles;
+        let de = DenseBackend.plan(job, &self.engine_env).expect("dense feasible here").cycles;
+        let amortized = st + tracker.static_surcharge(job, st);
+        let choice = self
+            .selector
+            .choose_workload(job, None, Some(&tracker))
             .expect("feasible geometry")
             .mode;
         let percent = (fresh_in_8 * 100 / 8) as u64;
-        if flip_percent.is_none() && choice != Mode::Static {
-            flip_percent = Some(percent);
+        if self.flip_percent.is_none() && choice != Mode::Static {
+            self.flip_percent = Some(percent);
         }
-        t.row(vec![
+        let prefix = format!("{}/fresh{percent}pct", self.key_prefix());
+        PointOutput::row(vec![
             format!("{percent}%"),
             f2(rate),
             f1(lifetime),
@@ -509,28 +594,30 @@ pub fn churn_sweep_points(env: &Env) -> (Table, Vec<(String, f64)>) {
             f2(dy as f64 / 1e6),
             f2(de as f64 / 1e6),
             choice.to_string(),
-        ]);
-        let prefix = format!("churn/m{m}_d{inv_d}_b{b}/fresh{percent}pct");
-        points.push((format!("{prefix}/static_exec"), st as f64));
-        points.push((format!("{prefix}/static_amortized"), amortized as f64));
-        points.push((format!("{prefix}/dynamic"), dy as f64));
-        points.push((format!("{prefix}/dense"), de as f64));
+        ])
+        .with_points(vec![
+            (format!("{prefix}/static_exec"), st as f64),
+            (format!("{prefix}/static_amortized"), amortized as f64),
+            (format!("{prefix}/dynamic"), dy as f64),
+            (format!("{prefix}/dense"), de as f64),
+        ])
     }
-    // The flip point itself is gated, in both directions: the gate
-    // only fails on *increases*, so the raw flip percentage catches a
-    // later flip (or never flipping: sentinel 200), while the
-    // earliness mirror (100 - flip, floored at 0) catches an earlier
-    // one — e.g. a baseline flip at 50% drifting to 25% reads as
-    // earliness 50 -> 75, a +50% failure, and flipping at zero churn
-    // doubles it. A unit test pins the absolute bounds; these points
-    // pin drift between re-baselines.
-    let flip = flip_percent.map(|p| p as f64).unwrap_or(200.0);
-    points.push((format!("churn/m{m}_d{inv_d}_b{b}/flip_at_fresh_pct"), flip));
-    points.push((
-        format!("churn/m{m}_d{inv_d}_b{b}/flip_earliness_pct"),
-        (100.0 - flip).max(0.0),
-    ));
-    (t, points)
+
+    /// The flip point itself is gated, in both directions: the gate
+    /// only fails on *increases*, so the raw flip percentage catches a
+    /// later flip (or never flipping: sentinel 200), while the
+    /// earliness mirror (100 - flip, floored at 0) catches an earlier
+    /// one — e.g. a baseline flip at 50% drifting to 25% reads as
+    /// earliness 50 -> 75, a +50% failure, and flipping at zero churn
+    /// doubles it. A unit test pins the absolute bounds; these points
+    /// pin drift between re-baselines.
+    fn finish(&mut self) -> Vec<(String, f64)> {
+        let flip = self.flip_percent.map(|p| p as f64).unwrap_or(200.0);
+        vec![
+            (format!("{}/flip_at_fresh_pct", self.key_prefix()), flip),
+            (format!("{}/flip_earliness_pct", self.key_prefix()), (100.0 - flip).max(0.0)),
+        ]
+    }
 }
 
 /// Machine-readable cycle-estimate points for the CI bench gate
@@ -551,34 +638,43 @@ pub fn bench_ci_points(env: &Env) -> Vec<(String, f64)> {
 /// points — including dynamic's *observed* row-imbalanced execution
 /// cycles, the propagation-tax input the calibrated arm learns from.
 pub fn crossover_points(env: &Env) -> Vec<(String, f64)> {
-    let engine_env = EngineEnv::new(env.spec.clone(), env.cm.clone());
-    let mut points = Vec::new();
-    for &dtype in &[DType::Fp16, DType::Fp32] {
-        for &m in &[1024usize, 2048, 4096] {
-            for inv_d in [2usize, 4, 8, 16, 32] {
-                let job = JobSpec {
-                    mode: Mode::Auto,
-                    m,
-                    k: m,
-                    n: 2048,
-                    b: 16,
-                    density: 1.0 / inv_d as f64,
-                    dtype,
-                    pattern_seed: seed_for(m, 16, inv_d),
-                };
-                let prefix = format!("crossover/{dtype}/m{m}_d{inv_d}");
-                for backend in device_backends() {
-                    if let Ok(est) = backend.plan(&job, &engine_env) {
-                        points.push((format!("{prefix}/{}", est.kind), est.cycles as f64));
-                    }
-                }
-                if let Some(observed) = skewed_dynamic_cycles(&job, &engine_env) {
-                    points.push((format!("{prefix}/dynamic_observed"), observed as f64));
-                }
+    let mut exp = CrossoverPointsExperiment {
+        // Per-dtype point sweep: no human-facing table, gate points
+        // only. The dtype axis wraps the shared (m, inv_d) grid.
+        spec: ExperimentSpec::new("crossover_points", "CI crossover points", &[])
+            .axis(Axis::dtypes("dtype", &[DType::Fp16, DType::Fp32]))
+            .axis(Axis::ints("m", &[1024, 2048, 4096]))
+            .axis(Axis::ints("inv_d", &[2, 4, 8, 16, 32])),
+        engine_env: EngineEnv::new(env.spec.clone(), env.cm.clone()),
+    };
+    Runner::run(&mut exp).points
+}
+
+struct CrossoverPointsExperiment {
+    spec: ExperimentSpec,
+    engine_env: EngineEnv,
+}
+
+impl Experiment for CrossoverPointsExperiment {
+    fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    fn measure(&mut self, point: &GridPoint) -> PointOutput {
+        let (dtype, m, inv_d) = (point.dtype("dtype"), point.int("m"), point.int("inv_d"));
+        let job = crossover_grid_job(m, inv_d, dtype);
+        let prefix = format!("crossover/{dtype}/m{m}_d{inv_d}");
+        let mut points = Vec::new();
+        for backend in device_backends() {
+            if let Ok(est) = backend.plan(&job, &self.engine_env) {
+                points.push((format!("{prefix}/{}", est.kind), est.cycles as f64));
             }
         }
+        if let Some(observed) = skewed_dynamic_cycles(&job, &self.engine_env) {
+            points.push((format!("{prefix}/dynamic_observed"), observed as f64));
+        }
+        PointOutput::points_only(points)
     }
-    points
 }
 
 /// Ablation (beyond the paper's figures): blocked-ELL padding overhead

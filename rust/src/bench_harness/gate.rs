@@ -20,7 +20,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::error::{Error, Result};
-use crate::util::json::Json;
+use crate::util::json::{escape_str, fmt_number, Json};
 
 /// Schema version written to and required from `BENCH_*.json`.
 pub const BENCH_SCHEMA: u64 = 1;
@@ -87,7 +87,7 @@ impl BenchDoc {
                 out.push(',');
             }
             first = false;
-            out.push_str(&format!("\n    \"{}\": {}", escape(k), fmt_f64(*v)));
+            out.push_str(&format!("\n    \"{}\": {}", escape_str(k), fmt_number(*v)));
         }
         if !first {
             out.push('\n');
@@ -101,26 +101,6 @@ impl BenchDoc {
         std::fs::write(path.as_ref(), self.to_json()).map_err(|e| {
             Error::Runtime(format!("bench doc {}: {e}", path.as_ref().display()))
         })
-    }
-}
-
-fn escape(s: &str) -> String {
-    s.chars()
-        .flat_map(|c| match c {
-            '"' => "\\\"".chars().collect::<Vec<_>>(),
-            '\\' => "\\\\".chars().collect(),
-            c => vec![c],
-        })
-        .collect()
-}
-
-fn fmt_f64(v: f64) -> String {
-    if v.fract() == 0.0 && v.abs() < 9e15 {
-        // Integral cycle counts print as integers (still valid JSON
-        // numbers, parsed back to the same f64).
-        format!("{}", v as i64)
-    } else {
-        format!("{v}")
     }
 }
 

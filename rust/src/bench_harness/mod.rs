@@ -1,21 +1,32 @@
 //! Bench harness: regenerates every table and figure of the paper's
-//! evaluation section (see DESIGN.md §7 for the experiment index).
+//! evaluation section (see DESIGN.md §8 for the experiment index).
 //!
 //! Each experiment function returns [`report::Table`]s that print as
 //! aligned markdown and can be written as CSV. The CLI (`repro bench
 //! <experiment>`) and the `rust/benches/*` targets drive these. The
-//! [`gate`] module compares the deterministic cycle-estimate points
-//! of `repro bench ci` against a committed baseline — the CI
-//! perf-regression gate (DESIGN.md §4.4). The [`wall`] module is the
-//! measured-wall-time arm (`repro bench wall`): naive-ref vs
-//! prepared-tiled vs parallel kernel GFLOP/s, reported but never
-//! gated (machine-dependent).
+//! [`runner`] module is the declarative experiment layer (DESIGN.md
+//! §7): a pure-data [`runner::ExperimentSpec`] names the sweep axes
+//! and repetition policy, and one generic [`runner::Runner`] owns
+//! iteration, warm-up and the report — the `auto`, `churn`, `wall`
+//! and `ci` paths all execute through it. The [`gate`] module
+//! compares the deterministic cycle-estimate points of `repro bench
+//! ci` against a committed baseline — the CI perf-regression gate
+//! (DESIGN.md §4.4). The [`wall`] module is the measured-wall-time
+//! arm (`repro bench wall`): naive-ref vs prepared-tiled vs parallel
+//! kernel GFLOP/s, reported but never gated (machine-dependent). The
+//! [`trace`] module is the workload record/replay format (DESIGN.md
+//! §7): a versioned JSONL job stream captured at coordinator ingress
+//! and replayed deterministically by `repro trace replay`.
 
 pub mod experiments;
 pub mod gate;
 pub mod report;
+pub mod runner;
 pub mod sweep;
+pub mod trace;
 pub mod wall;
 
 pub use gate::{BenchDoc, GateReport};
 pub use report::Table;
+pub use runner::{Axis, AxisValue, Experiment, ExperimentSpec, GridPoint, PointOutput, Runner};
+pub use trace::{Recorder, Trace, TraceEvent, TRACE_VERSION};

@@ -1,0 +1,360 @@
+//! Declarative experiment runner (the OpenAgents bench-harness idiom):
+//! an experiment is pure data — an [`ExperimentSpec`] naming its sweep
+//! axes — plus a [`measure`](Experiment::measure) callback per grid
+//! point, and one generic [`Runner`] owns sweep iteration, warm-up,
+//! repetition budgets and the report layer.
+//!
+//! Why: before this module each `repro bench` subcommand hand-rolled
+//! its own nested sweep loops and output code, so "measure dense vs
+//! static vs auto on *identical* workloads" depended on four loops
+//! staying accidentally in sync. Here the grid is generated once from
+//! the spec (Gale et al.'s lesson: benchmark grids over
+//! size × density × block come from one spec, not per-backend
+//! re-rolls), the iteration order is part of the contract (first axis
+//! outermost, values in declaration order), and every experiment
+//! returns through the same [`RunOutput`]: a [`Table`] for humans +
+//! CSV, and named `(key, value)` points for the CI gate
+//! (`bench_harness::gate`). The four legacy subcommands
+//! (`bench auto/churn/wall/ci`) are ported onto this runner with
+//! byte-identical output where they were already deterministic —
+//! pinned by `tests/runner_parity.rs`.
+
+use std::time::Duration;
+
+use crate::bench_harness::report::Table;
+use crate::coordinator::request::Mode;
+use crate::util::timing::{self, Stats};
+use crate::DType;
+
+/// One coordinate value along a sweep axis.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AxisValue {
+    /// Integer-valued axes: shape (`m`, `n`), block size, inverse
+    /// density, thread count, churn level...
+    Int(usize),
+    /// Storage dtype axes.
+    Dtype(DType),
+    /// Execution-mode axes.
+    Mode(Mode),
+}
+
+/// A named sweep axis with its values in sweep order.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub name: &'static str,
+    pub values: Vec<AxisValue>,
+}
+
+impl Axis {
+    pub fn ints(name: &'static str, values: &[usize]) -> Self {
+        Self { name, values: values.iter().map(|&v| AxisValue::Int(v)).collect() }
+    }
+
+    pub fn dtypes(name: &'static str, values: &[DType]) -> Self {
+        Self { name, values: values.iter().map(|&v| AxisValue::Dtype(v)).collect() }
+    }
+
+    pub fn modes(name: &'static str, values: &[Mode]) -> Self {
+        Self { name, values: values.iter().map(|&v| AxisValue::Mode(v)).collect() }
+    }
+}
+
+/// Wall-clock repetition policy for measured (non-simulated)
+/// experiments; deterministic cycle-estimate experiments leave it
+/// `None` in the spec.
+#[derive(Debug, Clone, Copy)]
+pub struct Repetition {
+    pub budget: Duration,
+    pub min_iters: usize,
+}
+
+impl Repetition {
+    /// Run one named measurement under this policy (warm-up + timed
+    /// iterations via [`timing::bench`]).
+    pub fn bench<F: FnMut()>(&self, name: &str, f: F) -> Stats {
+        timing::bench(name, self.budget, self.min_iters, f)
+    }
+}
+
+/// The pure-data description of an experiment: what to sweep and how
+/// the report is shaped. Everything the generic [`Runner`] needs.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    /// Stable experiment name (CLI subcommand, CSV file stem).
+    pub name: &'static str,
+    /// Table title shown above the report.
+    pub title: String,
+    /// Table column headers; each measured row must match this arity.
+    pub headers: Vec<String>,
+    /// Sweep axes; the grid iterates the **first axis outermost**,
+    /// each axis's values in declaration order.
+    pub axes: Vec<Axis>,
+    /// Whether the experiment argmins over a warmed calibration.
+    pub calibrated: bool,
+    /// Thread count for kernel-executing experiments (ignored by
+    /// simulated-cycle experiments).
+    pub threads: usize,
+    /// Wall-clock repetition policy, `None` for deterministic
+    /// cycle-estimate experiments.
+    pub repetition: Option<Repetition>,
+}
+
+impl ExperimentSpec {
+    pub fn new(name: &'static str, title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            name,
+            title: title.into(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            axes: Vec::new(),
+            calibrated: false,
+            threads: 1,
+            repetition: None,
+        }
+    }
+
+    pub fn axis(mut self, axis: Axis) -> Self {
+        self.axes.push(axis);
+        self
+    }
+
+    pub fn calibrated(mut self, yes: bool) -> Self {
+        self.calibrated = yes;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn repetition(mut self, budget: Duration, min_iters: usize) -> Self {
+        self.repetition = Some(Repetition { budget, min_iters });
+        self
+    }
+
+    /// The full cartesian sweep grid, first axis outermost. A spec
+    /// with no axes yields one empty point (measure runs once).
+    pub fn grid(&self) -> Vec<GridPoint> {
+        let mut grid = vec![GridPoint { coords: Vec::new() }];
+        for axis in &self.axes {
+            let mut next = Vec::with_capacity(grid.len() * axis.values.len());
+            for point in &grid {
+                for &value in &axis.values {
+                    let mut coords = point.coords.clone();
+                    coords.push((axis.name, value));
+                    next.push(GridPoint { coords });
+                }
+            }
+            grid = next;
+        }
+        grid
+    }
+}
+
+/// One point of the sweep grid: a coordinate per axis.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    coords: Vec<(&'static str, AxisValue)>,
+}
+
+impl GridPoint {
+    fn value(&self, name: &str) -> AxisValue {
+        self.coords
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|&(_, v)| v)
+            .unwrap_or_else(|| panic!("experiment grid has no axis named {name:?}"))
+    }
+
+    /// Integer coordinate of axis `name` (panics on a type mismatch:
+    /// that is a bug in the experiment definition, not input error).
+    pub fn int(&self, name: &str) -> usize {
+        match self.value(name) {
+            AxisValue::Int(v) => v,
+            other => panic!("axis {name:?} is not an Int axis: {other:?}"),
+        }
+    }
+
+    /// Dtype coordinate of axis `name`.
+    pub fn dtype(&self, name: &str) -> DType {
+        match self.value(name) {
+            AxisValue::Dtype(v) => v,
+            other => panic!("axis {name:?} is not a Dtype axis: {other:?}"),
+        }
+    }
+
+    /// Mode coordinate of axis `name`.
+    pub fn mode(&self, name: &str) -> Mode {
+        match self.value(name) {
+            AxisValue::Mode(v) => v,
+            other => panic!("axis {name:?} is not a Mode axis: {other:?}"),
+        }
+    }
+}
+
+/// What one grid point produced: an optional table row (matching the
+/// spec's headers) and any number of named gate points.
+#[derive(Debug, Clone, Default)]
+pub struct PointOutput {
+    pub row: Option<Vec<String>>,
+    pub points: Vec<(String, f64)>,
+}
+
+impl PointOutput {
+    pub fn row(cells: Vec<String>) -> Self {
+        Self { row: Some(cells), points: Vec::new() }
+    }
+
+    pub fn with_points(mut self, points: Vec<(String, f64)>) -> Self {
+        self.points = points;
+        self
+    }
+
+    /// Gate points only, no table row (sweeps wider than the report).
+    pub fn points_only(points: Vec<(String, f64)>) -> Self {
+        Self { row: None, points }
+    }
+}
+
+/// An executable experiment: a spec plus per-point measurement.
+pub trait Experiment {
+    /// The declarative description driving the runner.
+    fn spec(&self) -> &ExperimentSpec;
+
+    /// One-time preparation before the sweep (calibration warm-up,
+    /// printing a measurement header, ...). Default: nothing.
+    fn warm_up(&mut self, _grid: &[GridPoint]) {}
+
+    /// Measure one grid point.
+    fn measure(&mut self, point: &GridPoint) -> PointOutput;
+
+    /// Post-sweep points derived from the whole run (flip points,
+    /// aggregate summaries). Default: none.
+    fn finish(&mut self) -> Vec<(String, f64)> {
+        Vec::new()
+    }
+}
+
+/// The result of one runner execution.
+#[derive(Debug, Clone)]
+pub struct RunOutput {
+    pub table: Table,
+    pub points: Vec<(String, f64)>,
+}
+
+/// The generic executor: iterates the spec's grid in contract order,
+/// collecting rows into one [`Table`] and gate points in measurement
+/// order (post-sweep [`Experiment::finish`] points last).
+pub struct Runner;
+
+impl Runner {
+    pub fn run(exp: &mut dyn Experiment) -> RunOutput {
+        let (title, headers, grid) = {
+            let spec = exp.spec();
+            (spec.title.clone(), spec.headers.clone(), spec.grid())
+        };
+        let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut table = Table::new(title, &header_refs);
+        let mut points = Vec::new();
+        exp.warm_up(&grid);
+        for point in &grid {
+            let out = exp.measure(point);
+            if let Some(row) = out.row {
+                table.row(row);
+            }
+            points.extend(out.points);
+        }
+        points.extend(exp.finish());
+        RunOutput { table, points }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_cartesian_first_axis_outermost() {
+        let spec = ExperimentSpec::new("t", "t", &["a", "b"])
+            .axis(Axis::ints("m", &[1, 2]))
+            .axis(Axis::dtypes("dtype", &[DType::Fp16, DType::Fp32]));
+        let grid = spec.grid();
+        assert_eq!(grid.len(), 4);
+        let flat: Vec<(usize, DType)> =
+            grid.iter().map(|p| (p.int("m"), p.dtype("dtype"))).collect();
+        assert_eq!(
+            flat,
+            vec![
+                (1, DType::Fp16),
+                (1, DType::Fp32),
+                (2, DType::Fp16),
+                (2, DType::Fp32),
+            ]
+        );
+    }
+
+    #[test]
+    fn empty_spec_measures_once() {
+        let spec = ExperimentSpec::new("t", "t", &["a"]);
+        assert_eq!(spec.grid().len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "no axis named")]
+    fn unknown_axis_name_is_a_definition_bug() {
+        let spec = ExperimentSpec::new("t", "t", &["a"]).axis(Axis::ints("m", &[1]));
+        spec.grid()[0].int("k");
+    }
+
+    struct Toy {
+        spec: ExperimentSpec,
+        measured: usize,
+        warmed: bool,
+    }
+
+    impl Experiment for Toy {
+        fn spec(&self) -> &ExperimentSpec {
+            &self.spec
+        }
+        fn warm_up(&mut self, grid: &[GridPoint]) {
+            assert_eq!(grid.len(), 3);
+            self.warmed = true;
+        }
+        fn measure(&mut self, point: &GridPoint) -> PointOutput {
+            assert!(self.warmed);
+            self.measured += 1;
+            let m = point.int("m");
+            let out = PointOutput::row(vec![format!("{m}"), format!("{}", m * m)]);
+            if m % 2 == 0 {
+                out.with_points(vec![(format!("toy/m{m}"), m as f64)])
+            } else {
+                out
+            }
+        }
+        fn finish(&mut self) -> Vec<(String, f64)> {
+            vec![("toy/total".to_string(), self.measured as f64)]
+        }
+    }
+
+    #[test]
+    fn runner_collects_rows_and_points_in_order() {
+        let spec = ExperimentSpec::new("toy", "toy sweep", &["m", "m^2"])
+            .axis(Axis::ints("m", &[1, 2, 4]));
+        let mut toy = Toy { spec, measured: 0, warmed: false };
+        let out = Runner::run(&mut toy);
+        assert_eq!(out.table.rows.len(), 3);
+        assert_eq!(out.table.rows[2], vec!["4".to_string(), "16".to_string()]);
+        let keys: Vec<&str> = out.points.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["toy/m2", "toy/m4", "toy/total"]);
+        assert_eq!(out.points.last().unwrap().1, 3.0);
+    }
+
+    #[test]
+    fn mode_axis_round_trips() {
+        let spec = ExperimentSpec::new("t", "t", &["a"])
+            .axis(Axis::modes("mode", &[Mode::Dense, Mode::Auto]));
+        let grid = spec.grid();
+        assert_eq!(grid[0].mode("mode"), Mode::Dense);
+        assert_eq!(grid[1].mode("mode"), Mode::Auto);
+    }
+}

@@ -1,0 +1,396 @@
+//! Workload traces: record the coordinator's ingress job stream to a
+//! versioned JSONL file, replay it deterministically through any
+//! serving [`Config`], and diff two replays (DESIGN.md §7).
+//!
+//! The trace is the A/B mechanism the roadmap's serving directions
+//! (sharded coordinators, N:M formats) hang off: one recorded
+//! workload, re-executed under two configurations, compared
+//! point-by-point. Two event kinds:
+//!
+//! * `job` — one submitted [`JobSpec`] with its arrival offset
+//!   (nanoseconds since the recorder started). Arrival offsets are
+//!   recorded for workload analysis; replay is *logical-time*
+//!   (submission order), so results never depend on host timing.
+//! * `wall` — one measured kernel wall time (numeric serving), with
+//!   the resolved concrete mode and the plan-time cycle estimate.
+//!   Replay feeds these recorded walls into
+//!   [`WallFeedback`](crate::engine::WallFeedback) instead of timing
+//!   anything live, so wall-calibrated replays are bit-reproducible.
+//!
+//! Format: line 1 is a header `{"kind":"trace","version":1}`; every
+//! following line is one event object with a fixed field order, floats
+//! printed via [`json::fmt_number`] (non-finite values serialize as
+//! `null`, never a bare `NaN` token — and fail parsing with a line
+//! number rather than producing a poisoned workload). Unknown
+//! versions are rejected up front; a truncated or corrupt line reports
+//! its 1-based line number.
+//!
+//! [`Config`]: crate::coordinator::Config
+
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::JobSpec;
+use crate::error::{Error, Result};
+use crate::util::json::{fmt_number, Json};
+
+/// Trace file format version this build writes and reads.
+pub const TRACE_VERSION: u64 = 1;
+
+/// One recorded event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A job submitted at `at_ns` nanoseconds after recording began.
+    Job { at_ns: u64, spec: JobSpec },
+    /// A measured kernel wall time (numeric serving): `spec.mode` is
+    /// the *resolved* concrete mode, `estimated` the plan-time cycle
+    /// estimate the wall was observed against.
+    Wall { at_ns: u64, spec: JobSpec, estimated: u64, wall_ns: u64 },
+}
+
+/// Thread-safe event collector tapping the coordinator: ingress
+/// (`submit`) records `job` events, numeric workers record `wall`
+/// events. Enabled by `Config.record_trace`.
+#[derive(Debug)]
+pub struct Recorder {
+    t0: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self { t0: Instant::now(), events: Mutex::new(Vec::new()) }
+    }
+
+    fn push(&self, event: TraceEvent) {
+        self.events.lock().expect("recorder poisoned: a recording thread panicked").push(event);
+    }
+
+    fn at_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    /// Record one submitted job (called at coordinator ingress).
+    pub fn record_job(&self, spec: &JobSpec) {
+        self.push(TraceEvent::Job { at_ns: self.at_ns(), spec: spec.clone() });
+    }
+
+    /// Record one measured kernel wall time (called by numeric
+    /// workers; `spec` carries the resolved concrete mode).
+    pub fn record_wall(&self, spec: &JobSpec, estimated: u64, wall: Duration) {
+        self.push(TraceEvent::Wall {
+            at_ns: self.at_ns(),
+            spec: spec.clone(),
+            estimated,
+            wall_ns: wall.as_nanos() as u64,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().expect("recorder poisoned: a recording thread panicked").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The events recorded so far, as a writable [`Trace`].
+    pub fn snapshot(&self) -> Trace {
+        Trace {
+            version: TRACE_VERSION,
+            events: self
+                .events
+                .lock()
+                .expect("recorder poisoned: a recording thread panicked")
+                .clone(),
+        }
+    }
+}
+
+/// A parsed (or recorded) workload trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub version: u64,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn new(events: Vec<TraceEvent>) -> Self {
+        Self { version: TRACE_VERSION, events }
+    }
+
+    /// The job events in submission order (what replay executes).
+    pub fn jobs(&self) -> impl Iterator<Item = &JobSpec> {
+        self.events.iter().filter_map(|e| match e {
+            TraceEvent::Job { spec, .. } => Some(spec),
+            TraceEvent::Wall { .. } => None,
+        })
+    }
+
+    /// Serialize to the versioned JSONL format. Field order is fixed
+    /// and floats print their shortest round-trip form, so
+    /// parse → serialize is byte-stable (`tests/trace_replay.rs`).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = format!("{{\"kind\":\"trace\",\"version\":{}}}\n", self.version);
+        for event in &self.events {
+            match event {
+                TraceEvent::Job { at_ns, spec } => {
+                    out.push_str(&format!(
+                        "{{\"kind\":\"job\",\"at_ns\":{at_ns},{}}}\n",
+                        spec_fields(spec)
+                    ));
+                }
+                TraceEvent::Wall { at_ns, spec, estimated, wall_ns } => {
+                    out.push_str(&format!(
+                        "{{\"kind\":\"wall\",\"at_ns\":{at_ns},{},\"estimated\":{estimated},\
+                         \"wall_ns\":{wall_ns}}}\n",
+                        spec_fields(spec)
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse the JSONL format. Every error names the 1-based line it
+    /// came from; an unknown header version is rejected before any
+    /// event is read.
+    pub fn parse(text: &str) -> Result<Trace> {
+        let mut lines = text.lines().enumerate();
+        let (_, header) = lines
+            .next()
+            .ok_or_else(|| Error::Runtime("trace is empty: expected a header line".into()))?;
+        let header = Json::parse(header)
+            .map_err(|e| Error::Runtime(format!("trace line 1 (header): {e}")))?;
+        if header.get("kind").and_then(Json::as_str) != Some("trace") {
+            return Err(Error::Runtime(
+                "trace line 1 (header): expected {\"kind\":\"trace\",...}".into(),
+            ));
+        }
+        let version = header
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| Error::Runtime("trace line 1 (header): missing version".into()))?
+            as u64;
+        if version != TRACE_VERSION {
+            return Err(Error::Runtime(format!(
+                "trace version {version} unsupported (this build reads version {TRACE_VERSION})"
+            )));
+        }
+        let mut events = Vec::new();
+        for (idx, line) in lines {
+            let lineno = idx + 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line).map_err(|e| {
+                Error::Runtime(format!(
+                    "trace line {lineno}: {e} (truncated or corrupt event line)"
+                ))
+            })?;
+            let kind = field_str(&j, lineno, "kind")?;
+            match kind.as_str() {
+                "job" => events.push(TraceEvent::Job {
+                    at_ns: field_u64(&j, lineno, "at_ns")?,
+                    spec: spec_from(&j, lineno)?,
+                }),
+                "wall" => events.push(TraceEvent::Wall {
+                    at_ns: field_u64(&j, lineno, "at_ns")?,
+                    spec: spec_from(&j, lineno)?,
+                    estimated: field_u64(&j, lineno, "estimated")?,
+                    wall_ns: field_u64(&j, lineno, "wall_ns")?,
+                }),
+                other => {
+                    return Err(Error::Runtime(format!(
+                        "trace line {lineno}: unknown event kind {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok(Trace { version, events })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Trace> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::Runtime(format!("trace {}: {e}", path.as_ref().display())))?;
+        Self::parse(&text)
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path.as_ref(), self.to_jsonl())
+            .map_err(|e| Error::Runtime(format!("trace {}: {e}", path.as_ref().display())))
+    }
+}
+
+/// The fixed-order spec fields shared by both event kinds.
+fn spec_fields(spec: &JobSpec) -> String {
+    format!(
+        "\"mode\":\"{}\",\"m\":{},\"k\":{},\"n\":{},\"b\":{},\"density\":{},\"dtype\":\"{}\",\
+         \"seed\":{}",
+        spec.mode,
+        spec.m,
+        spec.k,
+        spec.n,
+        spec.b,
+        fmt_number(spec.density),
+        spec.dtype,
+        spec.pattern_seed
+    )
+}
+
+fn field<'j>(j: &'j Json, lineno: usize, name: &str) -> Result<&'j Json> {
+    j.get(name)
+        .ok_or_else(|| Error::Runtime(format!("trace line {lineno}: missing field {name:?}")))
+}
+
+fn field_str(j: &Json, lineno: usize, name: &str) -> Result<String> {
+    field(j, lineno, name)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| Error::Runtime(format!("trace line {lineno}: field {name:?} not a string")))
+}
+
+fn field_f64(j: &Json, lineno: usize, name: &str) -> Result<f64> {
+    field(j, lineno, name)?.as_f64().ok_or_else(|| {
+        Error::Runtime(format!("trace line {lineno}: field {name:?} not a finite number"))
+    })
+}
+
+fn field_u64(j: &Json, lineno: usize, name: &str) -> Result<u64> {
+    Ok(field_f64(j, lineno, name)? as u64)
+}
+
+fn spec_from(j: &Json, lineno: usize) -> Result<JobSpec> {
+    let mode = field_str(j, lineno, "mode")?
+        .parse()
+        .map_err(|e| Error::Runtime(format!("trace line {lineno}: {e}")))?;
+    let dtype = field_str(j, lineno, "dtype")?
+        .parse()
+        .map_err(|e| Error::Runtime(format!("trace line {lineno}: {e}")))?;
+    Ok(JobSpec {
+        mode,
+        m: field_u64(j, lineno, "m")? as usize,
+        k: field_u64(j, lineno, "k")? as usize,
+        n: field_u64(j, lineno, "n")? as usize,
+        b: field_u64(j, lineno, "b")? as usize,
+        density: field_f64(j, lineno, "density")?,
+        dtype,
+        pattern_seed: field_u64(j, lineno, "seed")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Mode;
+    use crate::DType;
+
+    fn spec(mode: Mode, n: usize, seed: u64) -> JobSpec {
+        JobSpec {
+            mode,
+            m: 1024,
+            k: 1024,
+            n,
+            b: 16,
+            density: 1.0 / 16.0,
+            dtype: DType::Fp16,
+            pattern_seed: seed,
+        }
+    }
+
+    fn sample() -> Trace {
+        Trace::new(vec![
+            TraceEvent::Job { at_ns: 0, spec: spec(Mode::Auto, 64, 3) },
+            TraceEvent::Job { at_ns: 1500, spec: spec(Mode::Dense, 128, 0) },
+            TraceEvent::Wall {
+                at_ns: 2750,
+                spec: spec(Mode::Static, 64, 3),
+                estimated: 123456,
+                wall_ns: 987654,
+            },
+        ])
+    }
+
+    #[test]
+    fn serialize_parse_round_trips_byte_stable() {
+        let t = sample();
+        let text = t.to_jsonl();
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_jsonl(), text, "parse → serialize must be byte-identical");
+    }
+
+    #[test]
+    fn unknown_version_is_rejected_by_name() {
+        let text = "{\"kind\":\"trace\",\"version\":99}\n";
+        let err = Trace::parse(text).unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("version 99"), "error must name the bad version: {msg}");
+        assert!(msg.contains("version 1"), "error must name the supported version: {msg}");
+    }
+
+    #[test]
+    fn truncated_line_is_an_actionable_error_not_a_panic() {
+        let mut text = sample().to_jsonl();
+        // Chop the final line mid-object, as a crashed writer would.
+        text.truncate(text.len() - 20);
+        let err = Trace::parse(&text).unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("line 4"), "error must carry the line number: {msg}");
+    }
+
+    #[test]
+    fn missing_fields_and_unknown_kinds_name_their_line() {
+        let text = "{\"kind\":\"trace\",\"version\":1}\n{\"kind\":\"job\",\"at_ns\":0}\n";
+        let msg = format!("{:?}", Trace::parse(text).unwrap_err());
+        assert!(msg.contains("line 2") && msg.contains("mode"), "{msg}");
+        let text = "{\"kind\":\"trace\",\"version\":1}\n{\"kind\":\"mystery\"}\n";
+        let msg = format!("{:?}", Trace::parse(text).unwrap_err());
+        assert!(msg.contains("unknown event kind"), "{msg}");
+    }
+
+    #[test]
+    fn non_finite_density_never_emits_bare_nan() {
+        let mut bad = spec(Mode::Auto, 64, 1);
+        bad.density = f64::NAN;
+        let t = Trace::new(vec![TraceEvent::Job { at_ns: 0, spec: bad }]);
+        let text = t.to_jsonl();
+        assert!(!text.contains("NaN"), "no bare NaN token in: {text}");
+        assert!(text.contains("\"density\":null"));
+        // And the poisoned value fails parsing with a line number
+        // instead of round-tripping silently.
+        let msg = format!("{:?}", Trace::parse(&text).unwrap_err());
+        assert!(msg.contains("line 2") && msg.contains("density"), "{msg}");
+    }
+
+    #[test]
+    fn recorder_collects_in_submission_order() {
+        let rec = Recorder::new();
+        assert!(rec.is_empty());
+        rec.record_job(&spec(Mode::Auto, 64, 1));
+        rec.record_wall(&spec(Mode::Static, 64, 1), 10, Duration::from_micros(5));
+        assert_eq!(rec.len(), 2);
+        let t = rec.snapshot();
+        assert!(matches!(t.events[0], TraceEvent::Job { .. }));
+        match &t.events[1] {
+            TraceEvent::Wall { estimated, wall_ns, .. } => {
+                assert_eq!(*estimated, 10);
+                assert_eq!(*wall_ns, 5_000);
+            }
+            other => panic!("expected wall event, got {other:?}"),
+        }
+        assert_eq!(t.jobs().count(), 1);
+    }
+}

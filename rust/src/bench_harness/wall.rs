@@ -33,11 +33,23 @@
 //! (DESIGN.md §4.4); table *shapes* (rows, columns, sweep points) are
 //! deterministic, which is what the smoke test pins.
 //!
+//! All three tables are [`runner::Experiment`]s executed by the
+//! generic [`runner::Runner`] (DESIGN.md §7): the sweep axes and the
+//! repetition policy (budget + minimum iterations) live in the
+//! [`ExperimentSpec`], the per-point measurement in
+//! [`Experiment::measure`]. The public `*_table` functions are
+//! wrappers preserving the pre-runner signatures and output.
+//!
 //! [`BlockCoo::spmm_dense`]: crate::sparse::coo::BlockCoo::spmm_dense
+//! [`runner::Experiment`]: crate::bench_harness::runner::Experiment
+//! [`runner::Runner`]: crate::bench_harness::runner::Runner
 
 use std::time::Duration;
 
 use crate::bench_harness::report::{f2, Table};
+use crate::bench_harness::runner::{
+    Axis, Experiment, ExperimentSpec, GridPoint, PointOutput, Repetition, Runner,
+};
 use crate::bench_harness::sweep::seed_for;
 use crate::error::Result;
 use crate::kernels::{self, fill_pseudo, quantize, Element, PreparedBsr, F16};
@@ -100,6 +112,14 @@ pub fn smoke_cases() -> Vec<WallCase> {
     per_dtype(&[(256, 256, 64, 16, 8), (256, 256, 33, 4, 8), (128, 128, 16, 1, 8)])
 }
 
+/// An index axis over a case list: the sweep "grid" of a measured
+/// experiment whose points are pre-built structs rather than a
+/// cartesian product.
+fn case_axis(len: usize) -> Axis {
+    let indices: Vec<usize> = (0..len).collect();
+    Axis::ints("case", &indices)
+}
+
 /// Time the tiled and parallel arms of one case in storage type `E`,
 /// oracle-checking first. `x32` is the deterministic f32 operand
 /// stream; `expect` the f32 oracle on the (quantized) operands.
@@ -110,7 +130,7 @@ fn time_sparse_arms<E: Element>(
     x32: &[f32],
     expect: &[f32],
     flops: f64,
-    budget: Duration,
+    rep: Repetition,
     threads: usize,
 ) -> (f64, f64) {
     let prep = PreparedBsr::<E>::from_coo(coo);
@@ -133,43 +153,37 @@ fn time_sparse_arms<E: Element>(
         "m{} n{} b{} d1/{} {}",
         case.m, case.n, case.b, case.inv_d, E::DTYPE
     );
-    let tiled = timing::bench(&format!("spmm tiled    {tag}"), budget, 2, || {
+    let tiled = rep.bench(&format!("spmm tiled    {tag}"), || {
         let _ = kernels::spmm(&prep, &x, case.n, &mut y);
     });
-    let par = timing::bench(&format!("spmm parallel {tag}"), budget, 2, || {
+    let par = rep.bench(&format!("spmm parallel {tag}"), || {
         let _ = kernels::spmm_parallel(&prep, &x, case.n, &mut y, threads);
     });
     (flops / tiled.mean_ns(), flops / par.mean_ns())
 }
 
-/// The sparse sweep: naive-ref vs prepared-tiled vs parallel GFLOP/s
-/// (nnz-only FLOPs) per (case, dtype), with speedups over the f32
-/// naive baseline.
-pub fn spmm_table(cases: &[WallCase], budget: Duration, threads: usize) -> Result<Table> {
-    let mut t = Table::new(
-        format!(
-            "Wall-time SpMM — naive-ref (f32 oracle) vs prepared-tiled vs parallel \
-             ({threads} threads); GFLOP/s on nnz, machine-dependent, not gated"
-        ),
-        &[
-            "dtype",
-            "m=k",
-            "n",
-            "b",
-            "density",
-            "nnz",
-            "naive GF/s",
-            "tiled GF/s",
-            "par GF/s",
-            "tiled x",
-            "par x",
-        ],
-    );
-    timing::print_header();
-    for case in cases {
+struct SpmmWallExperiment {
+    spec: ExperimentSpec,
+    cases: Vec<WallCase>,
+}
+
+impl Experiment for SpmmWallExperiment {
+    fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    fn warm_up(&mut self, _grid: &[GridPoint]) {
+        timing::print_header();
+    }
+
+    fn measure(&mut self, point: &GridPoint) -> PointOutput {
+        let case = &self.cases[point.int("case")];
+        let rep = self.spec.repetition.expect("wall experiments carry a repetition policy");
+        let threads = self.spec.threads;
         let d = 1.0 / case.inv_d as f64;
         let seed = seed_for(case.m, case.b, case.inv_d);
-        let mask = patterns::with_density(case.m, case.k, case.b, d, seed)?;
+        let mask =
+            patterns::with_density(case.m, case.k, case.b, d, seed).expect("bench geometry");
         let coo = patterns::with_values(&mask, seed);
         let mut x = vec![0f32; case.k * case.n];
         fill_pseudo(&mut x, seed ^ 1);
@@ -182,29 +196,25 @@ pub fn spmm_table(cases: &[WallCase], budget: Duration, threads: usize) -> Resul
         let (oracle_coo, oracle_x) = match case.dtype {
             DType::Fp32 => (coo.clone(), x.clone()),
             DType::Fp16 => (
-                PreparedBsr::<F16>::from_coo(&coo).to_block_coo()?,
+                PreparedBsr::<F16>::from_coo(&coo).to_block_coo().expect("bench geometry"),
                 kernels::dequantize(&quantize::<F16>(&x)),
             ),
         };
-        let expect = oracle_coo.spmm_dense(&oracle_x, case.n)?;
+        let expect = oracle_coo.spmm_dense(&oracle_x, case.n).expect("bench geometry");
 
         let tag = format!(
             "m{} n{} b{} d1/{} {}",
             case.m, case.n, case.b, case.inv_d, case.dtype
         );
-        let naive = timing::bench(&format!("spmm naive    {tag}"), budget, 2, || {
+        let naive = rep.bench(&format!("spmm naive    {tag}"), || {
             let _ = oracle_coo.spmm_dense(&oracle_x, case.n);
         });
         let g_naive = flops / naive.mean_ns(); // flops/ns == GFLOP/s
         let (g_tiled, g_par) = match case.dtype {
-            DType::Fp32 => {
-                time_sparse_arms::<f32>(case, &coo, &x, &expect, flops, budget, threads)
-            }
-            DType::Fp16 => {
-                time_sparse_arms::<F16>(case, &coo, &x, &expect, flops, budget, threads)
-            }
+            DType::Fp32 => time_sparse_arms::<f32>(case, &coo, &x, &expect, flops, rep, threads),
+            DType::Fp16 => time_sparse_arms::<F16>(case, &coo, &x, &expect, flops, rep, threads),
         };
-        t.row(vec![
+        PointOutput::row(vec![
             case.dtype.to_string(),
             case.m.to_string(),
             case.n.to_string(),
@@ -216,9 +226,41 @@ pub fn spmm_table(cases: &[WallCase], budget: Duration, threads: usize) -> Resul
             f2(g_par),
             format!("{:.1}x", g_tiled / g_naive),
             format!("{:.1}x", g_par / g_naive),
-        ]);
+        ])
     }
-    Ok(t)
+}
+
+/// The sparse sweep: naive-ref vs prepared-tiled vs parallel GFLOP/s
+/// (nnz-only FLOPs) per (case, dtype), with speedups over the f32
+/// naive baseline.
+pub fn spmm_table(cases: &[WallCase], budget: Duration, threads: usize) -> Result<Table> {
+    let mut exp = SpmmWallExperiment {
+        spec: ExperimentSpec::new(
+            "wall_spmm",
+            format!(
+                "Wall-time SpMM — naive-ref (f32 oracle) vs prepared-tiled vs parallel \
+                 ({threads} threads); GFLOP/s on nnz, machine-dependent, not gated"
+            ),
+            &[
+                "dtype",
+                "m=k",
+                "n",
+                "b",
+                "density",
+                "nnz",
+                "naive GF/s",
+                "tiled GF/s",
+                "par GF/s",
+                "tiled x",
+                "par x",
+            ],
+        )
+        .axis(case_axis(cases.len()))
+        .threads(threads)
+        .repetition(budget, 2),
+        cases: cases.to_vec(),
+    };
+    Ok(Runner::run(&mut exp).table)
 }
 
 /// Time the tiled dense kernel in storage type `E` (oracle-checked).
@@ -229,7 +271,7 @@ fn time_dense_arm<E: Element>(
     n: usize,
     a32: &[f32],
     x32: &[f32],
-    budget: Duration,
+    rep: Repetition,
 ) -> f64 {
     let a: Vec<E> = quantize(a32);
     let x: Vec<E> = quantize(x32);
@@ -251,58 +293,85 @@ fn time_dense_arm<E: Element>(
         );
     }
     let flops = 2.0 * m as f64 * k as f64 * n as f64;
-    let tiled = timing::bench(
-        &format!("dense tiled   m{m} n{n} {}", E::DTYPE),
-        budget,
-        2,
-        || {
-            let _ = kernels::dense::matmul(&a, &x, m, k, n, &mut y);
-        },
-    );
+    let tiled = rep.bench(&format!("dense tiled   m{m} n{n} {}", E::DTYPE), || {
+        let _ = kernels::dense::matmul(&a, &x, m, k, n, &mut y);
+    });
     flops / tiled.mean_ns()
+}
+
+struct DenseWallExperiment {
+    spec: ExperimentSpec,
+    shapes: Vec<(usize, usize)>,
+    /// The f32 naive baseline and operands of the shape currently
+    /// being swept: one naive measurement per shape, shared by both
+    /// dtypes' rows rather than re-timed — the fp16 row's baseline is
+    /// the same number, not the same benchmark re-run with fresh
+    /// noise.
+    cached: Option<(usize, Vec<f32>, Vec<f32>, f64)>,
+}
+
+impl Experiment for DenseWallExperiment {
+    fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    fn measure(&mut self, point: &GridPoint) -> PointOutput {
+        let idx = point.int("shape");
+        let dtype = point.dtype("dtype");
+        let rep = self.spec.repetition.expect("wall experiments carry a repetition policy");
+        let (m, n) = self.shapes[idx];
+        let k = m;
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        if !matches!(&self.cached, Some((cached_idx, ..)) if *cached_idx == idx) {
+            let mut a = vec![0f32; m * k];
+            let mut x = vec![0f32; k * n];
+            fill_pseudo(&mut a, 11);
+            fill_pseudo(&mut x, 12);
+            let naive = rep.bench(&format!("dense naive   m{m} n{n} f32"), || {
+                let _ = runtime::dense_ref(&a, &x, m, k, n);
+            });
+            let g_naive = flops / naive.mean_ns();
+            self.cached = Some((idx, a, x, g_naive));
+        }
+        let (_, a, x, g_naive) = self.cached.as_ref().expect("cached above");
+        let g_naive = *g_naive;
+        let g_tiled = match dtype {
+            DType::Fp32 => time_dense_arm::<f32>(m, k, n, a, x, rep),
+            DType::Fp16 => time_dense_arm::<F16>(m, k, n, a, x, rep),
+        };
+        PointOutput::row(vec![
+            dtype.to_string(),
+            m.to_string(),
+            n.to_string(),
+            f2(g_naive),
+            f2(g_tiled),
+            format!("{:.1}x", g_tiled / g_naive),
+        ])
+    }
 }
 
 /// The dense companion: naive f32 `dense_ref` (fresh output `Vec` per
 /// call, the oracle baseline) vs the `ikj`-tiled kernel per dtype.
 pub fn dense_table(smoke: bool, budget: Duration) -> Result<Table> {
-    let mut t = Table::new(
-        "Wall-time dense matmul — naive-ref (f32) vs ikj-tiled per dtype; GFLOP/s, \
-         machine-dependent, not gated",
-        &["dtype", "m=k", "n", "naive GF/s", "tiled GF/s", "tiled x"],
-    );
-    let shapes: &[(usize, usize)] =
-        if smoke { &[(128, 32)] } else { &[(512, 512), (1024, 512), (2048, 512)] };
-    for &(m, n) in shapes {
-        let k = m;
-        let mut a = vec![0f32; m * k];
-        let mut x = vec![0f32; k * n];
-        fill_pseudo(&mut a, 11);
-        fill_pseudo(&mut x, 12);
-        let flops = 2.0 * m as f64 * k as f64 * n as f64;
-        // One naive measurement per shape: the naive arm is f32 (it is
-        // the oracle), so it is shared by both dtypes' rows rather
-        // than re-timed — the fp16 row's baseline is the same number,
-        // not the same benchmark re-run with fresh noise.
-        let naive = timing::bench(&format!("dense naive   m{m} n{n} f32"), budget, 2, || {
-            let _ = runtime::dense_ref(&a, &x, m, k, n);
-        });
-        let g_naive = flops / naive.mean_ns();
-        for &dtype in &[DType::Fp32, DType::Fp16] {
-            let g_tiled = match dtype {
-                DType::Fp32 => time_dense_arm::<f32>(m, k, n, &a, &x, budget),
-                DType::Fp16 => time_dense_arm::<F16>(m, k, n, &a, &x, budget),
-            };
-            t.row(vec![
-                dtype.to_string(),
-                m.to_string(),
-                n.to_string(),
-                f2(g_naive),
-                f2(g_tiled),
-                format!("{:.1}x", g_tiled / g_naive),
-            ]);
-        }
-    }
-    Ok(t)
+    let shapes: Vec<(usize, usize)> =
+        if smoke { vec![(128, 32)] } else { vec![(512, 512), (1024, 512), (2048, 512)] };
+    let mut exp = DenseWallExperiment {
+        spec: ExperimentSpec::new(
+            "wall_dense",
+            "Wall-time dense matmul — naive-ref (f32) vs ikj-tiled per dtype; GFLOP/s, \
+             machine-dependent, not gated",
+            &["dtype", "m=k", "n", "naive GF/s", "tiled GF/s", "tiled x"],
+        )
+        .axis({
+            let indices: Vec<usize> = (0..shapes.len()).collect();
+            Axis::ints("shape", &indices)
+        })
+        .axis(Axis::dtypes("dtype", &[DType::Fp32, DType::Fp16]))
+        .repetition(budget, 2),
+        shapes,
+        cached: None,
+    };
+    Ok(Runner::run(&mut exp).table)
 }
 
 /// Densities the crossover sweeps, as 1/d (90% sparsity — the paper's
@@ -312,6 +381,58 @@ pub fn crossover_inv_densities(smoke: bool) -> &'static [usize] {
         &[4, 16]
     } else {
         &[2, 4, 8, 10, 16, 32]
+    }
+}
+
+struct CrossoverWallExperiment {
+    spec: ExperimentSpec,
+    m: usize,
+    n: usize,
+    b: usize,
+    a32: Vec<f32>,
+    x32: Vec<f32>,
+    /// One dense measurement per dtype, shared across the density
+    /// sweep (the dense kernel does not see the pattern).
+    dense: Option<(DType, f64)>,
+}
+
+impl Experiment for CrossoverWallExperiment {
+    fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    fn measure(&mut self, point: &GridPoint) -> PointOutput {
+        let dtype = point.dtype("dtype");
+        let inv_d = point.int("inv_d");
+        let rep = self.spec.repetition.expect("wall experiments carry a repetition policy");
+        let threads = self.spec.threads;
+        let (m, n, b) = (self.m, self.n, self.b);
+        let k = m;
+        if !matches!(self.dense, Some((cached, _)) if cached == dtype) {
+            let ms = match dtype {
+                DType::Fp32 => dense_ms_for::<f32>(m, k, n, &self.a32, &self.x32, rep),
+                DType::Fp16 => dense_ms_for::<F16>(m, k, n, &self.a32, &self.x32, rep),
+            };
+            self.dense = Some((dtype, ms));
+        }
+        let dense_ms = self.dense.expect("cached above").1;
+        let d = 1.0 / inv_d as f64;
+        let seed = seed_for(m, b, inv_d);
+        let mask = patterns::with_density(m, k, b, d, seed).expect("bench geometry");
+        let coo = patterns::with_values(&mask, seed);
+        let sparse_ms = match dtype {
+            DType::Fp32 => sparse_ms_for::<f32>(&coo, n, &self.x32, rep, threads),
+            DType::Fp16 => sparse_ms_for::<F16>(&coo, n, &self.x32, rep, threads),
+        };
+        let speedup = dense_ms / sparse_ms;
+        PointOutput::row(vec![
+            dtype.to_string(),
+            format!("1/{inv_d}"),
+            f2(dense_ms),
+            f2(sparse_ms),
+            f2(speedup),
+            if speedup > 1.0 { "yes".into() } else { "no".into() },
+        ])
     }
 }
 
@@ -325,45 +446,31 @@ pub fn crossover_inv_densities(smoke: bool) -> &'static [usize] {
 pub fn crossover_table(smoke: bool, budget: Duration, threads: usize) -> Result<Table> {
     let (m, n, b) = if smoke { (256usize, 32usize, 16usize) } else { (2048, 256, 16) };
     let k = m;
-    let mut t = Table::new(
-        format!(
-            "Wall-time sparse-vs-dense crossover — m=k={m}, n={n}, b={b}, tiled kernels \
-             ({threads} threads for sparse); machine-dependent, not gated"
-        ),
-        &["dtype", "density", "dense ms", "sparse ms", "sparse/dense x", "sparse wins"],
-    );
     let mut a32 = vec![0f32; m * k];
     let mut x32 = vec![0f32; k * n];
     fill_pseudo(&mut a32, 21);
     fill_pseudo(&mut x32, 22);
-    for &dtype in &[DType::Fp32, DType::Fp16] {
-        // One dense measurement per dtype, shared across the density
-        // sweep (the dense kernel does not see the pattern).
-        let dense_ms = match dtype {
-            DType::Fp32 => dense_ms_for::<f32>(m, k, n, &a32, &x32, budget),
-            DType::Fp16 => dense_ms_for::<F16>(m, k, n, &a32, &x32, budget),
-        };
-        for &inv_d in crossover_inv_densities(smoke) {
-            let d = 1.0 / inv_d as f64;
-            let seed = seed_for(m, b, inv_d);
-            let mask = patterns::with_density(m, k, b, d, seed)?;
-            let coo = patterns::with_values(&mask, seed);
-            let sparse_ms = match dtype {
-                DType::Fp32 => sparse_ms_for::<f32>(&coo, n, &x32, budget, threads),
-                DType::Fp16 => sparse_ms_for::<F16>(&coo, n, &x32, budget, threads),
-            };
-            let speedup = dense_ms / sparse_ms;
-            t.row(vec![
-                dtype.to_string(),
-                format!("1/{inv_d}"),
-                f2(dense_ms),
-                f2(sparse_ms),
-                f2(speedup),
-                if speedup > 1.0 { "yes".into() } else { "no".into() },
-            ]);
-        }
-    }
-    Ok(t)
+    let mut exp = CrossoverWallExperiment {
+        spec: ExperimentSpec::new(
+            "wall_crossover",
+            format!(
+                "Wall-time sparse-vs-dense crossover — m=k={m}, n={n}, b={b}, tiled kernels \
+                 ({threads} threads for sparse); machine-dependent, not gated"
+            ),
+            &["dtype", "density", "dense ms", "sparse ms", "sparse/dense x", "sparse wins"],
+        )
+        .axis(Axis::dtypes("dtype", &[DType::Fp32, DType::Fp16]))
+        .axis(Axis::ints("inv_d", crossover_inv_densities(smoke)))
+        .threads(threads)
+        .repetition(budget, 2),
+        m,
+        n,
+        b,
+        a32,
+        x32,
+        dense: None,
+    };
+    Ok(Runner::run(&mut exp).table)
 }
 
 fn dense_ms_for<E: Element>(
@@ -372,19 +479,14 @@ fn dense_ms_for<E: Element>(
     n: usize,
     a32: &[f32],
     x32: &[f32],
-    budget: Duration,
+    rep: Repetition,
 ) -> f64 {
     let a: Vec<E> = quantize(a32);
     let x: Vec<E> = quantize(x32);
     let mut y = vec![E::ZERO; m * n];
-    let stats = timing::bench(
-        &format!("xover dense   m{m} n{n} {}", E::DTYPE),
-        budget,
-        2,
-        || {
-            let _ = kernels::dense::matmul(&a, &x, m, k, n, &mut y);
-        },
-    );
+    let stats = rep.bench(&format!("xover dense   m{m} n{n} {}", E::DTYPE), || {
+        let _ = kernels::dense::matmul(&a, &x, m, k, n, &mut y);
+    });
     stats.mean_ns() / 1e6
 }
 
@@ -392,16 +494,14 @@ fn sparse_ms_for<E: Element>(
     coo: &BlockCoo,
     n: usize,
     x32: &[f32],
-    budget: Duration,
+    rep: Repetition,
     threads: usize,
 ) -> f64 {
     let prep = PreparedBsr::<E>::from_coo(coo);
     let x: Vec<E> = quantize(x32);
     let mut y = vec![E::ZERO; coo.m * n];
-    let stats = timing::bench(
+    let stats = rep.bench(
         &format!("xover sparse  m{} n{n} nnz{} {}", coo.m, coo.nnz_blocks(), E::DTYPE),
-        budget,
-        2,
         || {
             let _ = kernels::spmm_auto(&prep, &x, n, &mut y, threads);
         },

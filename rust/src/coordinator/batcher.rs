@@ -223,9 +223,28 @@ impl<T> Batcher<T> {
             .collect()
     }
 
-    /// Flush everything (shutdown).
+    /// Flush everything (shutdown and trace replay). Queues drain in
+    /// a *sorted* key order, not `HashMap` iteration order: the live
+    /// coordinator only drains at shutdown (where order is
+    /// unobservable — every job already has its own responder), but
+    /// deterministic replay ([`crate::coordinator::replay`]) executes
+    /// drained batches serially, and bit-identical replays require a
+    /// stable order.
     pub fn drain(&mut self) -> Vec<Batch<T>> {
-        let keys: Vec<BatchKey> = self.queues.keys().copied().collect();
+        let mut keys: Vec<BatchKey> = self.queues.keys().copied().collect();
+        keys.sort_by_key(|k| {
+            let mode_rank = match k.mode {
+                Mode::Dense => 0u8,
+                Mode::Static => 1,
+                Mode::Dynamic => 2,
+                Mode::Auto => 3,
+            };
+            let dtype_rank = match k.dtype {
+                DType::Fp16 => 0u8,
+                DType::Fp32 => 1,
+            };
+            (mode_rank, k.m, k.k, k.b, k.density_millionths, dtype_rank, k.pattern_seed)
+        });
         keys.into_iter()
             .map(|key| {
                 let q = self.queues.remove(&key).expect("draining existing key");
@@ -338,5 +357,38 @@ mod tests {
         let all = b.drain();
         assert_eq!(all.len(), 2);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn drain_order_is_sorted_not_hash_order() {
+        // Replay determinism depends on this: insertion order and
+        // HashMap iteration order must not leak into the drain.
+        let populate = |b: &mut Batcher<()>| {
+            b.push(job(8, 9, Mode::Static), ());
+            b.push(job(8, 2, Mode::Static), ());
+            b.push(job(8, 0, Mode::Dense), ());
+            b.push(job(8, 5, Mode::Auto), ());
+            b.push(job(8, 0, Mode::Dynamic), ());
+        };
+        let mut b = Batcher::new(1024, Duration::from_secs(60));
+        populate(&mut b);
+        let order: Vec<(Mode, u64)> =
+            b.drain().iter().map(|batch| (batch.key.mode, batch.key.pattern_seed)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (Mode::Dense, 0),
+                (Mode::Static, 2),
+                (Mode::Static, 9),
+                (Mode::Dynamic, 0),
+                (Mode::Auto, 5),
+            ]
+        );
+        // And it is reproducible across batcher instances.
+        let mut b2 = Batcher::new(1024, Duration::from_secs(60));
+        populate(&mut b2);
+        let order2: Vec<(Mode, u64)> =
+            b2.drain().iter().map(|batch| (batch.key.mode, batch.key.pattern_seed)).collect();
+        assert_eq!(order, order2);
     }
 }

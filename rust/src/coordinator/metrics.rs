@@ -148,6 +148,33 @@ impl Snapshot {
     pub fn auto_resolved(&self) -> u64 {
         self.auto_dense + self.auto_static + self.auto_dynamic
     }
+
+    /// The integer counters that are functions of the job stream and
+    /// configuration alone — no wall-clock, no thread-race dependence
+    /// under serial execution. This is the metric set deterministic
+    /// trace replay ([`crate::coordinator::replay`]) reports and
+    /// diffs; anything timing-derived (latency percentiles, queue
+    /// waits, kernel walls, selection time) is deliberately excluded
+    /// because two bit-identical replays would still disagree on it.
+    pub fn deterministic_counters(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("jobs_completed", self.jobs_completed),
+            ("jobs_failed", self.jobs_failed),
+            ("batches", self.batches),
+            ("simulated_cycles", self.simulated_cycles),
+            ("auto_dense", self.auto_dense),
+            ("auto_static", self.auto_static),
+            ("auto_dynamic", self.auto_dynamic),
+            ("decision_flips", self.decision_flips),
+            ("churn_shifts", self.churn_shifts),
+            ("rekeyed_batches", self.rekeyed_batches),
+            ("rekeyed_groups", self.rekeyed_groups),
+            ("worker_selections", self.worker_selections),
+            ("kernel_execs", self.kernel_execs),
+            ("kernel_failures", self.kernel_failures),
+            ("wall_observations", self.wall_observations),
+        ]
+    }
 }
 
 const RESERVOIR: usize = 65536;
@@ -428,6 +455,25 @@ mod tests {
         assert!((s.auto_estimate_rel_err - 0.05).abs() < 1e-9);
         assert_eq!(s.auto_estimate_rel_err_calibrated, 0.0);
         assert_eq!(s.decision_flips, 1);
+    }
+
+    #[test]
+    fn deterministic_counters_exclude_wall_clock() {
+        let m = Metrics::new();
+        m.record_job(Duration::from_micros(5), 1000);
+        m.record_kernel(Duration::from_millis(1), 2e9);
+        let counters = m.snapshot().deterministic_counters();
+        assert!(counters.iter().any(|(k, v)| *k == "jobs_completed" && *v == 1));
+        assert!(counters.iter().any(|(k, v)| *k == "simulated_cycles" && *v == 1000));
+        assert!(counters.iter().any(|(k, v)| *k == "kernel_execs" && *v == 1));
+        // Nothing timing-derived may appear: those keys differ between
+        // two bit-identical replays.
+        for timing in ["p50", "queue_wait", "kernel_wall", "selection_time", "gflops"] {
+            assert!(
+                counters.iter().all(|(k, _)| !k.contains(timing)),
+                "timing-derived key {timing:?} leaked into the deterministic set"
+            );
+        }
     }
 
     #[test]

@@ -60,8 +60,10 @@
 pub mod batcher;
 pub mod metrics;
 pub mod plan_cache;
+pub mod replay;
 pub mod request;
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -70,8 +72,10 @@ use std::time::{Duration, Instant};
 pub use batcher::{Batch, BatchKey, Batcher, PatternHints};
 pub use metrics::{Metrics, SelectionSite, Snapshot};
 pub use plan_cache::{BatchResolution, CachedPlan, PlanCache};
+pub use replay::{ReplayJob, ReplayReport, ReplaySession, REPLAY_VERSION};
 pub use request::{JobResult, JobSpec, Mode, PatternKey, PlanKey, SelectorKey};
 
+use crate::bench_harness::trace::Recorder;
 use crate::engine::calibration::DEFAULT_ALPHA;
 use crate::engine::{BackendKind, Calibration, ChurnTracker, WallFeedback};
 use crate::error::{Error, Result};
@@ -143,6 +147,14 @@ pub struct Config {
     /// off the wall calibration never learns and resolution behaves
     /// as uncorrected. Off by default.
     pub wall_calibrated: bool,
+    /// Record the workload to this path: every submitted job (at
+    /// ingress, in submission order) and — with [`Config::numeric`] on
+    /// — every measured kernel wall, serialized as a versioned JSONL
+    /// trace ([`crate::bench_harness::trace`]) when the coordinator
+    /// shuts down. The recorded stream replays deterministically
+    /// through [`ReplaySession`] (`repro trace replay`) under any
+    /// configuration. Off (`None`) by default.
+    pub record_trace: Option<PathBuf>,
 }
 
 impl Default for Config {
@@ -154,11 +166,12 @@ impl Default for Config {
             caches: CacheConfig::default(),
             numeric: false,
             wall_calibrated: false,
+            record_trace: None,
         }
     }
 }
 
-type Responder = mpsc::Sender<Result<JobResult>>;
+pub(crate) type Responder = mpsc::Sender<Result<JobResult>>;
 
 enum WorkItem {
     Batch(Batch<Responder>),
@@ -178,6 +191,8 @@ pub struct Coordinator {
     ingress_thread: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     shutting_down: Arc<AtomicBool>,
+    /// Workload recorder + output path ([`Config::record_trace`]).
+    recorder: Option<(Arc<Recorder>, PathBuf)>,
 }
 
 impl Coordinator {
@@ -198,6 +213,10 @@ impl Coordinator {
         let churn = Arc::new(ChurnTracker::with_capacity(caches.churn_capacity));
         let hints = Arc::new(PatternHints::with_capacity(caches.hint_capacity));
         let shutting_down = Arc::new(AtomicBool::new(false));
+        let recorder = config
+            .record_trace
+            .as_ref()
+            .map(|path| (Arc::new(Recorder::new()), path.clone()));
 
         let (ingress_tx, ingress_rx) = mpsc::channel::<(JobSpec, Responder)>();
         // Workers share a condvar-backed MPMC queue: the lock is held
@@ -263,6 +282,7 @@ impl Coordinator {
             let wall = wall.clone();
             let churn = churn.clone();
             let hints = hints.clone();
+            let recorder = recorder.as_ref().map(|(r, _)| r.clone());
             workers.push(std::thread::spawn(move || {
                 let mut scratch = crate::kernels::Scratch::default();
                 loop {
@@ -287,8 +307,12 @@ impl Coordinator {
                                 &churn,
                                 &hints,
                                 &metrics,
-                                numeric
-                                    .then_some(NumericArm { scratch: &mut scratch, wall: &wall }),
+                                numeric.then_some(NumericArm {
+                                    scratch: &mut scratch,
+                                    wall: Some(&wall),
+                                    recorder: recorder.as_deref(),
+                                    threads: 1,
+                                }),
                             )
                         }
                         None => break,
@@ -308,6 +332,7 @@ impl Coordinator {
             ingress_thread: Some(ingress_thread),
             workers,
             shutting_down,
+            recorder,
         }
     }
 
@@ -317,6 +342,12 @@ impl Coordinator {
         if self.shutting_down.load(Ordering::Relaxed) {
             let _ = tx.send(Err(Error::Coordinator("shutting down".into())));
             return rx;
+        }
+        // Trace the job at ingress, before batching touches it: the
+        // recorded stream is the submitted workload, not the batched
+        // one, so replay can re-batch it under any configuration.
+        if let Some((recorder, _)) = &self.recorder {
+            recorder.record_job(&job);
         }
         match self.ingress.as_ref() {
             Some(ingress) => {
@@ -389,6 +420,11 @@ impl Coordinator {
         &self.cache
     }
 
+    /// The workload recorder, when [`Config::record_trace`] is set.
+    pub fn trace_recorder(&self) -> Option<&Recorder> {
+        self.recorder.as_ref().map(|(r, _)| r.as_ref())
+    }
+
     /// Graceful shutdown: flush the batcher, join all threads. A
     /// thread that died of a panic mid-flight (poisoned lock,
     /// kernel-layer bug) is reported to stderr rather than silently
@@ -416,6 +452,15 @@ impl Coordinator {
                  their in-flight jobs saw channel disconnects"
             );
         }
+        // Write the workload trace after every thread has joined, so
+        // the file holds the complete stream (all wall events landed).
+        // A write failure is reported, not escalated: the serving run
+        // itself succeeded.
+        if let Some((recorder, path)) = self.recorder.take() {
+            if let Err(e) = recorder.snapshot().write(&path) {
+                eprintln!("coordinator shutdown: trace write failed: {e:?}");
+            }
+        }
     }
 }
 
@@ -426,18 +471,30 @@ impl Drop for Coordinator {
 }
 
 /// The numeric serving arm a worker threads through batch execution:
-/// its reusable per-dtype kernel scratch plus the wall-time feedback
-/// sink the measured kernels report into.
-struct NumericArm<'a> {
-    scratch: &'a mut Scratch,
-    wall: &'a WallFeedback,
+/// its reusable per-dtype kernel scratch, the wall-time feedback sink
+/// the measured kernels report into (None under deterministic replay,
+/// where recorded walls feed the calibration instead of live ones —
+/// see [`replay`]), the workload recorder tap
+/// ([`Config::record_trace`]), and the kernel thread count (1 per
+/// live worker — the pool is the parallelism; replay, which is
+/// serial, may use the bit-exact row-panel parallel path).
+pub(crate) struct NumericArm<'a> {
+    pub(crate) scratch: &'a mut Scratch,
+    pub(crate) wall: Option<&'a WallFeedback>,
+    pub(crate) recorder: Option<&'a Recorder>,
+    pub(crate) threads: usize,
 }
 
 impl NumericArm<'_> {
     /// Reborrow for a sub-batch (the re-keying split executes several
     /// groups through one worker's arm).
     fn reborrow(&mut self) -> NumericArm<'_> {
-        NumericArm { scratch: &mut *self.scratch, wall: self.wall }
+        NumericArm {
+            scratch: &mut *self.scratch,
+            wall: self.wall,
+            recorder: self.recorder,
+            threads: self.threads,
+        }
     }
 }
 
@@ -456,7 +513,7 @@ impl NumericArm<'_> {
 /// pattern — one static pass must never impose one job's pattern on
 /// another's.
 #[allow(clippy::too_many_arguments)]
-fn process_batch(
+pub(crate) fn process_batch(
     batch: Batch<Responder>,
     cache: &PlanCache,
     resolve_cal: &Calibration,
@@ -651,18 +708,29 @@ fn execute_group(
                                 rep,
                                 Some(&prepared),
                                 arm.scratch,
-                                1,
+                                arm.threads,
                             )
                         })
                     }
-                    _ => crate::engine::backends::execute_kernel(rep, None, arm.scratch, 1),
+                    _ => {
+                        crate::engine::backends::execute_kernel(rep, None, arm.scratch, arm.threads)
+                    }
                 };
                 match run {
                     Ok(r) => {
                         metrics.record_kernel(r.wall, r.flops);
+                        // Trace the measured wall against the resolved
+                        // mode and its plan estimate, so replay can
+                        // feed the *recorded* walls into the wall
+                        // calibration instead of timing anything live.
+                        if let Some(rec) = arm.recorder {
+                            rec.record_wall(rep, plan_estimate, r.wall);
+                        }
                         if let Some(kind) = BackendKind::of_mode(rep.mode) {
-                            if arm.wall.observe_wall(kind, rep, plan_estimate, r.wall) {
-                                metrics.record_wall_observation();
+                            if let Some(wall) = arm.wall {
+                                if wall.observe_wall(kind, rep, plan_estimate, r.wall) {
+                                    metrics.record_wall_observation();
+                                }
                             }
                         }
                     }
@@ -907,6 +975,36 @@ mod tests {
         assert_eq!(snap.kernel_execs, 0, "numeric arm is opt-in");
         assert_eq!(c.plan_cache().prepared_conversions(), 0);
         c.shutdown();
+    }
+
+    #[test]
+    fn record_trace_captures_the_submitted_workload() {
+        let path = std::env::temp_dir().join("popsparse_coordinator_trace_test.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let c = Coordinator::new(
+            Config {
+                workers: 1,
+                numeric: true,
+                record_trace: Some(path.clone()),
+                ..Config::default()
+            },
+            IpuSpec::default(),
+            CostModel::default(),
+        );
+        let _ = c.submit_wait(job(Mode::Static, 64, 7)).expect("static serves");
+        let _ = c.submit_wait(job(Mode::Dense, 64, 0)).expect("dense serves");
+        let live = c.trace_recorder().expect("recording is on").snapshot();
+        assert_eq!(live.jobs().count(), 2, "ingress records every submission");
+        c.shutdown();
+        let trace = crate::bench_harness::trace::Trace::load(&path)
+            .expect("shutdown writes the trace file");
+        assert_eq!(trace.jobs().count(), 2);
+        assert!(
+            trace.events.len() > 2,
+            "numeric serving records wall events alongside jobs: {:?}",
+            trace.events
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,529 @@
+//! Deterministic trace replay: re-execute a recorded workload
+//! ([`crate::bench_harness::trace`]) through the serving stack, bit
+//! reproducibly, under any [`Config`] (DESIGN.md §7).
+//!
+//! The live coordinator is deliberately nondeterministic — delay
+//! flushes race the clock, workers race each other for batches, and
+//! measured kernel walls depend on the host. Replay removes every one
+//! of those sources while keeping the *logic* identical (it executes
+//! the same [`process_batch`] the worker pool runs):
+//!
+//! * **Serial, synchronous execution.** One thread; each batch is
+//!   processed the moment it flushes. No worker races, no queue.
+//! * **Capacity-only batching.** Jobs are pushed in recorded
+//!   submission order; only the `max_batch_n` capacity flush fires
+//!   ([`Batcher::poll`] is never called — logical time, not wall
+//!   time), and the final [`Batcher::drain`] is sorted, not
+//!   hash-ordered.
+//! * **Recorded walls, never live ones.** The numeric arm runs with
+//!   its wall sink disconnected; `wall` trace events feed the
+//!   recorded measurements into [`WallFeedback`] at their recorded
+//!   position in the stream, so wall-calibrated dispatch replays
+//!   exactly — even on a different machine.
+//! * **Deterministic report.** [`ReplayReport`] carries only
+//!   integer/bit-exact outputs: the metric counters from
+//!   [`Snapshot::deterministic_counters`] and per-job results
+//!   (resolved mode, cycles, tflops, propagation steps, cache hit,
+//!   estimate). Latency and wall-time metrics are excluded by
+//!   construction.
+//!
+//! Two replays of one trace under one `Config` must produce
+//! byte-identical reports (`repro trace diff`; pinned by
+//! `tests/trace_replay.rs` and the CI `trace` job).
+
+use std::path::Path;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::bench_harness::trace::{Trace, TraceEvent};
+use crate::coordinator::batcher::{Batcher, PatternHints};
+use crate::coordinator::{
+    process_batch, Batch, Config, JobResult, Metrics, Mode, NumericArm, PlanCache, Responder,
+    Snapshot,
+};
+use crate::engine::calibration::DEFAULT_ALPHA;
+use crate::engine::{BackendKind, Calibration, ChurnTracker, WallFeedback};
+use crate::error::{Error, Result};
+use crate::kernels::Scratch;
+use crate::sim::chip::{CostModel, IpuSpec};
+use crate::util::json::{escape_str, fmt_number, Json};
+
+/// Replay report format version.
+pub const REPLAY_VERSION: u64 = 1;
+
+/// One replay session: the full serving-side state (plan cache,
+/// calibrations, churn tracker, hints, batcher) owned by a single
+/// thread. Build one per replay run — state carries over between
+/// [`ReplaySession::replay`] calls on the same session, which is
+/// useful for warm-cache experiments but *not* what `repro trace
+/// diff` compares.
+pub struct ReplaySession {
+    cache: PlanCache,
+    metrics: Metrics,
+    calibration: Calibration,
+    wall: WallFeedback,
+    churn: ChurnTracker,
+    hints: Arc<PatternHints>,
+    batcher: Batcher<Responder>,
+    scratch: Scratch,
+    numeric: bool,
+    wall_calibrated: bool,
+    threads: usize,
+}
+
+impl ReplaySession {
+    /// A session executing under `config`'s serving policy
+    /// (`max_batch_n`, cache bounds, `numeric`, `wall_calibrated`;
+    /// `workers`, `max_batch_delay` and `record_trace` are
+    /// meaningless under serial logical-time replay and ignored).
+    /// `threads` drives only the bit-exact row-panel kernel
+    /// parallelism of the numeric arm — it must not change any
+    /// reported value (`tests/trace_replay.rs` pins `--threads 1`
+    /// against N).
+    pub fn new(config: &Config, spec: IpuSpec, cm: CostModel, threads: usize) -> Self {
+        let caches = config.caches;
+        let hints = Arc::new(PatternHints::with_capacity(caches.hint_capacity));
+        Self {
+            cache: PlanCache::with_capacity(
+                spec,
+                cm,
+                caches.plan_capacity,
+                caches.memo_capacity,
+                caches.prepared_capacity,
+            ),
+            metrics: Metrics::new(),
+            calibration: Calibration::with_capacity(DEFAULT_ALPHA, caches.calibration_capacity),
+            wall: WallFeedback::with_capacity(DEFAULT_ALPHA, caches.calibration_capacity),
+            churn: ChurnTracker::with_capacity(caches.churn_capacity),
+            // Capacity-only batching: the delay budget is irrelevant
+            // because poll() is never called.
+            batcher: Batcher::with_hints(config.max_batch_n, config.max_batch_delay, hints.clone()),
+            hints,
+            scratch: Scratch::default(),
+            numeric: config.numeric,
+            wall_calibrated: config.wall_calibrated,
+            threads: threads.max(1),
+        }
+    }
+
+    /// Replay every event of `trace` in recorded order and return the
+    /// deterministic report.
+    pub fn replay(&mut self, trace: &Trace) -> Result<ReplayReport> {
+        let mut pending: Vec<mpsc::Receiver<Result<JobResult>>> = Vec::new();
+        for event in &trace.events {
+            match event {
+                TraceEvent::Job { spec, .. } => {
+                    let (tx, rx) = mpsc::channel();
+                    pending.push(rx);
+                    if let Some(batch) = self.batcher.push(spec.clone(), tx) {
+                        self.process(batch);
+                    }
+                }
+                TraceEvent::Wall { spec, estimated, wall_ns, .. } => {
+                    // Feed the *recorded* measurement at its recorded
+                    // position in the stream; the numeric arm below
+                    // never times anything into the feedback.
+                    if let Some(kind) = BackendKind::of_mode(spec.mode) {
+                        if self.wall.observe_wall(
+                            kind,
+                            spec,
+                            *estimated,
+                            Duration::from_nanos(*wall_ns),
+                        ) {
+                            self.metrics.record_wall_observation();
+                        }
+                    }
+                }
+            }
+        }
+        for batch in self.batcher.drain() {
+            self.process(batch);
+        }
+        let mut jobs = Vec::with_capacity(pending.len());
+        for (i, rx) in pending.into_iter().enumerate() {
+            let result = rx.try_recv().map_err(|_| {
+                Error::Coordinator(format!(
+                    "replay: job {i} never received a result (batch lost?)"
+                ))
+            })?;
+            jobs.push(ReplayJob::from_result(result));
+        }
+        Ok(ReplayReport {
+            version: REPLAY_VERSION,
+            counters: self
+                .metrics
+                .snapshot()
+                .deterministic_counters()
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+            jobs,
+        })
+    }
+
+    /// Execute one flushed batch, synchronously, through the same
+    /// path the live worker pool runs.
+    fn process(&mut self, batch: Batch<Responder>) {
+        self.metrics.record_batch(batch.jobs.len());
+        let resolve_cal: &Calibration =
+            if self.wall_calibrated { self.wall.calibration() } else { &self.calibration };
+        process_batch(
+            batch,
+            &self.cache,
+            resolve_cal,
+            &self.calibration,
+            &self.churn,
+            &self.hints,
+            &self.metrics,
+            self.numeric.then_some(NumericArm {
+                scratch: &mut self.scratch,
+                // Live walls must never feed the calibration during
+                // replay — they are machine-dependent. Recorded wall
+                // events (handled above) are the only feedback source.
+                wall: None,
+                recorder: None,
+                threads: self.threads,
+            }),
+        );
+    }
+
+    /// The serving metrics accumulated so far (includes
+    /// non-deterministic timing fields — the report deliberately
+    /// omits them).
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    /// The wall feedback recorded `wall` events have fed.
+    pub fn wall_feedback(&self) -> &WallFeedback {
+        &self.wall
+    }
+}
+
+/// One replayed job's deterministic outputs, in submission order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayJob {
+    /// The resolved concrete mode (or the submitted one for a job
+    /// that failed before resolution).
+    pub mode: Mode,
+    pub cycles: u64,
+    pub tflops: f64,
+    pub propagation_steps: usize,
+    pub plan_cache_hit: bool,
+    pub estimated_cycles: Option<u64>,
+    /// The serving-side error message, for jobs that failed.
+    pub error: Option<String>,
+}
+
+impl ReplayJob {
+    fn from_result(result: Result<JobResult>) -> Self {
+        match result {
+            Ok(r) => Self {
+                mode: r.spec.mode,
+                cycles: r.cycles,
+                tflops: r.tflops,
+                propagation_steps: r.propagation_steps,
+                plan_cache_hit: r.plan_cache_hit,
+                estimated_cycles: r.estimated_cycles,
+                error: None,
+            },
+            Err(e) => Self {
+                mode: Mode::Auto,
+                cycles: 0,
+                tflops: 0.0,
+                propagation_steps: 0,
+                plan_cache_hit: false,
+                estimated_cycles: None,
+                error: Some(e.to_string()),
+            },
+        }
+    }
+
+    fn to_json_line(&self) -> String {
+        format!(
+            "{{\"mode\":\"{}\",\"cycles\":{},\"tflops\":{},\"propagation_steps\":{},\
+             \"plan_cache_hit\":{},\"estimated_cycles\":{},\"error\":{}}}",
+            self.mode,
+            self.cycles,
+            fmt_number(self.tflops),
+            self.propagation_steps,
+            self.plan_cache_hit,
+            match self.estimated_cycles {
+                Some(c) => c.to_string(),
+                None => "null".to_string(),
+            },
+            match &self.error {
+                Some(e) => format!("\"{}\"", escape_str(e)),
+                None => "null".to_string(),
+            },
+        )
+    }
+}
+
+/// The deterministic output of one replay run: metric counters plus
+/// per-job results. Two replays of one trace under one config must
+/// serialize byte-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayReport {
+    pub version: u64,
+    pub counters: Vec<(String, u64)>,
+    pub jobs: Vec<ReplayJob>,
+}
+
+impl ReplayReport {
+    /// Byte-stable serialization (fixed field order, [`fmt_number`]
+    /// floats).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"schema\": {},\n", self.version));
+        out.push_str("  \"counters\": {");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n    \"{}\": {}", escape_str(k), v));
+        }
+        out.push_str("\n  },\n  \"jobs\": [");
+        for (i, job) in self.jobs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    ");
+            out.push_str(&job.to_json_line());
+        }
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    pub fn parse(text: &str) -> Result<ReplayReport> {
+        let j = Json::parse(text)?;
+        let version = j
+            .get("schema")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| Error::Runtime("replay report: missing schema".into()))?
+            as u64;
+        if version != REPLAY_VERSION {
+            return Err(Error::Runtime(format!(
+                "replay report schema {version} unsupported (this build reads schema \
+                 {REPLAY_VERSION})"
+            )));
+        }
+        let counters = j
+            .get("counters")
+            .and_then(Json::as_object)
+            .ok_or_else(|| Error::Runtime("replay report: missing counters object".into()))?
+            .iter()
+            .map(|(k, v)| match v.as_f64() {
+                Some(n) => Ok((k.clone(), n as u64)),
+                None => Err(Error::Runtime(format!("replay report: bad counter {k:?}"))),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let jobs = j
+            .get("jobs")
+            .and_then(Json::as_array)
+            .ok_or_else(|| Error::Runtime("replay report: missing jobs array".into()))?
+            .iter()
+            .enumerate()
+            .map(|(i, o)| {
+                let num = |name: &str| {
+                    o.get(name).and_then(Json::as_f64).ok_or_else(|| {
+                        Error::Runtime(format!("replay report: job {i} missing {name:?}"))
+                    })
+                };
+                Ok(ReplayJob {
+                    mode: o
+                        .get("mode")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| {
+                            Error::Runtime(format!("replay report: job {i} missing \"mode\""))
+                        })?
+                        .parse()?,
+                    cycles: num("cycles")? as u64,
+                    tflops: num("tflops")?,
+                    propagation_steps: num("propagation_steps")? as usize,
+                    plan_cache_hit: matches!(o.get("plan_cache_hit"), Some(Json::Bool(true))),
+                    estimated_cycles: match o.get("estimated_cycles") {
+                        Some(Json::Number(n)) => Some(*n as u64),
+                        _ => None,
+                    },
+                    error: o.get("error").and_then(Json::as_str).map(str::to_string),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ReplayReport { version, counters, jobs })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ReplayReport> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::Runtime(format!("replay report {}: {e}", path.as_ref().display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path.as_ref(), self.to_json()).map_err(|e| {
+            Error::Runtime(format!("replay report {}: {e}", path.as_ref().display()))
+        })
+    }
+
+    /// Human-readable differences against `other` (empty when the
+    /// reports agree). This is what `repro trace diff` prints and
+    /// exits non-zero on.
+    pub fn diff(&self, other: &ReplayReport) -> Vec<String> {
+        let mut out = Vec::new();
+        if self.version != other.version {
+            out.push(format!("schema: {} != {}", self.version, other.version));
+        }
+        let theirs: std::collections::BTreeMap<&str, u64> =
+            other.counters.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        for (k, v) in &self.counters {
+            match theirs.get(k.as_str()) {
+                Some(w) if w == v => {}
+                Some(w) => out.push(format!("counters.{k}: {v} != {w}")),
+                None => out.push(format!("counters.{k}: {v} != (absent)")),
+            }
+        }
+        let mine: std::collections::BTreeMap<&str, u64> =
+            self.counters.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        for (k, w) in &other.counters {
+            if !mine.contains_key(k.as_str()) {
+                out.push(format!("counters.{k}: (absent) != {w}"));
+            }
+        }
+        if self.jobs.len() != other.jobs.len() {
+            out.push(format!("jobs: {} != {} entries", self.jobs.len(), other.jobs.len()));
+        }
+        for (i, (a, b)) in self.jobs.iter().zip(&other.jobs).enumerate() {
+            if a != b {
+                out.push(format!(
+                    "jobs[{i}]: {} != {}",
+                    a.to_json_line(),
+                    b.to_json_line()
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::JobSpec;
+    use crate::DType;
+
+    fn spec(mode: Mode, n: usize, seed: u64) -> JobSpec {
+        JobSpec {
+            mode,
+            m: 512,
+            k: 512,
+            n,
+            b: 16,
+            density: 1.0 / 8.0,
+            dtype: DType::Fp16,
+            pattern_seed: seed,
+        }
+    }
+
+    fn small_trace() -> Trace {
+        let mut events = Vec::new();
+        for (i, mode) in
+            [Mode::Dense, Mode::Static, Mode::Dynamic, Mode::Auto, Mode::Auto].iter().enumerate()
+        {
+            events.push(TraceEvent::Job {
+                at_ns: i as u64 * 1000,
+                spec: spec(*mode, 64, (i % 2) as u64),
+            });
+        }
+        Trace::new(events)
+    }
+
+    fn session() -> ReplaySession {
+        ReplaySession::new(&Config::default(), IpuSpec::default(), CostModel::default(), 1)
+    }
+
+    #[test]
+    fn two_replays_are_byte_identical() {
+        let trace = small_trace();
+        let a = session().replay(&trace).expect("first replay");
+        let b = session().replay(&trace).expect("second replay");
+        assert_eq!(a.to_json(), b.to_json(), "replay must be bit-reproducible");
+        assert!(a.diff(&b).is_empty());
+        assert_eq!(a.jobs.len(), 5);
+        assert!(a.jobs.iter().all(|j| j.error.is_none()), "{:?}", a.jobs);
+        assert!(a.jobs.iter().all(|j| j.mode != Mode::Auto), "auto must resolve");
+        assert!(a.jobs.iter().all(|j| j.cycles > 0));
+        let completed =
+            a.counters.iter().find(|(k, _)| k == "jobs_completed").expect("counter present").1;
+        assert_eq!(completed, 5);
+    }
+
+    #[test]
+    fn report_round_trips_through_parser() {
+        let report = session().replay(&small_trace()).expect("replay");
+        let parsed = ReplayReport::parse(&report.to_json()).expect("parses");
+        assert_eq!(parsed, report);
+        assert!(parsed.diff(&report).is_empty());
+    }
+
+    #[test]
+    fn diff_surfaces_counter_and_job_divergence() {
+        let a = session().replay(&small_trace()).expect("replay");
+        let mut b = a.clone();
+        b.counters[0].1 += 1;
+        b.jobs[2].cycles += 7;
+        let diffs = a.diff(&b);
+        assert_eq!(diffs.len(), 2, "{diffs:?}");
+        assert!(diffs[0].starts_with("counters."), "{diffs:?}");
+        assert!(diffs[1].starts_with("jobs[2]"), "{diffs:?}");
+    }
+
+    #[test]
+    fn recorded_walls_feed_the_feedback_not_live_ones() {
+        use crate::engine::WALL_WARMUP_OBSERVATIONS;
+        // Numeric replay with only job events: the arm executes
+        // kernels but its wall sink is disconnected, so the feedback
+        // stays empty.
+        let cfg = Config { numeric: true, ..Config::default() };
+        let mut s = ReplaySession::new(&cfg, IpuSpec::default(), CostModel::default(), 1);
+        let report = s.replay(&small_trace()).expect("replay");
+        assert_eq!(s.wall_feedback().scale_samples(), 0, "no live walls under replay");
+        let kernels =
+            report.counters.iter().find(|(k, _)| k == "kernel_execs").expect("counter").1;
+        assert!(kernels > 0, "numeric arm did execute");
+        // Wall events, in contrast, do feed it — enough to clear the
+        // units-layer warm-up.
+        let mut events = Vec::new();
+        let rounds = WALL_WARMUP_OBSERVATIONS + 4;
+        for i in 0..rounds {
+            events.push(TraceEvent::Wall {
+                at_ns: i * 10,
+                spec: spec(Mode::Static, 64, 0),
+                estimated: 1000,
+                wall_ns: 2000,
+            });
+        }
+        let mut s2 = ReplaySession::new(&cfg, IpuSpec::default(), CostModel::default(), 1);
+        let _ = s2.replay(&Trace::new(events)).expect("replay");
+        assert_eq!(s2.wall_feedback().scale_samples(), rounds);
+        assert!(s2.wall_feedback().observations() > 0, "recorded walls reach the calibration");
+    }
+
+    #[test]
+    fn failed_jobs_land_in_the_report_not_a_hang() {
+        let mut bad = spec(Mode::Dynamic, 64, 0);
+        bad.m = 100; // not a multiple of b: the planner errors
+        let trace = Trace::new(vec![TraceEvent::Job { at_ns: 0, spec: bad }]);
+        let report = session().replay(&trace).expect("replay completes");
+        assert_eq!(report.jobs.len(), 1);
+        assert!(report.jobs[0].error.is_some());
+        let failed =
+            report.counters.iter().find(|(k, _)| k == "jobs_failed").expect("counter").1;
+        assert_eq!(failed, 1);
+    }
+}

@@ -33,9 +33,27 @@ impl std::fmt::Display for Mode {
     }
 }
 
+impl std::str::FromStr for Mode {
+    type Err = crate::Error;
+
+    /// Inverse of `Display` — the spelling used by the CLI and the
+    /// trace file format (`bench_harness::trace`).
+    fn from_str(s: &str) -> crate::Result<Mode> {
+        match s {
+            "dense" => Ok(Mode::Dense),
+            "static" => Ok(Mode::Static),
+            "dynamic" => Ok(Mode::Dynamic),
+            "auto" => Ok(Mode::Auto),
+            other => Err(crate::Error::Runtime(format!(
+                "unknown mode {other:?} (expected dense|static|dynamic|auto)"
+            ))),
+        }
+    }
+}
+
 /// One SpMM job: the problem specification the coordinator plans,
 /// simulates and (optionally) numerically executes.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
     pub mode: Mode,
     pub m: usize,
@@ -280,6 +298,15 @@ mod tests {
         a.dtype = b.dtype;
         a.pattern_seed = 6;
         assert_ne!(a.prepared_key(), b.prepared_key(), "the realized pattern matters");
+    }
+
+    #[test]
+    fn mode_parse_is_display_inverse() {
+        for mode in [Mode::Dense, Mode::Static, Mode::Dynamic, Mode::Auto] {
+            assert_eq!(mode.to_string().parse::<Mode>().unwrap(), mode);
+        }
+        assert!("Dense".parse::<Mode>().is_err(), "spelling is exact, not case-folded");
+        assert!("".parse::<Mode>().is_err());
     }
 
     #[test]

@@ -609,6 +609,52 @@ mod tests {
     }
 
     #[test]
+    fn zero_duration_walls_never_touch_the_scale() {
+        use std::time::Duration;
+        // A timer glitch (or a kernel cheap beyond the clock's
+        // resolution) reports a zero wall. It must be dropped before
+        // the scale EWMA: a 0-ns sample would crater ns_per_cycle and
+        // every subsequent normalization would divide by a poisoned
+        // scale.
+        let wf = WallFeedback::default();
+        let j = job(1024, 256, 1.0 / 16.0);
+        for _ in 0..4 {
+            assert!(!wf.observe_wall(BackendKind::Dense, &j, 1_000, Duration::ZERO));
+        }
+        assert_eq!(wf.scale_samples(), 0, "zero walls must not advance the warm-up");
+        assert_eq!(wf.ns_per_cycle(), 0.0);
+        assert_eq!(wf.observations(), 0);
+        // Same for a zero estimate — there is no cycle axis to
+        // normalize against.
+        assert!(!wf.observe_wall(BackendKind::Dense, &j, 0, Duration::from_micros(1)));
+        assert_eq!(wf.scale_samples(), 0);
+        // A sane observation afterwards seeds the scale exactly to its
+        // own ratio — no trace of the rejected samples.
+        assert!(!wf.observe_wall(BackendKind::Dense, &j, 1_000, Duration::from_micros(2)));
+        assert_eq!(wf.scale_samples(), 1);
+        assert!((wf.ns_per_cycle() - 2.0).abs() < 1e-9, "first sample seeds, not averages");
+    }
+
+    #[test]
+    fn warmup_gate_opens_exactly_after_the_threshold() {
+        use std::time::Duration;
+        let wf = WallFeedback::default();
+        let j = job(1024, 256, 1.0 / 16.0);
+        // Samples 1..=WALL_WARMUP_OBSERVATIONS are gated — including
+        // the boundary sample itself (`samples <= WARMUP` rejects it).
+        for i in 1..=WALL_WARMUP_OBSERVATIONS {
+            let fed = wf.observe_wall(BackendKind::Dense, &j, 1_000, Duration::from_micros(1));
+            assert!(!fed, "sample {i} is still warm-up");
+            assert_eq!(wf.scale_samples(), i, "gated samples still train the scale");
+        }
+        assert_eq!(wf.observations(), 0);
+        // The very next sample is the first to feed through.
+        assert!(wf.observe_wall(BackendKind::Dense, &j, 1_000, Duration::from_micros(1)));
+        assert_eq!(wf.scale_samples(), WALL_WARMUP_OBSERVATIONS + 1);
+        assert_eq!(wf.observations(), 1);
+    }
+
+    #[test]
     fn wall_fed_calibration_flips_a_skewed_argmin() {
         use std::time::Duration;
         // The acceptance property: measured wall times, fed through

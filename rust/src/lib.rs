@@ -107,6 +107,20 @@ impl std::fmt::Display for DType {
     }
 }
 
+impl std::str::FromStr for DType {
+    type Err = Error;
+
+    /// Inverse of `Display` — the spelling used by the trace file
+    /// format (`bench_harness::trace`).
+    fn from_str(s: &str) -> Result<DType> {
+        match s {
+            "fp16" => Ok(DType::Fp16),
+            "fp32" => Ok(DType::Fp32),
+            other => Err(Error::Runtime(format!("unknown dtype {other:?} (expected fp16|fp32)"))),
+        }
+    }
+}
+
 /// Useful FLOPs of an SpMM counting non-zeros only (paper §3):
 /// `2 * m * k * n * d` — independent of block size.
 pub fn spmm_flops(m: usize, k: usize, n: usize, density: f64) -> f64 {

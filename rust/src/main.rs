@@ -6,7 +6,12 @@
 //! * `repro run     --artifact <name>` — execute an AOT artifact numerically and verify vs the oracle
 //! * `repro bench   <table3|fig2|fig3a|fig3b|fig4a|fig4b|fig4c|fig7|auto|ell|conclusions|all>`
 //! * `repro serve   [--jobs N] [--workers W]` — synthetic serving workload through the coordinator
+//! * `repro trace   <record|replay|diff>` — deterministic workload record/replay (DESIGN.md §7)
 //! * `repro list    ` — list AOT artifacts
+//!
+//! Flags are strict: an unknown `--flag` (a typo like `--theads`) is a
+//! usage error listing the flags the subcommand accepts, never a
+//! silent no-op.
 //!
 //! The binary is self-contained (the committed artifacts under
 //! `rust/artifacts` include the manifest the runtime needs); Python
@@ -39,32 +44,59 @@ fn usage() -> ! {
          \x20        (both dtypes), machine-readable points to FILE (default BENCH_ci.json)\n\
          \x20 bench  gate [--baseline FILE] [--current FILE] [--tolerance F]\n\
          \x20        fail on >F cycle-estimate regression vs the committed baseline (default 0.10)\n\
-         \x20 serve  [--jobs N] [--workers W] [--numeric] [--wall-calibrated]\n\
+         \x20 serve  [--jobs N] [--workers W] [--numeric] [--wall-calibrated] [--record-trace FILE]\n\
          \x20        synthetic serving workload; --numeric executes every batch's kernel in\n\
          \x20        its declared dtype and reports measured wall time; --wall-calibrated\n\
-         \x20        resolves auto batches against the wall-fed calibration\n\
+         \x20        resolves auto batches against the wall-fed calibration; --record-trace\n\
+         \x20        writes the job stream as a versioned JSONL trace at shutdown\n\
+         \x20 trace  record [--out FILE] [--jobs N] [--workers W] [--numeric] [--wall-calibrated]\n\
+         \x20        serve the synthetic workload with recording on (default trace.jsonl)\n\
+         \x20 trace  replay [--trace FILE] [--out FILE] [--threads N] [--numeric] [--wall-calibrated]\n\
+         \x20        deterministically re-execute a trace; writes the replay report\n\
+         \x20        (default REPLAY.json) — two replays of one trace are byte-identical\n\
+         \x20 trace  diff <a.json> <b.json>     compare two replay reports; non-zero on divergence\n\
          \x20 list                              list AOT artifacts"
     );
     std::process::exit(2);
 }
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
-    let mut map = HashMap::new();
+/// Parse `--flag [value]` pairs, rejecting any flag not in `allowed`
+/// — a typo (`--theads 4`) must be a usage error naming the accepted
+/// flags, never a silently ignored token. Non-flag tokens are
+/// returned as positionals.
+fn parse_flags_strict(
+    cmd: &str,
+    args: &[String],
+    allowed: &[&str],
+) -> popsparse::Result<(HashMap<String, String>, Vec<String>)> {
+    let mut flags = HashMap::new();
+    let mut positionals = Vec::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
+            if !allowed.contains(&key) {
+                let hint = if allowed.is_empty() {
+                    "no flags".to_string()
+                } else {
+                    allowed.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(" ")
+                };
+                return Err(popsparse::Error::Runtime(format!(
+                    "unknown flag --{key} for `repro {cmd}` (accepted: {hint})"
+                )));
+            }
             if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                map.insert(key.to_string(), args[i + 1].clone());
+                flags.insert(key.to_string(), args[i + 1].clone());
                 i += 2;
             } else {
-                map.insert(key.to_string(), "true".to_string());
+                flags.insert(key.to_string(), "true".to_string());
                 i += 1;
             }
         } else {
+            positionals.push(args[i].clone());
             i += 1;
         }
     }
-    map
+    Ok((flags, positionals))
 }
 
 fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
@@ -80,6 +112,7 @@ fn main() {
         "run" => cmd_run(rest),
         "bench" => cmd_bench(rest),
         "serve" => cmd_serve(rest),
+        "trace" => cmd_trace(rest),
         "list" => cmd_list(),
         _ => usage(),
     };
@@ -90,7 +123,8 @@ fn main() {
 }
 
 fn cmd_plan(args: &[String]) -> popsparse::Result<()> {
-    let flags = parse_flags(args);
+    let (flags, _) =
+        parse_flags_strict("plan", args, &["mode", "m", "k", "n", "b", "density", "fp32"])?;
     let spec = IpuSpec::default();
     let cm = CostModel::default();
     let m = flag_usize(&flags, "m", 4096);
@@ -173,7 +207,7 @@ fn cmd_plan(args: &[String]) -> popsparse::Result<()> {
 }
 
 fn cmd_run(args: &[String]) -> popsparse::Result<()> {
-    let flags = parse_flags(args);
+    let (flags, _) = parse_flags_strict("run", args, &["artifact"])?;
     let name = flags.get("artifact").map(String::as_str).unwrap_or("spmm_quickstart");
     let rt = Runtime::open_default()?;
     let meta = rt.manifest().get(name)?.clone();
@@ -218,13 +252,35 @@ fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
     // `repro bench --calibrated auto` and `repro bench auto
     // --calibrated` both work (flags alone default to `all`).
     let which = args.iter().find(|a| !a.starts_with("--")).map(String::as_str).unwrap_or("all");
-    let flags = parse_flags(args);
+    const EXPERIMENTS: &[&str] = &[
+        "table3", "fig2", "fig3a", "fig3b", "fig4a", "fig4b", "fig4c", "fig7", "auto", "churn",
+        "ell", "conclusions", "all",
+    ];
     match which {
-        "ci" => return cmd_bench_ci(&flags),
-        "gate" => return cmd_bench_gate(&flags),
-        "wall" => return cmd_bench_wall(&flags),
+        "ci" => {
+            let (flags, _) = parse_flags_strict("bench ci", args, &["out", "seed-baseline"])?;
+            return cmd_bench_ci(&flags);
+        }
+        "gate" => {
+            let (flags, _) =
+                parse_flags_strict("bench gate", args, &["baseline", "current", "tolerance"])?;
+            return cmd_bench_gate(&flags);
+        }
+        "wall" => {
+            let (flags, _) = parse_flags_strict("bench wall", args, &["smoke", "threads", "out"])?;
+            return cmd_bench_wall(&flags);
+        }
+        // A misspelled experiment name must be an error, not a run
+        // that silently produces nothing.
+        w if !EXPERIMENTS.contains(&w) => {
+            return Err(popsparse::Error::Runtime(format!(
+                "unknown bench experiment '{w}' (expected one of: {} ci gate wall)",
+                EXPERIMENTS.join(" ")
+            )));
+        }
         _ => {}
     }
+    let (flags, _) = parse_flags_strict("bench", args, &["calibrated"])?;
     let env = Env::default();
     let out_dir = std::path::Path::new("target/bench_results");
     let run = |name: &str, tables: Vec<popsparse::bench_harness::Table>| -> popsparse::Result<()> {
@@ -408,25 +464,15 @@ fn cmd_bench_gate(flags: &HashMap<String, String>) -> popsparse::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
-    let flags = parse_flags(args);
-    let jobs = flag_usize(&flags, "jobs", 200);
-    let workers = flag_usize(&flags, "workers", 4);
-    let numeric = flags.contains_key("numeric");
-    let wall_calibrated = flags.contains_key("wall-calibrated");
-    let coordinator = Coordinator::new(
-        Config { workers, numeric, wall_calibrated, ..Config::default() },
-        IpuSpec::default(),
-        CostModel::default(),
-    );
-    println!(
-        "serving {jobs} synthetic SpMM jobs on {workers} workers{}{}...",
-        if numeric { " (numeric kernels on)" } else { "" },
-        if wall_calibrated { " (wall-calibrated dispatch)" } else { "" }
-    );
+/// The deterministic synthetic workload `serve` and `trace record`
+/// share: round-robin modes, mixed precision (2/3 FP16 — the paper's
+/// headline precision — exercising the dtype-keyed prepared-operand
+/// cache and both kernel instantiations), pseudo-random batch widths
+/// from a fixed seed. A pure function of the job count, so a recorded
+/// trace of it is reproducible by construction.
+fn synthetic_jobs(jobs: usize) -> Vec<JobSpec> {
     let mut rng = popsparse::util::Rng::seed_from_u64(1);
-    let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..jobs)
+    (0..jobs)
         .map(|i| {
             let mode = match i % 4 {
                 0 => Mode::Dense,
@@ -434,11 +480,8 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
                 2 => Mode::Dynamic,
                 _ => Mode::Auto,
             };
-            // Mixed-precision traffic: 2/3 FP16 (the paper's headline
-            // precision), 1/3 FP32 — exercising the dtype-keyed
-            // prepared-operand cache and both kernel instantiations.
             let dtype = if i % 3 == 2 { DType::Fp32 } else { DType::Fp16 };
-            coordinator.submit(JobSpec {
+            JobSpec {
                 mode,
                 m: 1024,
                 k: 1024,
@@ -447,9 +490,35 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
                 density: 1.0 / 16.0,
                 dtype,
                 pattern_seed: (i % 5) as u64,
-            })
+            }
         })
-        .collect();
+        .collect()
+}
+
+fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
+    let (flags, _) = parse_flags_strict(
+        "serve",
+        args,
+        &["jobs", "workers", "numeric", "wall-calibrated", "record-trace"],
+    )?;
+    let jobs = flag_usize(&flags, "jobs", 200);
+    let workers = flag_usize(&flags, "workers", 4);
+    let numeric = flags.contains_key("numeric");
+    let wall_calibrated = flags.contains_key("wall-calibrated");
+    let trace_out = flags.get("record-trace").cloned();
+    let record_trace = trace_out.as_ref().map(std::path::PathBuf::from);
+    let coordinator = Coordinator::new(
+        Config { workers, numeric, wall_calibrated, record_trace, ..Config::default() },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    println!(
+        "serving {jobs} synthetic SpMM jobs on {workers} workers{}{}...",
+        if numeric { " (numeric kernels on)" } else { "" },
+        if wall_calibrated { " (wall-calibrated dispatch)" } else { "" }
+    );
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = synthetic_jobs(jobs).into_iter().map(|j| coordinator.submit(j)).collect();
     let mut ok = 0usize;
     for rx in rxs {
         match rx.recv() {
@@ -541,8 +610,138 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
         "latency p50 {:?} p99 {:?} max {:?}; simulated device cycles {}",
         snap.p50, snap.p99, snap.max, snap.simulated_cycles
     );
+    let trace_events = coordinator.trace_recorder().map(popsparse::bench_harness::Recorder::len);
     coordinator.shutdown();
+    if let (Some(out), Some(events)) = (trace_out, trace_events) {
+        println!("trace: {events} events recorded to {out}");
+    }
     Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> popsparse::Result<()> {
+    let Some(sub) = args.first() else {
+        return Err(popsparse::Error::Runtime(
+            "usage: repro trace <record|replay|diff> ...".to_string(),
+        ));
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "record" => cmd_trace_record(rest),
+        "replay" => cmd_trace_replay(rest),
+        "diff" => cmd_trace_diff(rest),
+        other => Err(popsparse::Error::Runtime(format!(
+            "unknown trace subcommand '{other}' (expected record|replay|diff)"
+        ))),
+    }
+}
+
+/// `repro trace record`: drive the synthetic serving workload through
+/// a full coordinator with trace recording on. The trace (submitted
+/// job stream + measured kernel walls, when `--numeric`) is written
+/// at shutdown as versioned JSONL.
+fn cmd_trace_record(args: &[String]) -> popsparse::Result<()> {
+    let (flags, _) = parse_flags_strict(
+        "trace record",
+        args,
+        &["out", "jobs", "workers", "numeric", "wall-calibrated"],
+    )?;
+    let out = flags.get("out").map(String::as_str).unwrap_or("trace.jsonl");
+    let jobs = flag_usize(&flags, "jobs", 200);
+    let workers = flag_usize(&flags, "workers", 4);
+    let numeric = flags.contains_key("numeric");
+    let wall_calibrated = flags.contains_key("wall-calibrated");
+    let coordinator = Coordinator::new(
+        Config {
+            workers,
+            numeric,
+            wall_calibrated,
+            record_trace: Some(std::path::PathBuf::from(out)),
+            ..Config::default()
+        },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    println!("recording {jobs} synthetic SpMM jobs to {out}...");
+    let rxs: Vec<_> = synthetic_jobs(jobs).into_iter().map(|j| coordinator.submit(j)).collect();
+    let mut ok = 0usize;
+    for rx in rxs {
+        if matches!(rx.recv(), Ok(Ok(_))) {
+            ok += 1;
+        }
+    }
+    let events = coordinator.trace_recorder().map(popsparse::bench_harness::Recorder::len);
+    coordinator.shutdown();
+    println!("served {ok}/{jobs} jobs; wrote {} trace events to {out}", events.unwrap_or(0));
+    Ok(())
+}
+
+/// `repro trace replay`: deterministically re-execute a recorded
+/// trace through a serial [`ReplaySession`] and write the replay
+/// report. Replaying the same trace through the same config twice
+/// produces byte-identical reports — `trace diff` gates on that.
+fn cmd_trace_replay(args: &[String]) -> popsparse::Result<()> {
+    use popsparse::bench_harness::Trace;
+    use popsparse::coordinator::ReplaySession;
+    let (flags, positionals) = parse_flags_strict(
+        "trace replay",
+        args,
+        &["trace", "out", "threads", "numeric", "wall-calibrated"],
+    )?;
+    let trace_path = flags
+        .get("trace")
+        .map(String::as_str)
+        .or_else(|| positionals.first().map(String::as_str))
+        .unwrap_or("trace.jsonl");
+    let out = flags.get("out").map(String::as_str).unwrap_or("REPLAY.json");
+    let threads = flag_usize(&flags, "threads", 1);
+    let config = Config {
+        numeric: flags.contains_key("numeric"),
+        wall_calibrated: flags.contains_key("wall-calibrated"),
+        ..Config::default()
+    };
+    let trace = Trace::load(trace_path)?;
+    let mut session =
+        ReplaySession::new(&config, IpuSpec::default(), CostModel::default(), threads);
+    let report = session.replay(&trace)?;
+    report.write(out)?;
+    let completed = report
+        .counters
+        .iter()
+        .find(|(k, _)| k == "jobs_completed")
+        .map(|(_, v)| *v)
+        .unwrap_or(0);
+    println!(
+        "replayed {} events from {trace_path} ({} jobs, {completed} completed) -> {out}",
+        trace.events.len(),
+        report.jobs.len()
+    );
+    Ok(())
+}
+
+/// `repro trace diff`: compare two replay reports field by field;
+/// exit non-zero (listing every divergence) if they differ at all.
+fn cmd_trace_diff(args: &[String]) -> popsparse::Result<()> {
+    use popsparse::coordinator::ReplayReport;
+    let (_, positionals) = parse_flags_strict("trace diff", args, &[])?;
+    let [a, b] = positionals.as_slice() else {
+        return Err(popsparse::Error::Runtime(
+            "usage: repro trace diff <replay_a.json> <replay_b.json>".to_string(),
+        ));
+    };
+    let ra = ReplayReport::load(a)?;
+    let rb = ReplayReport::load(b)?;
+    let diffs = ra.diff(&rb);
+    if diffs.is_empty() {
+        println!("replays agree: {a} == {b} ({} jobs)", ra.jobs.len());
+        return Ok(());
+    }
+    for d in &diffs {
+        println!("DIFF {d}");
+    }
+    Err(popsparse::Error::Runtime(format!(
+        "replays diverge: {} difference(s) between {a} and {b}",
+        diffs.len()
+    )))
 }
 
 fn cmd_list() -> popsparse::Result<()> {
@@ -555,4 +754,55 @@ fn cmd_list() -> popsparse::Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_flags_are_a_usage_error_not_ignored() {
+        // The motivating typo: `--theads 4` must not silently run
+        // with the default thread count.
+        let args: Vec<String> = vec!["--theads".to_string(), "4".to_string()];
+        let err = parse_flags_strict("bench wall", &args, &["smoke", "threads", "out"])
+            .expect_err("a typo'd flag must be rejected");
+        let msg = format!("{err:?}");
+        assert!(msg.contains("--theads"), "names the offending flag: {msg}");
+        assert!(msg.contains("--threads"), "lists the accepted flags: {msg}");
+        assert!(msg.contains("bench wall"), "names the subcommand: {msg}");
+    }
+
+    #[test]
+    fn known_flags_and_positionals_parse() {
+        let args: Vec<String> = vec![
+            "record".to_string(),
+            "--jobs".to_string(),
+            "60".to_string(),
+            "--numeric".to_string(),
+        ];
+        let (flags, positionals) =
+            parse_flags_strict("trace", &args, &["jobs", "numeric"]).expect("all flags allowed");
+        assert_eq!(flag_usize(&flags, "jobs", 0), 60);
+        assert!(flags.contains_key("numeric"), "valueless flag parses as boolean");
+        assert_eq!(positionals, vec!["record".to_string()]);
+    }
+
+    #[test]
+    fn flagless_commands_accept_no_flags() {
+        let args: Vec<String> = vec!["--tolerance".to_string(), "0.5".to_string()];
+        let err = parse_flags_strict("trace diff", &args, &[]).expect_err("rejects any flag");
+        assert!(format!("{err:?}").contains("no flags"));
+    }
+
+    #[test]
+    fn synthetic_workload_is_deterministic_and_mixed() {
+        let a = synthetic_jobs(40);
+        let b = synthetic_jobs(40);
+        assert_eq!(a, b, "the stream is a fixed-seed function of the job count");
+        assert!(a.iter().any(|j| j.mode == Mode::Auto));
+        assert!(a.iter().any(|j| j.mode == Mode::Dense));
+        assert!(a.iter().any(|j| j.dtype == DType::Fp32));
+        assert!(a.iter().any(|j| j.dtype == DType::Fp16));
+    }
 }

@@ -1,12 +1,54 @@
-//! Minimal JSON parser for the artifact manifest.
+//! Minimal JSON parser and emission helpers.
 //!
 //! The build is fully offline (no serde); `manifest.json` produced by
 //! `python/compile/aot.py` is small and regular, so a compact
-//! recursive-descent parser is all the runtime needs.
+//! recursive-descent parser is all the runtime needs. The writing
+//! side ([`escape_str`], [`fmt_number`]) is shared by every emitter
+//! that must be byte-stable (`bench_harness::gate`, workload traces,
+//! replay reports): one escaping policy, one float format.
 
 use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
+
+/// Escape a string for embedding inside JSON double quotes.
+///
+/// Escapes `"` and `\`, the common whitespace controls as their short
+/// forms, and any other control character as `\u00XX` — so emitted
+/// documents always re-parse, whatever ends up in a key.
+pub fn escape_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format an `f64` as a JSON number token.
+///
+/// Integral values in the exactly-representable range print without a
+/// fractional part; everything else uses Rust's shortest round-trip
+/// `Display`. Non-finite values (NaN, ±inf) are **not representable**
+/// in JSON and serialize as `null` — an emitter must never produce a
+/// bare `NaN` token that no parser (including ours) would accept.
+pub fn fmt_number(v: f64) -> String {
+    if !v.is_finite() {
+        return "null".to_string();
+    }
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -267,5 +309,38 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("{}extra").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn escape_round_trips_through_parser() {
+        for s in ["plain", "quo\"te", "back\\slash", "new\nline", "tab\tbell\u{7}", "µ-unicode"] {
+            let doc = format!("{{\"k\": \"{}\"}}", escape_str(s));
+            let j = Json::parse(&doc).unwrap_or_else(|e| panic!("{doc}: {e:?}"));
+            assert_eq!(j.get("k").and_then(Json::as_str), Some(s));
+        }
+        // Control characters take the \u form, not raw bytes.
+        assert_eq!(escape_str("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn fmt_number_never_emits_bare_nan() {
+        assert_eq!(fmt_number(f64::NAN), "null");
+        assert_eq!(fmt_number(f64::INFINITY), "null");
+        assert_eq!(fmt_number(f64::NEG_INFINITY), "null");
+        // A document carrying a non-finite point must still parse.
+        let doc = format!("{{\"p\": {}}}", fmt_number(f64::NAN));
+        assert_eq!(Json::parse(&doc).unwrap().get("p"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn fmt_number_matches_gate_float_convention() {
+        // Integral values drop the fraction; others round-trip shortest.
+        assert_eq!(fmt_number(3.0), "3");
+        assert_eq!(fmt_number(-41.0), "-41");
+        assert_eq!(fmt_number(0.1), "0.1");
+        assert_eq!(fmt_number(1.25e16), "12500000000000000");
+        assert_eq!(fmt_number(123.456), "123.456");
+        let v: f64 = fmt_number(123.456).parse().unwrap();
+        assert_eq!(v, 123.456);
     }
 }

@@ -1,0 +1,187 @@
+//! Port parity for the declarative experiment runner: the four legacy
+//! bench subcommands now execute through `bench_harness::runner`, and
+//! the CI gate artifact (`bench ci` → `BENCH_ci.json`) must be
+//! byte-identical to the pre-refactor emission. The pre-refactor code
+//! is gone, so this file freezes its point-emission algorithm as a
+//! plain-loop reference built on the same public planner APIs — if
+//! the runner port ever reorders the sweep, drops a point, or changes
+//! a value, the byte comparison here fails before the CI diff does.
+
+use popsparse::bench_harness::sweep::{seed_for, Env};
+use popsparse::bench_harness::{experiments, BenchDoc};
+use popsparse::coordinator::{JobSpec, Mode};
+use popsparse::engine::{
+    device_backends, Backend, ChurnTracker, DenseBackend, DynamicBackend, EngineEnv, ModeSelector,
+    StaticBackend,
+};
+use popsparse::sparse::patterns;
+use popsparse::DType;
+
+/// Frozen reference: the pre-runner `bench ci` point emission —
+/// churn-sweep scores first, then the per-dtype crossover grid, in
+/// the exact legacy loop order.
+fn reference_bench_ci_points(env: &Env) -> Vec<(String, f64)> {
+    let mut points = reference_churn_points(env);
+    points.extend(reference_crossover_points(env));
+    points
+}
+
+fn reference_churn_points(env: &Env) -> Vec<(String, f64)> {
+    let (m, b, inv_d, n) = (4096usize, 16usize, 16usize, 2048usize);
+    let engine_env = EngineEnv::new(env.spec.clone(), env.cm.clone());
+    let selector = ModeSelector::with_env(EngineEnv::new(env.spec.clone(), env.cm.clone()));
+    let job = JobSpec {
+        mode: Mode::Auto,
+        m,
+        k: m,
+        n,
+        b,
+        density: 1.0 / inv_d as f64,
+        dtype: DType::Fp16,
+        pattern_seed: seed_for(m, b, inv_d),
+    };
+    let prefix = format!("churn/m{m}_d{inv_d}_b{b}");
+    let mut points = Vec::new();
+    let mut flip_percent: Option<u64> = None;
+    for fresh_in_8 in [0usize, 1, 2, 4, 6, 8] {
+        let tracker = ChurnTracker::default();
+        let mut next_fresh = 1_000_000u64;
+        for i in 0..64usize {
+            let mut arrival = job.clone();
+            arrival.pattern_seed = if i % 8 < fresh_in_8 {
+                next_fresh += 1;
+                next_fresh
+            } else {
+                (i % 3) as u64
+            };
+            tracker.observe(&arrival);
+        }
+        let st = StaticBackend.plan(&job, &engine_env).expect("static feasible").cycles;
+        let dy = DynamicBackend.plan(&job, &engine_env).expect("dynamic feasible").cycles;
+        let de = DenseBackend.plan(&job, &engine_env).expect("dense feasible").cycles;
+        let amortized = st + tracker.static_surcharge(&job, st);
+        let choice =
+            selector.choose_workload(&job, None, Some(&tracker)).expect("feasible").mode;
+        let percent = (fresh_in_8 * 100 / 8) as u64;
+        if flip_percent.is_none() && choice != Mode::Static {
+            flip_percent = Some(percent);
+        }
+        points.push((format!("{prefix}/fresh{percent}pct/static_exec"), st as f64));
+        points.push((format!("{prefix}/fresh{percent}pct/static_amortized"), amortized as f64));
+        points.push((format!("{prefix}/fresh{percent}pct/dynamic"), dy as f64));
+        points.push((format!("{prefix}/fresh{percent}pct/dense"), de as f64));
+    }
+    let flip = flip_percent.map(|p| p as f64).unwrap_or(200.0);
+    points.push((format!("{prefix}/flip_at_fresh_pct"), flip));
+    points.push((format!("{prefix}/flip_earliness_pct"), (100.0 - flip).max(0.0)));
+    points
+}
+
+fn reference_crossover_points(env: &Env) -> Vec<(String, f64)> {
+    let engine_env = EngineEnv::new(env.spec.clone(), env.cm.clone());
+    let mut points = Vec::new();
+    for dtype in [DType::Fp16, DType::Fp32] {
+        for m in [1024usize, 2048, 4096] {
+            for inv_d in [2usize, 4, 8, 16, 32] {
+                let job = JobSpec {
+                    mode: Mode::Auto,
+                    m,
+                    k: m,
+                    n: 2048,
+                    b: 16,
+                    density: 1.0 / inv_d as f64,
+                    dtype,
+                    pattern_seed: seed_for(m, 16, inv_d),
+                };
+                let prefix = format!("crossover/{dtype}/m{m}_d{inv_d}");
+                for backend in device_backends() {
+                    if let Ok(est) = backend.plan(&job, &engine_env) {
+                        points.push((format!("{prefix}/{}", est.kind), est.cycles as f64));
+                    }
+                }
+                if let Some(observed) = reference_skewed_dynamic_cycles(&job, env) {
+                    points.push((format!("{prefix}/dynamic_observed"), observed as f64));
+                }
+            }
+        }
+    }
+    points
+}
+
+/// The legacy observed-dynamic arm: execute the planned grid against
+/// a row-imbalanced pattern (alpha 1.5) at the same nnz.
+fn reference_skewed_dynamic_cycles(job: &JobSpec, env: &Env) -> Option<u64> {
+    let plan = popsparse::dynamic_::planner::plan(
+        job.m, job.k, job.n, job.b, job.density, job.dtype, &env.spec, &env.cm,
+    )
+    .ok()?;
+    let grid = (job.m / job.b.max(1)) * (job.k / job.b.max(1));
+    let nnz = ((grid as f64 * job.density).round() as usize).clamp(1, grid);
+    let mask = patterns::row_imbalanced(job.m, job.k, job.b, nnz, 1.5, job.pattern_seed).ok()?;
+    popsparse::dynamic_::execute_pattern(&plan, &mask, &env.spec, &env.cm)
+        .ok()
+        .map(|e| e.cost.total())
+}
+
+#[test]
+fn ported_bench_ci_points_match_the_frozen_reference_exactly() {
+    let env = Env::default();
+    let ported = experiments::bench_ci_points(&env);
+    let reference = reference_bench_ci_points(&env);
+    // Sequence parity (order + keys + values), then byte parity of
+    // the serialized artifact the CI diff compares.
+    assert_eq!(ported.len(), reference.len(), "point count changed in the port");
+    for (got, want) in ported.iter().zip(&reference) {
+        assert_eq!(got, want, "point diverged in the port");
+    }
+    assert_eq!(
+        BenchDoc::from_points(&ported).to_json(),
+        BenchDoc::from_points(&reference).to_json(),
+        "BENCH_ci.json must be byte-identical across the runner port"
+    );
+}
+
+#[test]
+fn churn_flip_point_survives_the_port_in_both_directions() {
+    let env = Env::default();
+    let ported = experiments::bench_ci_points(&env);
+    let get = |suffix: &str| {
+        ported
+            .iter()
+            .find(|(k, _)| k.ends_with(suffix))
+            .unwrap_or_else(|| panic!("missing point {suffix}"))
+            .1
+    };
+    let flip = get("/flip_at_fresh_pct");
+    let earliness = get("/flip_earliness_pct");
+    let reference_flip = reference_churn_points(&env)
+        .iter()
+        .find(|(k, _)| k.ends_with("/flip_at_fresh_pct"))
+        .expect("reference emits the flip point")
+        .1;
+    assert_eq!(flip, reference_flip, "the ported sweep flips at a different churn rate");
+    // Both gate directions stay armed: the raw flip percentage
+    // catches a later flip, the earliness mirror an earlier one.
+    assert_eq!(earliness, (100.0 - flip).max(0.0));
+    assert!(
+        (0.0..=100.0).contains(&flip) || flip == 200.0,
+        "flip must be a percentage or the never-flipped sentinel, got {flip}"
+    );
+}
+
+#[test]
+fn ported_experiments_are_deterministic_run_over_run() {
+    let env = Env::default();
+    let a = experiments::bench_ci_points(&env);
+    let b = experiments::bench_ci_points(&env);
+    assert_eq!(a, b, "bench ci points must be a pure function of the frozen cost model");
+}
+
+#[test]
+fn ported_tables_keep_their_legacy_shape() {
+    let env = Env::default();
+    // 6 churn levels; 3 m × 5 inv_d crossover grid.
+    assert_eq!(experiments::churn_sweep(&env).rows.len(), 6);
+    assert_eq!(experiments::auto_crossover(&env).rows.len(), 15);
+    assert_eq!(experiments::auto_crossover_calibrated(&env).rows.len(), 15);
+}

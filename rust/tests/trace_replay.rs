@@ -1,0 +1,157 @@
+//! Trace record/replay end-to-end (DESIGN.md §7): a live coordinator
+//! records its submitted workload to versioned JSONL; the serial
+//! replay layer re-executes it bit-reproducibly under any `Config`.
+//! These tests pin the determinism contract `repro trace diff` and
+//! the CI `trace` job gate on: same trace + same config → replays are
+//! byte-identical, across fresh sessions and kernel thread counts.
+
+use std::path::PathBuf;
+
+use popsparse::bench_harness::{Trace, TraceEvent, TRACE_VERSION};
+use popsparse::coordinator::{Config, Coordinator, JobSpec, Mode, ReplaySession};
+use popsparse::sim::chip::{CostModel, IpuSpec};
+use popsparse::DType;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("popsparse_trace_replay_{}_{name}", std::process::id()))
+}
+
+fn job(mode: Mode, n: usize, seed: u64) -> JobSpec {
+    JobSpec {
+        mode,
+        m: 512,
+        k: 512,
+        n,
+        b: 16,
+        density: 1.0 / 8.0,
+        dtype: if seed % 3 == 2 { DType::Fp32 } else { DType::Fp16 },
+        pattern_seed: seed,
+    }
+}
+
+/// A mixed-mode, mixed-precision workload, recorded through a real
+/// coordinator (numeric on, so `wall` events land too) and loaded
+/// back from disk.
+fn recorded_trace(name: &str) -> Trace {
+    let path = tmp(name);
+    let coordinator = Coordinator::new(
+        Config {
+            workers: 2,
+            numeric: true,
+            record_trace: Some(path.clone()),
+            ..Config::default()
+        },
+        IpuSpec::default(),
+        CostModel::default(),
+    );
+    let modes = [Mode::Dense, Mode::Static, Mode::Dynamic, Mode::Auto];
+    let rxs: Vec<_> = (0..12u64)
+        .map(|i| coordinator.submit(job(modes[i as usize % 4], 64, i % 3)))
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("worker alive").expect("job serves");
+    }
+    coordinator.shutdown();
+    let trace = Trace::load(&path).expect("shutdown wrote a parsable trace");
+    std::fs::remove_file(&path).ok();
+    trace
+}
+
+#[test]
+fn recorded_trace_round_trips_byte_stable() {
+    let trace = recorded_trace("round_trip.jsonl");
+    assert_eq!(trace.version, TRACE_VERSION);
+    assert_eq!(trace.jobs().count(), 12, "one job event per submission");
+    assert!(
+        trace.events.len() > 12,
+        "numeric serving records wall events too: {}",
+        trace.events.len()
+    );
+    let text = trace.to_jsonl();
+    let reparsed = Trace::parse(&text).expect("own output parses");
+    assert_eq!(reparsed, trace);
+    assert_eq!(reparsed.to_jsonl(), text, "parse → serialize is byte-identical");
+}
+
+#[test]
+fn unknown_trace_version_is_rejected() {
+    let path = tmp("bad_version.jsonl");
+    std::fs::write(&path, "{\"kind\":\"trace\",\"version\":99}\n").unwrap();
+    let err = Trace::load(&path).expect_err("future version must not parse");
+    std::fs::remove_file(&path).ok();
+    let msg = format!("{err:?}");
+    assert!(msg.contains("99") && msg.contains('1'), "names both versions: {msg}");
+}
+
+#[test]
+fn truncated_trace_is_an_error_with_a_line_number() {
+    let trace = Trace::new(vec![
+        TraceEvent::Job { at_ns: 0, spec: job(Mode::Auto, 64, 0) },
+        TraceEvent::Job { at_ns: 10, spec: job(Mode::Dense, 64, 1) },
+    ]);
+    let mut text = trace.to_jsonl();
+    text.truncate(text.len() - 15); // a crashed writer's torn tail
+    let path = tmp("truncated.jsonl");
+    std::fs::write(&path, &text).unwrap();
+    let err = Trace::load(&path).expect_err("torn line must not parse");
+    std::fs::remove_file(&path).ok();
+    assert!(format!("{err:?}").contains("line 3"), "error names the bad line: {err:?}");
+}
+
+#[test]
+fn same_trace_same_config_replays_bit_identically() {
+    let trace = recorded_trace("deterministic.jsonl");
+    for config in [
+        Config::default(),
+        Config { numeric: true, ..Config::default() },
+        Config { numeric: true, wall_calibrated: true, ..Config::default() },
+    ] {
+        let a = ReplaySession::new(&config, IpuSpec::default(), CostModel::default(), 1)
+            .replay(&trace)
+            .expect("first replay");
+        let b = ReplaySession::new(&config, IpuSpec::default(), CostModel::default(), 1)
+            .replay(&trace)
+            .expect("second replay");
+        assert_eq!(
+            a.to_json(),
+            b.to_json(),
+            "replay must be byte-identical (numeric={} wall_calibrated={})",
+            config.numeric,
+            config.wall_calibrated
+        );
+        assert!(a.diff(&b).is_empty());
+        assert_eq!(a.jobs.len(), 12);
+        assert!(a.jobs.iter().all(|j| j.error.is_none()), "{:?}", a.jobs);
+    }
+}
+
+#[test]
+fn replay_report_survives_disk_and_diffs_clean() {
+    let trace = recorded_trace("report_io.jsonl");
+    let config = Config::default();
+    let report = ReplaySession::new(&config, IpuSpec::default(), CostModel::default(), 1)
+        .replay(&trace)
+        .expect("replay");
+    let path = tmp("REPLAY.json");
+    report.write(&path).expect("report writes");
+    let loaded = popsparse::coordinator::ReplayReport::load(&path).expect("report loads");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, report);
+    assert!(loaded.diff(&report).is_empty());
+}
+
+#[test]
+fn kernel_thread_count_does_not_change_the_report() {
+    // `--threads` drives only the bit-exact row-panel parallelism of
+    // the numeric arm; every reported value is simulated-cycle
+    // derived, so 1 thread and N must agree byte for byte.
+    let trace = recorded_trace("threads.jsonl");
+    let config = Config { numeric: true, ..Config::default() };
+    let serial = ReplaySession::new(&config, IpuSpec::default(), CostModel::default(), 1)
+        .replay(&trace)
+        .expect("serial replay");
+    let parallel = ReplaySession::new(&config, IpuSpec::default(), CostModel::default(), 4)
+        .replay(&trace)
+        .expect("parallel replay");
+    assert_eq!(serial.to_json(), parallel.to_json(), "thread count leaked into the report");
+}
