@@ -130,8 +130,8 @@ fn main() -> popsparse::Result<()> {
     );
     println!(
         "calibration: {} buckets learned from {} observed executions",
-        coordinator.calibration().buckets(),
-        coordinator.calibration().observations()
+        coordinator.calibration_buckets(),
+        coordinator.calibration_observations()
     );
     coordinator.shutdown();
     println!("\nauto_mode OK");

@@ -18,6 +18,7 @@
 //! §7): a versioned JSONL job stream captured at coordinator ingress
 //! and replayed deterministically by `repro trace replay`.
 
+pub mod contention;
 pub mod experiments;
 pub mod gate;
 pub mod report;

@@ -28,7 +28,7 @@
 //! [`Config`]: crate::coordinator::Config
 
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::request::JobSpec;
@@ -69,8 +69,16 @@ impl Recorder {
         Self { t0: Instant::now(), events: Mutex::new(Vec::new()) }
     }
 
+    /// Poison-tolerant: each push appends one complete event, so a
+    /// panicked recording thread leaves a valid (possibly shorter)
+    /// trace — the surviving shards keep recording and the shutdown
+    /// snapshot still writes.
+    fn locked(&self) -> MutexGuard<'_, Vec<TraceEvent>> {
+        self.events.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     fn push(&self, event: TraceEvent) {
-        self.events.lock().expect("recorder poisoned: a recording thread panicked").push(event);
+        self.locked().push(event);
     }
 
     fn at_ns(&self) -> u64 {
@@ -94,7 +102,7 @@ impl Recorder {
     }
 
     pub fn len(&self) -> usize {
-        self.events.lock().expect("recorder poisoned: a recording thread panicked").len()
+        self.locked().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -103,14 +111,7 @@ impl Recorder {
 
     /// The events recorded so far, as a writable [`Trace`].
     pub fn snapshot(&self) -> Trace {
-        Trace {
-            version: TRACE_VERSION,
-            events: self
-                .events
-                .lock()
-                .expect("recorder poisoned: a recording thread panicked")
-                .clone(),
-        }
+        Trace { version: TRACE_VERSION, events: self.locked().clone() }
     }
 }
 

@@ -29,7 +29,7 @@
 //! depends on the hint being current.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::request::{JobSpec, Mode, PatternKey};
@@ -38,6 +38,13 @@ use crate::DType;
 
 /// Default capacity of the pattern-relevance hint map (entries, LRU).
 pub const DEFAULT_HINT_CAPACITY: usize = 4096;
+
+/// Poison-tolerant lock acquisition: the hint map is strictly advisory
+/// and self-consistent at every release, so a panicked shard must not
+/// take the surviving shards' batching hints down with it.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Shared map of each pattern geometry's most recent auto-resolution:
 /// written by the worker pool after every batch resolution, read by
@@ -64,17 +71,17 @@ impl PatternHints {
     /// Record `key`'s latest resolved mode.
     pub fn record(&self, key: PatternKey, mode: Mode) {
         debug_assert_ne!(mode, Mode::Auto, "hints hold resolved modes");
-        self.map.lock().expect("pattern hints poisoned").insert(key, mode);
+        locked(&self.map).insert(key, mode);
     }
 
     /// The last resolved mode at `key`, if still resident.
     pub fn get(&self, key: PatternKey) -> Option<Mode> {
-        self.map.lock().expect("pattern hints poisoned").get(&key).copied()
+        locked(&self.map).get(&key).copied()
     }
 
     /// Number of geometries hinted.
     pub fn len(&self) -> usize {
-        self.map.lock().expect("pattern hints poisoned").len()
+        locked(&self.map).len()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -6,20 +6,39 @@
 //! native-kernel execution time (histogram reservoir + aggregate
 //! GFLOP/s — the first throughput number that is real time, not
 //! simulated cycles) and worker queue-wait time.
+//!
+//! Sharded accounting (PR 7): the hot path never touches a global
+//! mutex. Each worker records into its own [`ShardMetrics`] — an
+//! uncontended per-shard accumulator — and the global [`Metrics`]
+//! absorbs every registered shard lazily: periodically when workers
+//! call [`Metrics::flush`], and always on [`Metrics::snapshot`] /
+//! shutdown, so reads are fresh without a per-job global lock.
+//! Counters sum commutatively, so
+//! [`Snapshot::deterministic_counters`] is independent of the shard
+//! count and flush timing — the property the sharded-vs-serial replay
+//! equivalence test pins.
+//!
+//! Latency and kernel-wall histograms use genuine Algorithm-R
+//! reservoir sampling (seeded from the deterministic [`util::rng`]
+//! RNG): every sample — not just the first 65536 — has an equal
+//! chance of residency, so long-run p50/p99 track the current stream
+//! instead of freezing at warm-up-era values.
+//!
+//! [`util::rng`]: crate::util::rng
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 use crate::coordinator::request::Mode;
+use crate::util::Rng;
 
 /// Where a selection (auto-mode resolution) was performed. Batch-time
-/// selection runs on the worker pool; the ingress thread performs no
-/// backend planning. The *enforced* form of that invariant is
-/// structural — the ingress thread's closure captures neither the
-/// plan cache nor the calibration, so reintroducing ingress-time
-/// planning requires re-plumbing state into it — while this enum
-/// keeps the accounting honest: any future ingress-side selection
-/// must report itself here, where the stress suite's
+/// selection runs on the worker pool; ingress performs no backend
+/// planning. The *enforced* form of that invariant is structural —
+/// ingress only hashes the job's pattern geometry to pick a shard, and
+/// holds neither a plan cache nor a calibration to plan with — while
+/// this enum keeps the accounting honest: any future ingress-side
+/// selection must report itself here, where the stress suite's
 /// `ingress_selections == 0` assertion and the serving dashboards
 /// will surface it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,21 +47,87 @@ pub enum SelectionSite {
     Worker,
 }
 
-/// Aggregated serving metrics. Latencies are kept in a bounded
-/// reservoir; percentiles are computed on demand.
-#[derive(Debug, Default)]
-pub struct Metrics {
-    inner: Mutex<Inner>,
+const RESERVOIR: usize = 65536;
+
+/// Algorithm-R reservoir over `u64` samples: the first
+/// `RESERVOIR` samples fill the buffer, and every later sample `i`
+/// (1-based) replaces a uniformly-chosen slot with probability
+/// `RESERVOIR / i`, so at any point each of the `seen` samples has
+/// equal residency probability. Deterministic: the replacement RNG is
+/// [`util::rng`](crate::util::rng) seeded at construction.
+#[derive(Debug, Clone)]
+struct Reservoir {
+    samples: Vec<u64>,
+    seen: u64,
+    rng: Rng,
 }
 
-#[derive(Debug, Default)]
-struct Inner {
+impl Reservoir {
+    fn new(seed: u64) -> Self {
+        Self { samples: Vec::new(), seen: 0, rng: Rng::seed_from_u64(seed) }
+    }
+
+    fn push(&mut self, v: u64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.below(self.seen as usize);
+            if j < RESERVOIR {
+                self.samples[j] = v;
+            }
+        }
+    }
+
+    /// Merge another reservoir into this one (shard flush). The
+    /// dropped samples behind `other`'s retained set are accounted
+    /// into `seen` first, then the retained samples stream through
+    /// `push` — total counts stay exact; the sample distribution is
+    /// the standard approximate shard-merge (percentiles are not part
+    /// of the deterministic counter set, so this never gates replay).
+    fn absorb(&mut self, other: Reservoir) {
+        self.seen += other.seen - other.samples.len() as u64;
+        for v in other.samples {
+            self.push(v);
+        }
+    }
+
+    fn sorted(&self) -> Vec<u64> {
+        let mut v = self.samples.clone();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Nearest-rank percentile index into a sorted sample of `len`
+/// elements: the smallest index covering at least `p` of the mass,
+/// `ceil(p * len)` as a 1-based rank clamped to `[1, len]`. The old
+/// truncating `(len - 1) * p` biased p99 low on small samples (100
+/// samples gave index 98·0.99→97, reporting the 98th percentile);
+/// exact indices for len ∈ {1, 2, 100} are pinned in a unit test.
+fn pct_index(len: usize, p: f64) -> usize {
+    debug_assert!(len > 0);
+    ((p * len as f64).ceil() as usize).clamp(1, len) - 1
+}
+
+fn pct_of(sorted: &[u64], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    Duration::from_nanos(sorted[pct_index(sorted.len(), p)])
+}
+
+/// One shard's accumulator state: plain data, no locking. Owned
+/// behind [`ShardMetrics`]; drained into the global [`Metrics`] by
+/// `absorb`, which is a commutative sum over every counter.
+#[derive(Debug)]
+struct LocalMetrics {
     jobs_completed: u64,
     jobs_failed: u64,
     batches: u64,
     batched_jobs: u64,
     simulated_cycles: u64,
-    latencies_ns: Vec<u64>,
+    latencies_ns: Reservoir,
     // Auto-mode accounting.
     auto_dense: u64,
     auto_static: u64,
@@ -62,13 +147,134 @@ struct Inner {
     // Native-kernel execution accounting (numeric serving arm).
     kernel_execs: u64,
     kernel_failures: u64,
-    kernel_wall_ns: Vec<u64>,
+    kernel_wall_ns: Reservoir,
     kernel_wall_total_ns: u64,
     kernel_flops_sum: f64,
     wall_observations: u64,
     // Worker queue-wait accounting.
     queue_waits: u64,
     queue_wait_ns: u64,
+}
+
+impl Default for LocalMetrics {
+    fn default() -> Self {
+        Self {
+            jobs_completed: 0,
+            jobs_failed: 0,
+            batches: 0,
+            batched_jobs: 0,
+            simulated_cycles: 0,
+            latencies_ns: Reservoir::new(0x9e37_79b9_7f4a_7c15),
+            auto_dense: 0,
+            auto_static: 0,
+            auto_dynamic: 0,
+            estimate_pairs: 0,
+            estimate_rel_err_sum: 0.0,
+            calibrated_rel_err_sum: 0.0,
+            ingress_selections: 0,
+            worker_selections: 0,
+            selection_ns: 0,
+            decision_flips: 0,
+            churn_shifts: 0,
+            rekeyed_batches: 0,
+            rekeyed_groups: 0,
+            kernel_execs: 0,
+            kernel_failures: 0,
+            kernel_wall_ns: Reservoir::new(0xc2b2_ae3d_27d4_eb4f),
+            kernel_wall_total_ns: 0,
+            kernel_flops_sum: 0.0,
+            wall_observations: 0,
+            queue_waits: 0,
+            queue_wait_ns: 0,
+        }
+    }
+}
+
+impl LocalMetrics {
+    /// Commutative merge: every counter is a sum, the histograms merge
+    /// through the reservoir, so absorb order across shards cannot
+    /// change any deterministic counter.
+    fn absorb(&mut self, other: LocalMetrics) {
+        self.jobs_completed += other.jobs_completed;
+        self.jobs_failed += other.jobs_failed;
+        self.batches += other.batches;
+        self.batched_jobs += other.batched_jobs;
+        self.simulated_cycles += other.simulated_cycles;
+        self.latencies_ns.absorb(other.latencies_ns);
+        self.auto_dense += other.auto_dense;
+        self.auto_static += other.auto_static;
+        self.auto_dynamic += other.auto_dynamic;
+        self.estimate_pairs += other.estimate_pairs;
+        self.estimate_rel_err_sum += other.estimate_rel_err_sum;
+        self.calibrated_rel_err_sum += other.calibrated_rel_err_sum;
+        self.ingress_selections += other.ingress_selections;
+        self.worker_selections += other.worker_selections;
+        self.selection_ns += other.selection_ns;
+        self.decision_flips += other.decision_flips;
+        self.churn_shifts += other.churn_shifts;
+        self.rekeyed_batches += other.rekeyed_batches;
+        self.rekeyed_groups += other.rekeyed_groups;
+        self.kernel_execs += other.kernel_execs;
+        self.kernel_failures += other.kernel_failures;
+        self.kernel_wall_ns.absorb(other.kernel_wall_ns);
+        self.kernel_wall_total_ns += other.kernel_wall_total_ns;
+        self.kernel_flops_sum += other.kernel_flops_sum;
+        self.wall_observations += other.wall_observations;
+        self.queue_waits += other.queue_waits;
+        self.queue_wait_ns += other.queue_wait_ns;
+    }
+
+    fn snapshot(&self) -> Snapshot {
+        let lat = self.latencies_ns.sorted();
+        let kernel = self.kernel_wall_ns.sorted();
+        Snapshot {
+            jobs_completed: self.jobs_completed,
+            jobs_failed: self.jobs_failed,
+            batches: self.batches,
+            mean_batch_size: if self.batches == 0 {
+                0.0
+            } else {
+                self.batched_jobs as f64 / self.batches as f64
+            },
+            simulated_cycles: self.simulated_cycles,
+            auto_dense: self.auto_dense,
+            auto_static: self.auto_static,
+            auto_dynamic: self.auto_dynamic,
+            auto_estimate_rel_err: if self.estimate_pairs == 0 {
+                0.0
+            } else {
+                self.estimate_rel_err_sum / self.estimate_pairs as f64
+            },
+            auto_estimate_rel_err_calibrated: if self.estimate_pairs == 0 {
+                0.0
+            } else {
+                self.calibrated_rel_err_sum / self.estimate_pairs as f64
+            },
+            decision_flips: self.decision_flips,
+            churn_shifts: self.churn_shifts,
+            rekeyed_batches: self.rekeyed_batches,
+            rekeyed_groups: self.rekeyed_groups,
+            ingress_selections: self.ingress_selections,
+            worker_selections: self.worker_selections,
+            selection_time: Duration::from_nanos(self.selection_ns),
+            kernel_execs: self.kernel_execs,
+            kernel_failures: self.kernel_failures,
+            kernel_wall_total: Duration::from_nanos(self.kernel_wall_total_ns),
+            kernel_wall_p50: pct_of(&kernel, 0.50),
+            kernel_wall_p99: pct_of(&kernel, 0.99),
+            kernel_gflops: if self.kernel_wall_total_ns == 0 {
+                0.0
+            } else {
+                self.kernel_flops_sum / (self.kernel_wall_total_ns as f64 / 1e9) / 1e9
+            },
+            wall_observations: self.wall_observations,
+            queue_waits: self.queue_waits,
+            queue_wait_total: Duration::from_nanos(self.queue_wait_ns),
+            p50: pct_of(&lat, 0.50),
+            p99: pct_of(&lat, 0.99),
+            max: pct_of(&lat, 1.0),
+        }
+    }
 }
 
 /// A point-in-time snapshot for reporting.
@@ -103,9 +309,8 @@ pub struct Snapshot {
     /// re-keying path), and the sub-batches that produced.
     pub rekeyed_batches: u64,
     pub rekeyed_groups: u64,
-    /// Selections performed on the ingress thread. Zero by
-    /// construction since batch-time selection landed; asserted by the
-    /// stress suite.
+    /// Selections performed at ingress. Zero by construction since
+    /// batch-time selection landed; asserted by the stress suite.
     pub ingress_selections: u64,
     /// Selections performed on the worker pool (fresh resolutions, not
     /// memo hits).
@@ -133,7 +338,7 @@ pub struct Snapshot {
     /// calibration through the units layer (post-warm-up
     /// [`WallFeedback`](crate::engine::WallFeedback) observations).
     pub wall_observations: u64,
-    /// Times a worker blocked waiting on the shared work queue.
+    /// Times a worker blocked waiting on its shard's work queue.
     pub queue_waits: u64,
     /// Total worker time spent blocked on the work queue (idle wait +
     /// queue-lock contention — the starvation/contention signal).
@@ -156,6 +361,8 @@ impl Snapshot {
     /// diffs; anything timing-derived (latency percentiles, queue
     /// waits, kernel walls, selection time) is deliberately excluded
     /// because two bit-identical replays would still disagree on it.
+    /// Every counter here sums commutatively across shard flushes, so
+    /// the set is also invariant under the worker/shard count.
     pub fn deterministic_counters(&self) -> Vec<(&'static str, u64)> {
         vec![
             ("jobs_completed", self.jobs_completed),
@@ -177,35 +384,46 @@ impl Snapshot {
     }
 }
 
-const RESERVOIR: usize = 65536;
+/// One shard's metrics accumulator: the mutex is shard-private, so on
+/// the steady-state path it is only ever taken by its owning worker —
+/// uncontended — and briefly by the global [`Metrics`] during a flush
+/// or snapshot drain. Locking is poison-tolerant (`into_inner`): a
+/// panicked worker must not take the whole dashboard down with it.
+#[derive(Debug, Default)]
+pub struct ShardMetrics {
+    inner: Mutex<LocalMetrics>,
+}
 
-impl Metrics {
-    pub fn new() -> Self {
-        Self::default()
+impl ShardMetrics {
+    fn locked(&self) -> MutexGuard<'_, LocalMetrics> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Take this shard's accumulated state, leaving a fresh zero.
+    fn take(&self) -> LocalMetrics {
+        std::mem::take(&mut *self.locked())
     }
 
     pub fn record_job(&self, latency: Duration, cycles: u64) {
-        let mut g = self.inner.lock().expect("metrics poisoned");
+        let mut g = self.locked();
         g.jobs_completed += 1;
         g.simulated_cycles += cycles;
-        if g.latencies_ns.len() < RESERVOIR {
-            g.latencies_ns.push(latency.as_nanos() as u64);
-        }
+        g.latencies_ns.push(latency.as_nanos() as u64);
     }
 
     pub fn record_failure(&self) {
-        self.inner.lock().expect("metrics poisoned").jobs_failed += 1;
+        self.locked().jobs_failed += 1;
     }
 
     pub fn record_batch(&self, jobs: usize) {
-        let mut g = self.inner.lock().expect("metrics poisoned");
+        let mut g = self.locked();
         g.batches += 1;
         g.batched_jobs += jobs as u64;
     }
 
     /// Record an auto-mode resolution (which concrete mode won).
     pub fn record_auto_decision(&self, mode: Mode) {
-        let mut g = self.inner.lock().expect("metrics poisoned");
+        let mut g = self.locked();
         match mode {
             Mode::Dense => g.auto_dense += 1,
             Mode::Static => g.auto_static += 1,
@@ -227,7 +445,7 @@ impl Metrics {
             return;
         }
         let rel = |est: u64| (est as f64 - simulated as f64).abs() / simulated as f64;
-        let mut g = self.inner.lock().expect("metrics poisoned");
+        let mut g = self.locked();
         g.estimate_pairs += 1;
         g.estimate_rel_err_sum += rel(estimated_raw);
         g.calibrated_rel_err_sum += rel(estimated_calibrated);
@@ -236,7 +454,7 @@ impl Metrics {
     /// Record one selection (auto-mode resolution): where it ran and
     /// how long the candidate planning took.
     pub fn record_selection(&self, site: SelectionSite, took: Duration) {
-        let mut g = self.inner.lock().expect("metrics poisoned");
+        let mut g = self.locked();
         match site {
             SelectionSite::Ingress => g.ingress_selections += 1,
             SelectionSite::Worker => g.worker_selections += 1,
@@ -246,115 +464,161 @@ impl Metrics {
 
     /// Record a resolution where calibration flipped the raw argmin.
     pub fn record_decision_flip(&self) {
-        self.inner.lock().expect("metrics poisoned").decision_flips += 1;
+        self.locked().decision_flips += 1;
     }
 
     /// Record a resolution where the pattern-churn surcharge moved the
     /// calibrated argmin.
     pub fn record_churn_shift(&self) {
-        self.inner.lock().expect("metrics poisoned").churn_shifts += 1;
+        self.locked().churn_shifts += 1;
     }
 
     /// Record one seedless auto batch split into `groups` per-pattern
     /// sub-batches because its resolution came back static.
     pub fn record_rekeyed_batch(&self, groups: usize) {
-        let mut g = self.inner.lock().expect("metrics poisoned");
+        let mut g = self.locked();
         g.rekeyed_batches += 1;
         g.rekeyed_groups += groups as u64;
     }
 
     /// Record one native-kernel execution: measured wall time and the
     /// FLOPs it performed (nnz-only for sparse). Wall samples land in
-    /// the bounded histogram reservoir behind the kernel percentiles.
+    /// the reservoir behind the kernel percentiles.
     pub fn record_kernel(&self, wall: Duration, flops: f64) {
-        let mut g = self.inner.lock().expect("metrics poisoned");
+        let mut g = self.locked();
         g.kernel_execs += 1;
         g.kernel_wall_total_ns += wall.as_nanos() as u64;
         g.kernel_flops_sum += flops;
-        if g.kernel_wall_ns.len() < RESERVOIR {
-            g.kernel_wall_ns.push(wall.as_nanos() as u64);
-        }
+        g.kernel_wall_ns.push(wall.as_nanos() as u64);
     }
 
     /// Record a native-kernel execution failure.
     pub fn record_kernel_failure(&self) {
-        self.inner.lock().expect("metrics poisoned").kernel_failures += 1;
+        self.locked().kernel_failures += 1;
     }
 
     /// Record one measured wall time fed through the units layer into
     /// the wall calibration.
     pub fn record_wall_observation(&self) {
-        self.inner.lock().expect("metrics poisoned").wall_observations += 1;
+        self.locked().wall_observations += 1;
     }
 
-    /// Record one worker wait on the shared work queue.
+    /// Record one worker wait on its shard's work queue.
     pub fn record_queue_wait(&self, wait: Duration) {
-        let mut g = self.inner.lock().expect("metrics poisoned");
+        let mut g = self.locked();
         g.queue_waits += 1;
         g.queue_wait_ns += wait.as_nanos() as u64;
     }
+}
+
+/// Aggregated serving metrics. The global view: a home accumulator
+/// (what the direct `record_*` methods hit — single-threaded callers
+/// and unit tests) plus every registered per-worker [`ShardMetrics`].
+/// Workers flush periodically and at exit; `snapshot` drains all
+/// shards first, so it is always current regardless of flush cadence.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    home: ShardMetrics,
+    shards: Mutex<Vec<Arc<ShardMetrics>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create and register a new shard accumulator. Called once per
+    /// worker at startup — never on the serving path.
+    pub fn register_shard(&self) -> Arc<ShardMetrics> {
+        let shard = Arc::new(ShardMetrics::default());
+        self.shards.lock().unwrap_or_else(PoisonError::into_inner).push(shard.clone());
+        shard
+    }
+
+    /// Drain one shard's accumulated counters into the global view
+    /// (the worker-side periodic / at-exit flush).
+    pub fn flush(&self, shard: &ShardMetrics) {
+        let taken = shard.take();
+        self.home.locked().absorb(taken);
+    }
+
+    fn drain_shards(&self) {
+        let shards = self.shards.lock().unwrap_or_else(PoisonError::into_inner).clone();
+        for shard in shards {
+            self.flush(&shard);
+        }
+    }
+
+    pub fn record_job(&self, latency: Duration, cycles: u64) {
+        self.home.record_job(latency, cycles);
+    }
+
+    pub fn record_failure(&self) {
+        self.home.record_failure();
+    }
+
+    pub fn record_batch(&self, jobs: usize) {
+        self.home.record_batch(jobs);
+    }
+
+    /// Record an auto-mode resolution (which concrete mode won).
+    pub fn record_auto_decision(&self, mode: Mode) {
+        self.home.record_auto_decision(mode);
+    }
+
+    /// Record estimated-vs-simulated cycles for a completed auto job.
+    pub fn record_auto_outcome(
+        &self,
+        estimated_raw: u64,
+        estimated_calibrated: u64,
+        simulated: u64,
+    ) {
+        self.home.record_auto_outcome(estimated_raw, estimated_calibrated, simulated);
+    }
+
+    /// Record one selection (auto-mode resolution).
+    pub fn record_selection(&self, site: SelectionSite, took: Duration) {
+        self.home.record_selection(site, took);
+    }
+
+    /// Record a resolution where calibration flipped the raw argmin.
+    pub fn record_decision_flip(&self) {
+        self.home.record_decision_flip();
+    }
+
+    /// Record a resolution where the churn surcharge moved the argmin.
+    pub fn record_churn_shift(&self) {
+        self.home.record_churn_shift();
+    }
+
+    /// Record one re-keyed auto batch split into `groups` sub-batches.
+    pub fn record_rekeyed_batch(&self, groups: usize) {
+        self.home.record_rekeyed_batch(groups);
+    }
+
+    /// Record one native-kernel execution.
+    pub fn record_kernel(&self, wall: Duration, flops: f64) {
+        self.home.record_kernel(wall, flops);
+    }
+
+    /// Record a native-kernel execution failure.
+    pub fn record_kernel_failure(&self) {
+        self.home.record_kernel_failure();
+    }
+
+    /// Record one wall time fed into the wall calibration.
+    pub fn record_wall_observation(&self) {
+        self.home.record_wall_observation();
+    }
+
+    /// Record one worker wait on a work queue.
+    pub fn record_queue_wait(&self, wait: Duration) {
+        self.home.record_queue_wait(wait);
+    }
 
     pub fn snapshot(&self) -> Snapshot {
-        let g = self.inner.lock().expect("metrics poisoned");
-        let mut lat = g.latencies_ns.clone();
-        lat.sort_unstable();
-        let pct_of = |sorted: &[u64], p: f64| -> Duration {
-            if sorted.is_empty() {
-                return Duration::ZERO;
-            }
-            let idx = ((sorted.len() - 1) as f64 * p) as usize;
-            Duration::from_nanos(sorted[idx])
-        };
-        let pct = |p: f64| pct_of(&lat, p);
-        let mut kernel = g.kernel_wall_ns.clone();
-        kernel.sort_unstable();
-        Snapshot {
-            jobs_completed: g.jobs_completed,
-            jobs_failed: g.jobs_failed,
-            batches: g.batches,
-            mean_batch_size: if g.batches == 0 {
-                0.0
-            } else {
-                g.batched_jobs as f64 / g.batches as f64
-            },
-            simulated_cycles: g.simulated_cycles,
-            auto_dense: g.auto_dense,
-            auto_static: g.auto_static,
-            auto_dynamic: g.auto_dynamic,
-            auto_estimate_rel_err: if g.estimate_pairs == 0 {
-                0.0
-            } else {
-                g.estimate_rel_err_sum / g.estimate_pairs as f64
-            },
-            auto_estimate_rel_err_calibrated: if g.estimate_pairs == 0 {
-                0.0
-            } else {
-                g.calibrated_rel_err_sum / g.estimate_pairs as f64
-            },
-            decision_flips: g.decision_flips,
-            churn_shifts: g.churn_shifts,
-            rekeyed_batches: g.rekeyed_batches,
-            rekeyed_groups: g.rekeyed_groups,
-            ingress_selections: g.ingress_selections,
-            worker_selections: g.worker_selections,
-            selection_time: Duration::from_nanos(g.selection_ns),
-            kernel_execs: g.kernel_execs,
-            kernel_failures: g.kernel_failures,
-            kernel_wall_total: Duration::from_nanos(g.kernel_wall_total_ns),
-            kernel_wall_p50: pct_of(&kernel, 0.50),
-            kernel_wall_p99: pct_of(&kernel, 0.99),
-            kernel_gflops: if g.kernel_wall_total_ns == 0 {
-                0.0
-            } else {
-                g.kernel_flops_sum / (g.kernel_wall_total_ns as f64 / 1e9) / 1e9
-            },
-            wall_observations: g.wall_observations,
-            queue_waits: g.queue_waits,
-            queue_wait_total: Duration::from_nanos(g.queue_wait_ns),
-            p50: pct(0.50),
-            p99: pct(0.99),
-            max: pct(1.0),
-        }
+        self.drain_shards();
+        self.home.locked().snapshot()
     }
 }
 
@@ -487,5 +751,95 @@ mod tests {
         assert_eq!(s.selection_time, Duration::from_micros(50));
         m.record_selection(SelectionSite::Ingress, Duration::ZERO);
         assert_eq!(m.snapshot().ingress_selections, 1);
+    }
+
+    #[test]
+    fn nearest_rank_indices_are_pinned() {
+        // len = 1: every percentile is the only sample.
+        assert_eq!(pct_index(1, 0.50), 0);
+        assert_eq!(pct_index(1, 0.99), 0);
+        assert_eq!(pct_index(1, 1.0), 0);
+        // len = 2: p50 is the first sample (covers half the mass),
+        // p99 the second. The truncating index gave 0 for both.
+        assert_eq!(pct_index(2, 0.50), 0);
+        assert_eq!(pct_index(2, 0.99), 1);
+        assert_eq!(pct_index(2, 1.0), 1);
+        // len = 100: ranks 50/99/100 -> indices 49/98/99. The old
+        // truncating form returned 98·0.99 = 97 for p99.
+        assert_eq!(pct_index(100, 0.50), 49);
+        assert_eq!(pct_index(100, 0.99), 98);
+        assert_eq!(pct_index(100, 1.0), 99);
+        // p=0 clamps to the first sample rather than underflowing.
+        assert_eq!(pct_index(100, 0.0), 0);
+    }
+
+    #[test]
+    fn reservoir_admits_post_warmup_samples() {
+        // The old "reservoir" kept only the first RESERVOIR samples, so
+        // a latency regression after warm-up never moved p99. Fill the
+        // reservoir with fast samples, then stream 3x as many slow
+        // outliers: Algorithm R must give them residency and shift p99
+        // to the outlier value.
+        let m = Metrics::new();
+        for _ in 0..RESERVOIR {
+            m.record_job(Duration::from_nanos(1_000), 1);
+        }
+        let warm = m.snapshot();
+        assert_eq!(warm.p99, Duration::from_nanos(1_000));
+        for _ in 0..3 * RESERVOIR {
+            m.record_job(Duration::from_nanos(1_000_000), 1);
+        }
+        let s = m.snapshot();
+        // ~75% of the stream is now outliers; expected reservoir
+        // occupancy matches, so p50 and p99 both sit on the outlier.
+        assert_eq!(s.p99, Duration::from_nanos(1_000_000), "p99 frozen at warm-up value");
+        assert_eq!(s.p50, Duration::from_nanos(1_000_000));
+        assert_eq!(s.max, Duration::from_nanos(1_000_000));
+        assert_eq!(s.jobs_completed, 4 * RESERVOIR as u64);
+    }
+
+    #[test]
+    fn shard_flush_aggregates_into_the_global_view() {
+        let m = Metrics::new();
+        let a = m.register_shard();
+        let b = m.register_shard();
+        a.record_job(Duration::from_micros(10), 100);
+        a.record_batch(2);
+        b.record_job(Duration::from_micros(30), 200);
+        b.record_failure();
+        m.record_job(Duration::from_micros(20), 50); // home direct
+        // Explicit flush of one shard, lazy drain of the other via
+        // snapshot: both must land exactly once.
+        m.flush(&a);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_completed, 3);
+        assert_eq!(s.jobs_failed, 1);
+        assert_eq!(s.simulated_cycles, 350);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.max, Duration::from_micros(30));
+        // A second snapshot is cumulative, not double-counting.
+        let s2 = m.snapshot();
+        assert_eq!(s2.jobs_completed, 3);
+        assert_eq!(s2.simulated_cycles, 350);
+    }
+
+    #[test]
+    fn poisoned_shard_still_flushes() {
+        // A worker that panics mid-record poisons only its own shard
+        // mutex; the drain must recover the counters instead of
+        // cascading the panic into every snapshot reader.
+        let m = Metrics::new();
+        let shard = m.register_shard();
+        shard.record_job(Duration::from_micros(5), 42);
+        let poisoner = shard.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = poisoner.inner.lock().unwrap();
+            panic!("injected");
+        })
+        .join();
+        assert!(shard.inner.is_poisoned());
+        let s = m.snapshot();
+        assert_eq!(s.jobs_completed, 1);
+        assert_eq!(s.simulated_cycles, 42);
     }
 }

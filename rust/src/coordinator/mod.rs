@@ -1,42 +1,68 @@
-//! The serving coordinator: router, dynamic batcher, batch-time
-//! auto-mode resolution, plan cache, calibration, worker pool and
-//! metrics.
+//! The serving coordinator: sharded thread-per-core router, dynamic
+//! batcher, batch-time auto-mode resolution, plan cache, calibration
+//! and metrics.
 //!
-//! Architecture (threads + channels; the request path never touches
-//! Python):
+//! Architecture (shared-nothing steady state; the request path never
+//! touches Python):
 //!
 //! ```text
-//!  submit(job) ──► ingress thread (no planning: enqueue only) ──►
-//!                  batcher (groups by weight config + mode — Auto is
-//!                  a provisional key, seedless once [`PatternHints`]
-//!                  says the geometry resolves dense/dynamic —
-//!                  flushes on capacity or delay)
-//!                  ──► worker pool:
+//!  submit(job) ──► shard = stable_hash(pattern geometry) % workers
+//!                  ──► that shard's work queue (enqueue only; no
+//!                      planning, no global locks)
+//!                  ──► the shard's worker thread, which owns ALL of
+//!                      the shard's serving state:
+//!                        batcher (groups by weight config + mode —
+//!                        Auto is a provisional key, seedless once the
+//!                        shard's [`PatternHints`] says the geometry
+//!                        resolves dense/dynamic — flushes on capacity
+//!                        or delay) ──►
 //!                        observe the pattern stream
 //!                        ([`crate::engine::ChurnTracker`]) ──►
 //!                        resolve Auto at the batch's combined n
 //!                        ([`PlanCache::resolve_batch_with`],
-//!                        calibrated + churn-amortized, memoized;
-//!                        candidate plans land in the plan cache;
-//!                        resolved mode published to the hints;
-//!                        seedless batches resolving static split
-//!                        per pattern) ──► plan cache (execution
-//!                        reuses the resolution-time plan) ──►
-//!                        simulator (cycles) ──► observed cycles feed
+//!                        calibrated + churn-amortized, memoized) ──►
+//!                        plan cache ──► simulator (cycles) ──►
+//!                        observed cycles feed the shard's
 //!                        [`crate::engine::Calibration`] ──► JobResult
 //! ```
+//!
+//! **Sharding.** Jobs route by [`PatternKey::stable_hash`] — a
+//! deterministic FNV-1a over the pattern geometry — so every job at
+//! one weight configuration lands on the same shard, and each shard's
+//! plan cache, decision memo, prepared operands, calibration buckets,
+//! churn EWMAs, pattern hints and batcher are **private to its worker
+//! thread**: the steady-state serving path acquires no global mutex
+//! (the per-shard maps keep their internal locks, but only the owning
+//! worker ever takes them — uncontended by construction; `repro bench
+//! contention` asserts the lock-wait stays ~0 at N workers). Batching
+//! semantics are unchanged from the single-ingress design because a
+//! [`BatchKey`] refines the pattern geometry: jobs that could share a
+//! batch always share a shard.
+//!
+//! The one genuinely cross-shard signal is the host's
+//! ns-per-estimated-cycle scale ([`crate::engine::WallScale`]): all
+//! shards' [`WallFeedback`] units layers share one lock-free
+//! atomically-published EWMA, so warm-up is paid once per process, not
+//! once per shard. Per-job metrics accumulate in a per-shard
+//! [`ShardMetrics`] and are flushed into the global [`Metrics`]
+//! periodically (every [`FLUSH_PERIOD_BATCHES`] batches) and at
+//! shutdown; [`Metrics::snapshot`] additionally drains all shards on
+//! demand, so an observer never waits for the period.
+//!
+//! **Panic isolation.** A worker that panics mid-flight poisons only
+//! its own shard's maps — and every serving-side lock acquisition is
+//! poison-tolerant, so the other shards keep serving and
+//! [`Coordinator::shutdown`] still joins everything and reports the
+//! death count instead of cascading the panic.
 //!
 //! Jobs submitted with [`Mode::Auto`] batch under a provisional key
 //! and are resolved to the cheapest concrete mode *at batch-formation
 //! time*, at the combined batch size actually executed — so selection
-//! sees the real geometry, resolution-time plans are reused at
+//! sees the real geometry and resolution-time plans are reused at
 //! execution (every freshly-resolved batch executes a plan-cache hit;
 //! the one re-plan left is a memoized *static* decision meeting a new
-//! pattern, which is pattern-specific work by design), and a memo
-//! miss costs worker time instead of head-of-line blocking the
-//! ingress thread. Every serving-side map — plans, decision memo,
-//! prepared numeric operands, calibration buckets, churn EWMAs,
-//! pattern hints — is bounded by LRU eviction ([`CacheConfig`]).
+//! pattern, which is pattern-specific work by design). Every
+//! serving-side map is bounded by LRU eviction ([`CacheConfig`]).
 //! [`Metrics`] tracks the decisions, where selection ran, calibration
 //! decision flips, churn shifts, re-key splits, and how raw vs
 //! calibration-corrected cycle estimates compare to the simulated
@@ -46,16 +72,16 @@
 //! batch's actual kernel — **in the batch's declared dtype** (FP16
 //! jobs run the f16-storage kernels with f32 accumulation) — through
 //! the native compute layer ([`crate::kernels`]): prepared operands
-//! cached per (pattern, dtype) in the [`PlanCache`], measured kernel
-//! wall time and achieved GFLOP/s in [`Metrics`], and each measured
-//! wall fed into the [`WallFeedback`] units layer so a wall-fed
+//! cached per (pattern, dtype) in the shard's [`PlanCache`], measured
+//! kernel wall time and achieved GFLOP/s in [`Metrics`], and each
+//! measured wall fed into the shard's [`WallFeedback`] so a wall-fed
 //! calibration accumulates per (backend, geometry-bucket, dtype).
 //! With [`Config::wall_calibrated`] on, auto-mode resolution argmins
-//! over *that* calibration — dispatch follows measured kernel
-//! reality, closing the ROADMAP's wall-time feedback loop without
-//! PJRT (DESIGN.md §5). Workers pull batches from a condvar-backed
+//! over *that* calibration — dispatch follows measured kernel reality
+//! (DESIGN.md §5). Workers pull jobs from a condvar-backed
 //! [`WorkQueue`] (lock held only across push/pop, never across a
-//! blocking wait) and their queue-wait time is metered.
+//! blocking wait); their queue-wait time is metered per job, and the
+//! queue meters its own mutex contention ([`WorkQueue::lock_wait`]).
 
 pub mod batcher;
 pub mod metrics;
@@ -70,24 +96,33 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 pub use batcher::{Batch, BatchKey, Batcher, PatternHints};
-pub use metrics::{Metrics, SelectionSite, Snapshot};
+pub use metrics::{Metrics, SelectionSite, ShardMetrics, Snapshot};
 pub use plan_cache::{BatchResolution, CachedPlan, PlanCache};
 pub use replay::{ReplayJob, ReplayReport, ReplaySession, REPLAY_VERSION};
 pub use request::{JobResult, JobSpec, Mode, PatternKey, PlanKey, SelectorKey};
 
 use crate::bench_harness::trace::Recorder;
 use crate::engine::calibration::DEFAULT_ALPHA;
-use crate::engine::{BackendKind, Calibration, ChurnTracker, WallFeedback};
+use crate::engine::{BackendKind, Calibration, ChurnTracker, WallFeedback, WallScale};
 use crate::error::{Error, Result};
 use crate::kernels::Scratch;
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::patterns;
-use crate::util::WorkQueue;
+use crate::util::{PopResult, WorkQueue};
+
+/// How many processed batches a worker accumulates locally before
+/// flushing its [`ShardMetrics`] into the global [`Metrics`]. The
+/// period only bounds how stale a between-snapshots observer can
+/// read; [`Metrics::snapshot`] drains every shard on demand anyway,
+/// and workers always flush on exit.
+const FLUSH_PERIOD_BATCHES: usize = 64;
 
 /// Capacities of every bounded serving-side map (entries, LRU each).
 /// Defaults sit far above paper-scale working sets, so bounded and
 /// unbounded behaviour coincide on paper traces; open-world traffic
 /// is where the bounds bite (see `rust/tests/stress_eviction.rs`).
+/// Under sharding each capacity bounds **each shard's** map — the
+/// process-wide bound is `workers ×` the configured value.
 #[derive(Debug, Clone, Copy)]
 pub struct CacheConfig {
     /// Compiled plans ([`PlanCache`]).
@@ -121,22 +156,24 @@ impl Default for CacheConfig {
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Worker threads — and, identically, shards: the coordinator is
+    /// thread-per-core, one serving shard owned by each worker.
     pub workers: usize,
     /// Batch flush threshold over the summed batch dimension.
     pub max_batch_n: usize,
     /// Max time a job waits for batch-mates.
     pub max_batch_delay: Duration,
-    /// Bounds for the serving-side maps.
+    /// Bounds for the serving-side maps (per shard).
     pub caches: CacheConfig,
     /// Execute every batch numerically through the native kernel layer
     /// ([`crate::kernels`]) after the cycle simulation — **in the
     /// batch's declared dtype** (FP16 jobs run the f16-storage
     /// kernels) — timing the kernel and feeding the [`Metrics`]
     /// wall-time histogram: the serving-throughput observability arm.
-    /// Sparse operands come from the plan cache's dtype-keyed prepared
-    /// slot, so steady-state traffic performs zero
+    /// Sparse operands come from the shard plan cache's dtype-keyed
+    /// prepared slot, so steady-state traffic performs zero
     /// `BlockCoo -> PreparedBsr` conversions per (pattern, dtype).
-    /// Measured kernel wall times additionally feed the coordinator's
+    /// Measured kernel wall times additionally feed the shard's
     /// [`WallFeedback`] units layer. Off by default: simulated-only
     /// serving (cycle benches, latency tests) stays numeric-free.
     pub numeric: bool,
@@ -153,8 +190,16 @@ pub struct Config {
     /// trace ([`crate::bench_harness::trace`]) when the coordinator
     /// shuts down. The recorded stream replays deterministically
     /// through [`ReplaySession`] (`repro trace replay`) under any
-    /// configuration. Off (`None`) by default.
+    /// configuration. The recorder is the one piece of opt-in global
+    /// state the submit path touches — one mutex push per job, absent
+    /// entirely at steady state. Off (`None`) by default.
     pub record_trace: Option<PathBuf>,
+    /// Test hook: a worker that pops a job carrying this pattern seed
+    /// panics immediately, simulating a mid-flight serving bug. Used
+    /// by the panic-isolation regression test to prove one dead shard
+    /// leaves the others serving. `None` (never) outside tests.
+    #[doc(hidden)]
+    pub panic_on_pattern_seed: Option<u64>,
 }
 
 impl Default for Config {
@@ -167,28 +212,141 @@ impl Default for Config {
             numeric: false,
             wall_calibrated: false,
             record_trace: None,
+            panic_on_pattern_seed: None,
         }
     }
 }
 
 pub(crate) type Responder = mpsc::Sender<Result<JobResult>>;
 
-enum WorkItem {
-    Batch(Batch<Responder>),
+/// One serving shard: every map a worker needs, owned (in the
+/// steady-state mutation sense) by exactly one worker thread. The
+/// coordinator handle only *reads* stats through the maps' internal
+/// locks — which is why those stay — and pushes onto the queue; no
+/// other thread ever writes a shard's caches, so their locks are
+/// uncontended by construction.
+struct Shard {
+    cache: PlanCache,
+    calibration: Calibration,
+    wall: WallFeedback,
+    churn: ChurnTracker,
+    hints: Arc<PatternHints>,
+    queue: WorkQueue<(JobSpec, Responder)>,
+    metrics: Arc<ShardMetrics>,
+}
+
+impl Shard {
+    /// Execute one flushed batch against this shard's state.
+    fn process(
+        &self,
+        batch: Batch<Responder>,
+        scratch: &mut Scratch,
+        numeric: bool,
+        wall_calibrated: bool,
+        recorder: Option<&Recorder>,
+    ) {
+        self.metrics.record_batch(batch.jobs.len());
+        // Which calibration steers the argmin: the wall-fed one when
+        // configured (dispatch follows measured kernels), the
+        // simulated-cycle one otherwise.
+        let resolve_cal: &Calibration =
+            if wall_calibrated { self.wall.calibration() } else { &self.calibration };
+        process_batch(
+            batch,
+            &self.cache,
+            resolve_cal,
+            &self.calibration,
+            &self.churn,
+            &self.hints,
+            &self.metrics,
+            numeric.then_some(NumericArm {
+                scratch,
+                wall: Some(&self.wall),
+                recorder,
+                threads: 1,
+            }),
+        );
+    }
+}
+
+/// The worker thread: the only mutator of its shard's serving state.
+/// It owns the batcher and kernel scratch outright (no lock at all)
+/// and alternates between a blocking pop while idle and a
+/// delay-bounded pop while jobs are pending in its batcher, so the
+/// delay budget still flushes through an arrival lull.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    shard: Arc<Shard>,
+    global: Arc<Metrics>,
+    recorder: Option<Arc<Recorder>>,
+    max_batch_n: usize,
+    max_batch_delay: Duration,
+    numeric: bool,
+    wall_calibrated: bool,
+    panic_on_pattern_seed: Option<u64>,
+) {
+    let mut batcher: Batcher<Responder> =
+        Batcher::with_hints(max_batch_n, max_batch_delay, shard.hints.clone());
+    let mut scratch = Scratch::default();
+    let mut unflushed = 0usize;
+    loop {
+        let (popped, waited) = if batcher.pending() == 0 {
+            let (item, waited) = shard.queue.pop();
+            let popped = match item {
+                Some(item) => PopResult::Item(item),
+                None => PopResult::Closed,
+            };
+            (popped, waited)
+        } else {
+            shard.queue.pop_timeout(max_batch_delay)
+        };
+        match popped {
+            PopResult::Item((job, responder)) => {
+                shard.metrics.record_queue_wait(waited);
+                if panic_on_pattern_seed == Some(job.pattern_seed) {
+                    panic!(
+                        "injected worker panic at pattern seed {} (Config::panic_on_pattern_seed)",
+                        job.pattern_seed
+                    );
+                }
+                if let Some(batch) = batcher.push(job, responder) {
+                    shard.process(
+                        batch,
+                        &mut scratch,
+                        numeric,
+                        wall_calibrated,
+                        recorder.as_deref(),
+                    );
+                    unflushed += 1;
+                }
+            }
+            PopResult::Timeout => {}
+            PopResult::Closed => break,
+        }
+        for batch in batcher.poll(Instant::now()) {
+            shard.process(batch, &mut scratch, numeric, wall_calibrated, recorder.as_deref());
+            unflushed += 1;
+        }
+        if unflushed >= FLUSH_PERIOD_BATCHES {
+            global.flush(&shard.metrics);
+            unflushed = 0;
+        }
+    }
+    // Closed: flush the batcher's stragglers (sorted drain — the order
+    // is unobservable live, every job has its own responder), then
+    // make every locally-accumulated counter globally visible.
+    for batch in batcher.drain() {
+        shard.process(batch, &mut scratch, numeric, wall_calibrated, recorder.as_deref());
+    }
+    global.flush(&shard.metrics);
 }
 
 /// The coordinator. Create with [`Coordinator::new`], submit jobs with
 /// [`Coordinator::submit`], inspect [`Coordinator::metrics`].
 pub struct Coordinator {
-    cache: Arc<PlanCache>,
+    shards: Vec<Arc<Shard>>,
     metrics: Arc<Metrics>,
-    calibration: Arc<Calibration>,
-    wall: Arc<WallFeedback>,
-    churn: Arc<ChurnTracker>,
-    hints: Arc<PatternHints>,
-    work: Arc<WorkQueue<WorkItem>>,
-    ingress: Option<mpsc::Sender<(JobSpec, Responder)>>,
-    ingress_thread: Option<std::thread::JoinHandle<()>>,
+    wall_scale: Arc<WallScale>,
     workers: Vec<std::thread::JoinHandle<()>>,
     shutting_down: Arc<AtomicBool>,
     /// Workload recorder + output path ([`Config::record_trace`]).
@@ -198,142 +356,76 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(config: Config, spec: IpuSpec, cm: CostModel) -> Self {
         let caches = config.caches;
-        let cache = Arc::new(PlanCache::with_capacity(
-            spec,
-            cm,
-            caches.plan_capacity,
-            caches.memo_capacity,
-            caches.prepared_capacity,
-        ));
         let metrics = Arc::new(Metrics::new());
-        let calibration =
-            Arc::new(Calibration::with_capacity(DEFAULT_ALPHA, caches.calibration_capacity));
-        let wall =
-            Arc::new(WallFeedback::with_capacity(DEFAULT_ALPHA, caches.calibration_capacity));
-        let churn = Arc::new(ChurnTracker::with_capacity(caches.churn_capacity));
-        let hints = Arc::new(PatternHints::with_capacity(caches.hint_capacity));
         let shutting_down = Arc::new(AtomicBool::new(false));
         let recorder = config
             .record_trace
             .as_ref()
             .map(|path| (Arc::new(Recorder::new()), path.clone()));
+        // The host's ns-per-cycle scale is genuinely host-global (one
+        // clock), so it is the one piece of cross-shard serving state:
+        // a lock-free atomically-published EWMA shared by every
+        // shard's wall feedback, paying warm-up once per process.
+        let wall_scale = Arc::new(WallScale::new());
 
-        let (ingress_tx, ingress_rx) = mpsc::channel::<(JobSpec, Responder)>();
-        // Workers share a condvar-backed MPMC queue: the lock is held
-        // only for the push/pop itself, never across a blocking wait
-        // (the old `Mutex<mpsc::Receiver>` held it through `recv`, so
-        // wakeups serialized through lock handoff).
-        let work = Arc::new(WorkQueue::<WorkItem>::new());
-
-        // Ingress thread: runs the batcher, nothing else. Auto-mode
-        // jobs pass through unresolved (provisional batch key); no
-        // planning happens here, so a selection-memo miss can never
-        // head-of-line-block unrelated submissions. The only shared
-        // state this closure captures is the pattern-relevance hint
-        // map — an O(1) read per push, no planners behind it.
-        let batch_cfg = config.clone();
-        let batch_metrics = metrics.clone();
-        let batch_queue = work.clone();
-        let batch_hints = hints.clone();
-        let ingress_thread = std::thread::spawn(move || {
-            let mut batcher: Batcher<Responder> = Batcher::with_hints(
-                batch_cfg.max_batch_n,
-                batch_cfg.max_batch_delay,
-                batch_hints,
-            );
-            loop {
-                // Wait up to the delay budget for new work, then poll.
-                match ingress_rx.recv_timeout(batch_cfg.max_batch_delay) {
-                    Ok((job, responder)) => {
-                        if let Some(batch) = batcher.push(job, responder) {
-                            batch_metrics.record_batch(batch.jobs.len());
-                            batch_queue.push(WorkItem::Batch(batch));
-                        }
-                    }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                }
-                for batch in batcher.poll(Instant::now()) {
-                    batch_metrics.record_batch(batch.jobs.len());
-                    batch_queue.push(WorkItem::Batch(batch));
-                }
-            }
-            for batch in batcher.drain() {
-                batch_metrics.record_batch(batch.jobs.len());
-                batch_queue.push(WorkItem::Batch(batch));
-            }
-            // No further batches can arrive: workers drain the queue
-            // and exit.
-            batch_queue.close();
-        });
-
-        // Worker pool: batch-time resolution + execution. Each worker
-        // owns a kernel scratch (reusable per-dtype operand/output
-        // buffers) so the numeric arm allocates nothing at steady
-        // state in either precision.
-        let numeric = config.numeric;
-        let wall_calibrated = config.wall_calibrated;
-        let mut workers = Vec::with_capacity(config.workers);
-        for _ in 0..config.workers.max(1) {
-            let queue = work.clone();
-            let cache = cache.clone();
-            let metrics = metrics.clone();
-            let calibration = calibration.clone();
-            let wall = wall.clone();
-            let churn = churn.clone();
-            let hints = hints.clone();
-            let recorder = recorder.as_ref().map(|(r, _)| r.clone());
-            workers.push(std::thread::spawn(move || {
-                let mut scratch = crate::kernels::Scratch::default();
-                loop {
-                    let (item, waited) = queue.pop();
-                    metrics.record_queue_wait(waited);
-                    match item {
-                        Some(WorkItem::Batch(batch)) => {
-                            // Which calibration steers the argmin: the
-                            // wall-fed one when configured (dispatch
-                            // follows measured kernels), the
-                            // simulated-cycle one otherwise.
-                            let resolve_cal: &Calibration = if wall_calibrated {
-                                wall.calibration()
-                            } else {
-                                &calibration
-                            };
-                            process_batch(
-                                batch,
-                                &cache,
-                                resolve_cal,
-                                &calibration,
-                                &churn,
-                                &hints,
-                                &metrics,
-                                numeric.then_some(NumericArm {
-                                    scratch: &mut scratch,
-                                    wall: Some(&wall),
-                                    recorder: recorder.as_deref(),
-                                    threads: 1,
-                                }),
-                            )
-                        }
-                        None => break,
-                    }
-                }
+        let shard_count = config.workers.max(1);
+        let mut shards = Vec::with_capacity(shard_count);
+        for _ in 0..shard_count {
+            shards.push(Arc::new(Shard {
+                cache: PlanCache::with_capacity(
+                    spec.clone(),
+                    cm.clone(),
+                    caches.plan_capacity,
+                    caches.memo_capacity,
+                    caches.prepared_capacity,
+                ),
+                calibration: Calibration::with_capacity(
+                    DEFAULT_ALPHA,
+                    caches.calibration_capacity,
+                ),
+                wall: WallFeedback::with_shared_scale(
+                    DEFAULT_ALPHA,
+                    caches.calibration_capacity,
+                    wall_scale.clone(),
+                ),
+                churn: ChurnTracker::with_capacity(caches.churn_capacity),
+                hints: Arc::new(PatternHints::with_capacity(caches.hint_capacity)),
+                queue: WorkQueue::new(),
+                metrics: metrics.register_shard(),
             }));
         }
-        Self {
-            cache,
-            metrics,
-            calibration,
-            wall,
-            churn,
-            hints,
-            work,
-            ingress: Some(ingress_tx),
-            ingress_thread: Some(ingress_thread),
-            workers,
-            shutting_down,
-            recorder,
+
+        let mut workers = Vec::with_capacity(shard_count);
+        for shard in &shards {
+            let shard = shard.clone();
+            let global = metrics.clone();
+            let recorder = recorder.as_ref().map(|(r, _)| r.clone());
+            let (max_batch_n, max_batch_delay) = (config.max_batch_n, config.max_batch_delay);
+            let (numeric, wall_calibrated) = (config.numeric, config.wall_calibrated);
+            let panic_seed = config.panic_on_pattern_seed;
+            workers.push(std::thread::spawn(move || {
+                worker_loop(
+                    shard,
+                    global,
+                    recorder,
+                    max_batch_n,
+                    max_batch_delay,
+                    numeric,
+                    wall_calibrated,
+                    panic_seed,
+                )
+            }));
         }
+        Self { shards, metrics, wall_scale, workers, shutting_down, recorder }
+    }
+
+    /// The shard serving `job`'s pattern geometry: a deterministic
+    /// function of the geometry alone ([`PatternKey::stable_hash`]),
+    /// so one weight configuration's plans, decisions, calibration and
+    /// churn state live on exactly one shard across the process's
+    /// lifetime — and across runs.
+    fn shard_of(&self, job: &JobSpec) -> usize {
+        (job.pattern_key().stable_hash() % self.shards.len() as u64) as usize
     }
 
     /// Submit a job; the returned channel yields its result.
@@ -349,15 +441,9 @@ impl Coordinator {
         if let Some((recorder, _)) = &self.recorder {
             recorder.record_job(&job);
         }
-        match self.ingress.as_ref() {
-            Some(ingress) => {
-                if let Err(e) = ingress.send((job, tx.clone())) {
-                    let _ = tx.send(Err(Error::Coordinator(format!("ingress closed: {e}"))));
-                }
-            }
-            None => {
-                let _ = tx.send(Err(Error::Coordinator("shut down".into())));
-            }
+        let shard = &self.shards[self.shard_of(&job)];
+        if !shard.queue.push((job, tx.clone())) {
+            let _ = tx.send(Err(Error::Coordinator("shut down".into())));
         }
         rx
     }
@@ -369,55 +455,160 @@ impl Coordinator {
             .map_err(|_| Error::Coordinator("worker dropped response".into()))?
     }
 
+    /// Serving metrics: drains every shard's locally-accumulated
+    /// counters into the global view, then snapshots it.
     pub fn metrics(&self) -> Snapshot {
         self.metrics.snapshot()
     }
 
-    /// Execution-path plan cache (hits, misses).
+    /// Number of shards (== worker threads).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn sum_pair(&self, f: impl Fn(&Shard) -> (u64, u64)) -> (u64, u64) {
+        self.shards.iter().fold((0, 0), |(a, b), s| {
+            let (x, y) = f(s);
+            (a + x, b + y)
+        })
+    }
+
+    /// Execution-path plan cache (hits, misses), summed over shards.
     pub fn plan_cache_stats(&self) -> (u64, u64) {
-        self.cache.stats()
+        self.sum_pair(|s| s.cache.stats())
     }
 
     /// Resolution-path plan cache (hits, misses) — candidate planning
-    /// during batch-time auto resolution.
+    /// during batch-time auto resolution, summed over shards.
     pub fn resolution_plan_stats(&self) -> (u64, u64) {
-        self.cache.resolution_stats()
+        self.sum_pair(|s| s.cache.resolution_stats())
     }
 
-    /// Auto-mode decision memo (hits, misses).
+    /// Auto-mode decision memo (hits, misses), summed over shards.
     pub fn mode_memo_stats(&self) -> (u64, u64) {
-        self.cache.mode_stats()
+        self.sum_pair(|s| s.cache.mode_stats())
     }
 
-    /// The observed-cycle calibration the coordinator resolves
-    /// [`Mode::Auto`] batches with (unless
-    /// [`Config::wall_calibrated`] routed resolution to the wall-fed
-    /// one).
-    pub fn calibration(&self) -> &Calibration {
-        &self.calibration
+    /// Live compiled plans across all shards.
+    pub fn plans_len(&self) -> usize {
+        self.shards.iter().map(|s| s.cache.plans_len()).sum()
     }
 
-    /// The measured-wall-time feedback the numeric arm populates: the
-    /// units-normalization layer plus the wall-fed calibration
-    /// ([`Config::wall_calibrated`] resolves against it).
-    pub fn wall_feedback(&self) -> &WallFeedback {
-        &self.wall
+    /// Live memoized auto-mode decisions across all shards.
+    pub fn memo_len(&self) -> usize {
+        self.shards.iter().map(|s| s.cache.memo_len()).sum()
     }
 
-    /// The pattern-churn tracker feeding workload-aware scoring.
-    pub fn churn(&self) -> &ChurnTracker {
-        &self.churn
+    /// Compiled-plan eviction accounting (evictions,
+    /// misses-after-evict), summed over shards.
+    pub fn plan_eviction_stats(&self) -> (u64, u64) {
+        self.sum_pair(|s| s.cache.plan_eviction_stats())
     }
 
-    /// The pattern-relevance hints the batcher keys auto jobs with.
-    pub fn pattern_hints(&self) -> &PatternHints {
-        &self.hints
+    /// Decision-memo eviction accounting, summed over shards.
+    pub fn memo_eviction_stats(&self) -> (u64, u64) {
+        self.sum_pair(|s| s.cache.memo_eviction_stats())
     }
 
-    /// The plan cache itself, for capacity/eviction introspection
-    /// (stat shortcuts above cover the common counters).
-    pub fn plan_cache(&self) -> &PlanCache {
-        &self.cache
+    /// Prepared-operand lookups (hits, misses), summed over shards.
+    pub fn prepared_stats(&self) -> (u64, u64) {
+        self.sum_pair(|s| s.cache.prepared_stats())
+    }
+
+    /// Prepared-operand eviction accounting, summed over shards.
+    pub fn prepared_eviction_stats(&self) -> (u64, u64) {
+        self.sum_pair(|s| s.cache.prepared_eviction_stats())
+    }
+
+    /// `BlockCoo -> PreparedBsr` conversions actually performed across
+    /// all shards — the steady-state-serving invariant is that this
+    /// stops moving once the working set's patterns are cached.
+    pub fn prepared_conversions(&self) -> u64 {
+        self.shards.iter().map(|s| s.cache.prepared_conversions()).sum()
+    }
+
+    /// Observed-cycle calibration buckets live across all shards.
+    pub fn calibration_buckets(&self) -> usize {
+        self.shards.iter().map(|s| s.calibration.buckets()).sum()
+    }
+
+    /// Observed-cycle calibration observations across all shards.
+    pub fn calibration_observations(&self) -> u64 {
+        self.shards.iter().map(|s| s.calibration.observations()).sum()
+    }
+
+    /// Observed-cycle calibration eviction accounting, summed over
+    /// shards.
+    pub fn calibration_eviction_stats(&self) -> (u64, u64) {
+        self.sum_pair(|s| s.calibration.eviction_stats())
+    }
+
+    /// Feed one externally-observed execution into the calibration of
+    /// the shard that serves `job`'s pattern geometry — the same
+    /// bucket the serving path's own feedback lands in, so tests and
+    /// tools warm exactly the state dispatch will read.
+    pub fn calibration_observe(
+        &self,
+        kind: BackendKind,
+        job: &JobSpec,
+        estimated_cycles: u64,
+        observed_cycles: u64,
+    ) {
+        self.shards[self.shard_of(job)]
+            .calibration
+            .observe(kind, job, estimated_cycles, observed_cycles);
+    }
+
+    /// Measured kernel walls observed by the shared host units layer
+    /// (one [`WallScale`] across every shard).
+    pub fn wall_scale_samples(&self) -> u64 {
+        self.wall_scale.samples()
+    }
+
+    /// The shared host ns-per-estimated-cycle scale (0.0 until the
+    /// first measured wall lands).
+    pub fn wall_ns_per_cycle(&self) -> f64 {
+        self.wall_scale.ns_per_cycle()
+    }
+
+    /// Post-warm-up walls fed through to the wall calibrations, summed
+    /// over shards.
+    pub fn wall_fed_observations(&self) -> u64 {
+        self.shards.iter().map(|s| s.wall.observations()).sum()
+    }
+
+    /// Wall-fed calibration buckets live across all shards.
+    pub fn wall_calibration_buckets(&self) -> usize {
+        self.shards.iter().map(|s| s.wall.calibration().buckets()).sum()
+    }
+
+    /// Pattern geometries tracked by the churn EWMAs across all
+    /// shards.
+    pub fn churn_geometries(&self) -> usize {
+        self.shards.iter().map(|s| s.churn.geometries()).sum()
+    }
+
+    /// Churn-map evictions across all shards.
+    pub fn churn_evictions(&self) -> u64 {
+        self.shards.iter().map(|s| s.churn.evictions()).sum()
+    }
+
+    /// Pattern-relevance hints resident across all shards.
+    pub fn pattern_hints_len(&self) -> usize {
+        self.shards.iter().map(|s| s.hints.len()).sum()
+    }
+
+    /// Mutex contention observed on the shard work queues — contended
+    /// lock acquisitions and the total time spent blocked on them,
+    /// summed over shards. Condvar waits (idle workers parked for
+    /// work) are queue waits, metered separately per job; this number
+    /// isolates genuine lock contention, and the `repro bench
+    /// contention` experiment asserts it stays ~0 at steady state.
+    pub fn queue_lock_wait(&self) -> (u64, Duration) {
+        self.shards.iter().fold((0, Duration::ZERO), |(c, d), s| {
+            let (sc, sd) = s.queue.lock_wait();
+            (c + sc, d + sd)
+        })
     }
 
     /// The workload recorder, when [`Config::record_trace`] is set.
@@ -425,31 +616,27 @@ impl Coordinator {
         self.recorder.as_ref().map(|(r, _)| r.as_ref())
     }
 
-    /// Graceful shutdown: flush the batcher, join all threads. A
-    /// thread that died of a panic mid-flight (poisoned lock,
-    /// kernel-layer bug) is reported to stderr rather than silently
-    /// swallowed — its queued responders were already dropped, so
-    /// every waiting submitter has seen a disconnect, and the
-    /// remaining threads still join (the queue is closed below
-    /// regardless of how the ingress thread ended).
-    pub fn shutdown(mut self) {
+    /// Graceful shutdown: close every shard queue (workers drain their
+    /// batchers and flush their metrics on the way out), join all
+    /// threads, and return how many workers had died of a panic
+    /// mid-flight. A dead worker is reported to stderr rather than
+    /// silently swallowed — its queued responders were already
+    /// dropped, so every waiting submitter has seen a disconnect, and
+    /// the remaining shards' workers still join normally.
+    pub fn shutdown(mut self) -> usize {
         self.shutting_down.store(true, Ordering::Relaxed);
-        drop(self.ingress.take());
-        let mut died = 0usize;
-        if let Some(t) = self.ingress_thread.take() {
-            died += usize::from(t.join().is_err());
+        for shard in &self.shards {
+            shard.queue.close();
         }
-        // The ingress thread closes the queue on its way out; closing
-        // again is an idempotent no-op, and it keeps the worker joins
-        // below from hanging if that thread ever died abnormally.
-        self.work.close();
+        let mut died = 0usize;
         for w in self.workers.drain(..) {
             died += usize::from(w.join().is_err());
         }
         if died > 0 {
             eprintln!(
-                "coordinator shutdown: {died} thread(s) had panicked mid-flight; \
-                 their in-flight jobs saw channel disconnects"
+                "coordinator shutdown: {died} worker(s) had panicked mid-flight; \
+                 their in-flight jobs saw channel disconnects and their shards \
+                 stopped serving"
             );
         }
         // Write the workload trace after every thread has joined, so
@@ -461,12 +648,19 @@ impl Coordinator {
                 eprintln!("coordinator shutdown: trace write failed: {e:?}");
             }
         }
+        died
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutting_down.store(true, Ordering::Relaxed);
+        // Without an ingress thread there is no one else to close the
+        // queues: do it here so workers exit even when the handle is
+        // dropped without an explicit shutdown.
+        for shard in &self.shards {
+            shard.queue.close();
+        }
     }
 }
 
@@ -476,7 +670,7 @@ impl Drop for Coordinator {
 /// where recorded walls feed the calibration instead of live ones —
 /// see [`replay`]), the workload recorder tap
 /// ([`Config::record_trace`]), and the kernel thread count (1 per
-/// live worker — the pool is the parallelism; replay, which is
+/// live worker — the shards are the parallelism; replay, which is
 /// serial, may use the bit-exact row-panel parallel path).
 pub(crate) struct NumericArm<'a> {
     pub(crate) scratch: &'a mut Scratch,
@@ -511,7 +705,9 @@ impl NumericArm<'_> {
 /// mixed pattern seeds takes the safe re-keying path: it is split
 /// back into per-pattern sub-batches, each executed against its own
 /// pattern — one static pass must never impose one job's pattern on
-/// another's.
+/// another's. Runs against exactly one shard's private state (the
+/// replay session's shard states ride the same code path — see
+/// [`replay`]); `metrics` is that shard's local sink.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn process_batch(
     batch: Batch<Responder>,
@@ -520,7 +716,7 @@ pub(crate) fn process_batch(
     calibration: &Calibration,
     churn: &ChurnTracker,
     hints: &PatternHints,
-    metrics: &Metrics,
+    metrics: &ShardMetrics,
     mut numeric: Option<NumericArm<'_>>,
 ) {
     let t0 = Instant::now();
@@ -636,7 +832,7 @@ fn execute_group(
     t0: Instant,
     cache: &PlanCache,
     calibration: &Calibration,
-    metrics: &Metrics,
+    metrics: &ShardMetrics,
     numeric: Option<NumericArm<'_>>,
 ) {
     let planned = cache.get_or_plan(rep);
@@ -692,10 +888,10 @@ fn execute_group(
             // batch geometry and record the measured wall time; sparse
             // operands come from the plan cache's dtype-keyed prepared
             // slot, so a steady-state (pattern, dtype) costs zero
-            // conversions here. Single-threaded per worker: the pool
-            // itself is the serving-side parallelism; the row-panel
-            // parallel path is for dedicated execution (`repro bench
-            // wall`). A kernel error cannot un-serve the
+            // conversions here. Single-threaded per worker: the shards
+            // themselves are the serving-side parallelism; the
+            // row-panel parallel path is for dedicated execution
+            // (`repro bench wall`). A kernel error cannot un-serve the
             // already-simulated jobs, so it lands in its own counter.
             // Successful runs also feed the wall-time units layer, so
             // measured kernel reality accumulates per (backend,
@@ -835,7 +1031,8 @@ mod tests {
         let rxs: Vec<_> = (0..4).map(|_| c.submit(job(Mode::Dynamic, 64, 3))).collect();
         let results: Vec<_> = rxs.into_iter().map(wait_ok).collect();
         assert_eq!(results.len(), 4);
-        // 4 jobs x n=64 = 256 -> one flush at capacity.
+        // 4 jobs x n=64 = 256 -> one flush at capacity (all four share
+        // a pattern geometry, so they route to one shard's batcher).
         let snap = c.metrics();
         assert!(snap.mean_batch_size > 1.0, "batching should coalesce: {snap:?}");
         c.shutdown();
@@ -890,17 +1087,17 @@ mod tests {
         assert_eq!(snap.kernel_failures, 0);
         assert!(snap.kernel_wall_total > Duration::ZERO);
         assert!(snap.kernel_gflops > 0.0, "wall-time throughput observable");
-        assert!(snap.queue_waits >= 3, "every pop meters its wait");
+        assert!(snap.queue_waits >= 3, "every job pop meters its wait");
         assert_eq!(
-            c.plan_cache().prepared_conversions(),
+            c.prepared_conversions(),
             1,
             "steady-state FP16 serving converts each pattern exactly once"
         );
-        assert_eq!(c.plan_cache().prepared_stats(), (2, 1));
-        // The measured kernels reached the wall-feedback units layer
+        assert_eq!(c.prepared_stats(), (2, 1));
+        // The measured kernels reached the shared wall units layer
         // (still warming up at 3 samples — nothing fed yet, but the
         // scale is live).
-        assert_eq!(c.wall_feedback().scale_samples(), 3);
+        assert_eq!(c.wall_scale_samples(), 3);
         c.shutdown();
     }
 
@@ -917,11 +1114,11 @@ mod tests {
         fp32.dtype = DType::Fp32;
         let _ = c.submit_wait(job(Mode::Static, 64, 7)).expect("fp16 serves");
         let _ = c.submit_wait(fp32.clone()).expect("fp32 serves");
-        assert_eq!(c.plan_cache().prepared_conversions(), 2, "one conversion per dtype");
+        assert_eq!(c.prepared_conversions(), 2, "one conversion per dtype");
         let _ = c.submit_wait(job(Mode::Static, 64, 7)).expect("fp16 steady state");
         let _ = c.submit_wait(fp32).expect("fp32 steady state");
         assert_eq!(
-            c.plan_cache().prepared_conversions(),
+            c.prepared_conversions(),
             2,
             "steady state per dtype: no re-conversion on dtype flips"
         );
@@ -947,15 +1144,15 @@ mod tests {
             let _ = c.submit_wait(job(mode, 64, 7)).expect("job serves");
         }
         assert_eq!(c.metrics().kernel_execs as usize, rounds);
-        assert!(c.wall_feedback().scale_samples() as usize >= rounds);
+        assert!(c.wall_scale_samples() as usize >= rounds);
         assert!(
-            c.wall_feedback().observations() > 0,
+            c.wall_fed_observations() > 0,
             "post-warm-up kernel walls must reach the wall calibration"
         );
-        assert!(c.wall_feedback().ns_per_cycle() > 0.0);
+        assert!(c.wall_ns_per_cycle() > 0.0);
         assert_eq!(
             c.metrics().wall_observations,
-            c.wall_feedback().observations(),
+            c.wall_fed_observations(),
             "metrics mirror the feedback counter"
         );
         // An auto job resolves against the wall-fed calibration
@@ -973,7 +1170,7 @@ mod tests {
         let _ = c.submit_wait(job(Mode::Static, 64, 7)).expect("job serves");
         let snap = c.metrics();
         assert_eq!(snap.kernel_execs, 0, "numeric arm is opt-in");
-        assert_eq!(c.plan_cache().prepared_conversions(), 0);
+        assert_eq!(c.prepared_conversions(), 0);
         c.shutdown();
     }
 
@@ -1018,7 +1215,9 @@ mod tests {
         // cache: the execution-path lookup must have been a hit.
         assert!(r.plan_cache_hit, "resolution plans must be reused at execution");
         // Same geometry, different pattern seed: the decision is
-        // memoized (the seed is not part of the selector key).
+        // memoized (the seed is not part of the selector key), and —
+        // because routing hashes the pattern *geometry* — both jobs
+        // land on one shard, so the memo genuinely serves the second.
         let r2 = c.submit_wait(job(Mode::Auto, 128, 9)).expect("memoized auto serves");
         assert_eq!(r2.spec.mode, r.spec.mode);
         assert_eq!(c.mode_memo_stats(), (1, 1));
@@ -1062,5 +1261,75 @@ mod tests {
         assert_eq!(hits_after, hits_before + 1);
         assert_eq!(misses_after, misses_before);
         c.shutdown();
+    }
+
+    #[test]
+    fn geometry_routing_is_deterministic() {
+        let c = Coordinator::new(Config::default(), IpuSpec::default(), CostModel::default());
+        // Same geometry, any mode/seed: one shard, always.
+        let home = c.shard_of(&job(Mode::Auto, 64, 1));
+        assert_eq!(home, c.shard_of(&job(Mode::Static, 4096, 99)));
+        assert!(home < c.shard_count());
+        // Distinct geometries spread (the pinned FNV-1a + splitmix64
+        // hash mixes m well enough that 8 multiples of 256 never all
+        // collapse onto one of 4 shards).
+        let shards: std::collections::HashSet<usize> = (1..=8usize)
+            .map(|i| {
+                let mut j = job(Mode::Dense, 64, 0);
+                j.m = 256 * i;
+                c.shard_of(&j)
+            })
+            .collect();
+        assert!(shards.len() > 1, "geometry hashing must spread across shards");
+        c.shutdown();
+    }
+
+    #[test]
+    fn a_panicked_worker_leaves_the_other_shards_serving() {
+        // The cascade regression this PR fixes: one worker dying of a
+        // panic used to poison shared maps, so every other worker's
+        // next lock acquisition panicked too. Under sharding + poison
+        // tolerance, a deliberately-killed worker must cost exactly
+        // its own shard, and shutdown must still join and report it.
+        const POISON_SEED: u64 = 0xdead_beef;
+        let c = Coordinator::new(
+            Config {
+                workers: 4,
+                max_batch_delay: Duration::from_millis(1),
+                panic_on_pattern_seed: Some(POISON_SEED),
+                ..Config::default()
+            },
+            IpuSpec::default(),
+            CostModel::default(),
+        );
+        let poison = job(Mode::Dynamic, 64, POISON_SEED);
+        let dead = c.shard_of(&poison);
+        // The poisoned submission sees a disconnect, never a hang.
+        assert!(
+            c.submit(poison).recv().is_err(),
+            "the dying worker must drop the responder, signalling the submitter"
+        );
+        // Every other shard keeps serving afterwards.
+        let mut served_elsewhere = 0usize;
+        for i in 1..=8usize {
+            let mut probe = job(Mode::Dense, 64, 3);
+            probe.m = 256 * i;
+            if c.shard_of(&probe) == dead {
+                continue;
+            }
+            let r = c.submit_wait(probe).expect("surviving shards must keep serving");
+            assert!(r.cycles > 0);
+            served_elsewhere += 1;
+        }
+        assert!(served_elsewhere > 0, "the probe geometries must hit a surviving shard");
+        // Shutdown joins everything and reports exactly one death.
+        assert_eq!(c.shutdown(), 1, "shutdown must report the panicked worker");
+    }
+
+    #[test]
+    fn shutdown_reports_zero_deaths_on_a_clean_run() {
+        let c = Coordinator::new(Config::default(), IpuSpec::default(), CostModel::default());
+        let _ = c.submit_wait(job(Mode::Dense, 64, 0)).expect("serves");
+        assert_eq!(c.shutdown(), 0);
     }
 }

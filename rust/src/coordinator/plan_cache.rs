@@ -23,7 +23,7 @@
 //! deployment's working set has outgrown the bound.
 
 use std::sync::atomic::AtomicU64;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use crate::coordinator::request::{JobSpec, Mode, PlanKey, PreparedKey, SelectorKey};
 use crate::dense_::DensePlan;
@@ -61,6 +61,15 @@ pub const DEFAULT_MODE_MEMO_CAPACITY: usize = 4096;
 /// dtype, so mixed-precision traffic holds one entry per (pattern,
 /// dtype).
 pub const DEFAULT_PREPARED_CAPACITY: usize = 512;
+
+/// Poison-tolerant lock acquisition. Every map this cache owns is
+/// self-consistent at each lock release (plain LRU bookkeeping), so a
+/// panicked holder leaves valid state behind and the sharded
+/// coordinator must not cascade one worker's death into every thread
+/// that later touches the cache.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// A cached plan for one plan key.
 #[derive(Debug, Clone)]
@@ -226,7 +235,7 @@ impl PlanCache {
     /// the bound actually caused — misses on keys a previous eviction
     /// threw away.
     pub fn plan_eviction_stats(&self) -> (u64, u64) {
-        let g = self.plans.lock().expect("plan cache poisoned");
+        let g = locked(&self.plans);
         (g.evictions(), g.misses_after_evict())
     }
 
@@ -235,7 +244,7 @@ impl PlanCache {
     /// — cheap when the candidate plans are still cached, a full
     /// re-plan when they were evicted too.
     pub fn memo_eviction_stats(&self) -> (u64, u64) {
-        let g = self.modes.lock().expect("mode memo poisoned");
+        let g = locked(&self.modes);
         (g.evictions(), g.misses_after_evict())
     }
 
@@ -257,23 +266,23 @@ impl PlanCache {
     /// Prepared-operand eviction accounting: (evictions,
     /// misses-after-evict), mirroring [`PlanCache::plan_eviction_stats`].
     pub fn prepared_eviction_stats(&self) -> (u64, u64) {
-        let g = self.prepared.lock().expect("prepared operands poisoned");
+        let g = locked(&self.prepared);
         (g.evictions(), g.misses_after_evict())
     }
 
     /// Live compiled plans.
     pub fn plans_len(&self) -> usize {
-        self.plans.lock().expect("plan cache poisoned").len()
+        locked(&self.plans).len()
     }
 
     /// Live memoized auto-mode decisions.
     pub fn memo_len(&self) -> usize {
-        self.modes.lock().expect("mode memo poisoned").len()
+        locked(&self.modes).len()
     }
 
     /// Live prepared operands.
     pub fn prepared_len(&self) -> usize {
-        self.prepared.lock().expect("prepared operands poisoned").len()
+        locked(&self.prepared).len()
     }
 
     /// Get or convert the prepared numeric operand for `job`'s
@@ -288,7 +297,7 @@ impl PlanCache {
     pub fn get_or_prepare(&self, job: &JobSpec) -> Result<(PreparedOperand, bool)> {
         use std::sync::atomic::Ordering::Relaxed;
         let key = job.prepared_key();
-        if let Some(p) = self.prepared.lock().expect("prepared operands poisoned").get(&key) {
+        if let Some(p) = locked(&self.prepared).get(&key) {
             self.prepared_hits.fetch_add(1, Relaxed);
             return Ok((p.clone(), true));
         }
@@ -302,7 +311,7 @@ impl PlanCache {
         )?;
         self.prepared_conversions.fetch_add(1, Relaxed);
         self.prepared_misses.fetch_add(1, Relaxed);
-        let mut map = self.prepared.lock().expect("prepared operands poisoned");
+        let mut map = locked(&self.prepared);
         // A racing thread may have planted the operand while we
         // converted; keep theirs (peek: this miss is already counted).
         if let Some(existing) = map.peek(&key) {
@@ -378,7 +387,7 @@ impl PlanCache {
         let key = rep.selector_key();
         let stamp = calibration.map(|c| c.geometry_stamp(rep)).unwrap_or(0);
         let churn_stamp = churn.map(|t| t.stamp(rep.pattern_key())).unwrap_or(0);
-        if let Some(e) = self.modes.lock().expect("mode memo poisoned").get(&key) {
+        if let Some(e) = locked(&self.modes).get(&key) {
             // Stamps are monotone per bucket but RESET when the
             // bounded calibration/churn maps evict a bucket — a
             // current stamp *below* the entry's means the regime the
@@ -448,7 +457,7 @@ impl PlanCache {
         let flipped = calibrated_mode != raw_mode;
         let churn_shifted = mode != calibrated_mode;
         self.mode_misses.fetch_add(1, Relaxed);
-        self.modes.lock().expect("mode memo poisoned").insert(
+        locked(&self.modes).insert(
             key,
             MemoEntry { mode, raw_cycles, corrected_cycles, stamp, churn_stamp },
         );
@@ -475,14 +484,14 @@ impl PlanCache {
     ) -> Result<(CachedPlan, bool)> {
         use std::sync::atomic::Ordering::Relaxed;
         let key = job.plan_key();
-        if let Some(plan) = self.plans.lock().expect("plan cache poisoned").get(&key) {
+        if let Some(plan) = locked(&self.plans).get(&key) {
             hits.fetch_add(1, Relaxed);
             return Ok((plan.clone(), true));
         }
         // Plan outside the lock (planning can take milliseconds).
         let plan = self.build(job)?;
         misses.fetch_add(1, Relaxed);
-        let mut map = self.plans.lock().expect("plan cache poisoned");
+        let mut map = locked(&self.plans);
         // A racing thread may have planted the plan while we built
         // ours; keep theirs (peek: the first lookup already did this
         // miss's accounting).

@@ -3,10 +3,10 @@
 //! reproducibly, under any [`Config`] (DESIGN.md §7).
 //!
 //! The live coordinator is deliberately nondeterministic — delay
-//! flushes race the clock, workers race each other for batches, and
-//! measured kernel walls depend on the host. Replay removes every one
-//! of those sources while keeping the *logic* identical (it executes
-//! the same [`process_batch`] the worker pool runs):
+//! flushes race the clock, shard workers race each other, and measured
+//! kernel walls depend on the host. Replay removes every one of those
+//! sources while keeping the *logic* identical (it executes the same
+//! [`process_batch`] the live workers run):
 //!
 //! * **Serial, synchronous execution.** One thread; each batch is
 //!   processed the moment it flushes. No worker races, no queue.
@@ -26,6 +26,16 @@
 //!   (resolved mode, cycles, tflops, propagation steps, cache hit,
 //!   estimate). Latency and wall-time metrics are excluded by
 //!   construction.
+//! * **Sharded replay.** [`ReplaySession::with_shards`] mirrors the
+//!   live coordinator's geometry-hash sharding with N per-shard state
+//!   sets, still processed serially in trace order. Because every
+//!   batch key lives on exactly one shard, capacity flushes fire at
+//!   identical stream positions regardless of the shard count; only
+//!   the end-of-trace drain order *across* shards differs, which is
+//!   counter-invisible when geometries occupy distinct calibration
+//!   buckets. `repro trace replay --shards N` is the A/B that pins
+//!   the sharded coordinator's state partitioning against the
+//!   single-shard baseline, byte for byte.
 //!
 //! Two replays of one trace under one `Config` must produce
 //! byte-identical reports (`repro trace diff`; pinned by
@@ -38,11 +48,11 @@ use std::time::Duration;
 use crate::bench_harness::trace::{Trace, TraceEvent};
 use crate::coordinator::batcher::{Batcher, PatternHints};
 use crate::coordinator::{
-    process_batch, Batch, Config, JobResult, Metrics, Mode, NumericArm, PlanCache, Responder,
-    Snapshot,
+    process_batch, Batch, Config, JobResult, JobSpec, Metrics, Mode, NumericArm, PlanCache,
+    Responder, ShardMetrics, Snapshot,
 };
 use crate::engine::calibration::DEFAULT_ALPHA;
-use crate::engine::{BackendKind, Calibration, ChurnTracker, WallFeedback};
+use crate::engine::{BackendKind, Calibration, ChurnTracker, WallFeedback, WallScale};
 use crate::error::{Error, Result};
 use crate::kernels::Scratch;
 use crate::sim::chip::{CostModel, IpuSpec};
@@ -51,20 +61,27 @@ use crate::util::json::{escape_str, fmt_number, Json};
 /// Replay report format version.
 pub const REPLAY_VERSION: u64 = 1;
 
-/// One replay session: the full serving-side state (plan cache,
-/// calibrations, churn tracker, hints, batcher) owned by a single
-/// thread. Build one per replay run — state carries over between
-/// [`ReplaySession::replay`] calls on the same session, which is
-/// useful for warm-cache experiments but *not* what `repro trace
-/// diff` compares.
-pub struct ReplaySession {
+/// One replay shard's serving state — the same partition a live
+/// worker owns, minus the queue and thread.
+struct ShardState {
     cache: PlanCache,
-    metrics: Metrics,
     calibration: Calibration,
     wall: WallFeedback,
     churn: ChurnTracker,
     hints: Arc<PatternHints>,
     batcher: Batcher<Responder>,
+    metrics: Arc<ShardMetrics>,
+}
+
+/// One replay session: the full serving-side state (plan caches,
+/// calibrations, churn trackers, hints, batchers — one set per
+/// shard), owned by a single thread. Build one per replay run — state
+/// carries over between [`ReplaySession::replay`] calls on the same
+/// session, which is useful for warm-cache experiments but *not* what
+/// `repro trace diff` compares.
+pub struct ReplaySession {
+    shards: Vec<ShardState>,
+    metrics: Metrics,
     scratch: Scratch,
     numeric: bool,
     wall_calibrated: bool,
@@ -72,38 +89,82 @@ pub struct ReplaySession {
 }
 
 impl ReplaySession {
-    /// A session executing under `config`'s serving policy
-    /// (`max_batch_n`, cache bounds, `numeric`, `wall_calibrated`;
-    /// `workers`, `max_batch_delay` and `record_trace` are
-    /// meaningless under serial logical-time replay and ignored).
-    /// `threads` drives only the bit-exact row-panel kernel
-    /// parallelism of the numeric arm — it must not change any
+    /// A single-shard session executing under `config`'s serving
+    /// policy (`max_batch_n`, cache bounds, `numeric`,
+    /// `wall_calibrated`; `workers`, `max_batch_delay` and
+    /// `record_trace` are meaningless under serial logical-time replay
+    /// and ignored). `threads` drives only the bit-exact row-panel
+    /// kernel parallelism of the numeric arm — it must not change any
     /// reported value (`tests/trace_replay.rs` pins `--threads 1`
     /// against N).
     pub fn new(config: &Config, spec: IpuSpec, cm: CostModel, threads: usize) -> Self {
+        Self::with_shards(config, spec, cm, threads, 1)
+    }
+
+    /// A session partitioned into `shards` geometry-hash shards, the
+    /// replay mirror of the live coordinator's `workers` — still
+    /// serial and deterministic; the report must stay byte-identical
+    /// to the single-shard session's for any shard count.
+    pub fn with_shards(
+        config: &Config,
+        spec: IpuSpec,
+        cm: CostModel,
+        threads: usize,
+        shards: usize,
+    ) -> Self {
         let caches = config.caches;
-        let hints = Arc::new(PatternHints::with_capacity(caches.hint_capacity));
+        let metrics = Metrics::new();
+        // Like the live coordinator, the host units scale is shared
+        // across shards, so warm-up counting does not depend on the
+        // shard layout.
+        let scale = Arc::new(WallScale::new());
+        let shards = (0..shards.max(1))
+            .map(|_| {
+                let hints = Arc::new(PatternHints::with_capacity(caches.hint_capacity));
+                ShardState {
+                    cache: PlanCache::with_capacity(
+                        spec.clone(),
+                        cm.clone(),
+                        caches.plan_capacity,
+                        caches.memo_capacity,
+                        caches.prepared_capacity,
+                    ),
+                    calibration: Calibration::with_capacity(
+                        DEFAULT_ALPHA,
+                        caches.calibration_capacity,
+                    ),
+                    wall: WallFeedback::with_shared_scale(
+                        DEFAULT_ALPHA,
+                        caches.calibration_capacity,
+                        scale.clone(),
+                    ),
+                    churn: ChurnTracker::with_capacity(caches.churn_capacity),
+                    // Capacity-only batching: the delay budget is
+                    // irrelevant because poll() is never called.
+                    batcher: Batcher::with_hints(
+                        config.max_batch_n,
+                        config.max_batch_delay,
+                        hints.clone(),
+                    ),
+                    hints,
+                    metrics: metrics.register_shard(),
+                }
+            })
+            .collect();
         Self {
-            cache: PlanCache::with_capacity(
-                spec,
-                cm,
-                caches.plan_capacity,
-                caches.memo_capacity,
-                caches.prepared_capacity,
-            ),
-            metrics: Metrics::new(),
-            calibration: Calibration::with_capacity(DEFAULT_ALPHA, caches.calibration_capacity),
-            wall: WallFeedback::with_capacity(DEFAULT_ALPHA, caches.calibration_capacity),
-            churn: ChurnTracker::with_capacity(caches.churn_capacity),
-            // Capacity-only batching: the delay budget is irrelevant
-            // because poll() is never called.
-            batcher: Batcher::with_hints(config.max_batch_n, config.max_batch_delay, hints.clone()),
-            hints,
+            shards,
+            metrics,
             scratch: Scratch::default(),
             numeric: config.numeric,
             wall_calibrated: config.wall_calibrated,
             threads: threads.max(1),
         }
+    }
+
+    /// The shard owning `spec`'s pattern geometry — the same
+    /// deterministic FNV-1a routing the live coordinator uses.
+    fn shard_of(&self, spec: &JobSpec) -> usize {
+        (spec.pattern_key().stable_hash() % self.shards.len() as u64) as usize
     }
 
     /// Replay every event of `trace` in recorded order and return the
@@ -115,29 +176,52 @@ impl ReplaySession {
                 TraceEvent::Job { spec, .. } => {
                     let (tx, rx) = mpsc::channel();
                     pending.push(rx);
-                    if let Some(batch) = self.batcher.push(spec.clone(), tx) {
-                        self.process(batch);
+                    let idx = self.shard_of(spec);
+                    let shard = &mut self.shards[idx];
+                    if let Some(batch) = shard.batcher.push(spec.clone(), tx) {
+                        process_on(
+                            shard,
+                            &mut self.scratch,
+                            self.numeric,
+                            self.wall_calibrated,
+                            self.threads,
+                            batch,
+                        );
                     }
                 }
                 TraceEvent::Wall { spec, estimated, wall_ns, .. } => {
                     // Feed the *recorded* measurement at its recorded
-                    // position in the stream; the numeric arm below
-                    // never times anything into the feedback.
+                    // position in the stream, into the owning shard's
+                    // feedback; the numeric arm below never times
+                    // anything into it.
+                    let shard = &self.shards[self.shard_of(spec)];
                     if let Some(kind) = BackendKind::of_mode(spec.mode) {
-                        if self.wall.observe_wall(
+                        if shard.wall.observe_wall(
                             kind,
                             spec,
                             *estimated,
                             Duration::from_nanos(*wall_ns),
                         ) {
-                            self.metrics.record_wall_observation();
+                            shard.metrics.record_wall_observation();
                         }
                     }
                 }
             }
         }
-        for batch in self.batcher.drain() {
-            self.process(batch);
+        // End-of-trace drain, shard by shard, each sorted: the one
+        // place shard layout reorders processing — across shards only,
+        // never within one (see the module doc).
+        for shard in &mut self.shards {
+            for batch in shard.batcher.drain() {
+                process_on(
+                    shard,
+                    &mut self.scratch,
+                    self.numeric,
+                    self.wall_calibrated,
+                    self.threads,
+                    batch,
+                );
+            }
         }
         let mut jobs = Vec::with_capacity(pending.len());
         for (i, rx) in pending.into_iter().enumerate() {
@@ -161,43 +245,51 @@ impl ReplaySession {
         })
     }
 
-    /// Execute one flushed batch, synchronously, through the same
-    /// path the live worker pool runs.
-    fn process(&mut self, batch: Batch<Responder>) {
-        self.metrics.record_batch(batch.jobs.len());
-        let resolve_cal: &Calibration =
-            if self.wall_calibrated { self.wall.calibration() } else { &self.calibration };
-        process_batch(
-            batch,
-            &self.cache,
-            resolve_cal,
-            &self.calibration,
-            &self.churn,
-            &self.hints,
-            &self.metrics,
-            self.numeric.then_some(NumericArm {
-                scratch: &mut self.scratch,
-                // Live walls must never feed the calibration during
-                // replay — they are machine-dependent. Recorded wall
-                // events (handled above) are the only feedback source.
-                wall: None,
-                recorder: None,
-                threads: self.threads,
-            }),
-        );
-    }
-
-    /// The serving metrics accumulated so far (includes
-    /// non-deterministic timing fields — the report deliberately
-    /// omits them).
+    /// The serving metrics accumulated so far across all shards
+    /// (includes non-deterministic timing fields — the report
+    /// deliberately omits them).
     pub fn metrics(&self) -> Snapshot {
         self.metrics.snapshot()
     }
 
-    /// The wall feedback recorded `wall` events have fed.
+    /// The wall feedback recorded `wall` events have fed (shard 0's —
+    /// on a [`ReplaySession::new`] session, the only one).
     pub fn wall_feedback(&self) -> &WallFeedback {
-        &self.wall
+        &self.shards[0].wall
     }
+}
+
+/// Execute one flushed batch, synchronously, through the same path
+/// the live workers run, against `shard`'s state.
+fn process_on(
+    shard: &ShardState,
+    scratch: &mut Scratch,
+    numeric: bool,
+    wall_calibrated: bool,
+    threads: usize,
+    batch: Batch<Responder>,
+) {
+    shard.metrics.record_batch(batch.jobs.len());
+    let resolve_cal: &Calibration =
+        if wall_calibrated { shard.wall.calibration() } else { &shard.calibration };
+    process_batch(
+        batch,
+        &shard.cache,
+        resolve_cal,
+        &shard.calibration,
+        &shard.churn,
+        &shard.hints,
+        &shard.metrics,
+        numeric.then_some(NumericArm {
+            scratch,
+            // Live walls must never feed the calibration during
+            // replay — they are machine-dependent. Recorded wall
+            // events are the only feedback source.
+            wall: None,
+            recorder: None,
+            threads,
+        }),
+    );
 }
 
 /// One replayed job's deterministic outputs, in submission order.
@@ -414,7 +506,6 @@ impl ReplayReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::JobSpec;
     use crate::DType;
 
     fn spec(mode: Mode, n: usize, seed: u64) -> JobSpec {
@@ -443,6 +534,45 @@ mod tests {
         Trace::new(events)
     }
 
+    /// A stream mixing modes, dtypes and pattern geometries across
+    /// distinct log2(m) classes — 512/1024/2048 occupy distinct
+    /// calibration buckets and churn/memo geometries, so the sharded
+    /// end-of-trace drain order across shards cannot alias any
+    /// counter (see the module doc's byte-identity argument).
+    fn mixed_trace() -> Trace {
+        let modes = [Mode::Dense, Mode::Static, Mode::Dynamic, Mode::Auto, Mode::Auto];
+        let mut events = Vec::new();
+        let mut at = 0u64;
+        for round in 0..2u64 {
+            for &m in &[512usize, 1024, 2048] {
+                for (i, &mode) in modes.iter().enumerate() {
+                    let mut s = spec(mode, 64, (i as u64 + round) % 2);
+                    s.m = m;
+                    if i % 3 == 2 {
+                        s.dtype = DType::Fp32;
+                    }
+                    let mut w = s.clone();
+                    events.push(TraceEvent::Job { at_ns: at, spec: s });
+                    at += 1000;
+                    // A recorded wall per geometry round: the shared
+                    // units scale must warm identically under any
+                    // shard layout (serial trace order either way).
+                    if i == 1 {
+                        w.mode = Mode::Static;
+                        events.push(TraceEvent::Wall {
+                            at_ns: at,
+                            spec: w,
+                            estimated: 1000,
+                            wall_ns: 2000,
+                        });
+                        at += 1000;
+                    }
+                }
+            }
+        }
+        Trace::new(events)
+    }
+
     fn session() -> ReplaySession {
         ReplaySession::new(&Config::default(), IpuSpec::default(), CostModel::default(), 1)
     }
@@ -461,6 +591,37 @@ mod tests {
         let completed =
             a.counters.iter().find(|(k, _)| k == "jobs_completed").expect("counter present").1;
         assert_eq!(completed, 5);
+    }
+
+    #[test]
+    fn sharded_replay_is_byte_identical_to_single_shard() {
+        // The A/B behind the sharded coordinator: partitioning the
+        // serving state by pattern-geometry hash must not change a
+        // single reported byte — same counters after per-shard flush
+        // aggregation, same per-job results in submission order.
+        let trace = mixed_trace();
+        let cfg = Config::default();
+        let base = ReplaySession::with_shards(&cfg, IpuSpec::default(), CostModel::default(), 1, 1)
+            .replay(&trace)
+            .expect("single-shard replay");
+        assert!(base.jobs.iter().all(|j| j.error.is_none()), "{:?}", base.jobs);
+        for shards in [2usize, 4, 7] {
+            let report = ReplaySession::with_shards(
+                &cfg,
+                IpuSpec::default(),
+                CostModel::default(),
+                1,
+                shards,
+            )
+            .replay(&trace)
+            .expect("sharded replay");
+            assert_eq!(
+                base.to_json(),
+                report.to_json(),
+                "shards={shards}: report must be byte-identical to the single-shard baseline"
+            );
+            assert!(base.diff(&report).is_empty());
+        }
     }
 
     #[test]

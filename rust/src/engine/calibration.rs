@@ -25,7 +25,7 @@
 //! (`rust/tests/property_selection.rs` pins both properties).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use crate::coordinator::request::JobSpec;
 use crate::engine::backends::{BackendKind, PlanEstimate};
@@ -124,6 +124,15 @@ pub struct Calibration {
     observations: AtomicU64,
 }
 
+/// Poison-tolerant lock: a panicked worker thread must not make the
+/// calibration (or the shard it lives on) unreadable for shutdown
+/// reporting or the surviving shards' aggregate accessors. Every value
+/// here is a self-consistent EWMA scalar, so observing a
+/// mid-panic state is safe — at worst one observation is lost.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 impl Default for Calibration {
     fn default() -> Self {
         Self::new(DEFAULT_ALPHA)
@@ -151,12 +160,7 @@ impl Calibration {
     /// bucket (1.0 when nothing has been observed yet).
     pub fn factor(&self, kind: BackendKind, job: &JobSpec) -> f64 {
         let key = BucketKey::of(kind, job);
-        self.factors
-            .lock()
-            .expect("calibration poisoned")
-            .get(&key)
-            .map(|e| e.factor)
-            .unwrap_or(1.0)
+        locked(&self.factors).get(&key).map(|e| e.factor).unwrap_or(1.0)
     }
 
     /// Apply the bucket's correction to a raw cycle estimate.
@@ -176,7 +180,7 @@ impl Calibration {
         let ratio =
             (observed as f64 / estimated as f64).clamp(1.0 / MAX_CORRECTION, MAX_CORRECTION);
         let key = BucketKey::of(kind, job);
-        let mut factors = self.factors.lock().expect("calibration poisoned");
+        let mut factors = locked(&self.factors);
         let e = factors.get_or_insert_with(key, || Ewma { factor: 1.0, informative: 0 });
         if (ratio - e.factor).abs() >= INFORMATIVE_DELTA {
             e.informative += 1;
@@ -204,7 +208,7 @@ impl Calibration {
     /// dense/static traffic, whose simulated executions equal their
     /// estimates by construction — never churn the memo.
     pub fn geometry_stamp(&self, job: &JobSpec) -> u64 {
-        let factors = self.factors.lock().expect("calibration poisoned");
+        let factors = locked(&self.factors);
         [BackendKind::Dense, BackendKind::Static, BackendKind::Dynamic]
             .iter()
             .map(|&kind| {
@@ -215,7 +219,7 @@ impl Calibration {
 
     /// Number of (backend, geometry-bucket) factors tracked.
     pub fn buckets(&self) -> usize {
-        self.factors.lock().expect("calibration poisoned").len()
+        locked(&self.factors).len()
     }
 
     /// Bucket-map eviction accounting: (evictions,
@@ -223,19 +227,14 @@ impl Calibration {
     /// found their bucket gone — learned corrections the bound threw
     /// away and traffic then asked for.
     pub fn eviction_stats(&self) -> (u64, u64) {
-        let g = self.factors.lock().expect("calibration poisoned");
+        let g = locked(&self.factors);
         (g.evictions(), g.misses_after_evict())
     }
 
     /// All tracked factors, for reporting.
     pub fn snapshot(&self) -> Vec<(BucketKey, f64)> {
-        let mut v: Vec<(BucketKey, f64)> = self
-            .factors
-            .lock()
-            .expect("calibration poisoned")
-            .iter()
-            .map(|(k, e)| (*k, e.factor))
-            .collect();
+        let mut v: Vec<(BucketKey, f64)> =
+            locked(&self.factors).iter().map(|(k, e)| (*k, e.factor)).collect();
         v.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
         v
     }
@@ -333,14 +332,64 @@ pub const WALL_WARMUP_OBSERVATIONS: u64 = 8;
 #[derive(Debug)]
 pub struct WallFeedback {
     calibration: Calibration,
-    scale: Mutex<WallScale>,
+    scale: Arc<WallScale>,
     fed: AtomicU64,
 }
 
-#[derive(Debug, Clone, Copy)]
-struct WallScale {
-    ns_per_cycle: f64,
-    samples: u64,
+/// The host's nanoseconds-per-estimated-cycle EWMA, kept lock-free so
+/// the numeric hot path never serializes on it: `samples` is claimed
+/// with a fetch-add and the scale itself is f64 bits behind a CAS
+/// update loop. This is the one piece of state the sharded coordinator
+/// genuinely shares across workers (the scale is a property of the
+/// *host*, so per-shard copies would each re-pay warm-up and drift
+/// apart) — shared as atomically-published values, never a mutex.
+///
+/// Sequential callers (trace replay, the unit tests) see exactly the
+/// old mutex semantics: sample 1 seeds the scale to its own ratio,
+/// later samples EWMA toward theirs. Under concurrent writers the
+/// interleaving of CAS updates is schedule-dependent — fine for live
+/// serving, where the scale is a smoothed host property, and absent by
+/// construction in the byte-gated replay path (serial).
+#[derive(Debug, Default)]
+pub struct WallScale {
+    ns_per_cycle_bits: AtomicU64,
+    samples: AtomicU64,
+}
+
+impl WallScale {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one observed ns-per-cycle ratio in; returns the
+    /// post-update `(scale, samples)` pair.
+    fn observe(&self, ratio: f64) -> (f64, u64) {
+        let slot = self.samples.fetch_add(1, Ordering::SeqCst);
+        if slot == 0 {
+            self.ns_per_cycle_bits.store(ratio.to_bits(), Ordering::SeqCst);
+        } else {
+            let _ = self.ns_per_cycle_bits.fetch_update(
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+                |bits| {
+                    let current = f64::from_bits(bits);
+                    Some((current + WALL_SCALE_ALPHA * (ratio - current)).to_bits())
+                },
+            );
+        }
+        (self.ns_per_cycle(), slot + 1)
+    }
+
+    /// Current scale in nanoseconds per estimated cycle (0.0 before
+    /// the first observation — the zero bit pattern is f64 0.0).
+    pub fn ns_per_cycle(&self) -> f64 {
+        f64::from_bits(self.ns_per_cycle_bits.load(Ordering::SeqCst))
+    }
+
+    /// Raw wall measurements folded in so far.
+    pub fn samples(&self) -> u64 {
+        self.samples.load(Ordering::SeqCst)
+    }
 }
 
 impl Default for WallFeedback {
@@ -353,11 +402,26 @@ impl WallFeedback {
     /// A wall feedback whose inner calibration uses `alpha` smoothing
     /// and at most `capacity` (backend, geometry-bucket) factors.
     pub fn with_capacity(alpha: f64, capacity: usize) -> Self {
+        Self::with_shared_scale(alpha, capacity, Arc::new(WallScale::new()))
+    }
+
+    /// A wall feedback owning its own calibration but sharing the
+    /// host-scale EWMA with other feedbacks. The sharded coordinator
+    /// gives every shard a private wall-fed calibration (its factors
+    /// are geometry-keyed, and geometries are shard-affine) while all
+    /// shards train the one host scale — so warm-up is paid once per
+    /// process and every shard normalizes against the same units.
+    pub fn with_shared_scale(alpha: f64, capacity: usize, scale: Arc<WallScale>) -> Self {
         Self {
             calibration: Calibration::with_capacity(alpha, capacity),
-            scale: Mutex::new(WallScale { ns_per_cycle: 0.0, samples: 0 }),
+            scale,
             fed: AtomicU64::new(0),
         }
+    }
+
+    /// The shared host-scale handle (to thread into sibling shards).
+    pub fn shared_scale(&self) -> Arc<WallScale> {
+        self.scale.clone()
     }
 
     /// Feed one measured kernel execution: `estimated` is the plan's
@@ -376,16 +440,7 @@ impl WallFeedback {
             return false;
         }
         let ratio = wall_ns / estimated as f64;
-        let (scale, samples) = {
-            let mut g = self.scale.lock().expect("wall scale poisoned");
-            if g.samples == 0 {
-                g.ns_per_cycle = ratio;
-            } else {
-                g.ns_per_cycle += WALL_SCALE_ALPHA * (ratio - g.ns_per_cycle);
-            }
-            g.samples += 1;
-            (g.ns_per_cycle, g.samples)
-        };
+        let (scale, samples) = self.scale.observe(ratio);
         if samples <= WALL_WARMUP_OBSERVATIONS || scale <= 0.0 {
             return false;
         }
@@ -404,13 +459,13 @@ impl WallFeedback {
     /// The current host scale in nanoseconds per estimated cycle (0.0
     /// before the first observation).
     pub fn ns_per_cycle(&self) -> f64 {
-        self.scale.lock().expect("wall scale poisoned").ns_per_cycle
+        self.scale.ns_per_cycle()
     }
 
     /// Raw wall measurements seen (including warm-up samples that were
     /// not yet fed through).
     pub fn scale_samples(&self) -> u64 {
-        self.scale.lock().expect("wall scale poisoned").samples
+        self.scale.samples()
     }
 
     /// Normalized observations actually fed into the calibration.
@@ -729,6 +784,50 @@ mod tests {
         assert!((d1 - d10).abs() < 1e-2 && (dy1 - dy10).abs() < 1e-2);
         assert!(dy1 > d1, "the relatively slow backend learns the high factor");
         assert!(s10 > s1 * 5.0, "absolute speed lives in the scale");
+    }
+
+    #[test]
+    fn shared_scale_trains_once_across_feedbacks() {
+        use std::time::Duration;
+        // Two shards sharing one WallScale: warm-up is paid once for
+        // the process, and after it both shards' observations feed
+        // their own calibrations against the same units.
+        let scale = Arc::new(WallScale::new());
+        let a = WallFeedback::with_shared_scale(DEFAULT_ALPHA, 64, scale.clone());
+        let b = WallFeedback::with_shared_scale(DEFAULT_ALPHA, 64, scale.clone());
+        let j = job(1024, 256, 1.0 / 16.0);
+        for i in 0..WALL_WARMUP_OBSERVATIONS {
+            let wf = if i % 2 == 0 { &a } else { &b };
+            assert!(!wf.observe_wall(BackendKind::Dense, &j, 1_000, Duration::from_micros(1)));
+        }
+        assert_eq!(scale.samples(), WALL_WARMUP_OBSERVATIONS);
+        assert_eq!(a.scale_samples(), b.scale_samples());
+        // The next observation on *either* shard is past warm-up.
+        assert!(b.observe_wall(BackendKind::Dense, &j, 1_000, Duration::from_micros(1)));
+        assert_eq!(b.observations(), 1);
+        assert_eq!(a.observations(), 0, "fed counts stay per-shard");
+        // Calibrations are private: a's factors are untouched by b's.
+        assert!(a.observe_wall(BackendKind::Dynamic, &j, 1_000, Duration::from_micros(3)));
+        assert!(a.calibration().factor(BackendKind::Dynamic, &j) > 1.0);
+        assert_eq!(b.calibration().factor(BackendKind::Dynamic, &j), 1.0);
+    }
+
+    #[test]
+    fn poisoned_calibration_lock_recovers() {
+        // A panicking worker holding the factor map must not make the
+        // calibration unreadable for survivors (sharded-coordinator
+        // panic isolation).
+        let cal = Arc::new(Calibration::default());
+        let j = job(1024, 256, 1.0 / 16.0);
+        cal.observe(BackendKind::Dynamic, &j, 1_000, 2_000);
+        let poisoner = cal.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = poisoner.factors.lock().unwrap();
+            panic!("injected");
+        })
+        .join();
+        assert!(cal.factor(BackendKind::Dynamic, &j) > 1.0);
+        assert_eq!(cal.buckets(), 1);
     }
 
     #[test]

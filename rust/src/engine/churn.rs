@@ -33,7 +33,7 @@
 //!
 //! [`PlanCache::resolve_batch`]: crate::coordinator::PlanCache::resolve_batch
 
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 use crate::coordinator::request::{JobSpec, PatternKey};
 use crate::util::LruMap;
@@ -83,6 +83,13 @@ pub const STATIC_REPLAN_COST_FACTOR: f64 = 8.0;
 
 /// Default capacity of the per-geometry churn map (entries, LRU).
 pub const DEFAULT_CHURN_CAPACITY: usize = 4096;
+
+/// Poison-tolerant lock acquisition: the churn map is self-consistent
+/// at every lock release, so a panicked observer must not wedge the
+/// surviving coordinator shards' resolutions.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 #[derive(Debug, Clone)]
 struct ChurnState {
@@ -147,19 +154,14 @@ impl ChurnTracker {
 
     /// Feed one observed pattern arrival at `job`'s pattern family.
     pub fn observe(&self, job: &JobSpec) {
-        let mut g = self.states.lock().expect("churn tracker poisoned");
+        let mut g = locked(&self.states);
         g.get_or_insert_with(job.pattern_key(), ChurnState::new).observe(job.pattern_seed);
     }
 
     /// The distinct-pattern rate EWMA at `key` (0.0 when unseen or
     /// pattern-stable).
     pub fn rate(&self, key: PatternKey) -> f64 {
-        self.states
-            .lock()
-            .expect("churn tracker poisoned")
-            .peek(&key)
-            .map(|s| s.rate)
-            .unwrap_or(0.0)
+        locked(&self.states).peek(&key).map(|s| s.rate).unwrap_or(0.0)
     }
 
     /// Staleness stamp at `key`: how many times the churn EWMA has
@@ -167,12 +169,7 @@ impl ChurnTracker {
     /// were computed under and go stale once it advances by
     /// [`CHURN_MOVES_PER_REVISIT`].
     pub fn stamp(&self, key: PatternKey) -> u64 {
-        self.states
-            .lock()
-            .expect("churn tracker poisoned")
-            .peek(&key)
-            .map(|s| s.moves)
-            .unwrap_or(0)
+        locked(&self.states).peek(&key).map(|s| s.moves).unwrap_or(0)
     }
 
     /// Expected jobs per pattern at `key`, the amortization horizon
@@ -201,12 +198,12 @@ impl ChurnTracker {
 
     /// Number of pattern geometries tracked.
     pub fn geometries(&self) -> usize {
-        self.states.lock().expect("churn tracker poisoned").len()
+        locked(&self.states).len()
     }
 
     /// Entries evicted from the bounded map so far.
     pub fn evictions(&self) -> u64 {
-        self.states.lock().expect("churn tracker poisoned").evictions()
+        locked(&self.states).evictions()
     }
 }
 

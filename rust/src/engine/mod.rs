@@ -56,8 +56,8 @@ pub use backends::{
     DynamicBackend, EngineEnv, GpuBackend, KernelRun, PlanEstimate, StaticBackend,
 };
 pub use calibration::{
-    Calibration, WallFeedback, INFORMATIVE_DELTA, MAX_CORRECTION, OBSERVATIONS_PER_REVISIT,
-    WALL_SCALE_ALPHA, WALL_WARMUP_OBSERVATIONS,
+    Calibration, WallFeedback, WallScale, INFORMATIVE_DELTA, MAX_CORRECTION,
+    OBSERVATIONS_PER_REVISIT, WALL_SCALE_ALPHA, WALL_WARMUP_OBSERVATIONS,
 };
 pub use churn::{
     CHURN_MOVES_PER_REVISIT, ChurnTracker, MAX_PATTERN_LIFETIME, STATIC_REPLAN_COST_FACTOR,

@@ -44,6 +44,9 @@ fn usage() -> ! {
          \x20        (both dtypes), machine-readable points to FILE (default BENCH_ci.json)\n\
          \x20 bench  gate [--baseline FILE] [--current FILE] [--tolerance F]\n\
          \x20        fail on >F cycle-estimate regression vs the committed baseline (default 0.10)\n\
+         \x20 bench  contention [--smoke] [--out DIR]  sharded-coordinator contention sweep:\n\
+         \x20        queue-wait and lock-wait per job across worker counts; exits non-zero\n\
+         \x20        if steady-state lock-wait exceeds its ceiling (the shared-nothing proof)\n\
          \x20 serve  [--jobs N] [--workers W] [--numeric] [--wall-calibrated] [--record-trace FILE]\n\
          \x20        synthetic serving workload; --numeric executes every batch's kernel in\n\
          \x20        its declared dtype and reports measured wall time; --wall-calibrated\n\
@@ -51,9 +54,10 @@ fn usage() -> ! {
          \x20        writes the job stream as a versioned JSONL trace at shutdown\n\
          \x20 trace  record [--out FILE] [--jobs N] [--workers W] [--numeric] [--wall-calibrated]\n\
          \x20        serve the synthetic workload with recording on (default trace.jsonl)\n\
-         \x20 trace  replay [--trace FILE] [--out FILE] [--threads N] [--numeric] [--wall-calibrated]\n\
-         \x20        deterministically re-execute a trace; writes the replay report\n\
-         \x20        (default REPLAY.json) — two replays of one trace are byte-identical\n\
+         \x20 trace  replay [--trace FILE] [--out FILE] [--threads N] [--shards S] [--numeric]\n\
+         \x20        [--wall-calibrated]  deterministically re-execute a trace; writes the\n\
+         \x20        replay report (default REPLAY.json) — two replays of one trace are\n\
+         \x20        byte-identical, and so are sharded (--shards N) vs serial replays\n\
          \x20 trace  diff <a.json> <b.json>     compare two replay reports; non-zero on divergence\n\
          \x20 list                              list AOT artifacts"
     );
@@ -270,11 +274,15 @@ fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
             let (flags, _) = parse_flags_strict("bench wall", args, &["smoke", "threads", "out"])?;
             return cmd_bench_wall(&flags);
         }
+        "contention" => {
+            let (flags, _) = parse_flags_strict("bench contention", args, &["smoke", "out"])?;
+            return cmd_bench_contention(&flags);
+        }
         // A misspelled experiment name must be an error, not a run
         // that silently produces nothing.
         w if !EXPERIMENTS.contains(&w) => {
             return Err(popsparse::Error::Runtime(format!(
-                "unknown bench experiment '{w}' (expected one of: {} ci gate wall)",
+                "unknown bench experiment '{w}' (expected one of: {} ci gate wall contention)",
                 EXPERIMENTS.join(" ")
             )));
         }
@@ -464,6 +472,55 @@ fn cmd_bench_gate(flags: &HashMap<String, String>) -> popsparse::Result<()> {
     Ok(())
 }
 
+/// `repro bench contention`: the sharded-coordinator proof. Push the
+/// fixed-seed mixed stream through a live coordinator at each worker
+/// count, report queue-wait and lock-wait per job, and exit non-zero
+/// if lock-wait exceeds its ceiling — the serving path acquiring a
+/// global mutex again is exactly what that ceiling catches. Queue
+/// wait gets a generous ceiling too (a starved/deadlocked shard shows
+/// up there); throughput is printed but never gated.
+fn cmd_bench_contention(flags: &HashMap<String, String>) -> popsparse::Result<()> {
+    use popsparse::bench_harness::contention::contention_sweep;
+    // Per-job lock-wait ceiling, in microseconds. The per-shard queues
+    // are the only mutexes on the path (one producer, one consumer,
+    // microsecond hold times); a reintroduced shared mutex costs
+    // milliseconds per job under a standing backlog, so 100us is far
+    // above scheduler noise and far below the failure mode.
+    const LOCK_WAIT_CEILING_US: f64 = 100.0;
+    const QUEUE_WAIT_CEILING_US: f64 = 20_000.0;
+    let smoke = flags.contains_key("smoke");
+    let (out, points) = contention_sweep(smoke);
+    out.table.print();
+    if let Some(dir) = flags.get("out") {
+        let dir = std::path::PathBuf::from(dir);
+        out.table.write_csv(dir.join("contention.csv"))?;
+        println!("(CSV written under {})", dir.display());
+    }
+    let mut failures = Vec::new();
+    for p in &points {
+        if p.lock_wait_us_per_job > LOCK_WAIT_CEILING_US {
+            failures.push(format!(
+                "lock-wait {:.1}us/job at {} workers (ceiling {LOCK_WAIT_CEILING_US}us)",
+                p.lock_wait_us_per_job, p.workers
+            ));
+        }
+        if p.queue_wait_us_per_job > QUEUE_WAIT_CEILING_US {
+            failures.push(format!(
+                "queue-wait {:.1}us/job at {} workers (ceiling {QUEUE_WAIT_CEILING_US}us)",
+                p.queue_wait_us_per_job, p.workers
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        return Err(popsparse::Error::Runtime(format!(
+            "contention gate FAILED: {}",
+            failures.join("; ")
+        )));
+    }
+    println!("contention gate OK (steady-state lock-wait under {LOCK_WAIT_CEILING_US}us/job)");
+    Ok(())
+}
+
 /// The deterministic synthetic workload `serve` and `trace record`
 /// share: round-robin modes, mixed precision (2/3 FP16 — the paper's
 /// headline precision — exercising the dtype-keyed prepared-operand
@@ -556,29 +613,29 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
         snap.ingress_selections,
         snap.selection_time,
         snap.decision_flips,
-        coordinator.calibration().buckets(),
-        coordinator.calibration().observations()
+        coordinator.calibration_buckets(),
+        coordinator.calibration_observations()
     );
-    let (plan_ev, plan_rem) = coordinator.plan_cache().plan_eviction_stats();
-    let (memo_ev, memo_rem) = coordinator.plan_cache().memo_eviction_stats();
-    let (cal_ev, cal_rem) = coordinator.calibration().eviction_stats();
+    let (plan_ev, plan_rem) = coordinator.plan_eviction_stats();
+    let (memo_ev, memo_rem) = coordinator.memo_eviction_stats();
+    let (cal_ev, cal_rem) = coordinator.calibration_eviction_stats();
     println!(
         "bounded maps: {} plans ({plan_ev} evicted, {plan_rem} re-missed), \
          {} decisions ({memo_ev} evicted, {memo_rem} re-missed), \
          {} calibration buckets ({cal_ev} evicted, {cal_rem} re-missed), \
          {} hint + {} churn geometries",
-        coordinator.plan_cache().plans_len(),
-        coordinator.plan_cache().memo_len(),
-        coordinator.calibration().buckets(),
-        coordinator.pattern_hints().len(),
-        coordinator.churn().geometries()
+        coordinator.plans_len(),
+        coordinator.memo_len(),
+        coordinator.calibration_buckets(),
+        coordinator.pattern_hints_len(),
+        coordinator.churn_geometries()
     );
     println!(
         "workload-aware serving: {} churn shifts, {} re-keyed batches -> {} sub-batches",
         snap.churn_shifts, snap.rekeyed_batches, snap.rekeyed_groups
     );
     if numeric {
-        let (prep_hits, prep_misses) = coordinator.plan_cache().prepared_stats();
+        let (prep_hits, prep_misses) = coordinator.prepared_stats();
         println!(
             "numeric kernels: {} execs ({} failed), wall total {:?} (p50 {:?} p99 {:?}), \
              {:.2} GFLOP/s aggregate; prepared operands {prep_hits} hits / {prep_misses} \
@@ -589,21 +646,22 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
             snap.kernel_wall_p50,
             snap.kernel_wall_p99,
             snap.kernel_gflops,
-            coordinator.plan_cache().prepared_conversions()
+            coordinator.prepared_conversions()
         );
-        let wf = coordinator.wall_feedback();
         println!(
             "wall feedback: {} measured walls ({} fed through the units layer), \
              host scale {:.3} ns/cycle, {} wall-calibration buckets{}",
-            wf.scale_samples(),
-            wf.observations(),
-            wf.ns_per_cycle(),
-            wf.calibration().buckets(),
+            coordinator.wall_scale_samples(),
+            coordinator.wall_fed_observations(),
+            coordinator.wall_ns_per_cycle(),
+            coordinator.wall_calibration_buckets(),
             if wall_calibrated { " — steering dispatch" } else { "" }
         );
     }
+    let (lock_acqs, lock_wait) = coordinator.queue_lock_wait();
     println!(
-        "worker queue: {} waits, {:?} total blocked",
+        "worker queue: {} waits, {:?} total blocked; shard-queue lock contention: \
+         {lock_acqs} contended acquisitions, {lock_wait:?} total lock-wait",
         snap.queue_waits, snap.queue_wait_total
     );
     println!(
@@ -685,7 +743,7 @@ fn cmd_trace_replay(args: &[String]) -> popsparse::Result<()> {
     let (flags, positionals) = parse_flags_strict(
         "trace replay",
         args,
-        &["trace", "out", "threads", "numeric", "wall-calibrated"],
+        &["trace", "out", "threads", "shards", "numeric", "wall-calibrated"],
     )?;
     let trace_path = flags
         .get("trace")
@@ -694,14 +752,24 @@ fn cmd_trace_replay(args: &[String]) -> popsparse::Result<()> {
         .unwrap_or("trace.jsonl");
     let out = flags.get("out").map(String::as_str).unwrap_or("REPLAY.json");
     let threads = flag_usize(&flags, "threads", 1);
+    // `--shards N` replays through N geometry-hash shards exactly the
+    // way the live sharded coordinator routes; the report is
+    // byte-identical to the serial one — `trace diff` against a
+    // `--shards 1` replay is the A/B that proves it.
+    let shards = flag_usize(&flags, "shards", 1);
     let config = Config {
         numeric: flags.contains_key("numeric"),
         wall_calibrated: flags.contains_key("wall-calibrated"),
         ..Config::default()
     };
     let trace = Trace::load(trace_path)?;
-    let mut session =
-        ReplaySession::new(&config, IpuSpec::default(), CostModel::default(), threads);
+    let mut session = ReplaySession::with_shards(
+        &config,
+        IpuSpec::default(),
+        CostModel::default(),
+        threads,
+        shards,
+    );
     let report = session.replay(&trace)?;
     report.write(out)?;
     let completed = report

@@ -9,4 +9,4 @@ pub mod work_queue;
 
 pub use lru::LruMap;
 pub use rng::Rng;
-pub use work_queue::WorkQueue;
+pub use work_queue::{PopResult, WorkQueue};

@@ -108,7 +108,7 @@ fn memo_flip_to_static_mid_trace_rekeys_safely() {
     // Teach the calibration that static runs 4x over its estimate at
     // this bucket: the corrected argmin leaves static.
     for _ in 0..32 {
-        c.calibration().observe(BackendKind::Static, &rep, 1_000, 4_000);
+        c.calibration_observe(BackendKind::Static, &rep, 1_000, 4_000);
     }
     // Warm-up: eight same-seed pairs alternating between two
     // patterns. Each pair capacity-flushes as one batch; the first
@@ -134,9 +134,9 @@ fn memo_flip_to_static_mid_trace_rekeys_safely() {
     // 4x. Un-learning and learning are both informative, so the
     // memoized non-static decision is re-opened.
     for _ in 0..32 {
-        c.calibration().observe(BackendKind::Static, &rep, 1_000, 1_000);
-        c.calibration().observe(BackendKind::Dense, &rep, 1_000, 4_000);
-        c.calibration().observe(BackendKind::Dynamic, &rep, 1_000, 4_000);
+        c.calibration_observe(BackendKind::Static, &rep, 1_000, 1_000);
+        c.calibration_observe(BackendKind::Dense, &rep, 1_000, 4_000);
+        c.calibration_observe(BackendKind::Dynamic, &rep, 1_000, 4_000);
     }
 
     // The two known patterns coalesce into ONE mixed-seed batch under

@@ -249,8 +249,8 @@ fn calibration_forced_dynamic_batch_matches_explicit_dynamic() {
     let mut rep = auto_job.clone();
     rep.n = 3 * auto_job.n;
     for _ in 0..32 {
-        c.calibration().observe(BackendKind::Static, &rep, 1_000, 4_000);
-        c.calibration().observe(BackendKind::Dense, &rep, 1_000, 4_000);
+        c.calibration_observe(BackendKind::Static, &rep, 1_000, 4_000);
+        c.calibration_observe(BackendKind::Dense, &rep, 1_000, 4_000);
     }
     let rxs: Vec<_> = (0..3).map(|_| c.submit(auto_job.clone())).collect();
     let auto_results: Vec<JobResult> =

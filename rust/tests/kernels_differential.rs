@@ -257,7 +257,7 @@ fn steady_state_numeric_serving_never_reconverts() {
     let warm = c.submit_wait(job(Mode::Static, 64, 3)).expect("warm-up serves");
     assert!(warm.cycles > 0);
     assert_eq!(warm.spec.dtype, DType::Fp16, "this is the FP16 serving invariant");
-    assert_eq!(c.plan_cache().prepared_conversions(), 1, "first sight converts once");
+    assert_eq!(c.prepared_conversions(), 1, "first sight converts once");
     // Steady state: same pattern again (plan-cache hit), a different
     // batch shape, and the dynamic mode on the same pattern.
     let again = c.submit_wait(job(Mode::Static, 64, 3)).expect("steady state serves");
@@ -265,23 +265,23 @@ fn steady_state_numeric_serving_never_reconverts() {
     let _ = c.submit_wait(job(Mode::Static, 32, 3)).expect("other batch shape serves");
     let _ = c.submit_wait(job(Mode::Dynamic, 64, 3)).expect("dynamic serves");
     assert_eq!(
-        c.plan_cache().prepared_conversions(),
+        c.prepared_conversions(),
         1,
         "steady-state FP16 serving must perform zero further conversions"
     );
-    let (hits, misses) = c.plan_cache().prepared_stats();
+    let (hits, misses) = c.prepared_stats();
     assert_eq!((hits, misses), (3, 1));
     // The same pattern in FP32 is a different operand: one more
     // conversion, then its own steady state.
     let mut fp32 = job(Mode::Static, 64, 3);
     fp32.dtype = DType::Fp32;
     let _ = c.submit_wait(fp32.clone()).expect("fp32 serves");
-    assert_eq!(c.plan_cache().prepared_conversions(), 2, "new dtype converts once");
+    assert_eq!(c.prepared_conversions(), 2, "new dtype converts once");
     let _ = c.submit_wait(fp32).expect("fp32 steady state");
-    assert_eq!(c.plan_cache().prepared_conversions(), 2, "fp32 steady state holds");
+    assert_eq!(c.prepared_conversions(), 2, "fp32 steady state holds");
     // A genuinely new pattern converts (once).
     let _ = c.submit_wait(job(Mode::Static, 64, 4)).expect("new pattern serves");
-    assert_eq!(c.plan_cache().prepared_conversions(), 3);
+    assert_eq!(c.prepared_conversions(), 3);
     let snap = c.metrics();
     assert_eq!(snap.kernel_execs, 7, "every batch ran its kernel");
     assert_eq!(snap.kernel_failures, 0);
