@@ -26,6 +26,18 @@
 //! (the FP16 ~90% crossover of Table 3, measured in wall time rather
 //! than simulated cycles; recorded in EXPERIMENTS.md §Wall-time).
 //!
+//! The [`roofline_table`] closes the loop on *how good* those numbers
+//! are in absolute terms: a one-time machine microbench
+//! ([`roofline::measure`]) pins this host's no-FMA FLOP peak and
+//! streaming bandwidth, and every swept shape is then classified
+//! memory- vs compute-bound by its arithmetic intensity
+//! ([`roofline::spmm_traffic`] / [`roofline::dense_traffic`],
+//! DESIGN.md §5.1) and reported as a percentage of its binding
+//! ceiling. The per-row percentages and the measured peaks are also
+//! emitted as machine-readable points (`wall_roofline.json`, CSV
+//! alongside the tables) — reported, never gated, like everything
+//! else in this arm.
+//!
 //! Each point is oracle-checked (per-dtype tolerance contract,
 //! DESIGN.md §5) before it is timed. Wall-time numbers are
 //! machine-dependent and therefore **reported, never gated** — the CI
@@ -33,7 +45,7 @@
 //! (DESIGN.md §4.4); table *shapes* (rows, columns, sweep points) are
 //! deterministic, which is what the smoke test pins.
 //!
-//! All three tables are [`runner::Experiment`]s executed by the
+//! All four tables are [`runner::Experiment`]s executed by the
 //! generic [`runner::Runner`] (DESIGN.md §7): the sweep axes and the
 //! repetition policy (budget + minimum iterations) live in the
 //! [`ExperimentSpec`], the per-point measurement in
@@ -46,12 +58,13 @@
 
 use std::time::Duration;
 
-use crate::bench_harness::report::{f2, Table};
+use crate::bench_harness::report::{f1, f2, Table};
 use crate::bench_harness::runner::{
     Axis, Experiment, ExperimentSpec, GridPoint, PointOutput, Repetition, Runner,
 };
 use crate::bench_harness::sweep::seed_for;
 use crate::error::Result;
+use crate::kernels::roofline::{self, MachineRoofline};
 use crate::kernels::{self, fill_pseudo, quantize, Element, PreparedBsr, F16};
 use crate::runtime;
 use crate::sparse::coo::BlockCoo;
@@ -509,21 +522,217 @@ fn sparse_ms_for<E: Element>(
     stats.mean_ns() / 1e6
 }
 
-/// All three wall tables: the sparse sweep, the dense companion, and
-/// the per-dtype sparse-vs-dense crossover. `smoke` selects the tiny
-/// CI shapes and a short per-arm budget; the full sweep spends ~1.5 s
-/// per arm per point.
-pub fn wall_tables(smoke: bool, threads: usize) -> Result<Vec<Table>> {
+/// Row labels of the roofline kernel axis, in axis order.
+const ROOF_KERNELS: [&str; 3] = ["spmm-tiled", "spmm-par", "dense-tiled"];
+
+/// Measure the achieved GFLOP/s of all three kernel arms of one case
+/// in storage type `E` — operands prepared once, shared across the
+/// kernel axis. Correctness of these kernels is oracle-checked by the
+/// companion spmm/dense tables over the same case list; this arm only
+/// times. Returns `[tiled, parallel, dense]` in effective GFLOP/s
+/// (nnz-only FLOPs for the sparse arms, `2mkn` for the dense arm —
+/// the same counting [`roofline::spmm_traffic`] and
+/// [`roofline::dense_traffic`] use, so achieved/ceiling is
+/// like-for-like).
+fn roofline_arms<E: Element>(
+    case: &WallCase,
+    coo: &BlockCoo,
+    rep: Repetition,
+    threads: usize,
+) -> [f64; 3] {
+    let (m, k, n) = (case.m, case.k, case.n);
+    let seed = seed_for(case.m, case.b, case.inv_d);
+    let prep = PreparedBsr::<E>::from_coo(coo);
+    let mut x = vec![E::ZERO; k * n];
+    let mut a = vec![E::ZERO; m * k];
+    fill_pseudo(&mut x, seed ^ 1);
+    fill_pseudo(&mut a, seed ^ 2);
+    let mut y = vec![E::ZERO; m * n];
+    let sp_flops = 2.0 * (coo.nnz_blocks() * case.b * case.b) as f64 * n as f64;
+    let d_flops = 2.0 * (m * k) as f64 * n as f64;
+    let tag = format!("m{m} n{n} b{} d1/{} {}", case.b, case.inv_d, E::DTYPE);
+    let tiled = rep.bench(&format!("roof sp-tiled {tag}"), || {
+        let _ = kernels::spmm(&prep, &x, n, &mut y);
+    });
+    let par = rep.bench(&format!("roof sp-par   {tag}"), || {
+        let _ = kernels::spmm_parallel(&prep, &x, n, &mut y, threads);
+    });
+    let dense = rep.bench(&format!("roof dense    {tag}"), || {
+        let _ = kernels::dense::matmul(&a, &x, m, k, n, &mut y);
+    });
+    [sp_flops / tiled.mean_ns(), sp_flops / par.mean_ns(), d_flops / dense.mean_ns()]
+}
+
+struct RooflineExperiment {
+    spec: ExperimentSpec,
+    cases: Vec<WallCase>,
+    /// Budget and buffer size for the one-time machine microbench
+    /// (run in [`Experiment::warm_up`], before any point is swept).
+    machine_budget: Duration,
+    bandwidth_bytes: usize,
+    machine: MachineRoofline,
+    /// `(case index, nnz blocks, [tiled, par, dense] GFLOP/s)` of the
+    /// case currently being swept: all three arms are timed when the
+    /// inner kernel axis first visits a case, then re-read — the three
+    /// rows of a case classify one shared measurement pass.
+    cached: Option<(usize, usize, [f64; 3])>,
+}
+
+impl Experiment for RooflineExperiment {
+    fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    fn warm_up(&mut self, _grid: &[GridPoint]) {
+        self.machine = roofline::measure(self.machine_budget, self.bandwidth_bytes);
+        println!(
+            "roofline machine ({}): {:.2} GFLOP/s mul+add peak, {:.2} GB/s stream, \
+             balance {:.2} flop/B",
+            self.machine.tier,
+            self.machine.peak_gflops,
+            self.machine.peak_gbps,
+            self.machine.balance()
+        );
+    }
+
+    fn measure(&mut self, point: &GridPoint) -> PointOutput {
+        let idx = point.int("case");
+        let kernel = point.int("kernel");
+        let case = self.cases[idx];
+        let rep = self.spec.repetition.expect("wall experiments carry a repetition policy");
+        let threads = self.spec.threads;
+        if !matches!(&self.cached, Some((cached_idx, ..)) if *cached_idx == idx) {
+            let d = 1.0 / case.inv_d as f64;
+            let seed = seed_for(case.m, case.b, case.inv_d);
+            let mask = patterns::with_density(case.m, case.k, case.b, d, seed)
+                .expect("bench geometry");
+            let coo = patterns::with_values(&mask, seed);
+            let arms = match case.dtype {
+                DType::Fp32 => roofline_arms::<f32>(&case, &coo, rep, threads),
+                DType::Fp16 => roofline_arms::<F16>(&case, &coo, rep, threads),
+            };
+            self.cached = Some((idx, coo.nnz_blocks(), arms));
+        }
+        let (_, nnzb, arms) = self.cached.expect("cached above");
+        let traffic = match kernel {
+            2 => roofline::dense_traffic(case.m, case.k, case.n, case.dtype),
+            _ => roofline::spmm_traffic(case.m, case.k, case.n, case.b, nnzb, case.dtype),
+        };
+        // The parallel arm is classified against the compute ceiling
+        // scaled by the thread count; bandwidth is a shared resource
+        // and stays fixed ([`MachineRoofline::scaled`]), so a
+        // memory-bound shape can legitimately exceed 100% there — the
+        // single-threaded arms carry the contract.
+        let machine = self.machine.scaled(if kernel == 1 { threads } else { 1 });
+        let (bound, ceiling) = machine.classify(&traffic);
+        let achieved = arms[kernel];
+        let pct = 100.0 * achieved / ceiling;
+        let label = ROOF_KERNELS[kernel];
+        let key = format!(
+            "wall_roofline/{label}/m{}_n{}_b{}_d{}_{}",
+            case.m, case.n, case.b, case.inv_d, case.dtype
+        );
+        PointOutput::row(vec![
+            label.to_string(),
+            case.dtype.to_string(),
+            case.m.to_string(),
+            case.n.to_string(),
+            case.b.to_string(),
+            format!("1/{}", case.inv_d),
+            f2(traffic.intensity()),
+            bound.to_string(),
+            f2(ceiling),
+            f2(achieved),
+            format!("{}%", f1(pct)),
+        ])
+        .with_points(vec![(key, pct)])
+    }
+
+    fn finish(&mut self) -> Vec<(String, f64)> {
+        vec![
+            ("wall_roofline/peak_gflops".to_string(), self.machine.peak_gflops),
+            ("wall_roofline/peak_gbps".to_string(), self.machine.peak_gbps),
+        ]
+    }
+}
+
+/// The roofline table: every wall case × three kernel arms, each
+/// classified memory- vs compute-bound against the measured machine
+/// roofline and reported as %-of-ceiling (DESIGN.md §5.1;
+/// EXPERIMENTS.md §Roofline records the results). Returns the table
+/// plus the machine-readable points: one `wall_roofline/<kernel>/...`
+/// percentage per row and the two measured peaks. Machine-dependent,
+/// reported, never gated.
+pub fn roofline_table(
+    cases: &[WallCase],
+    smoke: bool,
+    budget: Duration,
+    threads: usize,
+) -> Result<(Table, Vec<(String, f64)>)> {
+    // Smoke keeps the machine microbench short and the bandwidth
+    // buffer cache-sized (an in-cache "bandwidth" is acceptable smoke
+    // noise); the full run sizes the buffer well past any LLC.
+    let (machine_budget, bandwidth_bytes) = if smoke {
+        (Duration::from_millis(60), 8usize << 20)
+    } else {
+        (Duration::from_millis(400), 64usize << 20)
+    };
+    let mut exp = RooflineExperiment {
+        spec: ExperimentSpec::new(
+            "wall_roofline",
+            format!(
+                "Measured roofline — achieved GFLOP/s vs min(compute, memory) ceiling per \
+                 kernel arm ({threads} threads for the parallel arm); machine-dependent, \
+                 not gated"
+            ),
+            &[
+                "kernel",
+                "dtype",
+                "m=k",
+                "n",
+                "b",
+                "density",
+                "flop/B",
+                "bound",
+                "ceiling GF/s",
+                "achieved GF/s",
+                "% roof",
+            ],
+        )
+        .axis(case_axis(cases.len()))
+        .axis(Axis::ints("kernel", &[0, 1, 2]))
+        .threads(threads)
+        .repetition(budget, 2),
+        cases: cases.to_vec(),
+        machine_budget,
+        bandwidth_bytes,
+        machine: MachineRoofline { peak_gflops: 0.0, peak_gbps: 0.0, tier: "unmeasured" },
+        cached: None,
+    };
+    let out = Runner::run(&mut exp);
+    Ok((out.table, out.points))
+}
+
+/// All four wall tables — the sparse sweep, the dense companion, the
+/// per-dtype sparse-vs-dense crossover, and the roofline
+/// classification — plus the roofline's machine-readable points
+/// (per-row %-of-ceiling and the measured machine peaks). `smoke`
+/// selects the tiny CI shapes and a short per-arm budget; the full
+/// sweep spends ~1.5 s per arm per point.
+pub fn wall_tables(smoke: bool, threads: usize) -> Result<(Vec<Table>, Vec<(String, f64)>)> {
     let (cases, budget) = if smoke {
         (smoke_cases(), Duration::from_millis(40))
     } else {
         (paper_cases(), Duration::from_millis(1500))
     };
-    Ok(vec![
+    let mut tables = vec![
         spmm_table(&cases, budget, threads)?,
         dense_table(smoke, budget)?,
         crossover_table(smoke, budget, threads)?,
-    ])
+    ];
+    let (roof, points) = roofline_table(&cases, smoke, budget, threads)?;
+    tables.push(roof);
+    Ok((tables, points))
 }
 
 #[cfg(test)]
@@ -535,9 +744,9 @@ mod tests {
         // The smoke sweep runs the full measurement path (including
         // the in-bench oracle assertions, in both dtypes) in test
         // time, with deterministic table shapes.
-        let tables =
+        let (tables, points) =
             wall_tables(true, kernels::default_threads().min(2)).expect("smoke sweep runs");
-        assert_eq!(tables.len(), 3);
+        assert_eq!(tables.len(), 4);
         assert_eq!(tables[0].rows.len(), smoke_cases().len());
         assert_eq!(tables[1].rows.len(), 2, "dense smoke: one shape per dtype");
         assert_eq!(
@@ -545,14 +754,35 @@ mod tests {
             2 * crossover_inv_densities(true).len(),
             "crossover smoke: each dtype sweeps every density"
         );
+        assert_eq!(
+            tables[3].rows.len(),
+            3 * smoke_cases().len(),
+            "roofline: three kernel arms per case"
+        );
         for row in &tables[0].rows {
             let naive: f64 = row[6].parse().expect("numeric GF/s");
             assert!(naive > 0.0);
         }
-        // Both dtypes are represented in every table.
-        for t in &tables {
+        // Both dtypes are represented in every table (the roofline
+        // table leads with the kernel arm; dtype is its second
+        // column).
+        for t in &tables[..3] {
             assert!(t.rows.iter().any(|r| r[0] == "fp16"));
             assert!(t.rows.iter().any(|r| r[0] == "fp32"));
+        }
+        assert!(tables[3].rows.iter().any(|r| r[1] == "fp16"));
+        assert!(tables[3].rows.iter().any(|r| r[1] == "fp32"));
+        // Every roofline row carries a bound classification, and the
+        // machine-readable points are one percentage per row plus the
+        // two measured peaks — all positive and finite.
+        for row in &tables[3].rows {
+            assert!(row[7] == "mem" || row[7] == "comp", "bound column: {row:?}");
+        }
+        assert_eq!(points.len(), tables[3].rows.len() + 2);
+        assert!(points.iter().any(|(k, v)| k == "wall_roofline/peak_gflops" && *v > 0.0));
+        assert!(points.iter().any(|(k, v)| k == "wall_roofline/peak_gbps" && *v > 0.0));
+        for (k, v) in &points {
+            assert!(v.is_finite() && *v > 0.0, "{k} must be positive and finite: {v}");
         }
     }
 

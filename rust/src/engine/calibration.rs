@@ -329,11 +329,26 @@ pub const WALL_WARMUP_OBSERVATIONS: u64 = 8;
 /// above 1 and loses argmin ties it used to win; see
 /// `wall_fed_calibration_flips_a_skewed_argmin` for the end-to-end
 /// property.
+///
+/// Optionally, a measured machine roofline
+/// ([`crate::kernels::MachineRoofline`]) can be armed as a **physical
+/// floor** under incoming walls ([`WallFeedback::arm_roofline`]): no
+/// real kernel can finish faster than its compulsory traffic at peak
+/// bandwidth or its flops at peak FLOP rate, so a wall below that
+/// floor is a measurement bug (timer glitch, wrong geometry attached
+/// to the sample) or a traffic-model bug — counted in
+/// [`WallFeedback::roofline_violations`] as a sanity signal, never a
+/// gate, and the sample still feeds calibration (the EWMA absorbs
+/// outliers; the counter makes them visible instead of silent).
 #[derive(Debug)]
 pub struct WallFeedback {
     calibration: Calibration,
     scale: Arc<WallScale>,
     fed: AtomicU64,
+    /// Armed roofline peaks as f64 bits (0.0 bits = unarmed).
+    roofline_gflops_bits: AtomicU64,
+    roofline_gbps_bits: AtomicU64,
+    roofline_violations: AtomicU64,
 }
 
 /// The host's nanoseconds-per-estimated-cycle EWMA, kept lock-free so
@@ -416,6 +431,9 @@ impl WallFeedback {
             calibration: Calibration::with_capacity(alpha, capacity),
             scale,
             fed: AtomicU64::new(0),
+            roofline_gflops_bits: AtomicU64::new(0),
+            roofline_gbps_bits: AtomicU64::new(0),
+            roofline_violations: AtomicU64::new(0),
         }
     }
 
@@ -438,6 +456,11 @@ impl WallFeedback {
         let wall_ns = wall.as_secs_f64() * 1e9;
         if estimated == 0 || wall_ns <= 0.0 {
             return false;
+        }
+        if let Some(floor) = self.roofline_floor_ns(kind, job) {
+            if wall_ns < floor {
+                self.roofline_violations.fetch_add(1, Ordering::Relaxed);
+            }
         }
         let ratio = wall_ns / estimated as f64;
         let (scale, samples) = self.scale.observe(ratio);
@@ -471,6 +494,50 @@ impl WallFeedback {
     /// Normalized observations actually fed into the calibration.
     pub fn observations(&self) -> u64 {
         self.fed.load(Ordering::Relaxed)
+    }
+
+    /// Arm a measured machine roofline as the physical floor under
+    /// every subsequent wall observation (see the type docs). Re-arm
+    /// freely; the latest peaks win.
+    pub fn arm_roofline(&self, machine: &crate::kernels::MachineRoofline) {
+        self.roofline_gflops_bits.store(machine.peak_gflops.to_bits(), Ordering::SeqCst);
+        self.roofline_gbps_bits.store(machine.peak_gbps.to_bits(), Ordering::SeqCst);
+    }
+
+    /// The minimum physically plausible wall time in nanoseconds for
+    /// `job` on `kind`, from the armed roofline and the compulsory
+    /// traffic model (`crate::kernels::roofline`): the larger of
+    /// flops at peak FLOP rate and bytes at peak bandwidth (GFLOP/s
+    /// is flop/ns and GB/s is byte/ns, so both terms are already ns).
+    /// `None` when unarmed, for the GPU backend (simulated, not a
+    /// host kernel), or for degenerate geometry. The sparse backends'
+    /// block count is estimated as `density * mb * kb` — the same
+    /// expectation the pattern generators target.
+    pub fn roofline_floor_ns(&self, kind: BackendKind, job: &JobSpec) -> Option<f64> {
+        use crate::kernels::roofline::{dense_traffic, spmm_traffic};
+        let gflops = f64::from_bits(self.roofline_gflops_bits.load(Ordering::SeqCst));
+        let gbps = f64::from_bits(self.roofline_gbps_bits.load(Ordering::SeqCst));
+        if gflops <= 0.0 || gbps <= 0.0 || job.b == 0 {
+            return None;
+        }
+        let traffic = match kind {
+            BackendKind::Dense => dense_traffic(job.m, job.k, job.n, job.dtype),
+            BackendKind::Static | BackendKind::Dynamic => {
+                let blocks = (job.m / job.b) * (job.k / job.b);
+                let nnzb = (job.density * blocks as f64).round() as usize;
+                spmm_traffic(job.m, job.k, job.n, job.b, nnzb, job.dtype)
+            }
+            BackendKind::Gpu => return None,
+        };
+        Some((traffic.flops / gflops).max(traffic.bytes / gbps))
+    }
+
+    /// Wall observations that undercut the armed roofline floor (0
+    /// while unarmed). A nonzero count on a healthy host means the
+    /// measurement plumbing or the traffic model is lying — surfaced
+    /// for diagnostics, never gated.
+    pub fn roofline_violations(&self) -> u64 {
+        self.roofline_violations.load(Ordering::Relaxed)
     }
 }
 
@@ -616,6 +683,35 @@ mod tests {
         // (never a surcharged score).
         let (win, c) = corrected_argmin_amortized(&estimates, None, &j, 2000).unwrap();
         assert_eq!((win.kind, c), (BackendKind::Dynamic, 2500));
+    }
+
+    #[test]
+    fn roofline_floor_counts_impossible_walls() {
+        let fb = WallFeedback::default();
+        let j = job(256, 64, 1.0 / 16.0);
+        // Unarmed: no floor, nothing counted.
+        assert!(fb.roofline_floor_ns(BackendKind::Static, &j).is_none());
+        fb.arm_roofline(&crate::kernels::MachineRoofline {
+            peak_gflops: 100.0,
+            peak_gbps: 50.0,
+            tier: "test",
+        });
+        // Hand check: 16 expected blocks (256 of 1/16 density), f16:
+        // flops = 2 * 16 * 256 * 64 = 524288 at 100 flop/ns, bytes =
+        // 73860 at 50 B/ns -> the compute term binds, ~5243 ns.
+        let floor = fb.roofline_floor_ns(BackendKind::Static, &j).unwrap();
+        assert!((floor - 5242.88).abs() < 1.0, "floor {floor}");
+        // The GPU backend is simulated, never floored.
+        assert!(fb.roofline_floor_ns(BackendKind::Gpu, &j).is_none());
+        // A wall below the physical floor is counted as a violation; a
+        // plausible wall is not — and both still feed the scale.
+        let fast = std::time::Duration::from_nanos((floor * 0.01) as u64);
+        let slow = std::time::Duration::from_secs_f64(floor * 10.0 / 1e9);
+        fb.observe_wall(BackendKind::Static, &j, 1000, fast);
+        assert_eq!(fb.roofline_violations(), 1);
+        fb.observe_wall(BackendKind::Static, &j, 1000, slow);
+        assert_eq!(fb.roofline_violations(), 1);
+        assert_eq!(fb.scale_samples(), 2);
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //! over the storage element ([`Element`]): operands and outputs live
 //! in the job's dtype, partial sums accumulate in f32 (the AMP
 //! contract), and the output store quantizes once.
+//!
+//! SIMD: [`matmul`] first offers the whole call to the arch-gated
+//! wide kernels in [`crate::kernels::simd`] (DESIGN.md §5.1); the
+//! scalar loops here are the mandatory fallback, and the wide paths
+//! are pinned bit-identical to them per dtype. [`matmul_scalar`]
+//! bypasses dispatch for tests and differential harnesses.
 
 use crate::error::{Error, Result};
 use crate::kernels::element::Element;
@@ -18,16 +24,13 @@ use crate::kernels::spmm::N_TILE;
 /// Output-row tile height of the register panel.
 pub const I_TILE: usize = 4;
 
-/// Tiled dense matmul: `y = A x`, `a` row-major `m x k`, `x` row-major
-/// `k x n`, `y` row-major `m x n`, all in storage type `E` with f32
-/// accumulation. Overwrites all of `y`.
-pub fn matmul<E: Element>(
+fn check_operands<E: Element>(
     a: &[E],
     x: &[E],
     m: usize,
     k: usize,
     n: usize,
-    y: &mut [E],
+    y: &[E],
 ) -> Result<()> {
     if a.len() != m * k {
         return Err(Error::InvalidFormat(format!(
@@ -47,38 +50,98 @@ pub fn matmul<E: Element>(
             y.len()
         )));
     }
+    Ok(())
+}
+
+/// Tiled dense matmul: `y = A x`, `a` row-major `m x k`, `x` row-major
+/// `k x n`, `y` row-major `m x n`, all in storage type `E` with f32
+/// accumulation. Overwrites all of `y`. Dispatches to the widest SIMD
+/// tier the machine supports ([`crate::kernels::simd`]); the result
+/// is bit-identical across tiers.
+pub fn matmul<E: Element>(
+    a: &[E],
+    x: &[E],
+    m: usize,
+    k: usize,
+    n: usize,
+    y: &mut [E],
+) -> Result<()> {
+    check_operands(a, x, m, k, n, y)?;
+    if crate::kernels::simd::try_matmul(a, x, m, k, n, y) {
+        return Ok(());
+    }
+    matmul_rows_scalar(a, x, m, k, n, y);
+    Ok(())
+}
+
+/// [`matmul`] pinned to the scalar fallback path, bypassing SIMD
+/// dispatch; bit-identical to [`matmul`] on every machine (the
+/// contract `tests/kernels_differential.rs` pins).
+pub fn matmul_scalar<E: Element>(
+    a: &[E],
+    x: &[E],
+    m: usize,
+    k: usize,
+    n: usize,
+    y: &mut [E],
+) -> Result<()> {
+    check_operands(a, x, m, k, n, y)?;
+    matmul_rows_scalar(a, x, m, k, n, y);
+    Ok(())
+}
+
+fn matmul_rows_scalar<E: Element>(a: &[E], x: &[E], m: usize, k: usize, n: usize, y: &mut [E]) {
     let mut i0 = 0;
     while i0 < m {
         let ib = I_TILE.min(m - i0);
         let mut j = 0;
         while j < n {
             let tile = N_TILE.min(n - j);
-            let mut acc = [[0f32; N_TILE]; I_TILE];
-            for l in 0..k {
-                let xrow = &x[l * n + j..][..tile];
-                let mut xf = [0f32; N_TILE];
-                for (d, &s) in xf.iter_mut().zip(xrow) {
-                    *d = s.to_f32();
-                }
-                for (ii, acc_row) in acc.iter_mut().enumerate().take(ib) {
-                    let w = a[(i0 + ii) * k + l].to_f32();
-                    for (v, &xv) in acc_row.iter_mut().zip(&xf[..tile]) {
-                        *v += w * xv;
-                    }
-                }
-            }
-            for (ii, acc_row) in acc.iter().enumerate().take(ib) {
-                for (o, &v) in
-                    y[(i0 + ii) * n + j..(i0 + ii) * n + j + tile].iter_mut().zip(&acc_row[..tile])
-                {
-                    *o = E::from_f32(v);
-                }
-            }
+            dense_tile::<E>(a, x, k, n, i0, ib, j, tile, y);
             j += tile;
         }
         i0 += ib;
     }
-    Ok(())
+}
+
+/// One `ib x tile` output tile (`ib <= I_TILE` rows from `i0`,
+/// `tile <= N_TILE` batch columns from `j`) of the `ikj` kernel. Like
+/// `spmm_tile_b` this single body serves the scalar path's full tiles
+/// and remainders *and* the remainder path of every SIMD tier, so the
+/// tiers' edge handling is the fallback's by construction.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dense_tile<E: Element>(
+    a: &[E],
+    x: &[E],
+    k: usize,
+    n: usize,
+    i0: usize,
+    ib: usize,
+    j: usize,
+    tile: usize,
+    y: &mut [E],
+) {
+    let mut acc = [[0f32; N_TILE]; I_TILE];
+    for l in 0..k {
+        let xrow = &x[l * n + j..][..tile];
+        let mut xf = [0f32; N_TILE];
+        for (d, &s) in xf.iter_mut().zip(xrow) {
+            *d = s.to_f32();
+        }
+        for (ii, acc_row) in acc.iter_mut().enumerate().take(ib) {
+            let w = a[(i0 + ii) * k + l].to_f32();
+            for (v, &xv) in acc_row.iter_mut().zip(&xf[..tile]) {
+                *v += w * xv;
+            }
+        }
+    }
+    for (ii, acc_row) in acc.iter().enumerate().take(ib) {
+        for (o, &v) in
+            y[(i0 + ii) * n + j..(i0 + ii) * n + j + tile].iter_mut().zip(&acc_row[..tile])
+        {
+            *o = E::from_f32(v);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -134,10 +197,32 @@ mod tests {
     }
 
     #[test]
+    fn dispatched_matmul_is_bit_identical_to_pinned_scalar() {
+        let mut rng = Rng::seed_from_u64(0x51D2);
+        let (m, k, n) = (9, 17, 33); // straddles both tile remainders
+        let af: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let xf: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let (mut y, mut y_ref) = (vec![f32::NAN; m * n], vec![f32::NAN; m * n]);
+        matmul(&af, &xf, m, k, n, &mut y).unwrap();
+        matmul_scalar(&af, &xf, m, k, n, &mut y_ref).unwrap();
+        for (i, (&u, &v)) in y.iter().zip(&y_ref).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "elem {i}: {u} vs {v}");
+        }
+        let (a16, x16) = (quantize::<F16>(&af), quantize::<F16>(&xf));
+        let (mut y16, mut y16_ref) = (vec![F16(0x7E00); m * n], vec![F16(0x7E00); m * n]);
+        matmul(&a16, &x16, m, k, n, &mut y16).unwrap();
+        matmul_scalar(&a16, &x16, m, k, n, &mut y16_ref).unwrap();
+        for (i, (&u, &v)) in y16.iter().zip(&y16_ref).enumerate() {
+            assert_eq!(u.0, v.0, "f16 elem {i}");
+        }
+    }
+
+    #[test]
     fn shape_errors_not_panics() {
         let mut y = vec![0f32; 4];
         assert!(matmul(&[0.0; 3], &[0.0; 4], 2, 2, 2, &mut y).is_err());
         assert!(matmul(&[0.0; 4], &[0.0; 3], 2, 2, 2, &mut y).is_err());
         assert!(matmul(&[0.0; 4], &[0.0; 4], 2, 2, 2, &mut y[..3]).is_err());
+        assert!(matmul_scalar(&[0.0; 4], &[0.0; 3], 2, 2, 2, &mut y).is_err());
     }
 }

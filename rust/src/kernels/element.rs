@@ -27,6 +27,25 @@ use crate::DType;
 
 /// A kernel storage element: convertible to/from the f32 the
 /// accumulators run in, tagged with the [`DType`] it serves.
+///
+/// Implemented by `f32` (identity conversions) and [`F16`] (software
+/// IEEE binary16). The SIMD tiers ([`crate::kernels::simd`]) only
+/// engage for these two concrete types — checked by `TypeId`, so a
+/// third-party implementation always takes the scalar path.
+///
+/// # Examples
+///
+/// ```
+/// use popsparse::kernels::{Element, F16};
+/// use popsparse::DType;
+///
+/// fn roundtrip<E: Element>(v: f32) -> f32 {
+///     E::from_f32(v).to_f32()
+/// }
+/// assert_eq!(roundtrip::<f32>(1.0 + 1e-4), 1.0 + 1e-4);
+/// assert_eq!(roundtrip::<F16>(1.0 + 1e-4), 1.0); // rounded to nearest f16
+/// assert_eq!(F16::DTYPE, DType::Fp16);
+/// ```
 pub trait Element:
     Copy + Clone + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static
 {
@@ -63,7 +82,28 @@ impl Element for f32 {
 /// exponent, 10 mantissa bits). Arithmetic never happens *in* f16 —
 /// kernels widen to f32, accumulate, and quantize once on store — so
 /// the type only needs the two conversions plus equality on bits.
+///
+/// `repr(transparent)` over the `u16` payload: `[F16]` slices may be
+/// reinterpreted as raw 16-bit lanes, which the `f16c` SIMD tier's
+/// vector loads/stores rely on. The hardware conversions there are
+/// value-identical to [`F16::from_f32`]/[`F16::to_f32`] (both sides
+/// are IEEE round-to-nearest-even with exact widening), so which path
+/// ran is unobservable in the output bits.
+///
+/// # Examples
+///
+/// ```
+/// use popsparse::kernels::F16;
+///
+/// assert_eq!(F16::from_f32(1.0), F16(0x3C00));
+/// assert_eq!(F16(0x3C00).to_f32(), 1.0);
+/// // Round-to-nearest-even: the midpoint below 1.0 + 2^-10 ties down.
+/// assert_eq!(F16::from_f32(1.0 + f32::powi(2.0, -11)), F16(0x3C00));
+/// // Overflow saturates to infinity.
+/// assert_eq!(F16::from_f32(1e9), F16::INFINITY);
+/// ```
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[repr(transparent)]
 pub struct F16(pub u16);
 
 impl F16 {

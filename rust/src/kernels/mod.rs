@@ -24,6 +24,15 @@
 //!   row-panel parallelism over disjoint output slices.
 //! * [`dense::matmul`] — the `ikj`-tiled dense kernel with a reusable
 //!   caller-owned output buffer.
+//! * [`simd`] — arch-gated explicit SIMD tiers (AVX2 / AVX2+F16C on
+//!   x86-64, runtime-detected) behind the same entry points, pinned
+//!   **bit-identical** to the scalar fallback per dtype; the scalar
+//!   loops stay mandatory and numerics-defining. [`spmm_scalar`] and
+//!   [`dense::matmul_scalar`] bypass dispatch so the pin is provable.
+//! * [`roofline`] — the measured sparsity-roofline model: machine
+//!   peak FLOP/s + streaming bandwidth ([`simd`]'s probes), per-shape
+//!   arithmetic intensity and memory/compute bound, the ceiling the
+//!   wall bench reports %-of-roofline against.
 //! * [`Scratch`] — reusable per-dtype operand/output buffers so
 //!   steady-state numeric execution allocates nothing in either
 //!   precision.
@@ -41,6 +50,8 @@ pub mod dense;
 pub mod element;
 pub mod parallel;
 pub mod prepared;
+pub mod roofline;
+pub mod simd;
 pub mod spmm;
 
 pub use element::{dequantize, quantize, Element, F16};
@@ -48,9 +59,11 @@ pub use parallel::{
     default_threads, partition_panels, spmm_auto, spmm_parallel, MIN_FLOPS_PER_THREAD,
 };
 pub use prepared::{PreparedBsr, PreparedOperand};
+pub use roofline::MachineRoofline;
+pub use simd::SimdTier;
 pub use spmm::{
-    close_enough, close_enough_for, spmm, tolerance, ABS_TOLERANCE, ABS_TOLERANCE_F16, N_TILE,
-    REL_TOLERANCE, REL_TOLERANCE_F16,
+    close_enough, close_enough_for, spmm, spmm_scalar, tolerance, ABS_TOLERANCE,
+    ABS_TOLERANCE_F16, N_TILE, REL_TOLERANCE, REL_TOLERANCE_F16,
 };
 
 use crate::util::Rng;
@@ -122,6 +135,20 @@ impl<E: Element> TypedScratch<E> {
 /// [`TypedScratch`] each for f32 and f16, so a worker serving mixed-
 /// precision traffic still allocates nothing at steady state (each
 /// dtype's working set warms once and stays).
+///
+/// # Examples
+///
+/// ```
+/// use popsparse::kernels::Scratch;
+///
+/// let mut s = Scratch::default();
+/// // x is k*n, y is m*n; repeated same-shape calls reuse the buffers.
+/// let (x, y) = s.spmm_operands(8, 8, 4);
+/// assert_eq!((x.len(), y.len()), (32, 32));
+/// // The f16 half is independent and warms separately.
+/// let (x16, _) = s.fp16().spmm_operands(8, 8, 4);
+/// assert_eq!(x16.len(), 32);
+/// ```
 #[derive(Debug, Default)]
 pub struct Scratch {
     s32: TypedScratch<f32>,

@@ -11,7 +11,11 @@
 //! result is element-for-element identical to [`spmm`]'s — in every
 //! storage dtype (the kernels are generic over
 //! [`Element`](crate::kernels::Element); partition decisions read only
-//! the dtype-independent row structure).
+//! the dtype-independent row structure). Panels flow through the same
+//! SIMD dispatch as the single-threaded path
+//! ([`crate::kernels::simd`]), and since every tier is bit-identical
+//! to the scalar fallback, the parallel == single-threaded pin is
+//! unaffected by which tier each machine selects.
 
 use crate::error::Result;
 use crate::kernels::element::Element;
@@ -99,7 +103,23 @@ pub fn spmm_parallel<E: Element>(
 /// SpMM with automatic parallelism: takes the panel-parallel path when
 /// the job is big enough to amortize thread spawns
 /// ([`MIN_FLOPS_PER_THREAD`] per thread), the single-threaded tiled
-/// kernel otherwise.
+/// kernel otherwise. Either way the result is bit-identical to
+/// [`spmm`]'s (and therefore to the pinned scalar path's).
+///
+/// # Examples
+///
+/// ```
+/// use popsparse::kernels::{spmm_auto, PreparedBsr};
+/// use popsparse::sparse::coo::BlockCoo;
+///
+/// let coo = BlockCoo::new(4, 4, 2, vec![0], vec![0], vec![1.0; 4]).unwrap();
+/// let p: PreparedBsr = PreparedBsr::from_coo(&coo);
+/// let x = vec![1.0f32; 4 * 2];
+/// let mut y = vec![f32::NAN; 4 * 2];
+/// // Tiny job: stays single-threaded regardless of the budget.
+/// spmm_auto(&p, &x, 2, &mut y, 8).unwrap();
+/// assert_eq!(&y[..2], &[2.0, 2.0]);
+/// ```
 pub fn spmm_auto<E: Element>(
     p: &PreparedBsr<E>,
     x: &[E],

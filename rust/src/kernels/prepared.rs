@@ -36,6 +36,30 @@ use crate::DType;
 /// `row_ptr[mb] == cols.len()`; `cols[row_ptr[r]..row_ptr[r + 1]]`
 /// are the block-columns of block-row `r`; `values` holds one
 /// row-major `b x b` block per entry of `cols`, in the same order.
+///
+/// # Examples
+///
+/// Convert the canonical coordinate format once, then run the tiled
+/// kernel against it:
+///
+/// ```
+/// use popsparse::kernels::{spmm, PreparedBsr};
+/// use popsparse::sparse::coo::BlockCoo;
+///
+/// // One 2x2 block at block-coordinate (0, 0) of a 4x4 matrix.
+/// let coo = BlockCoo::new(4, 4, 2, vec![0], vec![0], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+/// let p: PreparedBsr = PreparedBsr::from_coo(&coo);
+/// assert_eq!(p.row_ptr, vec![0, 1, 1]); // block-row 1 is empty
+/// assert_eq!((p.mb(), p.nnz_blocks()), (2, 1));
+///
+/// let n = 3;
+/// let x = vec![1.0f32; p.k * n];
+/// let mut y = vec![f32::NAN; p.m * n];
+/// spmm(&p, &x, n, &mut y).unwrap();
+/// assert_eq!(y[0], 3.0); // row 0: 1 + 2
+/// assert_eq!(y[n], 7.0); // row 1: 3 + 4
+/// assert!(y[2 * n..].iter().all(|&v| v == 0.0)); // empty block-row zero-filled
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct PreparedBsr<E: Element = f32> {
     /// Element-level rows.

@@ -1,0 +1,332 @@
+//! Measured sparsity-roofline model: how close each kernel runs to
+//! what this machine can physically deliver (DESIGN.md §5.1; the
+//! model follows "The Sparsity Roofline", PAPERS.md).
+//!
+//! A roofline needs two machine numbers and one shape number:
+//!
+//! * **peak FLOP rate** — measured by timing the multiply–add chain
+//!   probe in [`crate::kernels::simd`] at the active tier's width.
+//!   The probe issues the kernels' exact arithmetic (separate mul +
+//!   add, **no FMA** — the bit-exactness contract forbids fusing), so
+//!   this is the ceiling these kernels can actually reach; a true FMA
+//!   peak would be ~2x higher and unreachable by design.
+//! * **streaming bandwidth** — measured by timing a wide streaming
+//!   read over a buffer sized far beyond the last-level cache.
+//! * **arithmetic intensity** — FLOPs per byte of *compulsory*
+//!   traffic (every operand and output byte moved exactly once, i.e.
+//!   a perfect-cache model). For BSR SpMM at block size `b` with
+//!   `nnzb` populated blocks ([`spmm_traffic`]):
+//!
+//!   ```text
+//!   flops = 2 * nnzb * b^2 * n
+//!   bytes = nnzb * b^2 * es              (block values)
+//!         + 4 * (nnzb + m/b + 1)         (u32 cols + row_ptr)
+//!         + min(k/b, nnzb) * b * n * es  (x rows touched, read once)
+//!         + m * n * es                   (output, written once)
+//!   ```
+//!
+//!   where `es` is the element size of the storage dtype. Halving
+//!   `es` (f16 storage) halves every value term while flops are
+//!   unchanged — f16 intensity is ~2x f32's, which is the whole
+//!   mechanism behind the paper's f16 crossover advantage; the f16
+//!   widening arithmetic itself is free in this model because the
+//!   lanes widen during the load ([`crate::kernels::simd`]) and the
+//!   flop count is defined on the widened multiply–adds. Dense `ikj`
+//!   ([`dense_traffic`]) is the classical `2mkn` over
+//!   `(mk + kn + mn) * es`.
+//!
+//! The per-shape ceiling is then
+//! `min(peak_gflops, intensity * peak_gbps)` — memory-bound below the
+//! machine's balance point, compute-bound above — and a kernel's
+//! %-of-roofline is its achieved GFLOP/s over that ceiling. The wall
+//! bench (`repro bench wall`) reports all three per swept shape per
+//! kernel; [`crate::engine::WallFeedback`] can arm the same model as
+//! a physical floor under observed kernel walls (a wall faster than
+//! the roofline permits is a measurement or model bug, counted, never
+//! a gate).
+
+use std::time::{Duration, Instant};
+
+use crate::kernels::simd;
+use crate::DType;
+
+/// The two measured machine ceilings a roofline is drawn from, plus
+/// the SIMD tier label they were measured at.
+///
+/// # Examples
+///
+/// Classification is pure math over the measured peaks — a machine
+/// doing 100 GFLOP/s and 10 GB/s balances at 10 flop/byte:
+///
+/// ```
+/// use popsparse::kernels::roofline::{dense_traffic, spmm_traffic, Bound, MachineRoofline};
+/// use popsparse::DType;
+///
+/// let machine = MachineRoofline { peak_gflops: 100.0, peak_gbps: 10.0, tier: "avx2" };
+/// // Dense 64^3 f32: 2*64^3 flops over 3*64^2*4 bytes = 10.67 flop/B.
+/// let (bound, ceiling) = machine.classify(&dense_traffic(64, 64, 64, DType::Fp32));
+/// assert_eq!((bound, ceiling), (Bound::Compute, 100.0));
+/// // A sparse shape at lower intensity is memory-bound: the ceiling
+/// // is intensity * bandwidth, below the compute peak.
+/// let t = spmm_traffic(64, 64, 32, 16, 8, DType::Fp32);
+/// let (bound, ceiling) = machine.classify(&t);
+/// assert_eq!(bound, Bound::Memory);
+/// assert!(ceiling < 100.0);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MachineRoofline {
+    /// Peak no-FMA multiply–add rate, GFLOP/s (== flop/ns).
+    pub peak_gflops: f64,
+    /// Peak streaming read bandwidth, GB/s (== byte/ns).
+    pub peak_gbps: f64,
+    /// [`simd::tier_label`] at measurement time.
+    pub tier: &'static str,
+}
+
+impl MachineRoofline {
+    /// The balance point in flop/byte: shapes below it are
+    /// memory-bound, above it compute-bound.
+    pub fn balance(&self) -> f64 {
+        self.peak_gflops / self.peak_gbps
+    }
+
+    /// Classify a shape: its bound and its ceiling in GFLOP/s
+    /// (`min(peak_gflops, intensity * peak_gbps)`).
+    pub fn classify(&self, t: &Traffic) -> (Bound, f64) {
+        let memory_ceiling = t.intensity() * self.peak_gbps;
+        if memory_ceiling < self.peak_gflops {
+            (Bound::Memory, memory_ceiling)
+        } else {
+            (Bound::Compute, self.peak_gflops)
+        }
+    }
+
+    /// The roofline for `threads` cooperating workers under a linear
+    /// compute-scaling assumption: `threads` x the single-core FLOP
+    /// peak, **unchanged** bandwidth. Bandwidth is measured
+    /// single-threaded and DRAM is shared, but one core often cannot
+    /// saturate the memory controllers — so a parallel kernel's
+    /// %-of-roofline may exceed 100% on memory-bound shapes. Parallel
+    /// rows are reported for trend; the single-threaded arms carry
+    /// the contract.
+    pub fn scaled(&self, threads: usize) -> MachineRoofline {
+        MachineRoofline {
+            peak_gflops: self.peak_gflops * threads.max(1) as f64,
+            peak_gbps: self.peak_gbps,
+            tier: self.tier,
+        }
+    }
+}
+
+/// Which machine ceiling binds a shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    /// `intensity * peak_gbps < peak_gflops`: the shape cannot feed
+    /// the FPU from memory fast enough.
+    Memory,
+    /// The FLOP peak binds first.
+    Compute,
+}
+
+impl std::fmt::Display for Bound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Bound::Memory => "mem",
+            Bound::Compute => "comp",
+        })
+    }
+}
+
+/// FLOPs and compulsory memory traffic of one kernel invocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Traffic {
+    /// Multiply–adds counted as 2 ops each.
+    pub flops: f64,
+    /// Minimum bytes moved (perfect-cache model: every operand and
+    /// output byte exactly once).
+    pub bytes: f64,
+}
+
+impl Traffic {
+    /// Arithmetic intensity, flop/byte.
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.bytes
+    }
+}
+
+/// Compulsory traffic of BSR SpMM `y = A x` (`A` is `m x k` at block
+/// size `b` with `nnz_blocks` populated blocks, `x` is `k x n`) in
+/// storage dtype `dtype`. See the module docs for the formula;
+/// activation reuse is perfect (each touched `x` block-row read
+/// once), so the intensity is an upper bound — achieved rates are
+/// measured against the ceiling this produces, which only makes the
+/// reported %-of-roofline conservative.
+pub fn spmm_traffic(
+    m: usize,
+    k: usize,
+    n: usize,
+    b: usize,
+    nnz_blocks: usize,
+    dtype: DType,
+) -> Traffic {
+    let es = dtype.size() as f64;
+    let (mb, kb) = (m / b, k / b);
+    let bsq = (b * b) as f64;
+    let flops = 2.0 * nnz_blocks as f64 * bsq * n as f64;
+    let bytes = nnz_blocks as f64 * bsq * es
+        + 4.0 * (nnz_blocks + mb + 1) as f64
+        + (kb.min(nnz_blocks) * b * n) as f64 * es
+        + (m * n) as f64 * es;
+    Traffic { flops, bytes }
+}
+
+/// Compulsory traffic of dense `y = A x` (`A` `m x k`, `x` `k x n`)
+/// in storage dtype `dtype`: `2mkn` flops over `(mk + kn + mn) * es`
+/// bytes.
+pub fn dense_traffic(m: usize, k: usize, n: usize, dtype: DType) -> Traffic {
+    let es = dtype.size() as f64;
+    Traffic {
+        flops: 2.0 * (m * k) as f64 * n as f64,
+        bytes: ((m * k + k * n + m * n) as f64) * es,
+    }
+}
+
+/// Measure this machine's roofline: the no-FMA FLOP peak (multiply–
+/// add chain probe at the active SIMD tier, best rate over repeated
+/// timed calls within `budget`) and streaming read bandwidth (timed
+/// passes over a `bandwidth_bytes` buffer — size it well past the
+/// last-level cache, e.g. 64 MiB, or smaller for smoke runs where an
+/// in-cache "bandwidth" is acceptable noise). Each peak is the *best*
+/// observed rate: interference only slows a sample down, so max is
+/// the right estimator for a ceiling.
+pub fn measure(budget: Duration, bandwidth_bytes: usize) -> MachineRoofline {
+    MachineRoofline {
+        peak_gflops: measure_flops(budget),
+        peak_gbps: measure_bandwidth(budget, bandwidth_bytes),
+        tier: simd::tier_label(),
+    }
+}
+
+fn measure_flops(budget: Duration) -> f64 {
+    let mut rounds = 1usize << 12;
+    let mut best = 0.0f64;
+    let deadline = Instant::now() + budget;
+    loop {
+        let t0 = Instant::now();
+        let (flops, sink) = simd::flops_probe(rounds);
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(sink);
+        if dt < 50e-6 {
+            // Too short for the timer's granularity: grow the probe
+            // (keeps the loop terminating even with a zero budget).
+            rounds = rounds.saturating_mul(4);
+            continue;
+        }
+        best = best.max(flops / dt / 1e9);
+        if Instant::now() >= deadline {
+            return best;
+        }
+    }
+}
+
+fn measure_bandwidth(budget: Duration, bytes: usize) -> f64 {
+    let len = (bytes / 4).max(1024);
+    let mut buf = vec![0f32; len];
+    // Non-trivial contents: an all-zero freshly-mapped buffer can be
+    // backed by copy-on-write zero pages, overstating bandwidth.
+    super::fill_pseudo(&mut buf, 0xBA2D);
+    let deadline = Instant::now() + budget;
+    let mut best = 0.0f64;
+    loop {
+        let t0 = Instant::now();
+        let sink = simd::bandwidth_probe(&buf);
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(sink);
+        if dt > 0.0 {
+            best = best.max((len * 4) as f64 / dt / 1e9);
+        }
+        if Instant::now() >= deadline {
+            return best;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spmm_traffic_matches_hand_computation() {
+        // m = k = 64, b = 16 (mb = kb = 4), 8 blocks, n = 32, f32:
+        //   flops = 2 * 8 * 256 * 32                  = 131072
+        //   bytes = 8*256*4 + 4*(8+4+1) + 4*16*32*4 + 64*32*4
+        //         = 8192 + 52 + 8192 + 8192           = 24628
+        let t = spmm_traffic(64, 64, 32, 16, 8, DType::Fp32);
+        assert_eq!(t.flops, 131072.0);
+        assert_eq!(t.bytes, 24628.0);
+        // f16 halves every value term, metadata unchanged:
+        //   4096 + 52 + 4096 + 4096 = 12340, flops identical.
+        let t16 = spmm_traffic(64, 64, 32, 16, 8, DType::Fp16);
+        assert_eq!(t16.flops, 131072.0);
+        assert_eq!(t16.bytes, 12340.0);
+        assert!(
+            t16.intensity() > 1.9 * t.intensity(),
+            "f16 storage nearly doubles intensity: {} vs {}",
+            t16.intensity(),
+            t.intensity()
+        );
+    }
+
+    #[test]
+    fn spmm_activation_term_caps_at_full_x() {
+        // With more blocks than block-columns, x cannot be read less
+        // than once in full: the activation term must stop growing.
+        let few = spmm_traffic(64, 64, 32, 16, 3, DType::Fp32);
+        let many = spmm_traffic(64, 64, 32, 16, 16, DType::Fp32);
+        let x_bytes = (64 * 32 * 4) as f64;
+        assert!(few.bytes < many.bytes);
+        // many: activation term = min(4, 16) * 16 * 32 * 4 = full x.
+        let expected = 16.0 * 256.0 * 4.0 + 4.0 * (16 + 4 + 1) as f64 + x_bytes + x_bytes;
+        assert_eq!(many.bytes, expected);
+    }
+
+    #[test]
+    fn dense_traffic_matches_hand_computation() {
+        // 2 * 64^3 = 524288 flops; (3 * 64^2) * 4 = 49152 bytes.
+        let t = dense_traffic(64, 64, 64, DType::Fp32);
+        assert_eq!(t.flops, 524288.0);
+        assert_eq!(t.bytes, 49152.0);
+        assert!((t.intensity() - 10.666_666).abs() < 1e-3);
+    }
+
+    #[test]
+    fn classification_switches_at_the_balance_point() {
+        let machine = MachineRoofline { peak_gflops: 100.0, peak_gbps: 10.0, tier: "test" };
+        assert_eq!(machine.balance(), 10.0);
+        // AI = 5 -> memory-bound, ceiling = 5 * 10 = 50 GFLOP/s.
+        let low = Traffic { flops: 500.0, bytes: 100.0 };
+        assert_eq!(machine.classify(&low), (Bound::Memory, 50.0));
+        // AI = 20 -> compute-bound at the flat 100 GFLOP/s roof.
+        let high = Traffic { flops: 2000.0, bytes: 100.0 };
+        assert_eq!(machine.classify(&high), (Bound::Compute, 100.0));
+        assert_eq!(format!("{}|{}", Bound::Memory, Bound::Compute), "mem|comp");
+    }
+
+    #[test]
+    fn scaled_roofline_multiplies_compute_only() {
+        let machine = MachineRoofline { peak_gflops: 50.0, peak_gbps: 10.0, tier: "test" };
+        let par = machine.scaled(4);
+        assert_eq!((par.peak_gflops, par.peak_gbps), (200.0, 10.0));
+        assert_eq!(machine.scaled(0).peak_gflops, 50.0, "clamped to 1 thread");
+    }
+
+    #[test]
+    fn measured_roofline_is_positive_and_labeled() {
+        // Tiny budget + small buffer: this is a smoke of the probe
+        // plumbing, not a credible measurement.
+        let machine = measure(Duration::from_millis(5), 1 << 20);
+        assert!(machine.peak_gflops > 0.0, "{machine:?}");
+        assert!(machine.peak_gbps > 0.0, "{machine:?}");
+        assert_eq!(machine.tier, simd::tier_label());
+    }
+}

@@ -1,0 +1,649 @@
+//! Explicit SIMD microkernels and the runtime tier dispatch that
+//! selects them (DESIGN.md §5.1).
+//!
+//! The scalar tiled kernels in [`crate::kernels::spmm`] and
+//! [`crate::kernels::dense`] stay the **mandatory fallback** — they
+//! define the numerics, run on every architecture, and are the path
+//! every other tier is pinned against. This module adds arch-gated
+//! wide paths on top:
+//!
+//! * **`avx2`** (x86-64, runtime-detected): the b ∈ {4, 8, 16} SpMM
+//!   microkernels and the `ikj` dense kernel with the `N_TILE = 16`
+//!   accumulator panel held as two 8-lane `__m256` registers per
+//!   output row.
+//! * **`avx2+f16c`**: the same kernels for F16 storage with f16→f32
+//!   widening done in vector lanes (`vcvtph2ps` on loads,
+//!   `vcvtps2ph` round-to-nearest-even on the output store) instead
+//!   of the software bit-twiddling path.
+//!
+//! **Bit-exactness contract.** Every SIMD path produces output
+//! bit-identical to the scalar fallback for the same dtype (pinned by
+//! `tests/kernels_differential.rs`), so the PR-6 replay and parity
+//! contracts hold across machines with different tiers. The contract
+//! falls out of three rules:
+//!
+//! 1. lanes are the batch dimension `j` — output columns are
+//!    independent in the scalar accumulation, so vectorizing across
+//!    them reorders nothing;
+//! 2. each contribution is a separate f32 multiply then add
+//!    (`_mm256_mul_ps` + `_mm256_add_ps`), never FMA — a fused
+//!    multiply-add rounds once where the scalar code rounds twice —
+//!    applied in the same (block, intra-block column) order per
+//!    output element;
+//! 3. f16 widening is value-exact on both paths (`vcvtph2ps` and the
+//!    software [`F16::to_f32`] agree for every finite value and
+//!    infinity; F16C ignores the MXCSR FTZ/DAZ bits), and the f16
+//!    output store rounds nearest-even on both paths (`vcvtps2ph`
+//!    with `_MM_FROUND_TO_NEAREST_INT` matches [`F16::from_f32`],
+//!    subnormals and overflow-to-infinity included). The only
+//!    documented divergence is signaling-NaN payloads (hardware
+//!    quiets them); kernel operands are finite.
+//!
+//! **Selection rules** (the fallback is taken whenever any rule
+//! fails): the element type must be exactly `f32` or [`F16`]
+//! (checked by `TypeId`, not by trait metadata a third-party
+//! [`Element`] impl could spoof); the block size must be one of the
+//! monomorphized {4, 8, 16} (generic-`b` patterns stay scalar); the
+//! CPU must report the tier's features at runtime
+//! (`is_x86_feature_detected!`). Partial `n` tiles inside a selected
+//! kernel run the *shared* scalar tile body, so the remainder path is
+//! identical to the fallback by construction rather than by
+//! duplication.
+//!
+//! The module also hosts the measurement probes the roofline model
+//! ([`crate::kernels::roofline`]) times: a multiply–add chain probe at
+//! the active tier's width (the kernels' no-FMA arithmetic, so the
+//! measured peak is the ceiling *these* kernels can reach) and a
+//! streaming-read probe for bandwidth.
+//!
+//! [`F16`]: crate::kernels::element::F16
+//! [`F16::to_f32`]: crate::kernels::element::F16::to_f32
+//! [`F16::from_f32`]: crate::kernels::element::F16::from_f32
+//! [`Element`]: crate::kernels::element::Element
+
+#[cfg(target_arch = "x86_64")]
+use std::any::TypeId;
+
+use crate::kernels::element::Element;
+#[cfg(target_arch = "x86_64")]
+use crate::kernels::element::F16;
+use crate::kernels::prepared::PreparedBsr;
+
+/// The SIMD width tier the compute kernels dispatch at on this
+/// machine, detected at runtime. `Scalar` is always available and is
+/// the numerics-defining fallback; wider tiers are bit-identical
+/// accelerations of it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdTier {
+    /// Portable scalar loops (the autovectorizer may still widen
+    /// them, but nothing is guaranteed).
+    Scalar,
+    /// 8-lane f32 vectors via AVX2 on x86-64.
+    Avx2,
+}
+
+/// The compute tier active for f32 kernels on this machine.
+pub fn tier() -> SimdTier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            return SimdTier::Avx2;
+        }
+    }
+    SimdTier::Scalar
+}
+
+/// Whether F16 storage kernels run with hardware f16↔f32 lane
+/// conversion (requires `avx2` **and** `f16c`). When false, F16
+/// kernels take the scalar path with software conversion.
+pub fn f16_lanes() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        avx2() && f16c()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Human-readable tier label for reports: `"avx2+f16c"`, `"avx2"`, or
+/// `"scalar"`.
+pub fn tier_label() -> &'static str {
+    match (tier(), f16_lanes()) {
+        (SimdTier::Avx2, true) => "avx2+f16c",
+        (SimdTier::Avx2, false) => "avx2",
+        (SimdTier::Scalar, _) => "scalar",
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2() -> bool {
+    // std caches the cpuid result; no need to cache again here.
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(target_arch = "x86_64")]
+fn f16c() -> bool {
+    std::arch::is_x86_feature_detected!("f16c")
+}
+
+#[cfg(target_arch = "x86_64")]
+fn same_element<E: 'static, T: 'static>() -> bool {
+    TypeId::of::<E>() == TypeId::of::<T>()
+}
+
+/// Reinterpret an element slice as its concrete type once `TypeId`
+/// equality has been established. Safety: caller must have checked
+/// `same_element::<E, T>()`; the cast is then the identity.
+#[cfg(target_arch = "x86_64")]
+unsafe fn cast_slice<E: Element, T: Element>(s: &[E]) -> &[T] {
+    debug_assert!(same_element::<E, T>());
+    std::slice::from_raw_parts(s.as_ptr().cast::<T>(), s.len())
+}
+
+#[cfg(target_arch = "x86_64")]
+unsafe fn cast_slice_mut<E: Element, T: Element>(s: &mut [E]) -> &mut [T] {
+    debug_assert!(same_element::<E, T>());
+    std::slice::from_raw_parts_mut(s.as_mut_ptr().cast::<T>(), s.len())
+}
+
+#[cfg(target_arch = "x86_64")]
+unsafe fn cast_prepared<E: Element, T: Element>(p: &PreparedBsr<E>) -> &PreparedBsr<T> {
+    debug_assert!(same_element::<E, T>());
+    &*(p as *const PreparedBsr<E>).cast::<PreparedBsr<T>>()
+}
+
+/// Try to run block-rows `[r0, r1)` through a SIMD tier. Returns
+/// `false` (computing nothing) when the selection rules send this
+/// call to the scalar fallback; on `true` the panel is fully written
+/// and is bit-identical to what the fallback would have produced.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn try_spmm_rows<E: Element>(
+    p: &PreparedBsr<E>,
+    x: &[E],
+    n: usize,
+    r0: usize,
+    r1: usize,
+    y_panel: &mut [E],
+) -> bool {
+    if !matches!(p.b, 4 | 8 | 16) {
+        return false;
+    }
+    if same_element::<E, f32>() && avx2() {
+        unsafe {
+            let p = cast_prepared::<E, f32>(p);
+            let x = cast_slice::<E, f32>(x);
+            let y = cast_slice_mut::<E, f32>(y_panel);
+            spmm_rows_f32_avx2(p, x, n, r0, r1, y);
+        }
+        return true;
+    }
+    if same_element::<E, F16>() && avx2() && f16c() {
+        unsafe {
+            let p = cast_prepared::<E, F16>(p);
+            let x = cast_slice::<E, F16>(x);
+            let y = cast_slice_mut::<E, F16>(y_panel);
+            spmm_rows_f16_avx2(p, x, n, r0, r1, y);
+        }
+        return true;
+    }
+    false
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn try_spmm_rows<E: Element>(
+    _p: &PreparedBsr<E>,
+    _x: &[E],
+    _n: usize,
+    _r0: usize,
+    _r1: usize,
+    _y_panel: &mut [E],
+) -> bool {
+    false
+}
+
+/// Try to run the dense `ikj` kernel through a SIMD tier; same
+/// contract as [`try_spmm_rows`]. Shapes are already validated by the
+/// caller ([`crate::kernels::dense::matmul`]).
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn try_matmul<E: Element>(
+    a: &[E],
+    x: &[E],
+    m: usize,
+    k: usize,
+    n: usize,
+    y: &mut [E],
+) -> bool {
+    if same_element::<E, f32>() && avx2() {
+        unsafe {
+            let a = cast_slice::<E, f32>(a);
+            let x = cast_slice::<E, f32>(x);
+            let y = cast_slice_mut::<E, f32>(y);
+            matmul_f32_avx2(a, x, m, k, n, y);
+        }
+        return true;
+    }
+    if same_element::<E, F16>() && avx2() && f16c() {
+        unsafe {
+            let a = cast_slice::<E, F16>(a);
+            let x = cast_slice::<E, F16>(x);
+            let y = cast_slice_mut::<E, F16>(y);
+            matmul_f16_avx2(a, x, m, k, n, y);
+        }
+        return true;
+    }
+    false
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn try_matmul<E: Element>(
+    _a: &[E],
+    _x: &[E],
+    _m: usize,
+    _k: usize,
+    _n: usize,
+    _y: &mut [E],
+) -> bool {
+    false
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 kernel bodies (x86-64 only).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use crate::kernels::dense::{dense_tile, I_TILE};
+    use crate::kernels::element::F16;
+    use crate::kernels::prepared::PreparedBsr;
+    use crate::kernels::spmm::{spmm_tile_b, N_TILE};
+
+    /// `vcvtps2ph` rounding control: round-to-nearest-even, matching
+    /// the software [`F16::from_f32`] path bit-for-bit.
+    const RNE: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn spmm_rows_f32_avx2(
+        p: &PreparedBsr<f32>,
+        x: &[f32],
+        n: usize,
+        r0: usize,
+        r1: usize,
+        y_panel: &mut [f32],
+    ) {
+        match p.b {
+            4 => rows_f32::<4>(p, x, n, r0, r1, y_panel),
+            8 => rows_f32::<8>(p, x, n, r0, r1, y_panel),
+            16 => rows_f32::<16>(p, x, n, r0, r1, y_panel),
+            _ => unreachable!("SIMD dispatch is gated to b in {{4, 8, 16}}"),
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "f16c")]
+    pub(super) unsafe fn spmm_rows_f16_avx2(
+        p: &PreparedBsr<F16>,
+        x: &[F16],
+        n: usize,
+        r0: usize,
+        r1: usize,
+        y_panel: &mut [F16],
+    ) {
+        match p.b {
+            4 => rows_f16::<4>(p, x, n, r0, r1, y_panel),
+            8 => rows_f16::<8>(p, x, n, r0, r1, y_panel),
+            16 => rows_f16::<16>(p, x, n, r0, r1, y_panel),
+            _ => unreachable!("SIMD dispatch is gated to b in {{4, 8, 16}}"),
+        }
+    }
+
+    /// The wide twin of `spmm_tile_b`'s full-tile case: the
+    /// `B x N_TILE` accumulator panel as `[__m256; 2]` per output row,
+    /// contributions applied as separate mul + add (no FMA) in the
+    /// same (block, intra-block column) order as the scalar body.
+    #[target_feature(enable = "avx2")]
+    unsafe fn rows_f32<const B: usize>(
+        p: &PreparedBsr<f32>,
+        x: &[f32],
+        n: usize,
+        r0: usize,
+        r1: usize,
+        y_panel: &mut [f32],
+    ) {
+        let bsz = B * B;
+        for (ri, r) in (r0..r1).enumerate() {
+            let (lo, hi) = (p.row_ptr[r] as usize, p.row_ptr[r + 1] as usize);
+            let out = &mut y_panel[ri * B * n..(ri + 1) * B * n];
+            if lo == hi {
+                out.fill(0.0);
+                continue;
+            }
+            let mut j = 0;
+            while j + N_TILE <= n {
+                let mut acc = [[_mm256_setzero_ps(); 2]; B];
+                for blk in lo..hi {
+                    let c = p.cols[blk] as usize;
+                    let vals = &p.values[blk * bsz..(blk + 1) * bsz];
+                    for bc in 0..B {
+                        let xp = x.as_ptr().add((c * B + bc) * n + j);
+                        let x0 = _mm256_loadu_ps(xp);
+                        let x1 = _mm256_loadu_ps(xp.add(8));
+                        for (br, a) in acc.iter_mut().enumerate() {
+                            let w = _mm256_set1_ps(vals[br * B + bc]);
+                            a[0] = _mm256_add_ps(a[0], _mm256_mul_ps(w, x0));
+                            a[1] = _mm256_add_ps(a[1], _mm256_mul_ps(w, x1));
+                        }
+                    }
+                }
+                for (br, a) in acc.iter().enumerate() {
+                    let op = out.as_mut_ptr().add(br * n + j);
+                    _mm256_storeu_ps(op, a[0]);
+                    _mm256_storeu_ps(op.add(8), a[1]);
+                }
+                j += N_TILE;
+            }
+            if j < n {
+                // Remainder columns run the shared scalar tile body —
+                // identical to the fallback by construction.
+                spmm_tile_b::<f32, B>(p, x, n, lo, hi, j, n - j, out);
+            }
+        }
+    }
+
+    /// F16 storage twin: widen in lanes (`vcvtph2ps`), accumulate in
+    /// f32, store through `vcvtps2ph` round-to-nearest-even. Each
+    /// block's weights are widened once per block into a stack panel
+    /// (hardware conversion, value-exact vs the software path).
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "f16c")]
+    unsafe fn rows_f16<const B: usize>(
+        p: &PreparedBsr<F16>,
+        x: &[F16],
+        n: usize,
+        r0: usize,
+        r1: usize,
+        y_panel: &mut [F16],
+    ) {
+        let bsz = B * B;
+        let mut wf = [0f32; 256]; // B * B <= 256 for B <= 16
+        for (ri, r) in (r0..r1).enumerate() {
+            let (lo, hi) = (p.row_ptr[r] as usize, p.row_ptr[r + 1] as usize);
+            let out = &mut y_panel[ri * B * n..(ri + 1) * B * n];
+            if lo == hi {
+                out.fill(F16::ZERO);
+                continue;
+            }
+            let mut j = 0;
+            while j + N_TILE <= n {
+                let mut acc = [[_mm256_setzero_ps(); 2]; B];
+                for blk in lo..hi {
+                    let c = p.cols[blk] as usize;
+                    let vals = &p.values[blk * bsz..(blk + 1) * bsz];
+                    for (i, chunk) in vals.chunks_exact(8).enumerate() {
+                        let h = _mm_loadu_si128(chunk.as_ptr().cast::<__m128i>());
+                        _mm256_storeu_ps(wf.as_mut_ptr().add(i * 8), _mm256_cvtph_ps(h));
+                    }
+                    for bc in 0..B {
+                        let xp = x.as_ptr().add((c * B + bc) * n + j).cast::<__m128i>();
+                        let x0 = _mm256_cvtph_ps(_mm_loadu_si128(xp));
+                        let x1 = _mm256_cvtph_ps(_mm_loadu_si128(xp.add(1)));
+                        for (br, a) in acc.iter_mut().enumerate() {
+                            let w = _mm256_set1_ps(wf[br * B + bc]);
+                            a[0] = _mm256_add_ps(a[0], _mm256_mul_ps(w, x0));
+                            a[1] = _mm256_add_ps(a[1], _mm256_mul_ps(w, x1));
+                        }
+                    }
+                }
+                for (br, a) in acc.iter().enumerate() {
+                    let op = out.as_mut_ptr().add(br * n + j).cast::<__m128i>();
+                    _mm_storeu_si128(op, _mm256_cvtps_ph::<RNE>(a[0]));
+                    _mm_storeu_si128(op.add(1), _mm256_cvtps_ph::<RNE>(a[1]));
+                }
+                j += N_TILE;
+            }
+            if j < n {
+                spmm_tile_b::<F16, B>(p, x, n, lo, hi, j, n - j, out);
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_f32_avx2(
+        a: &[f32],
+        x: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        y: &mut [f32],
+    ) {
+        let mut i0 = 0;
+        while i0 < m {
+            let ib = I_TILE.min(m - i0);
+            let mut j = 0;
+            while j + N_TILE <= n {
+                let mut acc = [[_mm256_setzero_ps(); 2]; I_TILE];
+                for l in 0..k {
+                    let xp = x.as_ptr().add(l * n + j);
+                    let x0 = _mm256_loadu_ps(xp);
+                    let x1 = _mm256_loadu_ps(xp.add(8));
+                    for (ii, arow) in acc.iter_mut().enumerate().take(ib) {
+                        let w = _mm256_set1_ps(a[(i0 + ii) * k + l]);
+                        arow[0] = _mm256_add_ps(arow[0], _mm256_mul_ps(w, x0));
+                        arow[1] = _mm256_add_ps(arow[1], _mm256_mul_ps(w, x1));
+                    }
+                }
+                for (ii, arow) in acc.iter().enumerate().take(ib) {
+                    let op = y.as_mut_ptr().add((i0 + ii) * n + j);
+                    _mm256_storeu_ps(op, arow[0]);
+                    _mm256_storeu_ps(op.add(8), arow[1]);
+                }
+                j += N_TILE;
+            }
+            if j < n {
+                dense_tile::<f32>(a, x, k, n, i0, ib, j, n - j, y);
+            }
+            i0 += ib;
+        }
+    }
+
+    /// F16 dense twin. The per-step weight broadcast widens one
+    /// scalar, so it takes the software [`F16::to_f32`] (value-exact
+    /// vs `vcvtph2ps`); the streamed `x` rows widen in lanes.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "f16c")]
+    pub(super) unsafe fn matmul_f16_avx2(
+        a: &[F16],
+        x: &[F16],
+        m: usize,
+        k: usize,
+        n: usize,
+        y: &mut [F16],
+    ) {
+        let mut i0 = 0;
+        while i0 < m {
+            let ib = I_TILE.min(m - i0);
+            let mut j = 0;
+            while j + N_TILE <= n {
+                let mut acc = [[_mm256_setzero_ps(); 2]; I_TILE];
+                for l in 0..k {
+                    let xp = x.as_ptr().add(l * n + j).cast::<__m128i>();
+                    let x0 = _mm256_cvtph_ps(_mm_loadu_si128(xp));
+                    let x1 = _mm256_cvtph_ps(_mm_loadu_si128(xp.add(1)));
+                    for (ii, arow) in acc.iter_mut().enumerate().take(ib) {
+                        let w = _mm256_set1_ps(a[(i0 + ii) * k + l].to_f32());
+                        arow[0] = _mm256_add_ps(arow[0], _mm256_mul_ps(w, x0));
+                        arow[1] = _mm256_add_ps(arow[1], _mm256_mul_ps(w, x1));
+                    }
+                }
+                for (ii, arow) in acc.iter().enumerate().take(ib) {
+                    let op = y.as_mut_ptr().add((i0 + ii) * n + j).cast::<__m128i>();
+                    _mm_storeu_si128(op, _mm256_cvtps_ph::<RNE>(arow[0]));
+                    _mm_storeu_si128(op.add(1), _mm256_cvtps_ph::<RNE>(arow[1]));
+                }
+                j += N_TILE;
+            }
+            if j < n {
+                dense_tile::<F16>(a, x, k, n, i0, ib, j, n - j, y);
+            }
+            i0 += ib;
+        }
+    }
+
+    /// Dependent multiply–add chains across 8 vector accumulators:
+    /// enough independent streams to saturate the FPU ports, each
+    /// step a separate mul + add (no FMA) because that is the
+    /// arithmetic the kernels issue — the measured peak is the
+    /// ceiling *these* kernels can reach (a true FMA peak would be
+    /// ~2x higher and unreachable by design).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn flops_probe_avx2(rounds: usize) -> f32 {
+        let c0 = _mm256_set1_ps(0.999_999);
+        let c1 = _mm256_set1_ps(1.0e-7);
+        let mut acc = [_mm256_set1_ps(0.1); 8];
+        for _ in 0..rounds {
+            for a in acc.iter_mut() {
+                *a = _mm256_add_ps(_mm256_mul_ps(*a, c0), c1);
+            }
+        }
+        let mut buf = [0f32; 8];
+        let mut total = 0f32;
+        for a in acc {
+            _mm256_storeu_ps(buf.as_mut_ptr(), a);
+            total += buf.iter().sum::<f32>();
+        }
+        total
+    }
+
+    /// Streaming read over `buf` with 4 independent vector
+    /// accumulators (one add per 8 floats — far below peak FLOPs, so
+    /// the probe is load-bound by construction).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn bandwidth_probe_avx2(buf: &[f32]) -> f32 {
+        let mut acc = [_mm256_setzero_ps(); 4];
+        let chunks = buf.len() / 32;
+        let p = buf.as_ptr();
+        for i in 0..chunks {
+            let base = p.add(i * 32);
+            acc[0] = _mm256_add_ps(acc[0], _mm256_loadu_ps(base));
+            acc[1] = _mm256_add_ps(acc[1], _mm256_loadu_ps(base.add(8)));
+            acc[2] = _mm256_add_ps(acc[2], _mm256_loadu_ps(base.add(16)));
+            acc[3] = _mm256_add_ps(acc[3], _mm256_loadu_ps(base.add(24)));
+        }
+        let mut buf8 = [0f32; 8];
+        let mut total = 0f32;
+        for a in acc {
+            _mm256_storeu_ps(buf8.as_mut_ptr(), a);
+            total += buf8.iter().sum::<f32>();
+        }
+        for &v in &buf[chunks * 32..] {
+            total += v;
+        }
+        total
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use x86::{matmul_f16_avx2, matmul_f32_avx2, spmm_rows_f16_avx2, spmm_rows_f32_avx2};
+
+// ---------------------------------------------------------------------------
+// Roofline measurement probes (tier-dispatched).
+// ---------------------------------------------------------------------------
+
+/// FLOPs one probe round performs at the AVX2 tier: 8 accumulators x
+/// 8 lanes x (1 mul + 1 add).
+const FLOPS_PER_ROUND_AVX2: usize = 128;
+
+/// FLOPs one probe round performs at the scalar tier: 8 accumulators
+/// x (1 mul + 1 add).
+const FLOPS_PER_ROUND_SCALAR: usize = 16;
+
+/// Run `rounds` multiply–add chain steps at the active tier's width.
+/// Returns `(flops_performed, sink)` — time the call and divide to
+/// get the machine's no-FMA peak; feed `sink` to
+/// [`std::hint::black_box`] so the chains are not dead code.
+pub fn flops_probe(rounds: usize) -> (f64, f32) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            let v = unsafe { x86::flops_probe_avx2(rounds) };
+            return ((rounds * FLOPS_PER_ROUND_AVX2) as f64, v);
+        }
+    }
+    let v = flops_probe_scalar(rounds);
+    ((rounds * FLOPS_PER_ROUND_SCALAR) as f64, v)
+}
+
+fn flops_probe_scalar(rounds: usize) -> f32 {
+    let (c0, c1) = (0.999_999f32, 1.0e-7f32);
+    let mut acc = [0.1f32; 8];
+    for _ in 0..rounds {
+        for a in acc.iter_mut() {
+            *a = *a * c0 + c1;
+        }
+    }
+    acc.iter().sum()
+}
+
+/// Stream-read `buf` once at the active tier's width, returning a
+/// reduction over it (feed to [`std::hint::black_box`]). Time the
+/// call and divide `buf.len() * 4` bytes by it for read bandwidth.
+pub fn bandwidth_probe(buf: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            return unsafe { x86::bandwidth_probe_avx2(buf) };
+        }
+    }
+    bandwidth_probe_scalar(buf)
+}
+
+fn bandwidth_probe_scalar(buf: &[f32]) -> f32 {
+    let mut acc = [0f32; 4];
+    let chunks = buf.chunks_exact(4);
+    let rem = chunks.remainder();
+    for c in chunks {
+        for (a, &v) in acc.iter_mut().zip(c) {
+            *a += v;
+        }
+    }
+    acc.iter().sum::<f32>() + rem.iter().sum::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_label_is_consistent_with_tier() {
+        let label = tier_label();
+        match tier() {
+            SimdTier::Scalar => assert_eq!(label, "scalar"),
+            SimdTier::Avx2 => assert!(label.starts_with("avx2"), "{label}"),
+        }
+        if f16_lanes() {
+            assert_eq!(tier(), SimdTier::Avx2, "f16c without avx2 is never selected");
+        }
+    }
+
+    #[test]
+    fn flops_probe_reports_work_and_stays_finite() {
+        let (flops, sink) = flops_probe(1000);
+        assert!(flops >= 16_000.0, "at least the scalar tier's work: {flops}");
+        assert!(sink.is_finite(), "chain diverged: {sink}");
+        // Doubling rounds doubles reported work at any fixed tier.
+        let (flops2, _) = flops_probe(2000);
+        assert!((flops2 / flops - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_probe_sums_the_buffer() {
+        // 1037 is deliberately not a multiple of any vector width, so
+        // the tail path runs on every tier.
+        let buf = vec![1.0f32; 1037];
+        let total = bandwidth_probe(&buf);
+        assert!((total - 1037.0).abs() < 1e-2, "{total}");
+    }
+}

@@ -24,6 +24,16 @@
 //! the documented tolerance ([`close_enough`] /
 //! [`close_enough_for`]), not bit-equality (DESIGN.md §5).
 //!
+//! SIMD: [`spmm`] first offers each row panel to the arch-gated wide
+//! kernels in [`crate::kernels::simd`] (DESIGN.md §5.1); the scalar
+//! loops in this file are the mandatory fallback and the
+//! numerics-defining reference. The wide paths are pinned
+//! **bit-identical** to the scalar ones per dtype — same mul/add
+//! (no FMA) in the same order, lanes across the independent batch
+//! columns — so dispatch is invisible to the tolerance contract and
+//! to the PR-6 replay/parity contracts. [`spmm_scalar`] bypasses
+//! dispatch for tests and differential harnesses.
+//!
 //! [`BlockCoo::spmm_dense`]: crate::sparse::coo::BlockCoo::spmm_dense
 
 use crate::error::{Error, Result};
@@ -76,6 +86,17 @@ pub fn tolerance(dtype: DType) -> (f32, f32) {
 /// `|a - b| <= abs + rel * max(|a|, |b|)` with `(rel, abs)` from
 /// [`tolerance`]. For FP16 the contract presumes both sides consumed
 /// the same f16-quantized operands (see [`REL_TOLERANCE_F16`]).
+///
+/// # Examples
+///
+/// ```
+/// use popsparse::kernels::close_enough_for;
+/// use popsparse::DType;
+///
+/// // 5e-4 relative error: inside the f16 contract, outside f32's.
+/// assert!(close_enough_for(DType::Fp16, 1.0, 1.0005));
+/// assert!(!close_enough_for(DType::Fp32, 1.0, 1.0005));
+/// ```
 pub fn close_enough_for(dtype: DType, a: f32, b: f32) -> bool {
     let (rel, abs) = tolerance(dtype);
     (a - b).abs() <= abs + rel * a.abs().max(b.abs())
@@ -109,18 +130,49 @@ fn check_operands<E: Element>(p: &PreparedBsr<E>, x: &[E], n: usize, y: &[E]) ->
 /// Single-threaded tiled SpMM: `y = A x` with `A` prepared, `x`
 /// row-major `k x n`, `y` row-major `m x n`, all in storage type `E`
 /// with f32 accumulation. Overwrites all of `y` (no pre-zeroing
-/// needed).
+/// needed). Dispatches to the widest SIMD tier the machine supports
+/// ([`crate::kernels::simd`]); the result is bit-identical across
+/// tiers.
 pub fn spmm<E: Element>(p: &PreparedBsr<E>, x: &[E], n: usize, y: &mut [E]) -> Result<()> {
     check_operands(p, x, n, y)?;
     spmm_rows(p, x, n, 0, p.mb(), y);
     Ok(())
 }
 
+/// [`spmm`] pinned to the scalar fallback path, bypassing SIMD
+/// dispatch. The output is bit-identical to [`spmm`]'s on every
+/// machine — this entry point exists so tests and differential
+/// harnesses can *prove* that, and as the reference when a wide tier
+/// is suspected of misbehaving.
+pub fn spmm_scalar<E: Element>(p: &PreparedBsr<E>, x: &[E], n: usize, y: &mut [E]) -> Result<()> {
+    check_operands(p, x, n, y)?;
+    spmm_rows_scalar(p, x, n, 0, p.mb(), y);
+    Ok(())
+}
+
 /// Compute block-rows `[r0, r1)` into `y_panel`, the panel's own
-/// output slice of length `(r1 - r0) * b * n`. Dispatches to the
+/// output slice of length `(r1 - r0) * b * n`. Offers the panel to
+/// the SIMD tiers first, then dispatches to the scalar
 /// block-size-specialized microkernel. This is the unit of work a
 /// parallel panel executes; `spmm` is the single-panel case.
 pub(crate) fn spmm_rows<E: Element>(
+    p: &PreparedBsr<E>,
+    x: &[E],
+    n: usize,
+    r0: usize,
+    r1: usize,
+    y_panel: &mut [E],
+) {
+    debug_assert_eq!(y_panel.len(), (r1 - r0) * p.b * n);
+    if crate::kernels::simd::try_spmm_rows(p, x, n, r0, r1, y_panel) {
+        return;
+    }
+    spmm_rows_scalar(p, x, n, r0, r1, y_panel);
+}
+
+/// The scalar tier of [`spmm_rows`]: block-size dispatch into the
+/// monomorphized scalar microkernels, no SIMD offer.
+pub(crate) fn spmm_rows_scalar<E: Element>(
     p: &PreparedBsr<E>,
     x: &[E],
     n: usize,
@@ -153,7 +205,6 @@ fn spmm_rows_b<E: Element, const B: usize>(
     y_panel: &mut [E],
 ) {
     debug_assert_eq!(p.b, B);
-    let bsz = B * B;
     for (ri, r) in (r0..r1).enumerate() {
         let (lo, hi) = (p.row_ptr[r] as usize, p.row_ptr[r + 1] as usize);
         let out = &mut y_panel[ri * B * n..(ri + 1) * B * n];
@@ -162,57 +213,55 @@ fn spmm_rows_b<E: Element, const B: usize>(
             continue;
         }
         let mut j = 0;
-        while j + N_TILE <= n {
-            let mut acc = [[0f32; N_TILE]; B];
-            for blk in lo..hi {
-                let c = p.cols[blk] as usize;
-                let vals = &p.values[blk * bsz..(blk + 1) * bsz];
-                for bc in 0..B {
-                    let xrow = &x[(c * B + bc) * n + j..][..N_TILE];
-                    let mut xf = [0f32; N_TILE];
-                    for (d, &s) in xf.iter_mut().zip(xrow) {
-                        *d = s.to_f32();
-                    }
-                    for (br, acc_row) in acc.iter_mut().enumerate() {
-                        let w = vals[br * B + bc].to_f32();
-                        for (a, &xv) in acc_row.iter_mut().zip(&xf) {
-                            *a += w * xv;
-                        }
-                    }
-                }
-            }
-            for (br, acc_row) in acc.iter().enumerate() {
-                for (o, &a) in out[br * n + j..br * n + j + N_TILE].iter_mut().zip(acc_row) {
-                    *o = E::from_f32(a);
-                }
-            }
-            j += N_TILE;
+        while j < n {
+            let tile = N_TILE.min(n - j);
+            spmm_tile_b::<E, B>(p, x, n, lo, hi, j, tile, out);
+            j += tile;
         }
-        if j < n {
-            let rem = n - j;
-            let mut acc = [[0f32; N_TILE]; B];
-            for blk in lo..hi {
-                let c = p.cols[blk] as usize;
-                let vals = &p.values[blk * bsz..(blk + 1) * bsz];
-                for bc in 0..B {
-                    let xrow = &x[(c * B + bc) * n + j..][..rem];
-                    let mut xf = [0f32; N_TILE];
-                    for (d, &s) in xf.iter_mut().zip(xrow) {
-                        *d = s.to_f32();
-                    }
-                    for (br, acc_row) in acc.iter_mut().enumerate() {
-                        let w = vals[br * B + bc].to_f32();
-                        for (a, &xv) in acc_row.iter_mut().zip(&xf[..rem]) {
-                            *a += w * xv;
-                        }
-                    }
+    }
+}
+
+/// One `B x tile` output tile of a block-row (`tile <= N_TILE`
+/// columns starting at batch column `j`), accumulated from blocks
+/// `[lo, hi)` and stored into `out` (the block-row's own `B x n`
+/// slice). This single body serves the full tiles *and* the `n %
+/// N_TILE` remainder of the scalar path, and is the remainder path of
+/// every SIMD tier ([`crate::kernels::simd`]) — sharing it is what
+/// makes the tiers' remainder handling identical to the fallback by
+/// construction.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn spmm_tile_b<E: Element, const B: usize>(
+    p: &PreparedBsr<E>,
+    x: &[E],
+    n: usize,
+    lo: usize,
+    hi: usize,
+    j: usize,
+    tile: usize,
+    out: &mut [E],
+) {
+    let bsz = B * B;
+    let mut acc = [[0f32; N_TILE]; B];
+    for blk in lo..hi {
+        let c = p.cols[blk] as usize;
+        let vals = &p.values[blk * bsz..(blk + 1) * bsz];
+        for bc in 0..B {
+            let xrow = &x[(c * B + bc) * n + j..][..tile];
+            let mut xf = [0f32; N_TILE];
+            for (d, &s) in xf.iter_mut().zip(xrow) {
+                *d = s.to_f32();
+            }
+            for (br, acc_row) in acc.iter_mut().enumerate() {
+                let w = vals[br * B + bc].to_f32();
+                for (a, &xv) in acc_row.iter_mut().zip(&xf[..tile]) {
+                    *a += w * xv;
                 }
             }
-            for (br, acc_row) in acc.iter().enumerate() {
-                for (o, &a) in out[br * n + j..br * n + n].iter_mut().zip(&acc_row[..rem]) {
-                    *o = E::from_f32(a);
-                }
-            }
+        }
+    }
+    for (br, acc_row) in acc.iter().enumerate() {
+        for (o, &a) in out[br * n + j..br * n + j + tile].iter_mut().zip(&acc_row[..tile]) {
+            *o = E::from_f32(a);
         }
     }
 }
@@ -352,6 +401,37 @@ mod tests {
                     close_enough_for(DType::Fp16, u, v),
                     "b={b}: element {i}: {u} vs {v}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_spmm_is_bit_identical_to_pinned_scalar() {
+        // The module-level SIMD contract at unit scale (the broad
+        // sweep lives in tests/kernels_differential.rs): whatever tier
+        // `spmm` dispatched to produced the scalar path's bits.
+        let mut rng = Rng::seed_from_u64(0x51D);
+        for &b in &[4usize, 8, 16] {
+            let mb = 5;
+            let n = 33; // full tiles + remainder
+            let mask = patterns::uniform(mb * b, mb * b, b, mb * mb / 3, rng.next_u64()).unwrap();
+            let coo = patterns::with_values(&mask, rng.next_u64());
+            let p = PreparedBsr::from_coo(&coo);
+            let x: Vec<f32> = (0..p.k * n).map(|_| rng.normal() as f32).collect();
+            let (mut y, mut y_ref) = (vec![f32::NAN; p.m * n], vec![f32::NAN; p.m * n]);
+            spmm(&p, &x, n, &mut y).unwrap();
+            spmm_scalar(&p, &x, n, &mut y_ref).unwrap();
+            for (i, (&u, &v)) in y.iter().zip(&y_ref).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "b={b} elem {i}: {u} vs {v}");
+            }
+            let p16 = PreparedBsr::<F16>::from_coo(&coo);
+            let x16: Vec<F16> = quantize(&x);
+            let (mut y16, mut y16_ref) =
+                (vec![F16(0x7E00); p16.m * n], vec![F16(0x7E00); p16.m * n]);
+            spmm(&p16, &x16, n, &mut y16).unwrap();
+            spmm_scalar(&p16, &x16, n, &mut y16_ref).unwrap();
+            for (i, (&u, &v)) in y16.iter().zip(&y16_ref).enumerate() {
+                assert_eq!(u.0, v.0, "f16 b={b} elem {i}");
             }
         }
     }

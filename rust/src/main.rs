@@ -37,9 +37,11 @@ fn usage() -> ! {
          \x20        experiments: table3 fig2 fig3a fig3b fig4a fig4b fig4c fig7 auto churn ell conclusions\n\
          \x20        --calibrated: add the observed-cycle-calibrated crossover arm to `auto`\n\
          \x20 bench  wall [--smoke] [--threads N] [--out DIR]  measured kernel GFLOP/s in\n\
-         \x20        fp32+fp16: naive-ref vs prepared-tiled vs row-panel-parallel, plus the\n\
-         \x20        per-dtype sparse-vs-dense crossover (reported, never gated; CSV to DIR,\n\
-         \x20        default target/bench_results)\n\
+         \x20        fp32+fp16: naive-ref vs prepared-tiled vs row-panel-parallel, the\n\
+         \x20        per-dtype sparse-vs-dense crossover, and the roofline table (achieved\n\
+         \x20        rate vs the measured machine ceiling, memory- vs compute-bound per\n\
+         \x20        shape); reported, never gated; CSV + wall_roofline.json to DIR\n\
+         \x20        (default target/bench_results)\n\
          \x20 bench  ci [--out FILE] [--seed-baseline]  churn-sweep + calibrated crossover\n\
          \x20        (both dtypes), machine-readable points to FILE (default BENCH_ci.json)\n\
          \x20 bench  gate [--baseline FILE] [--current FILE] [--tolerance F]\n\
@@ -354,27 +356,34 @@ fn cmd_bench(args: &[String]) -> popsparse::Result<()> {
 
 /// `repro bench wall`: measure naive-ref vs prepared-tiled vs
 /// parallel kernel GFLOP/s on the host, in both storage dtypes, plus
-/// the per-dtype sparse-vs-dense crossover (`--smoke` for the tiny CI
-/// shapes; `--threads N` to bound the panel parallelism; `--out DIR`
-/// to choose where the named CSVs land — CI uploads that directory as
-/// an artifact). Wall-time numbers are machine-dependent: they are
-/// reported (and recorded in EXPERIMENTS.md), never fed to the
-/// regression gate.
+/// the per-dtype sparse-vs-dense crossover and the roofline
+/// classification — each shape's achieved rate against the measured
+/// machine ceiling (`--smoke` for the tiny CI shapes; `--threads N`
+/// to bound the panel parallelism; `--out DIR` to choose where the
+/// named CSVs and `wall_roofline.json` land — CI uploads that
+/// directory as an artifact). Wall-time numbers are machine-dependent:
+/// they are reported (and recorded in EXPERIMENTS.md), never fed to
+/// the regression gate.
 fn cmd_bench_wall(flags: &HashMap<String, String>) -> popsparse::Result<()> {
     let smoke = flags.contains_key("smoke");
     let threads = flag_usize(flags, "threads", popsparse::kernels::default_threads());
-    let tables = popsparse::bench_harness::wall::wall_tables(smoke, threads)?;
+    let (tables, points) = popsparse::bench_harness::wall::wall_tables(smoke, threads)?;
     let out_dir = flags
         .get("out")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|| std::path::PathBuf::from("target/bench_results"));
     // One named CSV per table, stable across runs so CI artifact
     // consumers can rely on the paths.
-    let names = ["wall_spmm.csv", "wall_dense.csv", "wall_crossover.csv"];
+    let names = ["wall_spmm.csv", "wall_dense.csv", "wall_crossover.csv", "wall_roofline.csv"];
     for (t, name) in tables.iter().zip(names) {
         t.print();
         t.write_csv(out_dir.join(name))?;
     }
+    // The roofline points (%-of-ceiling per row + the measured machine
+    // peaks) in the same machine-readable format as the gate docs —
+    // for artifact consumers, not for gating.
+    popsparse::bench_harness::BenchDoc::from_points(&points)
+        .write(out_dir.join("wall_roofline.json"))?;
     println!("(CSV written under {})", out_dir.display());
     Ok(())
 }

@@ -10,6 +10,12 @@
 //!   both storage dtypes** (the FP16 arm compares against the f32
 //!   oracle on f16-quantized operands, per the contract);
 //! * the tiled dense kernel vs `runtime::dense_ref`;
+//! * the SIMD-tier contract (DESIGN.md §5.1): whatever tier the host
+//!   selects at runtime, the dispatched SpMM/dense kernels are
+//!   **bit-identical** to the pinned scalar paths
+//!   (`kernels::spmm_scalar`, `kernels::dense::matmul_scalar`) in
+//!   both dtypes — and the roofline traffic model's hand-computable
+//!   properties hold;
 //! * the `PreparedBsr -> BlockCoo` round-trip property (exact for
 //!   f32 — preparation is a relayout, not arithmetic — and exact for
 //!   `F16` when the values are f16-representable: the element
@@ -219,6 +225,108 @@ fn tiled_dense_matches_reference_kernel() {
         kernels::dense::matmul(&a, &x, m, k, n, &mut y).unwrap();
         assert_close(&y, &runtime::dense_ref(&a, &x, m, k, n), &format!("m={m} k={k} n={n}"));
     }
+}
+
+#[test]
+fn dispatched_spmm_matches_pinned_scalar_bitwise() {
+    // The SIMD tier contract (DESIGN.md §5.1): whatever tier this
+    // host selects at runtime, the dispatched kernels are
+    // bit-identical to the pinned scalar path — per dtype, across
+    // specialized and generic block sizes, odd batch widths, empty
+    // rows and heavy row skew. (On a scalar-only host this still
+    // pins dispatch == scalar; CI's x86-64 runners exercise the AVX2
+    // tiers.)
+    eprintln!("active SIMD tier: {}", kernels::simd::tier_label());
+    let mut rng = Rng::seed_from_u64(0x51D3);
+    let mut cases: Vec<(BlockCoo, usize, String)> = Vec::new();
+    for &b in &[1usize, 4, 8, 16] {
+        for &n in &[1usize, 8, 33] {
+            let mask = patterns::uniform(8 * b, 8 * b, b, 21, rng.next_u64()).unwrap();
+            let coo = patterns::with_values(&mask, rng.next_u64());
+            cases.push((coo, n, format!("b={b} n={n}")));
+        }
+    }
+    // All-empty pattern (every output row zero-filled) and heavy
+    // power-law row skew at the specialized block size.
+    cases.push((BlockCoo::new(64, 64, 16, vec![], vec![], vec![]).unwrap(), 19, "empty".into()));
+    let skew = patterns::row_imbalanced(512, 512, 16, 400, 2.5, 13).unwrap();
+    cases.push((patterns::with_values(&skew, 13), 33, "row-skewed".into()));
+    let bits = |v: &[f32]| v.iter().map(|u| u.to_bits()).collect::<Vec<u32>>();
+    for (coo, n, context) in &cases {
+        let n = *n;
+        // f32 arm: dispatched single-threaded and parallel, both
+        // against the pinned scalar result, compared as bit patterns.
+        let p = PreparedBsr::<f32>::from_coo(coo);
+        let x: Vec<f32> = (0..coo.k * n).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![f32::NAN; coo.m * n];
+        let mut y_ref = vec![f32::NAN; coo.m * n];
+        kernels::spmm(&p, &x, n, &mut y).unwrap();
+        kernels::spmm_scalar(&p, &x, n, &mut y_ref).unwrap();
+        assert_eq!(bits(&y), bits(&y_ref), "{context}: f32 dispatch vs scalar");
+        let mut y_par = vec![f32::NAN; coo.m * n];
+        kernels::spmm_parallel(&p, &x, n, &mut y_par, 4).unwrap();
+        assert_eq!(bits(&y_par), bits(&y_ref), "{context}: f32 parallel vs scalar");
+        // f16 arm on the same value stream, quantized; F16 compares
+        // as its storage bits.
+        let p16 = PreparedBsr::<F16>::from_coo(coo);
+        let x16: Vec<F16> = quantize(&x);
+        let mut z = vec![F16(0x7E00); coo.m * n];
+        let mut z_ref = vec![F16(0x7E00); coo.m * n];
+        kernels::spmm(&p16, &x16, n, &mut z).unwrap();
+        kernels::spmm_scalar(&p16, &x16, n, &mut z_ref).unwrap();
+        assert_eq!(z, z_ref, "{context}: f16 dispatch vs scalar");
+        let mut z_par = vec![F16(0x7E00); coo.m * n];
+        kernels::spmm_parallel(&p16, &x16, n, &mut z_par, 4).unwrap();
+        assert_eq!(z_par, z_ref, "{context}: f16 parallel vs scalar");
+    }
+}
+
+#[test]
+fn dispatched_dense_matmul_matches_pinned_scalar_bitwise() {
+    // The dense half of the tier contract: `matmul` (which may take
+    // the AVX2 path) against `matmul_scalar`, bitwise, in both
+    // dtypes, across exact-tile and remainder shapes.
+    let mut rng = Rng::seed_from_u64(0x51D4);
+    let bits = |v: &[f32]| v.iter().map(|u| u.to_bits()).collect::<Vec<u32>>();
+    for &(m, k, n) in &[(64usize, 64usize, 64usize), (9, 17, 33), (5, 128, 1)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![f32::NAN; m * n];
+        let mut y_ref = vec![f32::NAN; m * n];
+        kernels::dense::matmul(&a, &x, m, k, n, &mut y).unwrap();
+        kernels::dense::matmul_scalar(&a, &x, m, k, n, &mut y_ref).unwrap();
+        assert_eq!(bits(&y), bits(&y_ref), "m={m} k={k} n={n}: f32 dispatch vs scalar");
+        let a16: Vec<F16> = quantize(&a);
+        let x16: Vec<F16> = quantize(&x);
+        let mut z = vec![F16(0x7E00); m * n];
+        let mut z_ref = vec![F16(0x7E00); m * n];
+        kernels::dense::matmul(&a16, &x16, m, k, n, &mut z).unwrap();
+        kernels::dense::matmul_scalar(&a16, &x16, m, k, n, &mut z_ref).unwrap();
+        assert_eq!(z, z_ref, "m={m} k={k} n={n}: f16 dispatch vs scalar");
+    }
+}
+
+#[test]
+fn roofline_intensity_doubles_from_fp32_to_fp16_on_the_paper_shape() {
+    use popsparse::kernels::roofline::{dense_traffic, spmm_traffic};
+    // Table 3 geometry: m = k = 4096, n = 512, b = 16, d = 1/16, so
+    // 256 * 256 / 16 = 4096 populated blocks. Halving the element
+    // size halves every value term of the traffic (the 4-byte index
+    // stream stays), so f16 arithmetic intensity lands just under
+    // 2x f32 — the roofline mechanism behind the paper's FP16
+    // crossover advantage.
+    let nnzb = 4096;
+    let t32 = spmm_traffic(4096, 4096, 512, 16, nnzb, DType::Fp32);
+    let t16 = spmm_traffic(4096, 4096, 512, 16, nnzb, DType::Fp16);
+    assert_eq!(t32.flops, t16.flops, "dtype changes traffic, not work");
+    let ratio = t16.intensity() / t32.intensity();
+    assert!(ratio > 1.9 && ratio < 2.01, "f16 nearly halves the bytes: {ratio}");
+    // Dense at the same geometry reuses every A element n times: far
+    // more arithmetic-intense than the sparse kernel, which is why
+    // the same machine can be compute-bound dense and memory-bound
+    // sparse.
+    let d32 = dense_traffic(4096, 4096, 512, DType::Fp32);
+    assert!(d32.intensity() > t32.intensity());
 }
 
 fn job(mode: Mode, n: usize, seed: u64) -> JobSpec {
