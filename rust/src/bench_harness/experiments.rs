@@ -18,7 +18,7 @@ use crate::bench_harness::sweep::{seed_for, Env, PaperSweep};
 use crate::coordinator::request::{JobSpec, Mode};
 use crate::engine::{
     device_backends, Backend, BackendKind, Calibration, ChurnTracker, DenseBackend, DynamicBackend,
-    EngineEnv, GpuBackend, ModeSelector, StaticBackend,
+    EngineEnv, GpuBackend, ModeSelector, NmBackend, StaticBackend,
 };
 use crate::fit;
 use crate::gpu::{self, A100Spec};
@@ -622,15 +622,17 @@ impl Experiment for ChurnSweepExperiment {
 
 /// Machine-readable cycle-estimate points for the CI bench gate
 /// (`repro bench ci`): the churn-sweep scores plus the calibrated
-/// crossover grid's per-backend estimates ([`crossover_points`]),
-/// the latter in **both dtypes** — FP16 is where the paper's
-/// crossover lives and FP32 is where it moves, so the gate pins the
-/// cost model's dtype separation, not just one precision's absolute
-/// level. Everything here is a pure function of the frozen cost model
-/// and fixed seeds, so any drift is a code change, not noise.
+/// crossover grid's per-backend estimates ([`crossover_points`]) and
+/// the structured N:M grid ([`nm_crossover_points`]), the crossovers
+/// in **both dtypes** — FP16 is where the paper's crossover lives and
+/// FP32 is where it moves, so the gate pins the cost model's dtype
+/// separation, not just one precision's absolute level. Everything
+/// here is a pure function of the frozen cost model and fixed seeds,
+/// so any drift is a code change, not noise.
 pub fn bench_ci_points(env: &Env) -> Vec<(String, f64)> {
     let mut points = churn_sweep_points(env).1;
     points.extend(crossover_points(env));
+    points.extend(nm_crossover_points(env));
     points
 }
 
@@ -672,6 +674,64 @@ impl Experiment for CrossoverPointsExperiment {
         }
         if let Some(observed) = skewed_dynamic_cycles(&job, &self.engine_env) {
             points.push((format!("{prefix}/dynamic_observed"), observed as f64));
+        }
+        PointOutput::points_only(points)
+    }
+}
+
+/// The structured N:M companion to [`crossover_points`]: per dtype
+/// and N:M-expressible density (1/2, 1/4, 1/8), the N:M backend's
+/// cycle estimate against dense at the same b = 1 geometry — the
+/// granularity the structured tier serves and the one the legacy
+/// block-sparse backends price worst (DESIGN.md §5.2). Pure cost
+/// model and fixed seeds, so the gate pins the structured/dense
+/// separation bit-for-bit under `crossover/<dtype>/nm/...`.
+pub fn nm_crossover_points(env: &Env) -> Vec<(String, f64)> {
+    let mut exp = NmCrossoverPointsExperiment {
+        spec: ExperimentSpec::new("nm_crossover_points", "CI N:M crossover points", &[])
+            .axis(Axis::dtypes("dtype", &[DType::Fp16, DType::Fp32]))
+            .axis(Axis::ints("m", &[1024, 2048, 4096]))
+            .axis(Axis::ints("inv_d", &[2, 4, 8])),
+        engine_env: EngineEnv::new(env.spec.clone(), env.cm.clone()),
+    };
+    Runner::run(&mut exp).points
+}
+
+/// The N:M point-sweep job: the crossover grid geometry at b = 1,
+/// where the structured tier is feasible.
+fn nm_grid_job(m: usize, inv_d: usize, dtype: DType) -> JobSpec {
+    JobSpec {
+        mode: Mode::Auto,
+        m,
+        k: m,
+        n: 2048,
+        b: 1,
+        density: 1.0 / inv_d as f64,
+        dtype,
+        pattern_seed: seed_for(m, 1, inv_d),
+    }
+}
+
+struct NmCrossoverPointsExperiment {
+    spec: ExperimentSpec,
+    engine_env: EngineEnv,
+}
+
+impl Experiment for NmCrossoverPointsExperiment {
+    fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    fn measure(&mut self, point: &GridPoint) -> PointOutput {
+        let (dtype, m, inv_d) = (point.dtype("dtype"), point.int("m"), point.int("inv_d"));
+        let job = nm_grid_job(m, inv_d, dtype);
+        let prefix = format!("crossover/{dtype}/nm/m{m}_d{inv_d}");
+        let mut points = Vec::new();
+        if let Ok(est) = NmBackend.plan(&job, &self.engine_env) {
+            points.push((format!("{prefix}/nm"), est.cycles as f64));
+        }
+        if let Ok(est) = DenseBackend.plan(&job, &self.engine_env) {
+            points.push((format!("{prefix}/dense"), est.cycles as f64));
         }
         PointOutput::points_only(points)
     }
@@ -848,6 +908,18 @@ mod tests {
         let st16 = find("crossover/fp16/m4096_d16/static").expect("fp16 static point");
         let st32 = find("crossover/fp32/m4096_d16/static").expect("fp32 static point");
         assert!(st16 < st32, "fp16 static {st16} must undercut fp32 {st32}");
+        // The N:M grid is fully feasible (b = 1, densities 1/2, 1/4,
+        // 1/8, m divisible by every M), and the structured estimate
+        // undercuts dense by construction of its keep-ratio model.
+        for dtype in ["fp16", "fp32"] {
+            for inv_d in [2, 4, 8] {
+                let nm = find(&format!("crossover/{dtype}/nm/m4096_d{inv_d}/nm"))
+                    .expect("nm point emitted");
+                let de = find(&format!("crossover/{dtype}/nm/m4096_d{inv_d}/dense"))
+                    .expect("nm-grid dense point emitted");
+                assert!(nm < de, "{dtype} 1/{inv_d}: nm {nm} must undercut dense {de}");
+            }
+        }
         assert_eq!(points, bench_ci_points(&env), "bit-deterministic run over run");
     }
 

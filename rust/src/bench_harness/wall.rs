@@ -24,16 +24,23 @@
 //! this host: at the same geometry, from what density down does the
 //! tiled *sparse* kernel beat the tiled *dense* kernel — per dtype
 //! (the FP16 ~90% crossover of Table 3, measured in wall time rather
-//! than simulated cycles; recorded in EXPERIMENTS.md §Wall-time).
+//! than simulated cycles; recorded in EXPERIMENTS.md §Wall-time). At
+//! densities expressible as a structured N:M pattern (1/2, 1/4, 1/8 —
+//! [`kernels::nm_for_density`]) the table carries two extra columns
+//! timing [`kernels::spmm_nm_auto`] over a [`kernels::PreparedNm`] at
+//! the same geometry; infeasible densities show `-`, so the N:M
+//! crossover reads off the same sweep as the unstructured one
+//! (DESIGN.md §5.2).
 //!
 //! The [`roofline_table`] closes the loop on *how good* those numbers
 //! are in absolute terms: a one-time machine microbench
 //! ([`roofline::measure`]) pins this host's no-FMA FLOP peak and
 //! streaming bandwidth, and every swept shape is then classified
 //! memory- vs compute-bound by its arithmetic intensity
-//! ([`roofline::spmm_traffic`] / [`roofline::dense_traffic`],
-//! DESIGN.md §5.1) and reported as a percentage of its binding
-//! ceiling. The per-row percentages and the measured peaks are also
+//! ([`roofline::spmm_traffic`] / [`roofline::dense_traffic`] /
+//! [`roofline::nm_traffic`], DESIGN.md §5.1) and reported as a
+//! percentage of its binding ceiling — the N:M kernel included as a
+//! fourth arm at N:M-feasible densities. The per-row percentages and the measured peaks are also
 //! emitted as machine-readable points (`wall_roofline.json`, CSV
 //! alongside the tables) — reported, never gated, like everything
 //! else in this arm.
@@ -103,7 +110,9 @@ fn per_dtype(shapes: &[(usize, usize, usize, usize, usize)]) -> Vec<WallCase> {
 
 /// The full sweep: paper-scale shapes around the headline point
 /// (m = k = 4096, n = 512, b = 16, d = 1/16 — Table 3's geometry),
-/// block-size and density scaling, and an odd `n` so the tile
+/// block-size and density scaling (the d = 1/8 point is the one
+/// expressible as a structured 1:8 pattern, so the roofline's N:M arm
+/// has a paper-scale measurement), and an odd `n` so the tile
 /// remainder path is measured, not just tested — each in both
 /// storage dtypes.
 pub fn paper_cases() -> Vec<WallCase> {
@@ -113,6 +122,7 @@ pub fn paper_cases() -> Vec<WallCase> {
         (4096, 4096, 512, 4, 16),
         (4096, 4096, 512, 8, 16),
         (4096, 4096, 512, 16, 16),
+        (4096, 4096, 512, 16, 8),
         (4096, 4096, 512, 16, 32),
         (4096, 4096, 509, 16, 16),
     ])
@@ -438,6 +448,24 @@ impl Experiment for CrossoverWallExperiment {
             DType::Fp16 => sparse_ms_for::<F16>(&coo, n, &self.x32, rep, threads),
         };
         let speedup = dense_ms / sparse_ms;
+        // The structured companion at the same geometry: only the
+        // densities an N:M pattern can express exactly (1/2, 1/4,
+        // 1/8) have a measurement; the rest read `-`, keeping the
+        // table shape deterministic.
+        let (nm_ms_cell, nm_x_cell) = match kernels::nm_for_density(d) {
+            Some((nm_n, nm_m)) if k % nm_m == 0 => {
+                let nm_ms = match dtype {
+                    DType::Fp32 => {
+                        nm_ms_for::<f32>(m, k, n, nm_n, nm_m, seed ^ 3, &self.x32, rep, threads)
+                    }
+                    DType::Fp16 => {
+                        nm_ms_for::<F16>(m, k, n, nm_n, nm_m, seed ^ 3, &self.x32, rep, threads)
+                    }
+                };
+                (f2(nm_ms), f2(dense_ms / nm_ms))
+            }
+            _ => ("-".to_string(), "-".to_string()),
+        };
         PointOutput::row(vec![
             dtype.to_string(),
             format!("1/{inv_d}"),
@@ -445,6 +473,8 @@ impl Experiment for CrossoverWallExperiment {
             f2(sparse_ms),
             f2(speedup),
             if speedup > 1.0 { "yes".into() } else { "no".into() },
+            nm_ms_cell,
+            nm_x_cell,
         ])
     }
 }
@@ -455,7 +485,10 @@ impl Experiment for CrossoverWallExperiment {
 /// means the sparse path wins at that density — the wall-time answer
 /// to the paper's "from what sparsity is the sparse kernel worth it"
 /// (Table 3 asks it in simulated cycles; EXPERIMENTS.md records this
-/// table per dtype).
+/// table per dtype). The `nm ms` / `nm/dense x` columns time the
+/// structured N:M kernel wherever the density is N:M-expressible
+/// (`-` elsewhere), so the structured crossover reads off the same
+/// sweep.
 pub fn crossover_table(smoke: bool, budget: Duration, threads: usize) -> Result<Table> {
     let (m, n, b) = if smoke { (256usize, 32usize, 16usize) } else { (2048, 256, 16) };
     let k = m;
@@ -468,9 +501,19 @@ pub fn crossover_table(smoke: bool, budget: Duration, threads: usize) -> Result<
             "wall_crossover",
             format!(
                 "Wall-time sparse-vs-dense crossover — m=k={m}, n={n}, b={b}, tiled kernels \
-                 ({threads} threads for sparse); machine-dependent, not gated"
+                 ({threads} threads for sparse); N:M columns at N:M-expressible densities; \
+                 machine-dependent, not gated"
             ),
-            &["dtype", "density", "dense ms", "sparse ms", "sparse/dense x", "sparse wins"],
+            &[
+                "dtype",
+                "density",
+                "dense ms",
+                "sparse ms",
+                "sparse/dense x",
+                "sparse wins",
+                "nm ms",
+                "nm/dense x",
+            ],
         )
         .axis(Axis::dtypes("dtype", &[DType::Fp32, DType::Fp16]))
         .axis(Axis::ints("inv_d", crossover_inv_densities(smoke)))
@@ -522,24 +565,55 @@ fn sparse_ms_for<E: Element>(
     stats.mean_ns() / 1e6
 }
 
-/// Row labels of the roofline kernel axis, in axis order.
-const ROOF_KERNELS: [&str; 3] = ["spmm-tiled", "spmm-par", "dense-tiled"];
+/// Time the structured N:M kernel at a geometry the crossover sweep
+/// also measures unstructured: a fresh deterministic `nm_n:nm_m`
+/// pattern at the sweep density, through the same auto
+/// (serial-or-parallel) dispatch the serving path uses.
+#[allow(clippy::too_many_arguments)]
+fn nm_ms_for<E: Element>(
+    m: usize,
+    k: usize,
+    n: usize,
+    nm_n: usize,
+    nm_m: usize,
+    seed: u64,
+    x32: &[f32],
+    rep: Repetition,
+    threads: usize,
+) -> f64 {
+    let prep =
+        kernels::PreparedNm::<E>::from_pattern(m, k, nm_n, nm_m, seed).expect("bench geometry");
+    let x: Vec<E> = quantize(x32);
+    let mut y = vec![E::ZERO; m * n];
+    let stats = rep.bench(
+        &format!("xover nm      m{m} n{n} {nm_n}:{nm_m} {}", E::DTYPE),
+        || {
+            let _ = kernels::spmm_nm_auto(&prep, &x, n, &mut y, threads);
+        },
+    );
+    stats.mean_ns() / 1e6
+}
 
-/// Measure the achieved GFLOP/s of all three kernel arms of one case
+/// Row labels of the roofline kernel axis, in axis order.
+const ROOF_KERNELS: [&str; 4] = ["spmm-tiled", "spmm-par", "dense-tiled", "spmm-nm"];
+
+/// Measure the achieved GFLOP/s of all four kernel arms of one case
 /// in storage type `E` — operands prepared once, shared across the
 /// kernel axis. Correctness of these kernels is oracle-checked by the
-/// companion spmm/dense tables over the same case list; this arm only
-/// times. Returns `[tiled, parallel, dense]` in effective GFLOP/s
-/// (nnz-only FLOPs for the sparse arms, `2mkn` for the dense arm —
-/// the same counting [`roofline::spmm_traffic`] and
-/// [`roofline::dense_traffic`] use, so achieved/ceiling is
-/// like-for-like).
+/// companion spmm/dense tables (and the N:M differential suite) over
+/// the same shapes; this arm only times. Returns
+/// `[tiled, parallel, dense, nm]` in effective GFLOP/s (nnz-only
+/// FLOPs for the sparse arms, `2mkn` for the dense arm — the same
+/// counting [`roofline::spmm_traffic`], [`roofline::dense_traffic`]
+/// and [`roofline::nm_traffic`] use, so achieved/ceiling is
+/// like-for-like). The nm slot is 0 when the case's density is not
+/// N:M-expressible; its row then reads `-` and emits no point.
 fn roofline_arms<E: Element>(
     case: &WallCase,
     coo: &BlockCoo,
     rep: Repetition,
     threads: usize,
-) -> [f64; 3] {
+) -> [f64; 4] {
     let (m, k, n) = (case.m, case.k, case.n);
     let seed = seed_for(case.m, case.b, case.inv_d);
     let prep = PreparedBsr::<E>::from_coo(coo);
@@ -560,7 +634,22 @@ fn roofline_arms<E: Element>(
     let dense = rep.bench(&format!("roof dense    {tag}"), || {
         let _ = kernels::dense::matmul(&a, &x, m, k, n, &mut y);
     });
-    [sp_flops / tiled.mean_ns(), sp_flops / par.mean_ns(), d_flops / dense.mean_ns()]
+    // The N:M arm is single-threaded (like spmm-tiled, it carries the
+    // serial contract against the unscaled machine ceiling); only
+    // timed where the density has an exact N:M expression.
+    let nm = kernels::nm_for_density(1.0 / case.inv_d as f64)
+        .filter(|&(_, nm_m)| k % nm_m == 0)
+        .map(|(nm_n, nm_m)| {
+            let prep = kernels::PreparedNm::<E>::from_pattern(m, k, nm_n, nm_m, seed ^ 3)
+                .expect("bench geometry");
+            let nm_flops = 2.0 * prep.nnz() as f64 * n as f64;
+            let stats = rep.bench(&format!("roof sp-nm    {tag}"), || {
+                let _ = kernels::spmm_nm(&prep, &x, n, &mut y);
+            });
+            nm_flops / stats.mean_ns()
+        })
+        .unwrap_or(0.0);
+    [sp_flops / tiled.mean_ns(), sp_flops / par.mean_ns(), d_flops / dense.mean_ns(), nm]
 }
 
 struct RooflineExperiment {
@@ -571,11 +660,11 @@ struct RooflineExperiment {
     machine_budget: Duration,
     bandwidth_bytes: usize,
     machine: MachineRoofline,
-    /// `(case index, nnz blocks, [tiled, par, dense] GFLOP/s)` of the
-    /// case currently being swept: all three arms are timed when the
-    /// inner kernel axis first visits a case, then re-read — the three
+    /// `(case index, nnz blocks, [tiled, par, dense, nm] GFLOP/s)` of
+    /// the case currently being swept: all arms are timed when the
+    /// inner kernel axis first visits a case, then re-read — the four
     /// rows of a case classify one shared measurement pass.
-    cached: Option<(usize, usize, [f64; 3])>,
+    cached: Option<(usize, usize, [f64; 4])>,
 }
 
 impl Experiment for RooflineExperiment {
@@ -614,8 +703,32 @@ impl Experiment for RooflineExperiment {
             self.cached = Some((idx, coo.nnz_blocks(), arms));
         }
         let (_, nnzb, arms) = self.cached.expect("cached above");
+        let nm_shape = kernels::nm_for_density(1.0 / case.inv_d as f64)
+            .filter(|&(_, nm_m)| case.k % nm_m == 0);
+        if kernel == 3 && nm_shape.is_none() {
+            // Density has no exact N:M expression: keep the table
+            // shape deterministic (four rows per case) with a `-` row
+            // and emit no machine-readable point for it.
+            return PointOutput::row(vec![
+                ROOF_KERNELS[3].to_string(),
+                case.dtype.to_string(),
+                case.m.to_string(),
+                case.n.to_string(),
+                case.b.to_string(),
+                format!("1/{}", case.inv_d),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
         let traffic = match kernel {
             2 => roofline::dense_traffic(case.m, case.k, case.n, case.dtype),
+            3 => {
+                let (nm_n, nm_m) = nm_shape.expect("infeasible handled above");
+                roofline::nm_traffic(case.m, case.k, case.n, nm_n, nm_m, case.dtype)
+            }
             _ => roofline::spmm_traffic(case.m, case.k, case.n, case.b, nnzb, case.dtype),
         };
         // The parallel arm is classified against the compute ceiling
@@ -656,13 +769,15 @@ impl Experiment for RooflineExperiment {
     }
 }
 
-/// The roofline table: every wall case × three kernel arms, each
-/// classified memory- vs compute-bound against the measured machine
-/// roofline and reported as %-of-ceiling (DESIGN.md §5.1;
-/// EXPERIMENTS.md §Roofline records the results). Returns the table
-/// plus the machine-readable points: one `wall_roofline/<kernel>/...`
-/// percentage per row and the two measured peaks. Machine-dependent,
-/// reported, never gated.
+/// The roofline table: every wall case × four kernel arms (tiled,
+/// parallel, dense, and structured N:M where the density is
+/// N:M-expressible), each classified memory- vs compute-bound against
+/// the measured machine roofline and reported as %-of-ceiling
+/// (DESIGN.md §5.1; EXPERIMENTS.md §Roofline records the results).
+/// Returns the table plus the machine-readable points: one
+/// `wall_roofline/<kernel>/...` percentage per row (infeasible N:M
+/// rows read `-` and emit none) and the two measured peaks.
+/// Machine-dependent, reported, never gated.
 pub fn roofline_table(
     cases: &[WallCase],
     smoke: bool,
@@ -700,7 +815,7 @@ pub fn roofline_table(
             ],
         )
         .axis(case_axis(cases.len()))
-        .axis(Axis::ints("kernel", &[0, 1, 2]))
+        .axis(Axis::ints("kernel", &[0, 1, 2, 3]))
         .threads(threads)
         .repetition(budget, 2),
         cases: cases.to_vec(),
@@ -756,12 +871,30 @@ mod tests {
         );
         assert_eq!(
             tables[3].rows.len(),
-            3 * smoke_cases().len(),
-            "roofline: three kernel arms per case"
+            4 * smoke_cases().len(),
+            "roofline: four kernel arms per case"
         );
         for row in &tables[0].rows {
             let naive: f64 = row[6].parse().expect("numeric GF/s");
             assert!(naive > 0.0);
+        }
+        // The crossover's N:M columns are measured exactly where the
+        // density has an N:M expression: 1/4 (1:4) yes, 1/16 no.
+        for dtype in ["fp32", "fp16"] {
+            let at = |d: &str| {
+                tables[2]
+                    .rows
+                    .iter()
+                    .find(|r| r[0] == dtype && r[1] == d)
+                    .expect("crossover sweeps every (dtype, density)")
+                    .clone()
+            };
+            let feasible = at("1/4");
+            let infeasible = at("1/16");
+            let nm_ms: f64 = feasible[6].parse().expect("numeric nm ms at 1/4");
+            assert!(nm_ms > 0.0);
+            assert_eq!(infeasible[6], "-");
+            assert_eq!(infeasible[7], "-");
         }
         // Both dtypes are represented in every table (the roofline
         // table leads with the kernel arm; dtype is its second
@@ -772,6 +905,15 @@ mod tests {
         }
         assert!(tables[3].rows.iter().any(|r| r[1] == "fp16"));
         assert!(tables[3].rows.iter().any(|r| r[1] == "fp32"));
+        // Every smoke case is d = 1/8 — N:M-expressible as 1:8 — so
+        // all spmm-nm rows are measured (no `-` cells) and every
+        // roofline row still carries a point below.
+        let nm_rows: Vec<_> = tables[3].rows.iter().filter(|r| r[0] == "spmm-nm").collect();
+        assert_eq!(nm_rows.len(), smoke_cases().len());
+        for row in &nm_rows {
+            let achieved: f64 = row[9].parse().expect("numeric nm GF/s");
+            assert!(achieved > 0.0);
+        }
         // Every roofline row carries a bound classification, and the
         // machine-readable points are one percentage per row plus the
         // two measured peaks — all positive and finite.
@@ -805,5 +947,19 @@ mod tests {
         // The crossover sweep includes the paper's ~90%-sparsity
         // headline density.
         assert!(crossover_inv_densities(false).contains(&10));
+        // The full sweep carries an N:M-feasible (1:8) paper-scale
+        // point for the roofline's structured arm, in both dtypes.
+        for dtype in [DType::Fp32, DType::Fp16] {
+            assert!(paper_cases()
+                .iter()
+                .any(|c| c.m == 4096 && c.b == 16 && c.inv_d == 8 && c.dtype == dtype));
+        }
+        // And the crossover densities cover both N:M-expressible and
+        // inexpressible points, smoke included.
+        for smoke in [true, false] {
+            let ds = crossover_inv_densities(smoke);
+            assert!(ds.iter().any(|&i| kernels::nm_for_density(1.0 / i as f64).is_some()));
+            assert!(ds.iter().any(|&i| kernels::nm_for_density(1.0 / i as f64).is_none()));
+        }
     }
 }

@@ -144,7 +144,13 @@ impl BatchKey {
             b: job.b,
             density_millionths: job.density_millionths(),
             dtype: job.dtype,
-            pattern_seed: if matches!(job.mode, Mode::Static | Mode::Auto) { seed } else { 0 },
+            // N:M operands realize their packed values from the seed,
+            // so like static jobs they batch per-pattern.
+            pattern_seed: if matches!(job.mode, Mode::Static | Mode::Nm | Mode::Auto) {
+                seed
+            } else {
+                0
+            },
         }
     }
 }
@@ -244,7 +250,8 @@ impl<T> Batcher<T> {
                 Mode::Dense => 0u8,
                 Mode::Static => 1,
                 Mode::Dynamic => 2,
-                Mode::Auto => 3,
+                Mode::Nm => 3,
+                Mode::Auto => 4,
             };
             let dtype_rank = match k.dtype {
                 DType::Fp16 => 0u8,

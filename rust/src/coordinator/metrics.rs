@@ -132,6 +132,7 @@ struct LocalMetrics {
     auto_dense: u64,
     auto_static: u64,
     auto_dynamic: u64,
+    auto_nm: u64,
     estimate_pairs: u64,
     estimate_rel_err_sum: f64,
     calibrated_rel_err_sum: f64,
@@ -168,6 +169,7 @@ impl Default for LocalMetrics {
             auto_dense: 0,
             auto_static: 0,
             auto_dynamic: 0,
+            auto_nm: 0,
             estimate_pairs: 0,
             estimate_rel_err_sum: 0.0,
             calibrated_rel_err_sum: 0.0,
@@ -204,6 +206,7 @@ impl LocalMetrics {
         self.auto_dense += other.auto_dense;
         self.auto_static += other.auto_static;
         self.auto_dynamic += other.auto_dynamic;
+        self.auto_nm += other.auto_nm;
         self.estimate_pairs += other.estimate_pairs;
         self.estimate_rel_err_sum += other.estimate_rel_err_sum;
         self.calibrated_rel_err_sum += other.calibrated_rel_err_sum;
@@ -240,6 +243,7 @@ impl LocalMetrics {
             auto_dense: self.auto_dense,
             auto_static: self.auto_static,
             auto_dynamic: self.auto_dynamic,
+            auto_nm: self.auto_nm,
             auto_estimate_rel_err: if self.estimate_pairs == 0 {
                 0.0
             } else {
@@ -290,6 +294,7 @@ pub struct Snapshot {
     pub auto_dense: u64,
     pub auto_static: u64,
     pub auto_dynamic: u64,
+    pub auto_nm: u64,
     /// Mean relative error of the selector's *raw* estimated cycles
     /// against the simulated cycles of completed auto jobs (0.0 when
     /// none).
@@ -351,7 +356,7 @@ pub struct Snapshot {
 impl Snapshot {
     /// Total auto-mode jobs resolved.
     pub fn auto_resolved(&self) -> u64 {
-        self.auto_dense + self.auto_static + self.auto_dynamic
+        self.auto_dense + self.auto_static + self.auto_dynamic + self.auto_nm
     }
 
     /// The integer counters that are functions of the job stream and
@@ -372,6 +377,7 @@ impl Snapshot {
             ("auto_dense", self.auto_dense),
             ("auto_static", self.auto_static),
             ("auto_dynamic", self.auto_dynamic),
+            ("auto_nm", self.auto_nm),
             ("decision_flips", self.decision_flips),
             ("churn_shifts", self.churn_shifts),
             ("rekeyed_batches", self.rekeyed_batches),
@@ -428,6 +434,7 @@ impl ShardMetrics {
             Mode::Dense => g.auto_dense += 1,
             Mode::Static => g.auto_static += 1,
             Mode::Dynamic => g.auto_dynamic += 1,
+            Mode::Nm => g.auto_nm += 1,
             Mode::Auto => debug_assert!(false, "resolution must be concrete"),
         }
     }

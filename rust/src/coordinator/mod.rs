@@ -184,6 +184,13 @@ pub struct Config {
     /// off the wall calibration never learns and resolution behaves
     /// as uncorrected. Off by default.
     pub wall_calibrated: bool,
+    /// Let auto-mode resolution consider the structured-N:M backend
+    /// ([`crate::engine::NmBackend`]) where the job is N:M-expressible
+    /// (unbatched weights, density on the N:M lattice, divisible k).
+    /// On by default; turning it off removes the candidate from the
+    /// argmin without touching explicit [`Mode::Nm`] jobs — the A/B
+    /// switch `repro trace replay --nm` flips.
+    pub nm: bool,
     /// Record the workload to this path: every submitted job (at
     /// ingress, in submission order) and — with [`Config::numeric`] on
     /// — every measured kernel wall, serialized as a versioned JSONL
@@ -211,6 +218,7 @@ impl Default for Config {
             caches: CacheConfig::default(),
             numeric: false,
             wall_calibrated: false,
+            nm: true,
             record_trace: None,
             panic_on_pattern_seed: None,
         }
@@ -371,14 +379,16 @@ impl Coordinator {
         let shard_count = config.workers.max(1);
         let mut shards = Vec::with_capacity(shard_count);
         for _ in 0..shard_count {
+            let cache = PlanCache::with_capacity(
+                spec.clone(),
+                cm.clone(),
+                caches.plan_capacity,
+                caches.memo_capacity,
+                caches.prepared_capacity,
+            );
+            cache.set_nm_enabled(config.nm);
             shards.push(Arc::new(Shard {
-                cache: PlanCache::with_capacity(
-                    spec.clone(),
-                    cm.clone(),
-                    caches.plan_capacity,
-                    caches.memo_capacity,
-                    caches.prepared_capacity,
-                ),
+                cache,
                 calibration: Calibration::with_capacity(
                     DEFAULT_ALPHA,
                     caches.calibration_capacity,
@@ -852,6 +862,7 @@ fn execute_group(
             let (cycles, prop_steps) = match &plan {
                 CachedPlan::Dense(p) => (p.cost.total(), 0),
                 CachedPlan::Static(p, _) => (p.cost.total(), 0),
+                CachedPlan::Nm { cycles } => (*cycles, 0),
                 CachedPlan::Dynamic(p) => {
                     // Dynamic: bucket the batch's (fresh) pattern now.
                     let seed = rep.pattern_seed;
@@ -898,7 +909,7 @@ fn execute_group(
             // geometry-bucket, dtype) for wall-calibrated dispatch.
             if let Some(arm) = numeric {
                 let run = match rep.mode {
-                    Mode::Static | Mode::Dynamic => {
+                    Mode::Static | Mode::Dynamic | Mode::Nm => {
                         cache.get_or_prepare(rep).and_then(|(prepared, _)| {
                             crate::engine::backends::execute_kernel(
                                 rep,
@@ -1053,6 +1064,76 @@ mod tests {
         let _ = c.submit_wait(job(Mode::Dense, 64, 0)).expect("first job serves");
         let r2 = c.submit_wait(job(Mode::Dense, 64, 0)).expect("second job serves");
         assert!(r2.plan_cache_hit);
+        c.shutdown();
+    }
+
+    /// An N:M-expressible point: unbatched weights (b=1), density on
+    /// the 2:4 lattice, k divisible by the group width.
+    fn nm_job(mode: Mode, n: usize, seed: u64) -> JobSpec {
+        JobSpec {
+            mode,
+            m: 256,
+            k: 256,
+            n,
+            b: 1,
+            density: 0.5,
+            dtype: DType::Fp16,
+            pattern_seed: seed,
+        }
+    }
+
+    #[test]
+    fn nm_jobs_serve_numerically_with_cached_operands() {
+        let c = Coordinator::new(
+            Config { workers: 1, numeric: true, ..Config::default() },
+            IpuSpec::default(),
+            CostModel::default(),
+        );
+        let nm = c.submit_wait(nm_job(Mode::Nm, 64, 7)).expect("nm serves");
+        assert!(nm.cycles > 0 && nm.tflops > 0.0);
+        let dense = c.submit_wait(nm_job(Mode::Dense, 64, 7)).expect("dense serves");
+        assert!(
+            nm.cycles < dense.cycles,
+            "2:4 must undercut dense at its own geometry: {} vs {}",
+            nm.cycles,
+            dense.cycles
+        );
+        // Steady state: the packed operand converts once per
+        // (pattern, dtype) and is a prepared-cache hit afterwards.
+        let again = c.submit_wait(nm_job(Mode::Nm, 64, 7)).expect("nm steady state");
+        assert!(again.plan_cache_hit);
+        assert_eq!(c.prepared_conversions(), 1, "one N:M packing per (pattern, dtype)");
+        assert_eq!(c.prepared_stats(), (1, 1));
+        let snap = c.metrics();
+        assert_eq!(snap.kernel_execs, 3, "every batch executes numerically");
+        assert_eq!(snap.kernel_failures, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn auto_resolution_considers_nm_and_respects_the_config_switch() {
+        // Enabled (the default): at b=1 / 50% density / FP16 the b=1
+        // sparse vertices run at 0.058 AMP efficiency, so static and
+        // dynamic cost multiples of dense while the 2:4 path prices at
+        // 0.65x dense — the argmin is N:M by a wide, model-stable
+        // margin.
+        let c = Coordinator::new(Config::default(), IpuSpec::default(), CostModel::default());
+        let r = c.submit_wait(nm_job(Mode::Auto, 64, 7)).expect("auto serves");
+        assert_eq!(r.spec.mode, Mode::Nm, "2:4-expressible point must resolve N:M");
+        assert_eq!(c.metrics().auto_nm, 1);
+        c.shutdown();
+        // Disabled: the candidate vanishes from the argmin; explicit
+        // Mode::Nm jobs still execute.
+        let c = Coordinator::new(
+            Config { nm: false, ..Config::default() },
+            IpuSpec::default(),
+            CostModel::default(),
+        );
+        let r = c.submit_wait(nm_job(Mode::Auto, 64, 7)).expect("auto serves without nm");
+        assert_ne!(r.spec.mode, Mode::Nm, "a disabled candidate never wins");
+        assert_eq!(c.metrics().auto_nm, 0);
+        let explicit = c.submit_wait(nm_job(Mode::Nm, 64, 7)).expect("explicit nm still serves");
+        assert!(explicit.cycles > 0);
         c.shutdown();
     }
 

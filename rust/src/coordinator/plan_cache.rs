@@ -22,7 +22,7 @@
 //! [`PlanCache::memo_eviction_stats`]) tells an operator when a
 //! deployment's working set has outgrown the bound.
 
-use std::sync::atomic::AtomicU64;
+use std::sync::atomic::{AtomicBool, AtomicU64};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use crate::coordinator::request::{JobSpec, Mode, PlanKey, PreparedKey, SelectorKey};
@@ -79,6 +79,12 @@ pub enum CachedPlan {
     Static(Arc<StaticPlan>, Arc<BlockMask>),
     /// Dynamic: the compile-time grid; patterns arrive at run time.
     Dynamic(Arc<DynamicPlan>),
+    /// Structured N:M: the cycle model is closed-form (the dense plan
+    /// scaled by the keep ratio — see
+    /// [`crate::engine::nm_plan_cycles`]), so the cached plan is just
+    /// its estimate; the packed operand lives in the prepared-operand
+    /// slot, keyed per (pattern, dtype, format).
+    Nm { cycles: u64 },
 }
 
 impl CachedPlan {
@@ -95,6 +101,7 @@ impl CachedPlan {
             CachedPlan::Dense(p) => p.cost.total(),
             CachedPlan::Static(p, _) => p.cost.total(),
             CachedPlan::Dynamic(p) => p.expected_cycles,
+            CachedPlan::Nm { cycles } => *cycles,
         }
     }
 }
@@ -139,7 +146,7 @@ pub struct BatchResolution {
 
 /// Thread-safe plan cache with hit/miss accounting. Besides compiled
 /// plans it memoizes batch-time auto-mode resolutions per
-/// [`SelectorKey`] — selection plans up to three backends, so a
+/// [`SelectorKey`] — selection plans up to four backends, so a
 /// serving layer must amortise it the same way it amortises plans.
 /// Resolution-time planning goes *through* the cache
 /// ([`PlanCache::resolve_batch`]), so the plans selection builds are
@@ -159,6 +166,9 @@ pub struct PlanCache {
     prepared_hits: AtomicU64,
     prepared_misses: AtomicU64,
     prepared_conversions: AtomicU64,
+    /// Whether batch-time resolution offers the structured N:M backend
+    /// as a candidate (on by default; the replay A/B switch).
+    nm_enabled: AtomicBool,
 }
 
 impl PlanCache {
@@ -198,7 +208,22 @@ impl PlanCache {
             prepared_hits: Default::default(),
             prepared_misses: Default::default(),
             prepared_conversions: Default::default(),
+            nm_enabled: AtomicBool::new(true),
         }
+    }
+
+    /// Whether the structured N:M backend participates in batch-time
+    /// resolution.
+    pub fn nm_enabled(&self) -> bool {
+        self.nm_enabled.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Enable or disable the N:M candidate in batch-time resolution.
+    /// Explicitly-moded [`Mode::Nm`] jobs still execute either way —
+    /// this gates only the *selector's* consideration (the replay A/B
+    /// switch; see `repro trace replay --nm`).
+    pub fn set_nm_enabled(&self, enabled: bool) {
+        self.nm_enabled.store(enabled, std::sync::atomic::Ordering::Relaxed);
     }
 
     pub fn spec(&self) -> &IpuSpec {
@@ -301,14 +326,26 @@ impl PlanCache {
             self.prepared_hits.fetch_add(1, Relaxed);
             return Ok((p.clone(), true));
         }
-        let built = PreparedOperand::from_pattern(
-            job.m,
-            job.k,
-            job.b,
-            job.density,
-            job.pattern_seed,
-            job.dtype,
-        )?;
+        let built = if job.mode == Mode::Nm {
+            let (nm_n, nm_m) = crate::engine::backends::NmBackend::structure(job)?;
+            PreparedOperand::from_nm_pattern(
+                job.m,
+                job.k,
+                nm_n,
+                nm_m,
+                job.pattern_seed,
+                job.dtype,
+            )?
+        } else {
+            PreparedOperand::from_pattern(
+                job.m,
+                job.k,
+                job.b,
+                job.density,
+                job.pattern_seed,
+                job.dtype,
+            )?
+        };
         self.prepared_conversions.fetch_add(1, Relaxed);
         self.prepared_misses.fetch_add(1, Relaxed);
         let mut map = locked(&self.prepared);
@@ -411,15 +448,21 @@ impl PlanCache {
         }
         // Fresh (or stale-epoch) resolution: plan every candidate mode
         // at the batch geometry, through the cache, in the selector's
-        // full-evaluation order (Dense, Static, Dynamic — see
-        // `device_backends`) so tie-breaking agrees; the argmin itself
-        // is the selector's `corrected_argmin_amortized`, so the two
-        // paths cannot drift. The estimates carry only kind + cycles
-        // (that is all the argmin reads); throughput is reported at
-        // execution time.
+        // full-evaluation order (Dense, Static, Dynamic, Nm — see
+        // `device_backends`; Nm last so the first-minimum tie-break
+        // keeps legacy decisions) so tie-breaking agrees; the argmin
+        // itself is the selector's `corrected_argmin_amortized`, so
+        // the two paths cannot drift. The estimates carry only kind +
+        // cycles (that is all the argmin reads); throughput is
+        // reported at execution time. Jobs outside the N:M feasibility
+        // gate simply error that candidate out of the list.
+        let mut candidates = vec![Mode::Dense, Mode::Static, Mode::Dynamic];
+        if self.nm_enabled() {
+            candidates.push(Mode::Nm);
+        }
         let mut estimates: Vec<PlanEstimate> = Vec::new();
         let mut last_err: Option<Error> = None;
-        for mode in [Mode::Dense, Mode::Static, Mode::Dynamic] {
+        for mode in candidates {
             let mut cand = rep.clone();
             cand.mode = mode;
             match self.get_or_plan_inner(&cand, &self.resolution_hits, &self.resolution_misses) {
@@ -520,6 +563,10 @@ impl PlanCache {
                 )?;
                 Ok(CachedPlan::Dynamic(Arc::new(p)))
             }
+            Mode::Nm => {
+                let cycles = crate::engine::nm_plan_cycles(job, &self.spec, &self.cm)?;
+                Ok(CachedPlan::Nm { cycles })
+            }
             Mode::Auto => Err(Error::Coordinator(
                 "auto-mode jobs must be resolved to a concrete mode before planning".into(),
             )),
@@ -600,7 +647,8 @@ mod tests {
         assert_eq!(cache.stats(), (1, 0), "execution path never re-plans");
         let (res_hits, res_misses) = cache.resolution_stats();
         assert_eq!(res_hits, 0);
-        assert_eq!(res_misses, 3, "all three candidates planned once");
+        // b = 16 gates the N:M candidate out, so three plans build.
+        assert_eq!(res_misses, 3, "all three feasible candidates planned once");
         // A stale re-resolution re-costs candidates from cache. Ratio
         // 2.0 keeps every observation informative across the whole
         // revisit window (the EWMA is still >= INFORMATIVE_DELTA away
@@ -746,6 +794,78 @@ mod tests {
         assert_eq!(cache.prepared_stats(), (2, 3));
         assert_eq!(cache.prepared_len(), 3);
         assert_eq!(cache.prepared_eviction_stats(), (0, 0));
+    }
+
+    fn nm_job(mode: Mode, seed: u64) -> JobSpec {
+        JobSpec {
+            mode,
+            m: 512,
+            k: 512,
+            n: 128,
+            b: 1,
+            density: 0.5, // 2:4-expressible
+            dtype: DType::Fp16,
+            pattern_seed: seed,
+        }
+    }
+
+    #[test]
+    fn nm_plans_cache_and_gate_feasibility() {
+        let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
+        let (p, h1) = cache.get_or_plan(&nm_job(Mode::Nm, 1)).unwrap();
+        assert!(!h1);
+        assert!(p.estimated_cycles() > 0);
+        assert!(matches!(p, CachedPlan::Nm { .. }));
+        // N:M plans are geometry-level (seed-blind), like dynamic.
+        let (_, h2) = cache.get_or_plan(&nm_job(Mode::Nm, 999)).unwrap();
+        assert!(h2, "different seeds must share the N:M plan");
+        // Outside the feasibility gate, planning errors.
+        assert!(cache.get_or_plan(&job(Mode::Nm, 1)).is_err(), "b=16 is not N:M");
+    }
+
+    #[test]
+    fn nm_candidate_is_gated_by_the_enable_switch() {
+        // The same N:M-eligible auto geometry resolved with the
+        // candidate enabled vs disabled: the disabled resolution can
+        // never pick Nm, and the two decisions are memoized under
+        // their own cache instances (the replay A/B harness runs one
+        // session per setting).
+        let on = PlanCache::new(IpuSpec::default(), CostModel::default());
+        assert!(on.nm_enabled(), "N:M participates by default");
+        let r_on = on.resolve_batch(&nm_job(Mode::Auto, 1), None).unwrap();
+        assert_ne!(r_on.mode, Mode::Auto);
+
+        let off = PlanCache::new(IpuSpec::default(), CostModel::default());
+        off.set_nm_enabled(false);
+        assert!(!off.nm_enabled());
+        let r_off = off.resolve_batch(&nm_job(Mode::Auto, 1), None).unwrap();
+        assert_ne!(r_off.mode, Mode::Nm, "a disabled candidate can never win");
+        // Either the decision differs, or N:M simply wasn't the
+        // cheapest; in both cases the winning estimate with the
+        // candidate enabled can only be <= the one without it.
+        assert!(r_on.corrected_cycles <= r_off.corrected_cycles);
+        // Legacy block-granular geometries are untouched by the switch.
+        let legacy_on = on.resolve_batch(&job(Mode::Auto, 1), None).unwrap();
+        let legacy_off = off.resolve_batch(&job(Mode::Auto, 1), None).unwrap();
+        assert_eq!(legacy_on.mode, legacy_off.mode);
+        assert_eq!(legacy_on.raw_cycles, legacy_off.raw_cycles);
+    }
+
+    #[test]
+    fn nm_prepared_operands_are_cached_per_format() {
+        let cache = PlanCache::new(IpuSpec::default(), CostModel::default());
+        let (p1, h1) = cache.get_or_prepare(&nm_job(Mode::Nm, 1)).unwrap();
+        assert!(!h1);
+        assert!(p1.as_nm_f16().is_some(), "N:M jobs realize the packed layout");
+        let (p2, h2) = cache.get_or_prepare(&nm_job(Mode::Nm, 1)).unwrap();
+        assert!(h2, "steady state: one conversion per (pattern, dtype, format)");
+        assert!(p1.ptr_eq(&p2));
+        // The same geometry through the BSR path is its own entry —
+        // the format discriminator keeps the layouts apart.
+        let (p3, h3) = cache.get_or_prepare(&nm_job(Mode::Static, 1)).unwrap();
+        assert!(!h3, "BSR and N:M never share a cache slot");
+        assert!(p3.as_nm_f16().is_none() && p3.as_f16().is_some());
+        assert_eq!(cache.prepared_conversions(), 2);
     }
 
     #[test]

@@ -121,14 +121,19 @@ impl ReplaySession {
         let shards = (0..shards.max(1))
             .map(|_| {
                 let hints = Arc::new(PatternHints::with_capacity(caches.hint_capacity));
+                let cache = PlanCache::with_capacity(
+                    spec.clone(),
+                    cm.clone(),
+                    caches.plan_capacity,
+                    caches.memo_capacity,
+                    caches.prepared_capacity,
+                );
+                // The N:M A/B switch (`repro trace replay --nm`):
+                // replay under `Config::nm` exactly as the live
+                // coordinator would serve.
+                cache.set_nm_enabled(config.nm);
                 ShardState {
-                    cache: PlanCache::with_capacity(
-                        spec.clone(),
-                        cm.clone(),
-                        caches.plan_capacity,
-                        caches.memo_capacity,
-                        caches.prepared_capacity,
-                    ),
+                    cache,
                     calibration: Calibration::with_capacity(
                         DEFAULT_ALPHA,
                         caches.calibration_capacity,
@@ -622,6 +627,50 @@ mod tests {
             );
             assert!(base.diff(&report).is_empty());
         }
+    }
+
+    /// An N:M-expressible stream: unbatched 2:4-density FP16 jobs.
+    fn nm_spec(mode: Mode, n: usize, seed: u64) -> JobSpec {
+        JobSpec {
+            mode,
+            m: 256,
+            k: 256,
+            n,
+            b: 1,
+            density: 0.5,
+            dtype: DType::Fp16,
+            pattern_seed: seed,
+        }
+    }
+
+    #[test]
+    fn nm_ab_replay_is_deterministic_and_visible_in_counters() {
+        // The selector A/B: one recorded workload replayed with the
+        // N:M candidate enabled vs disabled. Both runs must be
+        // individually byte-reproducible, and the difference must
+        // surface in the deterministic counters (`auto_nm`) so `repro
+        // trace diff` reports exactly what the candidate changed.
+        let mut events = Vec::new();
+        for i in 0..4u64 {
+            events.push(TraceEvent::Job { at_ns: i * 1000, spec: nm_spec(Mode::Auto, 64, i % 2) });
+        }
+        let trace = Trace::new(events);
+        let run = |nm: bool| {
+            let cfg = Config { nm, ..Config::default() };
+            ReplaySession::new(&cfg, IpuSpec::default(), CostModel::default(), 1)
+                .replay(&trace)
+                .expect("replay")
+        };
+        let (on, on2, off) = (run(true), run(true), run(false));
+        assert_eq!(on.to_json(), on2.to_json(), "nm-enabled replay must be bit-reproducible");
+        let counter = |r: &ReplayReport, key: &str| {
+            r.counters.iter().find(|(k, _)| k == key).expect("counter present").1
+        };
+        assert_eq!(counter(&on, "auto_nm"), 4, "every auto job resolves N:M when enabled");
+        assert_eq!(counter(&off, "auto_nm"), 0);
+        assert!(on.jobs.iter().all(|j| j.mode == Mode::Nm), "{:?}", on.jobs);
+        assert!(off.jobs.iter().all(|j| j.mode != Mode::Nm), "{:?}", off.jobs);
+        assert!(!on.diff(&off).is_empty(), "the A/B must be visible in the report diff");
     }
 
     #[test]

@@ -11,9 +11,15 @@ pub enum Mode {
     Static,
     /// `popsparse::dynamic::sparseDenseMatMul`.
     Dynamic,
+    /// Structured N:M sparsity fast path: element-granular patterns
+    /// (`b == 1`) whose density maps onto a supported N:M structure
+    /// (see [`crate::kernels::nm_for_density`]) execute through the
+    /// packed [`crate::kernels::PreparedNm`] operand and its dense-like
+    /// gather microkernel instead of the unstructured BSR path.
+    Nm,
     /// Let the engine pick: auto jobs batch under a provisional key
     /// and the worker resolves the whole batch to the cheapest of the
-    /// three concrete modes *at batch-formation time*, at the batch's
+    /// concrete modes *at batch-formation time*, at the batch's
     /// combined `n` (calibration-corrected argmin; see
     /// [`crate::coordinator::PlanCache::resolve_batch`]). The resolved
     /// mode is reported back in [`JobResult::spec`], alongside the
@@ -28,6 +34,7 @@ impl std::fmt::Display for Mode {
             Mode::Dense => write!(f, "dense"),
             Mode::Static => write!(f, "static"),
             Mode::Dynamic => write!(f, "dynamic"),
+            Mode::Nm => write!(f, "nm"),
             Mode::Auto => write!(f, "auto"),
         }
     }
@@ -43,9 +50,10 @@ impl std::str::FromStr for Mode {
             "dense" => Ok(Mode::Dense),
             "static" => Ok(Mode::Static),
             "dynamic" => Ok(Mode::Dynamic),
+            "nm" => Ok(Mode::Nm),
             "auto" => Ok(Mode::Auto),
             other => Err(crate::Error::Runtime(format!(
-                "unknown mode {other:?} (expected dense|static|dynamic|auto)"
+                "unknown mode {other:?} (expected dense|static|dynamic|nm|auto)"
             ))),
         }
     }
@@ -134,6 +142,9 @@ impl JobSpec {
     /// pattern hold *different* operands (half-width value storage,
     /// quantized once), so the dtype is part of the key — without it,
     /// mixed-precision traffic would re-convert on every dtype flip.
+    /// N:M jobs realize a *different packed layout* from the BSR path
+    /// at the same geometry, so the storage format is a key field too
+    /// ([`OperandFormat`]).
     pub fn prepared_key(&self) -> PreparedKey {
         PreparedKey {
             m: self.m,
@@ -142,6 +153,11 @@ impl JobSpec {
             density_millionths: self.density_millionths(),
             dtype: self.dtype,
             pattern_seed: self.pattern_seed,
+            format: if self.mode == Mode::Nm {
+                OperandFormat::Nm
+            } else {
+                OperandFormat::Bsr
+            },
         }
     }
 
@@ -220,9 +236,18 @@ impl PatternKey {
     }
 }
 
+/// Which packed storage layout a prepared operand realizes: the
+/// CSR-style block layout ([`crate::kernels::PreparedBsr`]) or the
+/// structured N:M nibble-index layout ([`crate::kernels::PreparedNm`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OperandFormat {
+    Bsr,
+    Nm,
+}
+
 /// Prepared-operand cache key (see [`JobSpec::prepared_key`]): one
-/// realized pattern in one storage dtype, any batch shape or sparse
-/// mode.
+/// realized pattern in one storage dtype and packed format, any batch
+/// shape or sparse mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PreparedKey {
     pub m: usize,
@@ -231,6 +256,7 @@ pub struct PreparedKey {
     pub density_millionths: u64,
     pub dtype: DType,
     pub pattern_seed: u64,
+    pub format: OperandFormat,
 }
 
 /// Memoization key for auto-mode decisions (see [`JobSpec::selector_key`]).
@@ -338,11 +364,18 @@ mod tests {
         a.dtype = b.dtype;
         a.pattern_seed = 6;
         assert_ne!(a.prepared_key(), b.prepared_key(), "the realized pattern matters");
+        a.pattern_seed = b.pattern_seed;
+        a.mode = Mode::Nm;
+        assert_ne!(
+            a.prepared_key(),
+            b.prepared_key(),
+            "the packed format splits the operand: BSR and N:M hold different layouts"
+        );
     }
 
     #[test]
     fn mode_parse_is_display_inverse() {
-        for mode in [Mode::Dense, Mode::Static, Mode::Dynamic, Mode::Auto] {
+        for mode in [Mode::Dense, Mode::Static, Mode::Dynamic, Mode::Nm, Mode::Auto] {
             assert_eq!(mode.to_string().parse::<Mode>().unwrap(), mode);
         }
         assert!("Dense".parse::<Mode>().is_err(), "spelling is exact, not case-folded");

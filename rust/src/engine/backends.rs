@@ -1,4 +1,4 @@
-//! The [`Backend`] trait and its four implementations.
+//! The [`Backend`] trait and its five implementations.
 //!
 //! Each backend turns a [`JobSpec`] into (a) a [`PlanEstimate`] — the
 //! cycles the cost model predicts for the job — and (b) a full
@@ -7,16 +7,20 @@
 //! additionally encodes the runtime pattern into buckets, so its
 //! estimate (balanced-pattern expectation) and its executed cycles can
 //! differ — exactly the gap [`crate::coordinator::Metrics`] tracks for
-//! auto-mode jobs. The GPU backend is the paper's analytical A100
-//! baseline, reported in IPU-clock-equivalent cycles so every backend
-//! is comparable on one axis.
+//! auto-mode jobs. The N:M backend serves element-granular jobs whose
+//! density maps onto a supported structured N:M pattern (2:4, 4:8, …)
+//! through the packed-operand fast path. The GPU backend is the
+//! paper's analytical A100 baseline, reported in IPU-clock-equivalent
+//! cycles so every backend is comparable on one axis.
 
 use std::time::{Duration, Instant};
 
 use crate::coordinator::request::{JobResult, JobSpec, Mode};
 use crate::error::{Error, Result};
 use crate::gpu::{self, A100Spec};
-use crate::kernels::{self, Element, PreparedBsr, PreparedOperand, Scratch, TypedScratch, F16};
+use crate::kernels::{
+    self, Element, PreparedBsr, PreparedNm, PreparedOperand, Scratch, TypedScratch, F16,
+};
 use crate::sim::chip::{CostModel, IpuSpec};
 use crate::sparse::patterns;
 use crate::DType;
@@ -28,6 +32,7 @@ pub enum BackendKind {
     Dense,
     Static,
     Dynamic,
+    Nm,
     Gpu,
 }
 
@@ -40,6 +45,7 @@ impl BackendKind {
             BackendKind::Dense => Some(Mode::Dense),
             BackendKind::Static => Some(Mode::Static),
             BackendKind::Dynamic => Some(Mode::Dynamic),
+            BackendKind::Nm => Some(Mode::Nm),
             BackendKind::Gpu => None,
         }
     }
@@ -51,6 +57,7 @@ impl BackendKind {
             Mode::Dense => Some(BackendKind::Dense),
             Mode::Static => Some(BackendKind::Static),
             Mode::Dynamic => Some(BackendKind::Dynamic),
+            Mode::Nm => Some(BackendKind::Nm),
             Mode::Auto => None,
         }
     }
@@ -62,6 +69,7 @@ impl std::fmt::Display for BackendKind {
             BackendKind::Dense => write!(f, "dense"),
             BackendKind::Static => write!(f, "static"),
             BackendKind::Dynamic => write!(f, "dynamic"),
+            BackendKind::Nm => write!(f, "nm"),
             BackendKind::Gpu => write!(f, "gpu"),
         }
     }
@@ -218,6 +226,79 @@ impl Backend for DynamicBackend {
     }
 }
 
+/// Structured N:M sparsity fast path: element-granular patterns whose
+/// density maps exactly onto a supported N:M structure (2:4, 4:8, …)
+/// execute through the packed [`PreparedNm`] operand and its dense-like
+/// gather microkernel. The cycle model scales the dense plan at the
+/// same geometry by the N/M keep ratio, times a fixed gather/decode
+/// overhead: the kernel streams the activation like the dense `ikj`
+/// loop but touches only N of every M weight columns, paying an
+/// indexed-gather tax the dense kernel does not.
+pub struct NmBackend;
+
+/// Cycle-model overhead of the N:M gather relative to an ideal
+/// N/M-scaled dense pass (nibble decode + strided sliver gather).
+const NM_GATHER_OVERHEAD: f64 = 1.3;
+
+impl NmBackend {
+    /// The N:M structure this job maps onto, or why it cannot: the
+    /// fast path requires element-granular patterns (`b == 1`), a
+    /// density expressible as a supported N/M, and `k` divisible by
+    /// the group width.
+    pub fn structure(job: &JobSpec) -> Result<(usize, usize)> {
+        if job.b != 1 {
+            return Err(Error::Plan(format!(
+                "N:M path requires element-granular patterns (b=1), got b={}",
+                job.b
+            )));
+        }
+        let (nm_n, nm_m) = kernels::nm_for_density(job.density).ok_or_else(|| {
+            Error::Plan(format!(
+                "density {} maps onto no supported N:M structure",
+                job.density
+            ))
+        })?;
+        if job.k % nm_m != 0 {
+            return Err(Error::Plan(format!(
+                "k={} is not divisible by the N:M group width {nm_m}",
+                job.k
+            )));
+        }
+        Ok((nm_n, nm_m))
+    }
+}
+
+/// The N:M cycle model: the dense plan at the same geometry scaled by
+/// the N/M keep ratio times the gather overhead. Shared by
+/// [`NmBackend::plan`] and the plan cache's N:M build arm
+/// ([`crate::coordinator::PlanCache`]) so the two cannot drift.
+pub fn nm_plan_cycles(job: &JobSpec, spec: &IpuSpec, cm: &CostModel) -> Result<u64> {
+    let (nm_n, nm_m) = NmBackend::structure(job)?;
+    let dense = crate::dense_::plan(job.m, job.k, job.n, job.dtype, spec, cm)?;
+    let keep = nm_n as f64 / nm_m as f64;
+    Ok(((dense.cost.total() as f64 * keep * NM_GATHER_OVERHEAD).ceil() as u64).max(1))
+}
+
+impl Backend for NmBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Nm
+    }
+
+    fn plan(&self, job: &JobSpec, env: &EngineEnv) -> Result<PlanEstimate> {
+        let cycles = nm_plan_cycles(job, &env.spec, &env.cm)?;
+        Ok(PlanEstimate {
+            kind: BackendKind::Nm,
+            cycles,
+            tflops: crate::tflops(
+                crate::spmm_flops(job.m, job.k, job.n, job.density),
+                cycles,
+                env.spec.clock_hz,
+            ),
+            propagation_steps: 0,
+        })
+    }
+}
+
 /// Analytical A100 baseline: cuBLAS for dense work, cuSPARSE CSR for
 /// unstructured patterns, cuSPARSE BSR (FP32-only, as the real API)
 /// for block patterns. Reported in IPU-clock-equivalent cycles.
@@ -325,6 +406,22 @@ pub fn execute_kernel(
             )));
         }
     }
+    if job.mode == Mode::Nm {
+        return match job.dtype {
+            DType::Fp32 => execute_nm_typed::<f32>(
+                job,
+                prepared.and_then(PreparedOperand::as_nm_f32).map(|p| p.as_ref()),
+                scratch.fp32(),
+                threads,
+            ),
+            DType::Fp16 => execute_nm_typed::<F16>(
+                job,
+                prepared.and_then(PreparedOperand::as_nm_f16).map(|p| p.as_ref()),
+                scratch.fp16(),
+                threads,
+            ),
+        };
+    }
     match job.dtype {
         DType::Fp32 => execute_typed::<f32>(
             job,
@@ -339,6 +436,31 @@ pub fn execute_kernel(
             threads,
         ),
     }
+}
+
+/// The monomorphized N:M execution behind [`execute_kernel`]: the
+/// packed operand (cached handle or converted from the job's pattern
+/// seed) through [`kernels::spmm_nm_auto`] on the job's scratch half.
+fn execute_nm_typed<E: Element>(
+    job: &JobSpec,
+    prepared: Option<&PreparedNm<E>>,
+    scratch: &mut TypedScratch<E>,
+    threads: usize,
+) -> Result<KernelRun> {
+    let (nm_n, nm_m) = NmBackend::structure(job)?;
+    let converted;
+    let prep = match prepared {
+        Some(p) => p,
+        None => {
+            converted =
+                PreparedNm::<E>::from_pattern(job.m, job.k, nm_n, nm_m, job.pattern_seed)?;
+            &converted
+        }
+    };
+    let (x, y) = scratch.spmm_operands(job.m, job.k, job.n);
+    let t0 = Instant::now();
+    kernels::spmm_nm_auto(prep, x, job.n, y, threads)?;
+    Ok(KernelRun { wall: t0.elapsed(), flops: job.flops() })
 }
 
 /// The monomorphized execution behind [`execute_kernel`]: one storage
@@ -376,6 +498,9 @@ fn execute_typed<E: Element>(
             kernels::spmm_auto(prep, x, job.n, y, threads)?;
             Ok(KernelRun { wall: t0.elapsed(), flops: job.flops() })
         }
+        Mode::Nm => Err(Error::Coordinator(
+            "nm jobs dispatch through the dedicated N:M arm of execute_kernel".into(),
+        )),
         Mode::Auto => Err(Error::Coordinator(
             "auto-mode jobs must be resolved to a concrete mode before numeric execution".into(),
         )),
@@ -383,9 +508,13 @@ fn execute_typed<E: Element>(
 }
 
 /// The device-executable backends, in the order the selector evaluates
-/// them (the GPU baseline is analytical only and excluded).
-pub fn device_backends() -> [&'static dyn Backend; 3] {
-    [&DenseBackend, &StaticBackend, &DynamicBackend]
+/// them (the GPU baseline is analytical only and excluded). The N:M
+/// backend is appended *last* so the corrected-argmin's first-minimum
+/// tie-break keeps every legacy decision unchanged; it rejects any job
+/// its feasibility gate does not cover ([`NmBackend::structure`]) and
+/// is simply skipped there.
+pub fn device_backends() -> [&'static dyn Backend; 4] {
+    [&DenseBackend, &StaticBackend, &DynamicBackend, &NmBackend]
 }
 
 /// Look up a backend by kind.
@@ -394,6 +523,7 @@ pub fn backend_for(kind: BackendKind) -> &'static dyn Backend {
         BackendKind::Dense => &DenseBackend,
         BackendKind::Static => &StaticBackend,
         BackendKind::Dynamic => &DynamicBackend,
+        BackendKind::Nm => &NmBackend,
         BackendKind::Gpu => &GpuBackend,
     }
 }
@@ -420,6 +550,13 @@ mod tests {
         let env = EngineEnv::default();
         let j = job(1.0 / 16.0, 16);
         for backend in device_backends() {
+            if backend.kind() == BackendKind::Nm {
+                // The paper point is block-granular: outside the N:M
+                // feasibility gate, so the candidate bows out with an
+                // error rather than a bogus estimate.
+                assert!(backend.plan(&j, &env).is_err());
+                continue;
+            }
             let e = backend.plan(&j, &env).unwrap();
             assert!(e.cycles > 0, "{:?}: zero cycles", e.kind);
             assert!(e.tflops > 0.0);
@@ -427,6 +564,58 @@ mod tests {
         }
         let g = GpuBackend.plan(&j, &env).unwrap();
         assert!(g.cycles > 0 && g.tflops > 0.0);
+    }
+
+    #[test]
+    fn nm_backend_gates_feasibility_and_undercuts_dense() {
+        let env = EngineEnv::default();
+        // 2:4-expressible job: element-granular, density 1/2.
+        let mut j = job(0.5, 1);
+        let e = NmBackend.plan(&j, &env).unwrap();
+        assert_eq!(e.kind, BackendKind::Nm);
+        assert!(e.cycles > 0 && e.tflops > 0.0);
+        let d = DenseBackend.plan(&j, &env).unwrap();
+        assert!(
+            e.cycles < d.cycles,
+            "N:M keep-ratio scaling must undercut dense at the same geometry: {} vs {}",
+            e.cycles,
+            d.cycles
+        );
+        // Execution is its plan (like static).
+        let r = NmBackend.execute(&j, &env).unwrap();
+        assert_eq!(Some(r.cycles), r.estimated_cycles);
+        // Gate: block-granular, unmappable density, indivisible k.
+        assert!(NmBackend.plan(&job(0.5, 16), &env).is_err());
+        assert!(NmBackend.plan(&job(1.0 / 3.0, 1), &env).is_err());
+        j.k = 1026; // not divisible by 4
+        assert!(NmBackend.plan(&j, &env).is_err());
+    }
+
+    #[test]
+    fn nm_kernel_execution_matches_numeric_oracle() {
+        let mut j = job(0.5, 1);
+        j.mode = Mode::Nm;
+        j.dtype = DType::Fp32;
+        j.m = 64;
+        j.k = 64;
+        j.n = 33; // exercises the n-tile remainder
+        let mut scratch = Scratch::default();
+        let x = scratch.spmm_operands(j.m, j.k, j.n).0.to_vec();
+        let run = execute_kernel(&j, None, &mut scratch, 2).unwrap();
+        assert!(run.flops > 0.0);
+        let prep =
+            PreparedNm::<f32>::from_pattern(j.m, j.k, 2, 4, j.pattern_seed).unwrap();
+        let a = prep.to_dense();
+        let expect = crate::runtime::dense_ref(&a, &x, j.m, j.k, j.n);
+        for (i, (&u, &v)) in scratch.output().iter().zip(&expect).enumerate() {
+            assert!(kernels::close_enough(u, v), "nm: element {i}: {u} vs {v}");
+        }
+        // A cached prepared handle must agree with the fresh path.
+        let cached = PreparedOperand::from_nm_pattern(j.m, j.k, 2, 4, j.pattern_seed, j.dtype)
+            .unwrap();
+        let y_fresh = scratch.output().to_vec();
+        execute_kernel(&j, Some(&cached), &mut scratch, 2).unwrap();
+        assert_eq!(scratch.output(), &y_fresh[..], "cached and fresh operands agree");
     }
 
     #[test]
@@ -597,8 +786,14 @@ mod tests {
         assert_eq!(BackendKind::Dense.as_mode(), Some(Mode::Dense));
         assert_eq!(BackendKind::Static.as_mode(), Some(Mode::Static));
         assert_eq!(BackendKind::Dynamic.as_mode(), Some(Mode::Dynamic));
+        assert_eq!(BackendKind::Nm.as_mode(), Some(Mode::Nm));
         assert_eq!(BackendKind::Gpu.as_mode(), None);
-        for kind in [BackendKind::Dense, BackendKind::Static, BackendKind::Dynamic] {
+        for kind in [
+            BackendKind::Dense,
+            BackendKind::Static,
+            BackendKind::Dynamic,
+            BackendKind::Nm,
+        ] {
             assert_eq!(BackendKind::of_mode(kind.as_mode().unwrap()), Some(kind));
         }
         assert_eq!(BackendKind::of_mode(Mode::Auto), None);

@@ -209,7 +209,7 @@ impl Calibration {
     /// estimates by construction — never churn the memo.
     pub fn geometry_stamp(&self, job: &JobSpec) -> u64 {
         let factors = locked(&self.factors);
-        [BackendKind::Dense, BackendKind::Static, BackendKind::Dynamic]
+        [BackendKind::Dense, BackendKind::Static, BackendKind::Dynamic, BackendKind::Nm]
             .iter()
             .map(|&kind| {
                 factors.peek(&BucketKey::of(kind, job)).map(|e| e.informative).unwrap_or(0)
@@ -337,9 +337,12 @@ pub const WALL_WARMUP_OBSERVATIONS: u64 = 8;
 /// bandwidth or its flops at peak FLOP rate, so a wall below that
 /// floor is a measurement bug (timer glitch, wrong geometry attached
 /// to the sample) or a traffic-model bug — counted in
-/// [`WallFeedback::roofline_violations`] as a sanity signal, never a
-/// gate, and the sample still feeds calibration (the EWMA absorbs
-/// outliers; the counter makes them visible instead of silent).
+/// [`WallFeedback::roofline_violations`] as a sanity signal. The
+/// sample still feeds calibration, but *floored to the physical
+/// minimum*: letting a physically-impossible wall through unclamped
+/// would teach the backend a factor far below reality and could flip
+/// an argmin toward a backend on the strength of a timer glitch
+/// (`clamped_absurd_walls_cannot_flip_the_argmin` pins this).
 #[derive(Debug)]
 pub struct WallFeedback {
     calibration: Calibration,
@@ -453,13 +456,18 @@ impl WallFeedback {
         estimated: u64,
         wall: std::time::Duration,
     ) -> bool {
-        let wall_ns = wall.as_secs_f64() * 1e9;
+        let mut wall_ns = wall.as_secs_f64() * 1e9;
         if estimated == 0 || wall_ns <= 0.0 {
             return false;
         }
         if let Some(floor) = self.roofline_floor_ns(kind, job) {
             if wall_ns < floor {
                 self.roofline_violations.fetch_add(1, Ordering::Relaxed);
+                // Floor the sample to the physical minimum: the
+                // violation is counted for diagnostics, but the EWMA
+                // must not learn from a wall the machine cannot
+                // produce.
+                wall_ns = floor;
             }
         }
         let ratio = wall_ns / estimated as f64;
@@ -514,7 +522,7 @@ impl WallFeedback {
     /// block count is estimated as `density * mb * kb` — the same
     /// expectation the pattern generators target.
     pub fn roofline_floor_ns(&self, kind: BackendKind, job: &JobSpec) -> Option<f64> {
-        use crate::kernels::roofline::{dense_traffic, spmm_traffic};
+        use crate::kernels::roofline::{dense_traffic, nm_traffic, spmm_traffic};
         let gflops = f64::from_bits(self.roofline_gflops_bits.load(Ordering::SeqCst));
         let gbps = f64::from_bits(self.roofline_gbps_bits.load(Ordering::SeqCst));
         if gflops <= 0.0 || gbps <= 0.0 || job.b == 0 {
@@ -526,6 +534,13 @@ impl WallFeedback {
                 let blocks = (job.m / job.b) * (job.k / job.b);
                 let nnzb = (job.density * blocks as f64).round() as usize;
                 spmm_traffic(job.m, job.k, job.n, job.b, nnzb, job.dtype)
+            }
+            BackendKind::Nm => {
+                let (nm_n, nm_m) = crate::kernels::nm_for_density(job.density)?;
+                if job.k % nm_m != 0 {
+                    return None;
+                }
+                nm_traffic(job.m, job.k, job.n, nm_n, nm_m, job.dtype)
             }
             BackendKind::Gpu => return None,
         };
@@ -712,6 +727,51 @@ mod tests {
         fb.observe_wall(BackendKind::Static, &j, 1000, slow);
         assert_eq!(fb.roofline_violations(), 1);
         assert_eq!(fb.scale_samples(), 2);
+    }
+
+    #[test]
+    fn clamped_absurd_walls_cannot_flip_the_argmin() {
+        use std::time::Duration;
+        // The flooring property: a physically-impossible wall (below
+        // the armed roofline floor) is counted as a violation AND fed
+        // at the floored value, so a glitched timer cannot teach a
+        // backend a factor the machine cannot produce and hand it the
+        // argmin.
+        let wf = WallFeedback::default();
+        let j = job(256, 64, 1.0 / 16.0);
+        wf.arm_roofline(&crate::kernels::MachineRoofline {
+            peak_gflops: 100.0,
+            peak_gbps: 50.0,
+            tier: "test",
+        });
+        let floor = wf.roofline_floor_ns(BackendKind::Dynamic, &j).unwrap();
+        // Honest host at ~1 ns per estimated cycle, both contenders
+        // running right at the physical floor through warm-up.
+        let est_cycles = floor.round() as u64;
+        let honest = Duration::from_secs_f64(floor * 1.02 / 1e9);
+        for _ in 0..=WALL_WARMUP_OBSERVATIONS {
+            wf.observe_wall(BackendKind::Static, &j, est_cycles, honest);
+            wf.observe_wall(BackendKind::Dynamic, &j, est_cycles, honest);
+        }
+        assert_eq!(wf.roofline_violations(), 0, "honest walls sit above the floor");
+        let est = |kind, cycles| PlanEstimate { kind, cycles, tflops: 1.0, propagation_steps: 0 };
+        let estimates = vec![est(BackendKind::Static, 1000), est(BackendKind::Dynamic, 1010)];
+        let (win, _) = corrected_argmin(&estimates, Some(wf.calibration()), &j).unwrap();
+        assert_eq!(win.kind, BackendKind::Static, "premise: static wins before the glitch");
+        // A burst of absurd sub-floor walls for dynamic: every one is
+        // counted...
+        for _ in 0..32 {
+            wf.observe_wall(BackendKind::Dynamic, &j, est_cycles, Duration::from_nanos(1));
+        }
+        assert_eq!(wf.roofline_violations(), 32);
+        // ...and every one is floored. Unclamped, the ~0.0002 ratio
+        // would drive dynamic's factor to the lower MAX_CORRECTION
+        // clamp (1/4) and flip the argmin on measurements the machine
+        // cannot make; floored, the stream reads ~identity.
+        let f_dyn = wf.calibration().factor(BackendKind::Dynamic, &j);
+        assert!((f_dyn - 1.0).abs() < 0.1, "floored stream stays ~identity, got {f_dyn}");
+        let (win, _) = corrected_argmin(&estimates, Some(wf.calibration()), &j).unwrap();
+        assert_eq!(win.kind, BackendKind::Static, "absurd walls must not flip the argmin");
     }
 
     #[test]

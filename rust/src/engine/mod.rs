@@ -1,4 +1,4 @@
-//! Auto-mode execution engine: one interface over the four execution
+//! Auto-mode execution engine: one interface over the five execution
 //! paths, plus the selector that exploits the paper's crossovers.
 //!
 //! The paper's headline result is a *crossover structure* (Fig. 4,
@@ -8,8 +8,8 @@
 //! that forces callers to hard-code a [`Mode`] per request cannot
 //! exploit any of that. This module provides:
 //!
-//! * [`Backend`] — a trait unifying the dense, static, dynamic and
-//!   (analytical) GPU execution paths behind a single
+//! * [`Backend`] — a trait unifying the dense, static, dynamic,
+//!   structured-N:M and (analytical) GPU execution paths behind a single
 //!   `plan(&JobSpec) -> PlanEstimate` / `execute(&JobSpec) -> JobResult`
 //!   interface.
 //! * [`ModeSelector`] — chooses the cheapest *device-executable*
@@ -52,8 +52,9 @@ pub mod churn;
 pub mod selector;
 
 pub use backends::{
-    backend_for, device_backends, execute_kernel, Backend, BackendKind, DenseBackend,
-    DynamicBackend, EngineEnv, GpuBackend, KernelRun, PlanEstimate, StaticBackend,
+    backend_for, device_backends, execute_kernel, nm_plan_cycles, Backend, BackendKind,
+    DenseBackend, DynamicBackend, EngineEnv, GpuBackend, KernelRun, NmBackend, PlanEstimate,
+    StaticBackend,
 };
 pub use calibration::{
     Calibration, WallFeedback, WallScale, INFORMATIVE_DELTA, MAX_CORRECTION,

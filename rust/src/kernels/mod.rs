@@ -24,6 +24,11 @@
 //!   row-panel parallelism over disjoint output slices.
 //! * [`dense::matmul`] — the `ikj`-tiled dense kernel with a reusable
 //!   caller-owned output buffer.
+//! * [`nm`] — the structured N:M sparse format ([`PreparedNm`]:
+//!   packed values + per-group column-index nibbles) and its SpMM
+//!   microkernel family (2:4 / 4:8 monomorphized, generic fallback),
+//!   same accumulation contract and panel parallelism (DESIGN.md
+//!   §5.2).
 //! * [`simd`] — arch-gated explicit SIMD tiers (AVX2 / AVX2+F16C on
 //!   x86-64, runtime-detected) behind the same entry points, pinned
 //!   **bit-identical** to the scalar fallback per dtype; the scalar
@@ -48,6 +53,7 @@
 
 pub mod dense;
 pub mod element;
+pub mod nm;
 pub mod parallel;
 pub mod prepared;
 pub mod roofline;
@@ -55,8 +61,10 @@ pub mod simd;
 pub mod spmm;
 
 pub use element::{dequantize, quantize, Element, F16};
+pub use nm::{nm_for_density, spmm_nm, spmm_nm_auto, spmm_nm_parallel, spmm_nm_scalar, PreparedNm};
 pub use parallel::{
-    default_threads, partition_panels, spmm_auto, spmm_parallel, MIN_FLOPS_PER_THREAD,
+    default_threads, min_flops_per_thread, parallel_engages, partition_panels, spmm_auto,
+    spmm_parallel, MIN_FLOPS_PER_THREAD,
 };
 pub use prepared::{PreparedBsr, PreparedOperand};
 pub use roofline::MachineRoofline;

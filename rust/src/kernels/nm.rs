@@ -1,0 +1,730 @@
+//! Structured N:M sparse format and its SpMM microkernel family
+//! (DESIGN.md §5.2).
+//!
+//! Block sparsity (the paper's axis) buys wall-clock wins by making
+//! the nonzero *structure* cheap to exploit; N:M structure is the
+//! other hardware-friendly family — every group of `M` consecutive
+//! columns in a row holds exactly `N` nonzeros (NVIDIA's 2:4 is the
+//! reference point, PAPERS.md: dense-beating at only 50% sparsity).
+//! [`PreparedNm`] is the packed layout the kernels consume:
+//!
+//! * **values** — the `N` kept weights per `(row, group)`, row-major
+//!   by `(row, group, slot)`, quantized once into the storage element
+//!   (identity for f32); `m * (k / M) * N` entries, no zero padding.
+//! * **idx** — the intra-group column of each kept weight as a 4-bit
+//!   nibble (so `M <= 16`), two slots per byte, low nibble first:
+//!   `ceil(N / 2)` bytes per group. 2:4 costs 1 byte/group, 4:8 costs
+//!   2 — the metadata is ~6% of the f16 value bytes, versus the u32
+//!   coordinates BSR pays per block.
+//!
+//! The kernel family mirrors [`crate::kernels::spmm`]'s structure:
+//! a dense-like `ikj` loop over `(row, group)` with the group's
+//! `M`-wide operand sliver gathered (widened) once and indexed by
+//! nibble, [`N_TILE`] f32 register accumulator panels, f32
+//! accumulation for both dtypes, and the `n % N_TILE` remainder routed
+//! through the shared scalar tile body [`nm_tile`]. `(2, 4)` and
+//! `(4, 8)` are monomorphized via const generics; other shapes take a
+//! structurally identical runtime-generic path. Accumulation order is
+//! `(group ascending, slot ascending)` per output element on **every**
+//! path — scalar monomorphized, scalar generic, and the AVX2/F16C
+//! tier in [`crate::kernels::simd`] — so all paths are bit-identical
+//! and the scalar loops stay numerics-defining (PR 8's three-rule
+//! contract: lanes span only the batch axis, separate mul + add, no
+//! FMA, value-exact f16 conversions).
+//!
+//! Parallelism reuses the nnz-balanced row-panel machinery of
+//! [`crate::kernels::parallel`] (N:M rows are structurally uniform,
+//! so the balanced partition degenerates to an equal-row split, but
+//! the mechanism — contiguous panels over disjoint `split_at_mut`
+//! output slices, parallel == serial bit-exact — is shared).
+
+use crate::error::{Error, Result};
+use crate::kernels::element::Element;
+use crate::kernels::parallel::{parallel_engages, partition_rows_balanced};
+use crate::kernels::spmm::N_TILE;
+use crate::util::Rng;
+
+/// A structured N:M sparse matrix in packed kernel-ready layout,
+/// stored in element type `E`.
+///
+/// Invariants (established by every constructor): `1 <= nm_n <= nm_m
+/// <= 16`, `k % nm_m == 0`, `values.len() == m * (k / nm_m) * nm_n`,
+/// `idx.len() == m * (k / nm_m) * ceil(nm_n / 2)`, and every nibble is
+/// `< nm_m`. Within a group, slots are stored in ascending intra-group
+/// column order.
+///
+/// # Examples
+///
+/// ```
+/// use popsparse::kernels::{spmm_nm, PreparedNm};
+///
+/// // One row, k = 4, 2:4 — keep columns 1 and 3 with weights 2 and 3.
+/// let p: PreparedNm = PreparedNm::new(1, 4, 2, 4, vec![2.0, 3.0], vec![0x31]).unwrap();
+/// let x = vec![1.0f32, 10.0, 100.0, 1000.0];
+/// let mut y = vec![f32::NAN; 1];
+/// spmm_nm(&p, &x, 1, &mut y).unwrap();
+/// assert_eq!(y[0], 2.0 * 10.0 + 3.0 * 1000.0);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct PreparedNm<E: Element = f32> {
+    /// Element-level rows.
+    pub m: usize,
+    /// Element-level cols.
+    pub k: usize,
+    /// N of N:M — kept weights per group.
+    pub nm_n: usize,
+    /// M of N:M — group width along `k`.
+    pub nm_m: usize,
+    /// Kept weights, row-major by `(row, group, slot)` (quantized once
+    /// at conversion for narrow `E`).
+    pub values: Vec<E>,
+    /// Intra-group column nibbles, two slots per byte (low nibble =
+    /// even slot), `ceil(nm_n / 2)` bytes per group.
+    pub idx: Vec<u8>,
+}
+
+/// Validate an `(nm_n, nm_m)` structure against a `k` extent.
+fn check_structure(k: usize, nm_n: usize, nm_m: usize) -> Result<()> {
+    if nm_n == 0 || nm_n > nm_m || nm_m > 16 || nm_m < 2 {
+        return Err(Error::InvalidFormat(format!(
+            "unsupported N:M structure {nm_n}:{nm_m} (need 1 <= N <= M <= 16, M >= 2)"
+        )));
+    }
+    if k % nm_m != 0 {
+        return Err(Error::InvalidFormat(format!(
+            "k = {k} is not a multiple of the N:M group width {nm_m}"
+        )));
+    }
+    Ok(())
+}
+
+impl<E: Element> PreparedNm<E> {
+    /// Build from pre-packed buffers, validating every invariant
+    /// (lengths and nibble ranges).
+    pub fn new(
+        m: usize,
+        k: usize,
+        nm_n: usize,
+        nm_m: usize,
+        values: Vec<E>,
+        idx: Vec<u8>,
+    ) -> Result<Self> {
+        check_structure(k, nm_n, nm_m)?;
+        let groups = k / nm_m;
+        let gb = nm_n.div_ceil(2);
+        if values.len() != m * groups * nm_n {
+            return Err(Error::InvalidFormat(format!(
+                "N:M values has {} entries, layout needs {}",
+                values.len(),
+                m * groups * nm_n
+            )));
+        }
+        if idx.len() != m * groups * gb {
+            return Err(Error::InvalidFormat(format!(
+                "N:M idx has {} bytes, layout needs {}",
+                idx.len(),
+                m * groups * gb
+            )));
+        }
+        let p = Self { m, k, nm_n, nm_m, values, idx };
+        for r in 0..m {
+            for g in 0..groups {
+                for s in 0..nm_n {
+                    let ci = p.idx_of(r, g, s);
+                    if ci >= nm_m {
+                        return Err(Error::InvalidFormat(format!(
+                            "N:M nibble {ci} at (row {r}, group {g}, slot {s}) \
+                             exceeds group width {nm_m}"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(p)
+    }
+
+    /// Pack a row-major `m x k` dense matrix: per group, keep the
+    /// `nm_n` largest-magnitude entries (ties keep the lower column),
+    /// stored in ascending intra-group column order. A matrix that
+    /// already satisfies the N:M structure round-trips exactly through
+    /// [`PreparedNm::to_dense`] (modulo the one-time quantization into
+    /// `E`).
+    pub fn from_dense(m: usize, k: usize, nm_n: usize, nm_m: usize, a: &[f32]) -> Result<Self> {
+        check_structure(k, nm_n, nm_m)?;
+        if a.len() != m * k {
+            return Err(Error::InvalidFormat(format!(
+                "dense input has {} elements, needs {m} x {k}",
+                a.len()
+            )));
+        }
+        let groups = k / nm_m;
+        let gb = nm_n.div_ceil(2);
+        let mut values = Vec::with_capacity(m * groups * nm_n);
+        let mut idx = vec![0u8; m * groups * gb];
+        for r in 0..m {
+            for g in 0..groups {
+                let sliver = &a[r * k + g * nm_m..r * k + (g + 1) * nm_m];
+                // Kept set: nm_n largest magnitudes, lower column wins
+                // ties. nm_m <= 16, so a selection scan is fine.
+                let mut order: Vec<usize> = (0..nm_m).collect();
+                order.sort_by(|&i, &j| {
+                    sliver[j]
+                        .abs()
+                        .partial_cmp(&sliver[i].abs())
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(i.cmp(&j))
+                });
+                let mut kept: Vec<usize> = order[..nm_n].to_vec();
+                kept.sort_unstable();
+                let ibase = (r * groups + g) * gb;
+                for (s, &ci) in kept.iter().enumerate() {
+                    values.push(E::from_f32(sliver[ci]));
+                    idx[ibase + s / 2] |= (ci as u8) << (4 * (s % 2));
+                }
+            }
+        }
+        Ok(Self { m, k, nm_n, nm_m, values, idx })
+    }
+
+    /// Realize a deterministic N:M operand from a seed: per group,
+    /// `nm_n` distinct intra-group columns chosen uniformly and
+    /// normally-distributed weights, both from one seeded stream (the
+    /// prepared-cache miss path for [`Mode::Nm`] jobs; the f32 value
+    /// stream is dtype-independent, so the F16 operand is exactly the
+    /// quantized view of the F32 one).
+    ///
+    /// [`Mode::Nm`]: crate::coordinator::request::Mode::Nm
+    pub fn from_pattern(m: usize, k: usize, nm_n: usize, nm_m: usize, seed: u64) -> Result<Self> {
+        check_structure(k, nm_n, nm_m)?;
+        let groups = k / nm_m;
+        let gb = nm_n.div_ceil(2);
+        let mut rng = Rng::seed_from_u64(seed ^ 0x4E4D_5350); // "NMSP"
+        let mut values = Vec::with_capacity(m * groups * nm_n);
+        let mut idx = vec![0u8; m * groups * gb];
+        let mut cols = [0usize; 16];
+        for r in 0..m {
+            for g in 0..groups {
+                for (c, slot) in cols[..nm_m].iter_mut().enumerate() {
+                    *slot = c;
+                }
+                // Partial Fisher-Yates: the first nm_n entries are a
+                // uniform distinct sample of 0..nm_m.
+                for s in 0..nm_n {
+                    let pick = s + (rng.next_u64() as usize) % (nm_m - s);
+                    cols.swap(s, pick);
+                }
+                let mut kept = [0usize; 16];
+                kept[..nm_n].copy_from_slice(&cols[..nm_n]);
+                kept[..nm_n].sort_unstable();
+                let ibase = (r * groups + g) * gb;
+                for (s, &ci) in kept[..nm_n].iter().enumerate() {
+                    values.push(E::from_f32(rng.normal() as f32));
+                    idx[ibase + s / 2] |= (ci as u8) << (4 * (s % 2));
+                }
+            }
+        }
+        Ok(Self { m, k, nm_n, nm_m, values, idx })
+    }
+
+    /// Number of column groups per row.
+    pub fn groups(&self) -> usize {
+        self.k / self.nm_m
+    }
+
+    /// Index bytes per group (`ceil(nm_n / 2)`).
+    pub fn group_bytes(&self) -> usize {
+        self.nm_n.div_ceil(2)
+    }
+
+    /// Stored (structural) nonzeros: `m * groups * nm_n`.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// The intra-group column of `(row, group, slot)`.
+    #[inline(always)]
+    pub fn idx_of(&self, r: usize, g: usize, s: usize) -> usize {
+        let byte = self.idx[(r * self.groups() + g) * self.group_bytes() + s / 2];
+        (if s % 2 == 0 { byte & 0x0F } else { byte >> 4 }) as usize
+    }
+
+    /// Approximate heap footprint in bytes (cache sizing aid).
+    pub fn bytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<E>() + self.idx.len()
+    }
+
+    /// Unpack to a row-major `m x k` dense matrix, widening values to
+    /// f32 (oracle comparisons; zeros everywhere the structure dropped).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let groups = self.groups();
+        let mut out = vec![0f32; self.m * self.k];
+        for r in 0..self.m {
+            for g in 0..groups {
+                let vbase = (r * groups + g) * self.nm_n;
+                for s in 0..self.nm_n {
+                    let ci = self.idx_of(r, g, s);
+                    out[r * self.k + g * self.nm_m + ci] = self.values[vbase + s].to_f32();
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Map a job density to the N:M structure that realizes it exactly,
+/// preferring the narrower group: `Some((n, m))` with `m` in {4, 8},
+/// `1 <= n < m` and `n / m == density`; `None` when no supported
+/// structure matches (the N:M backend's feasibility gate).
+///
+/// # Examples
+///
+/// ```
+/// use popsparse::kernels::nm_for_density;
+///
+/// assert_eq!(nm_for_density(0.5), Some((2, 4)));   // 2:4
+/// assert_eq!(nm_for_density(0.25), Some((1, 4))); // 1:4
+/// assert_eq!(nm_for_density(1.0 / 8.0), Some((1, 8)));
+/// assert_eq!(nm_for_density(1.0 / 16.0), None);   // below 1:8
+/// assert_eq!(nm_for_density(1.0), None);          // dense is dense
+/// ```
+pub fn nm_for_density(density: f64) -> Option<(usize, usize)> {
+    for m in [4usize, 8] {
+        let n = (density * m as f64).round();
+        if n >= 1.0 && n < m as f64 && (n / m as f64 - density).abs() < 1e-9 {
+            return Some((n as usize, m));
+        }
+    }
+    None
+}
+
+/// Validate SpMM operand shapes against the packed matrix.
+fn check_operands<E: Element>(p: &PreparedNm<E>, x: &[E], n: usize, y: &[E]) -> Result<()> {
+    if x.len() != p.k * n {
+        return Err(Error::InvalidFormat(format!(
+            "x has {} elements, N:M kernel needs {} x {n}",
+            x.len(),
+            p.k
+        )));
+    }
+    if y.len() != p.m * n {
+        return Err(Error::InvalidFormat(format!(
+            "y has {} elements, N:M kernel needs {} x {n}",
+            y.len(),
+            p.m
+        )));
+    }
+    Ok(())
+}
+
+/// Single-threaded N:M SpMM: `y = A x` with `A` packed, `x` row-major
+/// `k x n`, `y` row-major `m x n`, all in storage type `E` with f32
+/// accumulation. Overwrites all of `y`. Dispatches to the widest SIMD
+/// tier the machine supports; the result is bit-identical across
+/// tiers.
+pub fn spmm_nm<E: Element>(p: &PreparedNm<E>, x: &[E], n: usize, y: &mut [E]) -> Result<()> {
+    check_operands(p, x, n, y)?;
+    nm_rows(p, x, n, 0, p.m, y);
+    Ok(())
+}
+
+/// [`spmm_nm`] pinned to the scalar fallback path, bypassing SIMD
+/// dispatch — the numerics-defining reference the differential suite
+/// pins the tiers against.
+pub fn spmm_nm_scalar<E: Element>(
+    p: &PreparedNm<E>,
+    x: &[E],
+    n: usize,
+    y: &mut [E],
+) -> Result<()> {
+    check_operands(p, x, n, y)?;
+    nm_rows_scalar(p, x, n, 0, p.m, y);
+    Ok(())
+}
+
+/// Compute rows `[r0, r1)` into `y_panel` (the panel's own output
+/// slice of length `(r1 - r0) * n`): SIMD offer first, scalar
+/// dispatch otherwise. The unit of work a parallel panel executes.
+pub(crate) fn nm_rows<E: Element>(
+    p: &PreparedNm<E>,
+    x: &[E],
+    n: usize,
+    r0: usize,
+    r1: usize,
+    y_panel: &mut [E],
+) {
+    debug_assert_eq!(y_panel.len(), (r1 - r0) * n);
+    if crate::kernels::simd::try_spmm_nm_rows(p, x, n, r0, r1, y_panel) {
+        return;
+    }
+    nm_rows_scalar(p, x, n, r0, r1, y_panel);
+}
+
+/// The scalar tier of [`nm_rows`]: structure dispatch into the
+/// monomorphized microkernels (2:4, 4:8), runtime-generic fallback
+/// elsewhere.
+pub(crate) fn nm_rows_scalar<E: Element>(
+    p: &PreparedNm<E>,
+    x: &[E],
+    n: usize,
+    r0: usize,
+    r1: usize,
+    y_panel: &mut [E],
+) {
+    debug_assert_eq!(y_panel.len(), (r1 - r0) * n);
+    match (p.nm_n, p.nm_m) {
+        (2, 4) => nm_rows_c::<E, 2, 4>(p, x, n, r0, r1, y_panel),
+        (4, 8) => nm_rows_c::<E, 4, 8>(p, x, n, r0, r1, y_panel),
+        _ => nm_rows_generic(p, x, n, r0, r1, y_panel),
+    }
+}
+
+/// The monomorphized microkernel: `NM_N`/`NM_M` are compile-time, so
+/// the per-group gather buffer `[[f32; N_TILE]; NM_M]` is a fixed
+/// stack array and the slot loop has a constant trip count. The
+/// group's `M`-wide operand sliver is gathered (widened) once and
+/// indexed by nibble across the group's slots — the dense-like `ikj`
+/// structure, with the structure doing the column selection.
+fn nm_rows_c<E: Element, const NM_N: usize, const NM_M: usize>(
+    p: &PreparedNm<E>,
+    x: &[E],
+    n: usize,
+    r0: usize,
+    r1: usize,
+    y_panel: &mut [E],
+) {
+    debug_assert_eq!((p.nm_n, p.nm_m), (NM_N, NM_M));
+    let groups = p.k / NM_M;
+    let gb = NM_N.div_ceil(2);
+    for (ri, r) in (r0..r1).enumerate() {
+        let out = &mut y_panel[ri * n..(ri + 1) * n];
+        let mut j = 0;
+        while j + N_TILE <= n {
+            let mut acc = [0f32; N_TILE];
+            for g in 0..groups {
+                let mut xf = [[0f32; N_TILE]; NM_M];
+                for (c, xrow) in xf.iter_mut().enumerate() {
+                    let src = &x[(g * NM_M + c) * n + j..][..N_TILE];
+                    for (d, &s) in xrow.iter_mut().zip(src) {
+                        *d = s.to_f32();
+                    }
+                }
+                let vbase = (r * groups + g) * NM_N;
+                let ibase = (r * groups + g) * gb;
+                for s in 0..NM_N {
+                    let byte = p.idx[ibase + s / 2];
+                    let ci = (if s % 2 == 0 { byte & 0x0F } else { byte >> 4 }) as usize;
+                    let w = p.values[vbase + s].to_f32();
+                    for (a, &xv) in acc.iter_mut().zip(&xf[ci]) {
+                        *a += w * xv;
+                    }
+                }
+            }
+            for (o, &a) in out[j..j + N_TILE].iter_mut().zip(&acc) {
+                *o = E::from_f32(a);
+            }
+            j += N_TILE;
+        }
+        if j < n {
+            nm_tile(p, x, n, r, j, n - j, out);
+        }
+    }
+}
+
+/// Structurally identical fallback for structures without a
+/// monomorphized kernel: every tile runs the shared tile body.
+fn nm_rows_generic<E: Element>(
+    p: &PreparedNm<E>,
+    x: &[E],
+    n: usize,
+    r0: usize,
+    r1: usize,
+    y_panel: &mut [E],
+) {
+    for (ri, r) in (r0..r1).enumerate() {
+        let out = &mut y_panel[ri * n..(ri + 1) * n];
+        let mut j = 0;
+        while j < n {
+            let tile = N_TILE.min(n - j);
+            nm_tile(p, x, n, r, j, tile, out);
+            j += tile;
+        }
+    }
+}
+
+/// One `1 x tile` output tile of row `r` (`tile <= N_TILE` batch
+/// columns starting at `j`), accumulated over every `(group, slot)` in
+/// ascending order and stored into `out` (the row's own `n`-length
+/// slice). This single body serves the generic path's full tiles *and*
+/// every path's `n % N_TILE` remainder — including the SIMD tiers in
+/// [`crate::kernels::simd`] — so remainder handling is identical to
+/// the fallback by construction.
+pub(crate) fn nm_tile<E: Element>(
+    p: &PreparedNm<E>,
+    x: &[E],
+    n: usize,
+    r: usize,
+    j: usize,
+    tile: usize,
+    out: &mut [E],
+) {
+    let groups = p.groups();
+    let gb = p.group_bytes();
+    let mut acc = [0f32; N_TILE];
+    for g in 0..groups {
+        let vbase = (r * groups + g) * p.nm_n;
+        let ibase = (r * groups + g) * gb;
+        for s in 0..p.nm_n {
+            let byte = p.idx[ibase + s / 2];
+            let ci = (if s % 2 == 0 { byte & 0x0F } else { byte >> 4 }) as usize;
+            let w = p.values[vbase + s].to_f32();
+            let xrow = &x[(g * p.nm_m + ci) * n + j..][..tile];
+            let mut xf = [0f32; N_TILE];
+            for (d, &sv) in xf.iter_mut().zip(xrow) {
+                *d = sv.to_f32();
+            }
+            for (a, &xv) in acc[..tile].iter_mut().zip(&xf[..tile]) {
+                *a += w * xv;
+            }
+        }
+    }
+    for (o, &a) in out[j..j + tile].iter_mut().zip(&acc[..tile]) {
+        *o = E::from_f32(a);
+    }
+}
+
+/// Parallel N:M SpMM across nnz-balanced row panels on a scoped
+/// thread pool (the shared partition core of
+/// [`crate::kernels::parallel`]; N:M rows are uniform, so panels are
+/// equal row spans). Each panel owns a disjoint output slice and runs
+/// the same per-row kernel as the single-threaded path, so the result
+/// is bit-identical to [`spmm_nm`]'s.
+pub fn spmm_nm_parallel<E: Element>(
+    p: &PreparedNm<E>,
+    x: &[E],
+    n: usize,
+    y: &mut [E],
+    threads: usize,
+) -> Result<()> {
+    let per_row = p.groups() * p.nm_n;
+    let panels = partition_rows_balanced(p.m, p.nnz(), |_| per_row, threads);
+    if panels.len() <= 1 {
+        return spmm_nm(p, x, n, y);
+    }
+    if x.len() != p.k * n || y.len() != p.m * n {
+        return spmm_nm(p, x, n, y); // reuse the single-thread shape error
+    }
+    std::thread::scope(|scope| {
+        let mut rest: &mut [E] = y;
+        for &(r0, r1) in &panels {
+            let (panel, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * n);
+            rest = tail;
+            scope.spawn(move || nm_rows(p, x, n, r0, r1, panel));
+        }
+    });
+    Ok(())
+}
+
+/// N:M SpMM with automatic parallelism: panel-parallel when the job
+/// clears the dtype-scaled engagement floor
+/// ([`crate::kernels::parallel::parallel_engages`]), single-threaded
+/// otherwise; bit-identical either way.
+pub fn spmm_nm_auto<E: Element>(
+    p: &PreparedNm<E>,
+    x: &[E],
+    n: usize,
+    y: &mut [E],
+    threads: usize,
+) -> Result<()> {
+    let flops = 2.0 * p.nnz() as f64 * n as f64;
+    if parallel_engages(E::DTYPE, flops, threads) {
+        spmm_nm_parallel(p, x, n, y, threads)
+    } else {
+        spmm_nm(p, x, n, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::element::{dequantize, quantize, F16};
+    use crate::kernels::spmm::close_enough_for;
+    use crate::DType;
+
+    /// Dense row-major oracle: y = A x in f32.
+    fn dense_ref(a: &[f32], x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0f32; m * n];
+        for r in 0..m {
+            for l in 0..k {
+                let w = a[r * k + l];
+                for j in 0..n {
+                    y[r * n + j] += w * x[l * n + j];
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn packed_format_round_trips_through_dense() {
+        for &(nm_n, nm_m) in &[(2usize, 4usize), (4, 8), (1, 4), (3, 8)] {
+            let p = PreparedNm::<f32>::from_pattern(5, nm_m * 3, nm_n, nm_m, 7).unwrap();
+            let dense = p.to_dense();
+            let back = PreparedNm::<f32>::from_dense(5, nm_m * 3, nm_n, nm_m, &dense).unwrap();
+            // An N:M-compliant dense matrix repacks to the same dense
+            // view; indices may differ only where dropped weights were
+            // exactly zero (from_pattern's normals never are, but a
+            // group with a zero weight has interchangeable slots).
+            assert_eq!(back.to_dense(), dense, "{nm_n}:{nm_m}");
+            assert_eq!(back.nnz(), p.nnz());
+        }
+    }
+
+    #[test]
+    fn from_pattern_is_deterministic_and_structured() {
+        let a = PreparedNm::<f32>::from_pattern(8, 32, 2, 4, 42).unwrap();
+        let b = PreparedNm::<f32>::from_pattern(8, 32, 2, 4, 42).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, PreparedNm::<f32>::from_pattern(8, 32, 2, 4, 43).unwrap());
+        // Exactly N distinct ascending columns per group.
+        for r in 0..a.m {
+            for g in 0..a.groups() {
+                let cols: Vec<usize> = (0..a.nm_n).map(|s| a.idx_of(r, g, s)).collect();
+                for w in cols.windows(2) {
+                    assert!(w[0] < w[1], "row {r} group {g}: {cols:?}");
+                }
+                assert!(cols.iter().all(|&c| c < a.nm_m));
+            }
+        }
+        // The F16 realization is the quantized view of the f32 one.
+        let a16 = PreparedNm::<F16>::from_pattern(8, 32, 2, 4, 42).unwrap();
+        assert_eq!(a16.idx, a.idx);
+        for (h, f) in a16.values.iter().zip(&a.values) {
+            assert_eq!(*h, F16::from_f32(*f));
+        }
+    }
+
+    #[test]
+    fn kernel_matches_dense_oracle_per_dtype() {
+        let mut rng = Rng::seed_from_u64(0x2424);
+        for &(nm_n, nm_m) in &[(2usize, 4usize), (4, 8), (3, 8)] {
+            for &n in &[1usize, 16, 33] {
+                let (m, k) = (7, nm_m * 5); // m deliberately odd
+                let p = PreparedNm::<f32>::from_pattern(m, k, nm_n, nm_m, rng.next_u64()).unwrap();
+                let x: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+                let mut y = vec![f32::NAN; m * n];
+                spmm_nm(&p, &x, n, &mut y).unwrap();
+                let want = dense_ref(&p.to_dense(), &x, m, k, n);
+                for (i, (&u, &v)) in y.iter().zip(&want).enumerate() {
+                    assert!(
+                        close_enough_for(DType::Fp32, u, v),
+                        "{nm_n}:{nm_m} n={n} elem {i}: {u} vs {v}"
+                    );
+                }
+                // F16 against the f32 oracle on the quantized operands.
+                let p16 = PreparedNm::<F16>::from_pattern(m, k, nm_n, nm_m, 1).unwrap();
+                let x16: Vec<F16> = quantize(&x);
+                let mut y16 = vec![F16(0x7E00); m * n];
+                spmm_nm(&p16, &x16, n, &mut y16).unwrap();
+                let want16 = dense_ref(&p16.to_dense(), &dequantize(&x16), m, k, n);
+                for (i, (&u, &v)) in dequantize(&y16).iter().zip(&want16).enumerate() {
+                    assert!(
+                        close_enough_for(DType::Fp16, u, v),
+                        "f16 {nm_n}:{nm_m} n={n} elem {i}: {u} vs {v}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_kernel_is_bit_identical_to_pinned_scalar() {
+        let mut rng = Rng::seed_from_u64(0x51D2);
+        for &(nm_n, nm_m) in &[(2usize, 4usize), (4, 8), (3, 8)] {
+            let (m, k, n) = (6, nm_m * 4, 33); // full tiles + remainder
+            let p = PreparedNm::<f32>::from_pattern(m, k, nm_n, nm_m, rng.next_u64()).unwrap();
+            let x: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let (mut y, mut y_ref) = (vec![f32::NAN; m * n], vec![f32::NAN; m * n]);
+            spmm_nm(&p, &x, n, &mut y).unwrap();
+            spmm_nm_scalar(&p, &x, n, &mut y_ref).unwrap();
+            for (i, (&u, &v)) in y.iter().zip(&y_ref).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "{nm_n}:{nm_m} elem {i}");
+            }
+            let p16 = PreparedNm::<F16>::from_pattern(m, k, nm_n, nm_m, 2).unwrap();
+            let x16: Vec<F16> = quantize(&x);
+            let (mut y16, mut y16_ref) = (vec![F16(0x7E00); m * n], vec![F16(0x7E00); m * n]);
+            spmm_nm(&p16, &x16, n, &mut y16).unwrap();
+            spmm_nm_scalar(&p16, &x16, n, &mut y16_ref).unwrap();
+            assert_eq!(y16, y16_ref, "f16 {nm_n}:{nm_m}");
+        }
+    }
+
+    #[test]
+    fn all_zero_groups_produce_zero_output() {
+        // Structural slots with zero *values*: the degenerate case the
+        // format permits (a group whose kept weights are all zero).
+        let p: PreparedNm =
+            PreparedNm::new(2, 8, 2, 4, vec![0.0; 2 * 2 * 2], vec![0x10; 2 * 2]).unwrap();
+        let n = 5;
+        let x = vec![1f32; 8 * n];
+        let mut y = vec![f32::NAN; 2 * n];
+        spmm_nm(&p, &x, n, &mut y).unwrap();
+        assert!(y.iter().all(|&v| v == 0.0), "{y:?}");
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_exactly() {
+        let mut rng = Rng::seed_from_u64(0x9A12);
+        for &(m, n) in &[(64usize, 21usize), (7, 16)] {
+            let p = PreparedNm::<f32>::from_pattern(m, 32, 2, 4, rng.next_u64()).unwrap();
+            let x: Vec<f32> = (0..32 * n).map(|_| rng.normal() as f32).collect();
+            let mut y1 = vec![f32::NAN; m * n];
+            let mut y4 = vec![f32::NAN; m * n];
+            spmm_nm(&p, &x, n, &mut y1).unwrap();
+            spmm_nm_parallel(&p, &x, n, &mut y4, 4).unwrap();
+            assert_eq!(y1, y4, "m={m} n={n}");
+            let p16 = PreparedNm::<F16>::from_pattern(m, 32, 2, 4, 3).unwrap();
+            let x16: Vec<F16> = quantize(&x);
+            let mut z1 = vec![F16(0x7E00); m * n];
+            let mut z4 = vec![F16(0x7E00); m * n];
+            spmm_nm(&p16, &x16, n, &mut z1).unwrap();
+            spmm_nm_parallel(&p16, &x16, n, &mut z4, 4).unwrap();
+            assert_eq!(z1, z4, "f16 m={m} n={n}");
+        }
+    }
+
+    #[test]
+    fn auto_handles_tiny_inputs_and_shape_errors() {
+        let p = PreparedNm::<f32>::from_pattern(4, 8, 2, 4, 1).unwrap();
+        let x = vec![0f32; 8 * 3];
+        let mut y = vec![f32::NAN; 4 * 3];
+        spmm_nm_auto(&p, &x, 3, &mut y, 8).unwrap();
+        assert!(y.iter().all(|&v| v == 0.0));
+        assert!(spmm_nm(&p, &x[..7], 3, &mut y).is_err());
+        assert!(spmm_nm(&p, &x, 3, &mut y[..7]).is_err());
+    }
+
+    #[test]
+    fn constructor_rejects_bad_structure() {
+        assert!(PreparedNm::<f32>::from_pattern(4, 10, 2, 4, 1).is_err(), "k % M != 0");
+        assert!(PreparedNm::<f32>::from_pattern(4, 8, 0, 4, 1).is_err(), "N = 0");
+        assert!(PreparedNm::<f32>::from_pattern(4, 8, 5, 4, 1).is_err(), "N > M");
+        assert!(PreparedNm::<f32>::from_pattern(4, 34, 2, 17, 1).is_err(), "M > 16");
+        // Out-of-range nibble caught by `new`.
+        assert!(PreparedNm::<f32>::new(1, 4, 2, 4, vec![1.0, 1.0], vec![0x41]).is_err());
+        // Wrong buffer lengths caught by `new`.
+        assert!(PreparedNm::<f32>::new(1, 4, 2, 4, vec![1.0], vec![0x10]).is_err());
+        assert!(PreparedNm::<f32>::new(1, 4, 2, 4, vec![1.0, 1.0], vec![]).is_err());
+    }
+
+    #[test]
+    fn density_maps_to_supported_structures() {
+        assert_eq!(nm_for_density(0.5), Some((2, 4)));
+        assert_eq!(nm_for_density(0.25), Some((1, 4)));
+        assert_eq!(nm_for_density(0.75), Some((3, 4)));
+        assert_eq!(nm_for_density(1.0 / 8.0), Some((1, 8)));
+        assert_eq!(nm_for_density(3.0 / 8.0), Some((3, 8)));
+        assert_eq!(nm_for_density(1.0 / 16.0), None);
+        assert_eq!(nm_for_density(1.0), None);
+        assert_eq!(nm_for_density(0.3), None, "not exactly representable");
+    }
+}

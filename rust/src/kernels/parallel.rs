@@ -21,11 +21,34 @@ use crate::error::Result;
 use crate::kernels::element::Element;
 use crate::kernels::prepared::PreparedBsr;
 use crate::kernels::spmm::{spmm, spmm_rows};
+use crate::DType;
 
-/// Minimum useful FLOPs per spawned panel: below this the scoped
-/// thread spawn overhead (~tens of µs) outweighs the work, so
-/// [`spmm_auto`] stays single-threaded.
+/// Minimum useful FLOPs per spawned panel *for f32 storage*: below
+/// this the scoped thread spawn overhead (~tens of µs) outweighs the
+/// work, so [`spmm_auto`] stays single-threaded. Narrow storage
+/// engages earlier — see [`min_flops_per_thread`].
 pub const MIN_FLOPS_PER_THREAD: f64 = 4e6;
+
+/// The engagement floor scaled by storage dtype. F16 storage moves
+/// half the bytes per FLOP (~2x the arithmetic intensity of f32 —
+/// see [`crate::kernels::roofline`]), so a given FLOP count finishes
+/// sooner single-threaded and the spawn overhead amortizes at half
+/// the f32 floor; the f32 floor is the original, unchanged.
+pub fn min_flops_per_thread(dtype: DType) -> f64 {
+    match dtype {
+        DType::Fp32 => MIN_FLOPS_PER_THREAD,
+        DType::Fp16 => MIN_FLOPS_PER_THREAD / 2.0,
+    }
+}
+
+/// Whether a job of `flops` total work should take the panel-parallel
+/// path at `threads` workers for `dtype` storage: more than one thread
+/// available and at least [`min_flops_per_thread`] of work per thread.
+/// This single predicate defines the engagement boundary for every
+/// auto kernel ([`spmm_auto`], [`crate::kernels::nm::spmm_nm_auto`]).
+pub fn parallel_engages(dtype: DType, flops: f64, threads: usize) -> bool {
+    threads > 1 && flops >= min_flops_per_thread(dtype) * threads as f64
+}
 
 /// The thread count the parallel paths default to.
 pub fn default_threads() -> usize {
@@ -37,21 +60,31 @@ pub fn default_threads() -> usize {
 /// covered exactly once; panels are non-empty in rows (an all-zero
 /// row span still needs its output zero-filled by someone).
 pub fn partition_panels<E: Element>(p: &PreparedBsr<E>, parts: usize) -> Vec<(usize, usize)> {
-    let mb = p.mb();
+    partition_rows_balanced(p.mb(), p.nnz_blocks(), |r| p.nnz_in_rows(r, r + 1), parts)
+}
+
+/// The partition core behind [`partition_panels`], shared with the
+/// N:M kernels ([`crate::kernels::nm`]): greedy fair-share over any
+/// row axis with a per-row nnz accessor.
+pub(crate) fn partition_rows_balanced(
+    rows: usize,
+    total: usize,
+    nnz_of_row: impl Fn(usize) -> usize,
+    parts: usize,
+) -> Vec<(usize, usize)> {
     let parts = parts.max(1);
-    if mb == 0 {
+    if rows == 0 {
         return Vec::new();
     }
-    if parts == 1 || p.nnz_blocks() == 0 {
-        return vec![(0, mb)];
+    if parts == 1 || total == 0 {
+        return vec![(0, rows)];
     }
-    let total = p.nnz_blocks();
     let mut panels = Vec::with_capacity(parts);
     let mut start = 0usize;
     let mut acc = 0usize;
     let mut assigned = 0usize;
-    for r in 0..mb {
-        acc += p.nnz_in_rows(r, r + 1);
+    for r in 0..rows {
+        acc += nnz_of_row(r);
         let panels_left = parts - panels.len();
         // Close this panel once it holds its fair share of the still
         // unassigned nnz (ceil, so trailing panels never starve), as
@@ -64,8 +97,8 @@ pub fn partition_panels<E: Element>(p: &PreparedBsr<E>, parts: usize) -> Vec<(us
             start = r + 1;
         }
     }
-    if start < mb {
-        panels.push((start, mb));
+    if start < rows {
+        panels.push((start, rows));
     }
     panels
 }
@@ -128,7 +161,7 @@ pub fn spmm_auto<E: Element>(
     threads: usize,
 ) -> Result<()> {
     let flops = 2.0 * p.nnz_blocks() as f64 * (p.b * p.b) as f64 * n as f64;
-    if threads > 1 && flops >= MIN_FLOPS_PER_THREAD * threads as f64 {
+    if parallel_engages(E::DTYPE, flops, threads) {
         spmm_parallel(p, x, n, y, threads)
     } else {
         spmm(p, x, n, y)
@@ -209,6 +242,28 @@ mod tests {
         spmm(&p, &x, n, &mut y1).unwrap();
         spmm_parallel(&p, &x, n, &mut y4, 4).unwrap();
         assert_eq!(y1, y4);
+    }
+
+    #[test]
+    fn engagement_boundary_is_dtype_scaled() {
+        // The f16 floor is exactly half the f32 floor, so a job at
+        // 2e6 FLOPs/thread engages the pool in f16 but not f32, and a
+        // job at the full 4e6 FLOPs/thread engages in both. Pinned at
+        // the exact boundary (>= semantics) for both dtypes.
+        assert_eq!(min_flops_per_thread(DType::Fp32), 4e6);
+        assert_eq!(min_flops_per_thread(DType::Fp16), 2e6);
+        let threads = 8;
+        let half = 2e6 * threads as f64;
+        let full = 4e6 * threads as f64;
+        assert!(parallel_engages(DType::Fp16, half, threads));
+        assert!(!parallel_engages(DType::Fp32, half, threads));
+        assert!(parallel_engages(DType::Fp32, full, threads));
+        assert!(parallel_engages(DType::Fp16, full, threads));
+        // Just below each floor stays single-threaded.
+        assert!(!parallel_engages(DType::Fp16, half - 1.0, threads));
+        assert!(!parallel_engages(DType::Fp32, full - 1.0, threads));
+        // One thread never engages regardless of work.
+        assert!(!parallel_engages(DType::Fp16, 1e12, 1));
     }
 
     #[test]

@@ -24,6 +24,7 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::kernels::element::{Element, F16};
+use crate::kernels::nm::PreparedNm;
 use crate::sparse::coo::BlockCoo;
 use crate::sparse::patterns;
 use crate::DType;
@@ -214,13 +215,16 @@ impl<E: Element> PreparedBsr<E> {
 
 /// A dtype-erased shared prepared operand: what the serving-side
 /// prepared cache stores and [`execute_kernel`] consumes. One variant
-/// per supported storage dtype; the job's [`DType`] picks at dispatch.
+/// per supported storage dtype *and packed format* (block-CSR or
+/// structured N:M); the job's [`DType`] and mode pick at dispatch.
 ///
 /// [`execute_kernel`]: crate::engine::backends::execute_kernel
 #[derive(Debug, Clone)]
 pub enum PreparedOperand {
     F32(Arc<PreparedBsr<f32>>),
     F16(Arc<PreparedBsr<F16>>),
+    NmF32(Arc<PreparedNm<f32>>),
+    NmF16(Arc<PreparedNm<F16>>),
 }
 
 impl PreparedOperand {
@@ -244,35 +248,77 @@ impl PreparedOperand {
         })
     }
 
+    /// Realize a structured N:M pattern in the requested storage dtype
+    /// (the prepared cache's miss path for [`Mode::Nm`] jobs).
+    ///
+    /// [`Mode::Nm`]: crate::coordinator::request::Mode::Nm
+    pub fn from_nm_pattern(
+        m: usize,
+        k: usize,
+        nm_n: usize,
+        nm_m: usize,
+        seed: u64,
+        dtype: DType,
+    ) -> Result<Self> {
+        Ok(match dtype {
+            DType::Fp32 => PreparedOperand::NmF32(Arc::new(PreparedNm::from_pattern(
+                m, k, nm_n, nm_m, seed,
+            )?)),
+            DType::Fp16 => PreparedOperand::NmF16(Arc::new(PreparedNm::from_pattern(
+                m, k, nm_n, nm_m, seed,
+            )?)),
+        })
+    }
+
     /// The storage dtype this operand holds.
     pub fn dtype(&self) -> DType {
         match self {
-            PreparedOperand::F32(_) => DType::Fp32,
-            PreparedOperand::F16(_) => DType::Fp16,
+            PreparedOperand::F32(_) | PreparedOperand::NmF32(_) => DType::Fp32,
+            PreparedOperand::F16(_) | PreparedOperand::NmF16(_) => DType::Fp16,
         }
     }
 
-    /// The f32 operand, if that is what this holds.
+    /// The f32 block-CSR operand, if that is what this holds.
     pub fn as_f32(&self) -> Option<&Arc<PreparedBsr<f32>>> {
         match self {
             PreparedOperand::F32(p) => Some(p),
-            PreparedOperand::F16(_) => None,
+            _ => None,
         }
     }
 
-    /// The f16 operand, if that is what this holds.
+    /// The f16 block-CSR operand, if that is what this holds.
     pub fn as_f16(&self) -> Option<&Arc<PreparedBsr<F16>>> {
         match self {
             PreparedOperand::F16(p) => Some(p),
-            PreparedOperand::F32(_) => None,
+            _ => None,
         }
     }
 
-    /// Non-zero blocks (dtype-independent).
+    /// The f32 N:M operand, if that is what this holds.
+    pub fn as_nm_f32(&self) -> Option<&Arc<PreparedNm<f32>>> {
+        match self {
+            PreparedOperand::NmF32(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// The f16 N:M operand, if that is what this holds.
+    pub fn as_nm_f16(&self) -> Option<&Arc<PreparedNm<F16>>> {
+        match self {
+            PreparedOperand::NmF16(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Non-zero blocks for block-CSR operands; non-zero *elements* for
+    /// N:M operands (whose granularity is element-level, `b == 1`) —
+    /// in both cases the count of stored values over one block/element.
     pub fn nnz_blocks(&self) -> usize {
         match self {
             PreparedOperand::F32(p) => p.nnz_blocks(),
             PreparedOperand::F16(p) => p.nnz_blocks(),
+            PreparedOperand::NmF32(p) => p.nnz(),
+            PreparedOperand::NmF16(p) => p.nnz(),
         }
     }
 
@@ -281,6 +327,8 @@ impl PreparedOperand {
         match self {
             PreparedOperand::F32(p) => p.bytes(),
             PreparedOperand::F16(p) => p.bytes(),
+            PreparedOperand::NmF32(p) => p.bytes(),
+            PreparedOperand::NmF16(p) => p.bytes(),
         }
     }
 
@@ -290,6 +338,8 @@ impl PreparedOperand {
         match (self, other) {
             (PreparedOperand::F32(a), PreparedOperand::F32(b)) => Arc::ptr_eq(a, b),
             (PreparedOperand::F16(a), PreparedOperand::F16(b)) => Arc::ptr_eq(a, b),
+            (PreparedOperand::NmF32(a), PreparedOperand::NmF32(b)) => Arc::ptr_eq(a, b),
+            (PreparedOperand::NmF16(a), PreparedOperand::NmF16(b)) => Arc::ptr_eq(a, b),
             _ => false,
         }
     }
@@ -417,5 +467,26 @@ mod tests {
         assert!(p16.bytes() < p32.bytes(), "f16 storage is the point");
         assert!(p32.ptr_eq(&p32.clone()));
         assert!(!p32.ptr_eq(&p16));
+    }
+
+    #[test]
+    fn prepared_operand_carries_nm_format() {
+        let n32 = PreparedOperand::from_nm_pattern(8, 8, 2, 4, 3, DType::Fp32).unwrap();
+        let n16 = PreparedOperand::from_nm_pattern(8, 8, 2, 4, 3, DType::Fp16).unwrap();
+        assert_eq!(n32.dtype(), DType::Fp32);
+        assert_eq!(n16.dtype(), DType::Fp16);
+        assert!(n32.as_nm_f32().is_some() && n32.as_f32().is_none());
+        assert!(n16.as_nm_f16().is_some() && n16.as_f16().is_none());
+        // 8x8 at 2:4 keeps 2 of every 4: 32 stored elements.
+        assert_eq!(n32.nnz_blocks(), 32);
+        assert_eq!(n16.nnz_blocks(), 32);
+        assert!(n16.bytes() < n32.bytes(), "f16 storage is the point");
+        assert!(n32.ptr_eq(&n32.clone()));
+        assert!(!n32.ptr_eq(&n16));
+        // Format never silently crosses: a BSR accessor on an N:M
+        // handle (and vice versa) is None, not a widen.
+        let b32 = PreparedOperand::from_pattern(8, 8, 1, 0.5, 3, DType::Fp32).unwrap();
+        assert!(b32.as_nm_f32().is_none() && b32.as_f32().is_some());
+        assert!(!b32.ptr_eq(&n32));
     }
 }

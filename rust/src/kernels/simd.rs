@@ -67,6 +67,7 @@ use std::any::TypeId;
 use crate::kernels::element::Element;
 #[cfg(target_arch = "x86_64")]
 use crate::kernels::element::F16;
+use crate::kernels::nm::PreparedNm;
 use crate::kernels::prepared::PreparedBsr;
 
 /// The SIMD width tier the compute kernels dispatch at on this
@@ -154,6 +155,12 @@ unsafe fn cast_prepared<E: Element, T: Element>(p: &PreparedBsr<E>) -> &Prepared
     &*(p as *const PreparedBsr<E>).cast::<PreparedBsr<T>>()
 }
 
+#[cfg(target_arch = "x86_64")]
+unsafe fn cast_nm<E: Element, T: Element>(p: &PreparedNm<E>) -> &PreparedNm<T> {
+    debug_assert!(same_element::<E, T>());
+    &*(p as *const PreparedNm<E>).cast::<PreparedNm<T>>()
+}
+
 /// Try to run block-rows `[r0, r1)` through a SIMD tier. Returns
 /// `false` (computing nothing) when the selection rules send this
 /// call to the scalar fallback; on `true` the panel is fully written
@@ -194,6 +201,54 @@ pub(crate) fn try_spmm_rows<E: Element>(
 #[cfg(not(target_arch = "x86_64"))]
 pub(crate) fn try_spmm_rows<E: Element>(
     _p: &PreparedBsr<E>,
+    _x: &[E],
+    _n: usize,
+    _r0: usize,
+    _r1: usize,
+    _y_panel: &mut [E],
+) -> bool {
+    false
+}
+
+/// Try to run N:M rows `[r0, r1)` through a SIMD tier; same contract
+/// as [`try_spmm_rows`]. Gated to the monomorphized group widths
+/// `M` ∈ {4, 8} (other structures stay scalar, like generic-`b` BSR).
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn try_spmm_nm_rows<E: Element>(
+    p: &PreparedNm<E>,
+    x: &[E],
+    n: usize,
+    r0: usize,
+    r1: usize,
+    y_panel: &mut [E],
+) -> bool {
+    if !matches!(p.nm_m, 4 | 8) {
+        return false;
+    }
+    if same_element::<E, f32>() && avx2() {
+        unsafe {
+            let p = cast_nm::<E, f32>(p);
+            let x = cast_slice::<E, f32>(x);
+            let y = cast_slice_mut::<E, f32>(y_panel);
+            nm_rows_f32_avx2(p, x, n, r0, r1, y);
+        }
+        return true;
+    }
+    if same_element::<E, F16>() && avx2() && f16c() {
+        unsafe {
+            let p = cast_nm::<E, F16>(p);
+            let x = cast_slice::<E, F16>(x);
+            let y = cast_slice_mut::<E, F16>(y_panel);
+            nm_rows_f16_avx2(p, x, n, r0, r1, y);
+        }
+        return true;
+    }
+    false
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn try_spmm_nm_rows<E: Element>(
+    _p: &PreparedNm<E>,
     _x: &[E],
     _n: usize,
     _r0: usize,
@@ -258,6 +313,7 @@ mod x86 {
 
     use crate::kernels::dense::{dense_tile, I_TILE};
     use crate::kernels::element::F16;
+    use crate::kernels::nm::{nm_tile, PreparedNm};
     use crate::kernels::prepared::PreparedBsr;
     use crate::kernels::spmm::{spmm_tile_b, N_TILE};
 
@@ -410,6 +466,99 @@ mod x86 {
         }
     }
 
+    /// The wide twin of the scalar N:M row loop: one `N_TILE`
+    /// accumulator panel as `[__m256; 2]` per output row,
+    /// contributions applied as separate mul + add (no FMA) in the
+    /// same (group, slot) order as the scalar body — the nibble does
+    /// the column selection, lanes span only the batch axis.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn nm_rows_f32_avx2(
+        p: &PreparedNm<f32>,
+        x: &[f32],
+        n: usize,
+        r0: usize,
+        r1: usize,
+        y_panel: &mut [f32],
+    ) {
+        let groups = p.groups();
+        let gb = p.group_bytes();
+        for (ri, r) in (r0..r1).enumerate() {
+            let out = &mut y_panel[ri * n..(ri + 1) * n];
+            let mut j = 0;
+            while j + N_TILE <= n {
+                let mut a0 = _mm256_setzero_ps();
+                let mut a1 = _mm256_setzero_ps();
+                for g in 0..groups {
+                    let vbase = (r * groups + g) * p.nm_n;
+                    let ibase = (r * groups + g) * gb;
+                    for s in 0..p.nm_n {
+                        let byte = p.idx[ibase + s / 2];
+                        let ci = (if s % 2 == 0 { byte & 0x0F } else { byte >> 4 }) as usize;
+                        let w = _mm256_set1_ps(p.values[vbase + s]);
+                        let xp = x.as_ptr().add((g * p.nm_m + ci) * n + j);
+                        a0 = _mm256_add_ps(a0, _mm256_mul_ps(w, _mm256_loadu_ps(xp)));
+                        a1 = _mm256_add_ps(a1, _mm256_mul_ps(w, _mm256_loadu_ps(xp.add(8))));
+                    }
+                }
+                let op = out.as_mut_ptr().add(j);
+                _mm256_storeu_ps(op, a0);
+                _mm256_storeu_ps(op.add(8), a1);
+                j += N_TILE;
+            }
+            if j < n {
+                // Remainder columns run the shared scalar tile body.
+                nm_tile::<f32>(p, x, n, r, j, n - j, out);
+            }
+        }
+    }
+
+    /// F16 storage twin: widen `x` in lanes (`vcvtph2ps`), widen each
+    /// weight through the software path (one scalar — value-exact vs
+    /// the hardware conversion), store through `vcvtps2ph`
+    /// round-to-nearest-even.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "f16c")]
+    pub(super) unsafe fn nm_rows_f16_avx2(
+        p: &PreparedNm<F16>,
+        x: &[F16],
+        n: usize,
+        r0: usize,
+        r1: usize,
+        y_panel: &mut [F16],
+    ) {
+        let groups = p.groups();
+        let gb = p.group_bytes();
+        for (ri, r) in (r0..r1).enumerate() {
+            let out = &mut y_panel[ri * n..(ri + 1) * n];
+            let mut j = 0;
+            while j + N_TILE <= n {
+                let mut a0 = _mm256_setzero_ps();
+                let mut a1 = _mm256_setzero_ps();
+                for g in 0..groups {
+                    let vbase = (r * groups + g) * p.nm_n;
+                    let ibase = (r * groups + g) * gb;
+                    for s in 0..p.nm_n {
+                        let byte = p.idx[ibase + s / 2];
+                        let ci = (if s % 2 == 0 { byte & 0x0F } else { byte >> 4 }) as usize;
+                        let w = _mm256_set1_ps(p.values[vbase + s].to_f32());
+                        let xp = x.as_ptr().add((g * p.nm_m + ci) * n + j).cast::<__m128i>();
+                        let x0 = _mm256_cvtph_ps(_mm_loadu_si128(xp));
+                        let x1 = _mm256_cvtph_ps(_mm_loadu_si128(xp.add(1)));
+                        a0 = _mm256_add_ps(a0, _mm256_mul_ps(w, x0));
+                        a1 = _mm256_add_ps(a1, _mm256_mul_ps(w, x1));
+                    }
+                }
+                let op = out.as_mut_ptr().add(j).cast::<__m128i>();
+                _mm_storeu_si128(op, _mm256_cvtps_ph::<RNE>(a0));
+                _mm_storeu_si128(op.add(1), _mm256_cvtps_ph::<RNE>(a1));
+                j += N_TILE;
+            }
+            if j < n {
+                nm_tile::<F16>(p, x, n, r, j, n - j, out);
+            }
+        }
+    }
+
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn matmul_f32_avx2(
         a: &[f32],
@@ -546,7 +695,10 @@ mod x86 {
 }
 
 #[cfg(target_arch = "x86_64")]
-use x86::{matmul_f16_avx2, matmul_f32_avx2, spmm_rows_f16_avx2, spmm_rows_f32_avx2};
+use x86::{
+    matmul_f16_avx2, matmul_f32_avx2, nm_rows_f16_avx2, nm_rows_f32_avx2, spmm_rows_f16_avx2,
+    spmm_rows_f32_avx2,
+};
 
 // ---------------------------------------------------------------------------
 // Roofline measurement probes (tier-dispatched).

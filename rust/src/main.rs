@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!
-//! * `repro plan    --mode auto|static|dynamic|dense --m .. --k .. --n .. [--b ..] [--density ..] [--fp32]`
+//! * `repro plan    --mode auto|static|dynamic|dense|nm --m .. --k .. --n .. [--b ..] [--density ..] [--fp32]`
 //! * `repro run     --artifact <name>` — execute an AOT artifact numerically and verify vs the oracle
 //! * `repro bench   <table3|fig2|fig3a|fig3b|fig4a|fig4b|fig4c|fig7|auto|ell|conclusions|all>`
 //! * `repro serve   [--jobs N] [--workers W]` — synthetic serving workload through the coordinator
@@ -31,7 +31,7 @@ fn usage() -> ! {
         "usage: repro <command>\n\
          \n\
          commands:\n\
-         \x20 plan   --mode <auto|static|dynamic|dense> --m M --k K --n N [--b B] [--density D] [--fp32]\n\
+         \x20 plan   --mode <auto|static|dynamic|dense|nm> --m M --k K --n N [--b B] [--density D] [--fp32]\n\
          \x20 run    [--artifact NAME]          numeric execution + oracle check\n\
          \x20 bench  <experiment|all> [--calibrated]  regenerate paper tables/figures\n\
          \x20        experiments: table3 fig2 fig3a fig3b fig4a fig4b fig4c fig7 auto churn ell conclusions\n\
@@ -57,9 +57,11 @@ fn usage() -> ! {
          \x20 trace  record [--out FILE] [--jobs N] [--workers W] [--numeric] [--wall-calibrated]\n\
          \x20        serve the synthetic workload with recording on (default trace.jsonl)\n\
          \x20 trace  replay [--trace FILE] [--out FILE] [--threads N] [--shards S] [--numeric]\n\
-         \x20        [--wall-calibrated]  deterministically re-execute a trace; writes the\n\
-         \x20        replay report (default REPLAY.json) — two replays of one trace are\n\
-         \x20        byte-identical, and so are sharded (--shards N) vs serial replays\n\
+         \x20        [--wall-calibrated] [--nm on|off]  deterministically re-execute a trace;\n\
+         \x20        writes the replay report (default REPLAY.json) — two replays of one\n\
+         \x20        trace are byte-identical, and so are sharded (--shards N) vs serial\n\
+         \x20        replays; --nm off removes the structured-N:M candidate from auto-mode\n\
+         \x20        resolution (the selector A/B `trace diff` surfaces)\n\
          \x20 trace  diff <a.json> <b.json>     compare two replay reports; non-zero on divergence\n\
          \x20 list                              list AOT artifacts"
     );
@@ -181,6 +183,33 @@ fn cmd_plan(args: &[String]) -> popsparse::Result<()> {
             for (name, c) in &e.cost.per_step {
                 println!("  {name:<20} {c} cycles");
             }
+        }
+        "nm" => {
+            let job = JobSpec {
+                mode: Mode::Nm,
+                m,
+                k,
+                n,
+                b,
+                density,
+                dtype,
+                pattern_seed: 42,
+            };
+            let (nm_n, nm_m) = popsparse::engine::NmBackend::structure(&job)?;
+            let cycles = popsparse::engine::nm_plan_cycles(&job, &spec, &cm)?;
+            println!(
+                "n:m plan: {nm_n}:{nm_m} structured, {} groups/row, keep ratio {:.3}",
+                k / nm_m,
+                nm_n as f64 / nm_m as f64
+            );
+            println!(
+                "cycles: {cycles} ({:.3} ms)",
+                cycles as f64 / spec.clock_hz * 1e3
+            );
+            println!(
+                "throughput: {:.1} TFLOP/s (nnz only)",
+                popsparse::tflops(popsparse::spmm_flops(m, k, n, density), cycles, spec.clock_hz)
+            );
         }
         "auto" => {
             let selector = popsparse::engine::ModeSelector::new(spec.clone(), cm.clone());
@@ -534,8 +563,10 @@ fn cmd_bench_contention(flags: &HashMap<String, String>) -> popsparse::Result<()
 /// share: round-robin modes, mixed precision (2/3 FP16 — the paper's
 /// headline precision — exercising the dtype-keyed prepared-operand
 /// cache and both kernel instantiations), pseudo-random batch widths
-/// from a fixed seed. A pure function of the job count, so a recorded
-/// trace of it is reproducible by construction.
+/// from a fixed seed. Every eighth job is an unbatched 2:4-density
+/// auto job — the N:M-expressible geometry whose resolution the
+/// `trace replay --nm` A/B flips. A pure function of the job count,
+/// so a recorded trace of it is reproducible by construction.
 fn synthetic_jobs(jobs: usize) -> Vec<JobSpec> {
     let mut rng = popsparse::util::Rng::seed_from_u64(1);
     (0..jobs)
@@ -547,13 +578,17 @@ fn synthetic_jobs(jobs: usize) -> Vec<JobSpec> {
                 _ => Mode::Auto,
             };
             let dtype = if i % 3 == 2 { DType::Fp32 } else { DType::Fp16 };
+            // Mixed-geometry stream: i % 8 == 7 lands on the Auto arm
+            // of the mode round-robin, re-pointed at the unbatched
+            // 2:4-expressible geometry.
+            let (b, density) = if i % 8 == 7 { (1, 0.5) } else { (16, 1.0 / 16.0) };
             JobSpec {
                 mode,
                 m: 1024,
                 k: 1024,
                 n: 1 << (rng.range(4, 9)), // 16..256
-                b: 16,
-                density: 1.0 / 16.0,
+                b,
+                density,
                 dtype,
                 pattern_seed: (i % 5) as u64,
             }
@@ -603,13 +638,14 @@ fn cmd_serve(args: &[String]) -> popsparse::Result<()> {
     );
     let (mode_hits, mode_misses) = coordinator.mode_memo_stats();
     println!(
-        "auto mode: {} jobs resolved (dense {} / static {} / dynamic {}), \
+        "auto mode: {} jobs resolved (dense {} / static {} / dynamic {} / nm {}), \
          memo {mode_hits} hits / {mode_misses} misses, estimate err {:.1}% \
          raw / {:.1}% calibrated",
         snap.auto_resolved(),
         snap.auto_dense,
         snap.auto_static,
         snap.auto_dynamic,
+        snap.auto_nm,
         snap.auto_estimate_rel_err * 100.0,
         snap.auto_estimate_rel_err_calibrated * 100.0
     );
@@ -752,7 +788,7 @@ fn cmd_trace_replay(args: &[String]) -> popsparse::Result<()> {
     let (flags, positionals) = parse_flags_strict(
         "trace replay",
         args,
-        &["trace", "out", "threads", "shards", "numeric", "wall-calibrated"],
+        &["trace", "out", "threads", "shards", "numeric", "wall-calibrated", "nm"],
     )?;
     let trace_path = flags
         .get("trace")
@@ -766,9 +802,19 @@ fn cmd_trace_replay(args: &[String]) -> popsparse::Result<()> {
     // byte-identical to the serial one — `trace diff` against a
     // `--shards 1` replay is the A/B that proves it.
     let shards = flag_usize(&flags, "shards", 1);
+    // `--nm off` removes the structured-N:M candidate from auto-mode
+    // resolution during replay — the selector A/B.
+    let nm = match flags.get("nm").map(String::as_str) {
+        None | Some("on") | Some("true") => true,
+        Some("off") | Some("false") => false,
+        Some(v) => {
+            return Err(popsparse::Error::Runtime(format!("bad --nm '{v}' (want on|off)")));
+        }
+    };
     let config = Config {
         numeric: flags.contains_key("numeric"),
         wall_calibrated: flags.contains_key("wall-calibrated"),
+        nm,
         ..Config::default()
     };
     let trace = Trace::load(trace_path)?;
@@ -881,5 +927,12 @@ mod tests {
         assert!(a.iter().any(|j| j.mode == Mode::Dense));
         assert!(a.iter().any(|j| j.dtype == DType::Fp32));
         assert!(a.iter().any(|j| j.dtype == DType::Fp16));
+        // The N:M-expressible slice rides the Auto arm: unbatched, on
+        // the 2:4 lattice, k divisible by the group width.
+        assert!(
+            a.iter().any(|j| j.b == 1 && j.density == 0.5 && j.mode == Mode::Auto),
+            "the workload must carry N:M-expressible auto jobs"
+        );
+        assert!(a.iter().any(|j| j.b == 16), "the legacy BSR slice remains");
     }
 }

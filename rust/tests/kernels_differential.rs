@@ -20,6 +20,11 @@
 //!   f32 — preparation is a relayout, not arithmetic — and exact for
 //!   `F16` when the values are f16-representable: the element
 //!   round-trip property at the operand level);
+//! * the structured N:M suite (DESIGN.md §5.2): `spmm_nm` vs the
+//!   dense oracle over `PreparedNm::to_dense`, dispatched-vs-scalar
+//!   bit-identity per dtype, parallel == serial bitwise, the
+//!   `from_dense -> to_dense` round trip on structure-satisfying
+//!   matrices, and the malformed-structure rejections;
 //! * the serving-side invariant that steady-state numeric serving
 //!   performs zero `BlockCoo -> PreparedBsr` conversions per
 //!   (pattern, dtype) (pinned via the plan cache's conversion
@@ -28,7 +33,7 @@
 use std::time::Duration;
 
 use popsparse::coordinator::{Config, Coordinator, JobSpec, Mode};
-use popsparse::kernels::{self, dequantize, quantize, PreparedBsr, F16};
+use popsparse::kernels::{self, dequantize, quantize, PreparedBsr, PreparedNm, F16};
 use popsparse::runtime;
 use popsparse::sim::chip::{CostModel, IpuSpec};
 use popsparse::sparse::coo::BlockCoo;
@@ -327,6 +332,166 @@ fn roofline_intensity_doubles_from_fp32_to_fp16_on_the_paper_shape() {
     // sparse.
     let d32 = dense_traffic(4096, 4096, 512, DType::Fp32);
     assert!(d32.intensity() > t32.intensity());
+}
+
+/// Every supported N:M structure (both group widths, interior and
+/// boundary N), paired with a k that is a multiple of both widths.
+const NM_STRUCTURES: [(usize, usize); 6] = [(1, 4), (2, 4), (3, 4), (1, 8), (4, 8), (7, 8)];
+
+#[test]
+fn nm_kernels_match_dense_oracle_across_structures() {
+    // f32 arm: `spmm_nm` against the naive dense reference over the
+    // unpacked operand — across both group widths, boundary N, odd
+    // row counts, and batch widths straddling the N_TILE boundary.
+    // Parallel and auto must then be bit-identical to serial.
+    let mut rng = Rng::seed_from_u64(0x4E4D);
+    for &(nm_n, nm_m) in &NM_STRUCTURES {
+        for &(m, n) in &[(5usize, 1usize), (16, 7), (33, 16), (8, 33)] {
+            let k = 32;
+            let p = PreparedNm::<f32>::from_pattern(m, k, nm_n, nm_m, rng.next_u64()).unwrap();
+            assert_eq!(p.nnz(), m * (k / nm_m) * nm_n, "structural nnz is exact");
+            let x: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let want = runtime::dense_ref(&p.to_dense(), &x, m, k, n);
+            let mut y = vec![f32::NAN; m * n];
+            kernels::spmm_nm(&p, &x, n, &mut y).unwrap();
+            assert_close(&y, &want, &format!("nm {nm_n}:{nm_m} m={m} n={n}"));
+            for threads in [2usize, 3, 8] {
+                let mut y_par = vec![f32::NAN; m * n];
+                kernels::spmm_nm_parallel(&p, &x, n, &mut y_par, threads).unwrap();
+                assert_eq!(y, y_par, "{nm_n}:{nm_m} m={m} n={n}: parallel({threads})");
+            }
+            let mut y_auto = vec![f32::NAN; m * n];
+            kernels::spmm_nm_auto(&p, &x, n, &mut y_auto, 4).unwrap();
+            assert_eq!(y, y_auto, "{nm_n}:{nm_m} m={m} n={n}: auto dispatch");
+        }
+    }
+}
+
+#[test]
+fn f16_nm_kernels_match_oracle_on_quantized_operands() {
+    // F16 arm of the same contract: `to_dense` widens the stored
+    // (already-quantized) values, so the f32 oracle sees exactly the
+    // operands the kernel consumes — the comparison isolates kernel
+    // error from input rounding, under the f16 tolerance.
+    let mut rng = Rng::seed_from_u64(0x4E4D16);
+    for &(nm_n, nm_m) in &NM_STRUCTURES {
+        for &n in &[1usize, 16, 33] {
+            let (m, k) = (17usize, 32usize);
+            let p = PreparedNm::<F16>::from_pattern(m, k, nm_n, nm_m, rng.next_u64()).unwrap();
+            let xf: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let x: Vec<F16> = quantize(&xf);
+            let want = runtime::dense_ref(&p.to_dense(), &dequantize(&x), m, k, n);
+            let mut y = vec![F16(0x7E00); m * n];
+            kernels::spmm_nm(&p, &x, n, &mut y).unwrap();
+            for (i, (&u, &v)) in dequantize(&y).iter().zip(&want).enumerate() {
+                assert!(
+                    kernels::close_enough_for(DType::Fp16, u, v),
+                    "nm {nm_n}:{nm_m} n={n} f16: element {i}: {u} vs {v}"
+                );
+            }
+            for threads in [2usize, 3, 8] {
+                let mut y_par = vec![F16(0x7E00); m * n];
+                kernels::spmm_nm_parallel(&p, &x, n, &mut y_par, threads).unwrap();
+                assert_eq!(y, y_par, "{nm_n}:{nm_m} n={n}: f16 parallel({threads})");
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatched_nm_matches_pinned_scalar_bitwise() {
+    // The SIMD tier contract extended to the N:M family: whatever
+    // tier the host dispatches, `spmm_nm` (and its parallel form) is
+    // bit-identical to the pinned scalar path, in both dtypes.
+    eprintln!("active SIMD tier: {}", kernels::simd::tier_label());
+    let mut rng = Rng::seed_from_u64(0x51D5);
+    let bits = |v: &[f32]| v.iter().map(|u| u.to_bits()).collect::<Vec<u32>>();
+    for &(nm_n, nm_m) in &NM_STRUCTURES {
+        for &n in &[1usize, 8, 33] {
+            let (m, k) = (33usize, 64usize);
+            let p = PreparedNm::<f32>::from_pattern(m, k, nm_n, nm_m, rng.next_u64()).unwrap();
+            let x: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let mut y = vec![f32::NAN; m * n];
+            let mut y_ref = vec![f32::NAN; m * n];
+            kernels::spmm_nm(&p, &x, n, &mut y).unwrap();
+            kernels::spmm_nm_scalar(&p, &x, n, &mut y_ref).unwrap();
+            assert_eq!(bits(&y), bits(&y_ref), "{nm_n}:{nm_m} n={n}: f32 dispatch vs scalar");
+            let mut y_par = vec![f32::NAN; m * n];
+            kernels::spmm_nm_parallel(&p, &x, n, &mut y_par, 4).unwrap();
+            assert_eq!(bits(&y_par), bits(&y_ref), "{nm_n}:{nm_m} n={n}: f32 par vs scalar");
+            // Same structure in F16 storage (fresh pattern stream).
+            let p16 = PreparedNm::<F16>::from_pattern(m, k, nm_n, nm_m, rng.next_u64()).unwrap();
+            let x16: Vec<F16> = quantize(&x);
+            let mut z = vec![F16(0x7E00); m * n];
+            let mut z_ref = vec![F16(0x7E00); m * n];
+            kernels::spmm_nm(&p16, &x16, n, &mut z).unwrap();
+            kernels::spmm_nm_scalar(&p16, &x16, n, &mut z_ref).unwrap();
+            assert_eq!(z, z_ref, "{nm_n}:{nm_m} n={n}: f16 dispatch vs scalar");
+            let mut z_par = vec![F16(0x7E00); m * n];
+            kernels::spmm_nm_parallel(&p16, &x16, n, &mut z_par, 4).unwrap();
+            assert_eq!(z_par, z_ref, "{nm_n}:{nm_m} n={n}: f16 parallel vs scalar");
+        }
+    }
+}
+
+#[test]
+fn nm_packed_round_trips_through_dense() {
+    // A matrix that already satisfies the N:M structure survives
+    // `from_dense . to_dense` exactly: per group the kept set is the
+    // nonzero set, stored in ascending column order. Values are
+    // position-derived halves (f16-representable), so the F16 arm is
+    // exact too — no quantization noise, no magnitude ties against
+    // the dropped zeros.
+    for &(nm_n, nm_m) in &NM_STRUCTURES {
+        let (m, k) = (7usize, 32usize);
+        let seeded = PreparedNm::<f32>::from_pattern(m, k, nm_n, nm_m, 0x0707).unwrap();
+        // Rebuild with deterministic nonzero values at the seeded
+        // structure's positions.
+        let mut dense = vec![0f32; m * k];
+        for (i, d) in seeded.to_dense().iter().enumerate() {
+            if *d != 0.0 {
+                dense[i] = ((i % 13) as f32 + 1.0) * if i % 2 == 0 { 0.5 } else { -0.5 };
+            }
+        }
+        let p = PreparedNm::<f32>::from_dense(m, k, nm_n, nm_m, &dense).unwrap();
+        assert_eq!(p.to_dense(), dense, "{nm_n}:{nm_m}: f32 round trip");
+        assert_eq!(
+            PreparedNm::<f32>::from_dense(m, k, nm_n, nm_m, &p.to_dense()).unwrap(),
+            p,
+            "{nm_n}:{nm_m}: repacking is the identity on packed form"
+        );
+        let p16 = PreparedNm::<F16>::from_dense(m, k, nm_n, nm_m, &dense).unwrap();
+        assert_eq!(p16.to_dense(), dense, "{nm_n}:{nm_m}: f16-representable round trip");
+    }
+}
+
+#[test]
+fn nm_degenerate_cases_and_rejections() {
+    // All-zero stored values: structurally present nonzeros that are
+    // numerically zero must still overwrite every output slot.
+    let p = PreparedNm::<f32>::new(3, 8, 2, 4, vec![0.0; 3 * 2 * 2], vec![0x10; 3 * 2]).unwrap();
+    let x = vec![1.0f32; 8 * 5];
+    let mut y = vec![f32::NAN; 3 * 5];
+    kernels::spmm_nm(&p, &x, 5, &mut y).unwrap();
+    assert!(y.iter().all(|&v| v == 0.0), "zero operand zero-fills the output");
+    // Malformed structures are rejected up front.
+    assert!(PreparedNm::<f32>::from_pattern(4, 30, 2, 4, 1).is_err(), "k % M != 0");
+    assert!(PreparedNm::<f32>::from_pattern(4, 32, 0, 4, 1).is_err(), "N = 0");
+    assert!(PreparedNm::<f32>::from_pattern(4, 32, 5, 4, 1).is_err(), "N > M");
+    assert!(PreparedNm::<f32>::from_pattern(4, 64, 2, 32, 1).is_err(), "M > 16");
+    // Nibble pointing outside the group is caught by `new`.
+    assert!(PreparedNm::<f32>::new(1, 4, 1, 4, vec![1.0], vec![0x07]).is_err());
+    // Operand shape mismatches are errors, not silent misreads.
+    let good = PreparedNm::<f32>::from_pattern(4, 8, 2, 4, 2).unwrap();
+    let mut y4 = vec![0f32; 4 * 3];
+    assert!(kernels::spmm_nm(&good, &[0f32; 7], 3, &mut y4).is_err(), "short x");
+    assert!(kernels::spmm_nm(&good, &[0f32; 8 * 3], 3, &mut [0f32; 5]).is_err(), "short y");
+    // And the density gate maps exactly the supported ratios.
+    assert_eq!(kernels::nm_for_density(0.5), Some((2, 4)));
+    assert_eq!(kernels::nm_for_density(0.25), Some((1, 4)));
+    assert_eq!(kernels::nm_for_density(1.0 / 8.0), Some((1, 8)));
+    assert_eq!(kernels::nm_for_density(1.0 / 16.0), None);
+    assert_eq!(kernels::nm_for_density(1.0), None);
 }
 
 fn job(mode: Mode, n: usize, seed: u64) -> JobSpec {

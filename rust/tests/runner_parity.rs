@@ -12,17 +12,18 @@ use popsparse::bench_harness::{experiments, BenchDoc};
 use popsparse::coordinator::{JobSpec, Mode};
 use popsparse::engine::{
     device_backends, Backend, ChurnTracker, DenseBackend, DynamicBackend, EngineEnv, ModeSelector,
-    StaticBackend,
+    NmBackend, StaticBackend,
 };
 use popsparse::sparse::patterns;
 use popsparse::DType;
 
 /// Frozen reference: the pre-runner `bench ci` point emission —
-/// churn-sweep scores first, then the per-dtype crossover grid, in
-/// the exact legacy loop order.
+/// churn-sweep scores first, then the per-dtype crossover grid, then
+/// the structured N:M grid, in the exact legacy loop order.
 fn reference_bench_ci_points(env: &Env) -> Vec<(String, f64)> {
     let mut points = reference_churn_points(env);
     points.extend(reference_crossover_points(env));
+    points.extend(reference_nm_crossover_points(env));
     points
 }
 
@@ -101,6 +102,39 @@ fn reference_crossover_points(env: &Env) -> Vec<(String, f64)> {
                 }
                 if let Some(observed) = reference_skewed_dynamic_cycles(&job, env) {
                     points.push((format!("{prefix}/dynamic_observed"), observed as f64));
+                }
+            }
+        }
+    }
+    points
+}
+
+/// The structured N:M grid: per dtype and N:M-expressible density,
+/// the N:M backend's estimate against dense at the same b = 1
+/// geometry — mirroring `experiments::nm_crossover_points` loop for
+/// loop.
+fn reference_nm_crossover_points(env: &Env) -> Vec<(String, f64)> {
+    let engine_env = EngineEnv::new(env.spec.clone(), env.cm.clone());
+    let mut points = Vec::new();
+    for dtype in [DType::Fp16, DType::Fp32] {
+        for m in [1024usize, 2048, 4096] {
+            for inv_d in [2usize, 4, 8] {
+                let job = JobSpec {
+                    mode: Mode::Auto,
+                    m,
+                    k: m,
+                    n: 2048,
+                    b: 1,
+                    density: 1.0 / inv_d as f64,
+                    dtype,
+                    pattern_seed: seed_for(m, 1, inv_d),
+                };
+                let prefix = format!("crossover/{dtype}/nm/m{m}_d{inv_d}");
+                if let Ok(est) = NmBackend.plan(&job, &engine_env) {
+                    points.push((format!("{prefix}/nm"), est.cycles as f64));
+                }
+                if let Ok(est) = DenseBackend.plan(&job, &engine_env) {
+                    points.push((format!("{prefix}/dense"), est.cycles as f64));
                 }
             }
         }
