@@ -19,6 +19,11 @@
 //!   consumer, microsecond hold times. Steady state must report ~0
 //!   even at N≥4 workers; the CLI asserts a hard ceiling and exits
 //!   non-zero past it.
+//! * **pool spawns** — kernel-pool worker threads spawned while the
+//!   backlog drained. The pool is warmed before the sweep, so this
+//!   must be exactly 0 at every point: pooled dispatch injects panel
+//!   jobs into parked workers ([`kernels::pool`]); a nonzero value
+//!   means the spawn tax is back and the CLI exits non-zero.
 //!
 //! Throughput (jobs/s) is reported for context but never gated —
 //! wall-clock on a shared CI box is noise; the *lock-wait* ceiling is
@@ -27,6 +32,7 @@
 //! milliseconds per job at any clock speed).
 //!
 //! [`Coordinator`]: crate::coordinator::Coordinator
+//! [`kernels::pool`]: crate::kernels::pool
 //! [`WorkQueue::lock_wait`]: crate::util::WorkQueue::lock_wait
 //! [`WallScale`]: crate::engine::WallScale
 
@@ -84,6 +90,12 @@ pub struct ContentionPoint {
     pub jobs_per_sec: f64,
     pub queue_wait_us_per_job: f64,
     pub lock_wait_us_per_job: f64,
+    /// Kernel-pool worker threads spawned *during* the measured run
+    /// (the pool is forced into existence in warm-up, so its one-time
+    /// construction spawns are excluded). Steady state must report 0 —
+    /// pooled dispatch injects jobs into parked workers instead of
+    /// spawning — and the CLI exits non-zero otherwise.
+    pub pool_spawns: u64,
 }
 
 struct ContentionExperiment {
@@ -100,7 +112,7 @@ impl ContentionExperiment {
             spec: ExperimentSpec::new(
                 "contention",
                 format!("sharded coordinator contention ({jobs} mixed jobs per point)"),
-                &["workers", "jobs", "jobs/s", "queue-wait us/job", "lock-wait us/job"],
+                &["workers", "jobs", "jobs/s", "queue-wait us/job", "lock-wait us/job", "pool spawns"],
             )
             .axis(Axis::ints("workers", workers)),
             jobs,
@@ -114,8 +126,17 @@ impl Experiment for ContentionExperiment {
         &self.spec
     }
 
+    fn warm_up(&mut self, _grid: &[GridPoint]) {
+        // Force the process-global kernel pool into existence before
+        // the first measured point: its one-time worker spawns are
+        // start-up cost, not steady-state dispatch, and every point
+        // below asserts a flat spawn counter against this baseline.
+        let _ = crate::kernels::pool::global();
+    }
+
     fn measure(&mut self, point: &GridPoint) -> PointOutput {
         let workers = point.int("workers");
+        let spawns_before = crate::kernels::pool::counters().spawns;
         let c = Coordinator::new(
             Config {
                 workers,
@@ -156,6 +177,7 @@ impl Experiment for ContentionExperiment {
             jobs_per_sec: completed as f64 / elapsed.as_secs_f64().max(1e-9),
             queue_wait_us_per_job: per_job(snap.queue_wait_total),
             lock_wait_us_per_job: per_job(lock_wait),
+            pool_spawns: crate::kernels::pool::counters().spawns - spawns_before,
         };
         self.measured.push(p);
         PointOutput::row(vec![
@@ -164,10 +186,12 @@ impl Experiment for ContentionExperiment {
             format!("{:.0}", p.jobs_per_sec),
             format!("{:.1}", p.queue_wait_us_per_job),
             format!("{:.1}", p.lock_wait_us_per_job),
+            format!("{}", p.pool_spawns),
         ])
         .with_points(vec![
             (format!("contention/queue_wait_us_per_job_w{workers}"), p.queue_wait_us_per_job),
             (format!("contention/lock_wait_us_per_job_w{workers}"), p.lock_wait_us_per_job),
+            (format!("contention/pool_spawns_steady_w{workers}"), p.pool_spawns as f64),
         ])
     }
 }
@@ -217,8 +241,15 @@ mod tests {
         for p in &points {
             assert_eq!(p.jobs, JOBS_PER_POINT_SMOKE, "every job must complete");
             assert!(p.jobs_per_sec > 0.0);
+            assert_eq!(
+                p.pool_spawns, 0,
+                "steady-state dispatch must inject into the warm pool, not spawn \
+                 (w{})",
+                p.workers
+            );
         }
         let keys: Vec<&str> = out.points.iter().map(|(k, _)| k.as_str()).collect();
         assert!(keys.contains(&"contention/lock_wait_us_per_job_w4"));
+        assert!(keys.contains(&"contention/pool_spawns_steady_w4"));
     }
 }

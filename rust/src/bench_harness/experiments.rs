@@ -633,7 +633,25 @@ pub fn bench_ci_points(env: &Env) -> Vec<(String, f64)> {
     let mut points = churn_sweep_points(env).1;
     points.extend(crossover_points(env));
     points.extend(nm_crossover_points(env));
+    points.extend(parallel_floor_points());
     points
+}
+
+/// The per-dtype parallel-engagement floors as gate points
+/// (`parallel_floor/<dtype>`): the FLOP threshold per thread below
+/// which [`spmm_auto`](crate::kernels::spmm_auto) and friends stay
+/// serial. These are shipped constants of the pooled dispatch path
+/// ([`kernels::min_flops_per_thread`](crate::kernels::min_flops_per_thread)),
+/// not measurements — the measured justification lives in `bench
+/// wall`'s spawn-overhead arm — so the gate pins them bit-for-bit:
+/// anyone moving the floor (or breaking the shared dtype scaling,
+/// satellite of DESIGN.md §5.3) trips the baseline diff and must
+/// re-seed deliberately.
+pub fn parallel_floor_points() -> Vec<(String, f64)> {
+    [DType::Fp32, DType::Fp16]
+        .iter()
+        .map(|&dt| (format!("parallel_floor/{dt}"), crate::kernels::min_flops_per_thread(dt)))
+        .collect()
 }
 
 /// The crossover grid's per-(backend, dtype) cycle estimates as gate
@@ -920,6 +938,12 @@ mod tests {
                 assert!(nm < de, "{dtype} 1/{inv_d}: nm {nm} must undercut dense {de}");
             }
         }
+        // The pooled engagement floors are gated as shipped constants,
+        // fp16 at exactly half fp32 (the shared dtype scaling).
+        let f32_floor = find("parallel_floor/fp32").expect("fp32 floor point");
+        let f16_floor = find("parallel_floor/fp16").expect("fp16 floor point");
+        assert_eq!(f32_floor, crate::kernels::min_flops_per_thread(DType::Fp32));
+        assert_eq!(f16_floor, f32_floor * 0.5);
         assert_eq!(points, bench_ci_points(&env), "bit-deterministic run over run");
     }
 

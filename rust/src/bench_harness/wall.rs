@@ -71,6 +71,7 @@ use crate::bench_harness::runner::{
 };
 use crate::bench_harness::sweep::seed_for;
 use crate::error::Result;
+use crate::kernels::pool;
 use crate::kernels::roofline::{self, MachineRoofline};
 use crate::kernels::{self, fill_pseudo, quantize, Element, PreparedBsr, F16};
 use crate::runtime;
@@ -732,11 +733,16 @@ impl Experiment for RooflineExperiment {
             _ => roofline::spmm_traffic(case.m, case.k, case.n, case.b, nnzb, case.dtype),
         };
         // The parallel arm is classified against the compute ceiling
-        // scaled by the thread count; bandwidth is a shared resource
-        // and stays fixed ([`MachineRoofline::scaled`]), so a
-        // memory-bound shape can legitimately exceed 100% there — the
-        // single-threaded arms carry the contract.
-        let machine = self.machine.scaled(if kernel == 1 { threads } else { 1 });
+        // scaled by the thread count — but only when the shape clears
+        // the engagement floor; below it `spmm_parallel` degenerates
+        // to the serial kernel and pretending otherwise would deflate
+        // its %-of-roofline. Bandwidth is a shared resource and stays
+        // fixed ([`MachineRoofline::scaled`]), so a memory-bound shape
+        // can legitimately exceed 100% there — the single-threaded
+        // arms carry the contract.
+        let par_engages =
+            kernel == 1 && kernels::parallel_engages(case.dtype, traffic.flops, threads);
+        let machine = self.machine.scaled(if par_engages { threads } else { 1 });
         let (bound, ceiling) = machine.classify(&traffic);
         let achieved = arms[kernel];
         let pct = 100.0 * achieved / ceiling;
@@ -828,12 +834,192 @@ pub fn roofline_table(
     Ok((out.table, out.points))
 }
 
-/// All four wall tables — the sparse sweep, the dense companion, the
-/// per-dtype sparse-vs-dense crossover, and the roofline
-/// classification — plus the roofline's machine-readable points
-/// (per-row %-of-ceiling and the measured machine peaks). `smoke`
-/// selects the tiny CI shapes and a short per-arm budget; the full
-/// sweep spends ~1.5 s per arm per point.
+/// Time the pooled (row-merge) vs scoped-spawn parallel sparse kernels
+/// on a deliberately row-skewed pattern. Returns `(scoped_ms,
+/// pooled_ms)`. Correctness of both arms is pinned bit-exactly against
+/// the serial kernel by the differential suite; this arm only times.
+fn skew_ms_for<E: Element>(coo: &BlockCoo, n: usize, rep: Repetition, threads: usize) -> (f64, f64) {
+    let prep = PreparedBsr::<E>::from_coo(coo);
+    let mut x = vec![E::ZERO; coo.k * n];
+    fill_pseudo(&mut x, 55);
+    let mut y = vec![E::ZERO; coo.m * n];
+    let tag = format!("skew m{} nnz{} {}", coo.m, coo.nnz_blocks(), E::DTYPE);
+    let scoped = rep.bench(&format!("spawn scoped  {tag}"), || {
+        let _ = kernels::spmm_parallel_scoped(&prep, &x, n, &mut y, threads);
+    });
+    let pooled = rep.bench(&format!("spawn pooled  {tag}"), || {
+        let _ = kernels::spmm_parallel(&prep, &x, n, &mut y, threads);
+    });
+    (scoped.mean_ns() / 1e6, pooled.mean_ns() / 1e6)
+}
+
+/// Row labels of the spawn-overhead table, in axis order.
+const SPAWN_ROWS: [&str; 6] = [
+    "dispatch ns",
+    "derived floor flops",
+    "engagement floor flops",
+    "engagement floor flops",
+    "skew wall ms",
+    "skew wall ms",
+];
+
+struct SpawnWallExperiment {
+    spec: ExperimentSpec,
+    smoke: bool,
+    overhead: pool::DispatchOverhead,
+}
+
+impl Experiment for SpawnWallExperiment {
+    fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    fn warm_up(&mut self, _grid: &[GridPoint]) {
+        let threads = self.spec.threads;
+        self.overhead =
+            pool::measure_dispatch_overhead(threads.max(2), if self.smoke { 9 } else { 25 });
+        println!(
+            "dispatch overhead ({} tasks): scoped-spawn {:.0} ns, pool-inject {:.0} ns",
+            threads.max(2),
+            self.overhead.scoped_ns,
+            self.overhead.inject_ns
+        );
+    }
+
+    fn measure(&mut self, point: &GridPoint) -> PointOutput {
+        let row = point.int("row");
+        let rep = self.spec.repetition.expect("wall experiments carry a repetition policy");
+        let threads = self.spec.threads;
+        let o = self.overhead;
+        let label = SPAWN_ROWS[row].to_string();
+        match row {
+            0 => {
+                // The raw microbench medians: what one parallel
+                // dispatch costs before any useful work happens.
+                assert!(
+                    o.inject_ns < o.scoped_ns,
+                    "pool injection ({:.0} ns) must undercut scoped spawn ({:.0} ns)",
+                    o.inject_ns,
+                    o.scoped_ns
+                );
+                PointOutput::row(vec![
+                    label,
+                    "-".into(),
+                    f1(o.scoped_ns),
+                    f1(o.inject_ns),
+                    f2(o.inject_ns / o.scoped_ns),
+                ])
+                .with_points(vec![
+                    ("wall_spawn/dispatch_scoped_ns".to_string(), o.scoped_ns),
+                    ("wall_spawn/dispatch_inject_ns".to_string(), o.inject_ns),
+                ])
+            }
+            1 => {
+                // The floors those medians derive under the shared
+                // amortization rule ([`parallel::derived_floor_flops`]):
+                // the measured justification for the constants below.
+                let fs = kernels::parallel::derived_floor_flops(o.scoped_ns);
+                let fp = kernels::parallel::derived_floor_flops(o.inject_ns);
+                assert!(fp < fs, "measured pooled floor must sit below the scoped floor");
+                PointOutput::row(vec![label, "-".into(), f1(fs), f1(fp), f2(fp / fs)])
+                    .with_points(vec![
+                        ("wall_spawn/derived_floor_scoped_flops".to_string(), fs),
+                        ("wall_spawn/derived_floor_pool_flops".to_string(), fp),
+                    ])
+            }
+            2 | 3 => {
+                // The engagement constants the kernels actually ship
+                // with, per dtype — pooled strictly below scoped is the
+                // acceptance contract of this PR.
+                let dt = if row == 2 { DType::Fp32 } else { DType::Fp16 };
+                let scoped = kernels::scoped_min_flops_per_thread(dt);
+                let pooled = kernels::min_flops_per_thread(dt);
+                assert!(
+                    pooled < scoped,
+                    "pooled engagement floor must sit strictly below the scoped floor ({dt})"
+                );
+                PointOutput::row(vec![
+                    label,
+                    dt.to_string(),
+                    f1(scoped),
+                    f1(pooled),
+                    f2(pooled / scoped),
+                ])
+                .with_points(vec![
+                    (format!("wall_spawn/floor_{dt}_scoped"), scoped),
+                    (format!("wall_spawn/floor_{dt}_pooled"), pooled),
+                ])
+            }
+            _ => {
+                // The skewed-row tail: one pathologically imbalanced
+                // pattern, pooled row-merge scheduling vs scoped
+                // per-thread panels.
+                let dt = if row == 4 { DType::Fp32 } else { DType::Fp16 };
+                let (m, b, nnz_b, n) =
+                    if self.smoke { (256, 4, 384, 32) } else { (2048, 8, 8192, 256) };
+                let mask =
+                    patterns::row_imbalanced(m, m, b, nnz_b, 2.5, 909).expect("bench geometry");
+                let coo = patterns::with_values(&mask, 909);
+                let (scoped_ms, pooled_ms) = match dt {
+                    DType::Fp32 => skew_ms_for::<f32>(&coo, n, rep, threads),
+                    DType::Fp16 => skew_ms_for::<F16>(&coo, n, rep, threads),
+                };
+                PointOutput::row(vec![
+                    label,
+                    dt.to_string(),
+                    f2(scoped_ms),
+                    f2(pooled_ms),
+                    f2(pooled_ms / scoped_ms),
+                ])
+                .with_points(vec![
+                    (format!("wall_spawn/skew_{dt}_scoped_ms"), scoped_ms),
+                    (format!("wall_spawn/skew_{dt}_pooled_ms"), pooled_ms),
+                ])
+            }
+        }
+    }
+}
+
+/// The spawn-overhead table: the scoped-spawn vs pool-inject dispatch
+/// microbench, the per-thread parallelism floors it derives, the
+/// per-dtype engagement constants the kernels ship with (pooled
+/// strictly below scoped — asserted in-bench), and a skewed-row wall
+/// comparison of row-merge vs per-thread panel scheduling (DESIGN.md
+/// §5.3; EXPERIMENTS.md records the results). Machine-dependent,
+/// reported, never gated — the deterministic floor constants are gated
+/// separately as `parallel_floor/<dtype>` by `bench ci`.
+pub fn spawn_table(
+    smoke: bool,
+    budget: Duration,
+    threads: usize,
+) -> Result<(Table, Vec<(String, f64)>)> {
+    let mut exp = SpawnWallExperiment {
+        spec: ExperimentSpec::new(
+            "wall_spawn",
+            format!(
+                "Spawn-vs-inject dispatch overhead, the engagement floors it derives, and a \
+                 skewed-row wall comparison of pooled (row-merge) vs scoped-spawn kernels at \
+                 {threads} threads; machine-dependent, not gated"
+            ),
+            &["arm", "dtype", "scoped", "pooled", "pooled/scoped"],
+        )
+        .axis(Axis::ints("row", &[0, 1, 2, 3, 4, 5]))
+        .threads(threads)
+        .repetition(budget, 2),
+        smoke,
+        overhead: pool::DispatchOverhead { scoped_ns: 0.0, inject_ns: 0.0 },
+    };
+    let out = Runner::run(&mut exp);
+    Ok((out.table, out.points))
+}
+
+/// All five wall tables — the sparse sweep, the dense companion, the
+/// per-dtype sparse-vs-dense crossover, the roofline classification,
+/// and the spawn-overhead arm — plus the machine-readable points of
+/// the latter two (roofline %-of-ceiling and machine peaks;
+/// spawn/floor/skew measurements). `smoke` selects the tiny CI shapes
+/// and a short per-arm budget; the full sweep spends ~1.5 s per arm
+/// per point.
 pub fn wall_tables(smoke: bool, threads: usize) -> Result<(Vec<Table>, Vec<(String, f64)>)> {
     let (cases, budget) = if smoke {
         (smoke_cases(), Duration::from_millis(40))
@@ -845,8 +1031,11 @@ pub fn wall_tables(smoke: bool, threads: usize) -> Result<(Vec<Table>, Vec<(Stri
         dense_table(smoke, budget)?,
         crossover_table(smoke, budget, threads)?,
     ];
-    let (roof, points) = roofline_table(&cases, smoke, budget, threads)?;
+    let (roof, mut points) = roofline_table(&cases, smoke, budget, threads)?;
     tables.push(roof);
+    let (spawn, spawn_points) = spawn_table(smoke, budget, threads)?;
+    tables.push(spawn);
+    points.extend(spawn_points);
     Ok((tables, points))
 }
 
@@ -861,7 +1050,7 @@ mod tests {
         // time, with deterministic table shapes.
         let (tables, points) =
             wall_tables(true, kernels::default_threads().min(2)).expect("smoke sweep runs");
-        assert_eq!(tables.len(), 4);
+        assert_eq!(tables.len(), 5);
         assert_eq!(tables[0].rows.len(), smoke_cases().len());
         assert_eq!(tables[1].rows.len(), 2, "dense smoke: one shape per dtype");
         assert_eq!(
@@ -920,12 +1109,35 @@ mod tests {
         for row in &tables[3].rows {
             assert!(row[7] == "mem" || row[7] == "comp", "bound column: {row:?}");
         }
-        assert_eq!(points.len(), tables[3].rows.len() + 2);
+        // ... plus two points per spawn-overhead row.
+        assert_eq!(
+            tables[4].rows.len(),
+            SPAWN_ROWS.len(),
+            "spawn table: dispatch, derived floor, per-dtype constants, per-dtype skew"
+        );
+        assert_eq!(points.len(), tables[3].rows.len() + 2 + 2 * SPAWN_ROWS.len());
         assert!(points.iter().any(|(k, v)| k == "wall_roofline/peak_gflops" && *v > 0.0));
         assert!(points.iter().any(|(k, v)| k == "wall_roofline/peak_gbps" && *v > 0.0));
         for (k, v) in &points {
             assert!(v.is_finite() && *v > 0.0, "{k} must be positive and finite: {v}");
         }
+        // The acceptance contract of the spawn arm: the pooled
+        // engagement floor sits strictly below the scoped one, both as
+        // shipped constants (per dtype) and as derived from the
+        // measured dispatch medians.
+        let spawn = |key: &str| {
+            points
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("spawn arm emits {key}"))
+        };
+        assert!(spawn("wall_spawn/floor_fp32_pooled") < spawn("wall_spawn/floor_fp32_scoped"));
+        assert!(spawn("wall_spawn/floor_fp16_pooled") < spawn("wall_spawn/floor_fp16_scoped"));
+        assert!(
+            spawn("wall_spawn/derived_floor_pool_flops")
+                < spawn("wall_spawn/derived_floor_scoped_flops")
+        );
     }
 
     #[test]

@@ -230,6 +230,9 @@ impl LocalMetrics {
     fn snapshot(&self) -> Snapshot {
         let lat = self.latencies_ns.sorted();
         let kernel = self.kernel_wall_ns.sorted();
+        // Sampled at snapshot time, not accumulated per shard: the
+        // kernel pool is process-wide state shared by every shard.
+        let pool = crate::kernels::pool::counters();
         Snapshot {
             jobs_completed: self.jobs_completed,
             jobs_failed: self.jobs_failed,
@@ -277,6 +280,9 @@ impl LocalMetrics {
             p50: pct_of(&lat, 0.50),
             p99: pct_of(&lat, 0.99),
             max: pct_of(&lat, 1.0),
+            pool_spawns: pool.spawns,
+            pool_injects: pool.injects,
+            pool_steals: pool.steals,
         }
     }
 }
@@ -351,6 +357,18 @@ pub struct Snapshot {
     pub p50: Duration,
     pub p99: Duration,
     pub max: Duration,
+    /// Kernel-pool worker threads ever spawned (process-wide sample,
+    /// not per-coordinator: the persistent pool is shared). Paid once
+    /// at pool warm-up; flat in steady state — the contention bench
+    /// and CI job assert a zero delta across a serving run.
+    pub pool_spawns: u64,
+    /// Parallel kernel dispatches injected into the pool
+    /// (process-wide sample).
+    pub pool_injects: u64,
+    /// Work units executed by parked pool workers rather than the
+    /// injecting thread (process-wide sample) — the row-merge signal:
+    /// a skew tail being absorbed by idle workers shows up here.
+    pub pool_steals: u64,
 }
 
 impl Snapshot {
@@ -366,6 +384,10 @@ impl Snapshot {
     /// diffs; anything timing-derived (latency percentiles, queue
     /// waits, kernel walls, selection time) is deliberately excluded
     /// because two bit-identical replays would still disagree on it.
+    /// The pool counters are excluded too: they sample process-wide
+    /// state (engagement depends on the host's thread count, and the
+    /// steal split is scheduling-dependent), while outputs stay
+    /// bit-identical regardless.
     /// Every counter here sums commutatively across shard flushes, so
     /// the set is also invariant under the worker/shard count.
     pub fn deterministic_counters(&self) -> Vec<(&'static str, u64)> {

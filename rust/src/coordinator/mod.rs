@@ -271,7 +271,7 @@ impl Shard {
                 scratch,
                 wall: Some(&self.wall),
                 recorder,
-                threads: 1,
+                threads: crate::kernels::default_threads(),
             }),
         );
     }
@@ -296,6 +296,13 @@ fn worker_loop(
     let mut batcher: Batcher<Responder> =
         Batcher::with_hints(max_batch_n, max_batch_delay, shard.hints.clone());
     let mut scratch = Scratch::default();
+    if numeric {
+        // Force the shared kernel pool up-front so the first big
+        // batch pays a job injection, not the one-time worker spawns
+        // (the spawn counter must be flat across steady-state
+        // serving — the contention bench asserts it).
+        let _ = crate::kernels::pool::global();
+    }
     let mut unflushed = 0usize;
     loop {
         let (popped, waited) = if batcher.pending() == 0 {
@@ -679,9 +686,13 @@ impl Drop for Coordinator {
 /// the measured kernels report into (None under deterministic replay,
 /// where recorded walls feed the calibration instead of live ones —
 /// see [`replay`]), the workload recorder tap
-/// ([`Config::record_trace`]), and the kernel thread count (1 per
-/// live worker — the shards are the parallelism; replay, which is
-/// serial, may use the bit-exact row-panel parallel path).
+/// ([`Config::record_trace`]), and the kernel thread count. Live
+/// workers pass the machine budget (`default_threads()`): big
+/// kernels dispatch onto the shared persistent pool
+/// ([`crate::kernels::pool`]), which admits one job at a time, so
+/// concurrent shards injecting simultaneously serialize at the pool
+/// instead of oversubscribing the machine — and outputs are bit-
+/// identical at any thread count, so shard-replay contracts hold.
 pub(crate) struct NumericArm<'a> {
     pub(crate) scratch: &'a mut Scratch,
     pub(crate) wall: Option<&'a WallFeedback>,
@@ -935,7 +946,13 @@ fn execute_group(
                         }
                         if let Some(kind) = BackendKind::of_mode(rep.mode) {
                             if let Some(wall) = arm.wall {
-                                if wall.observe_wall(kind, rep, plan_estimate, r.wall) {
+                                if wall.observe_wall_at(
+                                    kind,
+                                    rep,
+                                    plan_estimate,
+                                    r.wall,
+                                    arm.threads,
+                                ) {
                                     metrics.record_wall_observation();
                                 }
                             }

@@ -201,11 +201,14 @@ impl ReplaySession {
                     // anything into it.
                     let shard = &self.shards[self.shard_of(spec)];
                     if let Some(kind) = BackendKind::of_mode(spec.mode) {
-                        if shard.wall.observe_wall(
+                        // Same thread budget the numeric arm replays
+                        // with, so floor clamping matches recording.
+                        if shard.wall.observe_wall_at(
                             kind,
                             spec,
                             *estimated,
                             Duration::from_nanos(*wall_ns),
+                            self.threads,
                         ) {
                             shard.metrics.record_wall_observation();
                         }

@@ -475,7 +475,7 @@ fn execute_typed<E: Element>(
         Mode::Dense => {
             let (a, x, y) = scratch.dense_operands(job.m, job.k, job.n);
             let t0 = Instant::now();
-            kernels::dense::matmul(a, x, job.m, job.k, job.n, y)?;
+            kernels::dense::matmul_auto(a, x, job.m, job.k, job.n, y, threads)?;
             Ok(KernelRun { wall: t0.elapsed(), flops: job.flops() })
         }
         Mode::Static | Mode::Dynamic => {

@@ -449,6 +449,8 @@ impl WallFeedback {
     /// raw cycle estimate for the executed geometry, `wall` the
     /// measured kernel time. Returns `true` once the observation
     /// actually reached the calibration (scale warm, inputs sane).
+    /// Single-threaded floor semantics; a caller whose kernels run on
+    /// the parallel pool should use [`Self::observe_wall_at`].
     pub fn observe_wall(
         &self,
         kind: BackendKind,
@@ -456,11 +458,27 @@ impl WallFeedback {
         estimated: u64,
         wall: std::time::Duration,
     ) -> bool {
+        self.observe_wall_at(kind, job, estimated, wall, 1)
+    }
+
+    /// [`Self::observe_wall`] with an explicit kernel thread budget:
+    /// the physical floor a sample is clamped against is the
+    /// [`Self::roofline_floor_ns_at`] for that budget, so a
+    /// legitimately parallel wall (compute term divided across
+    /// threads) is not miscounted as a roofline violation.
+    pub fn observe_wall_at(
+        &self,
+        kind: BackendKind,
+        job: &JobSpec,
+        estimated: u64,
+        wall: std::time::Duration,
+        threads: usize,
+    ) -> bool {
         let mut wall_ns = wall.as_secs_f64() * 1e9;
         if estimated == 0 || wall_ns <= 0.0 {
             return false;
         }
-        if let Some(floor) = self.roofline_floor_ns(kind, job) {
+        if let Some(floor) = self.roofline_floor_ns_at(kind, job, threads) {
             if wall_ns < floor {
                 self.roofline_violations.fetch_add(1, Ordering::Relaxed);
                 // Floor the sample to the physical minimum: the
@@ -520,8 +538,26 @@ impl WallFeedback {
     /// `None` when unarmed, for the GPU backend (simulated, not a
     /// host kernel), or for degenerate geometry. The sparse backends'
     /// block count is estimated as `density * mb * kb` — the same
-    /// expectation the pattern generators target.
+    /// expectation the pattern generators target. Single-threaded
+    /// floor; see [`Self::roofline_floor_ns_at`].
     pub fn roofline_floor_ns(&self, kind: BackendKind, job: &JobSpec) -> Option<f64> {
+        self.roofline_floor_ns_at(kind, job, 1)
+    }
+
+    /// [`Self::roofline_floor_ns`] for a kernel running with `threads`
+    /// workers: when the job clears the parallel engagement floor
+    /// ([`crate::kernels::parallel_engages`]) the compute term scales
+    /// down by the thread count (each thread owns a row slice of the
+    /// FLOPs); the bandwidth term stays whole — the memory bus is
+    /// shared, extra threads do not add bytes per second to a
+    /// bandwidth-bound kernel's ceiling. Below the engagement floor
+    /// the kernel runs single-threaded and the floor is unchanged.
+    pub fn roofline_floor_ns_at(
+        &self,
+        kind: BackendKind,
+        job: &JobSpec,
+        threads: usize,
+    ) -> Option<f64> {
         use crate::kernels::roofline::{dense_traffic, nm_traffic, spmm_traffic};
         let gflops = f64::from_bits(self.roofline_gflops_bits.load(Ordering::SeqCst));
         let gbps = f64::from_bits(self.roofline_gbps_bits.load(Ordering::SeqCst));
@@ -544,7 +580,13 @@ impl WallFeedback {
             }
             BackendKind::Gpu => return None,
         };
-        Some((traffic.flops / gflops).max(traffic.bytes / gbps))
+        let compute_scale =
+            if crate::kernels::parallel_engages(job.dtype, traffic.flops, threads) {
+                threads as f64
+            } else {
+                1.0
+            };
+        Some((traffic.flops / gflops / compute_scale).max(traffic.bytes / gbps))
     }
 
     /// Wall observations that undercut the armed roofline floor (0

@@ -19,6 +19,8 @@
 
 use crate::error::{Error, Result};
 use crate::kernels::element::Element;
+use crate::kernels::parallel::{parallel_engages, with_merge_units};
+use crate::kernels::pool::{self, SendPtr};
 use crate::kernels::spmm::N_TILE;
 
 /// Output-row tile height of the register panel.
@@ -88,6 +90,73 @@ pub fn matmul_scalar<E: Element>(
     check_operands(a, x, m, k, n, y)?;
     matmul_rows_scalar(a, x, m, k, n, y);
     Ok(())
+}
+
+/// Row-parallel dense matmul on the persistent kernel pool: output
+/// rows are split into row-merge units (the shared partitioner of
+/// [`crate::kernels::parallel`]; dense rows are uniform, so units are
+/// equal row spans) and each unit runs the full kernel on its own
+/// `a`-rows / `y`-panel sub-problem. Bit-identical to [`matmul`]:
+/// every output row's f32 accumulation in `dense_tile` is independent
+/// of which `I_TILE` group it lands in (the `l` loop order is the
+/// row's own), so a sub-matmul over rows `r0..r1` produces exactly the
+/// rows the full matmul would — and the SIMD tiers are pinned
+/// bit-identical to the scalar body per dtype.
+pub fn matmul_parallel<E: Element>(
+    a: &[E],
+    x: &[E],
+    m: usize,
+    k: usize,
+    n: usize,
+    y: &mut [E],
+    threads: usize,
+) -> Result<()> {
+    check_operands(a, x, m, k, n, y)?;
+    with_merge_units(m, m, |_| 1, threads, |units| {
+        if units.len() <= 1 || threads <= 1 {
+            if crate::kernels::simd::try_matmul(a, x, m, k, n, y) {
+                return;
+            }
+            matmul_rows_scalar(a, x, m, k, n, y);
+            return;
+        }
+        let base = SendPtr(y.as_mut_ptr());
+        pool::global().run(units.len(), &|u| {
+            let (r0, r1) = units[u];
+            // SAFETY: units are disjoint contiguous spans of 0..m, so
+            // each claimed unit writes a disjoint sub-slice of `y`;
+            // the injector blocks until every unit completes.
+            let panel =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * n), (r1 - r0) * n) };
+            let rows = r1 - r0;
+            let a_panel = &a[r0 * k..r1 * k];
+            if !crate::kernels::simd::try_matmul(a_panel, x, rows, k, n, panel) {
+                matmul_rows_scalar(a_panel, x, rows, k, n, panel);
+            }
+        });
+    });
+    Ok(())
+}
+
+/// Dense matmul with automatic parallelism: row-parallel on the pool
+/// when `2·m·k·n` FLOPs clear the dtype-scaled engagement floor
+/// ([`crate::kernels::parallel::parallel_engages`]), single-call
+/// [`matmul`] otherwise; bit-identical either way.
+pub fn matmul_auto<E: Element>(
+    a: &[E],
+    x: &[E],
+    m: usize,
+    k: usize,
+    n: usize,
+    y: &mut [E],
+    threads: usize,
+) -> Result<()> {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    if parallel_engages(E::DTYPE, flops, threads) {
+        matmul_parallel(a, x, m, k, n, y, threads)
+    } else {
+        matmul(a, x, m, k, n, y)
+    }
 }
 
 fn matmul_rows_scalar<E: Element>(a: &[E], x: &[E], m: usize, k: usize, n: usize, y: &mut [E]) {
@@ -224,5 +293,26 @@ mod tests {
         assert!(matmul(&[0.0; 4], &[0.0; 3], 2, 2, 2, &mut y).is_err());
         assert!(matmul(&[0.0; 4], &[0.0; 4], 2, 2, 2, &mut y[..3]).is_err());
         assert!(matmul_scalar(&[0.0; 4], &[0.0; 3], 2, 2, 2, &mut y).is_err());
+        assert!(matmul_parallel(&[0.0; 4], &[0.0; 3], 2, 2, 2, &mut y, 4).is_err());
+        assert!(matmul_auto(&[0.0; 3], &[0.0; 4], 2, 2, 2, &mut y, 4).is_err());
+    }
+
+    #[test]
+    fn parallel_matmul_is_bit_identical_to_single_call() {
+        let mut rng = Rng::seed_from_u64(0xDEA1);
+        // Row counts straddling unit boundaries, odd n remainders.
+        for &(m, k, n) in &[(9usize, 17usize, 33usize), (64, 32, 21), (3, 5, 7)] {
+            let af: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let xf: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let (mut y, mut yp) = (vec![f32::NAN; m * n], vec![f32::NAN; m * n]);
+            matmul(&af, &xf, m, k, n, &mut y).unwrap();
+            matmul_parallel(&af, &xf, m, k, n, &mut yp, 4).unwrap();
+            assert_eq!(y, yp, "m={m} k={k} n={n}");
+            let (a16, x16) = (quantize::<F16>(&af), quantize::<F16>(&xf));
+            let (mut y16, mut y16p) = (vec![F16(0x7E00); m * n], vec![F16(0x7E00); m * n]);
+            matmul(&a16, &x16, m, k, n, &mut y16).unwrap();
+            matmul_parallel(&a16, &x16, m, k, n, &mut y16p, 4).unwrap();
+            assert_eq!(y16, y16p, "f16 m={m} k={k} n={n}");
+        }
     }
 }

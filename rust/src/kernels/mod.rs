@@ -34,6 +34,11 @@
 //!   **bit-identical** to the scalar fallback per dtype; the scalar
 //!   loops stay mandatory and numerics-defining. [`spmm_scalar`] and
 //!   [`dense::matmul_scalar`] bypass dispatch so the pin is provable.
+//! * [`pool`] — the persistent kernel worker pool every parallel
+//!   kernel dispatches through since PR 10: lazily-spawned parked
+//!   workers, per-call job injection, epoch-tagged dynamic unit
+//!   claiming (row-merge scheduling for skewed rows), zero
+//!   steady-state thread spawns or allocations (DESIGN.md §5.3).
 //! * [`roofline`] — the measured sparsity-roofline model: machine
 //!   peak FLOP/s + streaming bandwidth ([`simd`]'s probes), per-shape
 //!   arithmetic intensity and memory/compute bound, the ceiling the
@@ -55,17 +60,24 @@ pub mod dense;
 pub mod element;
 pub mod nm;
 pub mod parallel;
+pub mod pool;
 pub mod prepared;
 pub mod roofline;
 pub mod simd;
 pub mod spmm;
 
+pub use dense::{matmul_auto, matmul_parallel};
 pub use element::{dequantize, quantize, Element, F16};
-pub use nm::{nm_for_density, spmm_nm, spmm_nm_auto, spmm_nm_parallel, spmm_nm_scalar, PreparedNm};
-pub use parallel::{
-    default_threads, min_flops_per_thread, parallel_engages, partition_panels, spmm_auto,
-    spmm_parallel, MIN_FLOPS_PER_THREAD,
+pub use nm::{
+    nm_for_density, spmm_nm, spmm_nm_auto, spmm_nm_parallel, spmm_nm_parallel_scoped,
+    spmm_nm_scalar, PreparedNm,
 };
+pub use parallel::{
+    default_threads, dtype_floor_scale, min_flops_per_thread, parallel_engages, partition_panels,
+    scoped_min_flops_per_thread, spmm_auto, spmm_parallel, spmm_parallel_scoped,
+    MIN_FLOPS_PER_THREAD, POOL_MIN_FLOPS_PER_THREAD,
+};
+pub use pool::{KernelPool, PoolCounters};
 pub use prepared::{PreparedBsr, PreparedOperand};
 pub use roofline::MachineRoofline;
 pub use simd::SimdTier;

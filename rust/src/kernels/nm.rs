@@ -40,7 +40,8 @@
 
 use crate::error::{Error, Result};
 use crate::kernels::element::Element;
-use crate::kernels::parallel::{parallel_engages, partition_rows_balanced};
+use crate::kernels::parallel::{parallel_engages, partition_rows_balanced, with_merge_units};
+use crate::kernels::pool::{self, SendPtr};
 use crate::kernels::spmm::N_TILE;
 use crate::util::Rng;
 
@@ -492,13 +493,46 @@ pub(crate) fn nm_tile<E: Element>(
     }
 }
 
-/// Parallel N:M SpMM across nnz-balanced row panels on a scoped
-/// thread pool (the shared partition core of
-/// [`crate::kernels::parallel`]; N:M rows are uniform, so panels are
-/// equal row spans). Each panel owns a disjoint output slice and runs
+/// Parallel N:M SpMM across row-merge units on the persistent kernel
+/// pool (the shared partition core + unit buffer of
+/// [`crate::kernels::parallel`]; N:M rows are uniform, so units are
+/// equal row spans). Each unit owns a disjoint output slice and runs
 /// the same per-row kernel as the single-threaded path, so the result
-/// is bit-identical to [`spmm_nm`]'s.
+/// is bit-identical to [`spmm_nm`]'s — under any unit→worker
+/// assignment.
 pub fn spmm_nm_parallel<E: Element>(
+    p: &PreparedNm<E>,
+    x: &[E],
+    n: usize,
+    y: &mut [E],
+    threads: usize,
+) -> Result<()> {
+    if x.len() != p.k * n || y.len() != p.m * n {
+        return spmm_nm(p, x, n, y); // reuse the single-thread shape error
+    }
+    let per_row = p.groups() * p.nm_n;
+    with_merge_units(p.m, p.nnz(), |_| per_row, threads, |units| {
+        if units.len() <= 1 || threads <= 1 {
+            return spmm_nm(p, x, n, y);
+        }
+        let base = SendPtr(y.as_mut_ptr());
+        pool::global().run(units.len(), &|u| {
+            let (r0, r1) = units[u];
+            // SAFETY: units are disjoint contiguous spans of 0..m, so
+            // each claimed unit writes a disjoint sub-slice of `y`;
+            // the injector blocks until every unit completes.
+            let panel =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * n), (r1 - r0) * n) };
+            nm_rows(p, x, n, r0, r1, panel);
+        });
+        Ok(())
+    })
+}
+
+/// The legacy scoped-spawn N:M dispatch, retained as the differential
+/// reference for the pooled path (per-call OS thread spawns).
+/// Bit-identical to both [`spmm_nm`] and [`spmm_nm_parallel`].
+pub fn spmm_nm_parallel_scoped<E: Element>(
     p: &PreparedNm<E>,
     x: &[E],
     n: usize,

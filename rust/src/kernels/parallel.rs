@@ -1,66 +1,147 @@
-//! Row-panel parallel SpMM: nnz-balanced panels over a scoped thread
-//! pool.
+//! Row-panel parallel SpMM: nnz-balanced panels executed on the
+//! persistent kernel pool ([`crate::kernels::pool`]).
 //!
 //! Block-rows are partitioned into contiguous panels balanced by
 //! **non-zero block count**, not row count — a row-skewed pattern
 //! (most of the nnz piled into a few block-rows) would otherwise hand
-//! one thread nearly all the work. Each panel owns a disjoint slice of
-//! the output (`split_at_mut`), so panels run with no reduction, no
-//! locking and no false sharing on `y`; every panel executes the same
-//! per-row microkernel as the single-threaded path, so the parallel
-//! result is element-for-element identical to [`spmm`]'s — in every
-//! storage dtype (the kernels are generic over
-//! [`Element`](crate::kernels::Element); partition decisions read only
-//! the dtype-independent row structure). Panels flow through the same
-//! SIMD dispatch as the single-threaded path
+//! one thread nearly all the work. [`partition_panels`] is the single
+//! deterministic partitioner: unit boundaries are a pure function of
+//! the operand and the thread budget. The pooled path oversubscribes
+//! it ([`ROW_MERGE_OVERSUB`] units per thread) and lets workers claim
+//! units dynamically — row-merge scheduling, so nobody idles on the
+//! skew tail — while each panel still owns a disjoint slice of the
+//! output and executes the same per-row microkernel as the
+//! single-threaded path. The parallel result is therefore
+//! element-for-element identical to [`spmm`]'s — in every storage
+//! dtype, under any unit→worker assignment (partition decisions read
+//! only the dtype-independent row structure). Panels flow through the
+//! same SIMD dispatch as the single-threaded path
 //! ([`crate::kernels::simd`]), and since every tier is bit-identical
 //! to the scalar fallback, the parallel == single-threaded pin is
 //! unaffected by which tier each machine selects.
+//!
+//! [`spmm_parallel_scoped`] keeps the legacy scoped-spawn dispatch as
+//! the measured reference: the spawn-overhead wall arm times it
+//! against pool injection, and the differential suite pins all three
+//! dispatches (serial / scoped / pooled) bit-identical.
+
+use std::cell::RefCell;
+use std::sync::OnceLock;
 
 use crate::error::Result;
 use crate::kernels::element::Element;
+use crate::kernels::pool::{self, SendPtr};
 use crate::kernels::prepared::PreparedBsr;
 use crate::kernels::spmm::{spmm, spmm_rows};
 use crate::DType;
 
-/// Minimum useful FLOPs per spawned panel *for f32 storage*: below
-/// this the scoped thread spawn overhead (~tens of µs) outweighs the
-/// work, so [`spmm_auto`] stays single-threaded. Narrow storage
-/// engages earlier — see [`min_flops_per_thread`].
+/// Minimum useful FLOPs per thread *for f32 storage* under the
+/// retired scoped-spawn dispatch: per-call OS thread spawns cost tens
+/// of microseconds, so parallelism only paid off in the millions of
+/// FLOPs per thread. Kept as the documented legacy floor — the
+/// spawn-overhead wall arm re-measures it and the differential suite
+/// still drives the scoped reference path — but the auto kernels now
+/// engage at [`POOL_MIN_FLOPS_PER_THREAD`].
 pub const MIN_FLOPS_PER_THREAD: f64 = 4e6;
 
-/// The engagement floor scaled by storage dtype. F16 storage moves
-/// half the bytes per FLOP (~2x the arithmetic intensity of f32 —
-/// see [`crate::kernels::roofline`]), so a given FLOP count finishes
-/// sooner single-threaded and the spawn overhead amortizes at half
-/// the f32 floor; the f32 floor is the original, unchanged.
-pub fn min_flops_per_thread(dtype: DType) -> f64 {
+/// The pooled engagement floor for f32 storage. Re-derived from the
+/// spawn-vs-inject microbench
+/// ([`pool::measure_dispatch_overhead`]) via [`derived_floor_flops`]:
+/// injection into the warm pool costs ~1–3 µs against ~30–60 µs for
+/// scoped spawns, so the floor drops 16x — mid-size jobs that used to
+/// run single-threaded now parallelize. The constant (rather than a
+/// boot-time measurement) keeps engagement, and with it the `bench
+/// ci` gate points (`parallel_floor/<dtype>`), bit-deterministic.
+pub const POOL_MIN_FLOPS_PER_THREAD: f64 = 2.5e5;
+
+/// Floor derivation: dispatch overhead must stay under ~2% of kernel
+/// runtime, i.e. the kernel must run ≥ 50x the dispatch cost.
+pub const DISPATCH_AMORTIZATION: f64 = 50.0;
+
+/// Conservative scalar kernel throughput (FLOP per ns per thread)
+/// used to convert amortized dispatch time into a FLOP floor.
+pub const HOST_FLOPS_PER_NS: f64 = 2.0;
+
+/// Work units generated per thread by the pooled dispatch: the
+/// row-merge oversubscription factor. More units per thread means a
+/// worker finishing its short rows merges into the remainder instead
+/// of idling; unit boundaries stay deterministic (the partitioner
+/// sees `threads * ROW_MERGE_OVERSUB` parts).
+pub const ROW_MERGE_OVERSUB: usize = 4;
+
+/// The dtype scaling shared by **every** engagement floor (this is
+/// the one definition both [`min_flops_per_thread`] and the N:M auto
+/// kernel resolve through — `tests` pins the call sites agree). F16
+/// storage moves half the bytes per FLOP (~2x the arithmetic
+/// intensity of f32 — see [`crate::kernels::roofline`]), so a given
+/// FLOP count finishes sooner single-threaded and dispatch overhead
+/// amortizes at half the f32 floor.
+pub fn dtype_floor_scale(dtype: DType) -> f64 {
     match dtype {
-        DType::Fp32 => MIN_FLOPS_PER_THREAD,
-        DType::Fp16 => MIN_FLOPS_PER_THREAD / 2.0,
+        DType::Fp32 => 1.0,
+        DType::Fp16 => 0.5,
     }
+}
+
+/// The pooled engagement floor scaled by storage dtype.
+pub fn min_flops_per_thread(dtype: DType) -> f64 {
+    POOL_MIN_FLOPS_PER_THREAD * dtype_floor_scale(dtype)
+}
+
+/// The legacy scoped-spawn floor scaled by the same dtype rule — what
+/// the auto kernels enforced before the pool landed; the
+/// spawn-overhead wall arm reports it next to the pooled floor so the
+/// 16x drop stays visible (and asserted: pooled < scoped).
+pub fn scoped_min_flops_per_thread(dtype: DType) -> f64 {
+    MIN_FLOPS_PER_THREAD * dtype_floor_scale(dtype)
+}
+
+/// Convert a measured per-dispatch overhead (ns) into a FLOPs-per-
+/// thread engagement floor: the work must out-run the dispatch by
+/// [`DISPATCH_AMORTIZATION`] at [`HOST_FLOPS_PER_NS`] throughput.
+/// Sanity anchor: the legacy ~40 µs scoped spawn yields exactly the
+/// legacy 4e6 floor; a ~2.5 µs injection yields
+/// [`POOL_MIN_FLOPS_PER_THREAD`].
+pub fn derived_floor_flops(overhead_ns: f64) -> f64 {
+    overhead_ns * DISPATCH_AMORTIZATION * HOST_FLOPS_PER_NS
 }
 
 /// Whether a job of `flops` total work should take the panel-parallel
 /// path at `threads` workers for `dtype` storage: more than one thread
 /// available and at least [`min_flops_per_thread`] of work per thread.
 /// This single predicate defines the engagement boundary for every
-/// auto kernel ([`spmm_auto`], [`crate::kernels::nm::spmm_nm_auto`]).
+/// auto kernel ([`spmm_auto`], [`crate::kernels::nm::spmm_nm_auto`],
+/// [`crate::kernels::dense::matmul_auto`]).
 pub fn parallel_engages(dtype: DType, flops: f64, threads: usize) -> bool {
     threads > 1 && flops >= min_flops_per_thread(dtype) * threads as f64
 }
 
-/// The thread count the parallel paths default to.
+/// The thread count the parallel paths default to. Cached in a
+/// `OnceLock`: this sits on every kernel dispatch, and
+/// `available_parallelism` is a syscall on most platforms.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS
+        .get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
 /// Partition block-rows `0..mb` into at most `parts` contiguous
 /// panels with roughly equal non-zero block counts. Every block-row is
 /// covered exactly once; panels are non-empty in rows (an all-zero
-/// row span still needs its output zero-filled by someone).
+/// row span still needs its output zero-filled by someone). This is
+/// the single deterministic partitioner behind every parallel kernel:
+/// pooled dispatch changes which worker *runs* a panel, never where
+/// the panel boundaries fall.
 pub fn partition_panels<E: Element>(p: &PreparedBsr<E>, parts: usize) -> Vec<(usize, usize)> {
-    partition_rows_balanced(p.mb(), p.nnz_blocks(), |r| p.nnz_in_rows(r, r + 1), parts)
+    let mut panels = Vec::new();
+    partition_rows_balanced_into(
+        &mut panels,
+        p.mb(),
+        p.nnz_blocks(),
+        |r| p.nnz_in_rows(r, r + 1),
+        parts,
+    );
+    panels
 }
 
 /// The partition core behind [`partition_panels`], shared with the
@@ -72,14 +153,30 @@ pub(crate) fn partition_rows_balanced(
     nnz_of_row: impl Fn(usize) -> usize,
     parts: usize,
 ) -> Vec<(usize, usize)> {
+    let mut panels = Vec::new();
+    partition_rows_balanced_into(&mut panels, rows, total, nnz_of_row, parts);
+    panels
+}
+
+/// Allocation-reusing core: clears and fills `panels` in place, so
+/// steady-state dispatch through the thread-local unit buffer
+/// ([`with_merge_units`]) performs zero allocations once warm.
+pub(crate) fn partition_rows_balanced_into(
+    panels: &mut Vec<(usize, usize)>,
+    rows: usize,
+    total: usize,
+    nnz_of_row: impl Fn(usize) -> usize,
+    parts: usize,
+) {
+    panels.clear();
     let parts = parts.max(1);
     if rows == 0 {
-        return Vec::new();
+        return;
     }
     if parts == 1 || total == 0 {
-        return vec![(0, rows)];
+        panels.push((0, rows));
+        return;
     }
-    let mut panels = Vec::with_capacity(parts);
     let mut start = 0usize;
     let mut acc = 0usize;
     let mut assigned = 0usize;
@@ -100,13 +197,85 @@ pub(crate) fn partition_rows_balanced(
     if start < rows {
         panels.push((start, rows));
     }
-    panels
 }
 
-/// Parallel tiled SpMM: `y = A x` across nnz-balanced row panels on a
-/// scoped thread pool. Falls back to the single-threaded kernel when
-/// one panel results. Overwrites all of `y`.
+thread_local! {
+    /// Per-thread reusable unit buffer for pooled dispatch. Grows to
+    /// the largest `threads * ROW_MERGE_OVERSUB` seen, then every
+    /// later dispatch partitions into warm capacity — zero
+    /// steady-state allocations (pinned by `tests/hot_path_alloc.rs`).
+    static MERGE_UNITS: RefCell<Vec<(usize, usize)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Partition a row axis into oversubscribed row-merge units in the
+/// calling thread's reusable buffer and hand the unit list to `f`.
+/// Shared by the BSR, N:M and dense pooled kernels, so all three
+/// dispatch through the same deterministic partitioner and the same
+/// warm buffer. Not reentrant (the kernel layer never nests parallel
+/// dispatches; a pool worker runs row bodies only).
+pub(crate) fn with_merge_units<R>(
+    rows: usize,
+    total: usize,
+    nnz_of_row: impl Fn(usize) -> usize,
+    threads: usize,
+    f: impl FnOnce(&[(usize, usize)]) -> R,
+) -> R {
+    MERGE_UNITS.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        partition_rows_balanced_into(
+            &mut buf,
+            rows,
+            total,
+            nnz_of_row,
+            threads.max(1).saturating_mul(ROW_MERGE_OVERSUB),
+        );
+        f(&buf)
+    })
+}
+
+/// Parallel tiled SpMM: `y = A x` across nnz-balanced row-merge units
+/// on the persistent kernel pool ([`crate::kernels::pool`]). Falls
+/// back to the single-threaded kernel when one unit results.
+/// Overwrites all of `y`. Bit-identical to [`spmm`] (disjoint panel
+/// outputs, same per-row body — see the module doc).
 pub fn spmm_parallel<E: Element>(
+    p: &PreparedBsr<E>,
+    x: &[E],
+    n: usize,
+    y: &mut [E],
+    threads: usize,
+) -> Result<()> {
+    // Pre-check shapes once; panel slices below are then in-bounds by
+    // construction (panels cover 0..mb exactly).
+    if x.len() != p.k * n || y.len() != p.m * n {
+        return spmm(p, x, n, y); // reuse the single-thread shape error
+    }
+    with_merge_units(p.mb(), p.nnz_blocks(), |r| p.nnz_in_rows(r, r + 1), threads, |units| {
+        if units.len() <= 1 || threads <= 1 {
+            return spmm(p, x, n, y);
+        }
+        let b = p.b;
+        let base = SendPtr(y.as_mut_ptr());
+        pool::global().run(units.len(), &|u| {
+            let (r0, r1) = units[u];
+            // SAFETY: units are disjoint, contiguous spans of
+            // 0..mb, so each claimed unit writes a disjoint
+            // sub-slice of `y`; the injector blocks until every
+            // unit completes, keeping the borrow alive.
+            let panel = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(r0 * b * n), (r1 - r0) * b * n)
+            };
+            spmm_rows(p, x, n, r0, r1, panel);
+        });
+        Ok(())
+    })
+}
+
+/// The legacy scoped-spawn dispatch, retained as the measured and
+/// differential reference for the pooled path (it spawns OS threads
+/// per call — the spawn tax the pool exists to kill). Bit-identical
+/// to both [`spmm`] and [`spmm_parallel`].
+pub fn spmm_parallel_scoped<E: Element>(
     p: &PreparedBsr<E>,
     x: &[E],
     n: usize,
@@ -117,8 +286,6 @@ pub fn spmm_parallel<E: Element>(
     if panels.len() <= 1 {
         return spmm(p, x, n, y);
     }
-    // Pre-check shapes once; panel slices below are then in-bounds by
-    // construction (panels cover 0..mb exactly).
     if x.len() != p.k * n || y.len() != p.m * n {
         return spmm(p, x, n, y); // reuse the single-thread shape error
     }
@@ -133,11 +300,13 @@ pub fn spmm_parallel<E: Element>(
     Ok(())
 }
 
-/// SpMM with automatic parallelism: takes the panel-parallel path when
-/// the job is big enough to amortize thread spawns
-/// ([`MIN_FLOPS_PER_THREAD`] per thread), the single-threaded tiled
-/// kernel otherwise. Either way the result is bit-identical to
-/// [`spmm`]'s (and therefore to the pinned scalar path's).
+/// SpMM with automatic parallelism: takes the pooled panel-parallel
+/// path when the job clears the dtype-scaled engagement floor
+/// ([`POOL_MIN_FLOPS_PER_THREAD`] per thread — 16x lower than the
+/// scoped-spawn era now that dispatch is an injection, not a spawn),
+/// the single-threaded tiled kernel otherwise. Either way the result
+/// is bit-identical to [`spmm`]'s (and therefore to the pinned scalar
+/// path's).
 ///
 /// # Examples
 ///
@@ -211,6 +380,37 @@ mod tests {
     }
 
     #[test]
+    fn reusable_partition_matches_the_allocating_one() {
+        let mask = patterns::row_imbalanced(256, 256, 4, 512, 2.5, 11).unwrap();
+        let p: PreparedBsr = PreparedBsr::from_coo(&patterns::with_values(&mask, 11));
+        let mut buf = vec![(7usize, 7usize); 3]; // stale content must be cleared
+        for parts in [1usize, 2, 5, 16] {
+            partition_rows_balanced_into(
+                &mut buf,
+                p.mb(),
+                p.nnz_blocks(),
+                |r| p.nnz_in_rows(r, r + 1),
+                parts,
+            );
+            assert_eq!(buf, partition_panels(&p, parts), "parts {parts}");
+        }
+    }
+
+    #[test]
+    fn merge_units_oversubscribe_the_thread_budget() {
+        // A big uniform pattern at 4 threads must produce more than 4
+        // units (the row-merge pool has spare units to claim), all
+        // from the same deterministic partitioner.
+        let mask = patterns::uniform(512, 512, 4, 2000, 5).unwrap();
+        let p: PreparedBsr = PreparedBsr::from_coo(&patterns::with_values(&mask, 5));
+        with_merge_units(p.mb(), p.nnz_blocks(), |r| p.nnz_in_rows(r, r + 1), 4, |units| {
+            assert!(units.len() > 4, "expected oversubscription, got {} units", units.len());
+            assert!(units.len() <= 4 * ROW_MERGE_OVERSUB);
+            assert_eq!(units, &partition_panels(&p, 4 * ROW_MERGE_OVERSUB)[..]);
+        });
+    }
+
+    #[test]
     fn parallel_matches_single_threaded_exactly() {
         let mut rng = Rng::seed_from_u64(77);
         let mask = patterns::row_imbalanced(128, 128, 8, 120, 1.5, 5).unwrap();
@@ -219,11 +419,14 @@ mod tests {
         let x: Vec<f32> = (0..p.k * n).map(|_| rng.normal() as f32).collect();
         let mut y1 = vec![f32::NAN; p.m * n];
         let mut y4 = vec![f32::NAN; p.m * n];
+        let mut ys = vec![f32::NAN; p.m * n];
         spmm(&p, &x, n, &mut y1).unwrap();
         spmm_parallel(&p, &x, n, &mut y4, 4).unwrap();
+        spmm_parallel_scoped(&p, &x, n, &mut ys, 4).unwrap();
         // Same per-row kernel, disjoint outputs: identical, not just
-        // close.
+        // close — under either dispatch mechanism.
         assert_eq!(y1, y4);
+        assert_eq!(y1, ys);
     }
 
     #[test]
@@ -246,15 +449,16 @@ mod tests {
 
     #[test]
     fn engagement_boundary_is_dtype_scaled() {
-        // The f16 floor is exactly half the f32 floor, so a job at
-        // 2e6 FLOPs/thread engages the pool in f16 but not f32, and a
-        // job at the full 4e6 FLOPs/thread engages in both. Pinned at
-        // the exact boundary (>= semantics) for both dtypes.
-        assert_eq!(min_flops_per_thread(DType::Fp32), 4e6);
-        assert_eq!(min_flops_per_thread(DType::Fp16), 2e6);
+        // The f16 floor is exactly half the f32 floor (the shared
+        // dtype_floor_scale rule), so a job at half the f32 floor per
+        // thread engages in f16 but not f32. Pinned at the exact
+        // boundary (>= semantics) for both dtypes, at the *pooled*
+        // floor — 16x below the legacy scoped-spawn floor.
+        assert_eq!(min_flops_per_thread(DType::Fp32), 2.5e5);
+        assert_eq!(min_flops_per_thread(DType::Fp16), 1.25e5);
         let threads = 8;
-        let half = 2e6 * threads as f64;
-        let full = 4e6 * threads as f64;
+        let half = min_flops_per_thread(DType::Fp16) * threads as f64;
+        let full = min_flops_per_thread(DType::Fp32) * threads as f64;
         assert!(parallel_engages(DType::Fp16, half, threads));
         assert!(!parallel_engages(DType::Fp32, half, threads));
         assert!(parallel_engages(DType::Fp32, full, threads));
@@ -264,6 +468,38 @@ mod tests {
         assert!(!parallel_engages(DType::Fp32, full - 1.0, threads));
         // One thread never engages regardless of work.
         assert!(!parallel_engages(DType::Fp16, 1e12, 1));
+    }
+
+    #[test]
+    fn pooled_floor_sits_strictly_below_the_scoped_floor_per_dtype() {
+        for dtype in [DType::Fp32, DType::Fp16] {
+            assert!(
+                min_flops_per_thread(dtype) < scoped_min_flops_per_thread(dtype),
+                "{dtype}: pooled floor must undercut the scoped-spawn floor"
+            );
+            // Both floors resolve through the one shared dtype rule.
+            assert_eq!(
+                min_flops_per_thread(dtype),
+                POOL_MIN_FLOPS_PER_THREAD * dtype_floor_scale(dtype)
+            );
+            assert_eq!(
+                scoped_min_flops_per_thread(dtype),
+                MIN_FLOPS_PER_THREAD * dtype_floor_scale(dtype)
+            );
+        }
+        // The derivation formula reproduces both anchors: ~40 µs
+        // scoped spawn -> the legacy 4e6 floor, ~2.5 µs injection ->
+        // the pooled floor.
+        assert_eq!(derived_floor_flops(40_000.0), MIN_FLOPS_PER_THREAD);
+        assert_eq!(derived_floor_flops(2_500.0), POOL_MIN_FLOPS_PER_THREAD);
+    }
+
+    #[test]
+    fn default_threads_is_cached_and_stable() {
+        let a = default_threads();
+        let b = default_threads();
+        assert!(a >= 1);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! Persistent kernel worker pool: the execution vehicle behind every
+//! panel-parallel kernel ([`spmm_parallel`], [`spmm_nm_parallel`],
+//! [`matmul_parallel`]).
+//!
+//! The old dispatch spawned OS threads per call (`std::thread::scope`)
+//! — tens of microseconds of spawn tax per kernel, the documented
+//! reason the engagement floor sat at millions of FLOPs per thread.
+//! This pool pays the spawn cost **once**, lazily, at first parallel
+//! dispatch: `default_threads() - 1` workers are created and then
+//! parked on a condvar. A steady-state dispatch ("injection") is a
+//! mutex acquire, one raw-pointer store, and a condvar broadcast —
+//! **no allocation and no thread spawn** (pinned by
+//! `tests/hot_path_alloc.rs`).
+//!
+//! # Row-merge scheduling
+//!
+//! Callers pass a list of deterministic work units (nnz-balanced row
+//! panels from [`partition_panels`], oversubscribed past the thread
+//! count). Workers and the injecting thread claim units dynamically
+//! through one atomic counter, so a worker that drew short rows
+//! immediately merges into the remaining units instead of idling on
+//! the skew tail (Gale et al.'s row-merge idea, applied at panel
+//! granularity). Unit *boundaries* are a pure function of the operand
+//! and the thread budget; only the unit→worker assignment is dynamic,
+//! and every unit writes a disjoint output slice with the same
+//! per-row kernel body — so outputs are bit-identical to the serial
+//! kernel no matter which worker runs what (DESIGN.md §5.3).
+//!
+//! # Protocol
+//!
+//! One job is active at a time; concurrent injectors queue on the
+//! completion condvar, so a parallel kernel always gets the whole
+//! pool (sharded-coordinator workers injecting simultaneously
+//! serialize here rather than oversubscribing the machine). The claim
+//! counter is epoch-tagged (`epoch << 32 | next_unit` behind one CAS)
+//! so a worker holding a stale job descriptor can never claim a unit
+//! of the next job: the epoch check and the claim are one atomic
+//! operation. A unit that panics poisons the job (the injector
+//! re-panics after completion) but still counts toward the completion
+//! latch, so the pool survives and no thread deadlocks.
+//!
+//! [`spmm_parallel`]: crate::kernels::spmm_parallel
+//! [`spmm_nm_parallel`]: crate::kernels::nm::spmm_nm_parallel
+//! [`matmul_parallel`]: crate::kernels::dense::matmul_parallel
+//! [`partition_panels`]: crate::kernels::partition_panels
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+use crate::kernels::parallel::default_threads;
+
+/// Type-erased pointer to the injector's task closure. The injector
+/// blocks in [`KernelPool::run`] until every unit completes, so the
+/// pointee outlives every dereference; workers only dereference after
+/// an epoch-checked claim (see the module doc).
+#[derive(Clone, Copy, Debug)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared calls from many threads are
+// fine) and the injector keeps it alive for the job's whole lifetime.
+unsafe impl Send for TaskPtr {}
+
+/// Raw output-buffer cursor the panel closures capture so disjoint
+/// slices can be re-derived per claimed unit. Soundness is the
+/// caller's obligation: units must map to non-overlapping ranges.
+pub(crate) struct SendPtr<T>(pub *mut T);
+// SAFETY: carries a raw pointer across threads; every user writes
+// only the disjoint per-unit range it claimed.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// The active injected job: the erased task, its unit count, and the
+/// epoch tag its claims are validated against.
+#[derive(Clone, Copy, Debug)]
+struct Job {
+    task: TaskPtr,
+    units: u32,
+    epoch: u32,
+}
+
+#[derive(Debug, Default)]
+struct State {
+    job: Option<Job>,
+    epoch: u32,
+    shutdown: bool,
+}
+
+#[derive(Debug, Default)]
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here; signaled on injection (and shutdown).
+    work_cv: Condvar,
+    /// Injectors park here, both for their own job's completion and
+    /// for the single job slot to free up.
+    done_cv: Condvar,
+    /// `epoch << 32 | next_unclaimed_unit` — the row-merge claim
+    /// cursor. CAS-incremented so the epoch check and the claim are
+    /// one atomic step.
+    claim: AtomicU64,
+    /// Units completed for the active epoch (the completion latch).
+    done: AtomicU64,
+    /// A unit panicked; the injector re-panics once the job drains.
+    poisoned: AtomicBool,
+    spawns: AtomicU64,
+    injects: AtomicU64,
+    steals: AtomicU64,
+}
+
+fn lock(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn pack(epoch: u32, unit: u32) -> u64 {
+    (u64::from(epoch) << 32) | u64::from(unit)
+}
+
+fn epoch_of(packed: u64) -> u32 {
+    (packed >> 32) as u32
+}
+
+fn unit_of(packed: u64) -> u32 {
+    packed as u32
+}
+
+/// Observability counters of a pool (or of [`global`] via
+/// [`counters`]). `spawns` moves only while the pool warms up;
+/// `contention.rs` and the CI contention job assert it stays flat in
+/// steady state. `injects` counts parallel dispatches, `steals` the
+/// work units executed by parked workers rather than the injecting
+/// thread (the row-merge signal: a skew tail being absorbed shows up
+/// as steals).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolCounters {
+    pub spawns: u64,
+    pub injects: u64,
+    pub steals: u64,
+}
+
+/// A persistent, parked worker pool (see the module doc). `Drop`
+/// shuts the workers down and joins them; the process-wide [`global`]
+/// pool is never dropped.
+#[derive(Debug)]
+pub struct KernelPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl KernelPool {
+    /// A pool with `workers` parked helper threads. The injecting
+    /// thread always executes units too, so effective parallelism is
+    /// `workers + 1` and `workers = 0` degenerates to serial
+    /// execution in the caller.
+    pub fn with_workers(workers: usize) -> Self {
+        let shared = Arc::new(Shared::default());
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let s = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("popsparse-pool-{i}"))
+                .spawn(move || worker_loop(s))
+                .expect("spawn kernel pool worker");
+            shared.spawns.fetch_add(1, Ordering::Relaxed);
+            handles.push(h);
+        }
+        Self { shared, handles }
+    }
+
+    /// Effective parallelism: parked workers plus the injecting
+    /// thread.
+    pub fn parallelism(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Current counter values (monotonic over the pool's lifetime).
+    pub fn counters(&self) -> PoolCounters {
+        PoolCounters {
+            spawns: self.shared.spawns.load(Ordering::Relaxed),
+            injects: self.shared.injects.load(Ordering::Relaxed),
+            steals: self.shared.steals.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Execute `f(0..units)` across the pool and the calling thread,
+    /// returning once every unit completed. Units are claimed
+    /// dynamically (row-merge); `f` must confine each unit's writes
+    /// to disjoint state. Steady-state cost: no allocation, no thread
+    /// spawn. Panics (after draining the job) if any unit panicked.
+    ///
+    /// Must not be called from inside a pool task (a nested injection
+    /// would wait on its own job's slot); the kernel layer never
+    /// nests parallel dispatches.
+    pub fn run(&self, units: usize, f: &(dyn Fn(usize) + Sync)) {
+        if units == 0 {
+            return;
+        }
+        debug_assert!(units <= u32::MAX as usize, "unit count overflows the claim word");
+        // SAFETY: the transmute only erases the borrow's lifetime
+        // (fat-pointer layout is unchanged); the pool holds the job
+        // strictly inside this call, i.e. within the borrow of `f`.
+        let task = TaskPtr(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(f)
+        });
+        let job = {
+            let mut st = lock(&self.shared.state);
+            while st.job.is_some() {
+                st = self.shared.done_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            st.epoch = st.epoch.wrapping_add(1);
+            let job = Job { task, units: units as u32, epoch: st.epoch };
+            // Reset the latch, then publish the claim cursor, then
+            // the job — workers validate claims against the epoch so
+            // a stale descriptor can never touch this job's units.
+            self.shared.poisoned.store(false, Ordering::SeqCst);
+            self.shared.done.store(0, Ordering::SeqCst);
+            self.shared.claim.store(pack(job.epoch, 0), Ordering::SeqCst);
+            st.job = Some(job);
+            job
+        };
+        self.shared.injects.fetch_add(1, Ordering::Relaxed);
+        self.shared.work_cv.notify_all();
+        // The injector is an executor too: it merges into the unit
+        // stream alongside the workers (its claims are not steals).
+        execute_units(&self.shared, job, false);
+        let poisoned = {
+            let mut st = lock(&self.shared.state);
+            while self.shared.done.load(Ordering::SeqCst) < u64::from(job.units) {
+                st = self.shared.done_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            // Read the poison flag before releasing the job slot: a
+            // queued injector resets it the moment it installs the
+            // next job.
+            let poisoned = self.shared.poisoned.load(Ordering::SeqCst);
+            st.job = None;
+            poisoned
+        };
+        // Free the job slot for the next queued injector.
+        self.shared.done_cv.notify_all();
+        if poisoned {
+            panic!("kernel pool: a panel task panicked (job drained, pool still live)");
+        }
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        lock(&self.shared.state).shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(job) = st.job {
+                    let packed = shared.claim.load(Ordering::SeqCst);
+                    if epoch_of(packed) == job.epoch && unit_of(packed) < job.units {
+                        break job;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        execute_units(&shared, job, true);
+    }
+}
+
+/// Claim-and-run loop shared by workers and the injector: CAS the
+/// claim cursor forward while it still carries `job`'s epoch, run
+/// each claimed unit, and trip the completion latch on the last one.
+fn execute_units(shared: &Shared, job: Job, stealing: bool) {
+    loop {
+        let mut packed = shared.claim.load(Ordering::SeqCst);
+        let unit = loop {
+            if epoch_of(packed) != job.epoch || unit_of(packed) >= job.units {
+                return;
+            }
+            match shared.claim.compare_exchange_weak(
+                packed,
+                pack(job.epoch, unit_of(packed) + 1),
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break unit_of(packed),
+                Err(now) => packed = now,
+            }
+        };
+        // SAFETY: the claim succeeded under `job.epoch`, so the
+        // injector of that epoch is still blocked in `run` (its latch
+        // cannot trip before this unit completes) and the closure is
+        // alive.
+        let f = unsafe { &*job.task.0 };
+        if panic::catch_unwind(AssertUnwindSafe(|| f(unit as usize))).is_err() {
+            shared.poisoned.store(true, Ordering::SeqCst);
+        }
+        if stealing {
+            shared.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        if shared.done.fetch_add(1, Ordering::SeqCst) + 1 == u64::from(job.units) {
+            // Lock-then-notify so an injector between its latch check
+            // and its wait cannot miss the wakeup.
+            drop(lock(&shared.state));
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+static GLOBAL: OnceLock<KernelPool> = OnceLock::new();
+
+/// The process-wide pool every parallel kernel dispatches through.
+/// Lazily initialized on first use with `default_threads() - 1`
+/// workers (the injector is the final executor); never torn down.
+pub fn global() -> &'static KernelPool {
+    GLOBAL.get_or_init(|| KernelPool::with_workers(default_threads().saturating_sub(1)))
+}
+
+/// [`global`]'s counters without forcing initialization: all-zero
+/// until the first parallel dispatch spawns the pool.
+pub fn counters() -> PoolCounters {
+    GLOBAL.get().map(KernelPool::counters).unwrap_or_default()
+}
+
+/// Measured per-dispatch overhead of the two dispatch mechanisms, in
+/// nanoseconds (median over `reps`): `scoped_ns` spawns and joins
+/// `tasks` no-op OS threads per call the way the retired scoped path
+/// did, `inject_ns` injects a `tasks`-unit no-op job into the warm
+/// [`global`] pool. This is the microbench behind the re-derived
+/// engagement floors (EXPERIMENTS.md §Spawn overhead): the floor is
+/// proportional to dispatch overhead, and injection undercuts scoped
+/// spawn by an order of magnitude or more on every host measured.
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchOverhead {
+    pub scoped_ns: f64,
+    pub inject_ns: f64,
+}
+
+/// Run the spawn-vs-inject microbench (see [`DispatchOverhead`]).
+/// Warm-up dispatches run first so pool spawns and lazy buffers are
+/// excluded from the measurement.
+pub fn measure_dispatch_overhead(tasks: usize, reps: usize) -> DispatchOverhead {
+    let tasks = tasks.max(1);
+    let reps = reps.max(3);
+    let pool = global();
+    let noop = |_u: usize| {};
+    for _ in 0..3 {
+        pool.run(tasks, &noop);
+        std::thread::scope(|s| {
+            for _ in 0..tasks {
+                s.spawn(|| {});
+            }
+        });
+    }
+    let mut scoped = Vec::with_capacity(reps);
+    let mut inject = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..tasks {
+                s.spawn(|| {});
+            }
+        });
+        scoped.push(t0.elapsed().as_nanos() as f64);
+        let t0 = Instant::now();
+        pool.run(tasks, &noop);
+        inject.push(t0.elapsed().as_nanos() as f64);
+    }
+    DispatchOverhead { scoped_ns: median(&mut scoped), inject_ns: median(&mut inject) }
+}
+
+fn median(samples: &mut [f64]) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("finite timings"));
+    samples[samples.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn all_units_run_exactly_once() {
+        let pool = KernelPool::with_workers(3);
+        for units in [1usize, 2, 7, 64, 501] {
+            let hits: Vec<AtomicUsize> = (0..units).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(units, &|u| {
+                hits[u].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "every unit exactly once at {units} units"
+            );
+        }
+    }
+
+    #[test]
+    fn steady_state_spawns_stay_flat_and_injects_count() {
+        let pool = KernelPool::with_workers(2);
+        let before = pool.counters();
+        assert_eq!(before.spawns, 2, "spawns are paid at construction");
+        for _ in 0..50 {
+            pool.run(8, &|_| {});
+        }
+        let after = pool.counters();
+        assert_eq!(after.spawns, before.spawns, "no steady-state thread spawns");
+        assert_eq!(after.injects, before.injects + 50);
+    }
+
+    #[test]
+    fn zero_workers_degenerates_to_injector_only() {
+        let pool = KernelPool::with_workers(0);
+        let sum = AtomicUsize::new(0);
+        pool.run(32, &|u| {
+            sum.fetch_add(u + 1, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 32 * 33 / 2);
+        assert_eq!(pool.counters().steals, 0, "no workers, nothing stolen");
+    }
+
+    #[test]
+    fn sequential_jobs_do_not_leak_units_across_epochs() {
+        // Back-to-back jobs with different unit counts: stale
+        // descriptors must never claim into the next epoch (the
+        // epoch-tagged CAS pins this).
+        let pool = KernelPool::with_workers(3);
+        for round in 0..200u32 {
+            let units = 1 + (round as usize % 9);
+            let count = AtomicUsize::new(0);
+            pool.run(units, &|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(count.load(Ordering::SeqCst), units, "round {round}");
+        }
+    }
+
+    #[test]
+    fn concurrent_injectors_serialize_and_both_complete() {
+        let pool = Arc::new(KernelPool::with_workers(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    for _ in 0..25 {
+                        pool.run(16, &|_| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 25 * 16);
+    }
+
+    #[test]
+    fn a_panicking_unit_poisons_the_job_but_not_the_pool() {
+        let pool = KernelPool::with_workers(2);
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|u| {
+                if u == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "injector re-raises the unit panic");
+        // The pool must still serve jobs afterwards.
+        let count = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn dispatch_microbench_reports_positive_medians() {
+        let o = measure_dispatch_overhead(2, 5);
+        assert!(o.scoped_ns > 0.0 && o.inject_ns > 0.0);
+    }
+}

@@ -266,10 +266,17 @@ pub(crate) fn spmm_tile_b<E: Element, const B: usize>(
     }
 }
 
+/// Largest block size whose generic-path accumulator panel fits the
+/// stack buffer below (covers every monomorphized size and the odd
+/// sizes between; the hot numeric path never allocates for `b` ≤ 16).
+const GENERIC_STACK_B: usize = 16;
+
 /// Structurally identical fallback for block sizes without a
 /// monomorphized kernel (`b = 1` unstructured patterns, odd sizes).
-/// The accumulator panel is one reusable heap buffer per call — the
-/// call covers a whole row range, so the allocation amortizes.
+/// The accumulator panel lives on the stack for `b` ≤
+/// [`GENERIC_STACK_B`] — the whole practical range, keeping pooled
+/// steady-state dispatch allocation-free (`tests/hot_path_alloc.rs`)
+/// — with a heap fallback for larger exotic blocks.
 fn spmm_rows_generic<E: Element>(
     p: &PreparedBsr<E>,
     x: &[E],
@@ -280,7 +287,14 @@ fn spmm_rows_generic<E: Element>(
 ) {
     let b = p.b;
     let bsz = b * b;
-    let mut acc = vec![0f32; b * N_TILE];
+    let mut stack_acc = [0f32; GENERIC_STACK_B * N_TILE];
+    let mut heap_acc;
+    let acc: &mut [f32] = if b <= GENERIC_STACK_B {
+        &mut stack_acc[..b * N_TILE]
+    } else {
+        heap_acc = vec![0f32; b * N_TILE];
+        &mut heap_acc
+    };
     for (ri, r) in (r0..r1).enumerate() {
         let (lo, hi) = (p.row_ptr[r] as usize, p.row_ptr[r + 1] as usize);
         let out = &mut y_panel[ri * b * n..(ri + 1) * b * n];

@@ -38,17 +38,19 @@ fn usage() -> ! {
          \x20        --calibrated: add the observed-cycle-calibrated crossover arm to `auto`\n\
          \x20 bench  wall [--smoke] [--threads N] [--out DIR]  measured kernel GFLOP/s in\n\
          \x20        fp32+fp16: naive-ref vs prepared-tiled vs row-panel-parallel, the\n\
-         \x20        per-dtype sparse-vs-dense crossover, and the roofline table (achieved\n\
+         \x20        per-dtype sparse-vs-dense crossover, the roofline table (achieved\n\
          \x20        rate vs the measured machine ceiling, memory- vs compute-bound per\n\
-         \x20        shape); reported, never gated; CSV + wall_roofline.json to DIR\n\
-         \x20        (default target/bench_results)\n\
+         \x20        shape), and the spawn-overhead arm (scoped-spawn vs pool-inject\n\
+         \x20        dispatch, derived floors, skewed-row wall); reported, never gated;\n\
+         \x20        CSV + wall_roofline.json to DIR (default target/bench_results)\n\
          \x20 bench  ci [--out FILE] [--seed-baseline]  churn-sweep + calibrated crossover\n\
          \x20        (both dtypes), machine-readable points to FILE (default BENCH_ci.json)\n\
          \x20 bench  gate [--baseline FILE] [--current FILE] [--tolerance F]\n\
          \x20        fail on >F cycle-estimate regression vs the committed baseline (default 0.10)\n\
          \x20 bench  contention [--smoke] [--out DIR]  sharded-coordinator contention sweep:\n\
-         \x20        queue-wait and lock-wait per job across worker counts; exits non-zero\n\
-         \x20        if steady-state lock-wait exceeds its ceiling (the shared-nothing proof)\n\
+         \x20        queue-wait, lock-wait and kernel-pool spawns per point across worker\n\
+         \x20        counts; exits non-zero if steady-state lock-wait exceeds its ceiling\n\
+         \x20        or the warm pool spawns at all (the shared-nothing + zero-spawn proof)\n\
          \x20 serve  [--jobs N] [--workers W] [--numeric] [--wall-calibrated] [--record-trace FILE]\n\
          \x20        synthetic serving workload; --numeric executes every batch's kernel in\n\
          \x20        its declared dtype and reports measured wall time; --wall-calibrated\n\
@@ -403,7 +405,13 @@ fn cmd_bench_wall(flags: &HashMap<String, String>) -> popsparse::Result<()> {
         .unwrap_or_else(|| std::path::PathBuf::from("target/bench_results"));
     // One named CSV per table, stable across runs so CI artifact
     // consumers can rely on the paths.
-    let names = ["wall_spmm.csv", "wall_dense.csv", "wall_crossover.csv", "wall_roofline.csv"];
+    let names = [
+        "wall_spmm.csv",
+        "wall_dense.csv",
+        "wall_crossover.csv",
+        "wall_roofline.csv",
+        "wall_spawn.csv",
+    ];
     for (t, name) in tables.iter().zip(names) {
         t.print();
         t.write_csv(out_dir.join(name))?;
@@ -516,7 +524,9 @@ fn cmd_bench_gate(flags: &HashMap<String, String>) -> popsparse::Result<()> {
 /// if lock-wait exceeds its ceiling — the serving path acquiring a
 /// global mutex again is exactly what that ceiling catches. Queue
 /// wait gets a generous ceiling too (a starved/deadlocked shard shows
-/// up there); throughput is printed but never gated.
+/// up there), and the kernel-pool spawn counter must stay flat after
+/// warm-up (steady-state dispatch injects into parked workers);
+/// throughput is printed but never gated.
 fn cmd_bench_contention(flags: &HashMap<String, String>) -> popsparse::Result<()> {
     use popsparse::bench_harness::contention::contention_sweep;
     // Per-job lock-wait ceiling, in microseconds. The per-shard queues
@@ -548,6 +558,15 @@ fn cmd_bench_contention(flags: &HashMap<String, String>) -> popsparse::Result<()
                 p.queue_wait_us_per_job, p.workers
             ));
         }
+        // The kernel pool is warmed before the sweep; any spawn during
+        // a measured point means steady-state dispatch fell back to
+        // thread creation — the overhead this PR's pool exists to kill.
+        if p.pool_spawns != 0 {
+            failures.push(format!(
+                "{} kernel-pool spawns at {} workers (steady state must inject, not spawn)",
+                p.pool_spawns, p.workers
+            ));
+        }
     }
     if !failures.is_empty() {
         return Err(popsparse::Error::Runtime(format!(
@@ -555,7 +574,10 @@ fn cmd_bench_contention(flags: &HashMap<String, String>) -> popsparse::Result<()
             failures.join("; ")
         )));
     }
-    println!("contention gate OK (steady-state lock-wait under {LOCK_WAIT_CEILING_US}us/job)");
+    println!(
+        "contention gate OK (steady-state lock-wait under {LOCK_WAIT_CEILING_US}us/job, \
+         zero pool spawns)"
+    );
     Ok(())
 }
 

@@ -494,6 +494,97 @@ fn nm_degenerate_cases_and_rejections() {
     assert_eq!(kernels::nm_for_density(1.0), None);
 }
 
+#[test]
+fn pooled_scoped_and_serial_dispatches_are_bit_identical() {
+    // The dispatch-vehicle contract of the persistent pool (DESIGN.md
+    // §5.3): `spmm_parallel` (pool injection + row-merge
+    // oversubscription), `spmm_parallel_scoped` (the retired
+    // per-thread scoped-spawn reference) and the serial kernel are
+    // bit-identical — `partition_panels` is the single deterministic
+    // partitioner, every unit owns a disjoint output slice, and the
+    // per-row accumulation never changes — across both dtypes, the
+    // block-size grid, odd n, and heavy row skew, at thread counts
+    // above and below the pool's worker count.
+    let mut rng = Rng::seed_from_u64(0x900F);
+    let mut cases: Vec<(BlockCoo, usize, String)> = Vec::new();
+    for &b in &[1usize, 4, 8, 16] {
+        let mask = patterns::uniform(8 * b, 8 * b, b, 21, rng.next_u64()).unwrap();
+        cases.push((patterns::with_values(&mask, rng.next_u64()), 33, format!("b={b} n=33")));
+    }
+    let skew = patterns::row_imbalanced(512, 512, 16, 400, 2.5, 13).unwrap();
+    cases.push((patterns::with_values(&skew, 13), 17, "row-skewed".into()));
+    for (coo, n, context) in &cases {
+        let n = *n;
+        let p = PreparedBsr::<f32>::from_coo(coo);
+        let x: Vec<f32> = (0..coo.k * n).map(|_| rng.normal() as f32).collect();
+        let mut serial = vec![f32::NAN; coo.m * n];
+        kernels::spmm(&p, &x, n, &mut serial).unwrap();
+        let p16 = PreparedBsr::<F16>::from_coo(coo);
+        let x16: Vec<F16> = quantize(&x);
+        let mut serial16 = vec![F16(0x7E00); coo.m * n];
+        kernels::spmm(&p16, &x16, n, &mut serial16).unwrap();
+        for threads in [2usize, 3, 8] {
+            let mut pooled = vec![f32::NAN; coo.m * n];
+            let mut scoped = vec![f32::NAN; coo.m * n];
+            kernels::spmm_parallel(&p, &x, n, &mut pooled, threads).unwrap();
+            kernels::spmm_parallel_scoped(&p, &x, n, &mut scoped, threads).unwrap();
+            assert_eq!(serial, pooled, "{context}: f32 pooled({threads}) vs serial");
+            assert_eq!(serial, scoped, "{context}: f32 scoped({threads}) vs serial");
+            let mut pooled16 = vec![F16(0x7E00); coo.m * n];
+            let mut scoped16 = vec![F16(0x7E00); coo.m * n];
+            kernels::spmm_parallel(&p16, &x16, n, &mut pooled16, threads).unwrap();
+            kernels::spmm_parallel_scoped(&p16, &x16, n, &mut scoped16, threads).unwrap();
+            assert_eq!(serial16, pooled16, "{context}: f16 pooled({threads}) vs serial");
+            assert_eq!(serial16, scoped16, "{context}: f16 scoped({threads}) vs serial");
+        }
+    }
+    // The structured N:M family under the same triple identity.
+    for &(nm_n, nm_m) in &[(2usize, 4usize), (1, 8)] {
+        let (m, k, n) = (33usize, 64usize, 17usize);
+        let p = PreparedNm::<f32>::from_pattern(m, k, nm_n, nm_m, rng.next_u64()).unwrap();
+        let x: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut serial = vec![f32::NAN; m * n];
+        kernels::spmm_nm(&p, &x, n, &mut serial).unwrap();
+        for threads in [2usize, 8] {
+            let mut pooled = vec![f32::NAN; m * n];
+            let mut scoped = vec![f32::NAN; m * n];
+            kernels::spmm_nm_parallel(&p, &x, n, &mut pooled, threads).unwrap();
+            kernels::spmm_nm_parallel_scoped(&p, &x, n, &mut scoped, threads).unwrap();
+            assert_eq!(serial, pooled, "nm {nm_n}:{nm_m}: pooled({threads}) vs serial");
+            assert_eq!(serial, scoped, "nm {nm_n}:{nm_m}: scoped({threads}) vs serial");
+        }
+    }
+}
+
+#[test]
+fn auto_dispatch_floors_share_the_dtype_scaling() {
+    use popsparse::DType::{Fp16, Fp32};
+    // The one shared scaling helper (DESIGN.md §5.3 satellite): both
+    // floor families — pooled (what `spmm_auto`/`spmm_nm_auto` engage
+    // on today) and the retired scoped reference — resolve through
+    // `dtype_floor_scale`, so the f16 floor is exactly half the f32
+    // one in both.
+    assert_eq!(kernels::dtype_floor_scale(Fp32), 1.0);
+    assert_eq!(kernels::dtype_floor_scale(Fp16), 0.5);
+    for dt in [Fp32, Fp16] {
+        let scale = kernels::dtype_floor_scale(dt);
+        assert_eq!(kernels::min_flops_per_thread(dt), kernels::POOL_MIN_FLOPS_PER_THREAD * scale);
+        assert_eq!(
+            kernels::scoped_min_flops_per_thread(dt),
+            kernels::MIN_FLOPS_PER_THREAD * scale
+        );
+        // The acceptance direction: pooled dispatch engages strictly
+        // earlier than scoped spawning did, per dtype.
+        assert!(kernels::min_flops_per_thread(dt) < kernels::scoped_min_flops_per_thread(dt));
+        // And the engagement predicate sits exactly on floor * threads.
+        let t = 4usize;
+        let floor = kernels::min_flops_per_thread(dt);
+        assert!(!kernels::parallel_engages(dt, floor * t as f64 - 1.0, t));
+        assert!(kernels::parallel_engages(dt, floor * t as f64, t));
+        assert!(!kernels::parallel_engages(dt, f64::INFINITY, 1), "one thread never engages");
+    }
+}
+
 fn job(mode: Mode, n: usize, seed: u64) -> JobSpec {
     JobSpec {
         mode,

@@ -19,12 +19,22 @@ use popsparse::DType;
 
 /// Frozen reference: the pre-runner `bench ci` point emission —
 /// churn-sweep scores first, then the per-dtype crossover grid, then
-/// the structured N:M grid, in the exact legacy loop order.
+/// the structured N:M grid, then the per-dtype parallel-engagement
+/// floors, in the exact legacy loop order.
 fn reference_bench_ci_points(env: &Env) -> Vec<(String, f64)> {
     let mut points = reference_churn_points(env);
     points.extend(reference_crossover_points(env));
     points.extend(reference_nm_crossover_points(env));
+    points.extend(reference_parallel_floor_points());
     points
+}
+
+/// The gated engagement-floor constants of the pooled dispatch path,
+/// fp32 first: the values are pinned here independently of the
+/// kernels' own helpers, so silently moving a floor (or decoupling the
+/// fp16 half-scaling) breaks this reference before the CI diff runs.
+fn reference_parallel_floor_points() -> Vec<(String, f64)> {
+    vec![("parallel_floor/fp32".to_string(), 2.5e5), ("parallel_floor/fp16".to_string(), 1.25e5)]
 }
 
 fn reference_churn_points(env: &Env) -> Vec<(String, f64)> {
